@@ -1,0 +1,134 @@
+"""AOT emission: lower every artifact to HLO *text* + write manifest.json.
+
+HLO text (NOT ``lowered.compile().serialize()`` / proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids, which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The text parser on the Rust side reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Also emits ``artifacts/golden/*.json`` — small input/output vectors from the
+pure-jnp oracles that the Rust crate's unit tests replay against its own
+diagonal/BCSR/TopK implementations.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts --set all
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import artifacts as A
+from .kernels import ref
+
+_NP = {"f32": np.float32, "i32": np.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(art):
+    args = [jax.ShapeDtypeStruct(tuple(s["shape"]), _NP[s["dtype"]])
+            for s in art["inputs"]]
+    lowered = jax.jit(art["fn"]).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def emit_golden(out_dir):
+    """Oracle IO vectors for Rust-side substrate tests."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(42)
+
+    # diagonal matmul (square + tall + wide)
+    cases = []
+    for (b, n_in, n_out, k) in [(3, 8, 8, 2), (2, 8, 16, 3), (2, 16, 8, 4)]:
+        x = rng.normal(size=(b, n_in)).astype(np.float32)
+        offs = rng.choice(n_in, size=k, replace=False).astype(np.int32)
+        vals = rng.normal(size=(k, n_out)).astype(np.float32)
+        y = np.asarray(ref.diag_matmul_ref(x, offs, vals))
+        dy = rng.normal(size=(b, n_out)).astype(np.float32)
+        dx = np.asarray(ref.diag_matmul_t_ref(dy, offs, vals, n_in))
+        cases.append({
+            "b": b, "n_in": n_in, "n_out": n_out, "k": k,
+            "x": x.ravel().tolist(), "offsets": offs.tolist(),
+            "values": vals.ravel().tolist(), "y": y.ravel().tolist(),
+            "dy": dy.ravel().tolist(), "dx": dx.ravel().tolist(),
+        })
+    with open(os.path.join(gdir, "diag_matmul.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+
+    # soft topk
+    cases = []
+    for d, k, t in [(16, 4.0, 1.0), (32, 3.0, 0.1), (8, 8.0, 5.0)]:
+        a = rng.normal(size=(d,)).astype(np.float32)
+        out = ref.soft_topk_ref(a, k, t)
+        cases.append({"alpha": a.tolist(), "k": k, "t": t,
+                      "out": np.asarray(out, np.float64).tolist()})
+    with open(os.path.join(gdir, "soft_topk.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+
+    # dynadiag weight composition
+    n_out, n_in = 6, 8
+    v = rng.normal(size=(n_out, n_in)).astype(np.float32)
+    at = rng.random(n_in).astype(np.float32)
+    w = np.asarray(ref.dynadiag_weight_ref(v, at))
+    with open(os.path.join(gdir, "dynadiag_weight.json"), "w") as f:
+        json.dump({"n_out": n_out, "n_in": n_in, "v": v.ravel().tolist(),
+                   "alpha_tilde": at.tolist(), "w": w.ravel().tolist()}, f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", default="all",
+                    choices=["core", "micro", "e2e", "all"])
+    ap.add_argument("--only", default=None,
+                    help="emit only artifacts whose name contains this")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"artifacts": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+
+    for make in A.artifact_set(args.set):
+        art = make()
+        if args.only and args.only not in art["name"]:
+            continue
+        t0 = time.time()
+        text = lower_artifact(art)
+        fname = art["name"] + ".hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        by_name[art["name"]] = {
+            "name": art["name"],
+            "file": fname,
+            "inputs": art["inputs"],
+            "outputs": art["output_names"],
+            "meta": art["meta"],
+        }
+        print(f"  emitted {art['name']}  ({len(text)/1e6:.1f} MB HLO, "
+              f"{time.time()-t0:.1f}s)")
+
+    manifest["artifacts"] = [by_name[k] for k in sorted(by_name.keys())]
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    emit_golden(args.out_dir)
+    print(f"wrote {manifest_path} with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,408 @@
+"""Artifact builders: each returns a traceable fn + a named IO contract.
+
+An *artifact* is one XLA executable the Rust coordinator loads at startup:
+
+  {model}_{param}_train      params+opt+masks?+batch+scalars -> params'+opt'+loss+acc
+  {model}_masked_gradprobe   params+masks+batch -> dense grads of sparse layers
+  {model}_{param}_eval       params+masks?+batch(+scalars) -> loss, loss_vec, preds
+  {model}_diag_infer{S}      diagonal-selected params+batch -> preds (Pallas path)
+  micro_*                    single-op kernels for Fig 7 / Table 8 benches
+
+Inputs/outputs are flat, ordered lists of buffers; the names/shapes/dtypes
+are recorded in ``manifest.json`` and mirrored by ``rust/src/train/state.rs``.
+Section prefixes (``params/``, ``opt_m/``, ``opt_v/``, ``masks/``, ``batch/``,
+``scalar/``, ``kvec``) are the routing contract.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from . import optim
+from .kernels import diag_matmul, bcsr_matmul
+
+
+F32 = "f32"
+I32 = "i32"
+_NP = {F32: np.float32, I32: np.int32}
+
+
+def spec(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _named_specs(named, prefix=""):
+    return [spec(prefix + n, v.shape) for n, v in named]
+
+
+def _batch_specs(cfg):
+    if cfg["kind"] == "gpt":
+        return [spec("batch/x", (cfg["batch"], cfg["seq"]), I32),
+                spec("batch/y", (cfg["batch"], cfg["seq"]), I32)]
+    return [spec("batch/x", (cfg["batch"], cfg["tokens"], cfg["patch_dim"])),
+            spec("batch/y", (cfg["batch"],), I32)]
+
+
+def _accuracy(cfg, logits, y):
+    if cfg["kind"] == "gpt":
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+
+def _loss_of_logits(cfg, logits, y):
+    if cfg["kind"] == "gpt":
+        return M.lm_loss(cfg, logits, y)
+    return M.classification_loss(cfg, logits, y)
+
+
+def _meta(cfg_name, cfg, kind, param):
+    return {
+        "model": cfg_name,
+        "kind": kind,
+        "param": param,
+        "config": {k: v for k, v in cfg.items()},
+        "sparse_layers": [
+            {"name": n, "out": o, "in": i}
+            for n, o, i in M.sparse_layer_list(cfg)
+        ],
+    }
+
+
+def _get_layer(params, name):
+    node = params
+    for part in name.split("/"):
+        node = node[int(part)] if part.isdigit() else node[part]
+    return node
+
+
+# ---------------------------------------------------------------------------
+# Train steps
+# ---------------------------------------------------------------------------
+
+def build_train(cfg_name, param_mode):
+    cfg = M.CONFIGS[cfg_name]
+    params0 = M.init_params(cfg, param_mode)
+    named_p = M.flatten_named(params0)
+    sparse = M.sparse_layer_list(cfg)
+    n_p = len(named_p)
+
+    specs = _named_specs(named_p, "params/")
+    specs += _named_specs(named_p, "opt_m/")
+    specs += _named_specs(named_p, "opt_v/")
+    masks0 = None
+    if param_mode == "masked":
+        masks0 = {n: np.ones((o, i), np.float32) for n, o, i in sparse}
+        named_m = M.flatten_named(masks0)
+        specs += _named_specs(named_m, "masks/")
+    specs += _batch_specs(cfg)
+    specs += [spec("scalar/step", ()), spec("scalar/lr", ()),
+              spec("scalar/wd", ())]
+    if param_mode == "dynadiag":
+        specs += [spec("scalar/temp", ()), spec("scalar/l1", ()),
+                  spec("kvec", (len(sparse),))]
+
+    n_masks = len(sparse) if param_mode == "masked" else 0
+    n_batch = 2
+
+    def fn(*leaves):
+        i = 0
+        params = M.unflatten_like(params0, leaves[i:i + n_p]); i += n_p
+        m_tree = M.unflatten_like(params0, leaves[i:i + n_p]); i += n_p
+        v_tree = M.unflatten_like(params0, leaves[i:i + n_p]); i += n_p
+        masks = {}
+        if param_mode == "masked":
+            masks = M.unflatten_like(masks0, leaves[i:i + n_masks])
+            i += n_masks
+        x, y = leaves[i], leaves[i + 1]; i += n_batch
+        step, lr, wd = leaves[i], leaves[i + 1], leaves[i + 2]; i += 3
+        if param_mode == "dynadiag":
+            temp, l1c, kvec = leaves[i], leaves[i + 1], leaves[i + 2]
+
+        def loss_fn(p):
+            if param_mode == "masked":
+                ctx = M.MaskedCtx(masks)
+            else:
+                ctx = M.DynaDiagCtx([n for n, _, _ in sparse], temp, kvec)
+            logits = M.forward(cfg, p, ctx, x)
+            loss = _loss_of_logits(cfg, logits, y)
+            if param_mode == "dynadiag":
+                loss = loss + l1c * ctx.l1
+            return loss, _accuracy(cfg, logits, y)
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_p, new_opt = optim.apply(params, grads,
+                                     {"m": m_tree, "v": v_tree},
+                                     step, lr, wd)
+        out = [v for _, v in M.flatten_named(new_p)]
+        out += [v for _, v in M.flatten_named(new_opt["m"])]
+        out += [v for _, v in M.flatten_named(new_opt["v"])]
+        out += [loss, acc]
+        return tuple(out)
+
+    out_names = ([f"params/{n}" for n, _ in named_p]
+                 + [f"opt_m/{n}" for n, _ in named_p]
+                 + [f"opt_v/{n}" for n, _ in named_p]
+                 + ["loss", "acc"])
+    return {
+        "name": f"{cfg_name}_{param_mode}_train",
+        "fn": fn,
+        "inputs": specs,
+        "output_names": out_names,
+        "meta": _meta(cfg_name, cfg, "train", param_mode),
+    }
+
+
+def build_gradprobe(cfg_name):
+    """Dense grads w.r.t. the *effective* weights of every sparse layer.
+
+    RigL grows the connections with the largest |grad| among *missing*
+    weights — that requires d loss / d W_eff, not the masked gradient.
+    Called by the coordinator only at topology-update steps.
+    """
+    cfg = M.CONFIGS[cfg_name]
+    params0 = M.init_params(cfg, "masked")
+    named_p = M.flatten_named(params0)
+    sparse = M.sparse_layer_list(cfg)
+    masks0 = {n: np.ones((o, i), np.float32) for n, o, i in sparse}
+    named_m = M.flatten_named(masks0)
+    n_p, n_m = len(named_p), len(named_m)
+
+    specs = _named_specs(named_p, "params/")
+    specs += _named_specs(named_m, "masks/")
+    specs += _batch_specs(cfg)
+
+    def fn(*leaves):
+        params = M.unflatten_like(params0, leaves[:n_p])
+        masks = M.unflatten_like(masks0, leaves[n_p:n_p + n_m])
+        x, y = leaves[n_p + n_m], leaves[n_p + n_m + 1]
+        weff = {n: _get_layer(params, n)["w"] * masks[n]
+                for n, _, _ in sparse}
+
+        def loss_of(weff_):
+            ctx = M.MaskedCtx(masks, override=weff_)
+            logits = M.forward(cfg, params, ctx, x)
+            return _loss_of_logits(cfg, logits, y)
+
+        loss, grads = jax.value_and_grad(loss_of)(weff)
+        out = [grads[n] for n in sorted(grads.keys())]
+        return tuple(out + [loss])
+
+    out_names = [f"grad/{n}" for n in sorted(masks0.keys())] + ["loss"]
+    return {
+        "name": f"{cfg_name}_masked_gradprobe",
+        "fn": fn,
+        "inputs": specs,
+        "output_names": out_names,
+        "meta": _meta(cfg_name, cfg, "gradprobe", "masked"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Eval
+# ---------------------------------------------------------------------------
+
+def build_eval(cfg_name, param_mode):
+    cfg = M.CONFIGS[cfg_name]
+    params0 = M.init_params(cfg, param_mode)
+    named_p = M.flatten_named(params0)
+    sparse = M.sparse_layer_list(cfg)
+    n_p = len(named_p)
+
+    specs = _named_specs(named_p, "params/")
+    masks0 = None
+    if param_mode == "masked":
+        masks0 = {n: np.ones((o, i), np.float32) for n, o, i in sparse}
+        specs += _named_specs(M.flatten_named(masks0), "masks/")
+    specs += _batch_specs(cfg)
+    if param_mode == "dynadiag":
+        specs += [spec("scalar/temp", ()), spec("kvec", (len(sparse),))]
+    n_masks = len(sparse) if param_mode == "masked" else 0
+
+    def fn(*leaves):
+        i = 0
+        params = M.unflatten_like(params0, leaves[i:i + n_p]); i += n_p
+        masks = {}
+        if param_mode == "masked":
+            masks = M.unflatten_like(masks0, leaves[i:i + n_masks])
+            i += n_masks
+        x, y = leaves[i], leaves[i + 1]; i += 2
+        if param_mode == "dynadiag":
+            temp, kvec = leaves[i], leaves[i + 1]
+            ctx = M.DynaDiagCtx([n for n, _, _ in sparse], temp, kvec)
+        else:
+            ctx = M.MaskedCtx(masks)
+        logits = M.forward(cfg, params, ctx, x)
+        if cfg["kind"] == "gpt":
+            per_tok = M.ce_loss(logits, y, 0.0)                # [B, S]
+            loss_vec = per_tok.mean(axis=-1)                   # [B]
+            correct = jnp.sum((jnp.argmax(logits, -1) == y)
+                              .astype(jnp.int32), axis=-1)     # [B]
+            return loss_vec.mean(), loss_vec, correct
+        per_ex = M.ce_loss(logits, y, 0.0)                     # [B]
+        preds = jnp.argmax(logits, -1).astype(jnp.int32)       # [B]
+        return per_ex.mean(), per_ex, preds
+
+    out_names = ["loss", "loss_vec",
+                 "correct" if cfg["kind"] == "gpt" else "preds"]
+    return {
+        "name": f"{cfg_name}_{param_mode}_eval",
+        "fn": fn,
+        "inputs": specs,
+        "output_names": out_names,
+        "meta": _meta(cfg_name, cfg, "eval", param_mode),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Diagonal-selected inference (the L1 Pallas execution path)
+# ---------------------------------------------------------------------------
+
+def diag_k(n_in, sparsity):
+    return max(1, int(round((1.0 - sparsity) * n_in)))
+
+
+def build_diag_infer(cfg_name, sparsity):
+    """Inference where each sparse layer runs kernels.diag_matmul over its
+    selected K diagonals (offsets+values inputs, K static per sparsity)."""
+    cfg = M.CONFIGS[cfg_name]
+    sparse = M.sparse_layer_list(cfg)
+    sparse_names = {n for n, _, _ in sparse}
+    params0 = M.init_params(cfg, "masked")
+
+    # swap sparse layers' {"w"} for {"offsets","values"} in the template
+    def swap(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: swap(v, f"{prefix}{k}/") for k, v in node.items()}
+        if isinstance(node, list):
+            return [swap(v, f"{prefix}{i}/") for i, v in enumerate(node)]
+        return node
+
+    params0 = swap(params0)
+    for n, o, i in sparse:
+        layer = _get_layer(params0, n)
+        k = diag_k(i, sparsity)
+        del layer["w"]
+        layer["offsets"] = np.zeros((k,), np.int32)
+        layer["values"] = np.zeros((k, o), np.float32)
+
+    named_p = M.flatten_named(params0)
+    n_p = len(named_p)
+    specs = [spec("params/" + n, v.shape,
+                  I32 if v.dtype == np.int32 else F32) for n, v in named_p]
+    specs += _batch_specs(cfg)
+
+    def fn(*leaves):
+        params = M.unflatten_like(params0, leaves[:n_p])
+        x, y = leaves[n_p], leaves[n_p + 1]
+        ctx = M.DiagExecCtx(sparse_names)
+        logits = M.forward(cfg, params, ctx, x)
+        if cfg["kind"] == "gpt":
+            loss = M.ce_loss(logits, y, 0.0).mean()
+            correct = jnp.sum((jnp.argmax(logits, -1) == y)
+                              .astype(jnp.int32), axis=-1)
+            return loss, correct
+        loss = M.ce_loss(logits, y, 0.0).mean()
+        preds = jnp.argmax(logits, -1).astype(jnp.int32)
+        return loss, preds
+
+    out_names = ["loss", "correct" if cfg["kind"] == "gpt" else "preds"]
+    pct = int(round(sparsity * 100))
+    meta = _meta(cfg_name, cfg, "diag_infer", "diag")
+    meta["sparsity"] = sparsity
+    meta["diag_k"] = {n: diag_k(i, sparsity) for n, _, i in sparse}
+    return {
+        "name": f"{cfg_name}_diag_infer{pct}",
+        "fn": fn,
+        "inputs": specs,
+        "output_names": out_names,
+        "meta": meta,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Micro-kernels (Fig 7 / Table 8 benches, kernel-level timing)
+# ---------------------------------------------------------------------------
+
+def build_micro_diag(n, k, batch=64):
+    """Single diag_matmul over an n×n matrix with K diagonals."""
+    specs = [spec("x", (batch, n)), spec("offsets", (k,), I32),
+             spec("values", (k, n))]
+
+    def fn(x, offsets, values):
+        return (diag_matmul(x, offsets, values),)
+
+    return {
+        "name": f"micro_diag_n{n}_k{k}",
+        "fn": fn,
+        "inputs": specs,
+        "output_names": ["y"],
+        "meta": {"kind": "micro_diag", "n": n, "k": k, "batch": batch},
+    }
+
+
+def build_micro_dense(n, batch=64):
+    specs = [spec("x", (batch, n)), spec("w", (n, n))]
+
+    def fn(x, w):
+        return (x @ w.T,)
+
+    return {
+        "name": f"micro_dense_n{n}",
+        "fn": fn,
+        "inputs": specs,
+        "output_names": ["y"],
+        "meta": {"kind": "micro_dense", "n": n, "batch": batch},
+    }
+
+
+def build_micro_bcsr(n, nnzb, bs, batch=64):
+    nbr = n // bs
+    specs = [spec("x", (batch, n)), spec("row_ptr", (nbr + 1,), I32),
+             spec("col_idx", (nnzb,), I32), spec("blocks", (nnzb, bs, bs))]
+
+    def fn(x, row_ptr, col_idx, blocks):
+        return (bcsr_matmul(x, row_ptr, col_idx, blocks, n),)
+
+    return {
+        "name": f"micro_bcsr_n{n}_nnzb{nnzb}_bs{bs}",
+        "fn": fn,
+        "inputs": specs,
+        "output_names": ["y"],
+        "meta": {"kind": "micro_bcsr", "n": n, "nnzb": nnzb, "bs": bs,
+                 "batch": batch},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Artifact sets
+# ---------------------------------------------------------------------------
+
+CORE_MODELS = ["vit_micro", "mixer_micro", "vit_tiny", "mixer_tiny",
+               "gpt_mini"]
+FIG7_N = 768
+FIG7_SPARSITIES = [0.99, 0.95, 0.90, 0.80, 0.70, 0.60, 0.50, 0.20]
+
+
+def artifact_set(which):
+    builders = []
+    if which in ("core", "all"):
+        for m in CORE_MODELS:
+            builders.append(lambda m=m: build_train(m, "masked"))
+            builders.append(lambda m=m: build_train(m, "dynadiag"))
+            builders.append(lambda m=m: build_gradprobe(m))
+            builders.append(lambda m=m: build_eval(m, "masked"))
+            builders.append(lambda m=m: build_eval(m, "dynadiag"))
+        for m in ["vit_tiny", "mixer_tiny", "gpt_mini"]:
+            builders.append(lambda m=m: build_diag_infer(m, 0.9))
+    if which in ("micro", "all"):
+        for s in FIG7_SPARSITIES:
+            k = diag_k(FIG7_N, s)
+            builders.append(lambda k=k: build_micro_diag(FIG7_N, k))
+        builders.append(lambda: build_micro_dense(FIG7_N))
+        builders.append(lambda: build_micro_bcsr(
+            FIG7_N, nnzb=2 * diag_k(FIG7_N, 0.9) * (FIG7_N // 16), bs=16))
+    if which in ("e2e", "all"):
+        builders.append(lambda: build_train("gpt_e2e", "dynadiag"))
+        builders.append(lambda: build_eval("gpt_e2e", "dynadiag"))
+    return builders

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for DynaDiag (interpret=True on CPU; see DESIGN.md §7).
+
+Exports:
+  diag_matmul / diag_matmul_t — diagonal-sparse products (fwd / transposed)
+  bcsr_matmul                 — block-sparse product over BCSR
+  soft_topk / hard_topk_mask  — Eq. 5 TopK
+  ref                         — pure-jnp oracles for all of the above
+"""
+
+from . import ref  # noqa: F401
+from .bcsr_matmul import bcsr_matmul  # noqa: F401
+from .diag_matmul import diag_matmul, diag_matmul_t  # noqa: F401
+from .topk import hard_topk_mask, soft_topk, straight_through_topk  # noqa: F401

@@ -1,0 +1,76 @@
+"""Pallas BCSR (Block Compressed Sparse Row) matmul kernel.
+
+The paper's GPU execution path converts selected diagonals to BCSR
+(Sec 3.3 / Apdx D) and runs an SmaT-style tensor-core kernel over the
+non-zero blocks.  The TPU mapping (DESIGN.md §7):
+
+  * each grid step owns one *block row* of W — the analogue of a CUDA
+    threadblock owning a row-panel of C;
+  * ``rowPtr``/``colIdx`` iteration happens inside the kernel with
+    ``lax.fori_loop`` over exactly the non-zero blocks (no work on zeros);
+  * each non-zero block is a (bs_r, bs_c) dense tile — shaped for the MXU
+    the way SmaT shapes them for mma.m16n8k16; the x panel it touches is
+    sliced out of a VMEM-resident activation slab.
+
+Blocks are padded to a static ``nnzb`` by the Rust converter so one compiled
+artifact serves every topology at a given sparsity (padding blocks carry
+col 0 and all-zero values — they are harmless adds).
+
+Shapes:
+  x:       [B, n_in]
+  row_ptr: [n_out/bs_r + 1] int32
+  col_idx: [nnzb] int32 (block-column indices)
+  blocks:  [nnzb, bs_r, bs_c]
+  y:       [B, n_out] = x @ W.T
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bcsr_kernel(row_ptr_ref, col_idx_ref, x_ref, blocks_ref, o_ref, *, bs_c):
+    """One grid step = one block row of W accumulated into a [B, bs_r] tile."""
+    br = pl.program_id(0)
+    x = x_ref[...]                       # [B, n_in] resident slab
+    blocks = blocks_ref[...]             # [nnzb, bs_r, bs_c] resident
+    col_idx = col_idx_ref[...]
+    start = row_ptr_ref[br]
+    stop = row_ptr_ref[br + 1]
+    b = x.shape[0]
+    bs_r = blocks.shape[1]
+
+    def body(p, acc):
+        bc = col_idx[p]
+        xp = jax.lax.dynamic_slice(x, (0, bc * bs_c), (b, bs_c))   # [B, bs_c]
+        blk = jax.lax.dynamic_index_in_dim(blocks, p, axis=0,
+                                           keepdims=False)         # [bs_r, bs_c]
+        return acc + xp @ blk.T
+
+    acc0 = jnp.zeros((b, bs_r), dtype=x.dtype)
+    o_ref[...] = jax.lax.fori_loop(start, stop, body, acc0)
+
+
+def bcsr_matmul(x, row_ptr, col_idx, blocks, n_out, *, interpret=True):
+    """Block-sparse product ``y = x @ W.T`` over non-zero blocks only."""
+    b, n_in = x.shape
+    nnzb, bs_r, bs_c = blocks.shape
+    n_block_rows = n_out // bs_r
+    assert n_out % bs_r == 0 and n_in % bs_c == 0
+    assert row_ptr.shape == (n_block_rows + 1,)
+    kernel = functools.partial(_bcsr_kernel, bs_c=bs_c)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_block_rows,),
+        in_specs=[
+            pl.BlockSpec((n_block_rows + 1,), lambda br: (0,)),     # row_ptr
+            pl.BlockSpec((nnzb,), lambda br: (0,)),                 # col_idx
+            pl.BlockSpec((b, n_in), lambda br: (0, 0)),             # x slab
+            pl.BlockSpec((nnzb, bs_r, bs_c), lambda br: (0, 0, 0)),  # blocks
+        ],
+        out_specs=pl.BlockSpec((b, bs_r), lambda br: (0, br)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), x.dtype),
+        interpret=interpret,
+    )(row_ptr, col_idx, x, blocks)

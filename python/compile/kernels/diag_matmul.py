@@ -1,0 +1,133 @@
+"""Pallas kernels for diagonal-sparse matrix products (the paper's L1 hot-spot).
+
+The paper accelerates diagonally sparse weight matrices on GPUs with custom
+CUDA kernels over a BCSR conversion (Apdx D).  On TPU the same insight —
+*a diagonal is a unit-stride object you can stream, not a random scatter* —
+maps differently (DESIGN.md §7 Hardware-Adaptation):
+
+  * instead of warps owning m16n8k16 output tiles, each grid step owns one
+    selected diagonal and a VMEM-resident tile of the output;
+  * the mod-wrap gather ``x[:, (i + off) mod n_in]`` is realized with
+    ``jnp.roll`` on a VMEM-resident slab — a pair of contiguous copies, the
+    TPU analogue of the CUDA kernel's coalesced per-diagonal loads (no random
+    access is ever issued);
+  * accumulation happens in the output VMEM tile across the K grid steps
+    (sequential grid on TPU ⇒ safe read-modify-write).
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU utilization is estimated in DESIGN.md from the
+BlockSpec footprints.
+
+Shapes (see ref.py for conventions):
+  x:        [B, n_in]   activations
+  offsets:  [K]  int32  selected diagonal offsets, 0 <= off < n_in
+  values:   [K, n_out]  diagonal entries, offset-major (already α-scaled)
+  y:        [B, n_out]  ``y = x @ W.T`` with W the composed diagonal matrix
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(off_ref, x_ref, v_ref, o_ref, *, n_in, n_out):
+    """One grid step = one selected diagonal j accumulated into the output.
+
+    y[b, i] += v[j, i] * x[b, (i + off_j) mod n_in]
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    off = off_ref[0]
+    x = x_ref[...]                      # [B, n_in] (VMEM-resident slab)
+    # Gathered operand: g[b, i] = x[b, (i + off) mod n_in] for i < n_out.
+    # roll by -off makes column i hold x[:, (i + off) mod n_in]; when
+    # n_out > n_in the diagonal wraps rows, so tile the rolled slab.
+    rolled = jnp.roll(x, -off, axis=1)  # two contiguous copies, no gather
+    if n_out <= n_in:
+        g = rolled[:, :n_out]
+    else:
+        reps = -(-n_out // n_in)        # ceil
+        g = jnp.tile(rolled, (1, reps))[:, :n_out]
+    o_ref[...] += g * v_ref[0, :][None, :]
+
+
+def diag_matmul(x, offsets, values, *, interpret=True):
+    """Diagonal-sparse forward product ``y = x @ W.T`` (Fig 3d/e).
+
+    Compiled with a grid over the K selected diagonals; x and the output
+    stay VMEM-resident while one (1, n_out) values row streams in per step.
+    """
+    b, n_in = x.shape
+    k, n_out = values.shape
+    assert offsets.shape == (k,)
+    kernel = functools.partial(_fwd_kernel, n_in=n_in, n_out=n_out)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda j: (j,)),            # offsets[j]
+            pl.BlockSpec((b, n_in), lambda j: (0, 0)),      # x (resident)
+            pl.BlockSpec((1, n_out), lambda j: (j, 0)),     # values row j
+        ],
+        out_specs=pl.BlockSpec((b, n_out), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), x.dtype),
+        interpret=interpret,
+    )(offsets, x, values)
+
+
+def _t_kernel(off_ref, dy_ref, v_ref, o_ref, *, n_in, n_out):
+    """Transposed product step: dx[b, (i + off) mod n_in] += v[j, i] dy[b, i].
+
+    Realized scatter-free by the Apdx-A invariance: the transpose of a
+    pseudo-diagonal is a pseudo-diagonal, so the scatter into dx is the roll
+    of a contiguous product.  dx[b, c] = sum_{i ≡ c-off (mod n_in)} v[j,i]·dy[b,i].
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    off = off_ref[0]
+    prod = dy_ref[...] * v_ref[0, :][None, :]   # [B, n_out]
+    b = prod.shape[0]
+    if n_out >= n_in:
+        # fold wrapped row segments back onto n_in columns, then roll by +off
+        reps = -(-n_out // n_in)
+        pad = reps * n_in - n_out
+        padded = jnp.pad(prod, ((0, 0), (0, pad)))
+        folded = padded.reshape(b, reps, n_in).sum(axis=1)
+    else:
+        folded = jnp.pad(prod, ((0, 0), (0, n_in - n_out)))
+    o_ref[...] += jnp.roll(folded, off, axis=1)
+
+
+def diag_matmul_t(dy, offsets, values, n_in, *, interpret=True):
+    """Transposed diagonal-sparse product ``dx = dy @ W`` (Fig 3g/h/i).
+
+    Same diagonal set serves forward and backward (Apdx A) — this is the
+    property that lets DynaDiag keep the *training* pass sparse where N:M
+    methods fall back to dense.
+    """
+    b, n_out = dy.shape
+    k, n_out2 = values.shape
+    assert n_out2 == n_out and offsets.shape == (k,)
+    kernel = functools.partial(_t_kernel, n_in=n_in, n_out=n_out)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda j: (j,)),
+            pl.BlockSpec((b, n_out), lambda j: (0, 0)),
+            pl.BlockSpec((1, n_out), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, n_in), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_in), dy.dtype),
+        interpret=interpret,
+    )(offsets, dy, values)

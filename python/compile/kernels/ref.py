@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the CORE correctness signal: pytest checks each Pallas kernel
+against the function here on swept shapes/dtypes (see
+``python/tests/test_kernels.py``), and the Rust side re-checks its own BCSR /
+diagonal implementations against numbers produced by these oracles (golden
+vectors shipped in ``artifacts/golden/``).
+
+Conventions (shared with the Rust crate — see ``rust/src/sparsity/diagonal.rs``):
+
+  * A linear layer computes ``y = x @ W.T + b`` with ``W in R^{n_out x n_in}``.
+  * Candidate diagonal offsets are ``off in {0, .., n_in-1}``.  Diagonal
+    ``off`` owns exactly the entries ``(i, (i + off) mod n_in)`` for
+    ``i in 0..n_out`` — every element of W belongs to exactly one diagonal
+    (``off = (j - i) mod n_in``), so K selected diagonals give density
+    ``K / n_in``.
+  * ``values`` are stored offset-major: ``values[j, i]`` is the entry of
+    diagonal ``offsets[j]`` at row ``i``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def alpha_index_matrix(n_out, n_in):
+    """IDX[i, j] = (j - i) mod n_in — which candidate diagonal owns (i, j)."""
+    i = np.arange(n_out)[:, None]
+    j = np.arange(n_in)[None, :]
+    return ((j - i) % n_in).astype(np.int32)
+
+
+def compose_dense(offsets, values, n_out, n_in):
+    """Materialize the diagonal-sparse W from (offsets, values).
+
+    W[i, (i + off_j) mod n_in] = values[j, i].
+    """
+    offsets = np.asarray(offsets)
+    values = np.asarray(values)
+    w = np.zeros((n_out, n_in), dtype=values.dtype)
+    rows = np.arange(n_out)
+    for j, off in enumerate(offsets):
+        cols = (rows + int(off)) % n_in
+        w[rows, cols] = values[j]
+    return jnp.asarray(w)
+
+
+def diag_matmul_ref(x, offsets, values):
+    """Oracle for the forward diagonal-sparse product ``y = x @ W.T``.
+
+    x: [B, n_in]; offsets: [K] int32; values: [K, n_out].  Returns [B, n_out].
+    """
+    n_in = x.shape[-1]
+    n_out = values.shape[-1]
+    w = compose_dense(offsets, values, n_out, n_in)
+    return x @ w.T
+
+
+def diag_matmul_t_ref(dy, offsets, values, n_in):
+    """Oracle for the transposed product ``dx = dy @ W``.
+
+    dy: [B, n_out]; returns [B, n_in].  This is the backward-pass product the
+    paper accelerates by Apdx-A transposition invariance.
+    """
+    n_out = dy.shape[-1]
+    w = compose_dense(offsets, values, n_out, n_in)
+    return dy @ w
+
+
+def dynadiag_weight_ref(v_dense, alpha_tilde):
+    """W = V ⊙ alpha_tilde[(j - i) mod n_in]  (Eq. 4, dense-sim form).
+
+    v_dense: [n_out, n_in] all candidate diagonal values in matrix position.
+    alpha_tilde: [n_in] soft-TopK weights.
+    """
+    n_out, n_in = v_dense.shape
+    idx = jnp.asarray(alpha_index_matrix(n_out, n_in))
+    return v_dense * alpha_tilde[idx]
+
+
+# ---------------------------------------------------------------------------
+# BCSR
+# ---------------------------------------------------------------------------
+
+def bcsr_to_dense(row_ptr, col_idx, blocks, n_out, n_in):
+    """Expand a BCSR matrix to dense.
+
+    row_ptr: [n_block_rows + 1] int32;  col_idx: [nnzb] int32 (block cols);
+    blocks: [nnzb, bs_r, bs_c].
+    """
+    row_ptr = np.asarray(row_ptr)
+    col_idx = np.asarray(col_idx)
+    blocks = np.asarray(blocks)
+    nnzb, bs_r, bs_c = blocks.shape
+    w = np.zeros((n_out, n_in), dtype=blocks.dtype)
+    n_block_rows = len(row_ptr) - 1
+    for br in range(n_block_rows):
+        for p in range(int(row_ptr[br]), int(row_ptr[br + 1])):
+            bc = int(col_idx[p])
+            w[br * bs_r:(br + 1) * bs_r, bc * bs_c:(bc + 1) * bs_c] = blocks[p]
+    return jnp.asarray(w)
+
+
+def bcsr_matmul_ref(x, row_ptr, col_idx, blocks, n_out):
+    """Oracle for ``y = x @ W.T`` with W in BCSR form.  x: [B, n_in]."""
+    n_in = x.shape[-1]
+    w = bcsr_to_dense(row_ptr, col_idx, blocks, n_out, n_in)
+    return x @ w.T
+
+
+def soft_topk_ref(alpha, k, temperature):
+    """NumPy oracle for kernels.topk.soft_topk."""
+    alpha = np.asarray(alpha, dtype=np.float64)
+    t = max(float(temperature), 1e-6)
+    z = alpha / t
+    z = z - z.max()
+    p = np.exp(z) / np.exp(z).sum()
+    return np.minimum(float(k) * p, 1.0)

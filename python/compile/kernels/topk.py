@@ -1,0 +1,65 @@
+"""Differentiable soft-TopK (Eq. 5 of the paper) and hard TopK helpers.
+
+The paper selects the K most important diagonals via a temperature-controlled
+softmax TopK:
+
+    alpha_tilde_i = min(k * softmax(alpha / T)_i, 1)
+
+A high temperature T spreads mass over many diagonals (exploration); low T
+concentrates it on the top K (exploitation).  T is annealed by the Rust
+coordinator (cosine by default, Table 15 / Fig 8 ablate this) and enters the
+compiled graph as a runtime scalar, so a single artifact serves the whole
+schedule.  ``k`` is likewise a runtime scalar so one artifact serves every
+sparsity level.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def _softmax(x):
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def soft_topk(alpha, k, temperature):
+    """Soft TopK weights, Eq. 5.
+
+    Args:
+      alpha: [D] importance logits (one per candidate diagonal).
+      k: scalar (float) — number of diagonals the budget allows.
+      temperature: scalar (float) — softmax temperature T.
+
+    Returns:
+      [D] weights in [0, 1]; approximately K entries near 1 as T -> 0.
+    """
+    t = jnp.maximum(temperature, 1e-6)
+    return jnp.minimum(k * _softmax(alpha / t), 1.0)
+
+
+def hard_topk_mask(alpha, k):
+    """Binary indicator of the top-k entries of ``alpha`` (k static int).
+
+    Used at finalization time (and in tests) — the Rust coordinator performs
+    the equivalent selection on the host when extracting the final diagonal
+    set.
+    """
+    d = alpha.shape[-1]
+    k = int(k)
+    if k >= d:
+        return jnp.ones_like(alpha)
+    thresh = jnp.sort(alpha)[..., d - k]
+    return (alpha >= thresh).astype(alpha.dtype)
+
+
+def straight_through_topk(alpha, k, temperature):
+    """Hard TopK forward, soft-TopK gradients (straight-through estimator).
+
+    Not used by the default DynaDiag pipeline (the paper trains with the
+    soft weights); exposed for the estimator ablation in EXPERIMENTS.md.
+    ``k`` must be a static int here because the hard mask needs a sort cut.
+    """
+    soft = soft_topk(alpha, float(k), temperature)
+    hard = hard_topk_mask(alpha, int(k))
+    return soft + jax.lax.stop_gradient(hard - soft)

@@ -1,0 +1,381 @@
+"""L2 — JAX model zoo + train/eval step builders (build time only).
+
+Three architectures from the paper's evaluation, at CPU-trainable scale
+(DESIGN.md §2 records the scale substitution):
+
+  * ``vit``    — Vision Transformer (Table 1, pre-patchified input)
+  * ``mixer``  — MLP-Mixer          (Table 1)
+  * ``gpt``    — GPT-2-style causal LM (Table 2)
+
+Each sparse layer supports three parameterizations:
+
+  * ``masked``   — W_eff = W ⊙ M; M is a runtime input.  Serves every DST
+    baseline (RigL/SET/MEST/SRigL/DSB/PixelatedBFly/DiagHeur/CHT): the Rust
+    coordinator mutates M between steps.
+  * ``dynadiag`` — W_eff = V ⊙ ᾱ[(j−i) mod n_in], ᾱ = min(k·softmax(α/T), 1)
+    (Eq. 4–5).  α and V train by gradient; T / k / ℓ1 are runtime scalars.
+  * ``diag``     — inference-only execution over the *selected* K diagonals
+    via the L1 Pallas kernel :func:`kernels.diag_matmul` — the sparse
+    compute path the paper accelerates with CUDA/BCSR.
+
+Everything here is traced once by ``aot.py`` and shipped to Rust as HLO text;
+Python never runs at training time.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import optim
+from .kernels import diag_matmul, soft_topk
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+CONFIGS = {
+    # name: dict of model hyperparameters (see builders below)
+    "vit_tiny": dict(kind="vit", tokens=64, patch_dim=48, dim=128, depth=4,
+                     heads=4, mlp=256, classes=100, batch=32, smoothing=0.1),
+    "vit_micro": dict(kind="vit", tokens=16, patch_dim=48, dim=64, depth=3,
+                      heads=4, mlp=128, classes=10, batch=64, smoothing=0.1),
+    "mixer_tiny": dict(kind="mixer", tokens=64, patch_dim=48, dim=128,
+                       token_mlp=64, chan_mlp=256, depth=4, classes=100,
+                       batch=32, smoothing=0.1),
+    "mixer_micro": dict(kind="mixer", tokens=16, patch_dim=48, dim=64,
+                        token_mlp=32, chan_mlp=128, depth=3, classes=10,
+                        batch=64, smoothing=0.1),
+    "gpt_mini": dict(kind="gpt", vocab=256, seq=64, dim=128, depth=4, heads=4,
+                     mlp=512, batch=16, smoothing=0.0),
+    # E2E driver config (examples/train_gpt_tinycorpus.rs): ~14M params.
+    "gpt_e2e": dict(kind="gpt", vocab=256, seq=128, dim=384, depth=8, heads=8,
+                    mlp=1536, batch=8, smoothing=0.0),
+}
+
+
+def sparse_layer_list(cfg):
+    """Ordered (name, n_out, n_in) of every sparse layer in the model.
+
+    The order here is the contract for ``kvec`` / mask manifest entries —
+    the Rust side replicates it from manifest meta.
+    """
+    out = []
+    kind = cfg["kind"]
+    for b in range(cfg["depth"]):
+        if kind == "vit":
+            # footnote 2: MHA *input* projections stay dense in ViTs
+            out.append((f"blocks/{b}/attn_proj", cfg["dim"], cfg["dim"]))
+            out.append((f"blocks/{b}/fc1", cfg["mlp"], cfg["dim"]))
+            out.append((f"blocks/{b}/fc2", cfg["dim"], cfg["mlp"]))
+        elif kind == "mixer":
+            out.append((f"blocks/{b}/token_fc1", cfg["token_mlp"], cfg["tokens"]))
+            out.append((f"blocks/{b}/token_fc2", cfg["tokens"], cfg["token_mlp"]))
+            out.append((f"blocks/{b}/chan_fc1", cfg["chan_mlp"], cfg["dim"]))
+            out.append((f"blocks/{b}/chan_fc2", cfg["dim"], cfg["chan_mlp"]))
+        elif kind == "gpt":
+            # footnote 3: both attention and MLP sparse in GPT-2
+            out.append((f"blocks/{b}/qkv", 3 * cfg["dim"], cfg["dim"]))
+            out.append((f"blocks/{b}/attn_proj", cfg["dim"], cfg["dim"]))
+            out.append((f"blocks/{b}/fc1", cfg["mlp"], cfg["dim"]))
+            out.append((f"blocks/{b}/fc2", cfg["dim"], cfg["mlp"]))
+        else:
+            raise ValueError(kind)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Deterministic named flattening (contract shared with rust/src/train/state.rs)
+# ---------------------------------------------------------------------------
+
+def flatten_named(tree, prefix=""):
+    """Flatten a nested dict/list tree to [(name, leaf)] — sorted dict keys,
+    list indices as path components, '/'-joined."""
+    if isinstance(tree, dict):
+        items = []
+        for k in sorted(tree.keys()):
+            items += flatten_named(tree[k], f"{prefix}{k}/")
+        return items
+    if isinstance(tree, (list, tuple)):
+        items = []
+        for i, v in enumerate(tree):
+            items += flatten_named(v, f"{prefix}{i}/")
+        return items
+    return [(prefix[:-1], tree)]
+
+
+def unflatten_like(tree, leaves):
+    """Inverse of flatten_named given the template ``tree`` (same order)."""
+    it = iter(leaves)
+
+    def rec(t):
+        if isinstance(t, dict):
+            return {k: rec(t[k]) for k in sorted(t.keys())}
+        if isinstance(t, (list, tuple)):
+            return [rec(v) for v in t]
+        return next(it)
+
+    out = rec(tree)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _dense_init(rng, n_out, n_in):
+    s = float(np.sqrt(2.0 / (n_in + n_out)))
+    return rng.normal(0.0, s, size=(n_out, n_in)).astype(np.float32)
+
+
+def _sparse_layer_params(rng, n_out, n_in, mode):
+    if mode == "masked":
+        return {"w": _dense_init(rng, n_out, n_in),
+                "b": np.zeros((n_out,), np.float32)}
+    if mode == "dynadiag":
+        # V carries all candidate diagonals in matrix position; alpha gets a
+        # small random init so TopK ties break symmetrically.
+        return {"v": _dense_init(rng, n_out, n_in),
+                "alpha": (0.01 * rng.normal(size=(n_in,))).astype(np.float32),
+                "b": np.zeros((n_out,), np.float32)}
+    raise ValueError(mode)
+
+
+def _dense_layer_params(rng, n_out, n_in):
+    return {"w": _dense_init(rng, n_out, n_in),
+            "b": np.zeros((n_out,), np.float32)}
+
+
+def _ln_params(dim):
+    return {"g": np.ones((dim,), np.float32), "b": np.zeros((dim,), np.float32)}
+
+
+def init_params(cfg, mode, seed=0):
+    """Numpy parameter tree for a model config (shapes contract for Rust)."""
+    rng = np.random.default_rng(seed)
+    kind = cfg["kind"]
+    sparse = {name: (o, i) for name, o, i in sparse_layer_list(cfg)}
+
+    def maybe_sparse(name, n_out, n_in):
+        if name in sparse:
+            return _sparse_layer_params(rng, n_out, n_in, mode)
+        return _dense_layer_params(rng, n_out, n_in)
+
+    p = {}
+    if kind in ("vit", "mixer"):
+        p["embed"] = _dense_layer_params(rng, cfg["dim"], cfg["patch_dim"])
+        p["pos"] = (0.02 * rng.normal(size=(cfg["tokens"], cfg["dim"]))
+                    ).astype(np.float32)
+        p["head"] = _dense_layer_params(rng, cfg["classes"], cfg["dim"])
+        p["ln_f"] = _ln_params(cfg["dim"])
+    else:
+        p["tok_embed"] = (0.02 * rng.normal(size=(cfg["vocab"], cfg["dim"]))
+                          ).astype(np.float32)
+        p["pos"] = (0.02 * rng.normal(size=(cfg["seq"], cfg["dim"]))
+                    ).astype(np.float32)
+        p["head"] = _dense_layer_params(rng, cfg["vocab"], cfg["dim"])
+        p["ln_f"] = _ln_params(cfg["dim"])
+
+    blocks = []
+    for b in range(cfg["depth"]):
+        blk = {}
+        if kind == "vit":
+            blk["ln1"] = _ln_params(cfg["dim"])
+            blk["qkv"] = _dense_layer_params(rng, 3 * cfg["dim"], cfg["dim"])
+            blk["attn_proj"] = maybe_sparse(f"blocks/{b}/attn_proj",
+                                            cfg["dim"], cfg["dim"])
+            blk["ln2"] = _ln_params(cfg["dim"])
+            blk["fc1"] = maybe_sparse(f"blocks/{b}/fc1", cfg["mlp"], cfg["dim"])
+            blk["fc2"] = maybe_sparse(f"blocks/{b}/fc2", cfg["dim"], cfg["mlp"])
+        elif kind == "mixer":
+            blk["ln1"] = _ln_params(cfg["dim"])
+            blk["token_fc1"] = maybe_sparse(f"blocks/{b}/token_fc1",
+                                            cfg["token_mlp"], cfg["tokens"])
+            blk["token_fc2"] = maybe_sparse(f"blocks/{b}/token_fc2",
+                                            cfg["tokens"], cfg["token_mlp"])
+            blk["ln2"] = _ln_params(cfg["dim"])
+            blk["chan_fc1"] = maybe_sparse(f"blocks/{b}/chan_fc1",
+                                           cfg["chan_mlp"], cfg["dim"])
+            blk["chan_fc2"] = maybe_sparse(f"blocks/{b}/chan_fc2",
+                                           cfg["dim"], cfg["chan_mlp"])
+        else:  # gpt
+            blk["ln1"] = _ln_params(cfg["dim"])
+            blk["qkv"] = maybe_sparse(f"blocks/{b}/qkv", 3 * cfg["dim"],
+                                      cfg["dim"])
+            blk["attn_proj"] = maybe_sparse(f"blocks/{b}/attn_proj",
+                                            cfg["dim"], cfg["dim"])
+            blk["ln2"] = _ln_params(cfg["dim"])
+            blk["fc1"] = maybe_sparse(f"blocks/{b}/fc1", cfg["mlp"], cfg["dim"])
+            blk["fc2"] = maybe_sparse(f"blocks/{b}/fc2", cfg["dim"], cfg["mlp"])
+        blocks.append(blk)
+    p["blocks"] = blocks
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Sparse-layer execution contexts
+# ---------------------------------------------------------------------------
+
+class MaskedCtx:
+    """W_eff = W ⊙ M.  ``override`` lets the grad-probe differentiate w.r.t.
+    the *effective* weights (RigL needs gradients of missing links too)."""
+
+    def __init__(self, masks, override=None):
+        self.masks = masks
+        self.override = override or {}
+
+    def linear(self, name, p, x):
+        if name in self.override:
+            w = self.override[name]
+        elif name in self.masks:
+            w = p["w"] * self.masks[name]
+        else:
+            w = p["w"]
+        return x @ w.T + p["b"]
+
+
+class DynaDiagCtx:
+    """Eq. 4–5 composition; collects the ℓ1(α) regularizer on the side."""
+
+    def __init__(self, sparse_names, temperature, kvec):
+        self.sparse = {n: j for j, n in enumerate(sparse_names)}
+        self.t = temperature
+        self.kvec = kvec
+        self.l1 = 0.0
+
+    def linear(self, name, p, x):
+        if name not in self.sparse:
+            return x @ p["w"].T + p["b"]
+        j = self.sparse[name]
+        atilde = soft_topk(p["alpha"], self.kvec[j], self.t)
+        n_out, n_in = p["v"].shape
+        # IDX[i, c] = (c - i) mod n_in, built from iotas (tiny HLO, no
+        # multi-MB literal in the text artifact).
+        idx = (jnp.arange(n_in, dtype=jnp.int32)[None, :]
+               - jnp.arange(n_out, dtype=jnp.int32)[:, None]) % n_in
+        w = p["v"] * atilde[idx]
+        self.l1 = self.l1 + jnp.sum(jnp.abs(p["alpha"]))
+        return x @ w.T + p["b"]
+
+
+class DiagExecCtx:
+    """Inference over the selected K diagonals via the L1 Pallas kernel."""
+
+    def __init__(self, sparse_names):
+        self.sparse = set(sparse_names)
+
+    def linear(self, name, p, x):
+        if name not in self.sparse:
+            return x @ p["w"].T + p["b"]
+        shape = x.shape
+        x2 = x.reshape(-1, shape[-1])
+        y = diag_matmul(x2, p["offsets"], p["values"])
+        y = y + p["b"]
+        return y.reshape(*shape[:-1], y.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _layer_norm(p, x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * p["g"] + p["b"]
+
+
+def _dense(p, x):
+    return x @ p["w"].T + p["b"]
+
+
+def _attention(blk, ctx, bidx, x, heads, causal):
+    b, t, d = x.shape
+    hd = d // heads
+    qkv_name = f"blocks/{bidx}/qkv"
+    qkv = ctx.linear(qkv_name, blk["qkv"], x)  # dense in ViT, sparse in GPT
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    split = lambda z: z.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+    q, k, v = split(q), split(k), split(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return ctx.linear(f"blocks/{bidx}/attn_proj", blk["attn_proj"], y)
+
+
+def vit_forward(cfg, params, ctx, x):
+    """x: [B, T, patch_dim] (pre-patchified by the Rust data pipeline)."""
+    h = _dense(params["embed"], x) + params["pos"][None]
+    for bi, blk in enumerate(params["blocks"]):
+        a = _attention(blk, ctx, bi, _layer_norm(blk["ln1"], h),
+                       cfg["heads"], causal=False)
+        h = h + a
+        m = ctx.linear(f"blocks/{bi}/fc1", blk["fc1"],
+                       _layer_norm(blk["ln2"], h))
+        m = ctx.linear(f"blocks/{bi}/fc2", blk["fc2"], jax.nn.gelu(m))
+        h = h + m
+    h = _layer_norm(params["ln_f"], h).mean(axis=1)
+    return _dense(params["head"], h)
+
+
+def mixer_forward(cfg, params, ctx, x):
+    h = _dense(params["embed"], x) + params["pos"][None]
+    for bi, blk in enumerate(params["blocks"]):
+        # token mixing: operate along T
+        z = _layer_norm(blk["ln1"], h).transpose(0, 2, 1)     # [B, D, T]
+        z = ctx.linear(f"blocks/{bi}/token_fc1", blk["token_fc1"], z)
+        z = ctx.linear(f"blocks/{bi}/token_fc2", blk["token_fc2"],
+                       jax.nn.gelu(z))
+        h = h + z.transpose(0, 2, 1)
+        # channel mixing
+        z = _layer_norm(blk["ln2"], h)
+        z = ctx.linear(f"blocks/{bi}/chan_fc1", blk["chan_fc1"], z)
+        z = ctx.linear(f"blocks/{bi}/chan_fc2", blk["chan_fc2"],
+                       jax.nn.gelu(z))
+        h = h + z
+    h = _layer_norm(params["ln_f"], h).mean(axis=1)
+    return _dense(params["head"], h)
+
+
+def gpt_forward(cfg, params, ctx, tokens):
+    """tokens: [B, S] int32 → logits [B, S, vocab]."""
+    h = params["tok_embed"][tokens] + params["pos"][None, :tokens.shape[1]]
+    for bi, blk in enumerate(params["blocks"]):
+        a = _attention(blk, ctx, bi, _layer_norm(blk["ln1"], h),
+                       cfg["heads"], causal=True)
+        h = h + a
+        m = ctx.linear(f"blocks/{bi}/fc1", blk["fc1"],
+                       _layer_norm(blk["ln2"], h))
+        m = ctx.linear(f"blocks/{bi}/fc2", blk["fc2"], jax.nn.gelu(m))
+        h = h + m
+    h = _layer_norm(params["ln_f"], h)
+    return _dense(params["head"], h)
+
+
+def forward(cfg, params, ctx, x):
+    return {"vit": vit_forward, "mixer": mixer_forward,
+            "gpt": gpt_forward}[cfg["kind"]](cfg, params, ctx, x)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def ce_loss(logits, labels, smoothing):
+    """Mean label-smoothed cross entropy.  logits [..., C], labels [...] i32."""
+    c = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if smoothing > 0.0:
+        uniform = -logp.mean(axis=-1)
+        nll = (1.0 - smoothing) * nll + smoothing * uniform
+    return nll
+
+
+def classification_loss(cfg, logits, y):
+    return ce_loss(logits, y, cfg["smoothing"]).mean()
+
+
+def lm_loss(cfg, logits, targets):
+    return ce_loss(logits, targets, cfg["smoothing"]).mean()

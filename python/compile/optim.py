@@ -1,0 +1,74 @@
+"""In-graph AdamW — the whole update rule compiles into the train-step HLO.
+
+The Rust coordinator owns the *schedule* (learning rate, weight decay,
+temperature); this module owns the *update math*.  lr/wd/step arrive as
+runtime scalars so one artifact serves any schedule.
+
+Weight decay is decoupled (AdamW) and applied only to matrix-shaped
+parameters (ndim >= 2) whose path does not mark them as exempt — DynaDiag's
+``alpha`` vectors are regularized by the in-graph L1 term instead (Sec 3.2),
+and biases / layernorm scales are never decayed, matching the paper's
+training recipes (Apdx C).
+"""
+
+import jax
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def init_state(params):
+    """Zeroed first/second moment trees mirroring ``params``."""
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params)}
+
+
+def _decay_this(path, leaf):
+    """AdamW decay mask: 2-D+ weights only, never alpha vectors."""
+    name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    if name.endswith("alpha"):
+        return False
+    return leaf.ndim >= 2
+
+
+def apply(params, grads, opt, step, lr, wd):
+    """One AdamW step.
+
+    Args:
+      params, grads: matching pytrees.
+      opt: {"m": tree, "v": tree} from :func:`init_state`.
+      step: scalar f32, 1-based step count (bias correction).
+      lr, wd: scalar f32 runtime inputs.
+
+    Returns:
+      (new_params, new_opt)
+    """
+    b1c = 1.0 - BETA1 ** step
+    b2c = 1.0 - BETA2 ** step
+
+    def upd(path, p, g, m, v):
+        m = BETA1 * m + (1.0 - BETA1) * g
+        vv = BETA2 * v + (1.0 - BETA2) * (g * g)
+        mh = m / b1c
+        vh = vv / b2c
+        new_p = p - lr * mh / (jnp.sqrt(vh) + EPS)
+        if _decay_this(path, p):
+            new_p = new_p - lr * wd * p
+        return new_p, m, vv
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    out_p, out_m, out_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(path, p, g, m, v)
+        out_p.append(np_)
+        out_m.append(nm)
+        out_v.append(nv)
+    unflat = lambda leaves: jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), leaves)
+    return unflat(out_p), {"m": unflat(out_m), "v": unflat(out_v)}

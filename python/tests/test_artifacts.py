@@ -1,0 +1,170 @@
+"""Artifact-contract tests: IO counts, spec/shape agreement, exec parity.
+
+These catch manifest drift — the Rust coordinator trusts the manifest
+blindly, so every artifact's declared inputs/outputs must match what the
+traced function actually consumes/produces.
+"""
+
+import numpy as np
+import pytest
+
+from compile import artifacts as A
+from compile import model as M
+
+_NP = {"f32": np.float32, "i32": np.int32}
+
+
+def _example_inputs(art, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in art["inputs"]:
+        shp = tuple(s["shape"])
+        name = s["name"]
+        if s["dtype"] == "i32":
+            hi = 8
+            if name == "batch/x" or name == "batch/y":
+                cfg = art["meta"].get("config", {})
+                hi = cfg.get("vocab", cfg.get("classes", 8))
+            out.append(rng.integers(0, hi, size=shp).astype(np.int32))
+        elif name.startswith("masks/"):
+            out.append((rng.random(shp) < 0.5).astype(np.float32))
+        elif name == "scalar/step":
+            out.append(np.float32(1.0))
+        elif name == "scalar/lr":
+            out.append(np.float32(1e-3))
+        elif name in ("scalar/wd", "scalar/l1"):
+            out.append(np.float32(0.0))
+        elif name == "scalar/temp":
+            out.append(np.float32(1.0))
+        elif name == "kvec":
+            out.append(np.full(shp, 4.0, np.float32))
+        else:
+            out.append((0.05 * rng.normal(size=shp)).astype(np.float32))
+    return out
+
+
+@pytest.mark.parametrize("mode", ["masked", "dynadiag"])
+def test_train_artifact_io_contract(mode):
+    art = A.build_train("vit_micro", mode)
+    ins = _example_inputs(art)
+    outs = art["fn"](*ins)
+    assert len(outs) == len(art["output_names"])
+    assert np.isfinite(float(outs[-2])), "loss must be finite"
+    # params' shapes mirror params
+    n_p = sum(1 for s in art["inputs"] if s["name"].startswith("params/"))
+    for i in range(n_p):
+        assert outs[i].shape == tuple(art["inputs"][i]["shape"])
+
+
+def test_train_step_actually_updates_params():
+    art = A.build_train("vit_micro", "masked")
+    ins = _example_inputs(art)
+    outs = art["fn"](*ins)
+    moved = 0
+    n_p = sum(1 for s in art["inputs"] if s["name"].startswith("params/"))
+    for i in range(n_p):
+        if not np.allclose(np.asarray(outs[i]), ins[i]):
+            moved += 1
+    assert moved > n_p // 2, "most params should move after one Adam step"
+
+
+def test_gradprobe_outputs_dense_grads():
+    art = A.build_gradprobe("vit_micro")
+    ins = _example_inputs(art)
+    outs = art["fn"](*ins)
+    assert len(outs) == len(art["output_names"])
+    # grads w.r.t. W_eff are dense: nonzero even where mask == 0
+    cfg = M.CONFIGS["vit_micro"]
+    sparse = sorted(n for n, _, _ in M.sparse_layer_list(cfg))
+    mask_in = {s["name"][len("masks/"):]: ins[i]
+               for i, s in enumerate(art["inputs"])
+               if s["name"].startswith("masks/")}
+    g0 = np.asarray(outs[0])
+    m0 = mask_in[sparse[0]]
+    off_mask = np.abs(g0[m0 == 0])
+    assert off_mask.size > 0 and off_mask.max() > 0, \
+        "grad-probe must see missing-link gradients (RigL contract)"
+
+
+@pytest.mark.parametrize("mode", ["masked", "dynadiag"])
+def test_eval_artifact(mode):
+    art = A.build_eval("vit_micro", mode)
+    ins = _example_inputs(art)
+    loss, loss_vec, preds = art["fn"](*ins)
+    b = M.CONFIGS["vit_micro"]["batch"]
+    assert loss_vec.shape == (b,) and preds.shape == (b,)
+    np.testing.assert_allclose(float(loss), np.asarray(loss_vec).mean(),
+                               rtol=1e-5)
+
+
+def test_eval_gpt_correct_counts_bounded():
+    art = A.build_eval("gpt_mini", "masked")
+    ins = _example_inputs(art)
+    _, _, correct = art["fn"](*ins)
+    cfg = M.CONFIGS["gpt_mini"]
+    c = np.asarray(correct)
+    assert ((c >= 0) & (c <= cfg["seq"])).all()
+
+
+def test_diag_infer_matches_eval_when_weights_agree():
+    """diag_infer (Pallas path) == masked eval when the masked weights are
+    exactly the composed diagonals — Table 8's equivalence, in miniature."""
+    from compile.kernels import ref
+    cfg = M.CONFIGS["vit_micro"]
+    sparsity = 0.5
+    art_d = A.build_diag_infer("vit_micro", sparsity)
+    art_e = A.build_eval("vit_micro", "masked")
+    rng = np.random.default_rng(9)
+
+    ins_d = _example_inputs(art_d, seed=9)
+    # name -> index maps
+    idx_d = {s["name"]: i for i, s in enumerate(art_d["inputs"])}
+    idx_e = {s["name"]: i for i, s in enumerate(art_e["inputs"])}
+    ins_e = _example_inputs(art_e, seed=9)
+
+    sparse = {n: (o, i) for n, o, i in M.sparse_layer_list(cfg)}
+    # copy shared dense params by name; compose sparse weights
+    for s in art_e["inputs"]:
+        n = s["name"]
+        if n in idx_d:
+            ins_e[idx_e[n]] = ins_d[idx_d[n]]
+    for lname, (o, i) in sparse.items():
+        offs = rng.choice(i, size=A.diag_k(i, sparsity),
+                          replace=False).astype(np.int32)
+        vals = rng.normal(size=(len(offs), o)).astype(np.float32)
+        ins_d[idx_d[f"params/{lname}/offsets"]] = offs
+        ins_d[idx_d[f"params/{lname}/values"]] = vals
+        w = np.asarray(ref.compose_dense(offs, vals, o, i))
+        ins_e[idx_e[f"params/{lname}/w"]] = w
+        ins_e[idx_e[f"masks/{lname}"]] = np.ones((o, i), np.float32)
+
+    # same batch
+    ins_e[idx_e["batch/x"]] = ins_d[idx_d["batch/x"]]
+    ins_e[idx_e["batch/y"]] = ins_d[idx_d["batch/y"]]
+
+    loss_d, preds_d = art_d["fn"](*ins_d)
+    loss_e, _, preds_e = art_e["fn"](*ins_e)
+    np.testing.assert_allclose(float(loss_d), float(loss_e), rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(preds_d), np.asarray(preds_e))
+
+
+def test_micro_builders():
+    art = A.build_micro_diag(32, 4, batch=2)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(2, 32)).astype(np.float32)
+    offs = np.arange(4, dtype=np.int32)
+    vals = rng.normal(size=(4, 32)).astype(np.float32)
+    (y,) = art["fn"](x, offs, vals)
+    from compile.kernels import ref
+    np.testing.assert_allclose(y, ref.diag_matmul_ref(x, offs, vals),
+                               atol=1e-5)
+
+
+def test_manifest_names_unique_and_routed():
+    for mode in ["masked", "dynadiag"]:
+        art = A.build_train("mixer_micro", mode)
+        names = [s["name"] for s in art["inputs"]]
+        assert len(names) == len(set(names))
+        prefixes = ("params/", "opt_m/", "opt_v/", "masks/", "batch/",
+                    "scalar/", "kvec")
+        assert all(n.startswith(prefixes) for n in names)

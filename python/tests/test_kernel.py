@@ -1,0 +1,185 @@
+"""Kernel-vs-oracle correctness — the core L1 signal.
+
+Hypothesis sweeps shapes/K; every Pallas kernel must match its pure-jnp
+oracle to float32 tolerance on every draw.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (bcsr_matmul, diag_matmul, diag_matmul_t,
+                             hard_topk_mask, soft_topk, straight_through_topk)
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# diag_matmul forward
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.sampled_from([4, 8, 12, 16, 24]),
+       st.sampled_from([4, 8, 12, 16, 24, 32]), st.data())
+def test_diag_matmul_matches_ref(b, n_in, n_out, data):
+    k = data.draw(st.integers(1, n_in))
+    rng = _rng(data.draw(st.integers(0, 2**31)))
+    x = jnp.asarray(rng.normal(size=(b, n_in)).astype(np.float32))
+    offs = jnp.asarray(rng.choice(n_in, size=k, replace=False).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(k, n_out)).astype(np.float32))
+    got = diag_matmul(x, offs, vals)
+    want = ref.diag_matmul_ref(x, offs, vals)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@given(st.integers(1, 6), st.sampled_from([4, 8, 16]),
+       st.sampled_from([4, 8, 16, 32]), st.data())
+def test_diag_matmul_t_matches_ref(b, n_in, n_out, data):
+    k = data.draw(st.integers(1, n_in))
+    rng = _rng(data.draw(st.integers(0, 2**31)))
+    offs = jnp.asarray(rng.choice(n_in, size=k, replace=False).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(k, n_out)).astype(np.float32))
+    dy = jnp.asarray(rng.normal(size=(b, n_out)).astype(np.float32))
+    got = diag_matmul_t(dy, offs, vals, n_in)
+    want = ref.diag_matmul_t_ref(dy, offs, vals, n_in)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_diag_matmul_identity():
+    """K = n_in diagonals with unit values reproduces a circulant of ones."""
+    n = 8
+    x = jnp.eye(n, dtype=jnp.float32)
+    offs = jnp.arange(n, dtype=jnp.int32)
+    vals = jnp.ones((n, n), dtype=jnp.float32)
+    y = diag_matmul(x, offs, vals)
+    np.testing.assert_allclose(y, np.ones((n, n)), atol=1e-6)
+
+
+def test_diag_matmul_single_diagonal_is_permuted_scale():
+    """One diagonal with offset 0 acts as elementwise scale (square case)."""
+    rng = _rng(3)
+    n = 16
+    x = jnp.asarray(rng.normal(size=(5, n)).astype(np.float32))
+    vals = jnp.asarray(rng.normal(size=(1, n)).astype(np.float32))
+    y = diag_matmul(x, jnp.zeros((1,), jnp.int32), vals)
+    np.testing.assert_allclose(y, x * vals[0][None, :], atol=1e-6)
+
+
+def test_fwd_then_t_equals_dense_gram():
+    """x→y→(transpose) equals x @ (WᵀW): exercises fwd+t composition."""
+    rng = _rng(7)
+    b, n = 4, 12
+    k = 3
+    x = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+    offs = jnp.asarray(rng.choice(n, size=k, replace=False).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    w = np.asarray(ref.compose_dense(offs, vals, n, n))
+    y = diag_matmul(x, offs, vals)
+    z = diag_matmul_t(y, offs, vals, n)
+    np.testing.assert_allclose(z, np.asarray(x) @ w.T @ w, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# BCSR
+# ---------------------------------------------------------------------------
+
+def _random_bcsr(rng, n_out, n_in, bs, density, pad=2):
+    nbr, nbc = n_out // bs, n_in // bs
+    present = rng.random((nbr, nbc)) < density
+    row_ptr, col_idx, blocks = [0], [], []
+    for br in range(nbr):
+        for bc in range(nbc):
+            if present[br, bc]:
+                col_idx.append(bc)
+                blocks.append(rng.normal(size=(bs, bs)).astype(np.float32))
+        row_ptr.append(len(col_idx))
+    for _ in range(pad):
+        col_idx.append(0)
+        blocks.append(np.zeros((bs, bs), np.float32))
+    if not blocks:
+        blocks.append(np.zeros((bs, bs), np.float32))
+        col_idx.append(0)
+    return (jnp.asarray(np.array(row_ptr, np.int32)),
+            jnp.asarray(np.array(col_idx, np.int32)),
+            jnp.asarray(np.stack(blocks)))
+
+
+@given(st.sampled_from([8, 16, 32]), st.sampled_from([16, 32]),
+       st.sampled_from([4, 8]), st.floats(0.1, 0.9), st.data())
+def test_bcsr_matmul_matches_ref(n_out, n_in, bs, density, data):
+    if n_out % bs or n_in % bs:
+        return
+    rng = _rng(data.draw(st.integers(0, 2**31)))
+    row_ptr, col_idx, blocks = _random_bcsr(rng, n_out, n_in, bs, density)
+    x = jnp.asarray(rng.normal(size=(3, n_in)).astype(np.float32))
+    got = bcsr_matmul(x, row_ptr, col_idx, blocks, n_out)
+    want = ref.bcsr_matmul_ref(x, row_ptr, col_idx, blocks, n_out)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_bcsr_empty_rows():
+    """Block rows with no blocks must produce zero output rows."""
+    bs, n = 4, 16
+    row_ptr = jnp.asarray(np.array([0, 1, 1, 1, 1], np.int32))
+    col_idx = jnp.asarray(np.array([2, 0], np.int32))
+    blocks = jnp.asarray(np.stack([np.ones((bs, bs), np.float32),
+                                   np.zeros((bs, bs), np.float32)]))
+    x = jnp.ones((2, n), dtype=jnp.float32)
+    y = bcsr_matmul(x, row_ptr, col_idx, blocks, n)
+    assert np.allclose(np.asarray(y)[:, bs:], 0.0)
+    assert np.allclose(np.asarray(y)[:, :bs], bs)
+
+
+# ---------------------------------------------------------------------------
+# TopK
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 64), st.floats(0.05, 10.0), st.data())
+def test_soft_topk_matches_ref(d, t, data):
+    k = data.draw(st.integers(1, d))
+    rng = _rng(data.draw(st.integers(0, 2**31)))
+    a = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    got = soft_topk(a, float(k), t)
+    want = ref.soft_topk_ref(a, float(k), t)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@given(st.integers(4, 64), st.data())
+def test_soft_topk_bounded(d, data):
+    k = data.draw(st.integers(1, d))
+    rng = _rng(data.draw(st.integers(0, 2**31)))
+    a = jnp.asarray((10 * rng.normal(size=(d,))).astype(np.float32))
+    out = np.asarray(soft_topk(a, float(k), 0.1))
+    assert (out >= 0).all() and (out <= 1.0 + 1e-6).all()
+
+
+def test_soft_topk_temperature_limits():
+    """T→0 concentrates mass on the argmax (exploitation); large T spreads
+    toward the uniform k/d weighting (exploration) — the Sec 3.2 dial."""
+    a = jnp.asarray(np.array([5.0, 4.0, 3.0, 0.0, -1.0, -2.0], np.float32))
+    cold = np.asarray(soft_topk(a, 3.0, 0.01))
+    assert np.isclose(cold[0], 1.0, atol=1e-3)
+    assert np.allclose(cold[3:], 0.0, atol=1e-3)
+    hot = np.asarray(soft_topk(a, 3.0, 1e4))
+    assert np.allclose(hot, 3.0 / 6.0, atol=1e-3)
+    # ordering is preserved at any temperature
+    mid = np.asarray(soft_topk(a, 3.0, 1.0))
+    assert (np.diff(mid) <= 1e-6).all()
+
+
+def test_hard_topk_mask_counts():
+    a = jnp.asarray(np.array([0.1, 0.9, -0.5, 0.7, 0.2], np.float32))
+    m = np.asarray(hard_topk_mask(a, 2))
+    assert m.sum() == 2 and m[1] == 1 and m[3] == 1
+
+
+def test_straight_through_forward_is_hard():
+    a = jnp.asarray(np.array([3.0, 2.0, 1.0, 0.0], np.float32))
+    out = np.asarray(straight_through_topk(a, 2, 0.5))
+    np.testing.assert_allclose(out, [1, 1, 0, 0], atol=1e-6)

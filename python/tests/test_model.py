@@ -1,0 +1,200 @@
+"""L2 model checks: shapes, parameterization equivalences, gradient flow."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import optim
+from compile.kernels import ref, soft_topk
+
+
+def _batch(cfg, rng):
+    if cfg["kind"] == "gpt":
+        x = rng.integers(0, cfg["vocab"], size=(cfg["batch"], cfg["seq"]))
+        y = rng.integers(0, cfg["vocab"], size=(cfg["batch"], cfg["seq"]))
+        return jnp.asarray(x.astype(np.int32)), jnp.asarray(y.astype(np.int32))
+    x = rng.normal(size=(cfg["batch"], cfg["tokens"], cfg["patch_dim"]))
+    y = rng.integers(0, cfg["classes"], size=(cfg["batch"],))
+    return jnp.asarray(x.astype(np.float32)), jnp.asarray(y.astype(np.int32))
+
+
+def _to_jnp(tree):
+    return jax.tree_util.tree_map(jnp.asarray, tree)
+
+
+def test_forward_shapes_all_models():
+    rng = np.random.default_rng(0)
+    for name in ["vit_micro", "mixer_micro", "gpt_mini"]:
+        cfg = M.CONFIGS[name]
+        params = _to_jnp(M.init_params(cfg, "masked"))
+        x, y = _batch(cfg, rng)
+        ctx = M.MaskedCtx({})
+        logits = M.forward(cfg, params, ctx, x)
+        if cfg["kind"] == "gpt":
+            assert logits.shape == (cfg["batch"], cfg["seq"], cfg["vocab"])
+        else:
+            assert logits.shape == (cfg["batch"], cfg["classes"])
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_mask_of_ones_is_dense():
+    """masked forward with all-ones masks == no-mask forward."""
+    rng = np.random.default_rng(1)
+    cfg = M.CONFIGS["vit_micro"]
+    params = _to_jnp(M.init_params(cfg, "masked"))
+    x, _ = _batch(cfg, rng)
+    sparse = M.sparse_layer_list(cfg)
+    ones = {n: jnp.ones((o, i)) for n, o, i in sparse}
+    a = M.forward(cfg, params, M.MaskedCtx({}), x)
+    b = M.forward(cfg, params, M.MaskedCtx(ones), x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_zero_mask_blocks_information():
+    """Fully-zero masks on fc layers must change the output vs dense."""
+    rng = np.random.default_rng(2)
+    cfg = M.CONFIGS["vit_micro"]
+    params = _to_jnp(M.init_params(cfg, "masked"))
+    x, _ = _batch(cfg, rng)
+    sparse = M.sparse_layer_list(cfg)
+    zeros = {n: jnp.zeros((o, i)) for n, o, i in sparse}
+    a = M.forward(cfg, params, M.MaskedCtx({}), x)
+    b = M.forward(cfg, params, M.MaskedCtx(zeros), x)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_dynadiag_equals_explicit_composition():
+    """DynaDiagCtx output == forward with W composed by the oracle."""
+    rng = np.random.default_rng(3)
+    cfg = M.CONFIGS["vit_micro"]
+    params = _to_jnp(M.init_params(cfg, "dynadiag", seed=5))
+    x, _ = _batch(cfg, rng)
+    sparse = M.sparse_layer_list(cfg)
+    names = [n for n, _, _ in sparse]
+    kvec = jnp.asarray(np.full(len(sparse), 4.0, np.float32))
+    temp = jnp.float32(0.7)
+    ctx = M.DynaDiagCtx(names, temp, kvec)
+    a = M.forward(cfg, params, ctx, x)
+
+    # explicit: materialize each W via the oracle, drive MaskedCtx override
+    override = {}
+    for j, (n, o, i) in enumerate(sparse):
+        node = params
+        for part in n.split("/"):
+            node = node[int(part)] if part.isdigit() else node[part]
+        at = soft_topk(node["alpha"], kvec[j], temp)
+        override[n] = ref.dynadiag_weight_ref(node["v"], at)
+
+    # MaskedCtx.override expects layers keyed by name but reads bias from
+    # the node; adapt by building a masked-tree where "w"/"b" exist.
+    class Ctx:
+        def linear(self, name, p, xx):
+            if name in override:
+                return xx @ override[name].T + p["b"]
+            return xx @ p["w"].T + p["b"]
+
+    b = M.forward(cfg, params, Ctx(), x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_gradients_flow_to_alpha_and_v():
+    rng = np.random.default_rng(4)
+    cfg = M.CONFIGS["vit_micro"]
+    params = _to_jnp(M.init_params(cfg, "dynadiag"))
+    x, y = _batch(cfg, rng)
+    sparse = M.sparse_layer_list(cfg)
+    names = [n for n, _, _ in sparse]
+    kvec = jnp.asarray(np.full(len(sparse), 8.0, np.float32))
+
+    def loss_fn(p):
+        ctx = M.DynaDiagCtx(names, jnp.float32(1.0), kvec)
+        logits = M.forward(cfg, p, ctx, x)
+        return M.classification_loss(cfg, logits, y)
+
+    grads = jax.grad(loss_fn)(params)
+    g = grads["blocks"][0]["fc1"]
+    assert float(jnp.abs(g["alpha"]).sum()) > 0.0
+    assert float(jnp.abs(g["v"]).sum()) > 0.0
+
+
+def test_masked_gradient_is_masked():
+    """d loss / d W must vanish on pruned coordinates (W ⊙ M chain rule)."""
+    rng = np.random.default_rng(5)
+    cfg = M.CONFIGS["vit_micro"]
+    params = _to_jnp(M.init_params(cfg, "masked"))
+    x, y = _batch(cfg, rng)
+    sparse = M.sparse_layer_list(cfg)
+    masks = {}
+    mrng = np.random.default_rng(6)
+    for n, o, i in sparse:
+        masks[n] = jnp.asarray((mrng.random((o, i)) < 0.3).astype(np.float32))
+
+    def loss_fn(p):
+        logits = M.forward(cfg, p, M.MaskedCtx(masks), x)
+        return M.classification_loss(cfg, logits, y)
+
+    grads = jax.grad(loss_fn)(params)
+    gw = np.asarray(grads["blocks"][0]["fc1"]["w"])
+    m = np.asarray(masks["blocks/0/fc1"])
+    assert np.allclose(gw * (1 - m), 0.0, atol=1e-8)
+
+
+def test_causal_masking_in_gpt():
+    """Future tokens must not influence past logits."""
+    rng = np.random.default_rng(7)
+    cfg = M.CONFIGS["gpt_mini"]
+    params = _to_jnp(M.init_params(cfg, "masked"))
+    x, _ = _batch(cfg, rng)
+    x2 = np.asarray(x).copy()
+    x2[:, -1] = (x2[:, -1] + 1) % cfg["vocab"]  # perturb only last token
+    a = M.forward(cfg, params, M.MaskedCtx({}), x)
+    b = M.forward(cfg, params, M.MaskedCtx({}), jnp.asarray(x2))
+    np.testing.assert_allclose(np.asarray(a)[:, :-1], np.asarray(b)[:, :-1],
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(a)[:, -1], np.asarray(b)[:, -1])
+
+
+def test_adam_decreases_loss():
+    rng = np.random.default_rng(8)
+    cfg = M.CONFIGS["vit_micro"]
+    params = _to_jnp(M.init_params(cfg, "masked"))
+    opt = optim.init_state(params)
+    x, y = _batch(cfg, rng)
+
+    def loss_fn(p):
+        logits = M.forward(cfg, p, M.MaskedCtx({}), x)
+        return M.classification_loss(cfg, logits, y)
+
+    l0 = float(loss_fn(params))
+    for t in range(1, 6):
+        g = jax.grad(loss_fn)(params)
+        params, opt = optim.apply(params, g, opt, jnp.float32(t),
+                                  jnp.float32(3e-3), jnp.float32(0.0))
+    l1 = float(loss_fn(params))
+    assert l1 < l0
+
+
+def test_flatten_roundtrip():
+    cfg = M.CONFIGS["mixer_micro"]
+    params = M.init_params(cfg, "dynadiag")
+    named = M.flatten_named(params)
+    names = [n for n, _ in named]
+    assert len(names) == len(set(names)), "names must be unique"
+    rebuilt = M.unflatten_like(params, [v for _, v in named])
+    named2 = M.flatten_named(rebuilt)
+    for (n1, v1), (n2, v2) in zip(named, named2):
+        assert n1 == n2
+        np.testing.assert_array_equal(v1, v2)
+
+
+def test_sparse_layer_list_matches_params():
+    for name in ["vit_micro", "mixer_micro", "gpt_mini"]:
+        cfg = M.CONFIGS[name]
+        params = M.init_params(cfg, "masked")
+        for lname, o, i in M.sparse_layer_list(cfg):
+            node = params
+            for part in lname.split("/"):
+                node = node[int(part)] if part.isdigit() else node[part]
+            assert node["w"].shape == (o, i)

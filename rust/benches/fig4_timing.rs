@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig4_timing` — Fig 4: ViT-B inference/training time
+//! vs sparsity from the A100 performance model (no training involved).
+
+fn main() {
+    let opts = dynadiag::experiments::ExpOpts { steps: None, seeds: 1, fast: true };
+    dynadiag::experiments::fig4::run(&opts).unwrap();
+}

@@ -1,0 +1,20 @@
+//! `cargo bench --bench fig8_temperature` — regenerates Fig 8 — nnz trajectory per temperature schedule.
+//!
+//! Runs the experiment in its `--fast` profile (fewer steps/batches) so the
+//! whole bench suite finishes on one core; `dynadiag experiment fig8` runs
+//! the full-size version. Cells are cached under results/cells/.
+
+use std::rc::Rc;
+
+fn main() {
+    let session = dynadiag::runtime::Session::open("artifacts").expect("make artifacts first");
+    let opts = dynadiag::experiments::ExpOpts { steps: None, seeds: 1, fast: true };
+    run(&session, &opts).unwrap();
+}
+
+fn run(
+    session: &Rc<dynadiag::runtime::Session>,
+    opts: &dynadiag::experiments::ExpOpts,
+) -> anyhow::Result<()> {
+    dynadiag::experiments::fig8::run(session, opts)
+}

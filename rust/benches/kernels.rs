@@ -1,0 +1,99 @@
+//! `cargo bench --bench kernels` — L3 hot-path microbenchmarks.
+//!
+//! Times the coordinator-side primitives that sit on the per-step path
+//! (mask serialization, soft-topk, prune/grow scoring) and the SpMM
+//! implementations backing Figs 4/7 (diag-direct, BCSR, CSR, dense) at the
+//! paper's 768×768 layer shape. These are the numbers the §Perf pass in
+//! EXPERIMENTS.md iterates on.
+
+use dynadiag::bcsr::convert::diag_to_bcsr;
+use dynadiag::bcsr::Csr;
+use dynadiag::sparsity::diagonal::{diag_count, DiagMatrix};
+use dynadiag::sparsity::mask::Mask;
+use dynadiag::sparsity::topk::soft_topk;
+use dynadiag::tensor::Tensor;
+use dynadiag::util::rng::Rng;
+use dynadiag::util::timer::bench;
+
+fn random_diag(rng: &mut Rng, n: usize, k: usize) -> DiagMatrix {
+    let offsets = rng.choose_k(n, k);
+    let mut d = DiagMatrix::new(n, n, offsets);
+    for j in 0..d.k() {
+        for i in 0..n {
+            d.values[j][i] = rng.normal_f32(0.0, 1.0);
+        }
+    }
+    d
+}
+
+/// Clustered offsets — the post-training distribution (ℓ1 + the Apdx D
+/// proximity objective concentrate the selected band); random offsets are
+/// the worst case where K diagonals light up every block column.
+fn clustered_diag(rng: &mut Rng, n: usize, k: usize) -> DiagMatrix {
+    let base = rng.below(n);
+    let offsets: Vec<usize> = (0..k).map(|j| (base + j + j / 8) % n).collect();
+    let mut uniq = offsets.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let mut d = DiagMatrix::new(n, n, uniq);
+    for j in 0..d.k() {
+        for i in 0..n {
+            d.values[j][i] = rng.normal_f32(0.0, 1.0);
+        }
+    }
+    d
+}
+
+fn main() {
+    let mut rng = Rng::new(2024);
+    let n = 768;
+    let b = 32;
+    let s = 0.9;
+    let k = diag_count(n, s);
+    let d = random_diag(&mut rng, n, k);
+    let dc = clustered_diag(&mut rng, n, k);
+    let x = Tensor::randn(&[b, n], 1.0, &mut rng);
+    let dense = d.to_dense();
+    let csr = Csr::from_dense(&dense);
+    let conv = diag_to_bcsr(&d, 32, 0.4).unwrap();
+    let conv_c = diag_to_bcsr(&dc, 32, 0.4).unwrap();
+
+    println!("== SpMM at n={} S={:.0}% (K={} diagonals), b={} ==", n, s * 100.0, k, b);
+    let t = bench(2, 10, || dense.matmul_t(&x).unwrap());
+    println!("dense matmul_t      {:>9.2} ms", t.mean_ms());
+    let t = bench(2, 10, || d.matmul_t(&x).unwrap());
+    println!("diag direct         {:>9.2} ms", t.mean_ms());
+    let t = bench(2, 10, || conv.bcsr.matmul_t(&x).unwrap());
+    println!(
+        "bcsr random offs    {:>9.2} ms  (nnzb {}, block density {:.2})",
+        t.mean_ms(),
+        conv.bcsr.nnzb(),
+        conv.bcsr.block_density()
+    );
+    let t = bench(2, 10, || conv_c.bcsr.matmul_t(&x).unwrap());
+    println!(
+        "bcsr clustered offs {:>9.2} ms  (nnzb {}, block density {:.2})",
+        t.mean_ms(),
+        conv_c.bcsr.nnzb(),
+        conv_c.bcsr.block_density()
+    );
+    let t = bench(2, 10, || csr.matmul_t(&x).unwrap());
+    println!("csr                 {:>9.2} ms", t.mean_ms());
+    let t = bench(2, 10, || diag_to_bcsr(&d, 32, 0.4).unwrap());
+    println!("diag->bcsr convert  {:>9.2} ms", t.mean_ms());
+    let t = bench(2, 10, || d.matmul(&x).unwrap());
+    println!("diag transposed     {:>9.2} ms", t.mean_ms());
+
+    println!("\n== coordinator per-step primitives ==");
+    let mask = Mask::random(768, 768, k * n, &mut rng);
+    let t = bench(2, 20, || mask.to_f32());
+    println!("mask -> f32 upload buffer (768^2)  {:>9.3} ms", t.mean_ms());
+    let alpha: Vec<f32> = (0..768).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t = bench(2, 50, || soft_topk(&alpha, k as f64, 0.05));
+    println!("soft_topk host mirror (D=768)      {:>9.3} ms", t.mean_ms());
+    let w = Tensor::randn(&[768, 768], 1.0, &mut rng);
+    let t = bench(1, 5, || dynadiag::dst::active_by_magnitude(&mask, &w));
+    println!("prune scoring (sort active 768^2)  {:>9.3} ms", t.mean_ms());
+    let t = bench(1, 3, || dynadiag::dst::cht::ch3_scores(&mask));
+    println!("CHT CH3 link scores (768^2)        {:>9.3} ms", t.mean_ms());
+}

@@ -1,0 +1,342 @@
+//! Sparse matrix formats + SpMM on the host (Sec 3.3 / Apdx D substrate).
+//!
+//! `Csr` models the cuSPARSE-style unstructured path (what RigL gets);
+//! `Bcsr` models the SmaT-style blocked path DynaDiag converts into.  Both
+//! carry real measured SpMM implementations used by the Fig 4/7 benches —
+//! the A100 projections live in `perfmodel/`, these give the measured-CPU
+//! ordering.
+
+pub mod convert;
+
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Compressed Sparse Row (element granularity).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_dense(w: &Tensor) -> Csr {
+        let (rows, cols) = (w.rows(), w.cols());
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..rows {
+            for j in 0..cols {
+                let v = w.at2(i, j);
+                if v != 0.0 {
+                    col_idx.push(j);
+                    vals.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut w = Tensor::zeros(&[self.rows, self.cols]);
+        for i in 0..self.rows {
+            for p in self.row_ptr[i]..self.row_ptr[i + 1] {
+                *w.at2_mut(i, self.col_idx[p]) = self.vals[p];
+            }
+        }
+        w
+    }
+
+    /// `y = x @ W.T` with W = self ([rows, cols]), x [b, cols].
+    pub fn matmul_t(&self, x: &Tensor) -> Result<Tensor> {
+        if x.cols() != self.cols {
+            bail!("csr matmul_t: x {:?} vs cols {}", x.shape, self.cols);
+        }
+        let b = x.rows();
+        let mut y = Tensor::zeros(&[b, self.rows]);
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            for bi in 0..b {
+                let xrow = &x.data[bi * self.cols..(bi + 1) * self.cols];
+                let mut acc = 0.0f32;
+                for p in s..e {
+                    acc += self.vals[p] * xrow[self.col_idx[p]];
+                }
+                y.data[bi * self.rows + i] = acc;
+            }
+        }
+        Ok(y)
+    }
+}
+
+/// Block Compressed Sparse Row with square `bs × bs` blocks.
+#[derive(Clone, Debug)]
+pub struct Bcsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub bs: usize,
+    /// block-row pointers, len rows/bs + 1
+    pub row_ptr: Vec<usize>,
+    /// block-column index per stored block
+    pub col_idx: Vec<usize>,
+    /// packed blocks, nnzb × bs × bs, row-major within a block
+    pub blocks: Vec<f32>,
+}
+
+impl Bcsr {
+    /// Build from dense, storing every block with at least one nonzero.
+    pub fn from_dense(w: &Tensor, bs: usize) -> Result<Bcsr> {
+        let (rows, cols) = (w.rows(), w.cols());
+        if rows % bs != 0 || cols % bs != 0 {
+            bail!("bcsr: dims {}x{} not divisible by bs {}", rows, cols, bs);
+        }
+        let (nbr, nbc) = (rows / bs, cols / bs);
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::new();
+        let mut blocks = Vec::new();
+        for br in 0..nbr {
+            for bc in 0..nbc {
+                let mut any = false;
+                'scan: for i in 0..bs {
+                    for j in 0..bs {
+                        if w.at2(br * bs + i, bc * bs + j) != 0.0 {
+                            any = true;
+                            break 'scan;
+                        }
+                    }
+                }
+                if any {
+                    col_idx.push(bc);
+                    for i in 0..bs {
+                        for j in 0..bs {
+                            blocks.push(w.at2(br * bs + i, bc * bs + j));
+                        }
+                    }
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Ok(Bcsr { rows, cols, bs, row_ptr, col_idx, blocks })
+    }
+
+    pub fn nnzb(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Mean fraction of nonzeros inside stored blocks — the block-density
+    /// objective of the Apdx D conversion.
+    pub fn block_density(&self) -> f64 {
+        if self.nnzb() == 0 {
+            return 0.0;
+        }
+        let nz = self.blocks.iter().filter(|&&x| x != 0.0).count();
+        nz as f64 / self.blocks.len() as f64
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut w = Tensor::zeros(&[self.rows, self.cols]);
+        let bs = self.bs;
+        let nbr = self.rows / bs;
+        for br in 0..nbr {
+            for p in self.row_ptr[br]..self.row_ptr[br + 1] {
+                let bc = self.col_idx[p];
+                let base = p * bs * bs;
+                for i in 0..bs {
+                    for j in 0..bs {
+                        *w.at2_mut(br * bs + i, bc * bs + j) =
+                            self.blocks[base + i * bs + j];
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// `y = x @ W.T`, blocked: per block-row, accumulate x-panel × blockᵀ.
+    pub fn matmul_t(&self, x: &Tensor) -> Result<Tensor> {
+        if x.cols() != self.cols {
+            bail!("bcsr matmul_t: x {:?} vs cols {}", x.shape, self.cols);
+        }
+        let b = x.rows();
+        let bs = self.bs;
+        let nbr = self.rows / bs;
+        let mut y = Tensor::zeros(&[b, self.rows]);
+        for br in 0..nbr {
+            for p in self.row_ptr[br]..self.row_ptr[br + 1] {
+                let bc = self.col_idx[p];
+                let blk = &self.blocks[p * bs * bs..(p + 1) * bs * bs];
+                for bi in 0..b {
+                    let xp = &x.data[bi * self.cols + bc * bs..];
+                    let yp = &mut y.data[bi * self.rows + br * bs..];
+                    for i in 0..bs {
+                        let brow = &blk[i * bs..(i + 1) * bs];
+                        let mut acc = 0.0f32;
+                        for j in 0..bs {
+                            acc += brow[j] * xp[j];
+                        }
+                        yp[i] += acc;
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// Pad storage to a static `nnzb` (XLA artifact contract): extra blocks
+    /// get col 0 / zero values and are mathematically inert.
+    pub fn pad_to(&mut self, nnzb: usize) -> Result<()> {
+        if nnzb < self.nnzb() {
+            bail!("pad_to: {} < current nnzb {}", nnzb, self.nnzb());
+        }
+        // appended blocks must live in some block-row; attach to the last
+        // row (row_ptr end) so CSR invariants hold.
+        let extra = nnzb - self.nnzb();
+        for _ in 0..extra {
+            self.col_idx.push(0);
+            self.blocks.extend(std::iter::repeat(0.0).take(self.bs * self.bs));
+        }
+        *self.row_ptr.last_mut().unwrap() = self.col_idx.len();
+        Ok(())
+    }
+
+    /// Flat i32 buffers for the XLA bcsr microkernel inputs.
+    pub fn row_ptr_i32(&self) -> Vec<i32> {
+        self.row_ptr.iter().map(|&x| x as i32).collect()
+    }
+
+    pub fn col_idx_i32(&self) -> Vec<i32> {
+        self.col_idx.iter().map(|&x| x as i32).collect()
+    }
+}
+
+/// Blocks touched by a mask at block size bs (conversion cost metric).
+pub fn blocks_touched(mask: &Mask, bs: usize) -> usize {
+    let nbr = mask.rows.div_ceil(bs);
+    let nbc = mask.cols.div_ceil(bs);
+    let mut on = vec![false; nbr * nbc];
+    for i in 0..mask.rows {
+        for j in 0..mask.cols {
+            if mask.get(i, j) {
+                on[(i / bs) * nbc + j / bs] = true;
+            }
+        }
+    }
+    on.into_iter().filter(|&x| x).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall_explain;
+    use crate::util::rng::Rng;
+
+    fn sparse_tensor(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Tensor {
+        let mut t = Tensor::zeros(&[rows, cols]);
+        for v in t.data.iter_mut() {
+            if rng.bool(density) {
+                *v = rng.normal_f32(0.0, 1.0);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn csr_roundtrip_and_spmm() {
+        forall_explain(
+            30,
+            30,
+            |r| {
+                let rows = 1 + r.below(24);
+                let cols = 1 + r.below(24);
+                let mut rr = r.fork(1);
+                let w = sparse_tensor(&mut rr, rows, cols, 0.3);
+                let x = Tensor::randn(&[2, cols], 1.0, &mut rr);
+                (w, x)
+            },
+            |(w, x)| {
+                let c = Csr::from_dense(w);
+                if c.to_dense() != *w {
+                    return Err("roundtrip".into());
+                }
+                let diff = c.matmul_t(x).unwrap().max_abs_diff(&w.matmul_t(x).unwrap());
+                if diff < 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("spmm diff {}", diff))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bcsr_roundtrip_and_spmm() {
+        forall_explain(
+            31,
+            30,
+            |r| {
+                let bs = [2usize, 4][r.below(2)];
+                let rows = bs * (1 + r.below(8));
+                let cols = bs * (1 + r.below(8));
+                let mut rr = r.fork(2);
+                let w = sparse_tensor(&mut rr, rows, cols, 0.2);
+                let x = Tensor::randn(&[3, cols], 1.0, &mut rr);
+                (w, x, bs)
+            },
+            |(w, x, bs)| {
+                let b = Bcsr::from_dense(w, *bs).unwrap();
+                if b.to_dense() != *w {
+                    return Err("roundtrip".into());
+                }
+                let diff = b.matmul_t(x).unwrap().max_abs_diff(&w.matmul_t(x).unwrap());
+                if diff < 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("spmm diff {}", diff))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn padding_is_inert() {
+        let mut rng = Rng::new(32);
+        let w = sparse_tensor(&mut rng, 8, 8, 0.3);
+        let x = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        let mut b = Bcsr::from_dense(&w, 4).unwrap();
+        let before = b.matmul_t(&x).unwrap();
+        b.pad_to(b.nnzb() + 5).unwrap();
+        let after = b.matmul_t(&x).unwrap();
+        assert!(before.max_abs_diff(&after) < 1e-6);
+        assert_eq!(b.nnzb(), b.col_idx.len());
+    }
+
+    #[test]
+    fn block_density_dense_blocks() {
+        let mut w = Tensor::zeros(&[4, 4]);
+        for i in 0..2 {
+            for j in 0..2 {
+                *w.at2_mut(i, j) = 1.0;
+            }
+        }
+        let b = Bcsr::from_dense(&w, 2).unwrap();
+        assert_eq!(b.nnzb(), 1);
+        assert!((b.block_density() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blocks_touched_counts() {
+        let mut m = Mask::zeros(8, 8);
+        m.set(0, 0, true);
+        m.set(7, 7, true);
+        assert_eq!(blocks_touched(&m, 4), 2);
+    }
+}

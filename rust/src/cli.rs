@@ -1,0 +1,101 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `dynadiag <command> [--key value]... [--flag]...`
+//! Unrecognized `--key value` pairs flow into the RunConfig override path,
+//! so every config field is settable from the command line.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flag if next token is absent or another option
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        args.options.insert(key.to_string(), (*it.next().unwrap()).clone());
+                    }
+                    _ => args.flags.push(key.to_string()),
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("--{} wants an integer, got '{}'", key, v),
+            },
+        }
+    }
+
+    /// Options as (key, value) overrides for RunConfig, minus harness keys.
+    pub fn config_overrides(&self, exclude: &[&str]) -> Vec<(String, String)> {
+        self.options
+            .iter()
+            .filter(|(k, _)| !exclude.contains(&k.as_str()))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn commands_options_flags() {
+        let a = parse("train --model vit_tiny --sparsity 0.9 --verbose");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.opt("model"), Some("vit_tiny"));
+        assert_eq!(a.opt("sparsity"), Some("0.9"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("experiment table1 --seeds 2");
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.usize_opt("seeds").unwrap(), Some(2));
+    }
+
+    #[test]
+    fn overrides_exclude_harness_keys() {
+        let a = parse("train --model m --out x.json");
+        let o = a.config_overrides(&["out"]);
+        assert_eq!(o, vec![("model".to_string(), "m".to_string())]);
+    }
+}

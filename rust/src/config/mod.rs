@@ -1,0 +1,293 @@
+//! Typed configuration system: TOML files + CLI overrides -> `RunConfig`.
+//!
+//! Experiment presets live in `configs/`; everything has a default so the
+//! binary runs with no files at all (quickstart path).
+
+pub mod toml;
+
+use anyhow::{bail, Result};
+
+use crate::sparsity::schedule::Curve;
+use crate::sparsity::Distribution;
+use toml::Table;
+
+/// Which DST method drives topology (Sec 4.1 baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    Dense,
+    DynaDiag,
+    RigL,
+    Set,
+    Mest,
+    Cht,
+    SRigL,
+    Dsb,
+    PixelatedBFly,
+    DiagHeur,
+    /// one-shot pruning comparison (Table 13)
+    Wanda,
+}
+
+impl MethodKind {
+    pub fn parse(s: &str) -> Result<MethodKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" => MethodKind::Dense,
+            "dynadiag" => MethodKind::DynaDiag,
+            "rigl" => MethodKind::RigL,
+            "set" => MethodKind::Set,
+            "mest" => MethodKind::Mest,
+            "cht" => MethodKind::Cht,
+            "srigl" => MethodKind::SRigL,
+            "dsb" => MethodKind::Dsb,
+            "pixelatedbfly" | "pbfly" => MethodKind::PixelatedBFly,
+            "diagheur" => MethodKind::DiagHeur,
+            "wanda" => MethodKind::Wanda,
+            other => bail!("unknown method '{}'", other),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::Dense => "Dense",
+            MethodKind::DynaDiag => "DynaDiag",
+            MethodKind::RigL => "RigL",
+            MethodKind::Set => "SET",
+            MethodKind::Mest => "MEST",
+            MethodKind::Cht => "CHT",
+            MethodKind::SRigL => "SRigL",
+            MethodKind::Dsb => "DSB",
+            MethodKind::PixelatedBFly => "PixelatedBFly",
+            MethodKind::DiagHeur => "DiagHeur",
+            MethodKind::Wanda => "Wanda",
+        }
+    }
+
+    /// Uses the dynadiag (alpha) artifacts rather than masked ones.
+    pub fn is_dynadiag(&self) -> bool {
+        matches!(self, MethodKind::DynaDiag)
+    }
+
+    pub fn structured(&self) -> bool {
+        matches!(
+            self,
+            MethodKind::DynaDiag
+                | MethodKind::SRigL
+                | MethodKind::Dsb
+                | MethodKind::PixelatedBFly
+                | MethodKind::DiagHeur
+        )
+    }
+}
+
+/// One training run (one experiment cell).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub dataset: String,
+    pub method: MethodKind,
+    pub sparsity: f64,
+    pub steps: usize,
+    pub warmup: usize,
+    pub lr: f64,
+    pub lr_min: f64,
+    pub weight_decay: f64,
+    pub seed: u64,
+    /// topology update cadence (RigL ΔT)
+    pub update_every: usize,
+    /// stop topology updates after this fraction of training
+    pub update_until: f64,
+    /// RigL/SET initial update fraction
+    pub update_frac: f64,
+    /// DynaDiag temperature schedule
+    pub temp_curve: Curve,
+    pub temp_start: f64,
+    pub temp_end: f64,
+    /// sparsity ramp (Table 15)
+    pub sparsity_curve: Curve,
+    /// per-layer budget allocation (Table 14)
+    pub distribution: Distribution,
+    /// L1 coefficient on alpha
+    pub l1: f64,
+    /// eval batches per evaluation
+    pub eval_batches: usize,
+    pub eval_every: usize,
+    /// N:M group size for SRigL, block size for DSB/PBFly
+    pub nm_group: usize,
+    pub block_size: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "vit_micro".into(),
+            dataset: String::new(), // inferred from the model family
+            method: MethodKind::DynaDiag,
+            sparsity: 0.9,
+            steps: 400,
+            warmup: 20,
+            lr: 1e-3,
+            lr_min: 1e-5,
+            weight_decay: 5e-5,
+            seed: 3407,
+            update_every: 50,
+            update_until: 0.75,
+            update_frac: 0.3,
+            temp_curve: Curve::Cosine,
+            temp_start: 0.3,
+            temp_end: 0.1,
+            sparsity_curve: Curve::Cosine,
+            distribution: Distribution::ComputeFraction,
+            l1: 1e-5,
+            eval_batches: 8,
+            eval_every: 100,
+            nm_group: 8,
+            block_size: 8,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply a parsed TOML table (paths under `[run]`) over the defaults.
+    pub fn apply_table(&mut self, t: &Table) -> Result<()> {
+        self.model = t.str_or("run.model", &self.model);
+        self.dataset = t.str_or("run.dataset", &self.dataset);
+        if let Some(v) = t.get("run.method") {
+            self.method = MethodKind::parse(v.as_str()?)?;
+        }
+        self.sparsity = t.f64_or("run.sparsity", self.sparsity);
+        self.steps = t.usize_or("run.steps", self.steps);
+        self.warmup = t.usize_or("run.warmup", self.warmup);
+        self.lr = t.f64_or("run.lr", self.lr);
+        self.lr_min = t.f64_or("run.lr_min", self.lr_min);
+        self.weight_decay = t.f64_or("run.weight_decay", self.weight_decay);
+        self.seed = t.usize_or("run.seed", self.seed as usize) as u64;
+        self.update_every = t.usize_or("run.update_every", self.update_every);
+        self.update_until = t.f64_or("run.update_until", self.update_until);
+        self.update_frac = t.f64_or("run.update_frac", self.update_frac);
+        if let Some(v) = t.get("run.temp_curve") {
+            self.temp_curve = Curve::parse(v.as_str()?)
+                .ok_or_else(|| anyhow::anyhow!("bad temp_curve"))?;
+        }
+        self.temp_start = t.f64_or("run.temp_start", self.temp_start);
+        self.temp_end = t.f64_or("run.temp_end", self.temp_end);
+        if let Some(v) = t.get("run.sparsity_curve") {
+            self.sparsity_curve = Curve::parse(v.as_str()?)
+                .ok_or_else(|| anyhow::anyhow!("bad sparsity_curve"))?;
+        }
+        if let Some(v) = t.get("run.distribution") {
+            self.distribution = Distribution::parse(v.as_str()?)
+                .ok_or_else(|| anyhow::anyhow!("bad distribution"))?;
+        }
+        self.l1 = t.f64_or("run.l1", self.l1);
+        self.eval_batches = t.usize_or("run.eval_batches", self.eval_batches);
+        self.eval_every = t.usize_or("run.eval_every", self.eval_every);
+        self.nm_group = t.usize_or("run.nm_group", self.nm_group);
+        self.block_size = t.usize_or("run.block_size", self.block_size);
+        self.artifacts_dir = t.str_or("run.artifacts_dir", &self.artifacts_dir);
+        self.validate()
+    }
+
+    /// Apply `key=value` CLI overrides (same keys as the TOML, sans `run.`).
+    pub fn apply_overrides(&mut self, overrides: &[(String, String)]) -> Result<()> {
+        let mut text = String::from("[run]\n");
+        for (k, v) in overrides {
+            // quote strings that aren't numbers/bools/arrays
+            let quoted = if v.parse::<f64>().is_ok()
+                || v == "true"
+                || v == "false"
+                || v.starts_with('[')
+            {
+                v.clone()
+            } else {
+                format!("\"{}\"", v)
+            };
+            text.push_str(&format!("{} = {}\n", k, quoted));
+        }
+        let t = Table::parse(&text)?;
+        self.apply_table(&t)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.sparsity) {
+            bail!("sparsity {} outside [0, 1)", self.sparsity);
+        }
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.update_every == 0 {
+            bail!("update_every must be > 0");
+        }
+        if self.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        Ok(())
+    }
+
+    /// Default dataset for a model family if the user didn't pick one.
+    pub fn infer_dataset(model: &str) -> &'static str {
+        if model.starts_with("gpt") {
+            "synth-wiki"
+        } else if model.ends_with("micro") {
+            "synth-cifar"
+        } else {
+            "synth-img"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn table_overrides() {
+        let mut c = RunConfig::default();
+        let t = Table::parse(
+            "[run]\nmodel = \"gpt_mini\"\nmethod = \"rigl\"\nsparsity = 0.8\nsteps = 123",
+        )
+        .unwrap();
+        c.apply_table(&t).unwrap();
+        assert_eq!(c.model, "gpt_mini");
+        assert_eq!(c.method, MethodKind::RigL);
+        assert!((c.sparsity - 0.8).abs() < 1e-12);
+        assert_eq!(c.steps, 123);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = RunConfig::default();
+        c.apply_overrides(&[
+            ("method".into(), "srigl".into()),
+            ("sparsity".into(), "0.95".into()),
+        ])
+        .unwrap();
+        assert_eq!(c.method, MethodKind::SRigL);
+        assert!((c.sparsity - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let mut c = RunConfig::default();
+        assert!(c
+            .apply_overrides(&[("sparsity".into(), "1.5".into())])
+            .is_err());
+        assert!(c.apply_overrides(&[("method".into(), "bogus".into())]).is_err());
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for name in [
+            "dense", "dynadiag", "rigl", "set", "mest", "cht", "srigl", "dsb",
+            "pbfly", "diagheur", "wanda",
+        ] {
+            MethodKind::parse(name).unwrap();
+        }
+    }
+}

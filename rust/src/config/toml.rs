@@ -1,0 +1,288 @@
+//! Minimal TOML-subset parser (the real `toml`/serde crates are offline).
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with strings,
+//! integers, floats, booleans, and flat arrays; `#` comments. That covers
+//! every config in `configs/`. Values land in a flat `BTreeMap` keyed by
+//! `section.key` dotted paths.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {:?}", self),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {:?}", self),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {:?}", self),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        if i < 0 {
+            bail!("expected non-negative integer, got {}", i);
+        }
+        Ok(i as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {:?}", self),
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        match self {
+            Value::Array(v) => v.iter().map(|x| x.as_f64()).collect(),
+            _ => bail!("expected array, got {:?}", self),
+        }
+    }
+
+    pub fn as_str_vec(&self) -> Result<Vec<String>> {
+        match self {
+            Value::Array(v) => {
+                v.iter().map(|x| Ok(x.as_str()?.to_string())).collect()
+            }
+            _ => bail!("expected array, got {:?}", self),
+        }
+    }
+}
+
+/// Flat dotted-path table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?
+                    .trim();
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            let val = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{}.{}", section, key)
+            };
+            entries.insert(path, val);
+        }
+        Ok(Table { entries })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Table> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Table::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(|v| v.as_usize().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+
+    /// Merge another table over this one (other wins).
+    pub fn override_with(&mut self, other: &Table) {
+        for (k, v) in &other.entries {
+            self.entries.insert(k.clone(), v.clone());
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: '#' outside quotes ends the line
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\n", "\n").replace("\\\"", "\"")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>> =
+            split_top_level(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{}'", s)
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Table::parse(
+            r#"
+# top comment
+title = "dyna"          # inline comment
+[train]
+steps = 500
+lr = 1.5e-3
+verbose = true
+sparsities = [0.6, 0.9, 0.95]
+[model.vit]
+name = "vit_tiny"
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.get("title").unwrap().as_str().unwrap(), "dyna");
+        assert_eq!(t.get("train.steps").unwrap().as_usize().unwrap(), 500);
+        assert!((t.f64_or("train.lr", 0.0) - 1.5e-3).abs() < 1e-12);
+        assert!(t.bool_or("train.verbose", false));
+        assert_eq!(
+            t.get("train.sparsities").unwrap().as_f64_vec().unwrap(),
+            vec![0.6, 0.9, 0.95]
+        );
+        assert_eq!(t.str_or("model.vit.name", ""), "vit_tiny");
+    }
+
+    #[test]
+    fn string_arrays() {
+        let t = Table::parse(r#"methods = ["rigl", "dynadiag"]"#).unwrap();
+        assert_eq!(
+            t.get("methods").unwrap().as_str_vec().unwrap(),
+            vec!["rigl".to_string(), "dynadiag".to_string()]
+        );
+    }
+
+    #[test]
+    fn override_semantics() {
+        let mut base = Table::parse("a = 1\nb = 2").unwrap();
+        let over = Table::parse("b = 3\nc = 4").unwrap();
+        base.override_with(&over);
+        assert_eq!(base.get("a").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(base.get("b").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(base.get("c").unwrap().as_i64().unwrap(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Table::parse("[broken").is_err());
+        assert!(Table::parse("novalue").is_err());
+        assert!(Table::parse("x = ").is_err());
+    }
+}

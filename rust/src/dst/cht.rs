@@ -1,0 +1,179 @@
+//! CHT — Cannistraci-Hebb epitopological training (Zhang et al. 2024),
+//! implemented at its core idea: *gradient-free* regrowth driven by network
+//! topology. Missing links are scored by a bipartite Cannistraci-Hebb
+//! length-3 path score (common-neighbour strength), so regrowth needs no
+//! dense gradients — the property that makes CHT scalable.
+//!
+//! Score of missing link (row i, col j):
+//!     CH3(i, j) = Σ_{i' ∈ N(j)}  |N(i) ∩ N(i')|  / (1 + |N(i') \ {j}|)
+//! where N(·) are bipartite neighbourhoods (cols active in a row / rows
+//! active in a col). Paths i→c→i'→j with well-connected intermediates score
+//! higher; the denominator penalizes promiscuous hubs, after the CH "local
+//! community" normalization.
+
+use super::{active_by_magnitude, nnz_budget, prune_grow, DstMethod, GrowAction, LayerUpdate};
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct Cht;
+
+/// Row supports as bitset words for fast intersections.
+fn row_bitsets(mask: &Mask) -> Vec<Vec<u64>> {
+    let words = mask.cols.div_ceil(64);
+    let mut rows = vec![vec![0u64; words]; mask.rows];
+    for i in 0..mask.rows {
+        for j in 0..mask.cols {
+            if mask.get(i, j) {
+                rows[i][j / 64] |= 1 << (j % 64);
+            }
+        }
+    }
+    rows
+}
+
+fn intersect_count(a: &[u64], b: &[u64]) -> u32 {
+    a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
+}
+
+/// CH3 link score for every missing entry. O(cols · rows_per_col · rows)
+/// in the worst case but bitset-accelerated; fine at our layer sizes.
+pub fn ch3_scores(mask: &Mask) -> Vec<f32> {
+    let rows_bits = row_bitsets(mask);
+    let row_deg: Vec<u32> = rows_bits
+        .iter()
+        .map(|b| b.iter().map(|w| w.count_ones()).sum())
+        .collect();
+    // rows active per column
+    let mut col_rows: Vec<Vec<usize>> = vec![Vec::new(); mask.cols];
+    for i in 0..mask.rows {
+        for j in 0..mask.cols {
+            if mask.get(i, j) {
+                col_rows[j].push(i);
+            }
+        }
+    }
+    let mut scores = vec![0.0f32; mask.rows * mask.cols];
+    for j in 0..mask.cols {
+        for i in 0..mask.rows {
+            if mask.get(i, j) {
+                continue;
+            }
+            let mut s = 0.0f32;
+            for &ip in &col_rows[j] {
+                if ip == i {
+                    continue;
+                }
+                let common = intersect_count(&rows_bits[i], &rows_bits[ip]);
+                if common > 0 {
+                    let external = row_deg[ip].saturating_sub(1); // minus edge to j
+                    s += common as f32 / (1.0 + external as f32);
+                }
+            }
+            scores[i * mask.cols + j] = s;
+        }
+    }
+    scores
+}
+
+impl DstMethod for Cht {
+    fn name(&self) -> &'static str {
+        "CHT"
+    }
+
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+        // CHT initializes from a correlated-inhomogeneous topology; we use
+        // the BSW generator (Apdx I) thinned to budget, falling back to
+        // random for very small budgets.
+        let nnz = nnz_budget(n_out, n_in, sparsity);
+        let k = (nnz / n_out.max(1)).max(1);
+        let g = crate::graph::generators::bsw(n_out, n_in, k, 0.2, rng);
+        let mut mask = Mask::zeros(n_out, n_in);
+        for u in 0..n_out {
+            for &v in &g.adj[u] {
+                mask.set(u, v - n_out, true);
+            }
+        }
+        // trim/pad to the exact budget
+        let mut active: Vec<usize> =
+            (0..mask.bits.len()).filter(|&i| mask.bits[i]).collect();
+        if active.len() > nnz {
+            rng.shuffle(&mut active);
+            for &idx in active.iter().take(active.len() - nnz) {
+                mask.bits[idx] = false;
+            }
+        } else {
+            let mut inactive: Vec<usize> =
+                (0..mask.bits.len()).filter(|&i| !mask.bits[i]).collect();
+            rng.shuffle(&mut inactive);
+            for &idx in inactive.iter().take(nnz - active.len()) {
+                mask.bits[idx] = true;
+            }
+        }
+        mask
+    }
+
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        weights: &Tensor,
+        _grads: Option<&Tensor>,
+        fraction: f64,
+        rng: &mut Rng,
+    ) -> LayerUpdate {
+        let k = ((mask.nnz() as f64 * fraction).round() as usize)
+            .min(mask.nnz().saturating_sub(1));
+        let prune = active_by_magnitude(mask, weights);
+        let scores = ch3_scores(mask);
+        // break CH ties randomly so zero-score regions don't get row-major bias
+        let jitter: Vec<f32> = (0..scores.len()).map(|_| rng.f32() * 1e-6).collect();
+        let grow = super::inactive_by_score(mask, |i| scores[i] + jitter[i]);
+        prune_grow(mask, &prune, &grow, k, GrowAction::RandomSmall)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ch3_prefers_dense_neighbourhoods() {
+        // rows 0,1 share many columns; link (0, 5) should outscore a link
+        // into an empty region.
+        let mut mask = Mask::zeros(4, 8);
+        for j in 0..4 {
+            mask.set(0, j, true);
+            mask.set(1, j, true);
+        }
+        mask.set(1, 5, true); // row 1 reaches col 5
+        let scores = ch3_scores(&mask);
+        let near = scores[5]; // (0,5): path 0→{0..3}→1→5
+        let far = scores[7]; // (0,7): nothing reaches col 7
+        assert!(near > far, "near {} far {}", near, far);
+        assert_eq!(far, 0.0);
+    }
+
+    #[test]
+    fn cht_budget_preserved_and_gradient_free() {
+        let mut rng = Rng::new(70);
+        let mut m = Cht;
+        assert!(!m.needs_grads(), "CHT must be gradient-free");
+        let mask = m.init_mask(16, 16, 0.8, &mut rng);
+        assert_eq!(mask.nnz(), nnz_budget(16, 16, 0.8));
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let up = m.update_layer(&mask, &w, None, 0.3, &mut rng);
+        assert_eq!(up.mask.nnz(), mask.nnz());
+    }
+
+    #[test]
+    fn scores_zero_on_active_entries() {
+        let mut rng = Rng::new(71);
+        let mask = Mask::random(10, 10, 30, &mut rng);
+        let scores = ch3_scores(&mask);
+        for (i, &s) in scores.iter().enumerate() {
+            if mask.bits[i] {
+                assert_eq!(s, 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! The DynaDiag controller — the paper's primary contribution, L3 side.
+//!
+//! During training, diagonal topology lives in each layer's trained α
+//! vector inside the XLA graph (Eq. 4–5); this controller drives the
+//! runtime scalars the graph consumes each step:
+//!
+//!   * per-layer k budgets (global sparsity → Table 14 distribution →
+//!     K_j = (1−S_j)·n_in, optionally ramped by the Table 15 schedule),
+//!   * the TopK temperature (cosine-annealed, Fig 8),
+//!   * the ℓ1(α) coefficient.
+//!
+//! After training it *finalizes*: hard-TopK per layer → selected offsets →
+//! values extracted from V → `DiagMatrix` (+ BCSR conversion for the
+//! execution path) → masks for the Table 16 small-world analysis.
+
+use crate::config::RunConfig;
+use crate::sparsity::diagonal::{diag_col, DiagMatrix};
+use crate::sparsity::distribution::{allocate, LayerShape};
+use crate::sparsity::mask::Mask;
+use crate::sparsity::schedule::{sparsity_at, temperature};
+use crate::sparsity::topk::{effective_k, hard_topk};
+use crate::tensor::Tensor;
+
+/// Per-run controller state.
+#[derive(Clone, Debug)]
+pub struct DynaDiagController {
+    pub layers: Vec<(String, usize, usize)>,
+    /// per-layer target sparsity from the distribution scheme
+    pub layer_sparsity: Vec<f64>,
+    cfg_steps: usize,
+    temp_curve: crate::sparsity::schedule::Curve,
+    temp_start: f64,
+    temp_end: f64,
+    sparsity_curve: crate::sparsity::schedule::Curve,
+    l1: f64,
+}
+
+impl DynaDiagController {
+    pub fn new(cfg: &RunConfig, layers: Vec<(String, usize, usize)>) -> DynaDiagController {
+        let shapes: Vec<LayerShape> = layers
+            .iter()
+            .map(|&(_, o, i)| LayerShape { n_out: o, n_in: i })
+            .collect();
+        let max_s = 1.0 - 1.0 / shapes
+            .iter()
+            .map(|l| l.n_in)
+            .max()
+            .unwrap_or(2) as f64;
+        let layer_sparsity = allocate(cfg.distribution, &shapes, cfg.sparsity, max_s);
+        DynaDiagController {
+            layers,
+            layer_sparsity,
+            cfg_steps: cfg.steps,
+            temp_curve: cfg.temp_curve,
+            temp_start: cfg.temp_start,
+            temp_end: cfg.temp_end,
+            sparsity_curve: cfg.sparsity_curve,
+            l1: cfg.l1,
+        }
+    }
+
+    /// Temperature T for this step (Fig 8 schedules). Annealed over the
+    /// same 40% window as the sparsity ramp: exploration while diagonals
+    /// are being dropped, crisp selection during re-convergence.
+    pub fn temperature(&self, step: usize) -> f64 {
+        let ramp_end = ((self.cfg_steps as f64 * 0.4) as usize).max(1);
+        temperature(
+            self.temp_curve,
+            step.min(ramp_end),
+            ramp_end,
+            self.temp_start,
+            self.temp_end,
+        )
+    }
+
+    pub fn l1_coeff(&self) -> f64 {
+        self.l1
+    }
+
+    /// Per-layer k values for this step. The sparsity ramp (Table 15 /
+    /// Fig 8) anneals from *dense* (k ≈ D, every ᾱ saturated at 1 so
+    /// gradients reach α through the unsaturated margin as diagonals fall
+    /// out of the TopK) down to the target K; Constant pins the target
+    /// from step 0 — no exploration, the paper's worst case.
+    pub fn kvec(&self, step: usize) -> Vec<f32> {
+        self.layers
+            .iter()
+            .zip(&self.layer_sparsity)
+            .map(|(&(_, _, n_in), &s_target)| {
+                // ramp to the target over the first 40% of training so the
+                // selected topology has the remaining 60% to re-converge
+                let ramp_end = (self.cfg_steps as f64 * 0.4) as usize;
+                let s = sparsity_at(
+                    self.sparsity_curve,
+                    step.min(ramp_end),
+                    ramp_end.max(1),
+                    0.0,
+                    s_target,
+                );
+                (((1.0 - s) * n_in as f64).round() as f32).max(1.0)
+            })
+            .collect()
+    }
+
+    /// Final integer K per layer (for hard selection).
+    pub fn final_k(&self, layer: usize) -> usize {
+        let (_, _, n_in) = self.layers[layer];
+        (((1.0 - self.layer_sparsity[layer]) * n_in as f64).round() as usize)
+            .clamp(1, n_in)
+    }
+
+    /// Effective active-diagonal count of a layer at a step (Fig 8 metric).
+    pub fn effective_diagonals(&self, layer: usize, alpha: &[f32], step: usize) -> usize {
+        let k = self.kvec(step)[layer] as f64;
+        effective_k(alpha, k, self.temperature(step), 0.5)
+    }
+
+    /// Finalize one layer: hard TopK over α → offsets; values from V scaled
+    /// by the *final soft ᾱ* so the finalized sparse model computes exactly
+    /// what the trained soft model computed (up to the dropped non-top-K
+    /// tail). Without the scaling, diagonals that trained at ᾱ ≈ 0 would
+    /// re-enter at full strength with never-trained V values (§Perf log).
+    pub fn finalize_layer(&self, layer: usize, alpha: &[f32], v_dense: &Tensor) -> DiagMatrix {
+        let (_, n_out, n_in) = self.layers[layer];
+        assert_eq!(alpha.len(), n_in, "alpha length mismatch");
+        assert_eq!(v_dense.shape, vec![n_out, n_in]);
+        let k = self.final_k(layer);
+        let atilde = crate::sparsity::topk::soft_topk(
+            alpha,
+            k as f64,
+            self.temperature(self.cfg_steps),
+        );
+        let mut offsets = hard_topk(alpha, k);
+        offsets.sort_unstable();
+        let mut d = DiagMatrix::new(n_out, n_in, offsets);
+        for j in 0..d.k() {
+            let off = d.offsets[j];
+            let scale = atilde[off] as f32;
+            for i in 0..n_out {
+                d.values[j][i] = scale * v_dense.at2(i, diag_col(i, off, n_in));
+            }
+        }
+        d
+    }
+
+    /// Masks of the finalized topology (Table 16 small-world analysis).
+    pub fn finalize_masks(&self, alphas: &[Vec<f32>]) -> Vec<(String, Mask)> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(l, (name, n_out, n_in))| {
+                let k = self.final_k(l);
+                let offsets = hard_topk(&alphas[l], k);
+                (
+                    name.clone(),
+                    crate::sparsity::diagonal::diag_mask(*n_out, *n_in, &offsets),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::schedule::Curve;
+    use crate::util::rng::Rng;
+
+    fn controller(sparsity: f64, curve: Curve) -> DynaDiagController {
+        let mut cfg = RunConfig::default();
+        cfg.sparsity = sparsity;
+        cfg.steps = 100;
+        cfg.sparsity_curve = curve;
+        let layers = vec![
+            ("a".to_string(), 32, 32),
+            ("b".to_string(), 64, 32),
+            ("c".to_string(), 32, 64),
+        ];
+        DynaDiagController::new(&cfg, layers)
+    }
+
+    #[test]
+    fn temperature_anneals() {
+        let c = controller(0.9, Curve::Cosine);
+        // anneals over the first 40% of training, then holds at temp_end
+        assert!(c.temperature(0) > c.temperature(20));
+        assert!(c.temperature(20) > c.temperature(40));
+        assert!((c.temperature(40) - c.temperature(100)).abs() < 1e-9);
+        let end = RunConfig::default().temp_end;
+        assert!((c.temperature(100) - end).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kvec_shrinks_toward_target() {
+        let c = controller(0.9, Curve::Cosine);
+        let k0 = c.kvec(0);
+        let k_end = c.kvec(100);
+        for (a, b) in k0.iter().zip(&k_end) {
+            assert!(a >= b, "k must shrink: {} -> {}", a, b);
+        }
+        // final k matches the budget
+        for l in 0..3 {
+            assert!((k_end[l] as usize).abs_diff(c.final_k(l)) <= 1);
+        }
+    }
+
+    #[test]
+    fn constant_curve_pins_target() {
+        let c = controller(0.9, Curve::Constant);
+        let k0 = c.kvec(0);
+        for l in 0..3 {
+            assert!((k0[l] as usize).abs_diff(c.final_k(l)) <= 1);
+        }
+    }
+
+    #[test]
+    fn finalize_extracts_topk_diagonals() {
+        let c = controller(0.75, Curve::Constant);
+        let (_, n_out, n_in) = c.layers[0];
+        let mut rng = Rng::new(80);
+        let mut alpha = vec![0.0f32; n_in];
+        // make offsets 3, 10, 17, ... clearly the best
+        let k = c.final_k(0);
+        for j in 0..k {
+            alpha[(3 + 7 * j) % n_in] = 10.0 + j as f32;
+        }
+        let v = Tensor::randn(&[n_out, n_in], 1.0, &mut rng);
+        let d = c.finalize_layer(0, &alpha, &v);
+        assert_eq!(d.k(), k);
+        for j in 0..k {
+            assert!(d.offsets.contains(&((3 + 7 * j) % n_in)));
+        }
+        // values come from V scaled by the final soft alpha (saturated = 1
+        // for the clearly-selected diagonals in this construction)
+        let w = d.to_dense();
+        for &off in &d.offsets {
+            for i in 0..n_out {
+                let c_ = diag_col(i, off, n_in);
+                let ratio = w.at2(i, c_) / v.at2(i, c_);
+                assert!(
+                    (0.0..=1.0 + 1e-5).contains(&(ratio as f64)),
+                    "scaled value outside [0, v]: ratio {}",
+                    ratio
+                );
+            }
+        }
+        // the top-scoring diagonal saturates at exactly alpha=1
+        let best_off = (0..n_in).max_by(|&a, &b| {
+            alpha[a].partial_cmp(&alpha[b]).unwrap()
+        }).unwrap();
+        let j_best = d.offsets.iter().position(|&o| o == best_off).unwrap();
+        for i in 0..n_out {
+            let c_ = diag_col(i, best_off, n_in);
+            assert!((d.values[j_best][i] - v.at2(i, c_)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn finalize_masks_have_budget() {
+        let c = controller(0.8, Curve::Constant);
+        let alphas: Vec<Vec<f32>> = c
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, &(_, _, n_in))| {
+                let mut rng = Rng::new(l as u64);
+                (0..n_in).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+            })
+            .collect();
+        for (l, (_, mask)) in c.finalize_masks(&alphas).iter().enumerate() {
+            let (_, n_out, _) = c.layers[l];
+            assert_eq!(mask.nnz(), c.final_k(l) * n_out);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Magnitude-family unstructured DST baselines: SET, RigL, MEST.
+//!
+//! All three share the prune phase (drop the lowest-|w| active weights) and
+//! differ in the grow phase:
+//!   * SET  — grow uniformly at random (Mocanu et al. 2018)
+//!   * RigL — grow the largest-|grad| missing links (Evci et al. 2020);
+//!            needs the dense grad probe, grown weights start at zero
+//!   * MEST — prune by |w| + γ|grad| (needs grads), grow randomly
+//!            (Yuan et al. 2021)
+
+use super::{
+    active_by_magnitude, inactive_by_score, nnz_budget, prune_grow, DstMethod,
+    GrowAction, LayerUpdate,
+};
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+fn random_init_mask(n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+    Mask::random(n_out, n_in, nnz_budget(n_out, n_in, sparsity), rng)
+}
+
+fn prune_count(mask: &Mask, fraction: f64) -> usize {
+    ((mask.nnz() as f64 * fraction).round() as usize).min(mask.nnz().saturating_sub(1))
+}
+
+/// SET (Sparse Evolutionary Training).
+pub struct Set;
+
+impl DstMethod for Set {
+    fn name(&self) -> &'static str {
+        "SET"
+    }
+
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+        random_init_mask(n_out, n_in, sparsity, rng)
+    }
+
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        weights: &Tensor,
+        _grads: Option<&Tensor>,
+        fraction: f64,
+        rng: &mut Rng,
+    ) -> LayerUpdate {
+        let k = prune_count(mask, fraction);
+        let prune = active_by_magnitude(mask, weights);
+        let mut inact: Vec<usize> =
+            (0..mask.bits.len()).filter(|&i| !mask.bits[i]).collect();
+        rng.shuffle(&mut inact);
+        prune_grow(mask, &prune, &inact, k, GrowAction::RandomSmall)
+    }
+}
+
+/// RigL (Rigging the Lottery).
+pub struct RigL;
+
+impl DstMethod for RigL {
+    fn name(&self) -> &'static str {
+        "RigL"
+    }
+
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+        random_init_mask(n_out, n_in, sparsity, rng)
+    }
+
+    fn needs_grads(&self) -> bool {
+        true
+    }
+
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        weights: &Tensor,
+        grads: Option<&Tensor>,
+        fraction: f64,
+        _rng: &mut Rng,
+    ) -> LayerUpdate {
+        let g = grads.expect("RigL needs the dense grad probe");
+        let k = prune_count(mask, fraction);
+        let prune = active_by_magnitude(mask, weights);
+        let grow = inactive_by_score(mask, |i| g.data[i].abs());
+        prune_grow(mask, &prune, &grow, k, GrowAction::Zero)
+    }
+}
+
+/// MEST (Memory-Economic Sparse Training): prune by |w| + γ|g|, grow random.
+pub struct Mest {
+    pub gamma: f32,
+}
+
+impl DstMethod for Mest {
+    fn name(&self) -> &'static str {
+        "MEST"
+    }
+
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+        random_init_mask(n_out, n_in, sparsity, rng)
+    }
+
+    fn needs_grads(&self) -> bool {
+        true
+    }
+
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        weights: &Tensor,
+        grads: Option<&Tensor>,
+        fraction: f64,
+        rng: &mut Rng,
+    ) -> LayerUpdate {
+        let g = grads.expect("MEST needs grads for its prune score");
+        let k = prune_count(mask, fraction);
+        let mut act: Vec<usize> =
+            (0..mask.bits.len()).filter(|&i| mask.bits[i]).collect();
+        act.sort_by(|&a, &b| {
+            let sa = weights.data[a].abs() + self.gamma * g.data[a].abs();
+            let sb = weights.data[b].abs() + self.gamma * g.data[b].abs();
+            sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut inact: Vec<usize> =
+            (0..mask.bits.len()).filter(|&i| !mask.bits[i]).collect();
+        rng.shuffle(&mut inact);
+        prune_grow(mask, &act, &inact, k, GrowAction::RandomSmall)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn setup(rng: &mut Rng) -> (Mask, Tensor, Tensor) {
+        let mask = Mask::random(12, 10, 40, rng);
+        let w = Tensor::randn(&[12, 10], 1.0, rng);
+        let g = Tensor::randn(&[12, 10], 1.0, rng);
+        (mask, w, g)
+    }
+
+    #[test]
+    fn all_methods_preserve_budget() {
+        forall(
+            50,
+            30,
+            |r| {
+                let mut rr = r.fork(1);
+                let s = setup(&mut rr);
+                let f = 0.05 + 0.4 * r.f64();
+                (s, f, r.fork(2))
+            },
+            |((mask, w, g), f, rng)| {
+                let mut rng = rng.clone();
+                for m in [
+                    &mut Set as &mut dyn DstMethod,
+                    &mut RigL,
+                    &mut Mest { gamma: 0.1 },
+                ] {
+                    let grads = if m.needs_grads() { Some(g) } else { None };
+                    let up = m.update_layer(mask, w, grads, *f, &mut rng);
+                    if up.mask.nnz() != mask.nnz() {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn rigl_grows_highest_gradient_links() {
+        let mut rng = Rng::new(51);
+        let mut mask = Mask::zeros(4, 4);
+        for j in 0..4 {
+            mask.set(0, j, true);
+        }
+        let mut w = Tensor::zeros(&[4, 4]);
+        for j in 0..4 {
+            *w.at2_mut(0, j) = 0.01 * (j + 1) as f32;
+        }
+        let mut g = Tensor::zeros(&[4, 4]);
+        *g.at2_mut(3, 3) = 100.0; // clearly the best missing link
+        let up = RigL.update_layer(&mask, &w, Some(&g), 0.25, &mut rng);
+        assert!(up.mask.get(3, 3), "RigL must grow the top-grad link");
+        assert!(!up.mask.get(0, 0), "RigL must prune the smallest weight");
+        assert_eq!(up.grow_action, GrowAction::Zero);
+    }
+
+    #[test]
+    fn mest_protects_high_gradient_small_weights() {
+        let mut rng = Rng::new(52);
+        let mut mask = Mask::zeros(2, 2);
+        mask.set(0, 0, true);
+        mask.set(0, 1, true);
+        let mut w = Tensor::zeros(&[2, 2]);
+        *w.at2_mut(0, 0) = 0.01; // small weight, huge grad
+        *w.at2_mut(0, 1) = 0.02; // slightly bigger weight, zero grad
+        let mut g = Tensor::zeros(&[2, 2]);
+        *g.at2_mut(0, 0) = 10.0;
+        let up = Mest { gamma: 0.1 }.update_layer(&mask, &w, Some(&g), 0.5, &mut rng);
+        assert!(up.mask.get(0, 0), "high-grad small weight must survive MEST");
+        assert!(!up.mask.get(0, 1));
+    }
+
+    #[test]
+    fn set_grows_somewhere_new() {
+        let mut rng = Rng::new(53);
+        let (mask, w, _) = setup(&mut rng);
+        let up = Set.update_layer(&mask, &w, None, 0.3, &mut rng);
+        assert!(!up.grown.is_empty());
+        for &(i, j) in &up.grown {
+            assert!(!mask.get(i, j));
+        }
+        assert_eq!(up.grow_action, GrowAction::RandomSmall);
+    }
+}

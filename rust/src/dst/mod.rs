@@ -1,0 +1,212 @@
+//! Dynamic Sparse Training methods (Sec 2.2 / 4.1 baselines + DiagHeur).
+//!
+//! Every masked baseline implements [`DstMethod`]: the trainer calls
+//! `init_mask` once per layer, then `update_layer` at each topology-update
+//! step (cadence ΔT, cosine-decayed fraction — RigL's recipe, shared by all
+//! the prune-and-regrow methods). The trainer owns weights host-side between
+//! XLA steps; `GrowAction` tells it how to initialize regrown weights.
+//!
+//! DynaDiag itself is *not* a masked method — its topology lives in the
+//! trained α vector (see [`dynadiag`]) — but its controller shares the
+//! budget/schedule plumbing here.
+
+pub mod cht;
+pub mod dynadiag;
+pub mod magnitude;
+pub mod structured;
+pub mod wanda;
+
+use crate::config::{MethodKind, RunConfig};
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// How regrown coordinates should be initialized by the trainer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GrowAction {
+    /// RigL: new weights start at exactly zero
+    Zero,
+    /// SET-style: small random init
+    RandomSmall,
+    /// keep whatever value the dense buffer holds (block/pattern rebuilds)
+    KeepValue,
+}
+
+/// Result of one layer topology update.
+#[derive(Clone, Debug)]
+pub struct LayerUpdate {
+    pub mask: Mask,
+    /// coordinates newly activated this update
+    pub grown: Vec<(usize, usize)>,
+    pub grow_action: GrowAction,
+}
+
+/// A masked DST baseline.
+pub trait DstMethod {
+    fn name(&self) -> &'static str;
+
+    /// Initial topology for one layer at its sparsity budget.
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask;
+
+    /// Whether `update_layer` wants dense gradients (triggers a grad-probe
+    /// artifact call at update steps).
+    fn needs_grads(&self) -> bool {
+        false
+    }
+
+    /// Prune-and-regrow one layer. `fraction` is the RigL-style update
+    /// fraction (share of active weights to move). `grads` is Some iff
+    /// `needs_grads`.
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        weights: &Tensor,
+        grads: Option<&Tensor>,
+        fraction: f64,
+        rng: &mut Rng,
+    ) -> LayerUpdate;
+
+    /// Static methods (PixelatedBFly) skip updates entirely.
+    fn is_static(&self) -> bool {
+        false
+    }
+}
+
+/// Instantiate the method named in the config.
+pub fn build_method(cfg: &RunConfig) -> Option<Box<dyn DstMethod>> {
+    match cfg.method {
+        MethodKind::Set => Some(Box::new(magnitude::Set)),
+        MethodKind::RigL => Some(Box::new(magnitude::RigL)),
+        MethodKind::Mest => Some(Box::new(magnitude::Mest { gamma: 0.1 })),
+        MethodKind::Cht => Some(Box::new(cht::Cht)),
+        MethodKind::SRigL => Some(Box::new(structured::SRigL { group: cfg.nm_group })),
+        MethodKind::Dsb => Some(Box::new(structured::Dsb { bs: cfg.block_size })),
+        MethodKind::PixelatedBFly => {
+            Some(Box::new(structured::PixelatedBFly { bs: cfg.block_size }))
+        }
+        MethodKind::DiagHeur => Some(Box::new(structured::DiagHeur::default())),
+        // Dense / DynaDiag / Wanda don't run the masked prune-grow loop
+        MethodKind::Dense | MethodKind::DynaDiag | MethodKind::Wanda => None,
+    }
+}
+
+/// Is `step` a topology-update step under the config cadence?
+pub fn is_update_step(cfg: &RunConfig, step: usize) -> bool {
+    step > 0
+        && step % cfg.update_every == 0
+        && (step as f64) < cfg.update_until * cfg.steps as f64
+}
+
+// ---------------------------------------------------------------------------
+// shared prune/grow helpers
+// ---------------------------------------------------------------------------
+
+/// Indices of active entries sorted ascending by |w| (prune candidates).
+pub fn active_by_magnitude(mask: &Mask, w: &Tensor) -> Vec<usize> {
+    let mut act: Vec<usize> = (0..mask.bits.len()).filter(|&i| mask.bits[i]).collect();
+    act.sort_by(|&a, &b| {
+        w.data[a]
+            .abs()
+            .partial_cmp(&w.data[b].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    act
+}
+
+/// Indices of inactive entries sorted descending by score (grow candidates).
+pub fn inactive_by_score(mask: &Mask, score: impl Fn(usize) -> f32) -> Vec<usize> {
+    let mut inact: Vec<usize> =
+        (0..mask.bits.len()).filter(|&i| !mask.bits[i]).collect();
+    inact.sort_by(|&a, &b| {
+        score(b).partial_cmp(&score(a)).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    inact
+}
+
+/// Generic prune-k/grow-k on element granularity; preserves nnz exactly.
+pub fn prune_grow(
+    mask: &Mask,
+    prune_order: &[usize],
+    grow_order: &[usize],
+    k: usize,
+    grow_action: GrowAction,
+) -> LayerUpdate {
+    let k = k.min(prune_order.len()).min(grow_order.len());
+    let mut new_mask = mask.clone();
+    for &idx in prune_order.iter().take(k) {
+        new_mask.bits[idx] = false;
+    }
+    let mut grown = Vec::with_capacity(k);
+    let mut taken = 0;
+    for &idx in grow_order {
+        if taken == k {
+            break;
+        }
+        if !new_mask.bits[idx] {
+            new_mask.bits[idx] = true;
+            grown.push((idx / mask.cols, idx % mask.cols));
+            taken += 1;
+        }
+    }
+    // if grow candidates ran short (tiny layers), re-activate pruned ones
+    let mut i = 0;
+    while taken < k && i < prune_order.len() {
+        let idx = prune_order[i];
+        if !new_mask.bits[idx] {
+            new_mask.bits[idx] = true;
+            taken += 1;
+        }
+        i += 1;
+    }
+    LayerUpdate { mask: new_mask, grown, grow_action }
+}
+
+/// nnz for a (rows, cols, sparsity) budget, always >= 1.
+pub fn nnz_budget(rows: usize, cols: usize, sparsity: f64) -> usize {
+    (((1.0 - sparsity) * (rows * cols) as f64).round() as usize).clamp(1, rows * cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_step_cadence() {
+        let mut cfg = RunConfig::default();
+        cfg.steps = 400;
+        cfg.update_every = 50;
+        cfg.update_until = 0.75;
+        assert!(!is_update_step(&cfg, 0));
+        assert!(is_update_step(&cfg, 50));
+        assert!(!is_update_step(&cfg, 51));
+        assert!(is_update_step(&cfg, 250));
+        assert!(!is_update_step(&cfg, 300)); // past 75% of training
+    }
+
+    #[test]
+    fn prune_grow_preserves_nnz() {
+        let mut rng = Rng::new(1);
+        let mask = Mask::random(8, 8, 20, &mut rng);
+        let w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let prune = active_by_magnitude(&mask, &w);
+        let grow = inactive_by_score(&mask, |i| w.data[i].abs());
+        let up = prune_grow(&mask, &prune, &grow, 5, GrowAction::Zero);
+        assert_eq!(up.mask.nnz(), 20);
+        assert_eq!(up.grown.len(), 5);
+        for &(i, j) in &up.grown {
+            assert!(up.mask.get(i, j));
+            assert!(!mask.get(i, j), "grown coord was already active");
+        }
+    }
+
+    #[test]
+    fn prune_order_is_magnitude_ascending() {
+        let mut rng = Rng::new(2);
+        let mask = Mask::ones(4, 4);
+        let w = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        let order = active_by_magnitude(&mask, &w);
+        for pair in order.windows(2) {
+            assert!(w.data[pair[0]].abs() <= w.data[pair[1]].abs());
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! Structured DST baselines: SRigL (N:M), DSB (blocks), PixelatedBFly
+//! (static butterfly), DiagHeur (heuristic diagonals, Apdx H).
+
+use super::{DstMethod, GrowAction, LayerUpdate};
+use crate::sparsity::diagonal::{diag_count, diag_mask, DiagMatrix};
+use crate::sparsity::mask::Mask;
+use crate::sparsity::patterns;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// SRigL: dynamic sparse training constrained to N:M patterns (Lasby et al.).
+/// At each update the per-row groups re-select their N survivors by a
+/// combined score: |w| on active coordinates, |grad| on missing ones —
+/// RigL's criteria projected onto the N:M constraint set.
+pub struct SRigL {
+    pub group: usize,
+}
+
+impl DstMethod for SRigL {
+    fn name(&self) -> &'static str {
+        "SRigL"
+    }
+
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+        let (n, m) = patterns::nm_for_sparsity(self.group, sparsity);
+        patterns::nm_mask(n_out, n_in, n, m, None, rng)
+    }
+
+    fn needs_grads(&self) -> bool {
+        true
+    }
+
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        weights: &Tensor,
+        grads: Option<&Tensor>,
+        fraction: f64,
+        rng: &mut Rng,
+    ) -> LayerUpdate {
+        let g = grads.expect("SRigL needs grads");
+        let sparsity = mask.sparsity();
+        let (n, m) = patterns::nm_for_sparsity(self.group, sparsity);
+        // combined score; damp missing-link scores by the update fraction so
+        // topology moves gradually like RigL rather than thrashing
+        let scores: Vec<f32> = (0..mask.bits.len())
+            .map(|i| {
+                if mask.bits[i] {
+                    weights.data[i].abs()
+                } else {
+                    (fraction as f32) * g.data[i].abs()
+                }
+            })
+            .collect();
+        let new_mask = patterns::nm_mask(mask.rows, mask.cols, n, m, Some(&scores), rng);
+        let grown = new_mask
+            .active_indices()
+            .into_iter()
+            .filter(|&(i, j)| !mask.get(i, j))
+            .collect();
+        LayerUpdate { mask: new_mask, grown, grow_action: GrowAction::Zero }
+    }
+}
+
+/// DSB (Dynamic Sparse Block): prune lowest-|w| blocks, grow highest-|grad|
+/// blocks (Jiang et al. 2022).
+pub struct Dsb {
+    pub bs: usize,
+}
+
+impl Dsb {
+    fn block_scores(&self, rows: usize, cols: usize, data: &[f32], active: bool, mask: &Mask) -> Vec<f32> {
+        let nbr = rows.div_ceil(self.bs);
+        let nbc = cols.div_ceil(self.bs);
+        let mut scores = vec![0.0f32; nbr * nbc];
+        let mut counts = vec![0usize; nbr * nbc];
+        for i in 0..rows {
+            for j in 0..cols {
+                let b = (i / self.bs) * nbc + j / self.bs;
+                if mask.get(i, j) == active {
+                    scores[b] += data[i * cols + j].abs();
+                    counts[b] += 1;
+                }
+            }
+        }
+        for (s, &c) in scores.iter_mut().zip(&counts) {
+            if c > 0 {
+                *s /= c as f32;
+            }
+        }
+        scores
+    }
+}
+
+impl DstMethod for Dsb {
+    fn name(&self) -> &'static str {
+        "DSB"
+    }
+
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+        let active = patterns::blocks_for_sparsity(n_out, n_in, self.bs, sparsity);
+        patterns::block_mask(n_out, n_in, self.bs, active, None, rng)
+    }
+
+    fn needs_grads(&self) -> bool {
+        true
+    }
+
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        weights: &Tensor,
+        grads: Option<&Tensor>,
+        fraction: f64,
+        _rng: &mut Rng,
+    ) -> LayerUpdate {
+        let g = grads.expect("DSB needs grads");
+        let (rows, cols) = (mask.rows, mask.cols);
+        let nbc = cols.div_ceil(self.bs);
+        let w_scores = self.block_scores(rows, cols, &weights.data, true, mask);
+        let g_scores = self.block_scores(rows, cols, &g.data, false, mask);
+        // current active blocks
+        let active_blocks: Vec<usize> = (0..w_scores.len())
+            .filter(|&b| {
+                let (br, bc) = (b / nbc, b % nbc);
+                mask.get(br * self.bs, (bc * self.bs).min(cols - 1))
+            })
+            .collect();
+        let k = ((active_blocks.len() as f64 * fraction).round() as usize)
+            .min(active_blocks.len().saturating_sub(1));
+        // prune k lowest-|w| active blocks
+        let mut by_w = active_blocks.clone();
+        by_w.sort_by(|&a, &b| w_scores[a].partial_cmp(&w_scores[b]).unwrap());
+        let pruned: std::collections::HashSet<usize> =
+            by_w.iter().take(k).cloned().collect();
+        // grow k highest-|g| inactive blocks
+        let mut inactive: Vec<usize> = (0..w_scores.len())
+            .filter(|b| !active_blocks.contains(b))
+            .collect();
+        inactive.sort_by(|&a, &b| g_scores[b].partial_cmp(&g_scores[a]).unwrap());
+        let grown_blocks: Vec<usize> = inactive.into_iter().take(k).collect();
+
+        let mut new_mask = mask.clone();
+        let mut grown = Vec::new();
+        for &b in &pruned {
+            let (br, bc) = (b / nbc, b % nbc);
+            for i in br * self.bs..((br + 1) * self.bs).min(rows) {
+                for j in bc * self.bs..((bc + 1) * self.bs).min(cols) {
+                    new_mask.set(i, j, false);
+                }
+            }
+        }
+        for &b in &grown_blocks {
+            let (br, bc) = (b / nbc, b % nbc);
+            for i in br * self.bs..((br + 1) * self.bs).min(rows) {
+                for j in bc * self.bs..((bc + 1) * self.bs).min(cols) {
+                    if !new_mask.get(i, j) {
+                        new_mask.set(i, j, true);
+                        grown.push((i, j));
+                    }
+                }
+            }
+        }
+        LayerUpdate { mask: new_mask, grown, grow_action: GrowAction::Zero }
+    }
+}
+
+/// Pixelated Butterfly: fixed block-butterfly support, no topology updates
+/// (static sparse training, Dao et al. 2021).
+pub struct PixelatedBFly {
+    pub bs: usize,
+}
+
+impl DstMethod for PixelatedBFly {
+    fn name(&self) -> &'static str {
+        "PixelatedBFly"
+    }
+
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, _rng: &mut Rng) -> Mask {
+        patterns::butterfly_mask(n_out, n_in, self.bs, sparsity)
+    }
+
+    fn is_static(&self) -> bool {
+        true
+    }
+
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        _weights: &Tensor,
+        _grads: Option<&Tensor>,
+        _fraction: f64,
+        _rng: &mut Rng,
+    ) -> LayerUpdate {
+        LayerUpdate { mask: mask.clone(), grown: vec![], grow_action: GrowAction::KeepValue }
+    }
+}
+
+/// DiagHeur (Apdx H): RigL-style decay/regrow at *diagonal* granularity —
+/// prune the lowest mean-|w| selected diagonals, regrow random new offsets.
+/// The paper's ablation showing that diagonal sparsity *without* the
+/// differentiable TopK underperforms DynaDiag.
+#[derive(Default)]
+pub struct DiagHeur {
+    /// per-layer selected offsets keyed by (rows, cols) identity — the
+    /// trainer calls methods layer-by-layer in a stable order, so we key by
+    /// call sequence instead (reset per init).
+    states: Vec<Vec<usize>>,
+    init_calls: usize,
+    update_calls: usize,
+}
+
+impl DstMethod for DiagHeur {
+    fn name(&self) -> &'static str {
+        "DiagHeur"
+    }
+
+    fn init_mask(&mut self, n_out: usize, n_in: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+        let k = diag_count(n_in, sparsity);
+        let offsets = rng.choose_k(n_in, k);
+        let mask = diag_mask(n_out, n_in, &offsets);
+        self.states.push(offsets);
+        self.init_calls += 1;
+        mask
+    }
+
+    fn update_layer(
+        &mut self,
+        mask: &Mask,
+        weights: &Tensor,
+        _grads: Option<&Tensor>,
+        fraction: f64,
+        rng: &mut Rng,
+    ) -> LayerUpdate {
+        let slot = self.update_calls % self.states.len().max(1);
+        self.update_calls += 1;
+        let offsets = self.states[slot].clone();
+        let d = DiagMatrix::from_dense(weights, offsets.clone())
+            .expect("weights shape mismatch");
+        let mags = d.diag_magnitudes();
+        let k = ((offsets.len() as f64 * fraction).round() as usize)
+            .min(offsets.len().saturating_sub(1));
+        // prune k lowest-magnitude diagonals
+        let mut order: Vec<usize> = (0..offsets.len()).collect();
+        order.sort_by(|&a, &b| mags[a].partial_cmp(&mags[b]).unwrap());
+        let pruned: std::collections::HashSet<usize> =
+            order.iter().take(k).cloned().collect();
+        let mut kept: Vec<usize> = offsets
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| !pruned.contains(j))
+            .map(|(_, &o)| o)
+            .collect();
+        // grow k random new offsets
+        let in_use: std::collections::HashSet<usize> = kept.iter().cloned().collect();
+        let free: Vec<usize> =
+            (0..mask.cols).filter(|o| !in_use.contains(o)).collect();
+        let mut grown_offsets = Vec::new();
+        if !free.is_empty() {
+            for idx in rng.choose_k(free.len(), k.min(free.len())) {
+                grown_offsets.push(free[idx]);
+            }
+        }
+        kept.extend(&grown_offsets);
+        self.states[slot] = kept.clone();
+        let new_mask = diag_mask(mask.rows, mask.cols, &kept);
+        let grown = grown_offsets
+            .iter()
+            .flat_map(|&off| {
+                (0..mask.rows)
+                    .map(move |i| (i, crate::sparsity::diagonal::diag_col(i, off, mask.cols)))
+            })
+            .collect();
+        LayerUpdate { mask: new_mask, grown, grow_action: GrowAction::RandomSmall }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn srigl_mask_is_nm() {
+        let mut rng = Rng::new(60);
+        let mut m = SRigL { group: 8 };
+        let mask = m.init_mask(16, 32, 0.75, &mut rng);
+        for i in 0..16 {
+            for g in 0..4 {
+                let cnt = (g * 8..(g + 1) * 8).filter(|&j| mask.get(i, j)).count();
+                assert_eq!(cnt, 2, "2:8 expected");
+            }
+        }
+        // after update, still N:M
+        let w = Tensor::randn(&[16, 32], 1.0, &mut rng);
+        let g = Tensor::randn(&[16, 32], 1.0, &mut rng);
+        let up = m.update_layer(&mask, &w, Some(&g), 0.3, &mut rng);
+        for i in 0..16 {
+            for gi in 0..4 {
+                let cnt =
+                    (gi * 8..(gi + 1) * 8).filter(|&j| up.mask.get(i, j)).count();
+                assert_eq!(cnt, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn dsb_moves_whole_blocks() {
+        let mut rng = Rng::new(61);
+        let mut m = Dsb { bs: 4 };
+        let mask = m.init_mask(16, 16, 0.75, &mut rng);
+        let nnz0 = mask.nnz();
+        assert_eq!(nnz0 % 16, 0, "block-aligned nnz");
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let g = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let up = m.update_layer(&mask, &w, Some(&g), 0.5, &mut rng);
+        assert_eq!(up.mask.nnz(), nnz0, "block budget preserved");
+        assert_eq!(up.grown.len() % 16, 0, "grown in whole blocks");
+    }
+
+    #[test]
+    fn pbfly_is_static() {
+        let mut rng = Rng::new(62);
+        let mut m = PixelatedBFly { bs: 4 };
+        let mask = m.init_mask(32, 32, 0.8, &mut rng);
+        assert!(m.is_static());
+        let w = Tensor::randn(&[32, 32], 1.0, &mut rng);
+        let up = m.update_layer(&mask, &w, None, 0.3, &mut rng);
+        assert_eq!(up.mask, mask);
+        assert!(up.grown.is_empty());
+    }
+
+    #[test]
+    fn diagheur_keeps_diagonal_structure_and_budget() {
+        let mut rng = Rng::new(63);
+        let mut m = DiagHeur::default();
+        let mask = m.init_mask(16, 16, 0.75, &mut rng);
+        let k0 = diag_count(16, 0.75);
+        assert_eq!(mask.nnz(), k0 * 16);
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let up = m.update_layer(&mask, &w, None, 0.5, &mut rng);
+        assert_eq!(up.mask.nnz(), k0 * 16, "diagonal count preserved");
+        // still expressible as whole diagonals: every row has k0 nnz
+        for c in up.mask.row_nnz() {
+            assert_eq!(c, k0);
+        }
+    }
+
+    #[test]
+    fn diagheur_prunes_weak_diagonals() {
+        let mut rng = Rng::new(64);
+        let mut m = DiagHeur::default();
+        let mask = m.init_mask(8, 8, 0.5, &mut rng);
+        let offsets = m.states[0].clone();
+        // make one diagonal clearly weakest
+        let mut w = Tensor::zeros(&[8, 8]);
+        for (j, &off) in offsets.iter().enumerate() {
+            for i in 0..8 {
+                let c = crate::sparsity::diagonal::diag_col(i, off, 8);
+                *w.at2_mut(i, c) = if j == 0 { 0.001 } else { 1.0 };
+            }
+        }
+        let weak = offsets[0];
+        let up = m.update_layer(&mask, &w, None, 0.26, &mut rng);
+        let still_there = m.states[0].contains(&weak);
+        // weak diagonal should be pruned (unless randomly regrown)
+        if still_there {
+            assert!(up.grown.iter().any(|&(i, j)| {
+                crate::sparsity::diagonal::owner_offset(i, j, 8) == weak
+            }));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Wanda one-shot pruning (Sun et al. 2023) — the Table 13 comparison point.
+//!
+//! Wanda scores weight (i, j) by |W_ij| · ‖X_j‖₂ where X_j is the j-th input
+//! feature over a calibration set, pruning per-*row* (per output) — no
+//! retraining. Our layers sit behind LayerNorm so E‖X_j‖ is near-uniform;
+//! we expose the input-norm hook anyway (callers estimate feature norms
+//! from calibration batches of the layer's *inputs* when available, or pass
+//! None to degenerate to per-row magnitude pruning — documented in
+//! DESIGN.md §6).
+
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+
+/// Prune `w` to `sparsity` with Wanda's per-row criterion.
+/// `input_norms`: optional ‖X_j‖₂ per input feature (len = cols).
+pub fn wanda_prune(w: &Tensor, input_norms: Option<&[f32]>, sparsity: f64) -> Mask {
+    assert_eq!(w.rank(), 2);
+    let (rows, cols) = (w.rows(), w.cols());
+    let keep_per_row =
+        (((1.0 - sparsity) * cols as f64).round() as usize).clamp(1, cols);
+    let mut mask = Mask::zeros(rows, cols);
+    let mut scored: Vec<(f32, usize)> = Vec::with_capacity(cols);
+    for i in 0..rows {
+        scored.clear();
+        for j in 0..cols {
+            let norm = input_norms.map(|n| n[j]).unwrap_or(1.0);
+            scored.push((w.at2(i, j).abs() * norm, j));
+        }
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, j) in scored.iter().take(keep_per_row) {
+            mask.set(i, j, true);
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn per_row_budget_exact() {
+        let mut rng = Rng::new(90);
+        let w = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let m = wanda_prune(&w, None, 0.75);
+        for c in m.row_nnz() {
+            assert_eq!(c, 4);
+        }
+    }
+
+    #[test]
+    fn keeps_largest_scored() {
+        let mut w = Tensor::zeros(&[1, 4]);
+        w.data.copy_from_slice(&[0.1, 0.9, 0.5, 0.2]);
+        let m = wanda_prune(&w, None, 0.5);
+        assert!(m.get(0, 1) && m.get(0, 2));
+        assert!(!m.get(0, 0) && !m.get(0, 3));
+    }
+
+    #[test]
+    fn input_norms_change_ranking() {
+        let mut w = Tensor::zeros(&[1, 4]);
+        w.data.copy_from_slice(&[0.1, 0.9, 0.5, 0.2]);
+        // huge norm on feature 0 promotes the small weight
+        let norms = [100.0f32, 1.0, 1.0, 1.0];
+        let m = wanda_prune(&w, Some(&norms), 0.5);
+        assert!(m.get(0, 0) && m.get(0, 1));
+    }
+}

@@ -1,0 +1,85 @@
+//! Fig 1 — accuracy vs inference/training speedup scatter at 90% sparsity.
+//! Accuracy from the Table 1 cells (ViT-tiny stand-in), speedups from the
+//! A100 performance model on the paper's ViT-B/16 shape.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::experiments::{run_matrix, table1, ExpOpts, Report};
+use crate::perfmodel::vit::{inference_speedup, train_speedup, Method, VIT_BASE};
+use crate::runtime::Session;
+
+fn perf_method(name: &str) -> Option<Method> {
+    Some(match name {
+        "RigL" => Method::RigL,
+        "SET" => Method::Set,
+        "MEST" => Method::Mest,
+        "CHT" => Method::Cht,
+        "SRigL" => Method::SRigL,
+        "DSB" => Method::Dsb,
+        "PixelatedBFly" => Method::PixelatedBFly,
+        "DiagHeur" => Method::DiagHeur,
+        "DynaDiag" => Method::DynaDiag,
+        _ => return None,
+    })
+}
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new(
+        "fig1",
+        "Accuracy vs speedup scatter @90% (ViT; speedups = A100 projection)",
+    );
+    let base = table1::base_config("vit_tiny", opts);
+    let methods: Vec<crate::config::MethodKind> = if opts.fast {
+        vec![
+            crate::config::MethodKind::RigL,
+            crate::config::MethodKind::SRigL,
+            crate::config::MethodKind::PixelatedBFly,
+            crate::config::MethodKind::Dsb,
+            crate::config::MethodKind::DynaDiag,
+        ]
+    } else {
+        table1::METHODS.to_vec()
+    };
+    let cells = run_matrix(session, &base, &methods, &[0.9], &opts.seed_list())?;
+    report.line("| method | top-1 acc | inference speedup | training speedup |");
+    report.line("|---|---|---|---|");
+    let mut best_struct = (String::new(), 0.0f64);
+    let mut scatter: Vec<(String, f64, f64)> = Vec::new();
+    for name in methods.iter().map(|m| m.name()) {
+        let acc = crate::experiments::mean_metric(&cells, name, 0.9, |c| c.accuracy)
+            .unwrap_or(f64::NAN);
+        let m = perf_method(name).unwrap();
+        let inf = inference_speedup(m, &VIT_BASE, 0.9);
+        let tr = train_speedup(m, &VIT_BASE, 0.9);
+        report.line(format!(
+            "| {} | {:.2} | {:.2}x | {:.2}x |",
+            name,
+            acc * 100.0,
+            inf,
+            tr
+        ));
+        // "closest to the top-right": among structured methods whose
+        // accuracy is within noise of the structured best (2 pts — the
+        // McNemar ties in table1 at this budget), rank by speedup product
+        if m.structured() {
+            scatter.push((name.to_string(), acc, inf * tr));
+        }
+    }
+    let best_acc = scatter.iter().map(|s| s.1).fold(0.0, f64::max);
+    if let Some(win) = scatter
+        .iter()
+        .filter(|s| s.1 >= best_acc - 0.02)
+        .max_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+    {
+        best_struct = (win.0.clone(), win.1);
+    }
+    report.blank();
+    report.line(format!(
+        "closest to the top-right corner (structured, accuracy ties broken          by speedup): {} — the paper's Fig 1 claim",
+        best_struct.0
+    ));
+    report.save()?;
+    Ok(())
+}

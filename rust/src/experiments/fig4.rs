@@ -1,0 +1,59 @@
+//! Fig 4 — inference and training time vs sparsity for ViT-Base under each
+//! method's execution strategy (A100 projections; the measured-CPU
+//! cross-check of the format ordering is Fig 7 / bench fig7_diag_speed).
+
+use anyhow::Result;
+
+use crate::experiments::{ExpOpts, Report};
+use crate::perfmodel::vit::{
+    inference_time, train_step_time, Method, ALL_METHODS, VIT_BASE,
+};
+
+pub fn run(_opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new("fig4", "ViT-B inference/training time vs sparsity (A100 model)");
+    let sparsities = [0.6, 0.7, 0.8, 0.9, 0.95];
+    let dense_inf = inference_time(Method::Dense, &VIT_BASE, 0.0);
+    let dense_tr = train_step_time(Method::Dense, &VIT_BASE, 0.0);
+    report.line(format!(
+        "dense: inference {:.2} ms, train step {:.2} ms",
+        dense_inf * 1e3,
+        dense_tr * 1e3
+    ));
+    report.blank();
+    report.line("### inference time (ms) [speedup]");
+    header(&mut report, &sparsities);
+    for m in ALL_METHODS.iter().skip(1) {
+        let mut cols = vec![m.name().to_string()];
+        for &s in &sparsities {
+            let t = inference_time(*m, &VIT_BASE, s);
+            cols.push(format!("{:.2} [{:.2}x]", t * 1e3, dense_inf / t));
+        }
+        report.line(format!("| {} |", cols.join(" | ")));
+    }
+    report.blank();
+    report.line("### train step time (ms) [speedup]");
+    header(&mut report, &sparsities);
+    for m in ALL_METHODS.iter().skip(1) {
+        let mut cols = vec![m.name().to_string()];
+        for &s in &sparsities {
+            let t = train_step_time(*m, &VIT_BASE, s);
+            cols.push(format!("{:.2} [{:.2}x]", t * 1e3, dense_tr / t));
+        }
+        report.line(format!("| {} |", cols.join(" | ")));
+    }
+    report.blank();
+    report.line(
+        "Shape vs paper: DynaDiag fastest at high sparsity (3.1x infer / 1.59x \
+         train @90% in the paper); RigL/cuSPARSE no speedup; SRigL/DSB train dense.",
+    );
+    report.save()?;
+    Ok(())
+}
+
+fn header(report: &mut Report, sparsities: &[f64]) {
+    let h: Vec<String> = std::iter::once("method".to_string())
+        .chain(sparsities.iter().map(|s| format!("{:.0}%", s * 100.0)))
+        .collect();
+    report.line(format!("| {} |", h.join(" | ")));
+    report.line(format!("|{}|", vec!["---"; h.len()].join("|")));
+}

@@ -1,0 +1,70 @@
+//! Fig 5 — LoRA-FA fine-tuning of a DynaDiag model at 80% sparsity:
+//! accuracy vs adapter rank (a) and the spatial spread of the fine-tuned
+//! delta (b), compared against the RigL ceiling.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::MethodKind;
+use crate::experiments::{run_cell, table1, ExpOpts, Report};
+use crate::runtime::Session;
+use crate::train::lora::lora_finetune;
+use crate::train::Trainer;
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new("fig5", "LoRA-FA rank sweep on DynaDiag @80% (ViT-tiny)");
+    // RigL reference accuracy at 80%
+    let mut rigl_cfg = table1::base_config("vit_micro", opts);
+    rigl_cfg.method = MethodKind::RigL;
+    rigl_cfg.sparsity = 0.8;
+    let rigl = run_cell(session, &rigl_cfg)?;
+
+    // the DynaDiag base model
+    let mut cfg = table1::base_config("vit_micro", opts);
+    cfg.method = MethodKind::DynaDiag;
+    cfg.sparsity = 0.8;
+    let mut trainer = Trainer::with_session(cfg.clone(), session.clone())?;
+    let result = trainer.train()?;
+    report.line(format!(
+        "base: DynaDiag @80% accuracy {:.2}; RigL reference {:.2}",
+        result.final_eval.accuracy * 100.0,
+        rigl.accuracy * 100.0
+    ));
+    report.blank();
+    report.line("| rank | accuracy | Δ params (%) | delta coverage (Fig 5b) |");
+    report.line("|---|---|---|---|");
+    let ft_steps = opts.steps.unwrap_or(if opts.fast { 60 } else { 150 });
+    let mut crossed = None;
+    for rank in [2usize, 4, 6, 8, 16] {
+        let lr = lora_finetune(&trainer, &result.finalized, &result.store, rank, ft_steps, 2e-3)?;
+        let extra_pct = 100.0 * lr.extra_params as f64 / lr.base_params as f64;
+        report.line(format!(
+            "| {} | {:.2} | {:.2}% | {:.3} |",
+            rank,
+            lr.eval.accuracy * 100.0,
+            extra_pct,
+            lr.coverage
+        ));
+        if crossed.is_none() && lr.eval.accuracy >= rigl.accuracy {
+            crossed = Some(rank);
+        }
+    }
+    report.blank();
+    match crossed {
+        Some(r) => report.line(format!(
+            "LoRA-FA surpasses the RigL ceiling at rank {} (paper: rank 6, +1.67% params)",
+            r
+        )),
+        None => report.line(
+            "RigL ceiling not crossed in this budget — increase --steps for the fine-tune",
+        ),
+    }
+    report.line(
+        "coverage = fraction of weight cells touched by |B·A| > 5% of max — \
+         high coverage shows the fine-tuned parameters spread *unstructured* \
+         across the matrix (Fig 5b's observation).",
+    );
+    report.save()?;
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Fig 7 — speedup vs number of diagonals for a 768×768 matmul.
+//!
+//! Three views of the same sweep:
+//!   1. measured Rust SpMM (conversion + compute, as the paper measures),
+//!   2. the XLA micro-artifacts (the L1 Pallas kernel via PJRT, interpret
+//!      lowering — structure check, not a TPU-speed proxy),
+//!   3. the A100 projection.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::bcsr::convert::diag_to_bcsr;
+use crate::experiments::{ExpOpts, Report};
+use crate::perfmodel::{linear_fwd, ExecFormat, A100};
+use crate::runtime::{HostTensor, Session};
+use crate::sparsity::diagonal::{diag_count, DiagMatrix};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::timer::bench;
+
+pub const N: usize = 768;
+pub const SPARSITIES: [f64; 8] = [0.99, 0.95, 0.90, 0.80, 0.70, 0.60, 0.50, 0.20];
+
+/// Post-training offset distribution: the ℓ1 + proximity objectives cluster
+/// the selected diagonals into a band with a few long-range members
+/// (observed in finalized models; see also bench `kernels` which reports
+/// the random-offset worst case for comparison).
+fn trained_like_diag(rng: &mut Rng, n: usize, k: usize) -> DiagMatrix {
+    let base = rng.below(n);
+    let mut offsets: Vec<usize> = (0..k).map(|j| (base + j + j / 6) % n).collect();
+    // ~10% long-range shortcuts
+    let shortcuts = (k / 10).max(1).min(k);
+    for s in 0..shortcuts {
+        offsets[k - 1 - s] = rng.below(n);
+    }
+    offsets.sort_unstable();
+    offsets.dedup();
+    let mut d = DiagMatrix::new(n, n, offsets);
+    for j in 0..d.k() {
+        for i in 0..n {
+            d.values[j][i] = rng.normal_f32(0.0, 1.0);
+        }
+    }
+    d
+}
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new("fig7", "Speedup vs #diagonals, 768×768 (Fig 7)");
+    let mut rng = Rng::new(77);
+    let b = 32;
+    let x = Tensor::randn(&[b, N], 1.0, &mut rng);
+    let dense = Tensor::randn(&[N, N], 1.0, &mut rng);
+    let iters = if opts.fast { 3 } else { 8 };
+    let t_dense = bench(1, iters, || dense.matmul_t(&x).unwrap());
+
+    report.line(format!(
+        "dense 768x768 (b={}): measured Rust {:.2} ms",
+        b,
+        t_dense.mean_ms()
+    ));
+    report.blank();
+    report.line("| sparsity | K | convert+bcsr (ms) | speedup | csr speedup | A100 projection |");
+    report.line("|---|---|---|---|---|---|");
+    let mut prev_speedup = f64::INFINITY;
+    for &s in &SPARSITIES {
+        let k = diag_count(N, s);
+        let d = trained_like_diag(&mut rng, N, k);
+        // measured: conversion + BCSR spmm (what the paper times)
+        let m = bench(1, iters, || {
+            let conv = diag_to_bcsr(&d, 32, 0.4).unwrap();
+            conv.bcsr.matmul_t(&x).unwrap()
+        });
+        let csr = crate::bcsr::Csr::from_dense(&d.to_dense());
+        let m_csr = bench(1, iters, || csr.matmul_t(&x).unwrap());
+        let speedup = t_dense.mean_s / m.mean_s;
+        let bb = 128 * 197; // A100 batch regime
+        let a100 = linear_fwd(&A100, ExecFormat::Dense, bb, N, N, 0.0)
+            / (linear_fwd(&A100, ExecFormat::DiagBcsr, bb, N, N, s)
+                + A100.diag_convert(k * N));
+        report.line(format!(
+            "| {:.0}% | {} | {:.2} | {:.2}x | {:.2}x | {:.2}x |",
+            s * 100.0,
+            k,
+            m.mean_ms(),
+            speedup,
+            t_dense.mean_s / m_csr.mean_s,
+            a100
+        ));
+        // the paper's observed monotonicity (more sparsity -> more speedup)
+        if speedup > prev_speedup * 1.35 {
+            crate::info!("non-monotone point at S={} (noise on shared core)", s);
+        }
+        prev_speedup = speedup;
+    }
+    report.blank();
+
+    // XLA micro-artifact cross-check (interpret-mode Pallas kernel)
+    report.line("### XLA micro-artifacts (L1 Pallas diag kernel via PJRT)");
+    report.line("| artifact | mean ms |");
+    report.line("|---|---|");
+    let dense_exe = session.executable("micro_dense_n768")?;
+    let xd: Vec<f32> = (0..64 * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let w: Vec<f32> = (0..N * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let t = bench(1, iters, || {
+        dense_exe
+            .run(&[
+                HostTensor::f32(&[64, N], xd.clone()),
+                HostTensor::f32(&[N, N], w.clone()),
+            ])
+            .unwrap()
+    });
+    report.line(format!("| micro_dense_n768 | {:.2} |", t.mean_ms()));
+    for &s in &[0.99, 0.90, 0.60] {
+        let k = diag_count(N, s);
+        let name = format!("micro_diag_n{}_k{}", N, k);
+        let exe = session.executable(&name)?;
+        let offs: Vec<i32> = rng.choose_k(N, k).into_iter().map(|o| o as i32).collect();
+        let vals: Vec<f32> = (0..k * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = bench(1, iters, || {
+            exe.run(&[
+                HostTensor::f32(&[64, N], xd.clone()),
+                HostTensor::i32(&[k], offs.clone()),
+                HostTensor::f32(&[k, N], vals.clone()),
+            ])
+            .unwrap()
+        });
+        report.line(format!("| {} | {:.2} |", name, t.mean_ms()));
+    }
+    report.blank();
+    report.line(
+        "Paper shape: gains taper below 50% sparsity and invert below 20%; \
+         CSR (cuSPARSE stand-in) never reaches BCSR speedups.",
+    );
+    report.save()?;
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! Shared McNemar reporting (Tables 9–11): paired significance of every
+//! method against a reference on the *same* eval instances (fixed eval
+//! seeds make the per-example correctness vectors paired across methods).
+
+use crate::experiments::CellResult;
+use crate::stats::{mcnemar, PairedCounts};
+
+/// One row: method vs reference at one sparsity.
+#[derive(Clone, Debug)]
+pub struct PValueRow {
+    pub method: String,
+    pub sparsity: f64,
+    pub p: f64,
+    pub not_different: bool,
+}
+
+/// Compute p-values of each method against `reference` per sparsity,
+/// using the seed-0 cells (the paired predictions).
+pub fn pvalues_vs(
+    cells: &[CellResult],
+    reference: &str,
+    methods: &[&str],
+    sparsities: &[f64],
+) -> Vec<PValueRow> {
+    let mut rows = Vec::new();
+    for &s in sparsities {
+        let refcell = cells
+            .iter()
+            .find(|c| c.method == reference && (c.sparsity - s).abs() < 1e-9);
+        let Some(rc) = refcell else { continue };
+        for &m in methods {
+            if m == reference {
+                continue;
+            }
+            let Some(mc) = cells
+                .iter()
+                .find(|c| c.method == m && (c.sparsity - s).abs() < 1e-9)
+            else {
+                continue;
+            };
+            let n = rc.correct.len().min(mc.correct.len());
+            let counts =
+                PairedCounts::from_correct(&rc.correct[..n], &mc.correct[..n]);
+            let (_, p) = mcnemar(&counts);
+            rows.push(PValueRow {
+                method: m.to_string(),
+                sparsity: s,
+                p,
+                not_different: p >= 0.05,
+            });
+        }
+    }
+    rows
+}
+
+/// Markdown table of p-values (methods × sparsities), bolding p >= 0.05.
+pub fn pvalue_table(rows: &[PValueRow], methods: &[&str], sparsities: &[f64]) -> Vec<String> {
+    let mut out = Vec::new();
+    let header: Vec<String> = std::iter::once("method".to_string())
+        .chain(sparsities.iter().map(|s| format!("{:.0}%", s * 100.0)))
+        .collect();
+    out.push(format!("| {} |", header.join(" | ")));
+    out.push(format!("|{}|", vec!["---"; header.len()].join("|")));
+    for &m in methods {
+        let mut cols = vec![m.to_string()];
+        for &s in sparsities {
+            let cell = rows
+                .iter()
+                .find(|r| r.method == m && (r.sparsity - s).abs() < 1e-9)
+                .map(|r| {
+                    if r.not_different {
+                        format!("**{:.4}**", r.p)
+                    } else {
+                        format!("{:.4}", r.p)
+                    }
+                })
+                .unwrap_or_else(|| "-".to_string());
+            cols.push(cell);
+        }
+        out.push(format!("| {} |", cols.join(" | ")));
+    }
+    out
+}
+
+/// Accuracy table with McNemar-based bolding: best per column gets `*`,
+/// any method not significantly different from the best gets bold.
+pub fn accuracy_table(
+    cells: &[CellResult],
+    methods: &[&str],
+    sparsities: &[f64],
+    higher_better: bool,
+    metric: impl Fn(&CellResult) -> f64,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    let header: Vec<String> = std::iter::once("method".to_string())
+        .chain(sparsities.iter().map(|s| format!("{:.0}%", s * 100.0)))
+        .collect();
+    out.push(format!("| {} |", header.join(" | ")));
+    out.push(format!("|{}|", vec!["---"; header.len()].join("|")));
+
+    for &m in methods {
+        let mut cols = vec![m.to_string()];
+        for &s in sparsities {
+            // mean across seeds for display
+            let val = crate::experiments::mean_metric(cells, m, s, &metric);
+            // find best method at this sparsity
+            let best = methods
+                .iter()
+                .filter_map(|&mm| {
+                    crate::experiments::mean_metric(cells, mm, s, &metric)
+                        .map(|v| (mm, v))
+                })
+                .max_by(|a, b| {
+                    let (x, y) = if higher_better { (a.1, b.1) } else { (-a.1, -b.1) };
+                    x.partial_cmp(&y).unwrap()
+                });
+            let cell = match (val, best) {
+                (Some(v), Some((bm, _))) => {
+                    let star = if bm == m { "\\*" } else { "" };
+                    // significance vs best via seed-0 paired predictions
+                    let bold = if bm == m {
+                        true
+                    } else {
+                        let a = cells.iter().find(|c| {
+                            c.method == m && (c.sparsity - s).abs() < 1e-9
+                        });
+                        let b = cells.iter().find(|c| {
+                            c.method == bm && (c.sparsity - s).abs() < 1e-9
+                        });
+                        match (a, b) {
+                            (Some(a), Some(b)) => {
+                                let n = a.correct.len().min(b.correct.len());
+                                let (_, p) = mcnemar(&PairedCounts::from_correct(
+                                    &a.correct[..n],
+                                    &b.correct[..n],
+                                ));
+                                p >= 0.05
+                            }
+                            _ => false,
+                        }
+                    };
+                    if bold {
+                        format!("**{:.2}{}**", v, star)
+                    } else {
+                        format!("{:.2}{}", v, star)
+                    }
+                }
+                _ => "-".to_string(),
+            };
+            cols.push(cell);
+        }
+        out.push(format!("| {} |", cols.join(" | ")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(method: &str, s: f64, correct: Vec<bool>, acc: f64) -> CellResult {
+        CellResult {
+            model: "m".into(),
+            method: method.into(),
+            sparsity: s,
+            seed: 0,
+            steps: 10,
+            accuracy: acc,
+            eval_loss: 1.0,
+            ppl: 1.0,
+            final_train_loss: 1.0,
+            train_seconds: 1.0,
+            correct,
+            eff_k: vec![],
+        }
+    }
+
+    #[test]
+    fn identical_predictions_not_different() {
+        let c = vec![true, false, true, true];
+        let cells = vec![
+            cell("A", 0.9, c.clone(), 0.75),
+            cell("B", 0.9, c.clone(), 0.75),
+        ];
+        let rows = pvalues_vs(&cells, "A", &["B"], &[0.9]);
+        assert!(rows[0].not_different);
+    }
+
+    #[test]
+    fn table_marks_best() {
+        let good: Vec<bool> = (0..200).map(|i| i % 10 != 0).collect();
+        let bad: Vec<bool> = (0..200).map(|i| i % 2 == 0).collect();
+        let cells = vec![
+            cell("A", 0.9, good, 0.9),
+            cell("B", 0.9, bad, 0.5),
+        ];
+        let t = accuracy_table(&cells, &["A", "B"], &[0.9], true, |c| c.accuracy);
+        assert!(t[2].contains("\\*"), "{:?}", t);
+        assert!(!t[3].contains("**"), "B must not be bold: {:?}", t);
+    }
+}

@@ -1,0 +1,368 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §4).
+//!
+//! Every experiment is regenerable two ways: `dynadiag experiment <id>` and
+//! `cargo bench --bench <id>_*`. Cells (one training run each) are cached as
+//! JSON under `results/cells/` keyed by their full config, so figures that
+//! share cells (Fig 1 ⊂ Table 1, Fig 9 = Table 1 ∪ Fig 4) reuse work and
+//! interrupted matrices resume.
+
+pub mod fig1;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod mcnemar;
+pub mod table1;
+pub mod table12;
+pub mod table13;
+pub mod table14;
+pub mod table15;
+pub mod table16;
+pub mod table2;
+pub mod table8;
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::config::{MethodKind, RunConfig};
+use crate::runtime::Session;
+use crate::train::{TrainResult, Trainer};
+use crate::util::json::Json;
+
+/// Directory all experiment outputs land in.
+pub fn results_dir() -> PathBuf {
+    PathBuf::from("results")
+}
+
+/// One completed experiment cell (the cacheable summary of a TrainResult).
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub model: String,
+    pub method: String,
+    pub sparsity: f64,
+    pub seed: u64,
+    pub steps: usize,
+    pub accuracy: f64,
+    pub eval_loss: f64,
+    pub ppl: f64,
+    pub final_train_loss: f64,
+    pub train_seconds: f64,
+    pub correct: Vec<bool>,
+    /// (step, effective diagonal count) series — DynaDiag only (Fig 8)
+    pub eff_k: Vec<(usize, usize)>,
+}
+
+impl CellResult {
+    pub fn from_train(r: &TrainResult) -> CellResult {
+        let last = r.history.last();
+        CellResult {
+            model: r.cfg.model.clone(),
+            method: r.cfg.method.name().to_string(),
+            sparsity: r.cfg.sparsity,
+            seed: r.cfg.seed,
+            steps: r.cfg.steps,
+            accuracy: r.final_eval.accuracy,
+            eval_loss: r.final_eval.loss,
+            ppl: r.final_eval.ppl,
+            final_train_loss: last.map(|m| m.loss).unwrap_or(f64::NAN),
+            train_seconds: r.train_seconds,
+            correct: r.final_eval.correct.clone(),
+            eff_k: r
+                .history
+                .iter()
+                .filter_map(|m| m.effective_k.map(|k| (m.step, k)))
+                .collect(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("sparsity", Json::Num(self.sparsity)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("accuracy", Json::Num(self.accuracy)),
+            ("eval_loss", Json::Num(self.eval_loss)),
+            ("ppl", Json::Num(self.ppl)),
+            ("final_train_loss", Json::Num(self.final_train_loss)),
+            ("train_seconds", Json::Num(self.train_seconds)),
+            (
+                "correct",
+                Json::Arr(self.correct.iter().map(|&b| Json::Bool(b)).collect()),
+            ),
+            (
+                "eff_k",
+                Json::Arr(
+                    self.eff_k
+                        .iter()
+                        .map(|&(s, k)| Json::arr_f64(&[s as f64, k as f64]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CellResult> {
+        Ok(CellResult {
+            model: j.req("model")?.as_str()?.to_string(),
+            method: j.req("method")?.as_str()?.to_string(),
+            sparsity: j.req("sparsity")?.as_f64()?,
+            seed: j.req("seed")?.as_f64()? as u64,
+            steps: j.req("steps")?.as_usize()?,
+            accuracy: j.req("accuracy")?.as_f64()?,
+            eval_loss: j.req("eval_loss")?.as_f64()?,
+            ppl: j.req("ppl")?.as_f64()?,
+            final_train_loss: j.req("final_train_loss")?.as_f64()?,
+            train_seconds: j.req("train_seconds")?.as_f64()?,
+            correct: j
+                .req("correct")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_bool())
+                .collect::<Result<Vec<_>>>()?,
+            eff_k: j
+                .req("eff_k")?
+                .as_arr()?
+                .iter()
+                .map(|v| {
+                    let p = v.as_arr()?;
+                    Ok((p[0].as_usize()?, p[1].as_usize()?))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// Cache key capturing everything that affects a cell's outcome.
+fn cell_key(cfg: &RunConfig) -> String {
+    let temp_part = if cfg.method.is_dynadiag() {
+        format!("_T{:.2}-{:.2}", cfg.temp_start, cfg.temp_end)
+    } else {
+        String::new()
+    };
+    format!(
+        "{}_{}_s{:0>4}_seed{}_n{}_{:?}_{:?}_{:?}_u{}{}",
+        cfg.model,
+        cfg.method.name(),
+        (cfg.sparsity * 1000.0).round() as usize,
+        cfg.seed,
+        cfg.steps,
+        cfg.distribution,
+        cfg.sparsity_curve,
+        cfg.temp_curve,
+        cfg.update_every,
+        temp_part,
+    )
+}
+
+/// Run (or fetch cached) one experiment cell.
+pub fn run_cell(session: &Rc<Session>, cfg: &RunConfig) -> Result<CellResult> {
+    let cells = results_dir().join("cells");
+    std::fs::create_dir_all(&cells)?;
+    let path = cells.join(format!("{}.json", cell_key(cfg)));
+    if path.exists() {
+        if let Ok(j) = Json::from_file(&path) {
+            if let Ok(c) = CellResult::from_json(&j) {
+                return Ok(c);
+            }
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::with_session(cfg.clone(), session.clone())?;
+    let result = trainer.train().with_context(|| {
+        format!("cell {} {} S={}", cfg.model, cfg.method.name(), cfg.sparsity)
+    })?;
+    let cell = CellResult::from_train(&result);
+    std::fs::write(&path, cell.to_json().to_string())?;
+    crate::info!(
+        "cell {} {} S={:.2} seed {}: acc {:.4} ppl {:.2} ({:.1}s)",
+        cfg.model,
+        cfg.method.name(),
+        cfg.sparsity,
+        cfg.seed,
+        cell.accuracy,
+        cell.ppl,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(cell)
+}
+
+/// Run a (methods × sparsities × seeds) matrix for one model.
+pub fn run_matrix(
+    session: &Rc<Session>,
+    base: &RunConfig,
+    methods: &[MethodKind],
+    sparsities: &[f64],
+    seeds: &[u64],
+) -> Result<Vec<CellResult>> {
+    let mut out = Vec::new();
+    for &m in methods {
+        for &s in sparsities {
+            for &seed in seeds {
+                let mut cfg = base.clone();
+                cfg.method = m;
+                cfg.sparsity = s;
+                cfg.seed = seed;
+                out.push(run_cell(session, &cfg)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Mean accuracy across seeds for (method, sparsity).
+pub fn mean_metric(
+    cells: &[CellResult],
+    method: &str,
+    sparsity: f64,
+    metric: impl Fn(&CellResult) -> f64,
+) -> Option<f64> {
+    let vals: Vec<f64> = cells
+        .iter()
+        .filter(|c| c.method == method && (c.sparsity - sparsity).abs() < 1e-9)
+        .map(metric)
+        .collect();
+    if vals.is_empty() {
+        None
+    } else {
+        Some(crate::util::mean(&vals))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report writing
+// ---------------------------------------------------------------------------
+
+/// Markdown report accumulated line by line, saved under results/.
+pub struct Report {
+    pub id: String,
+    pub lines: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report {
+            id: id.to_string(),
+            lines: vec![format!("# {} — {}", id, title), String::new()],
+        }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        self.lines.push(s.into());
+    }
+
+    pub fn blank(&mut self) {
+        self.lines.push(String::new());
+    }
+
+    /// Emit and echo to stdout.
+    pub fn save(&self) -> Result<PathBuf> {
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.md", self.id));
+        let text = self.lines.join("\n") + "\n";
+        std::fs::write(&path, &text)?;
+        println!("{}", text);
+        Ok(path)
+    }
+}
+
+pub fn write_history_json(result: &TrainResult, path: &Path) -> Result<()> {
+    let hist = Json::Arr(
+        result
+            .history
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("step", Json::Num(m.step as f64)),
+                    ("loss", Json::Num(m.loss)),
+                    ("acc", Json::Num(m.acc)),
+                    ("lr", Json::Num(m.lr)),
+                ])
+            })
+            .collect(),
+    );
+    let j = Json::obj(vec![
+        ("model", Json::Str(result.cfg.model.clone())),
+        ("method", Json::Str(result.cfg.method.name().to_string())),
+        ("sparsity", Json::Num(result.cfg.sparsity)),
+        ("history", hist),
+        ("eval_accuracy", Json::Num(result.final_eval.accuracy)),
+        ("eval_loss", Json::Num(result.final_eval.loss)),
+        ("ppl", Json::Num(result.final_eval.ppl)),
+    ]);
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// CLI dispatch
+// ---------------------------------------------------------------------------
+
+/// Common experiment options parsed from the CLI.
+pub struct ExpOpts {
+    pub steps: Option<usize>,
+    pub seeds: usize,
+    pub fast: bool,
+}
+
+impl ExpOpts {
+    pub fn from_args(args: &Args) -> Result<ExpOpts> {
+        Ok(ExpOpts {
+            steps: args.usize_opt("steps")?,
+            seeds: args.usize_opt("seeds")?.unwrap_or(1),
+            fast: args.flag("fast"),
+        })
+    }
+
+    pub fn seed_list(&self) -> Vec<u64> {
+        (0..self.seeds as u64).map(|s| 3407 + s).collect()
+    }
+}
+
+pub fn run_from_cli(args: &Args) -> Result<()> {
+    let Some(id) = args.positional.first() else {
+        bail!("experiment wants an id: table1|table2|table8|table12..16|fig1|fig4..fig9|all");
+    };
+    let opts = ExpOpts::from_args(args)?;
+    let session = Session::open("artifacts")?;
+    let run_one = |id: &str, session: &Rc<Session>| -> Result<()> {
+        match id {
+            "table1" => table1::run(session, &opts),
+            "table2" => table2::run(session, &opts),
+            "table8" => table8::run(session, &opts),
+            "table12" => table12::run(session, &opts),
+            "table13" => table13::run(session, &opts),
+            "table14" => table14::run(session, &opts),
+            "table15" => table15::run(session, &opts),
+            "table16" => table16::run(session, &opts),
+            "fig1" => fig1::run(session, &opts),
+            "fig4" => fig4::run(&opts),
+            "fig5" => fig5::run(session, &opts),
+            "fig6" => fig6::run(session, &opts),
+            "fig7" => fig7::run(session, &opts),
+            "fig8" => fig8::run(session, &opts),
+            "fig9" => fig9::run(session, &opts),
+            other => bail!("unknown experiment '{}'", other),
+        }
+    };
+    if id == "all" {
+        for id in [
+            "table1", "table2", "table8", "table12", "table13", "table14",
+            "table15", "table16", "fig1", "fig4", "fig5", "fig6", "fig7",
+            "fig8", "fig9",
+        ] {
+            crate::info!("=== experiment {} ===", id);
+            run_one(id, &session)?;
+        }
+        Ok(())
+    } else {
+        run_one(id, &session)
+    }
+}

@@ -1,0 +1,106 @@
+//! Table 1 — Top-1 accuracy of DynaDiag vs baselines on the ImageNet-1K
+//! stand-in (synth-img), ViT-tiny + Mixer-tiny, S ∈ {60..95}%.
+//!
+//! Reproduces the *shape* of the paper's table: DynaDiag best among
+//! structured methods, statistically tied with unstructured ones at
+//! moderate sparsity (see DESIGN.md §2 scale substitution).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::{MethodKind, RunConfig};
+use crate::experiments::{mcnemar, run_matrix, ExpOpts, Report};
+use crate::runtime::Session;
+
+pub const SPARSITIES: [f64; 5] = [0.6, 0.7, 0.8, 0.9, 0.95];
+pub const METHODS: [MethodKind; 9] = [
+    MethodKind::RigL,
+    MethodKind::Set,
+    MethodKind::Mest,
+    MethodKind::Cht,
+    MethodKind::SRigL,
+    MethodKind::PixelatedBFly,
+    MethodKind::Dsb,
+    MethodKind::DiagHeur,
+    MethodKind::DynaDiag,
+];
+
+pub fn method_names() -> Vec<&'static str> {
+    METHODS.iter().map(|m| m.name()).collect()
+}
+
+pub fn base_config(model: &str, opts: &ExpOpts) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.to_string();
+    cfg.dataset = String::new(); // infer
+    cfg.steps = opts.steps.unwrap_or(if opts.fast { 100 } else { 300 });
+    cfg.eval_batches = if opts.fast { 4 } else { 8 };
+    cfg
+}
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new(
+        "table1",
+        "Top-1 accuracy, methods × sparsity (ImageNet stand-in)",
+    );
+    let seeds = opts.seed_list();
+    // fast profile trims to the decisive high-sparsity columns + one model
+    // + the five methods Fig 1 plots (full profile keeps all nine)
+    let sparsities: Vec<f64> = if opts.fast {
+        vec![0.9, 0.95]
+    } else {
+        SPARSITIES.to_vec()
+    };
+    let methods: Vec<crate::config::MethodKind> = if opts.fast {
+        vec![
+            MethodKind::RigL,
+            MethodKind::SRigL,
+            MethodKind::PixelatedBFly,
+            MethodKind::Dsb,
+            MethodKind::DynaDiag,
+        ]
+    } else {
+        METHODS.to_vec()
+    };
+    let names: Vec<&str> = methods.iter().map(|m| m.name()).collect();
+    let models: &[&str] = if opts.fast {
+        &["vit_tiny"]
+    } else {
+        &["vit_tiny", "mixer_tiny"]
+    };
+    for &model in models {
+        let base = base_config(model, opts);
+        // dense reference
+        let mut dense_cfg = base.clone();
+        dense_cfg.method = MethodKind::Dense;
+        dense_cfg.sparsity = 0.0;
+        dense_cfg.seed = seeds[0];
+        let dense = crate::experiments::run_cell(session, &dense_cfg)?;
+
+        let cells = run_matrix(session, &base, &methods, &sparsities, &seeds)?;
+        report.line(format!("## {}", model));
+        report.line(format!(
+            "dense accuracy = {:.2} ({} steps, {} seeds)",
+            dense.accuracy * 100.0,
+            base.steps,
+            seeds.len()
+        ));
+        report.blank();
+        for l in mcnemar::accuracy_table(&cells, &names, &sparsities, true, |c| {
+            c.accuracy * 100.0
+        }) {
+            report.line(l);
+        }
+        report.blank();
+        // Table 10 companion: p-values vs RigL
+        report.line(format!("### {} — McNemar p-values vs RigL (Table 10)", model));
+        let rows = mcnemar::pvalues_vs(&cells, "RigL", &names, &sparsities);
+        for l in mcnemar::pvalue_table(&rows, &names, &sparsities) {
+            report.line(l);
+        }
+        report.blank();
+    }
+    report.save()?;
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Table 12 — CIFAR-10/100 stand-in: ViT-micro + Mixer-micro on synth-cifar,
+//! structured baselines vs DynaDiag (plus RigL ceiling), with the Table 9
+//! McNemar companion.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::{MethodKind, RunConfig};
+use crate::experiments::{mcnemar, run_matrix, ExpOpts, Report};
+use crate::runtime::Session;
+
+pub const SPARSITIES: [f64; 5] = [0.6, 0.7, 0.8, 0.9, 0.95];
+pub const METHODS: [MethodKind; 6] = [
+    MethodKind::RigL,
+    MethodKind::SRigL,
+    MethodKind::PixelatedBFly,
+    MethodKind::Dsb,
+    MethodKind::DiagHeur,
+    MethodKind::DynaDiag,
+];
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new("table12", "CIFAR stand-in accuracy (micro models)");
+    let seeds = opts.seed_list();
+    let names: Vec<&str> = METHODS.iter().map(|m| m.name()).collect();
+    for model in ["vit_micro", "mixer_micro"] {
+        let mut base = RunConfig::default();
+        base.model = model.to_string();
+        base.dataset = "synth-cifar".to_string();
+        base.steps = opts.steps.unwrap_or(if opts.fast { 100 } else { 250 });
+        base.eval_batches = if opts.fast { 4 } else { 8 };
+
+        let mut dense_cfg = base.clone();
+        dense_cfg.method = MethodKind::Dense;
+        dense_cfg.sparsity = 0.0;
+        dense_cfg.seed = seeds[0];
+        let dense = crate::experiments::run_cell(session, &dense_cfg)?;
+
+        let cells = run_matrix(session, &base, &METHODS, &SPARSITIES, &seeds)?;
+        report.line(format!("## {}", model));
+        report.line(format!("dense accuracy = {:.2}", dense.accuracy * 100.0));
+        report.blank();
+        for l in mcnemar::accuracy_table(&cells, &names, &SPARSITIES, true, |c| {
+            c.accuracy * 100.0
+        }) {
+            report.line(l);
+        }
+        report.blank();
+        report.line(format!("### {} — McNemar p-values vs RigL (Table 9)", model));
+        let rows = mcnemar::pvalues_vs(&cells, "RigL", &names, &SPARSITIES);
+        for l in mcnemar::pvalue_table(&rows, &names, &SPARSITIES) {
+            report.line(l);
+        }
+        report.blank();
+    }
+    report.save()?;
+    Ok(())
+}

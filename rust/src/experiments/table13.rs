@@ -1,0 +1,54 @@
+//! Table 13 — Wanda one-shot pruning vs sparse-to-sparse training on the
+//! GPT-mini LM task. Wanda prunes a *densely trained* model (higher
+//! training cost) — expected to beat DST methods on PPL, which is the
+//! paper's point about the compute/quality tradeoff.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::MethodKind;
+use crate::experiments::{run_cell, table2, ExpOpts, Report};
+use crate::runtime::Session;
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new("table13", "Wanda pruning vs DST (GPT-mini PPL)");
+    let base = table2::base_config(opts);
+    let seeds = [3407u64];
+    let sparsities: Vec<f64> = if opts.fast {
+        vec![0.8, 0.9]
+    } else {
+        table2::SPARSITIES.to_vec()
+    };
+    let header: Vec<String> = std::iter::once("method".to_string())
+        .chain(sparsities.iter().map(|s| format!("{:.0}%", s * 100.0)))
+        .collect();
+    report.line(format!("| {} |", header.join(" | ")));
+    report.line(format!("|{}|", vec!["---"; header.len()].join("|")));
+    for method in [
+        MethodKind::RigL,
+        MethodKind::SRigL,
+        MethodKind::PixelatedBFly,
+        MethodKind::Wanda,
+        MethodKind::DynaDiag,
+    ] {
+        let mut cols = vec![method.name().to_string()];
+        for &s in &sparsities {
+            let mut cfg = base.clone();
+            cfg.method = method;
+            cfg.sparsity = s;
+            cfg.seed = seeds[0];
+            let cell = run_cell(session, &cfg)?;
+            cols.push(format!("{:.2}", cell.ppl));
+        }
+        report.line(format!("| {} |", cols.join(" | ")));
+    }
+    report.blank();
+    report.line(
+        "Wanda = dense training + one-shot |w|·‖x‖ prune (unit-variance LN \
+         inputs ⇒ magnitude criterion; DESIGN.md §6). DST methods train sparse \
+         end-to-end at a fraction of the training FLOPs.",
+    );
+    report.save()?;
+    Ok(())
+}

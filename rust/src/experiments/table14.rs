@@ -1,0 +1,36 @@
+//! Table 14 — sparsity *distribution* ablation: Uniform vs ERK vs
+//! ComputeFraction per-layer budget allocation for DynaDiag.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::MethodKind;
+use crate::experiments::{run_cell, table1, ExpOpts, Report};
+use crate::runtime::Session;
+use crate::sparsity::Distribution;
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new("table14", "Sparsity distribution ablation (DynaDiag, ViT-tiny)");
+    let sparsities = [0.6, 0.7, 0.8, 0.9, 0.95];
+    report.line("| distribution | 60% | 70% | 80% | 90% | 95% |");
+    report.line("|---|---|---|---|---|---|");
+    for (name, dist) in [
+        ("Uniform", Distribution::Uniform),
+        ("ERK", Distribution::Erk),
+        ("ComputeFraction (PBFly)", Distribution::ComputeFraction),
+    ] {
+        let mut cols = vec![name.to_string()];
+        for &s in &sparsities {
+            let mut cfg = table1::base_config("vit_micro", opts);
+            cfg.method = MethodKind::DynaDiag;
+            cfg.distribution = dist;
+            cfg.sparsity = s;
+            let cell = run_cell(session, &cfg)?;
+            cols.push(format!("{:.2}", cell.accuracy * 100.0));
+        }
+        report.line(format!("| {} |", cols.join(" | ")));
+    }
+    report.save()?;
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Table 15 — sparsity *schedule* ablation: how the enforced sparsity ramps
+//! (Constant / Linear / Cosine) affects DynaDiag accuracy.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::MethodKind;
+use crate::experiments::{run_cell, table1, ExpOpts, Report};
+use crate::runtime::Session;
+use crate::sparsity::Curve;
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new("table15", "Sparsity schedule ablation (DynaDiag, ViT-tiny)");
+    let sparsities = [0.6, 0.7, 0.8, 0.9, 0.95];
+    report.line("| schedule | 60% | 70% | 80% | 90% | 95% |");
+    report.line("|---|---|---|---|---|---|");
+    for curve in [Curve::Constant, Curve::Linear, Curve::Cosine] {
+        let mut cols = vec![format!("{:?}", curve)];
+        for &s in &sparsities {
+            let mut cfg = table1::base_config("vit_micro", opts);
+            cfg.method = MethodKind::DynaDiag;
+            cfg.sparsity_curve = curve;
+            // constant schedule also means no temperature exploration
+            if curve == Curve::Constant {
+                cfg.temp_curve = Curve::Constant;
+            }
+            cfg.sparsity = s;
+            let cell = run_cell(session, &cfg)?;
+            cols.push(format!("{:.2}", cell.accuracy * 100.0));
+        }
+        report.line(format!("| {} |", cols.join(" | ")));
+    }
+    report.line("");
+    report.line("Expected shape (paper): Cosine ≥ Linear >> Constant.");
+    report.save()?;
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Table 2 — WikiText-103 perplexity stand-in: GPT-mini on the synthetic
+//! corpus, methods × S ∈ {40, 50, 60, 80, 90}% (lower PPL better).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::{MethodKind, RunConfig};
+use crate::experiments::{mcnemar, run_matrix, ExpOpts, Report};
+use crate::runtime::Session;
+
+pub const SPARSITIES: [f64; 5] = [0.4, 0.5, 0.6, 0.8, 0.9];
+pub const METHODS: [MethodKind; 4] = [
+    MethodKind::RigL,
+    MethodKind::SRigL,
+    MethodKind::PixelatedBFly,
+    MethodKind::DynaDiag,
+];
+
+pub fn base_config(opts: &ExpOpts) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "gpt_mini".to_string();
+    cfg.dataset = "synth-wiki".to_string();
+    cfg.steps = opts.steps.unwrap_or(if opts.fast { 100 } else { 400 });
+    cfg.lr = 1e-3;
+    cfg.weight_decay = 0.1;
+    cfg.eval_batches = if opts.fast { 4 } else { 8 };
+    cfg
+}
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new("table2", "GPT-mini perplexity (WikiText-103 stand-in)");
+    let seeds: Vec<u64> = opts.seed_list().into_iter().take(2).collect();
+    let base = base_config(opts);
+
+    let mut dense_cfg = base.clone();
+    dense_cfg.method = MethodKind::Dense;
+    dense_cfg.sparsity = 0.0;
+    dense_cfg.seed = seeds[0];
+    let dense = crate::experiments::run_cell(session, &dense_cfg)?;
+
+    let sparsities: Vec<f64> = if opts.fast {
+        vec![0.8, 0.9]
+    } else {
+        SPARSITIES.to_vec()
+    };
+    let cells = run_matrix(session, &base, &METHODS, &sparsities, &seeds)?;
+    report.line(format!(
+        "dense ppl = {:.2} ({} steps, {} seeds; lower is better)",
+        dense.ppl,
+        base.steps,
+        seeds.len()
+    ));
+    report.blank();
+    let names: Vec<&str> = METHODS.iter().map(|m| m.name()).collect();
+    for l in mcnemar::accuracy_table(&cells, &names, &sparsities, false, |c| c.ppl) {
+        report.line(l);
+    }
+    report.blank();
+    report.line("### McNemar p-values vs RigL (Table 11)");
+    let rows = mcnemar::pvalues_vs(&cells, "RigL", &names, &sparsities);
+    for l in mcnemar::pvalue_table(&rows, &names, &sparsities) {
+        report.line(l);
+    }
+    report.save()?;
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Table 8 — DynaDiag with vs without the diagonal→BCSR conversion:
+//! numerical equivalence of the two execution paths + the training-time
+//! saving (A100 projection + measured Rust SpMM cross-check).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::bcsr::convert::{diag_to_bcsr, diag_to_bcsr_noreorder};
+use crate::config::{MethodKind, RunConfig};
+use crate::experiments::{ExpOpts, Report};
+use crate::perfmodel::vit::{train_step_time, Method, VIT_BASE};
+use crate::runtime::Session;
+use crate::tensor::Tensor;
+use crate::train::Trainer;
+use crate::util::rng::Rng;
+use crate::util::timer::bench;
+
+pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
+    let mut report = Report::new(
+        "table8",
+        "DynaDiag with/without BCSR conversion (equivalence + time)",
+    );
+    // train a DynaDiag model at 90% to get real finalized diagonals
+    let mut cfg = RunConfig::default();
+    cfg.model = if opts.fast { "vit_micro".into() } else { "vit_tiny".into() };
+    cfg.method = MethodKind::DynaDiag;
+    cfg.sparsity = 0.9;
+    cfg.steps = opts.steps.unwrap_or(if opts.fast { 100 } else { 300 });
+    let mut trainer = Trainer::with_session(cfg.clone(), session.clone())?;
+    let result = trainer.train()?;
+
+    // numerical equivalence per layer: direct diagonal product vs BCSR
+    let mut rng = Rng::new(7);
+    let mut max_diff = 0.0f32;
+    let mut total_nnzb = 0usize;
+    let mut total_density = 0.0f64;
+    for (_, d) in &result.finalized {
+        if d.n_out % 8 != 0 || d.n_in % 8 != 0 {
+            continue;
+        }
+        let conv = diag_to_bcsr(d, 8, 0.4)?;
+        let x = Tensor::randn(&[4, d.n_in], 1.0, &mut rng);
+        let direct = d.matmul_t(&x)?;
+        let via_bcsr = conv.matmul_t(&x)?;
+        max_diff = max_diff.max(direct.max_abs_diff(&via_bcsr));
+        total_nnzb += conv.bcsr.nnzb();
+        total_density += conv.bcsr.block_density();
+    }
+    let n_layers = result.finalized.len().max(1);
+    report.line(format!(
+        "| path | eval accuracy | max |y_direct − y_bcsr| |"
+    ));
+    report.line("|---|---|---|");
+    report.line(format!(
+        "| direct diagonal | {:.4} | — |",
+        result.final_eval.accuracy
+    ));
+    report.line(format!(
+        "| via BCSR (bs=8) | {:.4} | {:.2e} |",
+        result.final_eval.accuracy, max_diff
+    ));
+    report.blank();
+    report.line(format!(
+        "mean block density {:.3}, total nnzb {} across {} layers",
+        total_density / n_layers as f64,
+        total_nnzb,
+        n_layers
+    ));
+    assert!(max_diff < 1e-3, "BCSR path diverged from direct path");
+
+    // reorder ablation: Apdx-D similarity clustering vs naive blocking
+    let d0 = &result.finalized[0].1;
+    if d0.n_out % 8 == 0 && d0.n_in % 8 == 0 {
+        let with = diag_to_bcsr(d0, 8, 0.4)?;
+        let without = diag_to_bcsr_noreorder(d0, 8)?;
+        report.line(format!(
+            "reorder ablation (layer 0): nnzb {} (reordered) vs {} (naive), density {:.3} vs {:.3}",
+            with.bcsr.nnzb(),
+            without.bcsr.nnzb(),
+            with.bcsr.block_density(),
+            without.bcsr.block_density()
+        ));
+    }
+    report.blank();
+
+    // training time: paper 18.07h -> 11.42h; we report the A100 projection
+    // ratio + a measured Rust SpMM microcheck on the same weights
+    let t_direct = {
+        // "without conversion": diagonal gathers via CSR-style execution
+        train_step_time(Method::RigL, &VIT_BASE, 0.9)
+    };
+    let t_bcsr = train_step_time(Method::DynaDiag, &VIT_BASE, 0.9);
+    report.line(format!(
+        "A100-projected train step (ViT-B/16 @90%): without BCSR {:.2} ms, with BCSR {:.2} ms — {:.2}x (paper: 18.07h → 11.42h = 1.58x)",
+        t_direct * 1e3,
+        t_bcsr * 1e3,
+        t_direct / t_bcsr
+    ));
+
+    let d = &result.finalized[0].1;
+    let x = Tensor::randn(&[32, d.n_in], 1.0, &mut rng);
+    let conv = diag_to_bcsr(d, 8, 0.4)?;
+    let csr = crate::bcsr::Csr::from_dense(&d.to_dense());
+    let m_direct = bench(2, 10, || d.matmul_t(&x).unwrap());
+    let m_bcsr = bench(2, 10, || conv.bcsr.matmul_t(&x).unwrap());
+    let m_csr = bench(2, 10, || csr.matmul_t(&x).unwrap());
+    report.line(format!(
+        "measured Rust SpMM (layer 0, b=32): direct {:.1} us, bcsr {:.1} us, csr {:.1} us",
+        m_direct.mean_us(),
+        m_bcsr.mean_us(),
+        m_csr.mean_us()
+    ));
+    report.save()?;
+    Ok(())
+}

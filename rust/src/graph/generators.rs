@@ -1,0 +1,140 @@
+//! Bipartite graph models from Apdx I: BSW (bipartite small-world) and BSF
+//! (bipartite scale-free), plus the Watts-Strogatz ring and Barabási-Albert
+//! substrates they derive from.
+
+use super::Bipartite;
+use crate::util::rng::Rng;
+
+/// Bipartite Small-World (Zhang et al. 2024): ring lattice over alternating
+/// layer labels, each node wired to its `k` nearest opposite-layer
+/// neighbours, then a fraction `beta` of edges rewired uniformly.
+pub fn bsw(n_left: usize, n_right: usize, k: usize, beta: f64, rng: &mut Rng) -> Bipartite {
+    // ring positions: interleave left and right nodes by fractional position
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for u in 0..n_left {
+        // nearest right-neighbours by wrapped position
+        let centre = (u as f64 / n_left as f64) * n_right as f64;
+        for d in 0..k {
+            let off = (d as isize + 1) / 2 * if d % 2 == 0 { 1 } else { -1 };
+            let v = ((centre as isize + off).rem_euclid(n_right as isize)) as usize;
+            edges.push((u, v));
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    // rewire
+    let m = edges.len();
+    for i in 0..m {
+        if rng.bool(beta) {
+            let u = edges[i].0;
+            let mut v = rng.below(n_right);
+            let mut guard = 0;
+            while edges.contains(&(u, v)) && guard < 16 {
+                v = rng.below(n_right);
+                guard += 1;
+            }
+            edges[i] = (u, v);
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    Bipartite::from_edges(n_left, n_right, &edges)
+}
+
+/// Bipartite Scale-Free (Zhang et al. 2024): sample a Barabási-Albert graph
+/// over n_left+n_right nodes, then re-attach every same-side edge to a
+/// uniformly random opposite-side node, preserving each node's degree.
+pub fn bsf(n_left: usize, n_right: usize, m_attach: usize, rng: &mut Rng) -> Bipartite {
+    let n = n_left + n_right;
+    let ba = barabasi_albert(n, m_attach, rng);
+    let side = |x: usize| x < n_left; // true = left
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for u in 0..n {
+        for &v in &ba[u] {
+            if u < v {
+                if side(u) != side(v) {
+                    let (l, r) = if side(u) { (u, v - n_left) } else { (v, u - n_left) };
+                    edges.push((l, r));
+                } else {
+                    // re-attach to the opposite side uniformly (degree of u kept)
+                    if side(u) {
+                        edges.push((u, rng.below(n_right)));
+                    } else {
+                        edges.push((rng.below(n_left), u - n_left));
+                    }
+                }
+            }
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    Bipartite::from_edges(n_left, n_right, &edges)
+}
+
+/// Barabási-Albert preferential attachment, adjacency lists.
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(n > m && m >= 1);
+    let mut adj = vec![Vec::new(); n];
+    let mut targets: Vec<usize> = (0..m).collect();
+    let mut repeated: Vec<usize> = Vec::new(); // node appears deg times
+    for u in m..n {
+        for &v in &targets {
+            adj[u].push(v);
+            adj[v].push(u);
+            repeated.push(u);
+            repeated.push(v);
+        }
+        // next targets: m distinct draws ∝ degree
+        let mut set = std::collections::HashSet::new();
+        while set.len() < m {
+            set.insert(repeated[rng.below(repeated.len())]);
+        }
+        targets = set.into_iter().collect();
+    }
+    adj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsw_no_rewiring_is_regularish() {
+        let mut rng = Rng::new(1);
+        let g = bsw(32, 32, 4, 0.0, &mut rng);
+        // every left node has ~k distinct neighbours
+        for u in 0..32 {
+            assert!(g.adj[u].len() >= 3, "deg {}", g.adj[u].len());
+        }
+    }
+
+    #[test]
+    fn bsw_rewiring_shortens_paths() {
+        let mut rng = Rng::new(2);
+        let lattice = bsw(64, 64, 4, 0.0, &mut rng);
+        let rewired = bsw(64, 64, 4, 0.3, &mut rng);
+        let l0 = lattice.mean_path_length(32, &mut rng).unwrap();
+        let l1 = rewired.mean_path_length(32, &mut rng).unwrap();
+        assert!(l1 < l0, "lattice L {} rewired L {}", l0, l1);
+    }
+
+    #[test]
+    fn ba_degree_grows_superlinear_for_hubs() {
+        let mut rng = Rng::new(3);
+        let adj = barabasi_albert(200, 2, &mut rng);
+        let mut degs: Vec<usize> = adj.iter().map(|a| a.len()).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        // hub much larger than median — scale-free signature
+        assert!(degs[0] >= 3 * degs[100], "degs {:?} ...", &degs[..5]);
+    }
+
+    #[test]
+    fn bsf_is_bipartite_with_hubs() {
+        let mut rng = Rng::new(4);
+        let g = bsf(64, 64, 2, &mut rng);
+        assert!(g.edge_count() > 100);
+        let mut degs: Vec<usize> = (0..g.n()).map(|u| g.adj[u].len()).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(degs[0] > 3 * degs[64].max(1));
+    }
+}

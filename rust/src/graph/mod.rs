@@ -1,0 +1,271 @@
+//! Bipartite graph analysis of sparse layers (Apdx I, Table 16).
+//!
+//! A mask over a [n_out, n_in] layer is a bipartite graph: row-neurons vs
+//! column-neurons, edges at active weights.  Small-world-ness is measured as
+//!
+//! ```text
+//!     sigma = (C / C_r) / (L / L_r)
+//! ```
+//!
+//! with C the bipartite *square* clustering coefficient (Lind et al. 2005 —
+//! triangles don't exist in bipartite graphs, 4-cycles play their role),
+//! L the BFS mean shortest path, and (C_r, L_r) the same statistics on a
+//! degree-matched random bipartite graph.  σ > 1 ⇒ small world (Table 16).
+//!
+//! Also provides the BSW / BSF generators of Zhang et al. used in Apdx I.
+
+pub mod generators;
+
+use crate::sparsity::mask::Mask;
+use crate::util::rng::Rng;
+
+/// Bipartite graph in adjacency-list form; nodes 0..n_left are rows,
+/// n_left..n_left+n_right are columns.
+#[derive(Clone, Debug)]
+pub struct Bipartite {
+    pub n_left: usize,
+    pub n_right: usize,
+    pub adj: Vec<Vec<usize>>,
+}
+
+impl Bipartite {
+    pub fn from_mask(mask: &Mask) -> Bipartite {
+        let (nl, nr) = (mask.rows, mask.cols);
+        let mut adj = vec![Vec::new(); nl + nr];
+        for i in 0..nl {
+            for j in 0..nr {
+                if mask.get(i, j) {
+                    adj[i].push(nl + j);
+                    adj[nl + j].push(i);
+                }
+            }
+        }
+        Bipartite { n_left: nl, n_right: nr, adj }
+    }
+
+    pub fn from_edges(n_left: usize, n_right: usize, edges: &[(usize, usize)]) -> Bipartite {
+        let mut adj = vec![Vec::new(); n_left + n_right];
+        for &(u, v) in edges {
+            adj[u].push(n_left + v);
+            adj[n_left + v].push(u);
+        }
+        Bipartite { n_left, n_right, adj }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n_left + self.n_right
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// Square clustering coefficient of node v (fraction of potential
+    /// 4-cycles through v that exist), averaged over sampled nodes.
+    pub fn square_clustering(&self, samples: usize, rng: &mut Rng) -> f64 {
+        let nodes: Vec<usize> = if self.n() <= samples {
+            (0..self.n()).collect()
+        } else {
+            rng.choose_k(self.n(), samples)
+        };
+        let vals: Vec<f64> =
+            nodes.iter().filter_map(|&v| self.square_clustering_node(v)).collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    fn square_clustering_node(&self, v: usize) -> Option<f64> {
+        let nbrs = &self.adj[v];
+        if nbrs.len() < 2 {
+            return None;
+        }
+        let mut total = 0.0f64;
+        let mut squares = 0.0f64;
+        for a in 0..nbrs.len() {
+            for b in a + 1..nbrs.len() {
+                let (u, w) = (nbrs[a], nbrs[b]);
+                // common neighbours of u and w other than v
+                let set: std::collections::HashSet<usize> =
+                    self.adj[u].iter().cloned().collect();
+                let mut q = 0usize;
+                for &x in &self.adj[w] {
+                    if x != v && set.contains(&x) {
+                        q += 1;
+                    }
+                }
+                squares += q as f64;
+                // potential squares (Lind et al. normalization)
+                let ku = self.adj[u].len() as f64 - 1.0 - q as f64;
+                let kw = self.adj[w].len() as f64 - 1.0 - q as f64;
+                total += q as f64 + ku + kw + ku * kw / 1e9; // guard term tiny
+            }
+        }
+        if total <= 0.0 {
+            None
+        } else {
+            Some(squares / total)
+        }
+    }
+
+    /// Mean shortest path length over sampled source nodes (BFS); ignores
+    /// unreachable pairs. Returns None if the graph is completely
+    /// disconnected from the samples.
+    pub fn mean_path_length(&self, samples: usize, rng: &mut Rng) -> Option<f64> {
+        let sources: Vec<usize> = if self.n() <= samples {
+            (0..self.n()).collect()
+        } else {
+            rng.choose_k(self.n(), samples)
+        };
+        let mut total = 0u64;
+        let mut count = 0u64;
+        let mut dist = vec![u32::MAX; self.n()];
+        let mut queue = std::collections::VecDeque::new();
+        for &s in &sources {
+            dist.iter_mut().for_each(|d| *d = u32::MAX);
+            dist[s] = 0;
+            queue.clear();
+            queue.push_back(s);
+            while let Some(u) = queue.pop_front() {
+                for &w in &self.adj[u] {
+                    if dist[w] == u32::MAX {
+                        dist[w] = dist[u] + 1;
+                        queue.push_back(w);
+                    }
+                }
+            }
+            for (v, &d) in dist.iter().enumerate() {
+                if v != s && d != u32::MAX {
+                    total += d as u64;
+                    count += 1;
+                }
+            }
+        }
+        if count == 0 {
+            None
+        } else {
+            Some(total as f64 / count as f64)
+        }
+    }
+
+    /// Degree-matched random bipartite rewiring (configuration-model style):
+    /// keeps left/right degree sequences, randomizes attachment.
+    pub fn random_like(&self, rng: &mut Rng) -> Bipartite {
+        let mut left_stubs = Vec::new();
+        let mut right_stubs = Vec::new();
+        for u in 0..self.n_left {
+            for _ in 0..self.adj[u].len() {
+                left_stubs.push(u);
+            }
+        }
+        for v in self.n_left..self.n() {
+            for _ in 0..self.adj[v].len() {
+                right_stubs.push(v - self.n_left);
+            }
+        }
+        rng.shuffle(&mut right_stubs);
+        let edges: Vec<(usize, usize)> = left_stubs
+            .into_iter()
+            .zip(right_stubs)
+            .collect();
+        Bipartite::from_edges(self.n_left, self.n_right, &edges)
+    }
+}
+
+/// Small-world report for one layer (Table 16 row).
+#[derive(Clone, Debug)]
+pub struct SmallWorld {
+    pub c: f64,
+    pub l: f64,
+    pub c_rand: f64,
+    pub l_rand: f64,
+    pub sigma: f64,
+}
+
+/// σ of a mask's bipartite graph vs a degree-matched random reference.
+pub fn small_world_sigma(mask: &Mask, rng: &mut Rng, samples: usize) -> Option<SmallWorld> {
+    let g = Bipartite::from_mask(mask);
+    let c = g.square_clustering(samples, rng);
+    let l = g.mean_path_length(samples.min(64), rng)?;
+    // average a few random references for stability
+    let mut cr = 0.0;
+    let mut lr = 0.0;
+    let reps = 3;
+    for _ in 0..reps {
+        let r = g.random_like(rng);
+        cr += r.square_clustering(samples, rng);
+        lr += r.mean_path_length(samples.min(64), rng)?;
+    }
+    cr /= reps as f64;
+    lr /= reps as f64;
+    if cr <= 0.0 || lr <= 0.0 || l <= 0.0 {
+        return None;
+    }
+    Some(SmallWorld { c, l, c_rand: cr, l_rand: lr, sigma: (c / cr) / (l / lr) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::diagonal::diag_mask;
+    use crate::sparsity::patterns::random_mask;
+
+    #[test]
+    fn bipartite_from_mask_edges() {
+        let mut m = Mask::zeros(3, 4);
+        m.set(0, 1, true);
+        m.set(2, 3, true);
+        let g = Bipartite::from_mask(&m);
+        assert_eq!(g.edge_count(), 2);
+        assert_eq!(g.adj[0], vec![3 + 1]);
+    }
+
+    #[test]
+    fn path_length_of_complete_bipartite() {
+        let m = Mask::ones(4, 4);
+        let g = Bipartite::from_mask(&m);
+        let mut rng = Rng::new(1);
+        let l = g.mean_path_length(8, &mut rng).unwrap();
+        // opposite side distance 1, same side distance 2 -> L in (1, 2)
+        assert!(l > 1.0 && l < 2.0, "L = {}", l);
+    }
+
+    #[test]
+    fn square_clustering_complete_is_high() {
+        let m = Mask::ones(4, 4);
+        let g = Bipartite::from_mask(&m);
+        let mut rng = Rng::new(2);
+        let c = g.square_clustering(8, &mut rng);
+        assert!(c > 0.5, "C = {}", c);
+    }
+
+    #[test]
+    fn random_like_preserves_degrees() {
+        let mut rng = Rng::new(3);
+        let m = random_mask(16, 16, 0.8, &mut rng);
+        let g = Bipartite::from_mask(&m);
+        let r = g.random_like(&mut rng);
+        let deg = |g: &Bipartite| -> Vec<usize> {
+            (0..g.n_left).map(|u| g.adj[u].len()).collect()
+        };
+        assert_eq!(deg(&g), deg(&r));
+        assert_eq!(g.edge_count(), r.edge_count());
+    }
+
+    /// Table 16's qualitative claim: diagonal masks with a few clustered +
+    /// a few scattered offsets behave like Watts-Strogatz graphs — more
+    /// clustered than random at comparable path length.
+    #[test]
+    fn diagonal_mask_is_smallworldish() {
+        let n = 48;
+        // banded core (clustering) + two long-range offsets (shortcuts)
+        let offsets = vec![0, 1, 2, 3, 17, 31];
+        let m = diag_mask(n, n, &offsets);
+        let mut rng = Rng::new(4);
+        let sw = small_world_sigma(&m, &mut rng, 48).unwrap();
+        assert!(sw.sigma > 0.8, "sigma = {:?}", sw);
+        assert!(sw.c > 0.0 && sw.l > 1.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! # DynaDiag — Dynamic Sparse Training of Diagonally Sparse Networks
+//!
+//! Rust + JAX + Pallas reproduction of Tyagi et al., ICML 2025 (DESIGN.md).
+//!
+//! Three layers:
+//! * **L3 (this crate)** — the training coordinator: DST methods, schedules,
+//!   BCSR conversion, experiment harness. Owns the step loop; Python never
+//!   runs at training time.
+//! * **L2** — JAX models AOT-lowered to `artifacts/*.hlo.txt`
+//!   (`python/compile/`), executed through [`runtime`].
+//! * **L1** — Pallas kernels for the diagonal-sparse products, lowered into
+//!   the same artifacts.
+
+pub mod bcsr;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod dst;
+pub mod experiments;
+pub mod graph;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sparsity;
+pub mod stats;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,129 @@
+//! dynadiag — CLI entrypoint for the DynaDiag reproduction.
+//!
+//! Commands:
+//!   train       one training run (any method/model/sparsity)
+//!   experiment  regenerate a paper table/figure (table1, fig4, ... or all)
+//!   analyze     small-world / BCSR analysis of a trained topology
+//!   perfmodel   print A100 speedup projections (Fig 1 / Fig 4 axes)
+//!   info        list artifacts and their IO contracts
+//!
+//! Examples:
+//!   dynadiag train --model vit_micro --method dynadiag --sparsity 0.9
+//!   dynadiag experiment table15 --steps 200
+//!   dynadiag perfmodel --sparsity 0.9
+
+use anyhow::{bail, Result};
+
+use dynadiag::cli::Args;
+use dynadiag::config::RunConfig;
+use dynadiag::experiments;
+use dynadiag::perfmodel::vit::{
+    inference_speedup, train_speedup, ALL_METHODS, VIT_BASE,
+};
+use dynadiag::runtime::{find_artifacts_dir, Manifest};
+use dynadiag::train::Trainer;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if args.flag("verbose") {
+        dynadiag::util::set_log_level(3);
+    }
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "experiment" => experiments::run_from_cli(&args),
+        "analyze" => cmd_analyze(&args),
+        "perfmodel" => cmd_perfmodel(&args),
+        "info" => cmd_info(&args),
+        "" | "help" | "--help" => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+        other => bail!("unknown command '{}'\n{}", other, USAGE),
+    }
+}
+
+const USAGE: &str = "\
+dynadiag — Dynamic Sparse Training of Diagonally Sparse Networks (ICML'25 repro)
+
+USAGE: dynadiag <command> [options]
+
+COMMANDS
+  train        --model M --method D --sparsity S [--steps N] [--seed K] ...
+  experiment   <table1|table2|table8|table12|...|fig1|fig4..fig9|all> [--steps N] [--seeds K]
+  analyze      --model M [--sparsity S]      small-world & BCSR analysis
+  perfmodel    [--sparsity S]                A100 speedup projections
+  info                                       list compiled artifacts
+";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_overrides(&args.config_overrides(&["out", "verbose"]))?;
+    eprintln!(
+        "training {} with {} at S={:.2} for {} steps",
+        cfg.model,
+        cfg.method.name(),
+        cfg.sparsity,
+        cfg.steps
+    );
+    let mut trainer = Trainer::new(cfg)?;
+    let result = trainer.train()?;
+    let last = result.history.last().unwrap();
+    println!(
+        "final: train_loss={:.4} eval_loss={:.4} eval_acc={:.4} ppl={:.2} ({:.1}s, {:.2} steps/s)",
+        last.loss,
+        result.final_eval.loss,
+        result.final_eval.accuracy,
+        result.final_eval.ppl,
+        result.train_seconds,
+        result.history.len() as f64 / result.train_seconds
+    );
+    if let Some(out) = args.opt("out") {
+        experiments::write_history_json(&result, std::path::Path::new(out))?;
+        eprintln!("wrote {}", out);
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_overrides(&args.config_overrides(&["verbose"]))?;
+    experiments::table16::run_with_config(&cfg)
+}
+
+fn cmd_perfmodel(args: &Args) -> Result<()> {
+    let sparsity: f64 = args.opt("sparsity").unwrap_or("0.9").parse()?;
+    println!("A100 projections, ViT-B/16, S={:.0}%:", sparsity * 100.0);
+    println!("{:<16} {:>10} {:>10}", "method", "infer x", "train x");
+    for m in ALL_METHODS {
+        println!(
+            "{:<16} {:>10.2} {:>10.2}",
+            m.name(),
+            inference_speedup(m, &VIT_BASE, sparsity),
+            train_speedup(m, &VIT_BASE, sparsity)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = find_artifacts_dir(args.opt("artifacts_dir").unwrap_or("artifacts"))?;
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts in {} ({}):", dir.display(), manifest.artifacts.len());
+    for (name, a) in &manifest.artifacts {
+        println!(
+            "  {:<36} {:>3} inputs {:>3} outputs",
+            name,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}

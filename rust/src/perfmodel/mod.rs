@@ -1,0 +1,265 @@
+//! Analytical A100 kernel-time model (DESIGN.md §2 substitution).
+//!
+//! The paper measures wall-clock on an NVIDIA A100 with: cuBLAS dense GEMM,
+//! cuSPARSE CSR SpMM (RigL), the SmaT tensor-core BCSR kernel (DynaDiag,
+//! Apdx D), the PBFly Triton block kernel (PixelatedBFly/DSB), and 2:4
+//! sparse tensor cores (SRigL inference).  We model each kernel as
+//!
+//! ```text
+//!     t = max(flops / (peak * eff), bytes / BW) + launch
+//! ```
+//!
+//! with per-kernel-class efficiency factors taken from published
+//! measurements (cuSPARSE unstructured SpMM sustains a few percent of tensor
+//! core peak; SmaT-style blocked kernels sustain ~40–60% scaled by block
+//! density; 2:4 sparse GEMM ≈ 1.6–1.8× dense).  Absolute times are
+//! estimates; the *ratios* (Figs 1, 4, 7, Tbl 8) are what we reproduce —
+//! they're governed by arithmetic intensity and format overheads, which the
+//! model captures.  `benches/fig7_diag_speed.rs` cross-checks the ordering
+//! against measured Rust SpMM on the same shapes.
+
+pub mod vit;
+
+/// Device constants (Apdx C lists the A100 80GB).
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    /// fp16 tensor-core peak, FLOP/s
+    pub peak_tc: f64,
+    /// fp32 SIMT peak, FLOP/s
+    pub peak_fp32: f64,
+    /// HBM bandwidth, B/s
+    pub hbm_bw: f64,
+    /// per-kernel launch + driver overhead, s
+    pub launch: f64,
+}
+
+pub const A100: Device = Device {
+    peak_tc: 312e12,
+    peak_fp32: 19.5e12,
+    hbm_bw: 2.0e12,
+    launch: 4.5e-6,
+};
+
+/// Efficiency factors per kernel class (fractions of the relevant peak).
+pub mod eff {
+    /// cuBLAS fp16 GEMM at transformer sizes
+    pub const DENSE: f64 = 0.62;
+    /// cuSPARSE CSR SpMM on unstructured patterns, fraction of *tc* peak
+    /// (published numbers land at 1–5%; gather-bound)
+    pub const CSR: f64 = 0.035;
+    /// SmaT-style BCSR tensor-core kernel on fully dense blocks (the SmaT
+    /// paper reports ~2× over Triton block kernels at these shapes)
+    pub const BCSR: f64 = 0.48;
+    /// PBFly Triton block kernel (less tuned than SmaT's PTX mma path)
+    pub const TRITON_BLOCK: f64 = 0.22;
+    /// 2:4 sparse tensor cores: same pipe efficiency as dense, half flops
+    /// (yields the ~1.6–1.8× ceiling NVIDIA reports)
+    pub const NM24: f64 = 0.62;
+}
+
+impl Device {
+    fn roofline(&self, flops: f64, bytes: f64, eff_: f64) -> f64 {
+        let t_comp = flops / (self.peak_tc * eff_);
+        let t_mem = bytes / self.hbm_bw;
+        t_comp.max(t_mem) + self.launch
+    }
+
+    /// Dense fp16 GEMM  C[m,n] = A[m,k] · B[k,n].
+    pub fn gemm(&self, m: usize, n: usize, k: usize) -> f64 {
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let bytes = 2.0 * (m * k + k * n + m * n) as f64;
+        self.roofline(flops, bytes, eff::DENSE)
+    }
+
+    /// cuSPARSE CSR SpMM: y[b, rows] = x[b, cols] · Wᵀ, nnz nonzeros.
+    pub fn csr_spmm(&self, b: usize, rows: usize, cols: usize, nnz: usize) -> f64 {
+        let flops = 2.0 * b as f64 * nnz as f64;
+        // vals+col idx (4+4 B), row ptr, x and y panels; gathers defeat
+        // coalescing so charge x traffic once per nnz element touched.
+        let bytes = 8.0 * nnz as f64
+            + 4.0 * rows as f64
+            + 2.0 * (b * cols + b * rows) as f64
+            + 2.0 * (b.min(8) * nnz) as f64;
+        self.roofline(flops, bytes, eff::CSR)
+    }
+
+    /// Blocked SpMM over nnzb blocks of bs×bs with given in-block density.
+    /// `cols_touched`/`rows_touched` bound the activation panel traffic
+    /// (x and y are tiled and reused across block rows, not re-read per
+    /// block as a naive count would charge).
+    pub fn bcsr_spmm(
+        &self,
+        b: usize,
+        nnzb: usize,
+        bs: usize,
+        block_density: f64,
+        eff_: f64,
+        n_out: usize,
+        n_in: usize,
+    ) -> f64 {
+        // tensor cores compute on whole blocks: flops charged on block area
+        let flops = 2.0 * b as f64 * (nnzb * bs * bs) as f64;
+        let bytes = 2.0 * (nnzb * bs * bs) as f64
+            + 8.0 * nnzb as f64
+            + 2.0 * (b * n_in + b * n_out) as f64;
+        // sparse-in-block waste: effective efficiency scales with density
+        let e = eff_ * block_density.clamp(0.05, 1.0).sqrt();
+        self.roofline(flops, bytes, e)
+    }
+
+    /// 2:4 structured-sparse GEMM (SRigL inference path).
+    pub fn nm24_gemm(&self, m: usize, n: usize, k: usize) -> f64 {
+        let flops = m as f64 * n as f64 * k as f64; // half the dense flops
+        let bytes = 2.0 * (m * k / 2 + k * n + m * n) as f64 + (m * k / 4) as f64;
+        self.roofline(flops, bytes, eff::NM24)
+    }
+
+    /// One-off diagonal→BCSR conversion: a permuted gather of nnz values
+    /// plus index construction — bandwidth bound.  Amortized over the steps
+    /// between topology updates during training; paid once for inference.
+    pub fn diag_convert(&self, nnz: usize) -> f64 {
+        let bytes = 3.0 * 4.0 * nnz as f64;
+        bytes / self.hbm_bw + 2.0 * self.launch
+    }
+}
+
+/// How a sparse linear layer executes, per method (Sec 4.2.3 setup).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecFormat {
+    Dense,
+    /// unstructured CSR (RigL/SET/MEST/CHT)
+    Csr,
+    /// diagonal → BCSR via SmaT-style kernel (DynaDiag, DiagHeur)
+    DiagBcsr,
+    /// block-sparse Triton kernel (DSB, PixelatedBFly)
+    TritonBlock,
+    /// 2:4 tensor cores, inference only (SRigL); training falls back dense
+    Nm24,
+}
+
+/// Time for `y = x[b, n_in] · Wᵀ` at `sparsity`, in format `fmt`.
+pub fn linear_fwd(dev: &Device, fmt: ExecFormat, b: usize, n_out: usize, n_in: usize, sparsity: f64) -> f64 {
+    let nnz = (((1.0 - sparsity) * (n_out * n_in) as f64) as usize).max(1);
+    match fmt {
+        ExecFormat::Dense => dev.gemm(b, n_out, n_in),
+        ExecFormat::Csr => dev.csr_spmm(b, n_out, n_in, nnz),
+        ExecFormat::DiagBcsr => {
+            // K whole diagonals; the Apdx D reorder clusters the selected
+            // band into near-dense blocks: ceil(k/bs) full blocks plus one
+            // partial edge block per block row.
+            let bs = 32;
+            let k = crate::sparsity::diag_count(n_in, sparsity);
+            let nnzb = (n_out / bs).max(1) * (k.div_ceil(bs) + 1);
+            let density = (k as f64 * n_out as f64) / (nnzb * bs * bs) as f64;
+            dev.bcsr_spmm(b, nnzb, bs, density.min(1.0), eff::BCSR, n_out, n_in)
+        }
+        ExecFormat::TritonBlock => {
+            let bs = 32;
+            let total = ((n_out / bs) * (n_in / bs)).max(1);
+            let nnzb = (((1.0 - sparsity) * total as f64) as usize).max(1);
+            dev.bcsr_spmm(b, nnzb, bs, 1.0, eff::TRITON_BLOCK, n_out, n_in)
+        }
+        ExecFormat::Nm24 => dev.nm24_gemm(b, n_out, n_in),
+    }
+}
+
+/// Backward products for one linear: dX = dY·W and dW = dYᵀ·X.
+/// `sparse_bwd`: method keeps the backward sparse (DynaDiag via Apdx A,
+/// PBFly/DSB block kernels); otherwise dense fallback (SRigL, and RigL's
+/// dW is dense by construction).
+pub fn linear_bwd(dev: &Device, fmt: ExecFormat, b: usize, n_out: usize, n_in: usize, sparsity: f64, sparse_bwd: bool) -> f64 {
+    if !sparse_bwd {
+        // dX dense gemm + dW dense gemm
+        return dev.gemm(b, n_in, n_out) + dev.gemm(n_out, n_in, b);
+    }
+    match fmt {
+        ExecFormat::DiagBcsr => {
+            // dX: transposed diagonal product (same structure, Apdx A);
+            // dW: gradient only on the K diagonals — nnz-proportional
+            let dx = linear_fwd(dev, fmt, b, n_in, n_out, sparsity);
+            let nnz = (((1.0 - sparsity) * (n_out * n_in) as f64) as usize).max(1);
+            let dw = dev.roofline(
+                2.0 * b as f64 * nnz as f64,
+                2.0 * (b * (n_in + n_out) + nnz) as f64,
+                eff::BCSR,
+            );
+            dx + dw
+        }
+        ExecFormat::TritonBlock => {
+            let dx = linear_fwd(dev, fmt, b, n_in, n_out, sparsity);
+            let dw = linear_fwd(dev, fmt, n_out.max(n_in), n_out, n_in, sparsity);
+            dx + dw * (b as f64 / n_out.max(n_in) as f64).max(0.25)
+        }
+        ExecFormat::Csr => {
+            let dx = linear_fwd(dev, fmt, b, n_in, n_out, sparsity);
+            // dW on nnz coordinates via sampled-dense-dense product
+            let nnz = (((1.0 - sparsity) * (n_out * n_in) as f64) as usize).max(1);
+            let dw = dev.roofline(
+                2.0 * b as f64 * nnz as f64,
+                2.0 * (b * (n_in + n_out)) as f64 + 12.0 * nnz as f64,
+                eff::CSR,
+            );
+            dx + dw
+        }
+        _ => dev.gemm(b, n_in, n_out) + dev.gemm(n_out, n_in, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_gemm_sane() {
+        // 768³ gemm at batch 197: ~0.46 GFLOP → tens of microseconds
+        let t = A100.gemm(197, 768, 768);
+        assert!(t > 1e-6 && t < 1e-3, "t = {}", t);
+    }
+
+    /// batch 128 × 197 tokens — the flattened row count the ViT-B linear
+    /// layers actually see (tiny b is launch-bound and uninformative).
+    const B: usize = 128 * 197;
+
+    #[test]
+    fn csr_slower_than_dense_at_moderate_sparsity() {
+        // the paper's premise: unstructured sparsity gives no speedup
+        let dense = A100.gemm(B, 3072, 768);
+        let csr = linear_fwd(&A100, ExecFormat::Csr, B, 3072, 768, 0.6);
+        assert!(csr > dense, "csr {} dense {}", csr, dense);
+    }
+
+    #[test]
+    fn diag_bcsr_beats_dense_at_high_sparsity() {
+        let dense = A100.gemm(B, 3072, 768);
+        let diag = linear_fwd(&A100, ExecFormat::DiagBcsr, B, 3072, 768, 0.9);
+        assert!(diag < dense, "diag {} dense {}", diag, dense);
+        assert!(dense / diag > 1.5, "speedup {}", dense / diag);
+    }
+
+    #[test]
+    fn speedup_grows_with_sparsity() {
+        let mut prev = 0.0;
+        for &s in &[0.5, 0.6, 0.7, 0.8, 0.9, 0.95] {
+            let dense = A100.gemm(B, 3072, 768);
+            let diag = linear_fwd(&A100, ExecFormat::DiagBcsr, B, 3072, 768, s);
+            let sp = dense / diag;
+            assert!(sp >= prev * 0.9, "not monotone at {}: {} vs {}", s, sp, prev);
+            prev = sp;
+        }
+    }
+
+    #[test]
+    fn nm24_bounded_speedup() {
+        let dense = A100.gemm(B, 768, 768);
+        let nm = linear_fwd(&A100, ExecFormat::Nm24, B, 768, 768, 0.5);
+        let sp = dense / nm;
+        assert!(sp > 1.1 && sp < 2.2, "2:4 speedup {}", sp);
+    }
+
+    #[test]
+    fn sparse_bwd_cheaper_than_dense_bwd() {
+        let sparse = linear_bwd(&A100, ExecFormat::DiagBcsr, B, 3072, 768, 0.9, true);
+        let dense = linear_bwd(&A100, ExecFormat::DiagBcsr, B, 3072, 768, 0.9, false);
+        assert!(sparse < dense);
+    }
+}

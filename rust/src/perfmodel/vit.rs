@@ -1,0 +1,322 @@
+//! End-to-end model-level timing composition (Fig 1 / Fig 4 / Fig 9 / Tbl 8).
+//!
+//! Composes per-layer kernel times into per-step inference and training
+//! times for the paper's evaluation network (ViT-B/16 on 224² images,
+//! 197 tokens) under each DST method's execution strategy, including the
+//! paper's infrastructure caveats (SRigL & DSB train dense — footnote 4).
+
+use super::{linear_bwd, linear_fwd, Device, ExecFormat, A100};
+
+/// Transformer shape for the timing model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetShape {
+    pub tokens: usize,
+    pub dim: usize,
+    pub mlp: usize,
+    pub depth: usize,
+    pub batch: usize,
+    /// sparsify MHA input projections too (GPT-2 yes, ViT no — footnotes 2/3)
+    pub sparse_qkv: bool,
+}
+
+/// ViT-Base/16, ImageNet: 197 tokens (196 + cls), 768 dim, 12 blocks.
+pub const VIT_BASE: NetShape = NetShape {
+    tokens: 197,
+    dim: 768,
+    mlp: 3072,
+    depth: 12,
+    batch: 128,
+    sparse_qkv: false,
+};
+
+/// GPT-2 Small shape on WikiText-103 (1024 ctx).
+pub const GPT2_SMALL: NetShape = NetShape {
+    tokens: 1024,
+    dim: 768,
+    mlp: 3072,
+    depth: 12,
+    batch: 8,
+    sparse_qkv: true,
+};
+
+/// A DST method's execution profile (Sec 4.2.3 "Setup").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Dense,
+    RigL,
+    Set,
+    Mest,
+    Cht,
+    SRigL,
+    Dsb,
+    PixelatedBFly,
+    DiagHeur,
+    DynaDiag,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Dense => "Dense",
+            Method::RigL => "RigL",
+            Method::Set => "SET",
+            Method::Mest => "MEST",
+            Method::Cht => "CHT",
+            Method::SRigL => "SRigL",
+            Method::Dsb => "DSB",
+            Method::PixelatedBFly => "PixelatedBFly",
+            Method::DiagHeur => "DiagHeur",
+            Method::DynaDiag => "DynaDiag",
+        }
+    }
+
+    pub fn structured(&self) -> bool {
+        matches!(
+            self,
+            Method::SRigL
+                | Method::Dsb
+                | Method::PixelatedBFly
+                | Method::DiagHeur
+                | Method::DynaDiag
+        )
+    }
+
+    /// Inference-time layer format.
+    pub fn infer_format(&self) -> ExecFormat {
+        match self {
+            Method::Dense => ExecFormat::Dense,
+            Method::RigL | Method::Set | Method::Mest | Method::Cht => ExecFormat::Csr,
+            Method::SRigL => ExecFormat::Nm24,
+            Method::Dsb | Method::PixelatedBFly => ExecFormat::TritonBlock,
+            Method::DiagHeur | Method::DynaDiag => ExecFormat::DiagBcsr,
+        }
+    }
+
+    /// Training-time layer format (footnote 4: SRigL's and DSB's kernels
+    /// lack training integration — they train dense; PBFly's Triton lib
+    /// does train sparse).
+    pub fn train_format(&self) -> ExecFormat {
+        match self {
+            Method::Dense | Method::SRigL | Method::Dsb => ExecFormat::Dense,
+            Method::RigL | Method::Set | Method::Mest | Method::Cht => ExecFormat::Csr,
+            Method::PixelatedBFly => ExecFormat::TritonBlock,
+            Method::DiagHeur | Method::DynaDiag => ExecFormat::DiagBcsr,
+        }
+    }
+
+    /// Does the method keep the backward pass sparse?
+    pub fn sparse_bwd(&self) -> bool {
+        matches!(
+            self,
+            Method::DynaDiag | Method::DiagHeur | Method::PixelatedBFly
+        ) || matches!(self, Method::RigL | Method::Set | Method::Mest | Method::Cht)
+    }
+}
+
+/// Dense (non-sparsifiable) compute per block: attention score/value matmuls
+/// + layernorms + softmax, approximated by their GEMM cost.
+fn attn_core_time(dev: &Device, s: &NetShape) -> f64 {
+    let b = s.batch;
+    // q@kT and att@v per head batch: 2 gemms of [tokens, tokens, dim]
+    2.0 * dev.gemm(b * s.tokens, s.tokens, s.dim)
+}
+
+/// Per-step inference time of the full network under `method`.
+pub fn inference_time(method: Method, s: &NetShape, sparsity: f64) -> f64 {
+    let dev = &A100;
+    let fmt = method.infer_format();
+    let b = s.batch * s.tokens; // linear layers see flattened tokens
+    let mut t = 0.0;
+    for _ in 0..s.depth {
+        // qkv projection
+        t += if s.sparse_qkv && method != Method::Dense {
+            linear_fwd(dev, fmt, b, 3 * s.dim, s.dim, sparsity)
+        } else {
+            dev.gemm(b, 3 * s.dim, s.dim)
+        };
+        t += attn_core_time(dev, s);
+        // attn out projection + mlp (the sparsified layers)
+        if method == Method::Dense {
+            t += dev.gemm(b, s.dim, s.dim);
+            t += dev.gemm(b, s.mlp, s.dim);
+            t += dev.gemm(b, s.dim, s.mlp);
+        } else {
+            t += linear_fwd(dev, fmt, b, s.dim, s.dim, sparsity);
+            t += linear_fwd(dev, fmt, b, s.mlp, s.dim, sparsity);
+            t += linear_fwd(dev, fmt, b, s.dim, s.mlp, sparsity);
+        }
+    }
+    // one-off diag→BCSR conversion is amortized across the serving batch
+    // stream; charge a vanishing share here (Fig 7 reports it separately).
+    t
+}
+
+/// Per-step training time (fwd + bwd + optimizer traffic).
+pub fn train_step_time(method: Method, s: &NetShape, sparsity: f64) -> f64 {
+    let dev = &A100;
+    let fmt = method.train_format();
+    let sb = method.sparse_bwd() && fmt != ExecFormat::Dense;
+    let b = s.batch * s.tokens;
+    let mut t = 0.0;
+    for _ in 0..s.depth {
+        let qkv_sparse = s.sparse_qkv && fmt != ExecFormat::Dense;
+        // forward
+        t += if qkv_sparse {
+            linear_fwd(dev, fmt, b, 3 * s.dim, s.dim, sparsity)
+        } else {
+            dev.gemm(b, 3 * s.dim, s.dim)
+        };
+        t += attn_core_time(dev, s);
+        let layers = [(s.dim, s.dim), (s.mlp, s.dim), (s.dim, s.mlp)];
+        for &(o, i) in &layers {
+            t += if fmt == ExecFormat::Dense {
+                dev.gemm(b, o, i)
+            } else {
+                linear_fwd(dev, fmt, b, o, i, sparsity)
+            };
+        }
+        // backward: attention core ~2x fwd, linears via linear_bwd
+        t += 2.0 * attn_core_time(dev, s);
+        t += if qkv_sparse {
+            linear_bwd(dev, fmt, b, 3 * s.dim, s.dim, sparsity, sb)
+        } else {
+            linear_bwd(dev, ExecFormat::Dense, b, 3 * s.dim, s.dim, 0.0, false)
+        };
+        for &(o, i) in &layers {
+            t += linear_bwd(dev, fmt, b, o, i, sparsity, sb);
+        }
+    }
+    // optimizer update traffic: params touched ∝ density for sparse methods
+    let params = s.depth as f64
+        * (3.0 * (s.dim * s.dim) as f64
+            + (s.dim * s.dim) as f64
+            + 2.0 * (s.dim * s.mlp) as f64);
+    let touched = if fmt == ExecFormat::Dense { params } else { params * (1.0 - sparsity).max(0.05) };
+    t += 3.0 * 4.0 * touched / dev.hbm_bw; // read p/m/v + write, fp32
+    // diagonal values change every step, so DynaDiag re-packs diagonals to
+    // BCSR each step (Tbl 8's "with BCSR conversion" column measures this
+    // overhead); index remap happens only at TopK changes and is ignorable.
+    if matches!(method, Method::DynaDiag | Method::DiagHeur) {
+        let nnz = (1.0 - sparsity) * params;
+        // pack touches values ~3x (read diag layout, write blocks, indices)
+        t += 3.0 * dev.diag_convert(nnz as usize);
+    }
+    // framework overhead every method pays (PyTorch dispatch, augmentation,
+    // host sync) — measured training curves flatten toward this floor.
+    t += 0.12 * dense_compute_floor(s);
+    t
+}
+
+/// Cached-ish dense fwd+bwd compute time (the overhead-floor reference).
+fn dense_compute_floor(s: &NetShape) -> f64 {
+    let dev = &A100;
+    let b = s.batch * s.tokens;
+    let mut t = 0.0;
+    for _ in 0..s.depth {
+        t += dev.gemm(b, 3 * s.dim, s.dim);
+        t += 3.0 * attn_core_time(dev, s);
+        t += 3.0
+            * (dev.gemm(b, s.dim, s.dim)
+                + dev.gemm(b, s.mlp, s.dim)
+                + dev.gemm(b, s.dim, s.mlp));
+    }
+    t
+}
+
+/// Speedup of `method` over dense execution.
+pub fn inference_speedup(method: Method, s: &NetShape, sparsity: f64) -> f64 {
+    inference_time(Method::Dense, s, 0.0) / inference_time(method, s, sparsity)
+}
+
+pub fn train_speedup(method: Method, s: &NetShape, sparsity: f64) -> f64 {
+    train_step_time(Method::Dense, s, 0.0) / train_step_time(method, s, sparsity)
+}
+
+pub const ALL_METHODS: [Method; 10] = [
+    Method::Dense,
+    Method::RigL,
+    Method::Set,
+    Method::Mest,
+    Method::Cht,
+    Method::SRigL,
+    Method::Dsb,
+    Method::PixelatedBFly,
+    Method::DiagHeur,
+    Method::DynaDiag,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig 1 / Fig 4 headline shape: DynaDiag @90% gives ~3.1× inference
+    /// and ~1.59× training speedup on ViT-B; we accept the right ballpark.
+    #[test]
+    fn vit_base_headline_speedups() {
+        let inf = inference_speedup(Method::DynaDiag, &VIT_BASE, 0.9);
+        assert!(
+            (2.0..=4.5).contains(&inf),
+            "DynaDiag 90% inference speedup {} out of band",
+            inf
+        );
+        let tr = train_speedup(Method::DynaDiag, &VIT_BASE, 0.9);
+        assert!(
+            (1.2..=2.2).contains(&tr),
+            "DynaDiag 90% training speedup {} out of band",
+            tr
+        );
+    }
+
+    /// Fig 4: at 60% sparsity inference ~1.37×, training near parity.
+    #[test]
+    fn vit_base_low_sparsity_tapering() {
+        let inf = inference_speedup(Method::DynaDiag, &VIT_BASE, 0.6);
+        assert!((1.0..=2.0).contains(&inf), "60% inference {}", inf);
+        let tr = train_speedup(Method::DynaDiag, &VIT_BASE, 0.6);
+        assert!((0.7..=1.4).contains(&tr), "60% training {}", tr);
+    }
+
+    /// The paper's motivation: unstructured (RigL) gets no real speedup.
+    #[test]
+    fn rigl_has_no_speedup_at_90() {
+        let inf = inference_speedup(Method::RigL, &VIT_BASE, 0.9);
+        assert!(inf < 1.4, "RigL inference speedup {} too high", inf);
+        let tr = train_speedup(Method::RigL, &VIT_BASE, 0.9);
+        assert!(tr < 1.3, "RigL train speedup {}", tr);
+    }
+
+    /// Fig 1 ordering at 90%: DynaDiag fastest in both axes among methods.
+    #[test]
+    fn dynadiag_fastest_at_90() {
+        let s = 0.9;
+        let dd_inf = inference_speedup(Method::DynaDiag, &VIT_BASE, s);
+        let dd_tr = train_speedup(Method::DynaDiag, &VIT_BASE, s);
+        for m in [Method::RigL, Method::SRigL, Method::Dsb, Method::PixelatedBFly] {
+            assert!(
+                dd_inf >= inference_speedup(m, &VIT_BASE, s) * 0.99,
+                "{:?} beats DynaDiag inference",
+                m
+            );
+            assert!(
+                dd_tr >= train_speedup(m, &VIT_BASE, s) * 0.99,
+                "{:?} beats DynaDiag training",
+                m
+            );
+        }
+    }
+
+    /// footnote 4: SRigL / DSB training is dense -> no training speedup.
+    #[test]
+    fn srigl_dsb_train_dense() {
+        for m in [Method::SRigL, Method::Dsb] {
+            let tr = train_speedup(m, &VIT_BASE, 0.9);
+            assert!((0.9..=1.02).contains(&tr), "{:?} train speedup {}", m, tr);
+        }
+    }
+
+    #[test]
+    fn srigl_inference_speedup_exists() {
+        let sp = inference_speedup(Method::SRigL, &VIT_BASE, 0.9);
+        assert!(sp > 1.1, "SRigL inference {}", sp);
+    }
+}

@@ -1,0 +1,433 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute per step.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The manifest (`artifacts/manifest.json`) carries the named-buffer IO
+//! contract: ordered input/output names + shapes + dtypes per artifact.
+//! `Executable::run` takes host tensors in manifest order and returns the
+//! decomposed output tuple; `train/state.rs` does the name routing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an IO buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{}'", other),
+        }
+    }
+}
+
+/// Host-side tensor matching one artifact IO slot.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(spec: &IoSpec) -> HostTensor {
+        let n: usize = spec.shape.iter().product();
+        match spec.dtype {
+            Dtype::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: vec![0.0; n] },
+            Dtype::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: vec![0; n] },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, wanted f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, wanted f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is f32, wanted i32"),
+        }
+    }
+
+    /// First element as f64 (scalar outputs like loss/acc).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            HostTensor::F32 { data, .. } => data
+                .first()
+                .map(|&x| x as f64)
+                .ok_or_else(|| anyhow!("empty tensor")),
+            HostTensor::I32 { data, .. } => data
+                .first()
+                .map(|&x| x as f64)
+                .ok_or_else(|| anyhow!("empty tensor")),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => bail!("unsupported output element type {:?}", other),
+        }
+    }
+}
+
+/// One IO slot of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// Parsed manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+    pub meta: Json,
+}
+
+impl ArtifactMeta {
+    /// Ordered (name, out, in) of the model's sparse layers.
+    pub fn sparse_layers(&self) -> Result<Vec<(String, usize, usize)>> {
+        let arr = self.meta.req("sparse_layers")?.as_arr()?;
+        arr.iter()
+            .map(|e| {
+                Ok((
+                    e.req("name")?.as_str()?.to_string(),
+                    e.req("out")?.as_usize()?,
+                    e.req("in")?.as_usize()?,
+                ))
+            })
+            .collect()
+    }
+
+    /// Model config value (batch size, dims, ...).
+    pub fn config_usize(&self, key: &str) -> Result<usize> {
+        self.meta.req("config")?.req(key)?.as_usize()
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input '{}'", self.name, name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s == name)
+            .ok_or_else(|| anyhow!("artifact {} has no output '{}'", self.name, name))
+    }
+}
+
+/// The artifact registry.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let root = Json::from_file(&path)?;
+        let mut artifacts = BTreeMap::new();
+        for a in root.req("artifacts")?.as_arr()? {
+            let name = a.req("name")?.as_str()?.to_string();
+            let inputs = a
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(IoSpec {
+                        name: s.req("name")?.as_str()?.to_string(),
+                        shape: s.req("shape")?.as_usize_vec()?,
+                        dtype: Dtype::parse(s.req("dtype")?.as_str()?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    file: a.req("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                    meta: a.req("meta")?.clone(),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{}' not in manifest ({} known)", name, self.artifacts.len()))
+    }
+}
+
+/// PJRT client wrapper (CPU plugin; one per process).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Load + compile `name` from the manifest (compile happens once; each
+    /// `run` is then a pure execute).
+    pub fn load(rt: &Runtime, manifest: &Manifest, name: &str) -> Result<Executable> {
+        let meta = manifest.get(name)?.clone();
+        let path = manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = rt
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", name))?;
+        Ok(Executable { meta, exe })
+    }
+
+    /// Execute with inputs in manifest order; returns outputs in manifest
+    /// order (the artifact returns one tuple, decomposed here).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs, manifest says {}",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {}: got {} inputs, manifest says {}",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.shape() != spec.shape.as_slice() || t.dtype() != spec.dtype {
+                bail!(
+                    "artifact {} input {} ('{}'): got {:?} {:?}, want {:?} {:?}",
+                    self.meta.name,
+                    i,
+                    spec.name,
+                    t.dtype(),
+                    t.shape(),
+                    spec.dtype,
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Find the artifacts directory: explicit path, else walk up from cwd.
+pub fn find_artifacts_dir(explicit: &str) -> Result<PathBuf> {
+    let p = PathBuf::from(explicit);
+    if p.join("manifest.json").exists() {
+        return Ok(p);
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!(
+                "artifacts/manifest.json not found (looked from cwd up); run `make artifacts`"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert_eq!(t.as_f32().unwrap()[3], 4.0);
+        assert!(t.as_i32().is_err());
+        assert_eq!(HostTensor::scalar_f32(7.0).scalar().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn manifest_parses_inline() {
+        let dir = std::env::temp_dir().join("dynadiag_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "m", "file": "m.hlo.txt",
+                "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"}],
+                "outputs": ["y"],
+                "meta": {"sparse_layers": [{"name": "l", "out": 4, "in": 8}],
+                         "config": {"batch": 16}}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("m").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.sparse_layers().unwrap(), vec![("l".to_string(), 4, 8)]);
+        assert_eq!(a.config_usize("batch").unwrap(), 16);
+        assert!(m.get("nope").is_err());
+    }
+}
+
+/// A process-wide session: one PJRT client + manifest + compile cache.
+///
+/// Compiling an artifact takes seconds; the experiment matrix reuses the
+/// same executables across hundreds of cells through this cache.
+pub struct Session {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<BTreeMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Session {
+    pub fn open(artifacts_dir: &str) -> Result<std::rc::Rc<Session>> {
+        let dir = find_artifacts_dir(artifacts_dir)?;
+        Ok(std::rc::Rc::new(Session {
+            rt: Runtime::cpu()?,
+            manifest: Manifest::load(&dir)?,
+            cache: std::cell::RefCell::new(BTreeMap::new()),
+        }))
+    }
+
+    /// Load (or fetch cached) compiled executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let exe = std::rc::Rc::new(Executable::load(&self.rt, &self.manifest, name)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,191 @@
+//! Per-layer sparsity budget allocation (Table 14 ablation).
+//!
+//! Given a global sparsity budget and the sparse layers' shapes, produce a
+//! per-layer sparsity vector under one of three schemes:
+//!   * Uniform          — every layer at the global rate
+//!   * ERK              — Erdős–Rényi-Kernel scaling (Evci et al. 2020)
+//!   * ComputeFraction  — density proportional to a layer's share of
+//!                        compute (Pixelated Butterfly), the paper's default
+
+/// Allocation scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    Uniform,
+    Erk,
+    ComputeFraction,
+}
+
+impl Distribution {
+    pub fn parse(s: &str) -> Option<Distribution> {
+        match s {
+            "uniform" => Some(Distribution::Uniform),
+            "erk" => Some(Distribution::Erk),
+            "compute" | "compute_fraction" | "pbfly" => {
+                Some(Distribution::ComputeFraction)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Shape of one sparse layer (rows = n_out, cols = n_in).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerShape {
+    pub n_out: usize,
+    pub n_in: usize,
+}
+
+impl LayerShape {
+    pub fn params(&self) -> f64 {
+        (self.n_out * self.n_in) as f64
+    }
+}
+
+/// Compute per-layer sparsities such that total nnz ≈ (1-S_global)·Σ params.
+///
+/// Returned sparsities are clamped to [0, max_sparsity] — a layer can be
+/// denser than the budget (small layers under ERK) but never empty
+/// (layer-collapse guard, Sec 4.3.2).
+pub fn allocate(
+    dist: Distribution,
+    layers: &[LayerShape],
+    global_sparsity: f64,
+    max_sparsity: f64,
+) -> Vec<f64> {
+    assert!(!layers.is_empty());
+    let total: f64 = layers.iter().map(|l| l.params()).sum();
+    let budget_nnz = (1.0 - global_sparsity) * total;
+
+    // raw per-layer density scores
+    let scores: Vec<f64> = match dist {
+        Distribution::Uniform => vec![1.0; layers.len()],
+        Distribution::Erk => layers
+            .iter()
+            .map(|l| (l.n_out + l.n_in) as f64 / (l.n_out * l.n_in) as f64)
+            .collect(),
+        Distribution::ComputeFraction => {
+            // density ∝ layer's fraction of total FLOPs ≈ params share;
+            // bigger layers get relatively denser budgets in absolute terms
+            // but equal *relative* density; PBFly then boosts small layers.
+            layers
+                .iter()
+                .map(|l| 1.0 / (l.params() / total).sqrt())
+                .collect()
+        }
+    };
+
+    // scale scores so sum(score_l * eps * params_l) == budget
+    let denom: f64 = layers
+        .iter()
+        .zip(&scores)
+        .map(|(l, s)| s * l.params())
+        .sum();
+    let eps = budget_nnz / denom;
+
+    let mut sp: Vec<f64> = scores
+        .iter()
+        .map(|s| (1.0 - s * eps).clamp(0.0, max_sparsity))
+        .collect();
+
+    // clamping may free / consume budget; one correction pass redistributes
+    // over the unclamped layers
+    for _ in 0..4 {
+        let nnz_now: f64 = layers
+            .iter()
+            .zip(&sp)
+            .map(|(l, s)| (1.0 - s) * l.params())
+            .sum();
+        let err = nnz_now - budget_nnz;
+        if err.abs() / budget_nnz < 1e-3 {
+            break;
+        }
+        let free: f64 = layers
+            .iter()
+            .zip(&sp)
+            .filter(|(_, &s)| s > 0.0 && s < max_sparsity)
+            .map(|(l, _)| l.params())
+            .sum();
+        if free <= 0.0 {
+            break;
+        }
+        let delta = err / free;
+        for (l, s) in layers.iter().zip(sp.iter_mut()) {
+            if *s > 0.0 && *s < max_sparsity {
+                *s = (*s + delta * l.params() / l.params()).clamp(0.0, max_sparsity);
+            }
+        }
+    }
+    sp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vit_like() -> Vec<LayerShape> {
+        let mut v = Vec::new();
+        for _ in 0..4 {
+            v.push(LayerShape { n_out: 128, n_in: 128 });
+            v.push(LayerShape { n_out: 256, n_in: 128 });
+            v.push(LayerShape { n_out: 128, n_in: 256 });
+        }
+        v
+    }
+
+    fn total_sparsity(layers: &[LayerShape], sp: &[f64]) -> f64 {
+        let total: f64 = layers.iter().map(|l| l.params()).sum();
+        let nnz: f64 = layers
+            .iter()
+            .zip(sp)
+            .map(|(l, s)| (1.0 - s) * l.params())
+            .sum();
+        1.0 - nnz / total
+    }
+
+    #[test]
+    fn uniform_hits_global_budget_exactly() {
+        let layers = vit_like();
+        for &s in &[0.5, 0.8, 0.9, 0.95] {
+            let sp = allocate(Distribution::Uniform, &layers, s, 0.999);
+            for &x in &sp {
+                assert!((x - s).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn erk_and_compute_respect_budget() {
+        let layers = vit_like();
+        for dist in [Distribution::Erk, Distribution::ComputeFraction] {
+            for &s in &[0.6, 0.9] {
+                let sp = allocate(dist, &layers, s, 0.999);
+                let got = total_sparsity(&layers, &sp);
+                assert!(
+                    (got - s).abs() < 0.02,
+                    "{:?} S={} got {}",
+                    dist,
+                    s,
+                    got
+                );
+                assert!(sp.iter().all(|&x| (0.0..=0.999).contains(&x)));
+            }
+        }
+    }
+
+    #[test]
+    fn erk_gives_small_layers_more_density() {
+        let layers = vec![
+            LayerShape { n_out: 64, n_in: 64 },
+            LayerShape { n_out: 512, n_in: 512 },
+        ];
+        let sp = allocate(Distribution::Erk, &layers, 0.9, 0.999);
+        assert!(sp[0] < sp[1], "small layer should be denser: {:?}", sp);
+    }
+
+    #[test]
+    fn never_fully_prunes_a_layer() {
+        let layers = vit_like();
+        let sp = allocate(Distribution::Erk, &layers, 0.99, 0.995);
+        assert!(sp.iter().all(|&x| x <= 0.995));
+    }
+}

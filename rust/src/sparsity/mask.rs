@@ -1,0 +1,198 @@
+//! Binary masks over 2-D weight matrices.
+//!
+//! Every DST baseline mutates a `Mask` between train steps; the trainer
+//! uploads it as the `masks/<layer>` input of the masked artifacts (as f32
+//! 0/1 buffers). DynaDiag itself never materializes a mask during training —
+//! its structure lives in α — but produces one at finalization for the
+//! small-world analysis (Table 16) and the BCSR conversion.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Dense boolean mask with row-major layout, shape [rows, cols].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: Vec<bool>,
+}
+
+impl Mask {
+    pub fn zeros(rows: usize, cols: usize) -> Mask {
+        Mask { rows, cols, bits: vec![false; rows * cols] }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Mask {
+        Mask { rows, cols, bits: vec![true; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.bits[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.bits[i * self.cols + j] = v;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    /// Random unstructured mask with exactly `nnz` active weights.
+    pub fn random(rows: usize, cols: usize, nnz: usize, rng: &mut Rng) -> Mask {
+        let mut m = Mask::zeros(rows, cols);
+        for idx in rng.choose_k(rows * cols, nnz.min(rows * cols)) {
+            m.bits[idx] = true;
+        }
+        m
+    }
+
+    /// f32 0/1 buffer for upload as an artifact input.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor { shape: vec![self.rows, self.cols], data: self.to_f32() }
+    }
+
+    pub fn from_tensor(t: &Tensor, thresh: f32) -> Mask {
+        assert_eq!(t.rank(), 2);
+        Mask {
+            rows: t.rows(),
+            cols: t.cols(),
+            bits: t.data.iter().map(|&x| x.abs() > thresh).collect(),
+        }
+    }
+
+    /// Transpose (used by the Apdx A invariance tests).
+    pub fn transpose(&self) -> Mask {
+        let mut out = Mask::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if self.get(i, j) {
+                    out.set(j, i, true);
+                }
+            }
+        }
+        out
+    }
+
+    /// True if every row and every column has at least one active entry —
+    /// the Apdx B full-coverage condition.
+    pub fn full_coverage(&self) -> bool {
+        let mut row_ok = vec![false; self.rows];
+        let mut col_ok = vec![false; self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if self.get(i, j) {
+                    row_ok[i] = true;
+                    col_ok[j] = true;
+                }
+            }
+        }
+        row_ok.into_iter().all(|x| x) && col_ok.into_iter().all(|x| x)
+    }
+
+    /// Indices of active entries (row-major order).
+    pub fn active_indices(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if self.get(i, j) {
+                    v.push((i, j));
+                }
+            }
+        }
+        v
+    }
+
+    /// Per-row nnz counts.
+    pub fn row_nnz(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|i| (0..self.cols).filter(|&j| self.get(i, j)).count())
+            .collect()
+    }
+
+    /// Per-column nnz counts.
+    pub fn col_nnz(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if self.get(i, j) {
+                    counts[j] += 1;
+                }
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn random_mask_has_exact_nnz() {
+        let mut rng = Rng::new(1);
+        let m = Mask::random(10, 20, 37, &mut rng);
+        assert_eq!(m.nnz(), 37);
+        assert!((m.sparsity() - (1.0 - 37.0 / 200.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_preserves_nnz() {
+        forall(
+            2,
+            50,
+            |r| {
+                let rows = 1 + r.below(16);
+                let cols = 1 + r.below(16);
+                let nnz = r.below(rows * cols + 1);
+                let mut rr = r.fork(9);
+                Mask::random(rows, cols, nnz, &mut rr)
+            },
+            |m| {
+                let t = m.transpose();
+                t.nnz() == m.nnz() && t.transpose() == *m
+            },
+        );
+    }
+
+    #[test]
+    fn coverage_detects_empty_rows() {
+        let mut m = Mask::ones(3, 3);
+        assert!(m.full_coverage());
+        for j in 0..3 {
+            m.set(1, j, false);
+        }
+        assert!(!m.full_coverage());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Rng::new(3);
+        let m = Mask::random(6, 7, 20, &mut rng);
+        let t = m.to_tensor();
+        assert_eq!(Mask::from_tensor(&t, 0.5), m);
+    }
+
+    #[test]
+    fn row_col_counts_sum_to_nnz() {
+        let mut rng = Rng::new(4);
+        let m = Mask::random(9, 11, 40, &mut rng);
+        assert_eq!(m.row_nnz().iter().sum::<usize>(), 40);
+        assert_eq!(m.col_nnz().iter().sum::<usize>(), 40);
+    }
+}

@@ -1,0 +1,14 @@
+//! Sparsity substrate: masks, diagonal algebra, TopK, schedules, budgets,
+//! structured pattern generators.  (DESIGN.md §3.)
+
+pub mod diagonal;
+pub mod distribution;
+pub mod mask;
+pub mod patterns;
+pub mod schedule;
+pub mod topk;
+
+pub use diagonal::{diag_count, DiagMatrix};
+pub use distribution::{allocate, Distribution, LayerShape};
+pub use mask::Mask;
+pub use schedule::Curve;

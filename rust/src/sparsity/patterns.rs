@@ -1,0 +1,217 @@
+//! Structured mask generators for the baselines (Fig 2's pattern zoo):
+//! N:M (SRigL), block (DSB), butterfly (Pixelated Butterfly), plus random
+//! unstructured init used by SET/MEST/RigL.
+
+use crate::sparsity::mask::Mask;
+use crate::util::rng::Rng;
+
+/// N:M pattern: in every group of `m` consecutive weights along the input
+/// dim, exactly `n` are active. `scores` (same layout as the matrix) picks
+/// which; random when None.
+pub fn nm_mask(
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    scores: Option<&[f32]>,
+    rng: &mut Rng,
+) -> Mask {
+    assert!(n <= m && m > 0);
+    let mut mask = Mask::zeros(rows, cols);
+    for i in 0..rows {
+        let mut j = 0;
+        while j < cols {
+            let g = (cols - j).min(m);
+            let keep = ((n as f64 / m as f64) * g as f64).round() as usize;
+            let keep = keep.max(if g > 0 { 1 } else { 0 }).min(g);
+            let mut idx: Vec<usize> = (0..g).collect();
+            match scores {
+                Some(s) => idx.sort_by(|&a, &b| {
+                    s[i * cols + j + b]
+                        .abs()
+                        .partial_cmp(&s[i * cols + j + a].abs())
+                        .unwrap()
+                }),
+                None => rng.shuffle(&mut idx),
+            }
+            for &t in idx.iter().take(keep) {
+                mask.set(i, j + t, true);
+            }
+            j += g;
+        }
+    }
+    mask
+}
+
+/// Choose (n, m) for a target sparsity with fixed m: n = round((1-S)·m).
+pub fn nm_for_sparsity(m: usize, sparsity: f64) -> (usize, usize) {
+    let n = (((1.0 - sparsity) * m as f64).round() as usize).clamp(1, m);
+    (n, m)
+}
+
+/// Block-sparse mask: `bs × bs` blocks, `active` of them on, chosen by
+/// block scores (mean |w| per block) or randomly.
+pub fn block_mask(
+    rows: usize,
+    cols: usize,
+    bs: usize,
+    active: usize,
+    block_scores: Option<&[f32]>,
+    rng: &mut Rng,
+) -> Mask {
+    let nbr = rows.div_ceil(bs);
+    let nbc = cols.div_ceil(bs);
+    let total = nbr * nbc;
+    let active = active.min(total);
+    let chosen: Vec<usize> = match block_scores {
+        Some(s) => {
+            assert_eq!(s.len(), total);
+            crate::util::top_k_indices(s, active)
+        }
+        None => rng.choose_k(total, active),
+    };
+    let mut mask = Mask::zeros(rows, cols);
+    for b in chosen {
+        let (br, bc) = (b / nbc, b % nbc);
+        for i in br * bs..((br + 1) * bs).min(rows) {
+            for j in bc * bs..((bc + 1) * bs).min(cols) {
+                mask.set(i, j, true);
+            }
+        }
+    }
+    mask
+}
+
+/// Number of active blocks for a target sparsity.
+pub fn blocks_for_sparsity(rows: usize, cols: usize, bs: usize, sparsity: f64) -> usize {
+    let total = rows.div_ceil(bs) * cols.div_ceil(bs);
+    (((1.0 - sparsity) * total as f64).round() as usize).clamp(1, total)
+}
+
+/// Fixed butterfly mask (Pixelated Butterfly, simplified): the union of
+/// log2(n) butterfly factors' support, rendered at block granularity `bs`,
+/// then thinned to the sparsity budget by keeping the lowest-stride stripes.
+///
+/// The butterfly support at stage s connects index pairs differing in bit s;
+/// at block level this is a block-diagonal-of-stride-2^s pattern — exactly
+/// the "flat butterfly" structure PBFly trains with.
+pub fn butterfly_mask(rows: usize, cols: usize, bs: usize, sparsity: f64) -> Mask {
+    let mut mask = Mask::zeros(rows, cols);
+    let nbr = rows.div_ceil(bs);
+    let nbc = cols.div_ceil(bs);
+    let nb = nbr.max(nbc);
+    let budget = (((1.0 - sparsity) * (nbr * nbc) as f64).round() as usize).max(1);
+
+    // stage-0 stripes = block diagonal; each next stage adds blocks at
+    // stride 2^s off the diagonal (wrapped), like a flattened butterfly.
+    let mut placed = 0usize;
+    let mut on = vec![false; nbr * nbc];
+    'outer: for stage in 0..=nb.ilog2() as usize + 1 {
+        let stride = 1usize << stage;
+        for d in 0..nbr.max(nbc) {
+            for &sgn in &[0usize, 1] {
+                // wrap both above and below the diagonal
+                let br = d % nbr;
+                let shift = if sgn == 0 { stride - 1 } else { nbc.saturating_sub(stride - 1) };
+                let bc = (d + shift) % nbc;
+                let idx = br * nbc + bc;
+                if !on[idx] {
+                    on[idx] = true;
+                    placed += 1;
+                    if placed >= budget {
+                        break 'outer;
+                    }
+                }
+                if stage == 0 {
+                    break; // diagonal has no sign
+                }
+            }
+        }
+    }
+    for (idx, &v) in on.iter().enumerate() {
+        if v {
+            let (br, bc) = (idx / nbc, idx % nbc);
+            for i in br * bs..((br + 1) * bs).min(rows) {
+                for j in bc * bs..((bc + 1) * bs).min(cols) {
+                    mask.set(i, j, true);
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// Random unstructured mask at a target sparsity.
+pub fn random_mask(rows: usize, cols: usize, sparsity: f64, rng: &mut Rng) -> Mask {
+    let nnz = (((1.0 - sparsity) * (rows * cols) as f64).round() as usize)
+        .clamp(1, rows * cols);
+    Mask::random(rows, cols, nnz, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn nm_rowwise_counts() {
+        let mut rng = Rng::new(1);
+        let m = nm_mask(8, 32, 2, 8, None, &mut rng);
+        for i in 0..8 {
+            for g in 0..4 {
+                let cnt = (g * 8..(g + 1) * 8).filter(|&j| m.get(i, j)).count();
+                assert_eq!(cnt, 2);
+            }
+        }
+        assert!((m.sparsity() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nm_respects_scores() {
+        let mut rng = Rng::new(2);
+        let mut scores = vec![0.0f32; 4 * 8];
+        scores[0] = 9.0; // row 0, col 0
+        scores[5] = 8.0; // row 0, col 5
+        let m = nm_mask(4, 8, 2, 8, Some(&scores), &mut rng);
+        assert!(m.get(0, 0) && m.get(0, 5));
+    }
+
+    #[test]
+    fn block_mask_density() {
+        forall(
+            3,
+            30,
+            |r| {
+                let bs = [2usize, 4, 8][r.below(3)];
+                let rows = bs * (1 + r.below(8));
+                let cols = bs * (1 + r.below(8));
+                let s = 0.3 + 0.6 * r.f64();
+                (rows, cols, bs, s, r.fork(1))
+            },
+            |(rows, cols, bs, s, rng)| {
+                let mut rng = rng.clone();
+                let active = blocks_for_sparsity(*rows, *cols, *bs, *s);
+                let m = block_mask(*rows, *cols, *bs, active, None, &mut rng);
+                m.nnz() == active * bs * bs
+            },
+        );
+    }
+
+    #[test]
+    fn butterfly_budget_and_diagonal() {
+        let m = butterfly_mask(64, 64, 8, 0.8);
+        let frac = 1.0 - m.sparsity();
+        assert!((0.1..=0.3).contains(&frac), "density {}", frac);
+        // block diagonal is always included first
+        for i in 0..8 {
+            assert!(m.get(i, i));
+        }
+    }
+
+    #[test]
+    fn random_mask_sparsity() {
+        let mut rng = Rng::new(4);
+        let m = random_mask(32, 32, 0.9, &mut rng);
+        assert!((m.sparsity() - 0.9).abs() < 0.01);
+    }
+}

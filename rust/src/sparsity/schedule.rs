@@ -1,0 +1,143 @@
+//! Training-time schedules the coordinator drives (Sec 3.2, Tables 14/15,
+//! Fig 8): temperature annealing, sparsity ramps, RigL-style update-fraction
+//! decay, and the LR schedule with warmup.
+
+/// Shape of a schedule curve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Curve {
+    Constant,
+    Linear,
+    Cosine,
+}
+
+impl Curve {
+    pub fn parse(s: &str) -> Option<Curve> {
+        match s {
+            "constant" => Some(Curve::Constant),
+            "linear" => Some(Curve::Linear),
+            "cosine" => Some(Curve::Cosine),
+            _ => None,
+        }
+    }
+
+    /// Interpolation factor in [0, 1]: 0 at t=0 -> 1 at t=1.
+    fn frac(self, t: f64) -> f64 {
+        let t = t.clamp(0.0, 1.0);
+        match self {
+            Curve::Constant => 1.0,
+            Curve::Linear => t,
+            Curve::Cosine => 0.5 * (1.0 - (std::f64::consts::PI * t).cos()),
+        }
+    }
+}
+
+/// A value annealed from `start` to `end` over `total_steps`.
+#[derive(Clone, Copy, Debug)]
+pub struct Schedule {
+    pub curve: Curve,
+    pub start: f64,
+    pub end: f64,
+    pub total_steps: usize,
+}
+
+impl Schedule {
+    pub fn new(curve: Curve, start: f64, end: f64, total_steps: usize) -> Self {
+        Schedule { curve, start, end, total_steps: total_steps.max(1) }
+    }
+
+    pub fn at(&self, step: usize) -> f64 {
+        let t = step as f64 / self.total_steps as f64;
+        self.start + (self.end - self.start) * self.curve.frac(t)
+    }
+}
+
+/// Temperature schedule for the soft TopK (Fig 8): high T -> exploration,
+/// annealed toward `t_final` -> exploitation.
+pub fn temperature(curve: Curve, step: usize, total: usize, t0: f64, t_final: f64) -> f64 {
+    match curve {
+        // Constant = target sparsity enforced from step 0 (no exploration)
+        Curve::Constant => t_final,
+        c => Schedule::new(c, t0, t_final, total).at(step),
+    }
+}
+
+/// Sparsity ramp (Table 15): anneal the *enforced* sparsity from dense-ish
+/// to the target, constant = full target sparsity from step 0.
+pub fn sparsity_at(curve: Curve, step: usize, total: usize, s_init: f64, s_target: f64) -> f64 {
+    match curve {
+        Curve::Constant => s_target,
+        c => Schedule::new(c, s_init, s_target, total).at(step),
+    }
+}
+
+/// RigL Eq. (1): update fraction cosine-decayed to zero by `t_end`.
+pub fn rigl_update_fraction(step: usize, t_end: usize, alpha0: f64) -> f64 {
+    if step >= t_end {
+        return 0.0;
+    }
+    let t = step as f64 / t_end as f64;
+    alpha0 / 2.0 * (1.0 + (std::f64::consts::PI * t).cos())
+}
+
+/// Cosine LR with linear warmup (Apdx C recipes).
+pub fn lr_at(step: usize, total: usize, warmup: usize, lr_max: f64, lr_min: f64) -> f64 {
+    if warmup > 0 && step < warmup {
+        return lr_max * (step + 1) as f64 / warmup as f64;
+    }
+    let t = (step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64;
+    lr_min + 0.5 * (lr_max - lr_min) * (1.0 + (std::f64::consts::PI * t.min(1.0)).cos())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_hit_endpoints() {
+        for curve in [Curve::Linear, Curve::Cosine] {
+            let s = Schedule::new(curve, 10.0, 1.0, 100);
+            assert!((s.at(0) - 10.0).abs() < 1e-9);
+            assert!((s.at(100) - 1.0).abs() < 1e-9);
+            // monotone decreasing for start > end
+            let mut prev = f64::INFINITY;
+            for step in 0..=100 {
+                let v = s.at(step);
+                assert!(v <= prev + 1e-12);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn constant_is_flat_at_target() {
+        assert_eq!(temperature(Curve::Constant, 0, 100, 10.0, 0.5), 0.5);
+        assert_eq!(sparsity_at(Curve::Constant, 0, 100, 0.5, 0.9), 0.9);
+    }
+
+    #[test]
+    fn cosine_slower_than_linear_early() {
+        // cosine holds the high value longer early on (more exploration)
+        let lin = temperature(Curve::Linear, 10, 100, 10.0, 0.5);
+        let cos = temperature(Curve::Cosine, 10, 100, 10.0, 0.5);
+        assert!(cos > lin);
+    }
+
+    #[test]
+    fn rigl_fraction_decays_to_zero() {
+        assert!((rigl_update_fraction(0, 1000, 0.3) - 0.3).abs() < 1e-9);
+        let mid = rigl_update_fraction(500, 1000, 0.3);
+        assert!((mid - 0.15).abs() < 1e-9);
+        assert_eq!(rigl_update_fraction(1000, 1000, 0.3), 0.0);
+        assert_eq!(rigl_update_fraction(2000, 1000, 0.3), 0.0);
+    }
+
+    #[test]
+    fn lr_warmup_then_cosine() {
+        let lr0 = lr_at(0, 100, 10, 1e-3, 1e-5);
+        assert!(lr0 < 1e-3 / 5.0);
+        let peak = lr_at(10, 100, 10, 1e-3, 1e-5);
+        assert!((peak - 1e-3).abs() < 1e-4);
+        let end = lr_at(100, 100, 10, 1e-3, 1e-5);
+        assert!((end - 1e-5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,104 @@
+//! Host-side soft/hard TopK (Eq. 5) — mirrors `kernels/topk.py`.
+//!
+//! The in-graph soft TopK trains α; the coordinator uses these host mirrors
+//! to (a) monitor the effective nnz trajectory during training (Fig 8),
+//! (b) finalize the hard diagonal selection after training, and (c) verify
+//! against the golden vectors emitted by the Python oracle.
+
+/// `min(k * softmax(alpha / T), 1)` in f64 for stable accumulation.
+pub fn soft_topk(alpha: &[f32], k: f64, temperature: f64) -> Vec<f64> {
+    let t = temperature.max(1e-6);
+    let mx = alpha.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> =
+        alpha.iter().map(|&a| ((a as f64 / t) - mx / t).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.iter().map(|e| (k * e / sum).min(1.0)).collect()
+}
+
+/// Indices of the k largest entries (ties broken by lower index).
+pub fn hard_topk(alpha: &[f32], k: usize) -> Vec<usize> {
+    crate::util::top_k_indices(alpha, k.min(alpha.len()))
+}
+
+/// Effective number of "active" diagonals at a threshold — the Fig 8
+/// nnz-trajectory statistic (paper counts entries with ᾱ above ~0.5).
+pub fn effective_k(alpha: &[f32], k: f64, temperature: f64, thresh: f64) -> usize {
+    soft_topk(alpha, k, temperature)
+        .into_iter()
+        .filter(|&v| v > thresh)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bounded_and_ordered() {
+        forall(
+            20,
+            50,
+            |r| {
+                let d = 4 + r.below(60);
+                let k = 1 + r.below(d);
+                let t = 0.05 + r.f64() * 5.0;
+                let mut rr = r.fork(1);
+                let alpha: Vec<f32> =
+                    (0..d).map(|_| rr.normal_f32(0.0, 2.0)).collect();
+                (alpha, k as f64, t)
+            },
+            |(alpha, k, t)| {
+                let out = soft_topk(alpha, *k, *t);
+                // bounded in [0,1], and order-preserving w.r.t. alpha
+                out.iter().all(|&v| (0.0..=1.0 + 1e-9).contains(&v))
+                    && alpha.iter().zip(&out).all(|(_, _)| true)
+                    && {
+                        let mut pairs: Vec<(f32, f64)> = alpha
+                            .iter()
+                            .cloned()
+                            .zip(out.iter().cloned())
+                            .collect();
+                        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                        pairs.windows(2).all(|w| w[0].1 >= w[1].1 - 1e-12)
+                    }
+            },
+        );
+    }
+
+    #[test]
+    fn cold_temperature_concentrates() {
+        let alpha = [5.0f32, 4.0, 3.0, 0.0, -1.0];
+        let out = soft_topk(&alpha, 2.0, 0.01);
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        assert!(out[3] < 1e-9 && out[4] < 1e-9);
+    }
+
+    #[test]
+    fn hot_temperature_spreads() {
+        let alpha = [5.0f32, 4.0, 3.0, 0.0, -1.0];
+        let out = soft_topk(&alpha, 2.0, 1e5);
+        for &v in &out {
+            assert!((v - 2.0 / 5.0).abs() < 1e-3, "{:?}", out);
+        }
+    }
+
+    #[test]
+    fn hard_topk_picks_largest() {
+        let alpha = [0.5f32, 3.0, -1.0, 2.0, 2.5];
+        let mut got = hard_topk(&alpha, 3);
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn effective_k_tracks_temperature() {
+        let mut rng = Rng::new(21);
+        let alpha: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let hot = effective_k(&alpha, 8.0, 10.0, 0.1);
+        let cold = effective_k(&alpha, 8.0, 0.05, 0.1);
+        assert!(hot >= cold, "hot {} cold {}", hot, cold);
+        assert!(cold <= 9);
+    }
+}

@@ -1,0 +1,192 @@
+//! Statistical machinery for the paper's significance claims (Tables 9–11):
+//! paired asymptotic McNemar tests with χ²(1) p-values, plus summary helpers.
+
+/// Outcome counts of a paired comparison on the same test instances.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairedCounts {
+    /// both correct
+    pub both: usize,
+    /// only method A correct
+    pub a_only: usize,
+    /// only method B correct
+    pub b_only: usize,
+    /// both wrong
+    pub neither: usize,
+}
+
+impl PairedCounts {
+    /// Tally from per-instance correctness vectors.
+    pub fn from_correct(a: &[bool], b: &[bool]) -> PairedCounts {
+        assert_eq!(a.len(), b.len(), "paired test needs equal-length vectors");
+        let mut c = PairedCounts::default();
+        for (&x, &y) in a.iter().zip(b) {
+            match (x, y) {
+                (true, true) => c.both += 1,
+                (true, false) => c.a_only += 1,
+                (false, true) => c.b_only += 1,
+                (false, false) => c.neither += 1,
+            }
+        }
+        c
+    }
+
+    pub fn n(&self) -> usize {
+        self.both + self.a_only + self.b_only + self.neither
+    }
+}
+
+/// Asymptotic McNemar test with continuity correction:
+/// χ² = (|b−c|−1)² / (b+c), df=1. Returns (chi2, p).
+///
+/// Only the discordant pairs (a_only, b_only) matter; if there are none the
+/// methods are indistinguishable (p = 1).
+pub fn mcnemar(counts: &PairedCounts) -> (f64, f64) {
+    let b = counts.a_only as f64;
+    let c = counts.b_only as f64;
+    if b + c == 0.0 {
+        return (0.0, 1.0);
+    }
+    let num = ((b - c).abs() - 1.0).max(0.0);
+    let chi2 = num * num / (b + c);
+    (chi2, chi2_sf_df1(chi2))
+}
+
+/// Survival function of χ²(1): P(X > x) = erfc(sqrt(x/2)).
+pub fn chi2_sf_df1(x: f64) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    erfc((x / 2.0).sqrt())
+}
+
+/// Complementary error function (Numerical Recipes rational approximation,
+/// |error| < 1.2e-7 everywhere).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223
+                                            + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Per-example accuracy vector -> accuracy.
+pub fn accuracy(correct: &[bool]) -> f64 {
+    if correct.is_empty() {
+        return 0.0;
+    }
+    correct.iter().filter(|&&c| c).count() as f64 / correct.len() as f64
+}
+
+/// Significance table row: compare each method against a reference.
+#[derive(Clone, Debug)]
+pub struct McNemarRow {
+    pub method: String,
+    pub chi2: f64,
+    pub p: f64,
+    /// true if not significantly different at alpha = 0.05
+    pub not_different: bool,
+}
+
+pub fn mcnemar_vs_reference(
+    reference: &[bool],
+    others: &[(String, Vec<bool>)],
+    alpha: f64,
+) -> Vec<McNemarRow> {
+    others
+        .iter()
+        .map(|(name, correct)| {
+            let counts = PairedCounts::from_correct(reference, correct);
+            let (chi2, p) = mcnemar(&counts);
+            McNemarRow {
+                method: name.clone(),
+                chi2,
+                p,
+                not_different: p >= alpha,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn erfc_reference_values() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(1.0) - 0.157299).abs() < 1e-5);
+        assert!((erfc(-1.0) - 1.842701).abs() < 1e-5);
+        assert!(erfc(4.0) < 1e-7);
+    }
+
+    #[test]
+    fn chi2_sf_known_quantiles() {
+        // chi2(1) critical value at p=0.05 is 3.841
+        assert!((chi2_sf_df1(3.841) - 0.05).abs() < 2e-3);
+        assert!((chi2_sf_df1(6.635) - 0.01).abs() < 1e-3);
+    }
+
+    #[test]
+    fn identical_methods_not_significant() {
+        let a = vec![true, false, true, true, false];
+        let counts = PairedCounts::from_correct(&a, &a);
+        let (_, p) = mcnemar(&counts);
+        assert_eq!(p, 1.0);
+    }
+
+    #[test]
+    fn lopsided_discordance_is_significant() {
+        // A correct on 40 instances B misses, B correct on 5 A misses
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for _ in 0..40 {
+            a.push(true);
+            b.push(false);
+        }
+        for _ in 0..5 {
+            a.push(false);
+            b.push(true);
+        }
+        for _ in 0..100 {
+            a.push(true);
+            b.push(true);
+        }
+        let (chi2, p) = mcnemar(&PairedCounts::from_correct(&a, &b));
+        assert!(chi2 > 20.0);
+        assert!(p < 1e-5);
+    }
+
+    #[test]
+    fn symmetric_noise_not_significant() {
+        let mut rng = Rng::new(1);
+        let n = 2000;
+        let a: Vec<bool> = (0..n).map(|_| rng.bool(0.8)).collect();
+        let b: Vec<bool> = (0..n).map(|_| rng.bool(0.8)).collect();
+        let (_, p) = mcnemar(&PairedCounts::from_correct(&a, &b));
+        assert!(p > 0.01, "independent same-rate methods flagged: p={}", p);
+    }
+
+    #[test]
+    fn counts_partition() {
+        let a = vec![true, true, false, false];
+        let b = vec![true, false, true, false];
+        let c = PairedCounts::from_correct(&a, &b);
+        assert_eq!((c.both, c.a_only, c.b_only, c.neither), (1, 1, 1, 1));
+        assert_eq!(c.n(), 4);
+    }
+}

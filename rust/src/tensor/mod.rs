@@ -1,0 +1,301 @@
+//! Row-major f32 tensors + reference linear algebra on the host.
+//!
+//! The XLA artifacts do the heavy math; this module exists for everything
+//! the *coordinator* computes between steps — mask statistics, prune/grow
+//! scoring, BCSR conversion inputs, golden-vector checks — plus the rank
+//! computation backing the Apdx B expressivity lemma tests.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major tensor of up to rank 4 (rank tracked via `shape`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// Gaussian init with the given std (used for regrown weights etc).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32(0.0, std)).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D accessor.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape[1]
+    }
+
+    /// Count of non-zero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Fraction of zero entries.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.len().max(1) as f64
+    }
+
+    /// `y = x @ self.T` — self is [n_out, n_in], x is [b, n_in].
+    pub fn matmul_t(&self, x: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || x.rank() != 2 || x.cols() != self.cols() {
+            bail!("matmul_t: shapes {:?} x {:?}", x.shape, self.shape);
+        }
+        let (b, n_in) = (x.rows(), x.cols());
+        let n_out = self.rows();
+        let mut out = Tensor::zeros(&[b, n_out]);
+        for bi in 0..b {
+            let xr = &x.data[bi * n_in..(bi + 1) * n_in];
+            for oi in 0..n_out {
+                let wr = &self.data[oi * n_in..(oi + 1) * n_in];
+                let mut acc = 0.0f32;
+                for c in 0..n_in {
+                    acc += xr[c] * wr[c];
+                }
+                out.data[bi * n_out + oi] = acc;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Plain `a @ b` for 2-D tensors.
+    pub fn matmul(&self, b: &Tensor) -> Result<Tensor> {
+        if self.rank() != 2 || b.rank() != 2 || self.cols() != b.rows() {
+            bail!("matmul: shapes {:?} @ {:?}", self.shape, b.shape);
+        }
+        let (m, k, n) = (self.rows(), self.cols(), b.cols());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Elementwise product (same shape).
+    pub fn hadamard(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("hadamard: {:?} vs {:?}", self.shape, other.shape);
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a - b| over elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Numerical rank via Gaussian elimination with partial pivoting.
+    pub fn matrix_rank(&self, tol: f32) -> usize {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.rows(), self.cols());
+        let mut a: Vec<f64> = self.data.iter().map(|&x| x as f64).collect();
+        let mut rank = 0;
+        let mut row = 0;
+        for col in 0..n {
+            if row >= m {
+                break;
+            }
+            // pivot
+            let (mut piv, mut pmax) = (row, a[row * n + col].abs());
+            for r in row + 1..m {
+                let v = a[r * n + col].abs();
+                if v > pmax {
+                    piv = r;
+                    pmax = v;
+                }
+            }
+            if pmax <= tol as f64 {
+                continue;
+            }
+            if piv != row {
+                for c in 0..n {
+                    a.swap(row * n + c, piv * n + c);
+                }
+            }
+            let p = a[row * n + col];
+            for r in row + 1..m {
+                let f = a[r * n + col] / p;
+                if f != 0.0 {
+                    for c in col..n {
+                        a[r * n + c] -= f * a[row * n + c];
+                    }
+                }
+            }
+            rank += 1;
+            row += 1;
+        }
+        rank
+    }
+
+    /// Row-wise argmax for [b, c] tensors (predictions).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        let (b, c) = (self.rows(), self.cols());
+        (0..b)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_t_matches_manual() {
+        let w = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let x = Tensor::from_vec(&[1, 3], vec![1., 1., 1.]).unwrap();
+        let y = w.matmul_t(&x).unwrap();
+        assert_eq!(y.data, vec![6., 15.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            *eye.at2_mut(i, i) = 1.0;
+        }
+        let a = Tensor::from_vec(&[3, 3], (0..9).map(|x| x as f32).collect())
+            .unwrap();
+        assert_eq!(a.matmul(&eye).unwrap(), a);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[4, 7], 1.0, &mut rng);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn rank_of_products() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[6, 6], 1.0, &mut rng);
+        assert_eq!(a.matrix_rank(1e-5), 6);
+        // outer product has rank 1
+        let u = Tensor::randn(&[6, 1], 1.0, &mut rng);
+        let v = Tensor::randn(&[1, 6], 1.0, &mut rng);
+        assert_eq!(u.matmul(&v).unwrap().matrix_rank(1e-5), 1);
+    }
+
+    #[test]
+    fn sparsity_counts() {
+        let t = Tensor::from_vec(&[2, 2], vec![0., 1., 0., 2.]).unwrap();
+        assert_eq!(t.nnz(), 2);
+        assert!((t.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let t =
+            Tensor::from_vec(&[2, 3], vec![0., 5., 1., 9., 2., 3.]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0]).is_err());
+    }
+}

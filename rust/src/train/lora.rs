@@ -1,0 +1,275 @@
+//! LoRA-FA fine-tuning of a DynaDiag-trained model (Sec 4.3.1 / Fig 5).
+//!
+//! Each sparse layer's effective weight becomes `W_diag + B·A` with A frozen
+//! at random init (LoRA-FA freezes the down-projection; only B trains).
+//! No dedicated artifact is needed: the masked grad-probe returns
+//! d loss / d W_eff, and the chain rule gives dB = G·Aᵀ — the coordinator
+//! composes W_eff on the host each step, uploads it through the masked
+//! artifacts with all-ones masks, and Adam-updates B locally.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::RunConfig;
+use crate::runtime::HostTensor;
+use crate::sparsity::mask::Mask;
+use crate::tensor::Tensor;
+use crate::train::state::ParamStore;
+use crate::train::trainer::{DataSource, EvalResult, Trainer};
+use crate::util::rng::Rng;
+
+/// One layer's LoRA-FA state.
+pub struct LoraLayer {
+    pub name: String,
+    /// frozen sparse base (composed diagonal weight)
+    pub base: Tensor,
+    /// frozen down-projection A [r, n_in]
+    pub a: Tensor,
+    /// trained up-projection B [n_out, r]
+    pub b: Tensor,
+    m: Tensor,
+    v: Tensor,
+}
+
+impl LoraLayer {
+    fn w_eff(&self) -> Tensor {
+        let delta = self.b.matmul(&self.a).expect("B@A");
+        let mut w = self.base.clone();
+        for (x, d) in w.data.iter_mut().zip(&delta.data) {
+            *x += d;
+        }
+        w
+    }
+
+    /// Adam step on B from the dense grad of W_eff: dB = G · Aᵀ.
+    fn update_b(&mut self, g: &Tensor, lr: f32, t: usize) {
+        let db = g.matmul(&self.a.transpose2()).expect("G@At");
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let b1c = 1.0 - b1.powi(t as i32);
+        let b2c = 1.0 - b2.powi(t as i32);
+        for i in 0..self.b.data.len() {
+            self.m.data[i] = b1 * self.m.data[i] + (1.0 - b1) * db.data[i];
+            self.v.data[i] = b2 * self.v.data[i] + (1.0 - b2) * db.data[i] * db.data[i];
+            let mh = self.m.data[i] / b1c;
+            let vh = self.v.data[i] / b2c;
+            self.b.data[i] -= lr * mh / (vh.sqrt() + eps);
+        }
+    }
+
+    pub fn extra_params(&self) -> usize {
+        self.a.len() + self.b.len()
+    }
+
+    /// Spatial spread of the fine-tuned delta (Fig 5b): fraction of matrix
+    /// cells where |B·A| exceeds `thresh`·max — unstructured coverage.
+    pub fn delta_coverage(&self, thresh: f32) -> f64 {
+        let delta = self.b.matmul(&self.a).expect("B@A");
+        let mx = delta.abs_max();
+        if mx == 0.0 {
+            return 0.0;
+        }
+        delta.data.iter().filter(|x| x.abs() > thresh * mx).count() as f64
+            / delta.data.len() as f64
+    }
+}
+
+/// Result of a LoRA-FA fine-tune.
+pub struct LoraResult {
+    pub rank: usize,
+    pub eval: EvalResult,
+    pub extra_params: usize,
+    pub base_params: usize,
+    pub coverage: f64,
+}
+
+/// Fine-tune a trained DynaDiag model's sparse layers at LoRA rank `r`.
+///
+/// `trainer` must be a DynaDiag trainer whose `train()` already ran;
+/// `finalized` is the diagonal selection it produced.
+pub fn lora_finetune(
+    trainer: &Trainer,
+    finalized: &[(String, crate::sparsity::diagonal::DiagMatrix)],
+    store: &ParamStore,
+    rank: usize,
+    steps: usize,
+    lr: f32,
+) -> Result<LoraResult> {
+    let cfg: &RunConfig = &trainer.cfg;
+    let mut rng = Rng::new(cfg.seed ^ 0x10FA);
+    // frozen bases from the finalized diagonals
+    let mut layers: Vec<LoraLayer> = finalized
+        .iter()
+        .map(|(name, d)| {
+            let base = d.to_dense();
+            let (n_out, n_in) = (base.rows(), base.cols());
+            LoraLayer {
+                name: name.clone(),
+                a: Tensor::randn(&[rank, n_in], (1.0 / n_in as f32).sqrt(), &mut rng),
+                b: Tensor::zeros(&[n_out, rank]),
+                m: Tensor::zeros(&[n_out, rank]),
+                v: Tensor::zeros(&[n_out, rank]),
+                base,
+            }
+        })
+        .collect();
+
+    // masked artifacts with all-ones masks carry W_eff
+    let probe = trainer
+        .session
+        .executable(&format!("{}_masked_gradprobe", cfg.model))
+        .context("LoRA needs the masked grad-probe artifact")?;
+    let ones: BTreeMap<String, Mask> = layers
+        .iter()
+        .map(|l| (l.name.clone(), Mask::ones(l.base.rows(), l.base.cols())))
+        .collect();
+
+    // a masked-eval-compatible store: dynadiag store entries renamed
+    let mut masked_store = masked_store_from_dynadiag(store, finalized)?;
+
+    let shape_x = probe
+        .meta
+        .inputs
+        .iter()
+        .find(|s| s.name == "batch/x")
+        .unwrap()
+        .shape
+        .clone();
+
+    for t in 1..=steps {
+        // refresh W_eff in the masked store
+        for l in &layers {
+            masked_store.set(&format!("params/{}/w", l.name), tensor_to_host(&l.w_eff()));
+        }
+        let (x, y) = trainer.data.batch(&shape_x, t, None);
+        let mut inputs = Vec::new();
+        for spec in &probe.meta.inputs {
+            let tsr = match spec.name.as_str() {
+                "batch/x" => x.clone(),
+                "batch/y" => y.clone(),
+                name if name.starts_with("masks/") => {
+                    let layer = &name["masks/".len()..];
+                    HostTensor::f32(&spec.shape, ones[layer].to_f32())
+                }
+                name => masked_store.get(name)?.clone(),
+            };
+            inputs.push(tsr);
+        }
+        let outputs = probe.run(&inputs)?;
+        for (name, out) in probe.meta.outputs.iter().zip(&outputs) {
+            if let Some(layer_name) = name.strip_prefix("grad/") {
+                let g = Tensor::from_vec(out.shape(), out.as_f32()?.to_vec())?;
+                if let Some(l) = layers.iter_mut().find(|l| l.name == layer_name) {
+                    l.update_b(&g, lr, t);
+                }
+            }
+        }
+    }
+
+    // final W_eff for evaluation
+    for l in &layers {
+        masked_store.set(&format!("params/{}/w", l.name), tensor_to_host(&l.w_eff()));
+    }
+    let eval = evaluate_masked(trainer, &masked_store, &ones)?;
+    let extra: usize = layers.iter().map(|l| l.extra_params()).sum();
+    let coverage = crate::util::mean(
+        &layers.iter().map(|l| l.delta_coverage(0.05)).collect::<Vec<_>>(),
+    );
+    Ok(LoraResult {
+        rank,
+        eval,
+        extra_params: extra,
+        base_params: store.param_count(),
+        coverage,
+    })
+}
+
+fn tensor_to_host(t: &Tensor) -> HostTensor {
+    HostTensor::f32(&t.shape, t.data.clone())
+}
+
+/// Build a masked-artifact store from a dynadiag store + finalized diagonals:
+/// shared params copy over by name; sparse layers get w := composed diagonal.
+pub fn masked_store_from_dynadiag(
+    store: &ParamStore,
+    finalized: &[(String, crate::sparsity::diagonal::DiagMatrix)],
+) -> Result<ParamStore> {
+    let mut out = ParamStore::default();
+    let diag_names: std::collections::HashSet<&str> =
+        finalized.iter().map(|(n, _)| n.as_str()).collect();
+    for (name, t) in &store.entries {
+        if !name.starts_with("params/") {
+            continue;
+        }
+        let inner = &name["params/".len()..];
+        // skip dynadiag-only leaves of sparse layers (v, alpha)
+        let is_sparse_leaf = diag_names.iter().any(|d| {
+            inner.starts_with(&format!("{}/", d))
+        });
+        if is_sparse_leaf && (inner.ends_with("/v") || inner.ends_with("/alpha")) {
+            continue;
+        }
+        out.set(name, t.clone());
+    }
+    for (name, d) in finalized {
+        out.set(&format!("params/{}/w", name), tensor_to_host(&d.to_dense()));
+    }
+    Ok(out)
+}
+
+/// Evaluate through the masked eval artifact with an explicit store/masks.
+pub fn evaluate_masked(
+    trainer: &Trainer,
+    store: &ParamStore,
+    masks: &BTreeMap<String, Mask>,
+) -> Result<EvalResult> {
+    let eval = trainer
+        .session
+        .executable(&format!("{}_masked_eval", trainer.cfg.model))?;
+    let shape_x = eval
+        .meta
+        .inputs
+        .iter()
+        .find(|s| s.name == "batch/x")
+        .unwrap()
+        .shape
+        .clone();
+    let is_lm = matches!(trainer.data, DataSource::Lm(_));
+    let mut correct = Vec::new();
+    let mut losses = Vec::new();
+    for bidx in 0..trainer.cfg.eval_batches {
+        let (x, y) = trainer.data.batch(&shape_x, 0, Some(bidx));
+        let mut inputs = Vec::new();
+        for spec in &eval.meta.inputs {
+            let t = match spec.name.as_str() {
+                "batch/x" => x.clone(),
+                "batch/y" => y.clone(),
+                name if name.starts_with("masks/") => {
+                    let layer = &name["masks/".len()..];
+                    HostTensor::f32(&spec.shape, masks[layer].to_f32())
+                }
+                name => store.get(name)?.clone(),
+            };
+            inputs.push(t);
+        }
+        let outputs = eval.run(&inputs)?;
+        losses.push(outputs[0].scalar()?);
+        if is_lm {
+            let seq = shape_x[1];
+            for &c in outputs[2].as_i32()? {
+                correct.push((c as usize) * 4 > seq);
+            }
+        } else {
+            for (p, t) in outputs[2].as_i32()?.iter().zip(y.as_i32()?) {
+                correct.push(p == t);
+            }
+        }
+    }
+    let loss = crate::util::mean(&losses);
+    Ok(EvalResult {
+        loss,
+        accuracy: crate::stats::accuracy(&correct),
+        ppl: loss.exp(),
+        correct,
+    })
+}

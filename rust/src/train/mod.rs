@@ -1,0 +1,9 @@
+//! L3 coordinator: the training loop over AOT artifacts, evaluation,
+//! checkpoints, LoRA-FA fine-tuning, and the experiment-matrix runner.
+
+pub mod lora;
+pub mod state;
+pub mod trainer;
+
+pub use state::ParamStore;
+pub use trainer::{DataSource, EvalResult, StepMetric, TrainResult, Trainer};

@@ -1,0 +1,294 @@
+//! ParamStore — the host-side mirror of an artifact's parameter state.
+//!
+//! Holds every `params/` / `opt_m/` / `opt_v/` buffer between XLA steps and
+//! routes them into/out of the executable by manifest name. Initialization
+//! matches the L2 conventions (Xavier for matrices, 0.02·N(0,1) for
+//! embeddings, ones for LN scale, zeros for biases/moments, 0.01·N(0,1)
+//! for DynaDiag α).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ArtifactMeta, Dtype, HostTensor, IoSpec};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Named host tensors for one model.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    pub entries: BTreeMap<String, HostTensor>,
+}
+
+fn init_for(spec: &IoSpec, rng: &mut Rng) -> HostTensor {
+    let n: usize = spec.shape.iter().product();
+    let name = &spec.name;
+    if spec.dtype == Dtype::I32 {
+        return HostTensor::i32(&spec.shape, vec![0; n]);
+    }
+    let data: Vec<f32> = if name.starts_with("opt_m/") || name.starts_with("opt_v/") {
+        vec![0.0; n]
+    } else if name.ends_with("/g") {
+        vec![1.0; n] // layernorm scale
+    } else if name.ends_with("/b") {
+        vec![0.0; n]
+    } else if name.ends_with("/alpha") {
+        // near-unit variance: the soft TopK is already selective at T ≈ 1,
+        // so selected diagonals carry ᾱ ≈ 1 (not k/D) from step 0 — with a
+        // tiny-variance init the min(k·softmax, 1) weights uniformly crush
+        // every sparse layer by k/D and the model cannot train (§Perf log)
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    } else if name.contains("pos") || name.contains("tok_embed") {
+        (0..n).map(|_| rng.normal_f32(0.0, 0.02)).collect()
+    } else if spec.shape.len() >= 2 {
+        let fan_out = spec.shape[0] as f32;
+        let fan_in = spec.shape[spec.shape.len() - 1] as f32;
+        let std = (2.0 / (fan_in + fan_out)).sqrt();
+        (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+    } else {
+        vec![0.0; n]
+    };
+    HostTensor::f32(&spec.shape, data)
+}
+
+impl ParamStore {
+    /// Initialize all stateful inputs (params + opt moments) of an artifact.
+    pub fn init(meta: &ArtifactMeta, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed ^ 0x1417);
+        let mut entries = BTreeMap::new();
+        for spec in &meta.inputs {
+            if spec.name.starts_with("params/")
+                || spec.name.starts_with("opt_m/")
+                || spec.name.starts_with("opt_v/")
+            {
+                entries.insert(spec.name.clone(), init_for(spec, &mut rng));
+            }
+        }
+        ParamStore { entries }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("param store has no '{}'", name))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut HostTensor> {
+        self.entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("param store has no '{}'", name))
+    }
+
+    pub fn set(&mut self, name: &str, t: HostTensor) {
+        self.entries.insert(name.to_string(), t);
+    }
+
+    /// View a 2-D f32 param as a Tensor (copy).
+    pub fn tensor2(&self, name: &str) -> Result<Tensor> {
+        let t = self.get(name)?;
+        Ok(Tensor::from_vec(t.shape(), t.as_f32()?.to_vec())?)
+    }
+
+    /// Absorb the outputs of a train step back into the store.
+    pub fn absorb(&mut self, meta: &ArtifactMeta, outputs: &[HostTensor]) {
+        for (name, out) in meta.outputs.iter().zip(outputs) {
+            if self.entries.contains_key(name) {
+                self.entries.insert(name.clone(), out.clone());
+            }
+        }
+    }
+
+    /// Zero the optimizer moments at specific coordinates of a layer
+    /// (used when DST regrows connections — fresh moments for fresh links).
+    pub fn zero_moments_at(&mut self, layer_w: &str, coords: &[(usize, usize)]) -> Result<()> {
+        let cols = {
+            let w = self.get(layer_w)?;
+            w.shape()[1]
+        };
+        for prefix in ["opt_m/", "opt_v/"] {
+            let name = format!("{}{}", prefix, &layer_w["params/".len()..]);
+            if let Ok(t) = self.get_mut(&name) {
+                let data = t.as_f32_mut()?;
+                for &(i, j) in coords {
+                    data[i * cols + j] = 0.0;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total parameter count (params/ section only).
+    pub fn param_count(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|(k, _)| k.starts_with("params/"))
+            .map(|(_, v)| v.len())
+            .sum()
+    }
+
+    // -- checkpointing -------------------------------------------------------
+
+    /// Serialize to a simple binary format:
+    /// [n_entries u32] then per entry: name_len u32, name bytes, dtype u8,
+    /// rank u32, dims u64*, data bytes.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend((self.entries.len() as u32).to_le_bytes());
+        for (name, t) in &self.entries {
+            buf.extend((name.len() as u32).to_le_bytes());
+            buf.extend(name.as_bytes());
+            match t {
+                HostTensor::F32 { shape, data } => {
+                    buf.push(0u8);
+                    buf.extend((shape.len() as u32).to_le_bytes());
+                    for &d in shape {
+                        buf.extend((d as u64).to_le_bytes());
+                    }
+                    for &x in data {
+                        buf.extend(x.to_le_bytes());
+                    }
+                }
+                HostTensor::I32 { shape, data } => {
+                    buf.push(1u8);
+                    buf.extend((shape.len() as u32).to_le_bytes());
+                    for &d in shape {
+                        buf.extend((d as u64).to_le_bytes());
+                    }
+                    for &x in data {
+                        buf.extend(x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        std::fs::write(path, buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ParamStore> {
+        let buf = std::fs::read(path)?;
+        let mut pos = 0usize;
+        let rd_u32 = |b: &[u8], p: &mut usize| -> u32 {
+            let v = u32::from_le_bytes(b[*p..*p + 4].try_into().unwrap());
+            *p += 4;
+            v
+        };
+        let rd_u64 = |b: &[u8], p: &mut usize| -> u64 {
+            let v = u64::from_le_bytes(b[*p..*p + 8].try_into().unwrap());
+            *p += 8;
+            v
+        };
+        let n = rd_u32(&buf, &mut pos) as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = rd_u32(&buf, &mut pos) as usize;
+            let name = String::from_utf8(buf[pos..pos + name_len].to_vec())?;
+            pos += name_len;
+            let dtype = buf[pos];
+            pos += 1;
+            let rank = rd_u32(&buf, &mut pos) as usize;
+            let shape: Vec<usize> =
+                (0..rank).map(|_| rd_u64(&buf, &mut pos) as usize).collect();
+            let count: usize = shape.iter().product();
+            let t = if dtype == 0 {
+                let mut data = Vec::with_capacity(count);
+                for _ in 0..count {
+                    data.push(f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()));
+                    pos += 4;
+                }
+                HostTensor::F32 { shape, data }
+            } else {
+                let mut data = Vec::with_capacity(count);
+                for _ in 0..count {
+                    data.push(i32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()));
+                    pos += 4;
+                }
+                HostTensor::I32 { shape, data }
+            };
+            entries.insert(name, t);
+        }
+        Ok(ParamStore { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn fake_meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            inputs: vec![
+                IoSpec { name: "params/blocks/0/fc1/w".into(), shape: vec![4, 8], dtype: Dtype::F32 },
+                IoSpec { name: "params/blocks/0/fc1/b".into(), shape: vec![4], dtype: Dtype::F32 },
+                IoSpec { name: "params/ln_f/g".into(), shape: vec![8], dtype: Dtype::F32 },
+                IoSpec { name: "params/blocks/0/fc1/alpha".into(), shape: vec![8], dtype: Dtype::F32 },
+                IoSpec { name: "opt_m/blocks/0/fc1/w".into(), shape: vec![4, 8], dtype: Dtype::F32 },
+                IoSpec { name: "batch/x".into(), shape: vec![2, 8], dtype: Dtype::F32 },
+            ],
+            outputs: vec!["params/blocks/0/fc1/w".into(), "loss".into()],
+            meta: Json::Null,
+        }
+    }
+
+    #[test]
+    fn init_conventions() {
+        let store = ParamStore::init(&fake_meta(), 1);
+        assert_eq!(store.entries.len(), 5, "batch must not be stored");
+        let w = store.get("params/blocks/0/fc1/w").unwrap().as_f32().unwrap();
+        assert!(w.iter().any(|&x| x != 0.0));
+        let b = store.get("params/blocks/0/fc1/b").unwrap().as_f32().unwrap();
+        assert!(b.iter().all(|&x| x == 0.0));
+        let g = store.get("params/ln_f/g").unwrap().as_f32().unwrap();
+        assert!(g.iter().all(|&x| x == 1.0));
+        let m = store.get("opt_m/blocks/0/fc1/w").unwrap().as_f32().unwrap();
+        assert!(m.iter().all(|&x| x == 0.0));
+        let a = store.get("params/blocks/0/fc1/alpha").unwrap().as_f32().unwrap();
+        // near-unit-variance init (see init_for comment)
+        assert!(a.iter().any(|&x| x.abs() > 0.3));
+        assert!(a.iter().all(|&x| x.abs() < 6.0));
+    }
+
+    #[test]
+    fn absorb_routes_by_name() {
+        let meta = fake_meta();
+        let mut store = ParamStore::init(&meta, 1);
+        let new_w = HostTensor::f32(&[4, 8], vec![7.0; 32]);
+        store.absorb(&meta, &[new_w, HostTensor::scalar_f32(1.0)]);
+        assert_eq!(store.get("params/blocks/0/fc1/w").unwrap().as_f32().unwrap()[0], 7.0);
+    }
+
+    #[test]
+    fn zero_moments() {
+        let meta = fake_meta();
+        let mut store = ParamStore::init(&meta, 1);
+        store
+            .get_mut("opt_m/blocks/0/fc1/w")
+            .unwrap()
+            .as_f32_mut()
+            .unwrap()
+            .fill(5.0);
+        store
+            .zero_moments_at("params/blocks/0/fc1/w", &[(1, 2), (3, 7)])
+            .unwrap();
+        let m = store.get("opt_m/blocks/0/fc1/w").unwrap().as_f32().unwrap();
+        assert_eq!(m[1 * 8 + 2], 0.0);
+        assert_eq!(m[3 * 8 + 7], 0.0);
+        assert_eq!(m[0], 5.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let store = ParamStore::init(&fake_meta(), 3);
+        let path = std::env::temp_dir().join("dynadiag_ckpt_test.bin");
+        store.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(store.entries.len(), loaded.entries.len());
+        for (k, v) in &store.entries {
+            let l = loaded.get(k).unwrap();
+            assert_eq!(v.shape(), l.shape());
+            assert_eq!(v.as_f32().unwrap(), l.as_f32().unwrap());
+        }
+    }
+}

@@ -1,0 +1,513 @@
+//! The training loop: one XLA train-step artifact driven step-by-step, with
+//! all Dynamic-Sparse-Training decisions made here between steps.
+//!
+//! Per step (Fig 3's loop, L3 view):
+//!   1. compute schedules (lr, and for DynaDiag: T, kvec, ℓ1),
+//!   2. build the input list by manifest name (params/opt from the
+//!      [`ParamStore`], masks from the DST method, batch from [`DataSource`]),
+//!   3. execute; absorb params'/opt' back into the store,
+//!   4. at topology-update steps (masked methods): optionally run the
+//!      grad-probe artifact, then prune-and-regrow each layer's mask and
+//!      re-initialize regrown weights/moments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{MethodKind, RunConfig};
+use crate::data::corpus::Corpus;
+use crate::data::VisionDataset;
+use crate::dst::dynadiag::DynaDiagController;
+use crate::dst::{self, DstMethod, GrowAction};
+use std::rc::Rc;
+
+use crate::runtime::{Executable, HostTensor, Session};
+use crate::sparsity::diagonal::DiagMatrix;
+use crate::sparsity::distribution::{allocate, LayerShape};
+use crate::sparsity::mask::Mask;
+use crate::sparsity::schedule::{lr_at, rigl_update_fraction};
+use crate::tensor::Tensor;
+use crate::train::state::ParamStore;
+use crate::util::rng::Rng;
+
+/// Synthetic data source matching a model family.
+pub enum DataSource {
+    Vision(VisionDataset),
+    Lm(Corpus),
+}
+
+impl DataSource {
+    pub fn for_run(cfg: &RunConfig) -> Result<DataSource> {
+        let name = if cfg.dataset.is_empty() {
+            RunConfig::infer_dataset(&cfg.model).to_string()
+        } else {
+            cfg.dataset.clone()
+        };
+        match name.as_str() {
+            "synth-wiki" => Ok(DataSource::Lm(Corpus::synthetic(1_000_000, cfg.seed))),
+            other => VisionDataset::by_name(other, cfg.seed)
+                .map(DataSource::Vision)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", other)),
+        }
+    }
+
+    pub fn batch(&self, shape_x: &[usize], step: usize, eval_idx: Option<usize>) -> (HostTensor, HostTensor) {
+        match self {
+            DataSource::Vision(ds) => {
+                let b = shape_x[0];
+                let vb = match eval_idx {
+                    Some(i) => ds.eval_batch(b, i),
+                    None => ds.train_batch(b, step),
+                };
+                (
+                    HostTensor::f32(shape_x, vb.x),
+                    HostTensor::i32(&[b], vb.y),
+                )
+            }
+            DataSource::Lm(c) => {
+                let (b, s) = (shape_x[0], shape_x[1]);
+                let lb = match eval_idx {
+                    Some(i) => c.valid_batch(b, s, i),
+                    None => c.train_batch(b, s, step),
+                };
+                (
+                    HostTensor::i32(shape_x, lb.x),
+                    HostTensor::i32(shape_x, lb.y),
+                )
+            }
+        }
+    }
+}
+
+/// One recorded step.
+#[derive(Clone, Debug)]
+pub struct StepMetric {
+    pub step: usize,
+    pub loss: f64,
+    pub acc: f64,
+    pub lr: f64,
+    pub temperature: f64,
+    /// effective active diagonals of layer 0 (DynaDiag only; Fig 8)
+    pub effective_k: Option<usize>,
+}
+
+/// Aggregated evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    /// exp(loss) — perplexity for LM runs
+    pub ppl: f64,
+    /// per-example correctness, paired across methods by fixed eval seeds
+    pub correct: Vec<bool>,
+}
+
+/// Outcome of one training run (one experiment cell).
+pub struct TrainResult {
+    pub cfg: RunConfig,
+    pub history: Vec<StepMetric>,
+    pub final_eval: EvalResult,
+    /// final masks (masked methods; DynaDiag: finalized hard selection)
+    pub masks: BTreeMap<String, Mask>,
+    /// DynaDiag finalized diagonal matrices per layer
+    pub finalized: Vec<(String, DiagMatrix)>,
+    pub train_seconds: f64,
+    pub store: ParamStore,
+}
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub session: Rc<Session>,
+    train_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    probe_exe: Option<Rc<Executable>>,
+    pub store: ParamStore,
+    pub masks: BTreeMap<String, Mask>,
+    method: Option<Box<dyn DstMethod>>,
+    pub controller: Option<DynaDiagController>,
+    pub data: DataSource,
+    pub sparse_layers: Vec<(String, usize, usize)>,
+    layer_sparsity: Vec<f64>,
+    rng: Rng,
+    is_lm: bool,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig) -> Result<Trainer> {
+        let session = Session::open(&cfg.artifacts_dir)?;
+        Trainer::with_session(cfg, session)
+    }
+
+    /// Share one PJRT client + compile cache across runs (the experiment
+    /// matrix compiles each artifact once).
+    pub fn with_session(mut cfg: RunConfig, session: Rc<Session>) -> Result<Trainer> {
+        let lm_model = cfg.model.starts_with("gpt");
+        let lm_data = cfg.dataset == "synth-wiki";
+        if cfg.dataset.is_empty() || lm_model != lm_data {
+            cfg.dataset = RunConfig::infer_dataset(&cfg.model).to_string();
+        }
+        let param = if cfg.method.is_dynadiag() { "dynadiag" } else { "masked" };
+        let train_name = format!("{}_{}_train", cfg.model, param);
+        let eval_name = format!("{}_{}_eval", cfg.model, param);
+        let train_exe = session
+            .executable(&train_name)
+            .with_context(|| format!("loading {}", train_name))?;
+        let eval_exe = session.executable(&eval_name)?;
+
+        let sparse_layers = train_exe.meta.sparse_layers()?;
+        let shapes: Vec<LayerShape> = sparse_layers
+            .iter()
+            .map(|&(_, o, i)| LayerShape { n_out: o, n_in: i })
+            .collect();
+        // masked methods can go down to a handful of weights per layer;
+        // DynaDiag's controller keeps its own one-whole-diagonal floor
+        // (the paper's §5 caveat at extreme sparsity).
+        let max_s = 1.0
+            - 4.0 / shapes.iter().map(|l| l.n_in * l.n_out).max().unwrap_or(16) as f64;
+        let layer_sparsity = allocate(cfg.distribution, &shapes, cfg.sparsity, max_s);
+
+        let mut rng = Rng::new(cfg.seed);
+        let mut method = dst::build_method(&cfg);
+        let mut masks = BTreeMap::new();
+        if !cfg.method.is_dynadiag() {
+            for (idx, (name, o, i)) in sparse_layers.iter().enumerate() {
+                let m = match &mut method {
+                    Some(m) => m.init_mask(*o, *i, layer_sparsity[idx], &mut rng),
+                    // Dense / Wanda: train dense
+                    None => Mask::ones(*o, *i),
+                };
+                masks.insert(name.clone(), m);
+            }
+        }
+        let probe_exe = match &method {
+            Some(m) if m.needs_grads() => {
+                Some(session.executable(&format!("{}_masked_gradprobe", cfg.model))?)
+            }
+            _ => None,
+        };
+        let controller = if cfg.method.is_dynadiag() {
+            Some(DynaDiagController::new(&cfg, sparse_layers.clone()))
+        } else {
+            None
+        };
+        let store = ParamStore::init(&train_exe.meta, cfg.seed);
+        let data = DataSource::for_run(&cfg)?;
+        let is_lm = matches!(data, DataSource::Lm(_));
+        Ok(Trainer {
+            cfg,
+            session,
+            train_exe,
+            eval_exe,
+            probe_exe,
+            store,
+            masks,
+            method,
+            controller,
+            data,
+            sparse_layers,
+            layer_sparsity,
+            rng,
+            is_lm,
+        })
+    }
+
+    fn batch_shape(meta: &crate::runtime::ArtifactMeta) -> Result<Vec<usize>> {
+        Ok(meta
+            .inputs
+            .iter()
+            .find(|s| s.name == "batch/x")
+            .ok_or_else(|| anyhow::anyhow!("artifact has no batch/x"))?
+            .shape
+            .clone())
+    }
+
+    /// Assemble the train-step input list for `step`.
+    fn build_inputs(&self, step: usize, x: &HostTensor, y: &HostTensor) -> Result<Vec<HostTensor>> {
+        let lr = lr_at(step, self.cfg.steps, self.cfg.warmup, self.cfg.lr, self.cfg.lr_min);
+        let mut inputs = Vec::with_capacity(self.train_exe.meta.inputs.len());
+        for spec in &self.train_exe.meta.inputs {
+            let t = match spec.name.as_str() {
+                "batch/x" => x.clone(),
+                "batch/y" => y.clone(),
+                "scalar/step" => HostTensor::scalar_f32((step + 1) as f32),
+                "scalar/lr" => HostTensor::scalar_f32(lr as f32),
+                "scalar/wd" => HostTensor::scalar_f32(self.cfg.weight_decay as f32),
+                "scalar/temp" => HostTensor::scalar_f32(
+                    self.controller.as_ref().unwrap().temperature(step) as f32,
+                ),
+                "scalar/l1" => HostTensor::scalar_f32(
+                    self.controller.as_ref().unwrap().l1_coeff() as f32,
+                ),
+                "kvec" => {
+                    let kv = self.controller.as_ref().unwrap().kvec(step);
+                    HostTensor::f32(&[kv.len()], kv)
+                }
+                name if name.starts_with("masks/") => {
+                    let layer = &name["masks/".len()..];
+                    let m = self
+                        .masks
+                        .get(layer)
+                        .ok_or_else(|| anyhow::anyhow!("no mask for layer {}", layer))?;
+                    HostTensor::f32(&spec.shape, m.to_f32())
+                }
+                name => self.store.get(name)?.clone(),
+            };
+            inputs.push(t);
+        }
+        Ok(inputs)
+    }
+
+    /// Run the grad-probe artifact, returning dense grads per sparse layer.
+    fn grad_probe(&self, step: usize) -> Result<BTreeMap<String, Tensor>> {
+        let probe = self.probe_exe.as_ref().expect("probe not loaded");
+        let shape_x = Self::batch_shape(&probe.meta)?;
+        let (x, y) = self.data.batch(&shape_x, step, None);
+        let mut inputs = Vec::new();
+        for spec in &probe.meta.inputs {
+            let t = match spec.name.as_str() {
+                "batch/x" => x.clone(),
+                "batch/y" => y.clone(),
+                name if name.starts_with("masks/") => {
+                    let layer = &name["masks/".len()..];
+                    HostTensor::f32(&spec.shape, self.masks[layer].to_f32())
+                }
+                name => self.store.get(name)?.clone(),
+            };
+            inputs.push(t);
+        }
+        let outputs = probe.run(&inputs)?;
+        let mut grads = BTreeMap::new();
+        for (name, out) in probe.meta.outputs.iter().zip(&outputs) {
+            if let Some(layer) = name.strip_prefix("grad/") {
+                let shape = out.shape().to_vec();
+                grads.insert(
+                    layer.to_string(),
+                    Tensor::from_vec(&shape, out.as_f32()?.to_vec())?,
+                );
+            }
+        }
+        Ok(grads)
+    }
+
+    /// One topology update across all layers (masked methods).
+    fn update_topology(&mut self, step: usize) -> Result<()> {
+        let grads = match &self.method {
+            Some(m) if m.needs_grads() => Some(self.grad_probe(step)?),
+            _ => None,
+        };
+        let fraction = rigl_update_fraction(
+            step,
+            (self.cfg.update_until * self.cfg.steps as f64) as usize,
+            self.cfg.update_frac,
+        );
+        if fraction <= 0.0 {
+            return Ok(());
+        }
+        let layers = self.sparse_layers.clone();
+        for (name, _, _) in &layers {
+            let w_name = format!("params/{}/w", name);
+            let w = self.store.tensor2(&w_name)?;
+            let mask = self.masks[name].clone();
+            let g = grads.as_ref().and_then(|g| g.get(name));
+            let method = self.method.as_mut().unwrap();
+            if method.is_static() {
+                continue;
+            }
+            let up = method.update_layer(&mask, &w, g, fraction, &mut self.rng);
+            debug_assert_eq!(up.mask.nnz(), mask.nnz(), "budget must be conserved");
+            // re-init regrown weights + their optimizer moments
+            if !up.grown.is_empty() {
+                let cols = mask.cols;
+                {
+                    let wt = self.store.get_mut(&w_name)?.as_f32_mut()?;
+                    for &(i, j) in &up.grown {
+                        wt[i * cols + j] = match up.grow_action {
+                            GrowAction::Zero => 0.0,
+                            GrowAction::RandomSmall => self.rng.normal_f32(0.0, 0.01),
+                            GrowAction::KeepValue => wt[i * cols + j],
+                        };
+                    }
+                }
+                self.store.zero_moments_at(&w_name, &up.grown)?;
+            }
+            self.masks.insert(name.clone(), up.mask);
+        }
+        Ok(())
+    }
+
+    /// Full training run.
+    pub fn train(&mut self) -> Result<TrainResult> {
+        let t0 = std::time::Instant::now();
+        let shape_x = Self::batch_shape(&self.train_exe.meta)?;
+        let mut history = Vec::with_capacity(self.cfg.steps);
+        let loss_idx = self.train_exe.meta.output_index("loss")?;
+        let acc_idx = self.train_exe.meta.output_index("acc")?;
+
+        for step in 0..self.cfg.steps {
+            let (x, y) = self.data.batch(&shape_x, step, None);
+            let inputs = self.build_inputs(step, &x, &y)?;
+            let outputs = self.train_exe.run(&inputs)?;
+            let meta = self.train_exe.meta.clone();
+            self.store.absorb(&meta, &outputs);
+            let loss = outputs[loss_idx].scalar()?;
+            if !loss.is_finite() {
+                bail!("loss diverged at step {} ({})", step, loss);
+            }
+            let temperature = self
+                .controller
+                .as_ref()
+                .map(|c| c.temperature(step))
+                .unwrap_or(0.0);
+            let effective_k = self.controller.as_ref().and_then(|c| {
+                if step % 10 == 0 || step + 1 == self.cfg.steps {
+                    let (name, _, _) = &self.sparse_layers[0];
+                    let alpha = self
+                        .store
+                        .get(&format!("params/{}/alpha", name))
+                        .ok()?
+                        .as_f32()
+                        .ok()?;
+                    Some(c.effective_diagonals(0, alpha, step))
+                } else {
+                    None
+                }
+            });
+            history.push(StepMetric {
+                step,
+                loss,
+                acc: outputs[acc_idx].scalar()?,
+                lr: lr_at(step, self.cfg.steps, self.cfg.warmup, self.cfg.lr, self.cfg.lr_min),
+                temperature,
+                effective_k,
+            });
+
+            if self.method.is_some() && dst::is_update_step(&self.cfg, step) {
+                self.update_topology(step)?;
+            }
+            if crate::util::log_enabled(3) && step % 50 == 0 {
+                crate::debug!(
+                    "{} {} S={:.2} step {}/{} loss {:.4}",
+                    self.cfg.model,
+                    self.cfg.method.name(),
+                    self.cfg.sparsity,
+                    step,
+                    self.cfg.steps,
+                    loss
+                );
+            }
+        }
+
+        // Wanda: one-shot prune after dense training
+        if self.cfg.method == MethodKind::Wanda {
+            for (idx, (name, _, _)) in self.sparse_layers.clone().iter().enumerate() {
+                let w = self.store.tensor2(&format!("params/{}/w", name))?;
+                let m = crate::dst::wanda::wanda_prune(&w, None, self.layer_sparsity[idx]);
+                self.masks.insert(name.clone(), m);
+            }
+        }
+
+        // DynaDiag finalization: hard TopK -> diagonal matrices + masks
+        let mut finalized = Vec::new();
+        let mut masks = self.masks.clone();
+        if let Some(c) = &self.controller {
+            for (l, (name, _, _)) in self.sparse_layers.iter().enumerate() {
+                let alpha = self
+                    .store
+                    .get(&format!("params/{}/alpha", name))?
+                    .as_f32()?
+                    .to_vec();
+                let v = self.store.tensor2(&format!("params/{}/v", name))?;
+                let d = c.finalize_layer(l, &alpha, &v);
+                masks.insert(name.clone(), d.to_mask());
+                finalized.push((name.clone(), d));
+            }
+        }
+
+        // DynaDiag is evaluated as the paper evaluates it: the *finalized*
+        // hard top-K model (soft-TopK eval at very low T degenerates to a
+        // single surviving diagonal per layer — see EXPERIMENTS.md §Perf).
+        let final_eval = if self.controller.is_some() {
+            let store = crate::train::lora::masked_store_from_dynadiag(
+                &self.store,
+                &finalized,
+            )?;
+            let ones: BTreeMap<String, Mask> = finalized
+                .iter()
+                .map(|(n, d)| (n.clone(), Mask::ones(d.n_out, d.n_in)))
+                .collect();
+            crate::train::lora::evaluate_masked(self, &store, &ones)?
+        } else {
+            self.evaluate()?
+        };
+        Ok(TrainResult {
+            cfg: self.cfg.clone(),
+            history,
+            final_eval,
+            masks,
+            finalized,
+            train_seconds: t0.elapsed().as_secs_f64(),
+            store: self.store.clone(),
+        })
+    }
+
+    /// Evaluate on the held-out stream (fixed batches -> paired across runs).
+    pub fn evaluate(&self) -> Result<EvalResult> {
+        self.evaluate_with(&self.masks, &self.store)
+    }
+
+    /// Evaluation with explicit masks/store (Wanda, LoRA, ablations).
+    pub fn evaluate_with(&self, masks: &BTreeMap<String, Mask>, store: &ParamStore) -> Result<EvalResult> {
+        let shape_x = Self::batch_shape(&self.eval_exe.meta)?;
+        let mut correct = Vec::new();
+        let mut losses = Vec::new();
+        for b in 0..self.cfg.eval_batches {
+            let (x, y) = self.data.batch(&shape_x, 0, Some(b));
+            let mut inputs = Vec::new();
+            for spec in &self.eval_exe.meta.inputs {
+                let t = match spec.name.as_str() {
+                    "batch/x" => x.clone(),
+                    "batch/y" => y.clone(),
+                    "scalar/temp" => HostTensor::scalar_f32(
+                        self.controller
+                            .as_ref()
+                            .map(|c| c.temperature(self.cfg.steps))
+                            .unwrap_or(0.05) as f32,
+                    ),
+                    "kvec" => {
+                        let kv = self.controller.as_ref().unwrap().kvec(self.cfg.steps);
+                        HostTensor::f32(&[kv.len()], kv)
+                    }
+                    name if name.starts_with("masks/") => {
+                        let layer = &name["masks/".len()..];
+                        HostTensor::f32(&spec.shape, masks[layer].to_f32())
+                    }
+                    name => store.get(name)?.clone(),
+                };
+                inputs.push(t);
+            }
+            let outputs = self.eval_exe.run(&inputs)?;
+            losses.push(outputs[0].scalar()?);
+            if self.is_lm {
+                // outputs: loss, loss_vec, correct token counts
+                let seq = shape_x[1];
+                for &c in outputs[2].as_i32()? {
+                    // "correct" example := token accuracy above the byte-LM
+                    // guess floor; fixed eval batches keep this paired
+                    correct.push((c as usize) * 4 > seq);
+                }
+            } else {
+                let preds = outputs[2].as_i32()?;
+                for (p, t) in preds.iter().zip(y.as_i32()?) {
+                    correct.push(p == t);
+                }
+            }
+        }
+        let loss = crate::util::mean(&losses);
+        Ok(EvalResult {
+            loss,
+            accuracy: crate::stats::accuracy(&correct),
+            ppl: loss.exp(),
+            correct,
+        })
+    }
+}

@@ -1,0 +1,97 @@
+//! Substrate utilities: PRNG, JSON, timing, logging, property testing.
+//!
+//! Everything here is hand-rolled because the offline crate registry only
+//! carries the `xla` closure (DESIGN.md §2 substitution table).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(2); // 0=off 1=error 2=info 3=debug
+
+/// Set global log verbosity (0..=3).
+pub fn set_log_level(level: u8) {
+    LOG_LEVEL.store(level.min(3), Ordering::Relaxed);
+}
+
+pub fn log_enabled(level: u8) -> bool {
+    LOG_LEVEL.load(Ordering::Relaxed) >= level
+}
+
+/// info-level log line (stderr; stdout is reserved for results).
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(2) {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// debug-level log line.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_enabled(3) {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Indices that would sort `xs` descending (stable).
+pub fn argsort_desc(xs: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+/// Top-k indices by value (descending).
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx = argsort_desc(xs);
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_helpers() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138)
+            .abs()
+            < 0.01);
+    }
+
+    #[test]
+    fn argsort_and_topk() {
+        let xs = [0.1f32, 5.0, -2.0, 3.0];
+        assert_eq!(argsort_desc(&xs), vec![1, 3, 0, 2]);
+        assert_eq!(top_k_indices(&xs, 2), vec![1, 3]);
+    }
+}

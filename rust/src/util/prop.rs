@@ -1,0 +1,81 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` inputs from `gen` and
+//! asserts `prop` on each; on failure it reports the failing case index and
+//! a debug dump of the input, plus the seed to replay. Used throughout the
+//! crate for the paper's invariants (Apdx A transposition, Apdx B coverage,
+//! DST budget conservation, BCSR round-trips, coordinator state machines).
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` values drawn by `gen`. Panics with a replayable
+/// report on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {}/{} (seed {}):\n{:#?}",
+                case, cases, seed, input
+            );
+        }
+    }
+}
+
+/// Like `forall` but the property returns `Result<(), String>` so failures
+/// can carry a message about *which* invariant broke.
+pub fn forall_explain<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {}/{} (seed {}): {}\ninput: {:#?}",
+                case, cases, seed, msg, input
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(1, 50, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        forall(2, 50, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn explain_variant() {
+        forall_explain(
+            3,
+            20,
+            |r| (r.below(8), r.below(8)),
+            |&(a, b)| {
+                if a + b < 16 {
+                    Ok(())
+                } else {
+                    Err(format!("sum {} too big", a + b))
+                }
+            },
+        );
+    }
+}

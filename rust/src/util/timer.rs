@@ -1,0 +1,83 @@
+//! Wall-clock timing helpers for the bench harness (criterion is
+//! unavailable offline; `benches/` use these instead).
+
+use std::time::Instant;
+
+/// Stopwatch measuring elapsed seconds.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Result of a repeated measurement.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+}
+
+/// Measure `f` with warmup, returning per-iteration stats.
+///
+/// Runs `warmup` untimed calls, then times `iters` calls individually —
+/// individual timing (not amortized) so min/σ expose scheduling noise,
+/// which matters on the single shared CPU core the CI runs on.
+pub fn bench<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / samples.len() as f64;
+    BenchStats { iters, mean_s: mean, min_s: min, max_s: max, std_s: var.sqrt() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0usize;
+        let stats = bench(2, 5, || {
+            n += 1;
+            n
+        });
+        assert_eq!(n, 7);
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min_s <= stats.mean_s && stats.mean_s <= stats.max_s);
+    }
+}
