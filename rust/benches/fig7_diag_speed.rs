@@ -1,13 +1,17 @@
-//! `cargo bench --bench fig7_diag_speed` — regenerates Fig 7 — speedup vs #diagonals (768×768).
+//! `cargo bench --bench fig7_diag_speed` — regenerates Fig 7 — speedup vs
+//! #diagonals (768×768).
 //!
 //! Runs the experiment in its `--fast` profile (fewer steps/batches) so the
 //! whole bench suite finishes on one core; `dynadiag experiment fig7` runs
-//! the full-size version. Cells are cached under results/cells/.
+//! the full-size version. Works with either backend: XLA when `make
+//! artifacts` has produced compiled micro kernels, the native kernel
+//! subsystem otherwise.
 
 use std::rc::Rc;
 
 fn main() {
-    let session = dynadiag::runtime::Session::open("artifacts").expect("make artifacts first");
+    let session = dynadiag::runtime::Session::open("artifacts").expect("opening session");
+    eprintln!("fig7 bench via the {} backend", session.backend_name());
     let opts = dynadiag::experiments::ExpOpts { steps: None, seeds: 1, fast: true };
     run(&session, &opts).unwrap();
 }

@@ -1,17 +1,20 @@
-//! `cargo bench --bench kernels` — L3 hot-path microbenchmarks.
+//! `cargo bench --bench kernels` — native kernel sweep + coordinator
+//! per-step primitives.
 //!
-//! Times the coordinator-side primitives that sit on the per-step path
-//! (mask serialization, soft-topk, prune/grow scoring) and the SpMM
-//! implementations backing Figs 4/7 (diag-direct, BCSR, CSR, dense) at the
-//! paper's 768×768 layer shape. These are the numbers the §Perf pass in
-//! EXPERIMENTS.md iterates on.
+//! Sweeps (dim × sparsity × batch) over the three matmul backends of the
+//! `kernels` subsystem — cache-blocked dense GEMM, offset-major diagonal
+//! SpMM, and BCSR SpMM — printing a table and writing
+//! `results/kernel_bench.json`, which `dynadiag experiment fig7` folds into
+//! its report. The headline check: diagonal SpMM beats dense GEMM at ≥90%
+//! sparsity.
 
 use dynadiag::bcsr::convert::diag_to_bcsr;
-use dynadiag::bcsr::Csr;
+use dynadiag::kernels::{bcsr, dense, DiagPacked};
 use dynadiag::sparsity::diagonal::{diag_count, DiagMatrix};
 use dynadiag::sparsity::mask::Mask;
 use dynadiag::sparsity::topk::soft_topk;
 use dynadiag::tensor::Tensor;
+use dynadiag::util::json::Json;
 use dynadiag::util::rng::Rng;
 use dynadiag::util::timer::bench;
 
@@ -26,74 +29,115 @@ fn random_diag(rng: &mut Rng, n: usize, k: usize) -> DiagMatrix {
     d
 }
 
-/// Clustered offsets — the post-training distribution (ℓ1 + the Apdx D
-/// proximity objective concentrate the selected band); random offsets are
-/// the worst case where K diagonals light up every block column.
-fn clustered_diag(rng: &mut Rng, n: usize, k: usize) -> DiagMatrix {
-    let base = rng.below(n);
-    let offsets: Vec<usize> = (0..k).map(|j| (base + j + j / 8) % n).collect();
-    let mut uniq = offsets.clone();
-    uniq.sort_unstable();
-    uniq.dedup();
-    let mut d = DiagMatrix::new(n, n, uniq);
-    for j in 0..d.k() {
-        for i in 0..n {
-            d.values[j][i] = rng.normal_f32(0.0, 1.0);
-        }
-    }
-    d
-}
+const DIMS: [usize; 2] = [256, 768];
+const BATCHES: [usize; 3] = [8, 32, 128];
+const SPARSITIES: [f64; 5] = [0.99, 0.95, 0.90, 0.80, 0.50];
 
 fn main() {
     let mut rng = Rng::new(2024);
-    let n = 768;
-    let b = 32;
-    let s = 0.9;
-    let k = diag_count(n, s);
-    let d = random_diag(&mut rng, n, k);
-    let dc = clustered_diag(&mut rng, n, k);
-    let x = Tensor::randn(&[b, n], 1.0, &mut rng);
-    let dense = d.to_dense();
-    let csr = Csr::from_dense(&dense);
-    let conv = diag_to_bcsr(&d, 32, 0.4).unwrap();
-    let conv_c = diag_to_bcsr(&dc, 32, 0.4).unwrap();
+    let mut cells: Vec<Json> = Vec::new();
+    let mut best_90: Option<(usize, usize, f64)> = None;
 
-    println!("== SpMM at n={} S={:.0}% (K={} diagonals), b={} ==", n, s * 100.0, k, b);
-    let t = bench(2, 10, || dense.matmul_t(&x).unwrap());
-    println!("dense matmul_t      {:>9.2} ms", t.mean_ms());
-    let t = bench(2, 10, || d.matmul_t(&x).unwrap());
-    println!("diag direct         {:>9.2} ms", t.mean_ms());
-    let t = bench(2, 10, || conv.bcsr.matmul_t(&x).unwrap());
+    println!("== native kernel sweep: dense vs diag vs bcsr (y = x @ W.T) ==");
     println!(
-        "bcsr random offs    {:>9.2} ms  (nnzb {}, block density {:.2})",
-        t.mean_ms(),
-        conv.bcsr.nnzb(),
-        conv.bcsr.block_density()
+        "{:>5} {:>6} {:>9} {:>5} {:>10} {:>10} {:>10} {:>9}",
+        "dim", "batch", "sparsity", "K", "dense ms", "diag ms", "bcsr ms", "diag spd"
     );
-    let t = bench(2, 10, || conv_c.bcsr.matmul_t(&x).unwrap());
-    println!(
-        "bcsr clustered offs {:>9.2} ms  (nnzb {}, block density {:.2})",
-        t.mean_ms(),
-        conv_c.bcsr.nnzb(),
-        conv_c.bcsr.block_density()
-    );
-    let t = bench(2, 10, || csr.matmul_t(&x).unwrap());
-    println!("csr                 {:>9.2} ms", t.mean_ms());
-    let t = bench(2, 10, || diag_to_bcsr(&d, 32, 0.4).unwrap());
-    println!("diag->bcsr convert  {:>9.2} ms", t.mean_ms());
-    let t = bench(2, 10, || d.matmul(&x).unwrap());
-    println!("diag transposed     {:>9.2} ms", t.mean_ms());
+    for &n in &DIMS {
+        for &b in &BATCHES {
+            let x: Vec<f32> = (0..b * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w: Vec<f32> = (0..n * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut y = vec![0.0f32; b * n];
+            let t_dense = bench(1, 5, || dense::gemm_t(&x, &w, &mut y, b, n, n));
+            for &s in &SPARSITIES {
+                let k = diag_count(n, s);
+                let d = random_diag(&mut rng, n, k);
+                let packed = DiagPacked::from_matrix(&d);
+                let mut yd = vec![0.0f32; b * n];
+                let t_diag = bench(1, 5, || {
+                    dynadiag::kernels::diag::spmm_t(
+                        &x, &packed.offsets, &packed.values, &mut yd, b, n, n,
+                    )
+                });
+                let conv = diag_to_bcsr(&d, 32, 0.4).expect("bcsr conversion");
+                let mut yb = vec![0.0f32; b * n];
+                let t_bcsr = bench(1, 5, || {
+                    bcsr::spmm_t(
+                        &x,
+                        &conv.bcsr.row_ptr,
+                        &conv.bcsr.col_idx,
+                        &conv.bcsr.blocks,
+                        conv.bcsr.bs,
+                        n,
+                        n,
+                        &mut yb,
+                        b,
+                    )
+                });
+                let speedup = t_dense.mean_s / t_diag.mean_s;
+                if s >= 0.90 && speedup > best_90.map(|(_, _, v)| v).unwrap_or(0.0) {
+                    best_90 = Some((n, b, speedup));
+                }
+                println!(
+                    "{:>5} {:>6} {:>8.0}% {:>5} {:>10.3} {:>10.3} {:>10.3} {:>8.2}x",
+                    n,
+                    b,
+                    s * 100.0,
+                    k,
+                    t_dense.mean_ms(),
+                    t_diag.mean_ms(),
+                    t_bcsr.mean_ms(),
+                    speedup
+                );
+                cells.push(Json::obj(vec![
+                    ("dim", Json::Num(n as f64)),
+                    ("batch", Json::Num(b as f64)),
+                    ("sparsity", Json::Num(s)),
+                    ("k", Json::Num(k as f64)),
+                    ("dense_ms", Json::Num(t_dense.mean_ms())),
+                    ("diag_ms", Json::Num(t_diag.mean_ms())),
+                    ("bcsr_ms", Json::Num(t_bcsr.mean_ms())),
+                    ("diag_speedup", Json::Num(speedup)),
+                    ("bcsr_speedup", Json::Num(t_dense.mean_s / t_bcsr.mean_s)),
+                ]));
+            }
+        }
+    }
+
+    match best_90 {
+        Some((n, b, v)) if v > 1.0 => println!(
+            "\ndiag SpMM beats dense GEMM at >=90% sparsity: best {:.2}x at dim {} batch {}",
+            v, n, b
+        ),
+        _ => println!("\nWARNING: diag SpMM did not beat dense at >=90% sparsity on this run"),
+    }
+
+    let out_dir = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&out_dir).expect("mkdir results");
+    let json = Json::obj(vec![
+        ("bench", Json::Str("kernels".to_string())),
+        ("threads", Json::Num(dynadiag::kernels::pool::num_threads() as f64)),
+        ("cells", Json::Arr(cells)),
+    ]);
+    let path = out_dir.join("kernel_bench.json");
+    std::fs::write(&path, json.to_string()).expect("write kernel_bench.json");
+    println!("wrote {}", path.display());
 
     println!("\n== coordinator per-step primitives ==");
-    let mask = Mask::random(768, 768, k * n, &mut rng);
+    let n = 768;
+    let k = diag_count(n, 0.9);
+    let mask = Mask::random(n, n, k * n, &mut rng);
     let t = bench(2, 20, || mask.to_f32());
     println!("mask -> f32 upload buffer (768^2)  {:>9.3} ms", t.mean_ms());
-    let alpha: Vec<f32> = (0..768).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let alpha: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     let t = bench(2, 50, || soft_topk(&alpha, k as f64, 0.05));
     println!("soft_topk host mirror (D=768)      {:>9.3} ms", t.mean_ms());
-    let w = Tensor::randn(&[768, 768], 1.0, &mut rng);
+    let w = Tensor::randn(&[n, n], 1.0, &mut rng);
     let t = bench(1, 5, || dynadiag::dst::active_by_magnitude(&mask, &w));
     println!("prune scoring (sort active 768^2)  {:>9.3} ms", t.mean_ms());
     let t = bench(1, 3, || dynadiag::dst::cht::ch3_scores(&mask));
     println!("CHT CH3 link scores (768^2)        {:>9.3} ms", t.mean_ms());
+    let d = random_diag(&mut rng, n, k);
+    let t = bench(1, 5, || diag_to_bcsr(&d, 32, 0.4).unwrap());
+    println!("diag->bcsr convert (768^2, K={})   {:>9.3} ms", k, t.mean_ms());
 }

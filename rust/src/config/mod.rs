@@ -115,6 +115,8 @@ pub struct RunConfig {
     pub nm_group: usize,
     pub block_size: usize,
     pub artifacts_dir: String,
+    /// execution backend: auto | xla | native (see runtime::BackendKind)
+    pub backend: String,
 }
 
 impl Default for RunConfig {
@@ -144,6 +146,7 @@ impl Default for RunConfig {
             nm_group: 8,
             block_size: 8,
             artifacts_dir: "artifacts".into(),
+            backend: "auto".into(),
         }
     }
 }
@@ -186,6 +189,7 @@ impl RunConfig {
         self.nm_group = t.usize_or("run.nm_group", self.nm_group);
         self.block_size = t.usize_or("run.block_size", self.block_size);
         self.artifacts_dir = t.str_or("run.artifacts_dir", &self.artifacts_dir);
+        self.backend = t.str_or("run.backend", &self.backend);
         self.validate()
     }
 
@@ -222,7 +226,15 @@ impl RunConfig {
         if self.lr <= 0.0 {
             bail!("lr must be positive");
         }
+        crate::runtime::BackendKind::parse(&self.backend)?;
         Ok(())
+    }
+
+    /// Parsed backend selector. Errors on an unknown string rather than
+    /// silently defaulting — configs built programmatically (bypassing
+    /// `validate`) still get a loud failure at `Trainer::new` time.
+    pub fn backend_kind(&self) -> Result<crate::runtime::BackendKind> {
+        crate::runtime::BackendKind::parse(&self.backend)
     }
 
     /// Default dataset for a model family if the user didn't pick one.
@@ -279,6 +291,18 @@ mod tests {
             .apply_overrides(&[("sparsity".into(), "1.5".into())])
             .is_err());
         assert!(c.apply_overrides(&[("method".into(), "bogus".into())]).is_err());
+    }
+
+    #[test]
+    fn backend_override() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.backend_kind().unwrap(), crate::runtime::BackendKind::Auto);
+        c.apply_overrides(&[("backend".into(), "native".into())]).unwrap();
+        assert_eq!(c.backend_kind().unwrap(), crate::runtime::BackendKind::Native);
+        assert!(c.apply_overrides(&[("backend".into(), "tpu".into())]).is_err());
+        // programmatic typo fails loudly instead of silently going Auto
+        c.backend = "natove".into();
+        assert!(c.backend_kind().is_err());
     }
 
     #[test]

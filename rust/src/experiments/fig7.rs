@@ -1,21 +1,27 @@
 //! Fig 7 — speedup vs number of diagonals for a 768×768 matmul.
 //!
-//! Three views of the same sweep:
-//!   1. measured Rust SpMM (conversion + compute, as the paper measures),
-//!   2. the XLA micro-artifacts (the L1 Pallas kernel via PJRT, interpret
-//!      lowering — structure check, not a TPU-speed proxy),
-//!   3. the A100 projection.
+//! Four views of the same sweep:
+//!   1. measured Rust SpMM via the reference implementations (conversion +
+//!      compute, as the paper measures),
+//!   2. the native kernel subsystem (`kernels::`; same numbers the
+//!      `cargo bench --bench kernels` sweep writes to
+//!      `results/kernel_bench.json`, summarized here when present),
+//!   3. the micro artifacts through the active backend (XLA Pallas kernels
+//!      when artifacts are compiled, native kernels otherwise),
+//!   4. the A100 projection.
 
 use std::rc::Rc;
 
 use anyhow::Result;
 
 use crate::bcsr::convert::diag_to_bcsr;
-use crate::experiments::{ExpOpts, Report};
+use crate::experiments::{results_dir, ExpOpts, Report};
+use crate::kernels::{dense_matmul_t, DiagPacked};
 use crate::perfmodel::{linear_fwd, ExecFormat, A100};
 use crate::runtime::{HostTensor, Session};
 use crate::sparsity::diagonal::{diag_count, DiagMatrix};
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::timer::bench;
 
@@ -53,16 +59,19 @@ pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
     let dense = Tensor::randn(&[N, N], 1.0, &mut rng);
     let iters = if opts.fast { 3 } else { 8 };
     let t_dense = bench(1, iters, || dense.matmul_t(&x).unwrap());
+    let t_dense_kernel = bench(1, iters, || dense_matmul_t(&dense, &x).unwrap());
 
     report.line(format!(
-        "dense 768x768 (b={}): measured Rust {:.2} ms",
+        "dense 768x768 (b={}): reference Rust {:.2} ms, native kernel {:.2} ms",
         b,
-        t_dense.mean_ms()
+        t_dense.mean_ms(),
+        t_dense_kernel.mean_ms()
     ));
     report.blank();
-    report.line("| sparsity | K | convert+bcsr (ms) | speedup | csr speedup | A100 projection |");
-    report.line("|---|---|---|---|---|---|");
+    report.line("| sparsity | K | convert+bcsr (ms) | speedup | diag kernel (ms) | kernel speedup | csr speedup | A100 projection |");
+    report.line("|---|---|---|---|---|---|---|---|");
     let mut prev_speedup = f64::INFINITY;
+    let mut kernel_beat_dense = false;
     for &s in &SPARSITIES {
         let k = diag_count(N, s);
         let d = trained_like_diag(&mut rng, N, k);
@@ -71,19 +80,28 @@ pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
             let conv = diag_to_bcsr(&d, 32, 0.4).unwrap();
             conv.bcsr.matmul_t(&x).unwrap()
         });
+        // native diagonal kernel on the same selection (no conversion)
+        let packed = DiagPacked::from_matrix(&d);
+        let m_kernel = bench(1, iters, || packed.matmul_t(&x).unwrap());
         let csr = crate::bcsr::Csr::from_dense(&d.to_dense());
         let m_csr = bench(1, iters, || csr.matmul_t(&x).unwrap());
         let speedup = t_dense.mean_s / m.mean_s;
+        let kernel_speedup = t_dense_kernel.mean_s / m_kernel.mean_s;
+        if s >= 0.9 && kernel_speedup > 1.0 {
+            kernel_beat_dense = true;
+        }
         let bb = 128 * 197; // A100 batch regime
         let a100 = linear_fwd(&A100, ExecFormat::Dense, bb, N, N, 0.0)
             / (linear_fwd(&A100, ExecFormat::DiagBcsr, bb, N, N, s)
                 + A100.diag_convert(k * N));
         report.line(format!(
-            "| {:.0}% | {} | {:.2} | {:.2}x | {:.2}x | {:.2}x |",
+            "| {:.0}% | {} | {:.2} | {:.2}x | {:.2} | {:.2}x | {:.2}x | {:.2}x |",
             s * 100.0,
             k,
             m.mean_ms(),
             speedup,
+            m_kernel.mean_ms(),
+            kernel_speedup,
             t_dense.mean_s / m_csr.mean_s,
             a100
         ));
@@ -94,38 +112,94 @@ pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
         prev_speedup = speedup;
     }
     report.blank();
+    if kernel_beat_dense {
+        report.line("native diag kernel beats the dense kernel at ≥90% sparsity ✓");
+    } else {
+        report.line("warning: native diag kernel did not beat dense at ≥90% (noisy machine?)");
+    }
+    report.blank();
 
-    // XLA micro-artifact cross-check (interpret-mode Pallas kernel)
-    report.line("### XLA micro-artifacts (L1 Pallas diag kernel via PJRT)");
+    // optional: summarize the bench sweep if `cargo bench --bench kernels`
+    // has produced its JSON (dims × sparsities × batches)
+    let bench_json = results_dir().join("kernel_bench.json");
+    if bench_json.exists() {
+        // this section is best-effort: a stale or partial JSON (older bench
+        // schema, interrupted write) must not abort the experiment
+        let summarize = |report: &mut Report| -> Result<()> {
+            let j = Json::from_file(&bench_json)?;
+            let mut lines = Vec::new();
+            for c in j.req("cells")?.as_arr()? {
+                lines.push(format!(
+                    "| {} | {} | {:.0}% | {:.3} | {:.3} | {:.3} | {:.2}x |",
+                    c.req("dim")?.as_usize()?,
+                    c.req("batch")?.as_usize()?,
+                    c.req("sparsity")?.as_f64()? * 100.0,
+                    c.req("dense_ms")?.as_f64()?,
+                    c.req("diag_ms")?.as_f64()?,
+                    c.req("bcsr_ms")?.as_f64()?,
+                    c.req("diag_speedup")?.as_f64()?,
+                ));
+            }
+            report.line("### kernel bench sweep (results/kernel_bench.json)");
+            report.line("| dim | batch | sparsity | dense ms | diag ms | bcsr ms | diag speedup |");
+            report.line("|---|---|---|---|---|---|---|");
+            for l in lines {
+                report.line(l);
+            }
+            report.blank();
+            Ok(())
+        };
+        if let Err(e) = summarize(&mut report) {
+            report.line(format!(
+                "(results/kernel_bench.json present but unreadable, skipping: {:#})",
+                e
+            ));
+            report.blank();
+        }
+    } else {
+        report.line("(run `cargo bench --bench kernels` to add the full dim×sparsity×batch sweep)");
+        report.blank();
+    }
+
+    // micro-artifact cross-check through the active backend (XLA Pallas
+    // kernels when artifacts are compiled; native kernels otherwise)
+    report.line(format!("### micro artifacts via the {} backend", session.backend_name()));
     report.line("| artifact | mean ms |");
     report.line("|---|---|");
-    let dense_exe = session.executable("micro_dense_n768")?;
-    let xd: Vec<f32> = (0..64 * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-    let w: Vec<f32> = (0..N * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-    let t = bench(1, iters, || {
-        dense_exe
-            .run(&[
-                HostTensor::f32(&[64, N], xd.clone()),
-                HostTensor::f32(&[N, N], w.clone()),
-            ])
-            .unwrap()
-    });
-    report.line(format!("| micro_dense_n768 | {:.2} |", t.mean_ms()));
-    for &s in &[0.99, 0.90, 0.60] {
-        let k = diag_count(N, s);
-        let name = format!("micro_diag_n{}_k{}", N, k);
-        let exe = session.executable(&name)?;
-        let offs: Vec<i32> = rng.choose_k(N, k).into_iter().map(|o| o as i32).collect();
-        let vals: Vec<f32> = (0..k * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let t = bench(1, iters, || {
-            exe.run(&[
-                HostTensor::f32(&[64, N], xd.clone()),
-                HostTensor::i32(&[k], offs.clone()),
-                HostTensor::f32(&[k, N], vals.clone()),
-            ])
-            .unwrap()
-        });
-        report.line(format!("| {} | {:.2} |", name, t.mean_ms()));
+    match session.executable("micro_dense_n768") {
+        Ok(dense_exe) => {
+            let xd: Vec<f32> = (0..64 * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let w: Vec<f32> = (0..N * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let t = bench(1, iters, || {
+                dense_exe
+                    .run(&[
+                        HostTensor::f32(&[64, N], xd.clone()),
+                        HostTensor::f32(&[N, N], w.clone()),
+                    ])
+                    .unwrap()
+            });
+            report.line(format!("| micro_dense_n768 | {:.2} |", t.mean_ms()));
+            for &s in &[0.99, 0.90, 0.60] {
+                let k = diag_count(N, s);
+                let name = format!("micro_diag_n{}_k{}", N, k);
+                let exe = session.executable(&name)?;
+                let offs: Vec<i32> =
+                    rng.choose_k(N, k).into_iter().map(|o| o as i32).collect();
+                let vals: Vec<f32> = (0..k * N).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let t = bench(1, iters, || {
+                    exe.run(&[
+                        HostTensor::f32(&[64, N], xd.clone()),
+                        HostTensor::i32(&[k], offs.clone()),
+                        HostTensor::f32(&[k, N], vals.clone()),
+                    ])
+                    .unwrap()
+                });
+                report.line(format!("| {} | {:.2} |", name, t.mean_ms()));
+            }
+        }
+        Err(e) => {
+            report.line(format!("| (micro artifacts unavailable: {:#}) | — |", e));
+        }
     }
     report.blank();
     report.line(

@@ -331,7 +331,8 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
         bail!("experiment wants an id: table1|table2|table8|table12..16|fig1|fig4..fig9|all");
     };
     let opts = ExpOpts::from_args(args)?;
-    let session = Session::open("artifacts")?;
+    let kind = crate::runtime::BackendKind::parse(args.opt("backend").unwrap_or("auto"))?;
+    let session = Session::open_kind(kind, "artifacts")?;
     let run_one = |id: &str, session: &Rc<Session>| -> Result<()> {
         match id {
             "table1" => table1::run(session, &opts),

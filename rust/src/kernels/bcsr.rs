@@ -1,0 +1,85 @@
+//! Blocked-CSR SpMM — the SmaT-style execution format DynaDiag converts
+//! finalized diagonals into (Sec 3.3 / Apdx D).
+//!
+//! Same math as [`crate::bcsr::Bcsr::matmul_t`], restructured for the native
+//! backend: parallel over batch rows, with the `bs × bs` block micro-kernel
+//! accumulating into a register before touching `y`.
+
+use super::pool::parallel_rows;
+
+/// `y[b, rows] = x[b, cols] @ Wᵀ` where W is `[rows, cols]` in BCSR with
+/// square `bs`-blocks (`row_ptr: [rows/bs + 1]`, `col_idx: [nnzb]`,
+/// `blocks: [nnzb * bs * bs]` row-major within a block). `y` is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_t(
+    x: &[f32],
+    row_ptr: &[usize],
+    col_idx: &[usize],
+    blocks: &[f32],
+    bs: usize,
+    rows: usize,
+    cols: usize,
+    y: &mut [f32],
+    b: usize,
+) {
+    assert!(bs > 0 && rows % bs == 0 && cols % bs == 0, "bcsr spmm_t: bad block size");
+    let nbr = rows / bs;
+    assert_eq!(row_ptr.len(), nbr + 1, "bcsr spmm_t: row_ptr length");
+    assert_eq!(x.len(), b * cols, "bcsr spmm_t: x length");
+    assert_eq!(y.len(), b * rows, "bcsr spmm_t: y length");
+    assert_eq!(blocks.len(), col_idx.len() * bs * bs, "bcsr spmm_t: blocks length");
+    y.fill(0.0);
+    parallel_rows(y, rows, 4, |first_row, y_chunk| {
+        let batch_rows = y_chunk.len() / rows;
+        for r in 0..batch_rows {
+            let xr = &x[(first_row + r) * cols..(first_row + r + 1) * cols];
+            let yr = &mut y_chunk[r * rows..(r + 1) * rows];
+            for br in 0..nbr {
+                for p in row_ptr[br]..row_ptr[br + 1] {
+                    let bc = col_idx[p];
+                    debug_assert!(bc * bs + bs <= cols, "block col out of range");
+                    let blk = &blocks[p * bs * bs..(p + 1) * bs * bs];
+                    let xp = &xr[bc * bs..bc * bs + bs];
+                    let yp = &mut yr[br * bs..br * bs + bs];
+                    for i in 0..bs {
+                        let brow = &blk[i * bs..(i + 1) * bs];
+                        let mut acc = 0.0f32;
+                        for j in 0..bs {
+                            acc += brow[j] * xp[j];
+                        }
+                        yp[i] += acc;
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::bcsr::Bcsr;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_bcsr_reference() {
+        let mut rng = Rng::new(61);
+        for &(rows, cols, bs, b) in &[(8usize, 8usize, 2usize, 3usize), (24, 16, 4, 5)] {
+            let mut w = Tensor::zeros(&[rows, cols]);
+            for v in w.data.iter_mut() {
+                if rng.bool(0.25) {
+                    *v = rng.normal_f32(0.0, 1.0);
+                }
+            }
+            let bc = Bcsr::from_dense(&w, bs).unwrap();
+            let x = Tensor::randn(&[b, cols], 1.0, &mut rng);
+            let mut y = vec![0.0f32; b * rows];
+            super::spmm_t(
+                &x.data, &bc.row_ptr, &bc.col_idx, &bc.blocks, bs, rows, cols, &mut y, b,
+            );
+            let want = bc.matmul_t(&x).unwrap();
+            let diff = want.data.iter().zip(&y).fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+            assert!(diff < 1e-4, "rows={} cols={} bs={}: diff {}", rows, cols, bs, diff);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Cache-blocked dense GEMM reference: `y = x @ Wᵀ` with `W: [n_out, n_in]`.
+//!
+//! This is the baseline every sparse kernel races against (Fig 7's
+//! denominator). Layout choices:
+//! * parallel over batch rows (disjoint `y` rows, shared read-only `W`),
+//! * 4-way output-row register blocking so each `x` row is reused from
+//!   registers across four simultaneous dot products,
+//! * `KC`-blocking over the reduction dim so the active `x` / `W` panels
+//!   stay in L1/L2 for the larger layer shapes.
+
+use super::pool::parallel_rows;
+
+/// Reduction-dimension block size (f32 elements).
+const KC: usize = 1024;
+
+/// `y[b, n_out] = x[b, n_in] @ w[n_out, n_in]ᵀ`. `y` is fully overwritten.
+pub fn gemm_t(x: &[f32], w: &[f32], y: &mut [f32], b: usize, n_in: usize, n_out: usize) {
+    assert_eq!(x.len(), b * n_in, "gemm_t: x length");
+    assert_eq!(w.len(), n_out * n_in, "gemm_t: w length");
+    assert_eq!(y.len(), b * n_out, "gemm_t: y length");
+    y.fill(0.0);
+    // grain: keep at least ~4 rows of output per worker before fanning out
+    parallel_rows(y, n_out, 4, |first_row, y_chunk| {
+        let x_chunk = &x[first_row * n_in..first_row * n_in + (y_chunk.len() / n_out) * n_in];
+        gemm_t_chunk(x_chunk, w, y_chunk, n_in, n_out);
+    });
+}
+
+fn gemm_t_chunk(x: &[f32], w: &[f32], y: &mut [f32], n_in: usize, n_out: usize) {
+    for k0 in (0..n_in).step_by(KC) {
+        let kc = KC.min(n_in - k0);
+        for (xr, yr) in x.chunks_exact(n_in).zip(y.chunks_exact_mut(n_out)) {
+            let xk = &xr[k0..k0 + kc];
+            let mut oi = 0;
+            // 4-way register blocking over output rows
+            while oi + 4 <= n_out {
+                let w0 = &w[oi * n_in + k0..oi * n_in + k0 + kc];
+                let w1 = &w[(oi + 1) * n_in + k0..(oi + 1) * n_in + k0 + kc];
+                let w2 = &w[(oi + 2) * n_in + k0..(oi + 2) * n_in + k0 + kc];
+                let w3 = &w[(oi + 3) * n_in + k0..(oi + 3) * n_in + k0 + kc];
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for c in 0..kc {
+                    let xv = xk[c];
+                    a0 += xv * w0[c];
+                    a1 += xv * w1[c];
+                    a2 += xv * w2[c];
+                    a3 += xv * w3[c];
+                }
+                yr[oi] += a0;
+                yr[oi + 1] += a1;
+                yr[oi + 2] += a2;
+                yr[oi + 3] += a3;
+                oi += 4;
+            }
+            while oi < n_out {
+                let wr = &w[oi * n_in + k0..oi * n_in + k0 + kc];
+                let mut acc = 0.0f32;
+                for c in 0..kc {
+                    acc += xk[c] * wr[c];
+                }
+                yr[oi] += acc;
+                oi += 1;
+            }
+        }
+    }
+}
+
+/// `dw[n_out, n_in] = dyᵀ @ x` — the weight-gradient product of a linear
+/// layer (`dy: [b, n_out]`, `x: [b, n_in]`). `dw` is fully overwritten.
+pub fn gemm_grad_w(dy: &[f32], x: &[f32], dw: &mut [f32], b: usize, n_in: usize, n_out: usize) {
+    assert_eq!(dy.len(), b * n_out, "gemm_grad_w: dy length");
+    assert_eq!(x.len(), b * n_in, "gemm_grad_w: x length");
+    assert_eq!(dw.len(), n_out * n_in, "gemm_grad_w: dw length");
+    dw.fill(0.0);
+    parallel_rows(dw, n_in, 8, |first_out, dw_chunk| {
+        for (r, dwr) in dw_chunk.chunks_exact_mut(n_in).enumerate() {
+            let oi = first_out + r;
+            for bi in 0..b {
+                let g = dy[bi * n_out + oi];
+                if g == 0.0 {
+                    continue;
+                }
+                let xr = &x[bi * n_in..(bi + 1) * n_in];
+                for c in 0..n_in {
+                    dwr[c] += g * xr[c];
+                }
+            }
+        }
+    });
+}
+
+/// `dx[b, n_in] = dy[b, n_out] @ w[n_out, n_in]` — the input-gradient
+/// product. `dx` is fully overwritten.
+pub fn gemm(dy: &[f32], w: &[f32], dx: &mut [f32], b: usize, n_in: usize, n_out: usize) {
+    assert_eq!(dy.len(), b * n_out, "gemm: dy length");
+    assert_eq!(w.len(), n_out * n_in, "gemm: w length");
+    assert_eq!(dx.len(), b * n_in, "gemm: dx length");
+    dx.fill(0.0);
+    parallel_rows(dx, n_in, 4, |first_row, dx_chunk| {
+        for (r, dxr) in dx_chunk.chunks_exact_mut(n_in).enumerate() {
+            let dyr = &dy[(first_row + r) * n_out..(first_row + r + 1) * n_out];
+            for (oi, &g) in dyr.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                let wr = &w[oi * n_in..(oi + 1) * n_in];
+                for c in 0..n_in {
+                    dxr[c] += g * wr[c];
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gemm_t_matches_tensor_reference() {
+        let mut rng = Rng::new(41);
+        for &(b, n_in, n_out) in &[(1usize, 7usize, 5usize), (3, 17, 23), (8, 130, 67)] {
+            let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+            let w = Tensor::randn(&[n_out, n_in], 1.0, &mut rng);
+            let mut y = vec![0.0f32; b * n_out];
+            super::gemm_t(&x.data, &w.data, &mut y, b, n_in, n_out);
+            let want = w.matmul_t(&x).unwrap();
+            let diff = want
+                .data
+                .iter()
+                .zip(&y)
+                .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+            assert!(diff < 1e-3, "b={} n_in={} n_out={}: diff {}", b, n_in, n_out, diff);
+        }
+    }
+
+    #[test]
+    fn gemm_matches_tensor_reference() {
+        let mut rng = Rng::new(42);
+        let (b, n_in, n_out) = (4usize, 19usize, 11usize);
+        let dy = Tensor::randn(&[b, n_out], 1.0, &mut rng);
+        let w = Tensor::randn(&[n_out, n_in], 1.0, &mut rng);
+        let mut dx = vec![0.0f32; b * n_in];
+        super::gemm(&dy.data, &w.data, &mut dx, b, n_in, n_out);
+        let want = dy.matmul(&w).unwrap();
+        let diff = want
+            .data
+            .iter()
+            .zip(&dx)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(diff < 1e-3, "diff {}", diff);
+    }
+
+    #[test]
+    fn grad_w_matches_tensor_reference() {
+        let mut rng = Rng::new(43);
+        let (b, n_in, n_out) = (6usize, 13usize, 9usize);
+        let dy = Tensor::randn(&[b, n_out], 1.0, &mut rng);
+        let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+        let mut dw = vec![0.0f32; n_out * n_in];
+        super::gemm_grad_w(&dy.data, &x.data, &mut dw, b, n_in, n_out);
+        let want = dy.transpose2().matmul(&x).unwrap();
+        let diff = want
+            .data
+            .iter()
+            .zip(&dw)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(diff < 1e-3, "diff {}", diff);
+    }
+}

@@ -1,0 +1,198 @@
+//! Offset-major diagonal SpMM — the native mirror of the L1 Pallas kernel.
+//!
+//! Layout (the §3.1 convention shared with `sparsity::diagonal` and
+//! `python/compile/kernels/diag_matmul.py`): a `[n_out, n_in]` weight matrix
+//! stores K selected diagonals; diagonal `off` owns entries
+//! `(i, (i + off) mod n_in)`, and `values` is offset-major — `values[j *
+//! n_out + i]` is the entry of diagonal `offsets[j]` at row `i`. Offset-major
+//! storage makes all three training products stream `values` contiguously:
+//!
+//! * forward        `y  = x @ Wᵀ`    — [`spmm_t`]
+//! * input grad     `dx = dy @ W`    — [`spmm`]
+//! * weight grad    `dV[j,i] = Σ_b dy[b,i] · x[b, col(i,off_j)]` — [`grad_values`]
+//!
+//! The wrapped column index `(i + off) mod n_in` is maintained by a
+//! carry counter instead of a `%` in the inner loop.
+
+use super::pool::parallel_rows;
+
+/// Forward product `y[b, n_out] = x[b, n_in] @ Wᵀ`. `y` is overwritten.
+pub fn spmm_t(
+    x: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    y: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    let k = offsets.len();
+    assert_eq!(x.len(), b * n_in, "diag spmm_t: x length");
+    assert_eq!(values.len(), k * n_out, "diag spmm_t: values length");
+    assert_eq!(y.len(), b * n_out, "diag spmm_t: y length");
+    y.fill(0.0);
+    parallel_rows(y, n_out, 4, |first_row, y_chunk| {
+        let rows = y_chunk.len() / n_out;
+        for (j, &off) in offsets.iter().enumerate() {
+            debug_assert!(off < n_in, "offset out of range");
+            let vals = &values[j * n_out..(j + 1) * n_out];
+            for r in 0..rows {
+                let xr = &x[(first_row + r) * n_in..(first_row + r + 1) * n_in];
+                let yr = &mut y_chunk[r * n_out..(r + 1) * n_out];
+                let mut c = off % n_in;
+                for i in 0..n_out {
+                    yr[i] += vals[i] * xr[c];
+                    c += 1;
+                    if c == n_in {
+                        c = 0;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Transposed product `dx[b, n_in] = dy[b, n_out] @ W` (the backward
+/// input-gradient, still diagonal-wise — Apdx A). `dx` is overwritten.
+pub fn spmm(
+    dy: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    dx: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    let k = offsets.len();
+    assert_eq!(dy.len(), b * n_out, "diag spmm: dy length");
+    assert_eq!(values.len(), k * n_out, "diag spmm: values length");
+    assert_eq!(dx.len(), b * n_in, "diag spmm: dx length");
+    dx.fill(0.0);
+    parallel_rows(dx, n_in, 4, |first_row, dx_chunk| {
+        let rows = dx_chunk.len() / n_in;
+        for (j, &off) in offsets.iter().enumerate() {
+            let vals = &values[j * n_out..(j + 1) * n_out];
+            for r in 0..rows {
+                let dyr = &dy[(first_row + r) * n_out..(first_row + r + 1) * n_out];
+                let dxr = &mut dx_chunk[r * n_in..(r + 1) * n_in];
+                let mut c = off % n_in;
+                for i in 0..n_out {
+                    dxr[c] += vals[i] * dyr[i];
+                    c += 1;
+                    if c == n_in {
+                        c = 0;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Weight gradient in offset-major layout: `dvalues[j, i] = Σ_b dy[b, i] ·
+/// x[b, (i + offsets[j]) mod n_in]`. Parallel over diagonals (disjoint
+/// `dvalues` rows). `dvalues` is overwritten.
+pub fn grad_values(
+    x: &[f32],
+    dy: &[f32],
+    offsets: &[usize],
+    dvalues: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    let k = offsets.len();
+    assert_eq!(x.len(), b * n_in, "diag grad_values: x length");
+    assert_eq!(dy.len(), b * n_out, "diag grad_values: dy length");
+    assert_eq!(dvalues.len(), k * n_out, "diag grad_values: dvalues length");
+    dvalues.fill(0.0);
+    parallel_rows(dvalues, n_out, 1, |first_j, dv_chunk| {
+        for (r, dvr) in dv_chunk.chunks_exact_mut(n_out).enumerate() {
+            let off = offsets[first_j + r];
+            for bi in 0..b {
+                let xr = &x[bi * n_in..(bi + 1) * n_in];
+                let dyr = &dy[bi * n_out..(bi + 1) * n_out];
+                let mut c = off % n_in;
+                for i in 0..n_out {
+                    dvr[i] += dyr[i] * xr[c];
+                    c += 1;
+                    if c == n_in {
+                        c = 0;
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::sparsity::diagonal::DiagMatrix;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn random_diag(rng: &mut Rng, n_out: usize, n_in: usize, k: usize) -> DiagMatrix {
+        let offsets = rng.choose_k(n_in, k);
+        let mut d = DiagMatrix::new(n_out, n_in, offsets);
+        for j in 0..d.k() {
+            for i in 0..n_out {
+                d.values[j][i] = rng.normal_f32(0.0, 1.0);
+            }
+        }
+        d
+    }
+
+    fn pack(d: &DiagMatrix) -> Vec<f32> {
+        let mut out = Vec::with_capacity(d.k() * d.n_out);
+        for v in &d.values {
+            out.extend_from_slice(v);
+        }
+        out
+    }
+
+    #[test]
+    fn forward_matches_diag_matrix() {
+        let mut rng = Rng::new(51);
+        let (b, n_in, n_out, k) = (5usize, 12usize, 20usize, 4usize);
+        let d = random_diag(&mut rng, n_out, n_in, k);
+        let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+        let mut y = vec![0.0f32; b * n_out];
+        super::spmm_t(&x.data, &d.offsets, &pack(&d), &mut y, b, n_in, n_out);
+        let want = d.matmul_t(&x).unwrap();
+        let diff = want.data.iter().zip(&y).fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(diff < 1e-4, "diff {}", diff);
+    }
+
+    #[test]
+    fn backward_matches_diag_matrix() {
+        let mut rng = Rng::new(52);
+        let (b, n_in, n_out, k) = (3usize, 10usize, 15usize, 6usize);
+        let d = random_diag(&mut rng, n_out, n_in, k);
+        let dy = Tensor::randn(&[b, n_out], 1.0, &mut rng);
+        let mut dx = vec![0.0f32; b * n_in];
+        super::spmm(&dy.data, &d.offsets, &pack(&d), &mut dx, b, n_in, n_out);
+        let want = d.matmul(&dy).unwrap();
+        let diff = want.data.iter().zip(&dx).fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(diff < 1e-4, "diff {}", diff);
+    }
+
+    #[test]
+    fn grad_values_matches_dense_chain() {
+        let mut rng = Rng::new(53);
+        let (b, n_in, n_out, k) = (4usize, 8usize, 16usize, 3usize);
+        let d = random_diag(&mut rng, n_out, n_in, k);
+        let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+        let dy = Tensor::randn(&[b, n_out], 1.0, &mut rng);
+        let mut dv = vec![0.0f32; k * n_out];
+        super::grad_values(&x.data, &dy.data, &d.offsets, &mut dv, b, n_in, n_out);
+        // reference: dW = dyᵀ @ x, then read the selected diagonals
+        let dw = dy.transpose2().matmul(&x).unwrap();
+        for (j, &off) in d.offsets.iter().enumerate() {
+            for i in 0..n_out {
+                let c = crate::sparsity::diagonal::diag_col(i, off, n_in);
+                let want = dw.at2(i, c);
+                let got = dv[j * n_out + i];
+                assert!((want - got).abs() < 1e-4, "j={} i={}: {} vs {}", j, i, want, got);
+            }
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Native CPU kernel subsystem — the measured compute path behind the
+//! [`crate::runtime`] `NativeBackend` and the `cargo bench --bench kernels`
+//! sweep.
+//!
+//! Three families, all verified against the `tensor::Tensor` /
+//! `sparsity::diagonal::DiagMatrix` / `bcsr::Bcsr` reference math by unit
+//! tests here and the property tests in `tests/kernel_parity.rs`:
+//!
+//! * [`dense`] — cache-blocked GEMM (`y = x @ Wᵀ`, plus the two backward
+//!   products) — the baseline Fig 7 divides by,
+//! * [`diag`] — offset-major diagonal SpMM, forward and both backward
+//!   products (the paper's custom kernel, Sec 3.3),
+//! * [`bcsr`] — blocked-CSR SpMM (the SmaT-style converted format).
+//!
+//! Parallelism comes from [`pool`], a dependency-free scoped-thread
+//! splitter; set `DYNADIAG_THREADS=1` for fully deterministic single-core
+//! runs (results are identical either way — threads partition disjoint
+//! output rows and never race on accumulators).
+
+pub mod bcsr;
+pub mod dense;
+pub mod diag;
+pub mod pool;
+
+use anyhow::{bail, Result};
+
+use crate::sparsity::diagonal::DiagMatrix;
+use crate::tensor::Tensor;
+
+/// A diagonal matrix packed for the native kernels: offsets + one flat
+/// offset-major value buffer (`values[j * n_out + i]`), the exact layout the
+/// L1 Pallas kernel consumes (`micro_diag_*` artifact inputs).
+#[derive(Clone, Debug)]
+pub struct DiagPacked {
+    pub n_out: usize,
+    pub n_in: usize,
+    pub offsets: Vec<usize>,
+    pub values: Vec<f32>,
+}
+
+impl DiagPacked {
+    pub fn from_matrix(d: &DiagMatrix) -> DiagPacked {
+        let mut values = Vec::with_capacity(d.k() * d.n_out);
+        for v in &d.values {
+            values.extend_from_slice(v);
+        }
+        DiagPacked {
+            n_out: d.n_out,
+            n_in: d.n_in,
+            offsets: d.offsets.clone(),
+            values,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Forward `y = x @ Wᵀ` through the native kernel.
+    pub fn matmul_t(&self, x: &Tensor) -> Result<Tensor> {
+        if x.rank() != 2 || x.cols() != self.n_in {
+            bail!("DiagPacked matmul_t: x {:?} vs n_in {}", x.shape, self.n_in);
+        }
+        let b = x.rows();
+        let mut y = Tensor::zeros(&[b, self.n_out]);
+        diag::spmm_t(&x.data, &self.offsets, &self.values, &mut y.data, b, self.n_in, self.n_out);
+        Ok(y)
+    }
+
+    /// Transposed product `dx = dy @ W` through the native kernel.
+    pub fn matmul(&self, dy: &Tensor) -> Result<Tensor> {
+        if dy.rank() != 2 || dy.cols() != self.n_out {
+            bail!("DiagPacked matmul: dy {:?} vs n_out {}", dy.shape, self.n_out);
+        }
+        let b = dy.rows();
+        let mut dx = Tensor::zeros(&[b, self.n_in]);
+        diag::spmm(&dy.data, &self.offsets, &self.values, &mut dx.data, b, self.n_in, self.n_out);
+        Ok(dx)
+    }
+}
+
+/// Dense `y = x @ Wᵀ` through the native kernel (Tensor-level wrapper).
+pub fn dense_matmul_t(w: &Tensor, x: &Tensor) -> Result<Tensor> {
+    if w.rank() != 2 || x.rank() != 2 || x.cols() != w.cols() {
+        bail!("dense_matmul_t: shapes {:?} x {:?}", x.shape, w.shape);
+    }
+    let (b, n_in, n_out) = (x.rows(), w.cols(), w.rows());
+    let mut y = Tensor::zeros(&[b, n_out]);
+    dense::gemm_t(&x.data, &w.data, &mut y.data, b, n_in, n_out);
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn packed_wrappers_match_reference() {
+        let mut rng = Rng::new(71);
+        let (b, n_in, n_out, k) = (4usize, 16usize, 32usize, 5usize);
+        let offsets = rng.choose_k(n_in, k);
+        let mut d = DiagMatrix::new(n_out, n_in, offsets);
+        for j in 0..d.k() {
+            for i in 0..n_out {
+                d.values[j][i] = rng.normal_f32(0.0, 1.0);
+            }
+        }
+        let p = DiagPacked::from_matrix(&d);
+        let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+        let dy = Tensor::randn(&[b, n_out], 1.0, &mut rng);
+        assert!(p.matmul_t(&x).unwrap().max_abs_diff(&d.matmul_t(&x).unwrap()) < 1e-4);
+        assert!(p.matmul(&dy).unwrap().max_abs_diff(&d.matmul(&dy).unwrap()) < 1e-4);
+        let w = d.to_dense();
+        assert!(dense_matmul_t(&w, &x).unwrap().max_abs_diff(&w.matmul_t(&x).unwrap()) < 1e-3);
+        // shape errors surface as errors, not panics
+        assert!(p.matmul_t(&dy).is_err());
+        assert!(dense_matmul_t(&w, &dy).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Minimal data-parallel substrate for the native kernels (rayon is
+//! unavailable offline; `std::thread::scope` keeps this dependency-free and
+//! unsafe-free).
+//!
+//! The one primitive every kernel needs is "split an output buffer into
+//! disjoint row chunks and fill them from worker threads". Inputs are shared
+//! immutably; outputs are partitioned with `split_at_mut`, so there is no
+//! aliasing and no locking on the hot path.
+
+use std::sync::OnceLock;
+
+/// Worker count: `DYNADIAG_THREADS` env override, else available
+/// parallelism capped at 8 (the kernel shapes here stop scaling past that).
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("DYNADIAG_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    })
+}
+
+/// Partition `data` (logically `rows × row_len`) into contiguous row chunks
+/// and run `f(first_row, chunk)` on each chunk, in parallel when the row
+/// count justifies the thread spawn cost (`min_rows_per_thread` is the
+/// grain). Falls back to a single inline call for small work.
+pub fn parallel_rows<T, F>(data: &mut [T], row_len: usize, min_rows_per_thread: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+    if row_len == 0 || rows * row_len != data.len() {
+        // not row-shaped: run inline rather than guess a partition
+        f(0, data);
+        return;
+    }
+    let threads = num_threads()
+        .min(rows / min_rows_per_thread.max(1))
+        .max(1);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut rest = data;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = chunk_rows.min(rows - row0) * row_len;
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let first = row0;
+            scope.spawn(move || f(first, head));
+            row0 += take / row_len;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        let rows = 37;
+        let row_len = 5;
+        let mut data = vec![0u32; rows * row_len];
+        parallel_rows(&mut data, row_len, 1, |first, chunk| {
+            for (r, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (first + r) as u32 + 1;
+                }
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, (i / row_len) as u32 + 1, "row {}", i / row_len);
+        }
+    }
+
+    #[test]
+    fn small_work_runs_inline() {
+        let mut data = vec![0u8; 6];
+        parallel_rows(&mut data, 3, 100, |first, chunk| {
+            assert_eq!(first, 0);
+            assert_eq!(chunk.len(), 6);
+            chunk.fill(9);
+        });
+        assert!(data.iter().all(|&v| v == 9));
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let mut empty: Vec<f32> = Vec::new();
+        parallel_rows(&mut empty, 4, 1, |_, _| {});
+        let mut flat = vec![1.0f32; 8];
+        parallel_rows(&mut flat, 0, 1, |_, chunk| chunk.fill(2.0));
+        assert!(flat.iter().all(|&v| v == 2.0));
+    }
+}

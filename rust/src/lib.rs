@@ -1,15 +1,47 @@
 //! # DynaDiag — Dynamic Sparse Training of Diagonally Sparse Networks
 //!
-//! Rust + JAX + Pallas reproduction of Tyagi et al., ICML 2025 (DESIGN.md).
+//! Rust reproduction of Tyagi et al., ICML 2025 (see `PAPER.md` and
+//! `docs/ARCHITECTURE.md` at the repository root).
 //!
-//! Three layers:
+//! ## Layers
+//!
 //! * **L3 (this crate)** — the training coordinator: DST methods, schedules,
 //!   BCSR conversion, experiment harness. Owns the step loop; Python never
 //!   runs at training time.
 //! * **L2** — JAX models AOT-lowered to `artifacts/*.hlo.txt`
-//!   (`python/compile/`), executed through [`runtime`].
-//! * **L1** — Pallas kernels for the diagonal-sparse products, lowered into
-//!   the same artifacts.
+//!   (`python/compile/`), executed through [`runtime`]'s `XlaBackend`.
+//! * **L1** — the diagonal-sparse products. Two interchangeable
+//!   implementations: Pallas kernels lowered into the same artifacts, and
+//!   the native CPU kernels in [`kernels`] (offset-major diagonal SpMM,
+//!   blocked dense GEMM, BCSR SpMM) behind [`runtime`]'s `NativeBackend` —
+//!   which trains and serves end-to-end with **no** artifacts directory.
+//!
+//! ## Quick taste
+//!
+//! The diagonal algebra is self-contained and runs anywhere:
+//!
+//! ```
+//! use dynadiag::sparsity::diagonal::{diag_count, DiagMatrix};
+//! use dynadiag::tensor::Tensor;
+//!
+//! // 90% sparsity on a 768-wide layer keeps K = 77 of 768 diagonals
+//! assert_eq!(diag_count(768, 0.9), 77);
+//!
+//! // a 4x4 matrix holding its main diagonal (offset 0) and offset 1
+//! let mut d = DiagMatrix::new(4, 4, vec![0, 1]);
+//! for i in 0..4 {
+//!     d.values[0][i] = 1.0; // main diagonal
+//!     d.values[1][i] = 2.0; // wrapped superdiagonal
+//! }
+//! let x = Tensor::ones(&[1, 4]);
+//! let y = d.matmul_t(&x).unwrap(); // y = x @ W.T through the diag algebra
+//! assert_eq!(y.data, vec![3.0; 4]);
+//! assert_eq!(d.to_dense().nnz(), 8);
+//! ```
+//!
+//! Training runs route through [`train::Trainer`], which drives either
+//! backend through the named-buffer artifact contract documented in
+//! `docs/ARCHITECTURE.md`.
 
 pub mod bcsr;
 pub mod cli;
@@ -18,6 +50,7 @@ pub mod data;
 pub mod dst;
 pub mod experiments;
 pub mod graph;
+pub mod kernels;
 pub mod perfmodel;
 pub mod runtime;
 pub mod sparsity;

@@ -20,7 +20,7 @@ use dynadiag::experiments;
 use dynadiag::perfmodel::vit::{
     inference_speedup, train_speedup, ALL_METHODS, VIT_BASE,
 };
-use dynadiag::runtime::{find_artifacts_dir, Manifest};
+use dynadiag::runtime::{BackendKind, Session};
 use dynadiag::train::Trainer;
 
 fn main() {
@@ -60,7 +60,11 @@ COMMANDS
   experiment   <table1|table2|table8|table12|...|fig1|fig4..fig9|all> [--steps N] [--seeds K]
   analyze      --model M [--sparsity S]      small-world & BCSR analysis
   perfmodel    [--sparsity S]                A100 speedup projections
-  info                                       list compiled artifacts
+  info         [--backend auto|xla|native]   list available artifacts
+
+BACKENDS (--backend, default auto)
+  xla     pre-compiled artifacts/ via PJRT (vit/mixer/gpt models)
+  native  pure-Rust kernels, no artifacts needed (mlp models, micro kernels)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -114,16 +118,26 @@ fn cmd_perfmodel(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let dir = find_artifacts_dir(args.opt("artifacts_dir").unwrap_or("artifacts"))?;
-    let manifest = Manifest::load(&dir)?;
-    println!("artifacts in {} ({}):", dir.display(), manifest.artifacts.len());
-    for (name, a) in &manifest.artifacts {
-        println!(
-            "  {:<36} {:>3} inputs {:>3} outputs",
-            name,
-            a.inputs.len(),
-            a.outputs.len()
-        );
+    let kind = BackendKind::parse(args.opt("backend").unwrap_or("auto"))?;
+    let session = Session::open_kind(kind, args.opt("artifacts_dir").unwrap_or("artifacts"))?;
+    let names = session.artifact_names();
+    println!("backend: {} ({} artifacts)", session.backend_name(), names.len());
+    for name in &names {
+        // families with <placeholders> are synthesized on demand
+        if name.contains('<') {
+            println!("  {:<40} (on-demand family)", name);
+            continue;
+        }
+        // describe() reads the IO contract without compiling the artifact
+        match session.describe(name) {
+            Ok(meta) => println!(
+                "  {:<40} {:>3} inputs {:>3} outputs",
+                name,
+                meta.inputs.len(),
+                meta.outputs.len()
+            ),
+            Err(e) => println!("  {:<40} (unavailable: {:#})", name, e),
+        }
     }
     Ok(())
 }

@@ -1,20 +1,39 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute per step.
+//! Execution runtime: the [`Backend`] abstraction, the named-buffer artifact
+//! IO contract, and the [`Session`] compile/executable cache.
 //!
-//! Interchange is HLO *text* — jax ≥ 0.5 serializes protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//! An *artifact* is one executable step function with a typed IO contract
+//! ([`ArtifactMeta`]): ordered, named input buffers in; ordered, named
+//! output buffers out. The contract (section prefixes `params/`, `opt_m/`,
+//! `opt_v/`, `masks/`, `batch/`, `scalar/`, `kvec`) is documented in
+//! docs/ARCHITECTURE.md and mirrored by `python/compile/artifacts.py`.
 //!
-//! The manifest (`artifacts/manifest.json`) carries the named-buffer IO
-//! contract: ordered input/output names + shapes + dtypes per artifact.
-//! `Executable::run` takes host tensors in manifest order and returns the
-//! decomposed output tuple; `train/state.rs` does the name routing.
+//! Two backends implement the contract:
+//!
+//! * [`xla::XlaBackend`] — loads pre-compiled `artifacts/*.hlo.txt` through
+//!   PJRT (the original L2/L1 path). Interchange is HLO *text* — jax ≥ 0.5
+//!   serializes protos with 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids (see python/compile/aot.py).
+//! * [`native::NativeBackend`] — pure-Rust step functions over the
+//!   [`crate::kernels`] subsystem; no `artifacts/` directory, no Python, no
+//!   XLA shared library needed.
+//!
+//! [`Session::open`] picks automatically (XLA when a manifest + runtime are
+//! available, native otherwise); `--backend xla|native` pins the choice.
 
+pub mod native;
+pub mod xla;
+
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
+
+pub use native::NativeBackend;
+pub use xla::{Executable, Runtime, XlaBackend};
 
 /// Element type of an IO buffer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,29 +140,6 @@ impl HostTensor {
                 .ok_or_else(|| anyhow!("empty tensor")),
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
-            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => {
-                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
-            }
-            xla::ElementType::S32 => {
-                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
-            }
-            other => bail!("unsupported output element type {:?}", other),
-        }
-    }
 }
 
 /// One IO slot of an artifact.
@@ -154,7 +150,7 @@ pub struct IoSpec {
     pub dtype: Dtype,
 }
 
-/// Parsed manifest entry.
+/// IO contract of an artifact: ordered inputs/outputs + model metadata.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
     pub name: String,
@@ -199,7 +195,7 @@ impl ArtifactMeta {
     }
 }
 
-/// The artifact registry.
+/// The artifact registry (`artifacts/manifest.json`).
 #[derive(Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
@@ -252,66 +248,56 @@ impl Manifest {
     }
 }
 
-/// PJRT client wrapper (CPU plugin; one per process).
-pub struct Runtime {
-    pub client: xla::PjRtClient,
+// ---------------------------------------------------------------------------
+// Backend abstraction
+// ---------------------------------------------------------------------------
+
+/// A native step implementation: inputs in meta order → outputs in meta
+/// order. Shape/dtype checking happens in [`Artifact::run`] before this is
+/// called.
+pub type StepFn = Box<dyn Fn(&[HostTensor]) -> Result<Vec<HostTensor>>>;
+
+enum ArtifactImpl {
+    /// Compiled PJRT executable (XLA backend).
+    Xla(xla::XlaExec),
+    /// Pure-Rust step function (native backend).
+    Native(StepFn),
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
-
-/// A compiled artifact ready to execute.
-pub struct Executable {
+/// One executable step with its IO contract. Both backends produce this
+/// type, so the trainer/experiments never branch on the backend.
+pub struct Artifact {
     pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
+    imp: ArtifactImpl,
 }
 
-impl Executable {
-    /// Load + compile `name` from the manifest (compile happens once; each
-    /// `run` is then a pure execute).
-    pub fn load(rt: &Runtime, manifest: &Manifest, name: &str) -> Result<Executable> {
-        let meta = manifest.get(name)?.clone();
-        let path = manifest.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = rt
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {}", name))?;
-        Ok(Executable { meta, exe })
+impl Artifact {
+    pub(crate) fn from_xla(meta: ArtifactMeta, exec: xla::XlaExec) -> Artifact {
+        Artifact { meta, imp: ArtifactImpl::Xla(exec) }
+    }
+
+    pub(crate) fn from_native(meta: ArtifactMeta, f: StepFn) -> Artifact {
+        Artifact { meta, imp: ArtifactImpl::Native(f) }
     }
 
     /// Execute with inputs in manifest order; returns outputs in manifest
-    /// order (the artifact returns one tuple, decomposed here).
+    /// order.
     pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.check_inputs(inputs)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        if parts.len() != self.meta.outputs.len() {
+        let outputs = match &self.imp {
+            ArtifactImpl::Xla(exec) => exec.run(inputs)?,
+            ArtifactImpl::Native(f) => f(inputs)
+                .with_context(|| format!("native artifact {}", self.meta.name))?,
+        };
+        if outputs.len() != self.meta.outputs.len() {
             bail!(
                 "artifact {}: {} outputs, manifest says {}",
                 self.meta.name,
-                parts.len(),
+                outputs.len(),
                 self.meta.outputs.len()
             );
         }
-        parts.iter().map(HostTensor::from_literal).collect()
+        Ok(outputs)
     }
 
     fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
@@ -341,6 +327,96 @@ impl Executable {
     }
 }
 
+/// An execution backend: resolves artifact names to runnable [`Artifact`]s.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Load (XLA: parse + compile; native: synthesize) one artifact.
+    fn load(&self, name: &str) -> Result<Artifact>;
+
+    /// IO contract of one artifact *without* compiling it (cheap; used by
+    /// `dynadiag info`).
+    fn describe(&self, name: &str) -> Result<ArtifactMeta> {
+        Ok(self.load(name)?.meta)
+    }
+
+    /// Known artifact names (for `dynadiag info`). May be a representative
+    /// list for backends with parameterized families.
+    fn artifact_names(&self) -> Vec<String>;
+}
+
+/// The `auto` backend: XLA artifacts when available, with *per-artifact*
+/// fallback to native — so native-only models (mlp_*) keep working even
+/// when a compiled `artifacts/` tree exists for the transformer models.
+pub struct AutoBackend {
+    xla: Option<XlaBackend>,
+    native: NativeBackend,
+}
+
+impl Backend for AutoBackend {
+    fn name(&self) -> &'static str {
+        match self.xla {
+            Some(_) => "auto(xla+native)",
+            None => "native",
+        }
+    }
+
+    fn load(&self, name: &str) -> Result<Artifact> {
+        if let Some(xla) = &self.xla {
+            match xla.load(name) {
+                Ok(a) => return Ok(a),
+                Err(e) => {
+                    crate::debug!("xla load of '{}' failed ({:#}); trying native", name, e);
+                }
+            }
+        }
+        self.native.load(name)
+    }
+
+    fn describe(&self, name: &str) -> Result<ArtifactMeta> {
+        if let Some(xla) = &self.xla {
+            if let Ok(meta) = xla.describe(name) {
+                return Ok(meta);
+            }
+        }
+        self.native.describe(name)
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        let mut names = self
+            .xla
+            .as_ref()
+            .map(|x| x.artifact_names())
+            .unwrap_or_default();
+        for n in self.native.artifact_names() {
+            if !names.contains(&n) {
+                names.push(n);
+            }
+        }
+        names
+    }
+}
+
+/// Which backend to open (config key `backend`, CLI `--backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// XLA when artifacts + runtime are available, else native.
+    Auto,
+    Xla,
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "" | "auto" => BackendKind::Auto,
+            "xla" => BackendKind::Xla,
+            "native" => BackendKind::Native,
+            other => bail!("unknown backend '{}' (want auto|xla|native)", other),
+        })
+    }
+}
+
 /// Find the artifacts directory: explicit path, else walk up from cwd.
 pub fn find_artifacts_dir(explicit: &str) -> Result<PathBuf> {
     let p = PathBuf::from(explicit);
@@ -358,6 +434,81 @@ pub fn find_artifacts_dir(explicit: &str) -> Result<PathBuf> {
                 "artifacts/manifest.json not found (looked from cwd up); run `make artifacts`"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// A process-wide session: one backend + compile cache.
+///
+/// Compiling an XLA artifact takes seconds; the experiment matrix reuses the
+/// same executables across hundreds of cells through this cache. Native
+/// artifacts are cheap to build but cache the same way for uniformity.
+pub struct Session {
+    backend: Box<dyn Backend>,
+    cache: RefCell<BTreeMap<String, Rc<Artifact>>>,
+}
+
+impl Session {
+    /// Open with automatic backend selection (see [`BackendKind::Auto`]).
+    pub fn open(artifacts_dir: &str) -> Result<Rc<Session>> {
+        Session::open_kind(BackendKind::Auto, artifacts_dir)
+    }
+
+    /// Open a specific backend.
+    pub fn open_kind(kind: BackendKind, artifacts_dir: &str) -> Result<Rc<Session>> {
+        let backend: Box<dyn Backend> = match kind {
+            BackendKind::Xla => Box::new(XlaBackend::open(artifacts_dir)?),
+            BackendKind::Native => Box::new(NativeBackend::new()),
+            BackendKind::Auto => {
+                let xla = match XlaBackend::open(artifacts_dir) {
+                    Ok(b) => Some(b),
+                    Err(e) => {
+                        crate::info!("XLA backend unavailable ({:#}); using native backend", e);
+                        None
+                    }
+                };
+                Box::new(AutoBackend { xla, native: NativeBackend::new() })
+            }
+        };
+        Ok(Rc::new(Session {
+            backend,
+            cache: RefCell::new(BTreeMap::new()),
+        }))
+    }
+
+    /// Wrap an already-constructed backend (tests, custom setups).
+    pub fn with_backend(backend: Box<dyn Backend>) -> Rc<Session> {
+        Rc::new(Session { backend, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Load (or fetch cached) executable artifact by name.
+    pub fn executable(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(self.backend.load(name)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// IO contract of an artifact without compiling it.
+    pub fn describe(&self, name: &str) -> Result<ArtifactMeta> {
+        self.backend.describe(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.backend.artifact_names()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
     }
 }
 
@@ -395,39 +546,46 @@ mod tests {
         assert_eq!(a.config_usize("batch").unwrap(), 16);
         assert!(m.get("nope").is_err());
     }
-}
 
-/// A process-wide session: one PJRT client + manifest + compile cache.
-///
-/// Compiling an artifact takes seconds; the experiment matrix reuses the
-/// same executables across hundreds of cells through this cache.
-pub struct Session {
-    pub rt: Runtime,
-    pub manifest: Manifest,
-    cache: std::cell::RefCell<BTreeMap<String, std::rc::Rc<Executable>>>,
-}
-
-impl Session {
-    pub fn open(artifacts_dir: &str) -> Result<std::rc::Rc<Session>> {
-        let dir = find_artifacts_dir(artifacts_dir)?;
-        Ok(std::rc::Rc::new(Session {
-            rt: Runtime::cpu()?,
-            manifest: Manifest::load(&dir)?,
-            cache: std::cell::RefCell::new(BTreeMap::new()),
-        }))
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("XLA").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu").is_err());
     }
 
-    /// Load (or fetch cached) compiled executable by artifact name.
-    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let exe = std::rc::Rc::new(Executable::load(&self.rt, &self.manifest, name)?);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
+    #[test]
+    fn artifact_checks_inputs() {
+        let meta = ArtifactMeta {
+            name: "t".into(),
+            file: "<native>".into(),
+            inputs: vec![IoSpec { name: "x".into(), shape: vec![2], dtype: Dtype::F32 }],
+            outputs: vec!["y".into()],
+            meta: Json::Null,
+        };
+        let a = Artifact::from_native(
+            meta,
+            Box::new(|inputs: &[HostTensor]| {
+                let x = inputs[0].as_f32()?;
+                Ok(vec![HostTensor::f32(&[2], x.iter().map(|v| v * 2.0).collect())])
+            }),
+        );
+        // wrong arity and wrong shape are rejected before the step runs
+        assert!(a.run(&[]).is_err());
+        assert!(a.run(&[HostTensor::f32(&[3], vec![0.0; 3])]).is_err());
+        let out = a.run(&[HostTensor::f32(&[2], vec![1.0, 2.0])]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 4.0]);
     }
 
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+    #[test]
+    fn session_auto_falls_back_to_native() {
+        // no artifacts dir in the test environment and the xla stub cannot
+        // construct a client, so Auto must yield the native backend
+        let s = Session::open("/definitely/not/a/dir").unwrap();
+        assert_eq!(s.backend_name(), "native");
+        assert!(s.executable("micro_dense_n16").is_ok());
+        assert_eq!(s.compiled_count(), 1);
     }
 }

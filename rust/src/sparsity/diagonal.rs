@@ -11,6 +11,28 @@ use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
 /// A diagonal-sparse matrix: selected offsets + offset-major values.
+///
+/// Diagonal `off` owns entries `(i, (i + off) mod n_in)`, so a matrix with
+/// K selected diagonals stores `K · n_out` values:
+///
+/// ```
+/// use dynadiag::sparsity::diagonal::DiagMatrix;
+/// use dynadiag::tensor::Tensor;
+///
+/// let mut d = DiagMatrix::new(3, 3, vec![1]); // one wrapped superdiagonal
+/// for i in 0..3 {
+///     d.values[0][i] = (i + 1) as f32;
+/// }
+/// let w = d.to_dense();
+/// assert_eq!(w.at2(0, 1), 1.0); // row 0 owns column (0+1) mod 3
+/// assert_eq!(w.at2(2, 0), 3.0); // row 2 wraps to column (2+1) mod 3
+/// assert_eq!(d.nnz(), 3);
+/// assert!((d.sparsity() - 2.0 / 3.0).abs() < 1e-12);
+///
+/// // y = x @ W.T computed diagonal-wise matches the dense product
+/// let x = Tensor::ones(&[1, 3]);
+/// assert_eq!(d.matmul_t(&x).unwrap().data, w.matmul_t(&x).unwrap().data);
+/// ```
 #[derive(Clone, Debug)]
 pub struct DiagMatrix {
     pub n_out: usize,
@@ -23,6 +45,13 @@ pub struct DiagMatrix {
 
 /// Number of diagonals for a target sparsity (footnote 1 of the paper,
 /// restated for our per-element-partition convention): K = (1-S)·n_in.
+///
+/// ```
+/// use dynadiag::sparsity::diagonal::diag_count;
+/// assert_eq!(diag_count(768, 0.9), 77);   // 90% sparse keeps ~10% of diagonals
+/// assert_eq!(diag_count(768, 0.0), 768);  // dense keeps all of them
+/// assert_eq!(diag_count(768, 0.9999), 1); // never below one diagonal
+/// ```
 pub fn diag_count(n_in: usize, sparsity: f64) -> usize {
     (((1.0 - sparsity) * n_in as f64).round() as usize).clamp(1, n_in)
 }

@@ -10,6 +10,18 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Dense boolean mask with row-major layout, shape [rows, cols].
+///
+/// ```
+/// use dynadiag::sparsity::mask::Mask;
+///
+/// let mut m = Mask::zeros(2, 3);
+/// m.set(0, 1, true);
+/// m.set(1, 2, true);
+/// assert_eq!(m.nnz(), 2);
+/// assert!((m.sparsity() - 4.0 / 6.0).abs() < 1e-12);
+/// // the f32 upload buffer is the 0/1 image of the bits
+/// assert_eq!(m.to_f32(), vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mask {
     pub rows: usize,

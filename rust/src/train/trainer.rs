@@ -21,7 +21,7 @@ use crate::dst::dynadiag::DynaDiagController;
 use crate::dst::{self, DstMethod, GrowAction};
 use std::rc::Rc;
 
-use crate::runtime::{Executable, HostTensor, Session};
+use crate::runtime::{Artifact, HostTensor, Session};
 use crate::sparsity::diagonal::DiagMatrix;
 use crate::sparsity::distribution::{allocate, LayerShape};
 use crate::sparsity::mask::Mask;
@@ -118,9 +118,9 @@ pub struct TrainResult {
 pub struct Trainer {
     pub cfg: RunConfig,
     pub session: Rc<Session>,
-    train_exe: Rc<Executable>,
-    eval_exe: Rc<Executable>,
-    probe_exe: Option<Rc<Executable>>,
+    train_exe: Rc<Artifact>,
+    eval_exe: Rc<Artifact>,
+    probe_exe: Option<Rc<Artifact>>,
     pub store: ParamStore,
     pub masks: BTreeMap<String, Mask>,
     method: Option<Box<dyn DstMethod>>,
@@ -134,7 +134,7 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: RunConfig) -> Result<Trainer> {
-        let session = Session::open(&cfg.artifacts_dir)?;
+        let session = Session::open_kind(cfg.backend_kind()?, &cfg.artifacts_dir)?;
         Trainer::with_session(cfg, session)
     }
 

@@ -1,0 +1,238 @@
+//! Property tests: the native kernel subsystem must agree with the
+//! reference `tensor::Tensor` math across random shapes, sparsities, and
+//! batch sizes (the ISSUE-1 kernel parity acceptance gate).
+//!
+//! Each property draws its cases through `util::prop::forall_explain`, so a
+//! failure reports the seed and the exact failing configuration.
+
+use dynadiag::bcsr::Bcsr;
+use dynadiag::kernels::{bcsr, dense, diag, dense_matmul_t, DiagPacked};
+use dynadiag::sparsity::diagonal::DiagMatrix;
+use dynadiag::tensor::Tensor;
+use dynadiag::util::prop::forall_explain;
+use dynadiag::util::rng::Rng;
+
+fn random_diag(rng: &mut Rng, n_out: usize, n_in: usize, k: usize) -> DiagMatrix {
+    let offsets = rng.choose_k(n_in, k);
+    let mut d = DiagMatrix::new(n_out, n_in, offsets);
+    for j in 0..d.k() {
+        for i in 0..n_out {
+            d.values[j][i] = rng.normal_f32(0.0, 1.0);
+        }
+    }
+    d
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// Native diag SpMM forward ≡ `DiagMatrix::to_dense()` matmul.
+#[test]
+fn diag_spmm_t_matches_dense_composition() {
+    forall_explain(
+        101,
+        60,
+        |r| {
+            let n_in = 2 + r.below(60);
+            let n_out = 2 + r.below(80);
+            let k = 1 + r.below(n_in);
+            let b = 1 + r.below(9);
+            let mut rr = r.fork(1);
+            let d = random_diag(&mut rr, n_out, n_in, k);
+            let x = Tensor::randn(&[b, n_in], 1.0, &mut rr);
+            (d, x)
+        },
+        |(d, x)| {
+            let packed = DiagPacked::from_matrix(d);
+            let fast = packed.matmul_t(x).map_err(|e| e.to_string())?;
+            let slow = d.to_dense().matmul_t(x).unwrap();
+            let diff = fast.max_abs_diff(&slow);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("forward diff {}", diff))
+            }
+        },
+    );
+}
+
+/// Native diag transposed product ≡ dense `dy @ W`.
+#[test]
+fn diag_spmm_matches_dense_transpose_product() {
+    forall_explain(
+        102,
+        60,
+        |r| {
+            let n_in = 2 + r.below(40);
+            let n_out = 2 + r.below(60);
+            let k = 1 + r.below(n_in);
+            let b = 1 + r.below(6);
+            let mut rr = r.fork(2);
+            let d = random_diag(&mut rr, n_out, n_in, k);
+            let dy = Tensor::randn(&[b, n_out], 1.0, &mut rr);
+            (d, dy)
+        },
+        |(d, dy)| {
+            let packed = DiagPacked::from_matrix(d);
+            let fast = packed.matmul(dy).map_err(|e| e.to_string())?;
+            let slow = dy.matmul(&d.to_dense()).unwrap();
+            let diff = fast.max_abs_diff(&slow);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("backward diff {}", diff))
+            }
+        },
+    );
+}
+
+/// Native diag weight-gradient ≡ the dense chain `dyᵀ @ x` read along the
+/// selected diagonals.
+#[test]
+fn diag_grad_values_matches_dense_chain() {
+    forall_explain(
+        103,
+        40,
+        |r| {
+            let n_in = 2 + r.below(30);
+            let n_out = 2 + r.below(40);
+            let k = 1 + r.below(n_in);
+            let b = 1 + r.below(6);
+            let mut rr = r.fork(3);
+            let d = random_diag(&mut rr, n_out, n_in, k);
+            let x = Tensor::randn(&[b, n_in], 1.0, &mut rr);
+            let dy = Tensor::randn(&[b, n_out], 1.0, &mut rr);
+            (d, x, dy)
+        },
+        |(d, x, dy)| {
+            let (b, n_in, n_out) = (x.rows(), d.n_in, d.n_out);
+            let mut dv = vec![0.0f32; d.k() * n_out];
+            diag::grad_values(&x.data, &dy.data, &d.offsets, &mut dv, b, n_in, n_out);
+            let dw = dy.transpose2().matmul(x).unwrap();
+            for (j, &off) in d.offsets.iter().enumerate() {
+                for i in 0..n_out {
+                    let c = dynadiag::sparsity::diagonal::diag_col(i, off, n_in);
+                    let want = dw.at2(i, c);
+                    let got = dv[j * n_out + i];
+                    if (want - got).abs() >= 1e-3 {
+                        return Err(format!("j={} i={}: {} vs {}", j, i, want, got));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Native BCSR SpMM ≡ dense reference matmul on random block-sparse
+/// matrices.
+#[test]
+fn bcsr_spmm_matches_dense_reference() {
+    forall_explain(
+        104,
+        40,
+        |r| {
+            let bs = [2usize, 4, 8][r.below(3)];
+            let rows = bs * (1 + r.below(10));
+            let cols = bs * (1 + r.below(10));
+            let b = 1 + r.below(6);
+            let mut rr = r.fork(4);
+            let mut w = Tensor::zeros(&[rows, cols]);
+            for v in w.data.iter_mut() {
+                if rr.bool(0.2) {
+                    *v = rr.normal_f32(0.0, 1.0);
+                }
+            }
+            let x = Tensor::randn(&[b, cols], 1.0, &mut rr);
+            (w, x, bs)
+        },
+        |(w, x, bs)| {
+            let bcsr_mat = Bcsr::from_dense(w, *bs).map_err(|e| e.to_string())?;
+            let (b, rows, cols) = (x.rows(), w.rows(), w.cols());
+            let mut y = vec![0.0f32; b * rows];
+            bcsr::spmm_t(
+                &x.data,
+                &bcsr_mat.row_ptr,
+                &bcsr_mat.col_idx,
+                &bcsr_mat.blocks,
+                *bs,
+                rows,
+                cols,
+                &mut y,
+                b,
+            );
+            let want = w.matmul_t(x).unwrap();
+            let diff = max_diff(&want.data, &y);
+            if diff < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("bcsr diff {}", diff))
+            }
+        },
+    );
+}
+
+/// Native dense GEMM ≡ reference matmul, including shapes that don't align
+/// with the register/cache blocking.
+#[test]
+fn dense_gemm_matches_reference() {
+    forall_explain(
+        105,
+        40,
+        |r| {
+            let n_in = 1 + r.below(130);
+            let n_out = 1 + r.below(90);
+            let b = 1 + r.below(10);
+            let mut rr = r.fork(5);
+            let w = Tensor::randn(&[n_out, n_in], 1.0, &mut rr);
+            let x = Tensor::randn(&[b, n_in], 1.0, &mut rr);
+            (w, x)
+        },
+        |(w, x)| {
+            let fast = dense_matmul_t(w, x).map_err(|e| e.to_string())?;
+            let slow = w.matmul_t(x).unwrap();
+            let diff = fast.max_abs_diff(&slow);
+            if diff < 2e-3 {
+                Ok(())
+            } else {
+                Err(format!("gemm diff {}", diff))
+            }
+        },
+    );
+}
+
+/// The two backward dense products agree with the reference algebra.
+#[test]
+fn dense_backward_products_match_reference() {
+    forall_explain(
+        106,
+        30,
+        |r| {
+            let n_in = 1 + r.below(50);
+            let n_out = 1 + r.below(50);
+            let b = 1 + r.below(8);
+            let mut rr = r.fork(6);
+            let w = Tensor::randn(&[n_out, n_in], 1.0, &mut rr);
+            let x = Tensor::randn(&[b, n_in], 1.0, &mut rr);
+            let dy = Tensor::randn(&[b, n_out], 1.0, &mut rr);
+            (w, x, dy)
+        },
+        |(w, x, dy)| {
+            let (b, n_in, n_out) = (x.rows(), w.cols(), w.rows());
+            let mut dx = vec![0.0f32; b * n_in];
+            dense::gemm(&dy.data, &w.data, &mut dx, b, n_in, n_out);
+            let want_dx = dy.matmul(w).unwrap();
+            if max_diff(&want_dx.data, &dx) >= 1e-3 {
+                return Err("gemm (dx) mismatch".to_string());
+            }
+            let mut dw = vec![0.0f32; n_out * n_in];
+            dense::gemm_grad_w(&dy.data, &x.data, &mut dw, b, n_in, n_out);
+            let want_dw = dy.transpose2().matmul(x).unwrap();
+            if max_diff(&want_dw.data, &dw) >= 1e-3 {
+                return Err("gemm_grad_w mismatch".to_string());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,156 @@
+//! Headless stub of the `xla-rs` PJRT binding surface `dynadiag` compiles
+//! against. The offline build environment has no XLA shared library, so
+//! every entry point fails at *runtime* with a clear message while the
+//! `XlaBackend` code keeps compiling unchanged. Replacing this crate with
+//! the real bindings (same module path, same signatures) re-enables the
+//! artifact execution path — see docs/ARCHITECTURE.md §Backends.
+//!
+//! Only [`PjRtClient::cpu`] is reachable in practice: it errors, so no
+//! executable or literal ever flows through the other methods.
+
+use std::fmt;
+
+/// Error surfaced by every stubbed entry point.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "XLA/PJRT runtime is not linked in this build; \
+     use the native backend (--backend native) or replace rust/vendor/xla \
+     with the real xla-rs bindings";
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Buffer element types the dynadiag manifest can carry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    F32,
+    F64,
+}
+
+/// Shape of an array literal: dims + element type.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal (stub: carries no data).
+#[derive(Clone, Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Clone>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub: never constructed successfully).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("native backend"), "{}", msg);
+    }
+}
