@@ -1,15 +1,26 @@
-//! `cargo bench --bench kernels` — native kernel sweep + coordinator
-//! per-step primitives.
+//! `cargo bench --bench kernels` — native kernel sweep + training-step
+//! timing + coordinator per-step primitives.
 //!
 //! Sweeps (dim × sparsity × batch) over the three matmul backends of the
 //! `kernels` subsystem — cache-blocked dense GEMM, offset-major diagonal
-//! SpMM, and BCSR SpMM — printing a table and writing
-//! `results/kernel_bench.json`, which `dynadiag experiment fig7` folds into
-//! its report. The headline check: diagonal SpMM beats dense GEMM at ≥90%
-//! sparsity.
+//! SpMM, and BCSR SpMM — for all three training products (forward,
+//! input-grad, weight-grad), printing a table and writing
+//! `results/kernel_bench.json`. Every cell records the per-kernel speedup
+//! ratios (diag vs dense at equal layer shape) directly, so `dynadiag
+//! experiment fig7` consumes them without recomputation. A `train_step`
+//! section times the native `mlp_*` train artifacts through the
+//! zero-allocation workspace path.
+//!
+//! The headline check mirrors ISSUE 2's acceptance bar: diagonal `spmm_t`
+//! at 90% sparsity must beat `gemm_t` by ≥ 2x at dim ≥ 1024.
+//!
+//! Set `DYNADIAG_BENCH_FAST=1` (the CI `bench-smoke` job does) for a
+//! shortened sweep with the same JSON schema.
 
 use dynadiag::bcsr::convert::diag_to_bcsr;
-use dynadiag::kernels::{bcsr, dense, DiagPacked};
+use dynadiag::kernels::{bcsr, dense, diag, DiagPacked};
+use dynadiag::runtime::native::drive;
+use dynadiag::runtime::{BackendKind, Session};
 use dynadiag::sparsity::diagonal::{diag_count, DiagMatrix};
 use dynadiag::sparsity::mask::Mask;
 use dynadiag::sparsity::topk::soft_topk;
@@ -29,39 +40,80 @@ fn random_diag(rng: &mut Rng, n: usize, k: usize) -> DiagMatrix {
     d
 }
 
-const DIMS: [usize; 2] = [256, 768];
-const BATCHES: [usize; 3] = [8, 32, 128];
-const SPARSITIES: [f64; 5] = [0.99, 0.95, 0.90, 0.80, 0.50];
+/// Drive a native train artifact like the trainer does (outputs fed back,
+/// buffers recycled through the workspace) and return per-step stats.
+/// The input synthesis + feedback routing is the same `drive` helper the
+/// steady-state allocation test uses.
+fn bench_train_step(name: &str, iters: usize) -> Option<dynadiag::util::timer::BenchStats> {
+    let session = Session::open_kind(BackendKind::Native, "artifacts").ok()?;
+    let art = session.executable(name).ok()?;
+    let mut inputs = drive::synth_train_inputs(&art, 404);
+    let mut feedback = drive::TrainFeedback::new(&art);
+    let stats = bench(2, iters, || {
+        let outputs = art.run(&inputs).unwrap();
+        feedback.apply(&mut inputs, outputs);
+    });
+    Some(stats)
+}
 
 fn main() {
+    // fast mode iff the var is set to something truthy (a literal "0" or
+    // empty string must NOT silently trim the sweep)
+    let fast = std::env::var("DYNADIAG_BENCH_FAST")
+        .map(|v| !v.is_empty() && v != "0" && v.to_ascii_lowercase() != "false")
+        .unwrap_or(false);
+    let dims: &[usize] = if fast { &[256, 1024] } else { &[256, 768, 1024] };
+    let batches: &[usize] = if fast { &[32] } else { &[8, 32, 128] };
+    let sparsities: &[f64] = if fast {
+        &[0.90, 0.50]
+    } else {
+        &[0.99, 0.95, 0.90, 0.80, 0.50]
+    };
+    let iters = if fast { 3 } else { 5 };
+
     let mut rng = Rng::new(2024);
     let mut cells: Vec<Json> = Vec::new();
-    let mut best_90: Option<(usize, usize, f64)> = None;
+    // acceptance tracker: fwd speedup at S >= 0.90 and dim >= 1024
+    let mut best_90_large: Option<(usize, usize, f64)> = None;
 
-    println!("== native kernel sweep: dense vs diag vs bcsr (y = x @ W.T) ==");
     println!(
-        "{:>5} {:>6} {:>9} {:>5} {:>10} {:>10} {:>10} {:>9}",
-        "dim", "batch", "sparsity", "K", "dense ms", "diag ms", "bcsr ms", "diag spd"
+        "== native kernel sweep: dense vs diag vs bcsr (fwd / input-grad / weight-grad){} ==",
+        if fast { " [fast]" } else { "" }
     );
-    for &n in &DIMS {
-        for &b in &BATCHES {
+    println!(
+        "{:>5} {:>6} {:>9} {:>5} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8}",
+        "dim", "batch", "sparsity", "K", "dense ms", "diag ms", "bcsr ms", "fwd spd", "bwd spd", "dW spd"
+    );
+    for &n in dims {
+        for &b in batches {
             let x: Vec<f32> = (0..b * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             let w: Vec<f32> = (0..n * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let dy: Vec<f32> = (0..b * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             let mut y = vec![0.0f32; b * n];
-            let t_dense = bench(1, 5, || dense::gemm_t(&x, &w, &mut y, b, n, n));
-            for &s in &SPARSITIES {
+            let mut dx = vec![0.0f32; b * n];
+            let mut dw = vec![0.0f32; n * n];
+            let t_dense_fwd = bench(1, iters, || dense::gemm_t(&x, &w, &mut y, b, n, n));
+            let t_dense_bwd = bench(1, iters, || dense::gemm(&dy, &w, &mut dx, b, n, n));
+            let t_dense_wg = bench(1, iters, || dense::gemm_grad_w(&dy, &x, &mut dw, b, n, n));
+            for &s in sparsities {
                 let k = diag_count(n, s);
                 let d = random_diag(&mut rng, n, k);
                 let packed = DiagPacked::from_matrix(&d);
                 let mut yd = vec![0.0f32; b * n];
-                let t_diag = bench(1, 5, || {
-                    dynadiag::kernels::diag::spmm_t(
-                        &x, &packed.offsets, &packed.values, &mut yd, b, n, n,
-                    )
+                let mut dxd = vec![0.0f32; b * n];
+                let mut dv = vec![0.0f32; k * n];
+                let t_diag_fwd = bench(1, iters, || {
+                    diag::spmm_t(&x, &packed.offsets, &packed.values, &mut yd, b, n, n)
+                });
+                let t_diag_bwd = bench(1, iters, || {
+                    diag::spmm(&dy, &packed.offsets, &packed.values, &mut dxd, b, n, n)
+                });
+                let t_diag_wg = bench(1, iters, || {
+                    diag::grad_values(&x, &dy, &packed.offsets, &mut dv, b, n, n)
                 });
                 let conv = diag_to_bcsr(&d, 32, 0.4).expect("bcsr conversion");
                 let mut yb = vec![0.0f32; b * n];
-                let t_bcsr = bench(1, 5, || {
+                let t_bcsr = bench(1, iters, || {
                     bcsr::spmm_t(
                         &x,
                         &conv.bcsr.row_ptr,
@@ -74,70 +126,121 @@ fn main() {
                         b,
                     )
                 });
-                let speedup = t_dense.mean_s / t_diag.mean_s;
-                if s >= 0.90 && speedup > best_90.map(|(_, _, v)| v).unwrap_or(0.0) {
-                    best_90 = Some((n, b, speedup));
+                let fwd_speedup = t_dense_fwd.mean_s / t_diag_fwd.mean_s;
+                let bwd_speedup = t_dense_bwd.mean_s / t_diag_bwd.mean_s;
+                let wgrad_speedup = t_dense_wg.mean_s / t_diag_wg.mean_s;
+                if s >= 0.90
+                    && n >= 1024
+                    && fwd_speedup > best_90_large.map(|(_, _, v)| v).unwrap_or(0.0)
+                {
+                    best_90_large = Some((n, b, fwd_speedup));
                 }
                 println!(
-                    "{:>5} {:>6} {:>8.0}% {:>5} {:>10.3} {:>10.3} {:>10.3} {:>8.2}x",
+                    "{:>5} {:>6} {:>8.0}% {:>5} {:>10.3} {:>10.3} {:>10.3} {:>7.2}x {:>7.2}x {:>7.2}x",
                     n,
                     b,
                     s * 100.0,
                     k,
-                    t_dense.mean_ms(),
-                    t_diag.mean_ms(),
+                    t_dense_fwd.mean_ms(),
+                    t_diag_fwd.mean_ms(),
                     t_bcsr.mean_ms(),
-                    speedup
+                    fwd_speedup,
+                    bwd_speedup,
+                    wgrad_speedup
                 );
                 cells.push(Json::obj(vec![
                     ("dim", Json::Num(n as f64)),
                     ("batch", Json::Num(b as f64)),
                     ("sparsity", Json::Num(s)),
                     ("k", Json::Num(k as f64)),
-                    ("dense_ms", Json::Num(t_dense.mean_ms())),
-                    ("diag_ms", Json::Num(t_diag.mean_ms())),
+                    ("dense_ms", Json::Num(t_dense_fwd.mean_ms())),
+                    ("diag_ms", Json::Num(t_diag_fwd.mean_ms())),
                     ("bcsr_ms", Json::Num(t_bcsr.mean_ms())),
-                    ("diag_speedup", Json::Num(speedup)),
-                    ("bcsr_speedup", Json::Num(t_dense.mean_s / t_bcsr.mean_s)),
+                    ("diag_speedup", Json::Num(fwd_speedup)),
+                    ("bcsr_speedup", Json::Num(t_dense_fwd.mean_s / t_bcsr.mean_s)),
+                    ("bwd_dense_ms", Json::Num(t_dense_bwd.mean_ms())),
+                    ("bwd_diag_ms", Json::Num(t_diag_bwd.mean_ms())),
+                    ("bwd_speedup", Json::Num(bwd_speedup)),
+                    ("wgrad_dense_ms", Json::Num(t_dense_wg.mean_ms())),
+                    ("wgrad_diag_ms", Json::Num(t_diag_wg.mean_ms())),
+                    ("wgrad_speedup", Json::Num(wgrad_speedup)),
                 ]));
             }
         }
     }
 
-    match best_90 {
-        Some((n, b, v)) if v > 1.0 => println!(
-            "\ndiag SpMM beats dense GEMM at >=90% sparsity: best {:.2}x at dim {} batch {}",
+    match best_90_large {
+        Some((n, b, v)) if v >= 2.0 => println!(
+            "\nPASS: diag spmm_t >= 2x over gemm_t at >=90% sparsity, dim {} batch {} ({:.2}x)",
+            n, b, v
+        ),
+        Some((n, b, v)) => println!(
+            "\nWARNING: best diag spmm_t speedup at >=90% sparsity, dim>=1024 is {:.2}x \
+             (dim {} batch {}) — below the 2x bar (noisy machine?)",
             v, n, b
         ),
-        _ => println!("\nWARNING: diag SpMM did not beat dense at >=90% sparsity on this run"),
+        None => println!("\n(no dim >= 1024 cells in this sweep)"),
+    }
+
+    // training-step timing through the zero-allocation native path
+    println!("\n== native train-step timing (workspace-recycled loop) ==");
+    let mut train_steps: Vec<Json> = Vec::new();
+    let models: &[&str] = if fast {
+        &["mlp_micro_masked_train"]
+    } else {
+        &["mlp_micro_masked_train", "mlp_tiny_masked_train", "mlp_micro_dynadiag_train"]
+    };
+    for name in models {
+        match bench_train_step(name, if fast { 5 } else { 20 }) {
+            Some(t) => {
+                println!(
+                    "{:<28} mean {:>8.3} ms  min {:>8.3} ms  ({} steps)",
+                    name,
+                    t.mean_ms(),
+                    t.min_s * 1e3,
+                    t.iters
+                );
+                train_steps.push(Json::obj(vec![
+                    ("model", Json::Str(name.to_string())),
+                    ("mean_ms", Json::Num(t.mean_ms())),
+                    ("min_ms", Json::Num(t.min_s * 1e3)),
+                    ("steps", Json::Num(t.iters as f64)),
+                ]));
+            }
+            None => println!("{:<28} unavailable", name),
+        }
     }
 
     let out_dir = std::path::PathBuf::from("results");
     std::fs::create_dir_all(&out_dir).expect("mkdir results");
     let json = Json::obj(vec![
         ("bench", Json::Str("kernels".to_string())),
+        ("fast", Json::Bool(fast)),
         ("threads", Json::Num(dynadiag::kernels::pool::num_threads() as f64)),
         ("cells", Json::Arr(cells)),
+        ("train_steps", Json::Arr(train_steps)),
     ]);
     let path = out_dir.join("kernel_bench.json");
     std::fs::write(&path, json.to_string()).expect("write kernel_bench.json");
     println!("wrote {}", path.display());
 
-    println!("\n== coordinator per-step primitives ==");
-    let n = 768;
-    let k = diag_count(n, 0.9);
-    let mask = Mask::random(n, n, k * n, &mut rng);
-    let t = bench(2, 20, || mask.to_f32());
-    println!("mask -> f32 upload buffer (768^2)  {:>9.3} ms", t.mean_ms());
-    let alpha: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-    let t = bench(2, 50, || soft_topk(&alpha, k as f64, 0.05));
-    println!("soft_topk host mirror (D=768)      {:>9.3} ms", t.mean_ms());
-    let w = Tensor::randn(&[n, n], 1.0, &mut rng);
-    let t = bench(1, 5, || dynadiag::dst::active_by_magnitude(&mask, &w));
-    println!("prune scoring (sort active 768^2)  {:>9.3} ms", t.mean_ms());
-    let t = bench(1, 3, || dynadiag::dst::cht::ch3_scores(&mask));
-    println!("CHT CH3 link scores (768^2)        {:>9.3} ms", t.mean_ms());
-    let d = random_diag(&mut rng, n, k);
-    let t = bench(1, 5, || diag_to_bcsr(&d, 32, 0.4).unwrap());
-    println!("diag->bcsr convert (768^2, K={})   {:>9.3} ms", k, t.mean_ms());
+    if !fast {
+        println!("\n== coordinator per-step primitives ==");
+        let n = 768;
+        let k = diag_count(n, 0.9);
+        let mask = Mask::random(n, n, k * n, &mut rng);
+        let t = bench(2, 20, || mask.to_f32());
+        println!("mask -> f32 upload buffer (768^2)  {:>9.3} ms", t.mean_ms());
+        let alpha: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = bench(2, 50, || soft_topk(&alpha, k as f64, 0.05));
+        println!("soft_topk host mirror (D=768)      {:>9.3} ms", t.mean_ms());
+        let w = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let t = bench(1, 5, || dynadiag::dst::active_by_magnitude(&mask, &w));
+        println!("prune scoring (sort active 768^2)  {:>9.3} ms", t.mean_ms());
+        let t = bench(1, 3, || dynadiag::dst::cht::ch3_scores(&mask));
+        println!("CHT CH3 link scores (768^2)        {:>9.3} ms", t.mean_ms());
+        let d = random_diag(&mut rng, n, k);
+        let t = bench(1, 5, || diag_to_bcsr(&d, 32, 0.4).unwrap());
+        println!("diag->bcsr convert (768^2, K={})   {:>9.3} ms", k, t.mean_ms());
+    }
 }

@@ -127,10 +127,17 @@ pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
         // schema, interrupted write) must not abort the experiment
         let summarize = |report: &mut Report| -> Result<()> {
             let j = Json::from_file(&bench_json)?;
+            // pre-ISSUE-2 JSONs lack the backward ratios; print "-" there
+            let opt_speedup = |c: &Json, key: &str| -> String {
+                match c.get(key).and_then(|v| v.as_f64().ok()) {
+                    Some(v) => format!("{:.2}x", v),
+                    None => "-".to_string(),
+                }
+            };
             let mut lines = Vec::new();
             for c in j.req("cells")?.as_arr()? {
                 lines.push(format!(
-                    "| {} | {} | {:.0}% | {:.3} | {:.3} | {:.3} | {:.2}x |",
+                    "| {} | {} | {:.0}% | {:.3} | {:.3} | {:.3} | {:.2}x | {} | {} |",
                     c.req("dim")?.as_usize()?,
                     c.req("batch")?.as_usize()?,
                     c.req("sparsity")?.as_f64()? * 100.0,
@@ -138,15 +145,35 @@ pub fn run(session: &Rc<Session>, opts: &ExpOpts) -> Result<()> {
                     c.req("diag_ms")?.as_f64()?,
                     c.req("bcsr_ms")?.as_f64()?,
                     c.req("diag_speedup")?.as_f64()?,
+                    opt_speedup(c, "bwd_speedup"),
+                    opt_speedup(c, "wgrad_speedup"),
                 ));
             }
             report.line("### kernel bench sweep (results/kernel_bench.json)");
-            report.line("| dim | batch | sparsity | dense ms | diag ms | bcsr ms | diag speedup |");
-            report.line("|---|---|---|---|---|---|---|");
+            report.line(
+                "| dim | batch | sparsity | dense ms | diag ms | bcsr ms | fwd speedup | bwd speedup | dW speedup |",
+            );
+            report.line("|---|---|---|---|---|---|---|---|---|");
             for l in lines {
                 report.line(l);
             }
             report.blank();
+            if let Some(steps) = j.get("train_steps").and_then(|v| v.as_arr().ok()) {
+                if !steps.is_empty() {
+                    report.line("### native train-step timing (workspace-recycled loop)");
+                    report.line("| model | mean ms | min ms |");
+                    report.line("|---|---|---|");
+                    for s in steps {
+                        report.line(format!(
+                            "| {} | {:.3} | {:.3} |",
+                            s.req("model")?.as_str()?,
+                            s.req("mean_ms")?.as_f64()?,
+                            s.req("min_ms")?.as_f64()?,
+                        ));
+                    }
+                    report.blank();
+                }
+            }
             Ok(())
         };
         if let Err(e) = summarize(&mut report) {

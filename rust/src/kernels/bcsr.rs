@@ -29,7 +29,8 @@ pub fn spmm_t(
     assert_eq!(y.len(), b * rows, "bcsr spmm_t: y length");
     assert_eq!(blocks.len(), col_idx.len() * bs * bs, "bcsr spmm_t: blocks length");
     y.fill(0.0);
-    parallel_rows(y, rows, 4, |first_row, y_chunk| {
+    // each batch row touches every stored block once
+    parallel_rows(y, rows, 2 * col_idx.len() * bs * bs, |first_row, y_chunk| {
         let batch_rows = y_chunk.len() / rows;
         for r in 0..batch_rows {
             let xr = &x[(first_row + r) * cols..(first_row + r + 1) * cols];

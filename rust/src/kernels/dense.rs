@@ -3,8 +3,9 @@
 //! This is the baseline every sparse kernel races against (Fig 7's
 //! denominator). Layout choices:
 //! * parallel over batch rows (disjoint `y` rows, shared read-only `W`),
-//! * 4-way output-row register blocking so each `x` row is reused from
-//!   registers across four simultaneous dot products,
+//! * 8-way output-row register blocking (with a 4-way and scalar tail) so
+//!   each `x` element is reused from registers across eight simultaneous
+//!   dot products,
 //! * `KC`-blocking over the reduction dim so the active `x` / `W` panels
 //!   stay in L1/L2 for the larger layer shapes.
 
@@ -19,8 +20,7 @@ pub fn gemm_t(x: &[f32], w: &[f32], y: &mut [f32], b: usize, n_in: usize, n_out:
     assert_eq!(w.len(), n_out * n_in, "gemm_t: w length");
     assert_eq!(y.len(), b * n_out, "gemm_t: y length");
     y.fill(0.0);
-    // grain: keep at least ~4 rows of output per worker before fanning out
-    parallel_rows(y, n_out, 4, |first_row, y_chunk| {
+    parallel_rows(y, n_out, 2 * n_in * n_out, |first_row, y_chunk| {
         let x_chunk = &x[first_row * n_in..first_row * n_in + (y_chunk.len() / n_out) * n_in];
         gemm_t_chunk(x_chunk, w, y_chunk, n_in, n_out);
     });
@@ -32,7 +32,25 @@ fn gemm_t_chunk(x: &[f32], w: &[f32], y: &mut [f32], n_in: usize, n_out: usize) 
         for (xr, yr) in x.chunks_exact(n_in).zip(y.chunks_exact_mut(n_out)) {
             let xk = &xr[k0..k0 + kc];
             let mut oi = 0;
-            // 4-way register blocking over output rows
+            // 8-way register blocking over output rows: eight unrolled
+            // accumulators reuse each x element from a register
+            while oi + 8 <= n_out {
+                let rows: [&[f32]; 8] = std::array::from_fn(|u| {
+                    &w[(oi + u) * n_in + k0..(oi + u) * n_in + k0 + kc]
+                });
+                let mut acc = [0.0f32; 8];
+                for c in 0..kc {
+                    let xv = xk[c];
+                    for u in 0..8 {
+                        acc[u] += xv * rows[u][c];
+                    }
+                }
+                for u in 0..8 {
+                    yr[oi + u] += acc[u];
+                }
+                oi += 8;
+            }
+            // 4-way tail
             while oi + 4 <= n_out {
                 let w0 = &w[oi * n_in + k0..oi * n_in + k0 + kc];
                 let w1 = &w[(oi + 1) * n_in + k0..(oi + 1) * n_in + k0 + kc];
@@ -72,7 +90,7 @@ pub fn gemm_grad_w(dy: &[f32], x: &[f32], dw: &mut [f32], b: usize, n_in: usize,
     assert_eq!(x.len(), b * n_in, "gemm_grad_w: x length");
     assert_eq!(dw.len(), n_out * n_in, "gemm_grad_w: dw length");
     dw.fill(0.0);
-    parallel_rows(dw, n_in, 8, |first_out, dw_chunk| {
+    parallel_rows(dw, n_in, 2 * b * n_in, |first_out, dw_chunk| {
         for (r, dwr) in dw_chunk.chunks_exact_mut(n_in).enumerate() {
             let oi = first_out + r;
             for bi in 0..b {
@@ -96,7 +114,7 @@ pub fn gemm(dy: &[f32], w: &[f32], dx: &mut [f32], b: usize, n_in: usize, n_out:
     assert_eq!(w.len(), n_out * n_in, "gemm: w length");
     assert_eq!(dx.len(), b * n_in, "gemm: dx length");
     dx.fill(0.0);
-    parallel_rows(dx, n_in, 4, |first_row, dx_chunk| {
+    parallel_rows(dx, n_in, 2 * n_out * n_in, |first_row, dx_chunk| {
         for (r, dxr) in dx_chunk.chunks_exact_mut(n_in).enumerate() {
             let dyr = &dy[(first_row + r) * n_out..(first_row + r + 1) * n_out];
             for (oi, &g) in dyr.iter().enumerate() {

@@ -11,10 +11,72 @@
 //! * input grad     `dx = dy @ W`    — [`spmm`]
 //! * weight grad    `dV[j,i] = Σ_b dy[b,i] · x[b, col(i,off_j)]` — [`grad_values`]
 //!
-//! The wrapped column index `(i + off) mod n_in` is maintained by a
-//! carry counter instead of a `%` in the inner loop.
+//! **Two-segment inner loops:** the wrapped column walk `(i + off) mod
+//! n_in` splits each diagonal into contiguous sub-ranges where both sides
+//! stream linearly (two segments when `n_out <= n_in`, `ceil` more when the
+//! diagonal wraps repeatedly). Inside a segment the loop is a branch-free
+//! strided FMA over three contiguous slices, which the compiler
+//! autovectorizes; the seed implementation's per-element carry branch
+//! (`if c == n_in { c = 0 }`) defeated that.
 
-use super::pool::parallel_rows;
+use super::pool::{num_threads, parallel_rows, TASK_GRAIN_FLOPS};
+
+/// `y[i] += v[i] * x[(i + off) mod n]` over `i in 0..y.len()`, decomposed
+/// into contiguous wrap segments (`v.len() == y.len()`, `x.len() == n`).
+#[inline]
+fn fma_wrap_gather(y: &mut [f32], v: &[f32], x: &[f32], off: usize) {
+    let n_in = x.len();
+    let n_out = y.len();
+    debug_assert_eq!(v.len(), n_out);
+    if n_in == 0 || n_out == 0 {
+        return;
+    }
+    let mut i = 0usize;
+    let mut c = off % n_in;
+    while i < n_out {
+        let seg = (n_out - i).min(n_in - c);
+        let ys = &mut y[i..i + seg];
+        let vs = &v[i..i + seg];
+        let xs = &x[c..c + seg];
+        for ((yv, &vv), &xv) in ys.iter_mut().zip(vs).zip(xs) {
+            *yv += vv * xv;
+        }
+        i += seg;
+        c += seg;
+        if c == n_in {
+            c = 0;
+        }
+    }
+}
+
+/// `dx[(i + off) mod n] += v[i] * g[i]` over `i in 0..g.len()` — the
+/// scatter twin of [`fma_wrap_gather`] (`v.len() == g.len()`,
+/// `dx.len() == n`).
+#[inline]
+fn fma_wrap_scatter(dx: &mut [f32], v: &[f32], g: &[f32], off: usize) {
+    let n_in = dx.len();
+    let n_out = g.len();
+    debug_assert_eq!(v.len(), n_out);
+    if n_in == 0 || n_out == 0 {
+        return;
+    }
+    let mut i = 0usize;
+    let mut c = off % n_in;
+    while i < n_out {
+        let seg = (n_out - i).min(n_in - c);
+        let ds = &mut dx[c..c + seg];
+        let vs = &v[i..i + seg];
+        let gs = &g[i..i + seg];
+        for ((dv, &vv), &gv) in ds.iter_mut().zip(vs).zip(gs) {
+            *dv += vv * gv;
+        }
+        i += seg;
+        c += seg;
+        if c == n_in {
+            c = 0;
+        }
+    }
+}
 
 /// Forward product `y[b, n_out] = x[b, n_in] @ Wᵀ`. `y` is overwritten.
 pub fn spmm_t(
@@ -31,22 +93,13 @@ pub fn spmm_t(
     assert_eq!(values.len(), k * n_out, "diag spmm_t: values length");
     assert_eq!(y.len(), b * n_out, "diag spmm_t: y length");
     y.fill(0.0);
-    parallel_rows(y, n_out, 4, |first_row, y_chunk| {
-        let rows = y_chunk.len() / n_out;
-        for (j, &off) in offsets.iter().enumerate() {
-            debug_assert!(off < n_in, "offset out of range");
-            let vals = &values[j * n_out..(j + 1) * n_out];
-            for r in 0..rows {
-                let xr = &x[(first_row + r) * n_in..(first_row + r + 1) * n_in];
-                let yr = &mut y_chunk[r * n_out..(r + 1) * n_out];
-                let mut c = off % n_in;
-                for i in 0..n_out {
-                    yr[i] += vals[i] * xr[c];
-                    c += 1;
-                    if c == n_in {
-                        c = 0;
-                    }
-                }
+    parallel_rows(y, n_out, 2 * k * n_out, |first_row, y_chunk| {
+        for (r, yr) in y_chunk.chunks_exact_mut(n_out).enumerate() {
+            let xr = &x[(first_row + r) * n_in..(first_row + r + 1) * n_in];
+            for (j, &off) in offsets.iter().enumerate() {
+                debug_assert!(off < n_in, "offset out of range");
+                let vals = &values[j * n_out..(j + 1) * n_out];
+                fma_wrap_gather(yr, vals, xr, off);
             }
         }
     });
@@ -68,29 +121,33 @@ pub fn spmm(
     assert_eq!(values.len(), k * n_out, "diag spmm: values length");
     assert_eq!(dx.len(), b * n_in, "diag spmm: dx length");
     dx.fill(0.0);
-    parallel_rows(dx, n_in, 4, |first_row, dx_chunk| {
-        let rows = dx_chunk.len() / n_in;
-        for (j, &off) in offsets.iter().enumerate() {
-            let vals = &values[j * n_out..(j + 1) * n_out];
-            for r in 0..rows {
-                let dyr = &dy[(first_row + r) * n_out..(first_row + r + 1) * n_out];
-                let dxr = &mut dx_chunk[r * n_in..(r + 1) * n_in];
-                let mut c = off % n_in;
-                for i in 0..n_out {
-                    dxr[c] += vals[i] * dyr[i];
-                    c += 1;
-                    if c == n_in {
-                        c = 0;
-                    }
-                }
+    parallel_rows(dx, n_in, 2 * k * n_out, |first_row, dx_chunk| {
+        for (r, dxr) in dx_chunk.chunks_exact_mut(n_in).enumerate() {
+            let dyr = &dy[(first_row + r) * n_out..(first_row + r + 1) * n_out];
+            for (j, &off) in offsets.iter().enumerate() {
+                let vals = &values[j * n_out..(j + 1) * n_out];
+                fma_wrap_scatter(dxr, vals, dyr, off);
             }
         }
     });
 }
 
+thread_local! {
+    /// Reused partial-accumulator scratch for the batch-split path of
+    /// [`grad_values`] (no per-call allocation after warmup).
+    static GRAD_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Weight gradient in offset-major layout: `dvalues[j, i] = Σ_b dy[b, i] ·
-/// x[b, (i + offsets[j]) mod n_in]`. Parallel over diagonals (disjoint
-/// `dvalues` rows). `dvalues` is overwritten.
+/// x[b, (i + offsets[j]) mod n_in]`. `dvalues` is overwritten.
+///
+/// Two parallel strategies: when there are enough diagonals, split over
+/// them (disjoint `dvalues` rows). When `k` is below the thread count —
+/// the common case at high sparsity, where the old kernel degenerated to a
+/// near-serial loop — split over the **batch** dimension instead: each
+/// worker accumulates a private partial `dvalues` over its batch slice,
+/// followed by a single reduction.
 pub fn grad_values(
     x: &[f32],
     dy: &[f32],
@@ -105,20 +162,61 @@ pub fn grad_values(
     assert_eq!(dy.len(), b * n_out, "diag grad_values: dy length");
     assert_eq!(dvalues.len(), k * n_out, "diag grad_values: dvalues length");
     dvalues.fill(0.0);
-    parallel_rows(dvalues, n_out, 1, |first_j, dv_chunk| {
+
+    let threads = num_threads();
+    let total_flops = 2usize
+        .saturating_mul(b)
+        .saturating_mul(k)
+        .saturating_mul(n_out);
+    if threads > 1 && k < threads && b >= 2 && total_flops >= 2 * TASK_GRAIN_FLOPS {
+        // batch split with per-worker partials + reduction
+        let parts = threads.min(b);
+        let b_chunk = b.div_ceil(parts);
+        GRAD_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            scratch.clear();
+            scratch.resize(parts * k * n_out, 0.0);
+            parallel_rows(
+                scratch.as_mut_slice(),
+                k * n_out,
+                2 * b_chunk * k * n_out,
+                |first_part, chunk| {
+                    for (pi, dvp) in chunk.chunks_exact_mut(k * n_out).enumerate() {
+                        let part = first_part + pi;
+                        let b0 = part * b_chunk;
+                        let b1 = (b0 + b_chunk).min(b);
+                        for bi in b0..b1 {
+                            let xr = &x[bi * n_in..(bi + 1) * n_in];
+                            let dyr = &dy[bi * n_out..(bi + 1) * n_out];
+                            for (j, &off) in offsets.iter().enumerate() {
+                                fma_wrap_gather(
+                                    &mut dvp[j * n_out..(j + 1) * n_out],
+                                    dyr,
+                                    xr,
+                                    off,
+                                );
+                            }
+                        }
+                    }
+                },
+            );
+            for part in scratch.chunks_exact(k * n_out) {
+                for (o, &v) in dvalues.iter_mut().zip(part) {
+                    *o += v;
+                }
+            }
+        });
+        return;
+    }
+
+    // enough diagonals: split over disjoint dvalues rows
+    parallel_rows(dvalues, n_out, 2 * b * n_out, |first_j, dv_chunk| {
         for (r, dvr) in dv_chunk.chunks_exact_mut(n_out).enumerate() {
             let off = offsets[first_j + r];
             for bi in 0..b {
                 let xr = &x[bi * n_in..(bi + 1) * n_in];
                 let dyr = &dy[bi * n_out..(bi + 1) * n_out];
-                let mut c = off % n_in;
-                for i in 0..n_out {
-                    dvr[i] += dyr[i] * xr[c];
-                    c += 1;
-                    if c == n_in {
-                        c = 0;
-                    }
-                }
+                fma_wrap_gather(dvr, dyr, xr, off);
             }
         }
     });
@@ -192,6 +290,30 @@ mod tests {
                 let want = dw.at2(i, c);
                 let got = dv[j * n_out + i];
                 assert!((want - got).abs() < 1e-4, "j={} i={}: {} vs {}", j, i, want, got);
+            }
+        }
+    }
+
+    /// The batch-split path (k < threads, b large) must agree with the
+    /// diagonal-split path and the dense chain.
+    #[test]
+    fn grad_values_batch_split_matches_dense_chain() {
+        let mut rng = Rng::new(54);
+        // k=1 forces the batch split whenever more than one thread exists;
+        // sized so total flops clear the parallel grain
+        let (b, n_in, n_out, k) = (64usize, 96usize, 1024usize, 1usize);
+        let d = random_diag(&mut rng, n_out, n_in, k);
+        let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+        let dy = Tensor::randn(&[b, n_out], 1.0, &mut rng);
+        let mut dv = vec![0.0f32; k * n_out];
+        super::grad_values(&x.data, &dy.data, &d.offsets, &mut dv, b, n_in, n_out);
+        let dw = dy.transpose2().matmul(&x).unwrap();
+        for (j, &off) in d.offsets.iter().enumerate() {
+            for i in 0..n_out {
+                let c = crate::sparsity::diagonal::diag_col(i, off, n_in);
+                let want = dw.at2(i, c);
+                let got = dv[j * n_out + i];
+                assert!((want - got).abs() < 1e-3, "j={} i={}: {} vs {}", j, i, want, got);
             }
         }
     }

@@ -6,16 +6,21 @@
 //! `sparsity::diagonal::DiagMatrix` / `bcsr::Bcsr` reference math by unit
 //! tests here and the property tests in `tests/kernel_parity.rs`:
 //!
-//! * [`dense`] — cache-blocked GEMM (`y = x @ Wᵀ`, plus the two backward
-//!   products) — the baseline Fig 7 divides by,
-//! * [`diag`] — offset-major diagonal SpMM, forward and both backward
-//!   products (the paper's custom kernel, Sec 3.3),
+//! * [`dense`] — cache-blocked GEMM with 8-way output register blocking
+//!   (`y = x @ Wᵀ`, plus the two backward products) — the baseline Fig 7
+//!   divides by,
+//! * [`diag`] — offset-major diagonal SpMM with branch-free two-segment
+//!   inner loops, forward and both backward products (the paper's custom
+//!   kernel, Sec 3.3),
 //! * [`bcsr`] — blocked-CSR SpMM (the SmaT-style converted format).
 //!
-//! Parallelism comes from [`pool`], a dependency-free scoped-thread
-//! splitter; set `DYNADIAG_THREADS=1` for fully deterministic single-core
-//! runs (results are identical either way — threads partition disjoint
-//! output rows and never race on accumulators).
+//! Parallelism comes from [`pool`], a dependency-free **persistent worker
+//! pool** (long-lived threads, condvar dispatch, generation-counted
+//! barriers) with a flop-based inline/parallel grain; set
+//! `DYNADIAG_THREADS=1` for fully deterministic single-core runs. Results
+//! are deterministic at any fixed thread count; across thread counts only
+//! [`diag::grad_values`]'s batch-split reduction can differ in the last
+//! float bits (its partial-sum width follows the worker count).
 
 pub mod bcsr;
 pub mod dense;

@@ -1,16 +1,59 @@
-//! Minimal data-parallel substrate for the native kernels (rayon is
-//! unavailable offline; `std::thread::scope` keeps this dependency-free and
-//! unsafe-free).
+//! Persistent data-parallel substrate for the native kernels (rayon is
+//! unavailable offline; this is a std-only worker pool).
 //!
-//! The one primitive every kernel needs is "split an output buffer into
-//! disjoint row chunks and fill them from worker threads". Inputs are shared
-//! immutably; outputs are partitioned with `split_at_mut`, so there is no
-//! aliasing and no locking on the hot path.
+//! The seed implementation spawned fresh OS threads inside every
+//! `parallel_rows` call (`std::thread::scope`), which put a thread
+//! create+join on the critical path of every kernel launch. This version
+//! keeps a **persistent pool**: `num_threads() - 1` long-lived workers
+//! parked on a condvar, woken per dispatch, with the calling thread
+//! participating as the extra worker. Synchronization is one mutex-guarded
+//! job slot:
+//!
+//! * a **generation counter** identifies the current job, so a worker that
+//!   wakes late (or spuriously) can never re-run tasks from a finished
+//!   dispatch;
+//! * tasks are claimed from a shared cursor (`next_task`), giving dynamic
+//!   load balancing across uneven chunks;
+//! * `remaining` counts unfinished tasks; the dispatcher blocks on it
+//!   before returning, which is the barrier that makes the borrow-erasure
+//!   below sound;
+//! * a `busy` flag keeps one job in the slot at a time; a dispatcher that
+//!   finds the pool occupied (e.g. parallel test threads, concurrent
+//!   experiment cells) falls back to scoped threads for that one job, so
+//!   concurrent dispatches keep their parallelism instead of idling.
+//!
+//! The one `unsafe` in the crate's kernel layer lives here: the dispatched
+//! closure is lifetime-erased to a raw pointer so the long-lived workers
+//! can call it. This is sound because `dispatch` does not return until
+//! every task has finished (`remaining == 0`), so the closure and the
+//! buffers it borrows strictly outlive every use; workers hold the job
+//! only as a raw pointer, never as a reference, between calls.
+//!
+//! Work is sized by a **flop-based grain**: callers pass the approximate
+//! flops per row, and the pool decides between running inline (small
+//! work), or splitting into up to `num_threads()` chunks of at least
+//! [`TASK_GRAIN_FLOPS`] each. Set `DYNADIAG_THREADS=1` for fully
+//! deterministic single-thread runs. Every run is deterministic for a
+//! *fixed* thread count (tasks own disjoint output rows, claim order never
+//! affects results); across different thread counts, all kernels are
+//! bit-identical except `diag::grad_values`'s batch-split path, whose
+//! partial-sum reduction width follows the worker count.
 
-use std::sync::OnceLock;
+use std::cell::Cell;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Worker count: `DYNADIAG_THREADS` env override, else available
-/// parallelism capped at 8 (the kernel shapes here stop scaling past that).
+/// Minimum flops a parallel task should amortize the wakeup cost over.
+/// Crossing a condvar wake is a few microseconds; at ~1 GFLOP/s scalar
+/// throughput that is ~10k flops, so 64k keeps the overhead under ~10%.
+pub const TASK_GRAIN_FLOPS: usize = 64 * 1024;
+
+/// Default ceiling on the worker count when `DYNADIAG_THREADS` is unset:
+/// the kernel shapes here stop scaling past 8 cores.
+const DEFAULT_MAX_THREADS: usize = 8;
+
+/// Worker count. Default: available parallelism capped at
+/// `DEFAULT_MAX_THREADS` (8). `DYNADIAG_THREADS` overrides the cap in
+/// either direction — it may *raise* the count past 8 on larger machines.
 pub fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
@@ -22,15 +65,259 @@ pub fn num_threads() -> usize {
         std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
-            .min(8)
+            .min(DEFAULT_MAX_THREADS)
     })
 }
 
+/// The job closure, lifetime-erased. Soundness: see module docs.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (calling it from several threads is fine)
+// and the dispatch barrier guarantees it outlives every access.
+unsafe impl Send for JobPtr {}
+
+struct JobSlot {
+    /// A dispatch is in flight (serializes concurrent dispatchers).
+    busy: bool,
+    /// Bumped once per dispatch; workers only run tasks of the generation
+    /// they observed when they woke.
+    generation: u64,
+    job: Option<JobPtr>,
+    n_tasks: usize,
+    /// Shared claim cursor: next unclaimed task index.
+    next_task: usize,
+    /// Unfinished tasks of the current generation.
+    remaining: usize,
+    /// A task of the current generation panicked; the dispatcher re-raises
+    /// after the barrier (mirroring `std::thread::scope` semantics) so a
+    /// panicking kernel cannot wedge the process-wide pool.
+    panicked: bool,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    /// Workers wait here for a new generation.
+    job_cv: Condvar,
+    /// The dispatcher waits here for `remaining == 0`.
+    done_cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    /// Spawned worker threads (the dispatcher is the +1th worker).
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// True while this thread is executing a pool task — a nested dispatch
+    /// from inside a kernel would deadlock on `busy`, so it runs inline.
+    static IN_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let threads = num_threads();
+        let workers = threads.saturating_sub(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(JobSlot {
+                busy: false,
+                generation: 0,
+                job: None,
+                n_tasks: 0,
+                next_task: 0,
+                remaining: 0,
+                panicked: false,
+            }),
+            job_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            // detached: workers park forever and die with the process
+            let _ = std::thread::Builder::new()
+                .name(format!("dynadiag-pool-{}", i))
+                .spawn(move || worker_loop(sh));
+        }
+        crate::info!(
+            "kernel pool: {} threads ({} persistent workers + caller){}",
+            threads,
+            workers,
+            if std::env::var("DYNADIAG_THREADS").is_ok() {
+                " [DYNADIAG_THREADS override]"
+            } else {
+                ""
+            }
+        );
+        Pool { shared, workers }
+    })
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    let mut guard = shared.slot.lock().unwrap();
+    loop {
+        while guard.generation == seen || guard.job.is_none() {
+            guard = shared.job_cv.wait(guard).unwrap();
+        }
+        seen = guard.generation;
+        let job = guard.job.expect("job present at wake");
+        while guard.next_task < guard.n_tasks {
+            let t = guard.next_task;
+            guard.next_task += 1;
+            drop(guard);
+            IN_TASK.with(|f| f.set(true));
+            // SAFETY: the dispatcher blocks until `remaining == 0`, so the
+            // closure (and everything it borrows) is alive for this call.
+            // catch_unwind keeps a panicking task from leaving `remaining`
+            // stuck (which would deadlock every future dispatch).
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (&*job.0)(t)
+            }));
+            IN_TASK.with(|f| f.set(false));
+            guard = shared.slot.lock().unwrap();
+            if result.is_err() {
+                guard.panicked = true;
+            }
+            guard.remaining -= 1;
+            if guard.remaining == 0 {
+                shared.done_cv.notify_all();
+            }
+            if guard.generation != seen {
+                // a new dispatch was posted the instant ours drained;
+                // fall through to the outer loop to pick it up fresh
+                break;
+            }
+        }
+    }
+}
+
+/// Run `job(0..n_tasks)` across the pool, blocking until every task has
+/// completed. Tasks may run on any pool thread or on the caller; the claim
+/// cursor balances uneven task costs. Reentrant calls (from inside a task)
+/// and `n_tasks <= 1` run inline.
+pub fn parallel_tasks<F>(n_tasks: usize, job: F)
+where
+    F: Fn(usize) + Sync,
+{
+    dispatch(n_tasks, &job);
+}
+
+fn dispatch(n_tasks: usize, job: &(dyn Fn(usize) + Sync)) {
+    if n_tasks == 0 {
+        return;
+    }
+    let p = pool();
+    if p.workers == 0 || n_tasks == 1 || IN_TASK.with(|f| f.get()) {
+        for t in 0..n_tasks {
+            job(t);
+        }
+        return;
+    }
+    // Lifetime-erase the job for the persistent workers. SAFETY: this
+    // function does not return until `remaining == 0` (the barrier below),
+    // so the erased borrow never outlives the data it points into.
+    let job_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
+    let ptr = JobPtr(job_static as *const (dyn Fn(usize) + Sync));
+
+    let shared = &p.shared;
+    let mut guard = shared.slot.lock().unwrap();
+    if guard.busy {
+        // another dispatch already owns the job slot: fall back to scoped
+        // threads for this one job so concurrent dispatchers keep their
+        // parallelism (idling until the slot frees would serialize them;
+        // running purely inline would cost this caller its speedup)
+        drop(guard);
+        run_scoped(n_tasks, job);
+        return;
+    }
+    guard.busy = true;
+    guard.generation = guard.generation.wrapping_add(1);
+    guard.job = Some(ptr);
+    guard.n_tasks = n_tasks;
+    guard.next_task = 0;
+    guard.remaining = n_tasks;
+    drop(guard);
+    shared.job_cv.notify_all();
+
+    // the dispatcher participates in its own job
+    loop {
+        let mut guard = shared.slot.lock().unwrap();
+        if guard.next_task >= guard.n_tasks {
+            while guard.remaining > 0 {
+                guard = shared.done_cv.wait(guard).unwrap();
+            }
+            let panicked = guard.panicked;
+            guard.panicked = false;
+            guard.job = None;
+            guard.busy = false;
+            drop(guard);
+            if panicked {
+                // re-raise only after the barrier, so every borrow the
+                // erased job held is already dead (scope-like semantics)
+                panic!("a kernel pool task panicked");
+            }
+            return;
+        }
+        let t = guard.next_task;
+        guard.next_task += 1;
+        drop(guard);
+        // mark the dispatcher as in-task too, so a nested dispatch from
+        // inside this job runs inline instead of waiting on our own `busy`;
+        // catch panics so the pool bookkeeping always completes
+        IN_TASK.with(|f| f.set(true));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(t)));
+        IN_TASK.with(|f| f.set(false));
+        let mut guard = shared.slot.lock().unwrap();
+        if result.is_err() {
+            guard.panicked = true;
+        }
+        guard.remaining -= 1;
+        if guard.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Contended-dispatch fallback: run one job on freshly scoped threads
+/// pulling tasks from a shared cursor. Pays the seed implementation's
+/// spawn cost, but only when the persistent pool's job slot is occupied
+/// by another dispatcher. Panics propagate through `scope` as before.
+fn run_scoped(n_tasks: usize, job: &(dyn Fn(usize) + Sync)) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let helpers = num_threads().min(n_tasks).saturating_sub(1);
+    let run_tasks = || {
+        IN_TASK.with(|f| f.set(true));
+        loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= n_tasks {
+                break;
+            }
+            job(t);
+        }
+        IN_TASK.with(|f| f.set(false));
+    };
+    std::thread::scope(|scope| {
+        for _ in 0..helpers {
+            scope.spawn(run_tasks);
+        }
+        run_tasks();
+    });
+}
+
+/// Upper bound on chunks per dispatch (stack-allocated chunk table).
+const MAX_TASKS: usize = 64;
+
 /// Partition `data` (logically `rows × row_len`) into contiguous row chunks
-/// and run `f(first_row, chunk)` on each chunk, in parallel when the row
-/// count justifies the thread spawn cost (`min_rows_per_thread` is the
-/// grain). Falls back to a single inline call for small work.
-pub fn parallel_rows<T, F>(data: &mut [T], row_len: usize, min_rows_per_thread: usize, f: F)
+/// and run `f(first_row, chunk)` on each, in parallel when the flop count
+/// justifies waking workers. `flops_per_row` is the caller's estimate of
+/// arithmetic per row (e.g. `2 * n_in * n_out` for a GEMM output row); the
+/// grain heuristic sizes chunks so each parallel task covers at least
+/// [`TASK_GRAIN_FLOPS`], and runs everything inline below that.
+pub fn parallel_rows<T, F>(data: &mut [T], row_len: usize, flops_per_row: usize, f: F)
 where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
@@ -41,26 +328,40 @@ where
         f(0, data);
         return;
     }
-    let threads = num_threads()
-        .min(rows / min_rows_per_thread.max(1))
+    let total_flops = rows.saturating_mul(flops_per_row.max(1));
+    let n_tasks = num_threads()
+        .min(total_flops / TASK_GRAIN_FLOPS)
+        .min(rows)
+        .min(MAX_TASKS)
         .max(1);
-    if threads <= 1 {
+    if n_tasks <= 1 {
         f(0, data);
         return;
     }
-    let chunk_rows = rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let f = &f;
+    let chunk_rows = rows.div_ceil(n_tasks);
+    // chunk table on the stack: no allocation on the dispatch path
+    let mut chunks: [Mutex<Option<(usize, &mut [T])>>; MAX_TASKS] =
+        std::array::from_fn(|_| Mutex::new(None));
+    let mut n_chunks = 0usize;
+    {
         let mut rest = data;
         let mut row0 = 0usize;
         while !rest.is_empty() {
             let take = chunk_rows.min(rows - row0) * row_len;
             let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
             rest = tail;
-            let first = row0;
-            scope.spawn(move || f(first, head));
+            *chunks[n_chunks].get_mut().unwrap() = Some((row0, head));
+            n_chunks += 1;
             row0 += take / row_len;
         }
+    }
+    dispatch(n_chunks, &|t: usize| {
+        let (first, chunk) = chunks[t]
+            .lock()
+            .unwrap()
+            .take()
+            .expect("each chunk claimed exactly once");
+        f(first, chunk);
     });
 }
 
@@ -73,7 +374,8 @@ mod tests {
         let rows = 37;
         let row_len = 5;
         let mut data = vec![0u32; rows * row_len];
-        parallel_rows(&mut data, row_len, 1, |first, chunk| {
+        // huge flop estimate to force the parallel path
+        parallel_rows(&mut data, row_len, 1 << 20, |first, chunk| {
             for (r, row) in chunk.chunks_exact_mut(row_len).enumerate() {
                 for v in row.iter_mut() {
                     *v += (first + r) as u32 + 1;
@@ -88,7 +390,7 @@ mod tests {
     #[test]
     fn small_work_runs_inline() {
         let mut data = vec![0u8; 6];
-        parallel_rows(&mut data, 3, 100, |first, chunk| {
+        parallel_rows(&mut data, 3, 10, |first, chunk| {
             assert_eq!(first, 0);
             assert_eq!(chunk.len(), 6);
             chunk.fill(9);
@@ -103,5 +405,63 @@ mod tests {
         let mut flat = vec![1.0f32; 8];
         parallel_rows(&mut flat, 0, 1, |_, chunk| chunk.fill(2.0));
         assert!(flat.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn parallel_tasks_runs_each_task_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+        parallel_tasks(hits.len(), |t| {
+            hits[t].fetch_add(1, Ordering::SeqCst);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {}", t);
+        }
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_without_deadlock() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let inner_hits = AtomicUsize::new(0);
+        parallel_tasks(4, |_| {
+            // reentrant dispatch from inside a task must not deadlock
+            parallel_tasks(3, |_| {
+                inner_hits.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(inner_hits.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_tasks(4, |t| {
+                if t == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(caught.is_err(), "task panic must reach the dispatcher");
+        // the pool must keep dispatching normally afterwards
+        let mut data = vec![0u8; 32];
+        parallel_rows(&mut data, 4, 1 << 20, |_, chunk| chunk.fill(1));
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn generations_stay_isolated_across_many_dispatches() {
+        for round in 0..200usize {
+            let rows = 1 + (round * 7) % 19;
+            let row_len = 1 + round % 5;
+            let mut data = vec![0u64; rows * row_len];
+            parallel_rows(&mut data, row_len, 1 << 20, |first, chunk| {
+                for (r, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                    row.fill((first + r) as u64);
+                }
+            });
+            for (i, &v) in data.iter().enumerate() {
+                assert_eq!(v, (i / row_len) as u64, "round {} elem {}", round, i);
+            }
+        }
     }
 }

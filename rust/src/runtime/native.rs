@@ -19,6 +19,17 @@
 //!   (section prefixes, flatten order, output routing) is identical, so
 //!   `train::Trainer` drives both backends with the same code.
 //!
+//! **Hot-path memory model.** Every tensor-sized buffer in the step
+//! functions — activations, gradients, optimizer scratch, converted index
+//! buffers, and the output tensors themselves — is drawn from the
+//! [`workspace`] arena, a thread-local pool of recycled buffers. Step
+//! functions return their intermediates at the end of each call, and
+//! callers that recycle the step outputs (`train::Trainer` does, via
+//! `ParamStore::absorb_take`) close the loop: in steady state a train step
+//! performs **zero** buffer allocations. Per-step IO routing is resolved
+//! once at artifact-build time into index *plans* (no per-step name
+//! formatting or map lookups).
+//!
 //! The transformer models (`vit_*`, `mixer_*`, `gpt_*`) remain
 //! XLA-artifact-only; asking for them here produces a clear error.
 //!
@@ -27,14 +38,328 @@
 //! `min(k·softmax(α/T), 1)`) but uses the subgradient 0 at the `min`
 //! boundary, like XLA's autodiff of `min` on ties.
 
-use std::collections::BTreeMap;
-
 use anyhow::{anyhow, bail, Result};
 
 use super::{Artifact, ArtifactMeta, Backend, Dtype, HostTensor, IoSpec, StepFn};
-use crate::kernels::{bcsr, dense, diag};
+use crate::kernels::{bcsr, dense, diag, pool};
 use crate::sparsity::topk::soft_topk;
 use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Workspace arena
+// ---------------------------------------------------------------------------
+
+/// Thread-local recycled-buffer arena behind the native hot path.
+///
+/// `take_*` hands out a buffer of the requested length, reusing a pooled
+/// one when any fits (best-fit by capacity) and allocating fresh otherwise;
+/// `give_*` returns a buffer to the pool. [`stats`] exposes
+/// `(fresh, reused)` counters so tests can assert the steady state: after
+/// warmup, a training loop that recycles its outputs performs zero fresh
+/// allocations (the `fresh` counter stops moving).
+///
+/// The pools are thread-local (the native backend is single-threaded per
+/// session; kernel worker threads receive plain slices and never touch the
+/// arena), so there is no locking and the counters are deterministic.
+pub mod workspace {
+    use super::HostTensor;
+    use std::cell::RefCell;
+
+    /// Retention cap per pool — bounds worst-case memory held by the arena.
+    const MAX_POOLED: usize = 1024;
+
+    #[derive(Default)]
+    struct Pools {
+        f32s: Vec<Vec<f32>>,
+        i32s: Vec<Vec<i32>>,
+        usizes: Vec<Vec<usize>>,
+        fresh: usize,
+        reused: usize,
+    }
+
+    thread_local! {
+        static POOLS: RefCell<Pools> = RefCell::new(Pools::default());
+    }
+
+    /// (fresh allocations, pool reuses) on this thread since the last
+    /// [`reset_stats`].
+    pub fn stats() -> (usize, usize) {
+        POOLS.with(|p| {
+            let p = p.borrow();
+            (p.fresh, p.reused)
+        })
+    }
+
+    /// Fresh-allocation count alone (the steady-state invariant).
+    pub fn fresh_allocs() -> usize {
+        stats().0
+    }
+
+    pub fn reset_stats() {
+        POOLS.with(|p| {
+            let mut p = p.borrow_mut();
+            p.fresh = 0;
+            p.reused = 0;
+        })
+    }
+
+    /// Best-fit index: smallest pooled buffer whose capacity covers `len`.
+    fn best_fit_by_cap(caps: impl Iterator<Item = usize>, len: usize) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, cap) in caps.enumerate() {
+            if cap >= len && best.map_or(true, |(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    macro_rules! pool_impl {
+        ($take:ident, $take_uninit:ident, $take_copy:ident, $give:ident, $field:ident, $t:ty, $zero:expr) => {
+            /// Take a zero-initialized buffer of exactly `len` elements.
+            pub fn $take(len: usize) -> Vec<$t> {
+                POOLS.with(|p| {
+                    let mut p = p.borrow_mut();
+                    let fit = best_fit_by_cap(p.$field.iter().map(|b| b.capacity()), len);
+                    match fit {
+                        Some(i) => {
+                            p.reused += 1;
+                            let mut v = p.$field.swap_remove(i);
+                            v.clear();
+                            v.resize(len, $zero);
+                            v
+                        }
+                        None => {
+                            p.fresh += 1;
+                            vec![$zero; len]
+                        }
+                    }
+                })
+            }
+
+            /// Take a buffer of exactly `len` elements with **unspecified
+            /// contents** (stale values from a previous use; no memset when
+            /// a same-length buffer is pooled). Only for consumers that
+            /// fully overwrite the buffer before reading it — kernel
+            /// outputs that `fill(0.0)` internally, element-wise maps, etc.
+            pub fn $take_uninit(len: usize) -> Vec<$t> {
+                POOLS.with(|p| {
+                    let mut p = p.borrow_mut();
+                    let fit = best_fit_by_cap(p.$field.iter().map(|b| b.capacity()), len);
+                    match fit {
+                        Some(i) => {
+                            p.reused += 1;
+                            let mut v = p.$field.swap_remove(i);
+                            if v.len() != len {
+                                v.clear();
+                                v.resize(len, $zero);
+                            }
+                            v
+                        }
+                        None => {
+                            p.fresh += 1;
+                            vec![$zero; len]
+                        }
+                    }
+                })
+            }
+
+            /// Take a buffer holding a copy of `src`.
+            pub fn $take_copy(src: &[$t]) -> Vec<$t> {
+                POOLS.with(|p| {
+                    let mut p = p.borrow_mut();
+                    let fit =
+                        best_fit_by_cap(p.$field.iter().map(|b| b.capacity()), src.len());
+                    match fit {
+                        Some(i) => {
+                            p.reused += 1;
+                            let mut v = p.$field.swap_remove(i);
+                            v.clear();
+                            v.extend_from_slice(src);
+                            v
+                        }
+                        None => {
+                            p.fresh += 1;
+                            src.to_vec()
+                        }
+                    }
+                })
+            }
+
+            /// Return a buffer to the pool (empty buffers are dropped; the
+            /// pool is capped at `MAX_POOLED` entries).
+            pub fn $give(v: Vec<$t>) {
+                if v.capacity() == 0 {
+                    return;
+                }
+                POOLS.with(|p| {
+                    let mut p = p.borrow_mut();
+                    if p.$field.len() < MAX_POOLED {
+                        p.$field.push(v);
+                    }
+                })
+            }
+        };
+    }
+
+    pool_impl!(take_f32, take_uninit_f32, take_copy_f32, give_f32, f32s, f32, 0.0f32);
+    pool_impl!(take_i32, take_uninit_i32, take_copy_i32, give_i32, i32s, i32, 0i32);
+    pool_impl!(take_usize, take_uninit_usize, take_copy_usize, give_usize, usizes, usize, 0usize);
+
+    /// Build an f32 tensor around a workspace buffer (pooled shape vec).
+    pub fn tensor_f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: take_copy_usize(shape), data }
+    }
+
+    /// Build an i32 tensor around a workspace buffer (pooled shape vec).
+    pub fn tensor_i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: take_copy_usize(shape), data }
+    }
+
+    /// Scalar (shape `[]`) f32 tensor from the pool. The empty shape vec
+    /// never allocates.
+    pub fn tensor_scalar(v: f32) -> HostTensor {
+        let mut data = take_uninit_f32(1);
+        data[0] = v;
+        HostTensor::F32 { shape: Vec::new(), data }
+    }
+
+    /// Pool-backed deep copy of a tensor.
+    pub fn clone_tensor(t: &HostTensor) -> HostTensor {
+        match t {
+            HostTensor::F32 { shape, data } => HostTensor::F32 {
+                shape: take_copy_usize(shape),
+                data: take_copy_f32(data),
+            },
+            HostTensor::I32 { shape, data } => HostTensor::I32 {
+                shape: take_copy_usize(shape),
+                data: take_copy_i32(data),
+            },
+        }
+    }
+
+    /// Recycle a tensor's buffers back into the pool.
+    pub fn give_tensor(t: HostTensor) {
+        match t {
+            HostTensor::F32 { shape, data } => {
+                give_usize(shape);
+                give_f32(data);
+            }
+            HostTensor::I32 { shape, data } => {
+                give_usize(shape);
+                give_i32(data);
+            }
+        }
+    }
+}
+
+/// Test/bench support: synthesize inputs for a native train artifact and
+/// drive the workspace-recycled feedback loop the way `Trainer` does.
+/// Shared by `benches/kernels.rs` and `tests/native_steady_state.rs` so
+/// both exercise the identical loop; not a stability surface.
+#[doc(hidden)]
+pub mod drive {
+    use super::workspace;
+    use super::{Artifact, HostTensor};
+    use crate::util::rng::Rng;
+
+    /// Deterministic synthetic inputs for a train artifact: params ~
+    /// N(0, 0.05), all-ones masks, a random batch, lr 1e-3, step 1,
+    /// zeros for everything else.
+    pub fn synth_train_inputs(art: &Artifact, seed: u64) -> Vec<HostTensor> {
+        let classes = art.meta.config_usize("classes").unwrap_or(10);
+        let mut rng = Rng::new(seed);
+        let mut inputs = Vec::with_capacity(art.meta.inputs.len());
+        for spec in &art.meta.inputs {
+            let n: usize = spec.shape.iter().product();
+            let t = if spec.name.starts_with("params/") {
+                HostTensor::f32(
+                    &spec.shape,
+                    (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect(),
+                )
+            } else if spec.name.starts_with("masks/") {
+                HostTensor::f32(&spec.shape, vec![1.0; n])
+            } else if spec.name == "batch/x" {
+                HostTensor::f32(
+                    &spec.shape,
+                    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                )
+            } else if spec.name == "batch/y" {
+                HostTensor::i32(
+                    &spec.shape,
+                    (0..n).map(|_| rng.below(classes) as i32).collect(),
+                )
+            } else if spec.name == "scalar/lr" {
+                HostTensor::scalar_f32(1e-3)
+            } else if spec.name == "scalar/step" {
+                HostTensor::scalar_f32(1.0)
+            } else {
+                HostTensor::zeros(spec)
+            };
+            inputs.push(t);
+        }
+        inputs
+    }
+
+    /// Output→input feedback routing for the recycled train loop (the
+    /// absorb contract: every `params/`/`opt_*` input reappears as an
+    /// output under the same name).
+    pub struct TrainFeedback {
+        route: Vec<Option<usize>>,
+        step_slot: Option<usize>,
+        step_no: f32,
+    }
+
+    impl TrainFeedback {
+        pub fn new(art: &Artifact) -> TrainFeedback {
+            let route = art
+                .meta
+                .inputs
+                .iter()
+                .map(|spec| {
+                    if spec.name.starts_with("params/")
+                        || spec.name.starts_with("opt_m/")
+                        || spec.name.starts_with("opt_v/")
+                    {
+                        Some(art.meta.output_index(&spec.name).expect("absorb contract"))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let step_slot = art.meta.inputs.iter().position(|s| s.name == "scalar/step");
+            TrainFeedback { route, step_slot, step_no: 1.0 }
+        }
+
+        /// Move params/opt outputs back into `inputs`, bump `scalar/step`,
+        /// and recycle every superseded/remaining buffer.
+        pub fn apply(&mut self, inputs: &mut [HostTensor], mut outputs: Vec<HostTensor>) {
+            for (i, slot) in self.route.iter().enumerate() {
+                if let Some(oi) = *slot {
+                    let t = std::mem::replace(
+                        &mut outputs[oi],
+                        HostTensor::F32 { shape: Vec::new(), data: Vec::new() },
+                    );
+                    let old = std::mem::replace(&mut inputs[i], t);
+                    workspace::give_tensor(old);
+                }
+            }
+            if let Some(si) = self.step_slot {
+                self.step_no += 1.0;
+                let old = std::mem::replace(
+                    &mut inputs[si],
+                    workspace::tensor_scalar(self.step_no),
+                );
+                workspace::give_tensor(old);
+            }
+            for t in outputs.drain(..) {
+                workspace::give_tensor(t);
+            }
+        }
+    }
+}
 
 /// The artifact-free backend.
 pub struct NativeBackend;
@@ -138,11 +463,13 @@ fn spec_i32(name: &str, shape: &[usize]) -> IoSpec {
     IoSpec { name: name.to_string(), shape: shape.to_vec(), dtype: Dtype::I32 }
 }
 
+/// Wrap raw i32 diagonal offsets into `[0, n_in)`, into a pooled buffer.
 fn offsets_to_usize(offsets: &[i32], n_in: usize) -> Vec<usize> {
-    offsets
-        .iter()
-        .map(|&o| (((o as i64 % n_in as i64) + n_in as i64) % n_in as i64) as usize)
-        .collect()
+    let mut out = workspace::take_uninit_usize(offsets.len());
+    for (o, &v) in out.iter_mut().zip(offsets) {
+        *o = (((v as i64 % n_in as i64) + n_in as i64) % n_in as i64) as usize;
+    }
+    out
 }
 
 /// Parse and synthesize `micro_*` artifact names; `Ok(None)` = not a micro name.
@@ -158,9 +485,9 @@ fn micro_artifact(name: &str) -> Result<Option<Artifact>> {
         let f: StepFn = Box::new(move |inputs| {
             let x = inputs[0].as_f32()?;
             let w = inputs[1].as_f32()?;
-            let mut y = vec![0.0f32; MICRO_BATCH * n];
+            let mut y = workspace::take_uninit_f32(MICRO_BATCH * n);
             dense::gemm_t(x, w, &mut y, MICRO_BATCH, n, n);
-            Ok(vec![HostTensor::f32(&[MICRO_BATCH, n], y)])
+            Ok(vec![workspace::tensor_f32(&[MICRO_BATCH, n], y)])
         });
         return Ok(Some(Artifact::from_native(meta, f)));
     }
@@ -184,9 +511,10 @@ fn micro_artifact(name: &str) -> Result<Option<Artifact>> {
             let x = inputs[0].as_f32()?;
             let offsets = offsets_to_usize(inputs[1].as_i32()?, n);
             let values = inputs[2].as_f32()?;
-            let mut y = vec![0.0f32; MICRO_BATCH * n];
+            let mut y = workspace::take_uninit_f32(MICRO_BATCH * n);
             diag::spmm_t(x, &offsets, values, &mut y, MICRO_BATCH, n, n);
-            Ok(vec![HostTensor::f32(&[MICRO_BATCH, n], y)])
+            workspace::give_usize(offsets);
+            Ok(vec![workspace::tensor_f32(&[MICRO_BATCH, n], y)])
         });
         return Ok(Some(Artifact::from_native(meta, f)));
     }
@@ -221,10 +549,16 @@ fn micro_artifact(name: &str) -> Result<Option<Artifact>> {
         );
         let f: StepFn = Box::new(move |inputs| {
             let x = inputs[0].as_f32()?;
-            let row_ptr: Vec<usize> =
-                inputs[1].as_i32()?.iter().map(|&v| v.max(0) as usize).collect();
-            let col_idx: Vec<usize> =
-                inputs[2].as_i32()?.iter().map(|&v| v.max(0) as usize).collect();
+            let raw_rp = inputs[1].as_i32()?;
+            let raw_ci = inputs[2].as_i32()?;
+            let mut row_ptr = workspace::take_uninit_usize(raw_rp.len());
+            for (o, &v) in row_ptr.iter_mut().zip(raw_rp) {
+                *o = v.max(0) as usize;
+            }
+            let mut col_idx = workspace::take_uninit_usize(raw_ci.len());
+            for (o, &v) in col_idx.iter_mut().zip(raw_ci) {
+                *o = v.max(0) as usize;
+            }
             let blocks = inputs[3].as_f32()?;
             // full CSR invariants: monotone row_ptr bounded by nnzb, so a
             // malformed input errors here instead of panicking in the kernel
@@ -236,9 +570,11 @@ fn micro_artifact(name: &str) -> Result<Option<Artifact>> {
             if let Some(&bad) = col_idx.iter().find(|&&c| c * bs + bs > n) {
                 bail!("micro_bcsr: block col {} out of range", bad);
             }
-            let mut y = vec![0.0f32; MICRO_BATCH * n];
+            let mut y = workspace::take_uninit_f32(MICRO_BATCH * n);
             bcsr::spmm_t(x, &row_ptr, &col_idx, blocks, bs, n, n, &mut y, MICRO_BATCH);
-            Ok(vec![HostTensor::f32(&[MICRO_BATCH, n], y)])
+            workspace::give_usize(row_ptr);
+            workspace::give_usize(col_idx);
+            Ok(vec![workspace::tensor_f32(&[MICRO_BATCH, n], y)])
         });
         return Ok(Some(Artifact::from_native(meta, f)));
     }
@@ -388,41 +724,168 @@ fn batch_specs(cfg: &MlpConfig) -> Vec<IoSpec> {
 }
 
 // ---------------------------------------------------------------------------
-// Input routing helpers
+// IO plans: name routing resolved once at artifact-build time
 // ---------------------------------------------------------------------------
 
-struct InputMap<'a> {
-    by_name: BTreeMap<&'a str, &'a HostTensor>,
+fn spec_idx(specs: &[IoSpec], name: &str) -> usize {
+    specs
+        .iter()
+        .position(|s| s.name == name)
+        .unwrap_or_else(|| panic!("native plan: missing input '{}'", name))
 }
 
-impl<'a> InputMap<'a> {
-    fn new(specs: &'a [IoSpec], inputs: &'a [HostTensor]) -> InputMap<'a> {
-        InputMap {
-            by_name: specs
-                .iter()
-                .map(|s| s.name.as_str())
-                .zip(inputs.iter())
-                .collect(),
+fn spec_idx_opt(specs: &[IoSpec], name: &str) -> Option<usize> {
+    specs.iter().position(|s| s.name == name)
+}
+
+/// One sparse layer's input slots.
+struct LayerIo {
+    n_out: usize,
+    n_in: usize,
+    bias: usize,
+    /// masked: `params/<base>/w`; dynadiag: `params/<base>/v`
+    w: usize,
+    mask: Option<usize>,
+    alpha: Option<usize>,
+}
+
+/// Input slots shared by the train/eval/gradprobe step functions.
+struct ModelIo {
+    x: usize,
+    y: usize,
+    temp: Option<usize>,
+    kvec: Option<usize>,
+    embed_w: usize,
+    embed_b: usize,
+    head_w: usize,
+    head_b: usize,
+    /// 2·depth entries, fc1/fc2 interleaved per block (the kvec order).
+    layers: Vec<LayerIo>,
+}
+
+fn model_io(cfg: &MlpConfig, mode: Param, specs: &[IoSpec]) -> ModelIo {
+    let mut layers = Vec::with_capacity(2 * cfg.depth);
+    for b in 0..cfg.depth {
+        for (ln, o, i) in [("fc1", cfg.mlp, cfg.dim), ("fc2", cfg.dim, cfg.mlp)] {
+            let base = format!("blocks/{}/{}", b, ln);
+            layers.push(LayerIo {
+                n_out: o,
+                n_in: i,
+                bias: spec_idx(specs, &format!("params/{}/b", base)),
+                w: match mode {
+                    Param::Masked => spec_idx(specs, &format!("params/{}/w", base)),
+                    Param::DynaDiag => spec_idx(specs, &format!("params/{}/v", base)),
+                },
+                mask: match mode {
+                    Param::Masked => Some(spec_idx(specs, &format!("masks/{}", base))),
+                    Param::DynaDiag => None,
+                },
+                alpha: match mode {
+                    Param::Masked => None,
+                    Param::DynaDiag => {
+                        Some(spec_idx(specs, &format!("params/{}/alpha", base)))
+                    }
+                },
+            });
         }
     }
-
-    fn f32(&self, name: &str) -> Result<&'a [f32]> {
-        self.by_name
-            .get(name)
-            .ok_or_else(|| anyhow!("missing input '{}'", name))?
-            .as_f32()
+    ModelIo {
+        x: spec_idx(specs, "batch/x"),
+        y: spec_idx(specs, "batch/y"),
+        temp: spec_idx_opt(specs, "scalar/temp"),
+        kvec: spec_idx_opt(specs, "kvec"),
+        embed_w: spec_idx(specs, "params/embed/w"),
+        embed_b: spec_idx(specs, "params/embed/b"),
+        head_w: spec_idx(specs, "params/head/w"),
+        head_b: spec_idx(specs, "params/head/b"),
+        layers,
     }
+}
 
-    fn i32(&self, name: &str) -> Result<&'a [i32]> {
-        self.by_name
-            .get(name)
-            .ok_or_else(|| anyhow!("missing input '{}'", name))?
-            .as_i32()
-    }
+/// Where one parameter leaf's gradient comes from. Layer indices are the
+/// sparse-layer (kvec) order.
+enum GradSrc {
+    EmbedW,
+    EmbedB,
+    HeadW,
+    HeadB,
+    LayerBias(usize),
+    /// masked weight: `dW = dW_eff ⊙ M`
+    LayerW(usize),
+    /// dynadiag values: `dV = dW_eff ⊙ Ã` (expanded per position)
+    LayerV(usize),
+    /// dynadiag α through the soft-TopK Jacobian
+    LayerAlpha(usize),
+}
 
-    fn scalar(&self, name: &str) -> Result<f32> {
-        Ok(self.f32(name)?[0])
+fn grad_src_for(name: &str) -> GradSrc {
+    match name {
+        "embed/w" => GradSrc::EmbedW,
+        "embed/b" => GradSrc::EmbedB,
+        "head/w" => GradSrc::HeadW,
+        "head/b" => GradSrc::HeadB,
+        _ => {
+            // "blocks/{b}/{fc1|fc2}/{b|w|v|alpha}"
+            let parts: Vec<&str> = name.split('/').collect();
+            assert_eq!(parts.len(), 4, "unexpected leaf '{}'", name);
+            let bidx: usize = parts[1].parse().expect("block index");
+            let l = 2 * bidx + if parts[2] == "fc2" { 1 } else { 0 };
+            match parts[3] {
+                "b" => GradSrc::LayerBias(l),
+                "w" => GradSrc::LayerW(l),
+                "v" => GradSrc::LayerV(l),
+                "alpha" => GradSrc::LayerAlpha(l),
+                other => panic!("unknown leaf kind '{}'", other),
+            }
+        }
     }
+}
+
+/// One parameter leaf's train-step slots.
+struct LeafIo {
+    p: usize,
+    m: usize,
+    v: usize,
+    shape: Vec<usize>,
+    decay: bool,
+    src: GradSrc,
+}
+
+struct TrainPlan {
+    io: ModelIo,
+    step: usize,
+    lr: usize,
+    wd: usize,
+    l1: Option<usize>,
+    leaves: Vec<LeafIo>,
+}
+
+fn train_plan(cfg: &MlpConfig, mode: Param, specs: &[IoSpec]) -> TrainPlan {
+    let io = model_io(cfg, mode, specs);
+    let mut leaves = Vec::new();
+    for (name, shape) in param_leaves(cfg, mode) {
+        let decay = shape.len() >= 2 && !name.ends_with("alpha");
+        leaves.push(LeafIo {
+            p: spec_idx(specs, &format!("params/{}", name)),
+            m: spec_idx(specs, &format!("opt_m/{}", name)),
+            v: spec_idx(specs, &format!("opt_v/{}", name)),
+            shape,
+            decay,
+            src: grad_src_for(&name),
+        });
+    }
+    TrainPlan {
+        io,
+        step: spec_idx(specs, "scalar/step"),
+        lr: spec_idx(specs, "scalar/lr"),
+        wd: spec_idx(specs, "scalar/wd"),
+        l1: spec_idx_opt(specs, "scalar/l1"),
+        leaves,
+    }
+}
+
+fn scalar_at(tensors: &[HostTensor], idx: usize) -> Result<f32> {
+    Ok(tensors[idx].as_f32()?[0])
 }
 
 // ---------------------------------------------------------------------------
@@ -443,8 +906,9 @@ fn gelu_prime(z: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * z * z)
 }
 
+/// `y = x @ Wᵀ + bias` into a workspace buffer (caller recycles).
 fn linear_fwd(x: &[f32], w: &[f32], bias: &[f32], b: usize, n_in: usize, n_out: usize) -> Vec<f32> {
-    let mut y = vec![0.0f32; b * n_out];
+    let mut y = workspace::take_uninit_f32(b * n_out);
     dense::gemm_t(x, w, &mut y, b, n_in, n_out);
     for yr in y.chunks_exact_mut(n_out) {
         for (v, &bi) in yr.iter_mut().zip(bias) {
@@ -454,8 +918,9 @@ fn linear_fwd(x: &[f32], w: &[f32], bias: &[f32], b: usize, n_in: usize, n_out: 
     y
 }
 
+/// Column sums of a `[rows, n]` buffer, into a workspace buffer.
 fn col_sums(dy: &[f32], n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
+    let mut out = workspace::take_f32(n);
     for row in dy.chunks_exact(n) {
         for (o, &v) in out.iter_mut().zip(row) {
             *o += v;
@@ -465,6 +930,7 @@ fn col_sums(dy: &[f32], n: usize) -> Vec<f32> {
 }
 
 /// Softmax cross-entropy with label smoothing; `dlogits` is `(p − q)/B`.
+/// All three buffers come from the workspace.
 struct CeOut {
     loss: f32,
     acc: f32,
@@ -473,10 +939,16 @@ struct CeOut {
     preds: Vec<i32>,
 }
 
+fn recycle_ce(ce: CeOut) {
+    workspace::give_f32(ce.per_example);
+    workspace::give_f32(ce.dlogits);
+    workspace::give_i32(ce.preds);
+}
+
 fn softmax_ce(logits: &[f32], y: &[i32], b: usize, c: usize, smoothing: f32) -> Result<CeOut> {
-    let mut per_example = vec![0.0f32; b];
-    let mut dlogits = vec![0.0f32; b * c];
-    let mut preds = vec![0i32; b];
+    let mut per_example = workspace::take_uninit_f32(b);
+    let mut dlogits = workspace::take_uninit_f32(b * c);
+    let mut preds = workspace::take_uninit_i32(b);
     let mut correct = 0usize;
     for bi in 0..b {
         let row = &logits[bi * c..(bi + 1) * c];
@@ -559,14 +1031,22 @@ fn adamw(
     }
 }
 
-/// Effective (dense-materialized) weights of the whole model.
-struct EffParams {
-    embed_w: Vec<f32>,
-    embed_b: Vec<f32>,
-    head_w: Vec<f32>,
-    head_b: Vec<f32>,
-    /// per block: (w1_eff, b1, w2_eff, b2)
-    blocks: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>,
+/// Effective weights of the whole model. Dense params are borrowed from
+/// the step inputs; only the sparse layers materialize (into workspace
+/// buffers, recycled by [`recycle_eff`]).
+struct BlockEff<'a> {
+    w1: Vec<f32>,
+    b1: &'a [f32],
+    w2: Vec<f32>,
+    b2: &'a [f32],
+}
+
+struct EffParams<'a> {
+    embed_w: &'a [f32],
+    embed_b: &'a [f32],
+    head_w: &'a [f32],
+    head_b: &'a [f32],
+    blocks: Vec<BlockEff<'a>>,
     /// per sparse layer (fc1, fc2 interleaved per block): the soft-TopK ᾱ
     /// expanded per candidate diagonal — DynaDiag only
     atilde: Vec<Vec<f32>>,
@@ -574,80 +1054,122 @@ struct EffParams {
     l1_sum: f32,
 }
 
-/// `W_eff[i, j] = V[i, j] · ᾱ[(j − i) mod n_in]` (Eq. 4–5 composition).
-fn compose_dynadiag_weff(v: &[f32], atilde: &[f32], n_out: usize, n_in: usize) -> Vec<f32> {
-    let mut w = vec![0.0f32; n_out * n_in];
-    for i in 0..n_out {
-        let wr = &mut w[i * n_in..(i + 1) * n_in];
-        let vr = &v[i * n_in..(i + 1) * n_in];
-        // owner offset of (i, j) is (j − i) mod n_in: walk it with a carry
-        let mut off = (n_in - (i % n_in)) % n_in;
-        for j in 0..n_in {
-            wr[j] = vr[j] * atilde[off];
-            off += 1;
-            if off == n_in {
-                off = 0;
-            }
-        }
+fn recycle_eff(eff: EffParams) {
+    for blk in eff.blocks {
+        workspace::give_f32(blk.w1);
+        workspace::give_f32(blk.w2);
     }
-    w
+    for at in eff.atilde {
+        workspace::give_f32(at);
+    }
 }
 
-fn build_eff(cfg: &MlpConfig, mode: Param, map: &InputMap, temp: f32, kvec: Option<&[f32]>) -> Result<EffParams> {
+/// `W_eff[i, j] = V[i, j] · ᾱ[(j − i) mod n_in]` (Eq. 4–5 composition).
+/// The owner offset of row `i` starts at `(n_in − i) mod n_in` and walks
+/// the ring exactly once per row, so each row splits into two contiguous
+/// branch-free segments (same decomposition as the diag SpMM kernels);
+/// rows are independent, so large layers go through the pool. Also reused
+/// for the gradient mapping `dV = dW_eff ⊙ Ã` (identical index algebra).
+fn compose_dynadiag_weff_into(
+    v: &[f32],
+    atilde: &[f32],
+    n_out: usize,
+    n_in: usize,
+    w: &mut [f32],
+) {
+    debug_assert_eq!(v.len(), n_out * n_in);
+    debug_assert_eq!(w.len(), n_out * n_in);
+    debug_assert_eq!(atilde.len(), n_in);
+    pool::parallel_rows(w, n_in, 2 * n_in, |first_row, chunk| {
+        for (r, wr) in chunk.chunks_exact_mut(n_in).enumerate() {
+            let i = first_row + r;
+            let vr = &v[i * n_in..(i + 1) * n_in];
+            let o0 = (n_in - (i % n_in)) % n_in;
+            let split = n_in - o0;
+            for ((wv, &vv), &av) in
+                wr[..split].iter_mut().zip(&vr[..split]).zip(&atilde[o0..])
+            {
+                *wv = vv * av;
+            }
+            for ((wv, &vv), &av) in
+                wr[split..].iter_mut().zip(&vr[split..]).zip(&atilde[..o0])
+            {
+                *wv = vv * av;
+            }
+        }
+    });
+}
+
+fn build_eff<'a>(
+    cfg: &MlpConfig,
+    mode: Param,
+    io: &ModelIo,
+    tensors: &'a [HostTensor],
+    temp: f32,
+    kvec: Option<&[f32]>,
+) -> Result<EffParams<'a>> {
     let mut blocks = Vec::with_capacity(cfg.depth);
-    let mut atilde_all = Vec::new();
+    let mut atilde_all: Vec<Vec<f32>> = Vec::new();
     let mut l1_sum = 0.0f32;
-    for b in 0..cfg.depth {
-        let mut eff_layer = |ln: &str, o: usize, i: usize, sparse_idx: usize| -> Result<(Vec<f32>, Vec<f32>)> {
-            let base = format!("blocks/{}/{}", b, ln);
-            let bias = map.f32(&format!("params/{}/b", base))?.to_vec();
+    {
+        let mut eff_layer = |l: usize| -> Result<(Vec<f32>, &'a [f32])> {
+            let layer = &io.layers[l];
+            let (o, i) = (layer.n_out, layer.n_in);
+            let bias = tensors[layer.bias].as_f32()?;
             match mode {
                 Param::Masked => {
-                    let w = map.f32(&format!("params/{}/w", base))?;
-                    let mask = map.f32(&format!("masks/{}", base))?;
+                    let w = tensors[layer.w].as_f32()?;
+                    let mask = tensors[layer.mask.expect("masked layer has mask")].as_f32()?;
                     if w.len() != o * i || mask.len() != o * i {
-                        bail!("layer {}: bad w/mask length", base);
+                        bail!("sparse layer {}: bad w/mask length", l);
                     }
-                    let weff: Vec<f32> = w.iter().zip(mask).map(|(a, m)| a * m).collect();
+                    let mut weff = workspace::take_uninit_f32(o * i);
+                    for ((e, &a), &mk) in weff.iter_mut().zip(w).zip(mask) {
+                        *e = a * mk;
+                    }
                     Ok((weff, bias))
                 }
                 Param::DynaDiag => {
-                    let v = map.f32(&format!("params/{}/v", base))?;
-                    let alpha = map.f32(&format!("params/{}/alpha", base))?;
+                    let v = tensors[layer.w].as_f32()?;
+                    let alpha = tensors[layer.alpha.expect("dynadiag layer has alpha")].as_f32()?;
                     if v.len() != o * i || alpha.len() != i {
-                        bail!("layer {}: bad v/alpha length", base);
+                        bail!("sparse layer {}: bad v/alpha length", l);
                     }
                     let k = kvec
-                        .and_then(|kv| kv.get(sparse_idx))
+                        .and_then(|kv| kv.get(l))
                         .copied()
-                        .ok_or_else(|| anyhow!("kvec missing entry {}", sparse_idx))?;
-                    let at: Vec<f32> = soft_topk(alpha, k as f64, temp as f64)
-                        .into_iter()
-                        .map(|x| x as f32)
-                        .collect();
+                        .ok_or_else(|| anyhow!("kvec missing entry {}", l))?;
+                    let st = soft_topk(alpha, k as f64, temp as f64);
+                    let mut at = workspace::take_uninit_f32(i);
+                    for (o_at, s) in at.iter_mut().zip(&st) {
+                        *o_at = *s as f32;
+                    }
                     l1_sum += alpha.iter().map(|a| a.abs()).sum::<f32>();
-                    let weff = compose_dynadiag_weff(v, &at, o, i);
+                    let mut weff = workspace::take_uninit_f32(o * i);
+                    compose_dynadiag_weff_into(v, &at, o, i, &mut weff);
                     atilde_all.push(at);
                     Ok((weff, bias))
                 }
             }
         };
-        let (w1, b1) = eff_layer("fc1", cfg.mlp, cfg.dim, 2 * b)?;
-        let (w2, b2) = eff_layer("fc2", cfg.dim, cfg.mlp, 2 * b + 1)?;
-        blocks.push((w1, b1, w2, b2));
+        for b in 0..cfg.depth {
+            let (w1, b1) = eff_layer(2 * b)?;
+            let (w2, b2) = eff_layer(2 * b + 1)?;
+            blocks.push(BlockEff { w1, b1, w2, b2 });
+        }
     }
     Ok(EffParams {
-        embed_w: map.f32("params/embed/w")?.to_vec(),
-        embed_b: map.f32("params/embed/b")?.to_vec(),
-        head_w: map.f32("params/head/w")?.to_vec(),
-        head_b: map.f32("params/head/b")?.to_vec(),
+        embed_w: tensors[io.embed_w].as_f32()?,
+        embed_b: tensors[io.embed_b].as_f32()?,
+        head_w: tensors[io.head_w].as_f32()?,
+        head_b: tensors[io.head_b].as_f32()?,
         blocks,
         atilde: atilde_all,
         l1_sum,
     })
 }
 
-/// Activations the backward pass needs.
+/// Activations the backward pass needs (all workspace buffers).
 struct ForwardCache {
     pooled: Vec<f32>,
     /// h[0] = embed output; h[l+1] = output of block l; h[depth] feeds the head
@@ -657,10 +1179,25 @@ struct ForwardCache {
     logits: Vec<f32>,
 }
 
+fn recycle_cache(cache: ForwardCache) {
+    workspace::give_f32(cache.pooled);
+    for v in cache.h {
+        workspace::give_f32(v);
+    }
+    for v in cache.zpre {
+        workspace::give_f32(v);
+    }
+    for v in cache.act {
+        workspace::give_f32(v);
+    }
+    workspace::give_f32(cache.logits);
+}
+
 /// Mean-pool the tokens: `[B, T, P] -> [B, P]` (the model's input stem,
-/// shared by every parameterization including diag-infer).
+/// shared by every parameterization including diag-infer). Returns a
+/// workspace buffer.
 fn mean_pool(x: &[f32], b: usize, t: usize, p: usize) -> Vec<f32> {
-    let mut pooled = vec![0.0f32; b * p];
+    let mut pooled = workspace::take_f32(b * p);
     for bi in 0..b {
         let dst = &mut pooled[bi * p..(bi + 1) * p];
         for ti in 0..t {
@@ -680,28 +1217,32 @@ fn forward(cfg: &MlpConfig, eff: &EffParams, x: &[f32]) -> ForwardCache {
     let (b, t, p) = (cfg.batch, cfg.tokens, cfg.patch_dim);
     let pooled = mean_pool(x, b, t, p);
     let mut h = Vec::with_capacity(cfg.depth + 1);
-    h.push(linear_fwd(&pooled, &eff.embed_w, &eff.embed_b, b, p, cfg.dim));
+    h.push(linear_fwd(&pooled, eff.embed_w, eff.embed_b, b, p, cfg.dim));
     let mut zpre = Vec::with_capacity(cfg.depth);
     let mut act = Vec::with_capacity(cfg.depth);
-    for (w1, b1, w2, b2) in &eff.blocks {
+    for blk in &eff.blocks {
         let hin = h.last().unwrap();
-        let z = linear_fwd(hin, w1, b1, b, cfg.dim, cfg.mlp);
-        let a: Vec<f32> = z.iter().map(|&v| gelu(v)).collect();
-        let r = linear_fwd(&a, w2, b2, b, cfg.mlp, cfg.dim);
-        let mut hnext = hin.clone();
+        let z = linear_fwd(hin, &blk.w1, blk.b1, b, cfg.dim, cfg.mlp);
+        let mut a = workspace::take_uninit_f32(z.len());
+        for (av, &zv) in a.iter_mut().zip(&z) {
+            *av = gelu(zv);
+        }
+        let r = linear_fwd(&a, &blk.w2, blk.b2, b, cfg.mlp, cfg.dim);
+        let mut hnext = workspace::take_copy_f32(hin);
         for (o, &v) in hnext.iter_mut().zip(&r) {
             *o += v;
         }
+        workspace::give_f32(r);
         zpre.push(z);
         act.push(a);
         h.push(hnext);
     }
-    let logits = linear_fwd(h.last().unwrap(), &eff.head_w, &eff.head_b, b, cfg.dim, cfg.classes);
+    let logits = linear_fwd(h.last().unwrap(), eff.head_w, eff.head_b, b, cfg.dim, cfg.classes);
     ForwardCache { pooled, h, zpre, act, logits }
 }
 
 /// Gradients w.r.t. the *effective* weights (masked/DynaDiag mapping happens
-/// in the caller) plus the dense embed/head params.
+/// in the caller) plus the dense embed/head params. All workspace buffers.
 struct Grads {
     embed_w: Vec<f32>,
     embed_b: Vec<f32>,
@@ -711,44 +1252,74 @@ struct Grads {
     blocks: Vec<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)>,
 }
 
+fn recycle_grads(grads: Grads) {
+    workspace::give_f32(grads.embed_w);
+    workspace::give_f32(grads.embed_b);
+    workspace::give_f32(grads.head_w);
+    workspace::give_f32(grads.head_b);
+    for (dw1, db1, dw2, db2) in grads.blocks {
+        workspace::give_f32(dw1);
+        workspace::give_f32(db1);
+        workspace::give_f32(dw2);
+        workspace::give_f32(db2);
+    }
+}
+
+/// dW_eff of sparse layer `l` (kvec order) inside `grads`.
+fn block_dweff(grads: &Grads, l: usize) -> &[f32] {
+    let blk = &grads.blocks[l / 2];
+    if l % 2 == 0 {
+        &blk.0
+    } else {
+        &blk.2
+    }
+}
+
 fn backward(cfg: &MlpConfig, eff: &EffParams, cache: &ForwardCache, dlogits: &[f32]) -> Grads {
     let b = cfg.batch;
     let (d, m, c, p) = (cfg.dim, cfg.mlp, cfg.classes, cfg.patch_dim);
-    let mut head_w = vec![0.0f32; c * d];
+    let mut head_w = workspace::take_uninit_f32(c * d);
     dense::gemm_grad_w(dlogits, cache.h.last().unwrap(), &mut head_w, b, d, c);
     let head_b = col_sums(dlogits, c);
-    let mut dh = vec![0.0f32; b * d];
-    dense::gemm(dlogits, &eff.head_w, &mut dh, b, d, c);
+    let mut dh = workspace::take_uninit_f32(b * d);
+    dense::gemm(dlogits, eff.head_w, &mut dh, b, d, c);
 
     let mut blocks_rev = Vec::with_capacity(cfg.depth);
     for l in (0..cfg.depth).rev() {
-        let (w1, _b1, w2, _b2) = &eff.blocks[l];
+        let blk = &eff.blocks[l];
         let hin = &cache.h[l];
         let a = &cache.act[l];
         let z = &cache.zpre[l];
         // residual branch: r = fc2(gelu(fc1(hin)))
         let dr = &dh; // dh/dr = identity on the residual add
-        let mut dw2 = vec![0.0f32; d * m];
+        let mut dw2 = workspace::take_uninit_f32(d * m);
         dense::gemm_grad_w(dr, a, &mut dw2, b, m, d);
         let db2 = col_sums(dr, d);
-        let mut da = vec![0.0f32; b * m];
-        dense::gemm(dr, w2, &mut da, b, m, d);
-        let dz: Vec<f32> = da.iter().zip(z).map(|(&g, &zv)| g * gelu_prime(zv)).collect();
-        let mut dw1 = vec![0.0f32; m * d];
+        let mut da = workspace::take_uninit_f32(b * m);
+        dense::gemm(dr, &blk.w2, &mut da, b, m, d);
+        let mut dz = workspace::take_uninit_f32(b * m);
+        for ((o, &g), &zv) in dz.iter_mut().zip(&da).zip(z) {
+            *o = g * gelu_prime(zv);
+        }
+        workspace::give_f32(da);
+        let mut dw1 = workspace::take_uninit_f32(m * d);
         dense::gemm_grad_w(&dz, hin, &mut dw1, b, d, m);
         let db1 = col_sums(&dz, m);
-        let mut dh_branch = vec![0.0f32; b * d];
-        dense::gemm(&dz, w1, &mut dh_branch, b, d, m);
+        let mut dh_branch = workspace::take_uninit_f32(b * d);
+        dense::gemm(&dz, &blk.w1, &mut dh_branch, b, d, m);
+        workspace::give_f32(dz);
         for (o, &v) in dh.iter_mut().zip(&dh_branch) {
             *o += v; // identity path + branch path
         }
+        workspace::give_f32(dh_branch);
         blocks_rev.push((dw1, db1, dw2, db2));
     }
     blocks_rev.reverse();
 
-    let mut embed_w = vec![0.0f32; d * p];
+    let mut embed_w = workspace::take_uninit_f32(d * p);
     dense::gemm_grad_w(&dh, &cache.pooled, &mut embed_w, b, p, d);
     let embed_b = col_sums(&dh, d);
+    workspace::give_f32(dh);
     Grads {
         embed_w,
         embed_b,
@@ -760,51 +1331,66 @@ fn backward(cfg: &MlpConfig, eff: &EffParams, cache: &ForwardCache, dlogits: &[f
 
 /// α gradient through `ᾱ = min(k · softmax(α/T), 1)`: exact softmax
 /// Jacobian with the saturated entries masked out, plus the ℓ1 term.
-fn alpha_grad(
+/// Writes into `out` (len == alpha.len()).
+fn alpha_grad_into(
     alpha: &[f32],
     datilde: &[f32],
     k: f32,
     temp: f32,
     l1_coeff: f32,
-) -> Vec<f32> {
+    out: &mut [f32],
+) {
     let t = (temp as f64).max(1e-6);
     let mx = alpha.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-    let exps: Vec<f64> = alpha.iter().map(|&a| ((a as f64 - mx) / t).exp()).collect();
-    let sum: f64 = exps.iter().sum();
-    let s: Vec<f64> = exps.iter().map(|e| e / sum).collect();
+    let mut s = workspace::take_uninit_f32(alpha.len());
+    let mut sum = 0.0f64;
+    for (sv, &a) in s.iter_mut().zip(alpha) {
+        let e = ((a as f64 - mx) / t).exp();
+        *sv = e as f32;
+        sum += e;
+    }
     let kk = k as f64;
     let mut inner = 0.0f64;
     for o in 0..alpha.len() {
-        if kk * s[o] < 1.0 {
-            inner += s[o] * datilde[o] as f64;
+        let so = s[o] as f64 / sum;
+        if kk * so < 1.0 {
+            inner += so * datilde[o] as f64;
         }
     }
-    (0..alpha.len())
-        .map(|pi| {
-            let own = if kk * s[pi] < 1.0 { s[pi] * datilde[pi] as f64 } else { 0.0 };
-            let soft = (kk / t) * (own - s[pi] * inner);
-            let l1 = l1_coeff * if alpha[pi] > 0.0 { 1.0 } else if alpha[pi] < 0.0 { -1.0 } else { 0.0 };
-            soft as f32 + l1
-        })
-        .collect()
+    for pi in 0..alpha.len() {
+        let sp = s[pi] as f64 / sum;
+        let own = if kk * sp < 1.0 { sp * datilde[pi] as f64 } else { 0.0 };
+        let soft = (kk / t) * (own - sp * inner);
+        let l1 = l1_coeff
+            * if alpha[pi] > 0.0 {
+                1.0
+            } else if alpha[pi] < 0.0 {
+                -1.0
+            } else {
+                0.0
+            };
+        out[pi] = soft as f32 + l1;
+    }
+    workspace::give_f32(s);
 }
 
-/// `dᾱ[o] = Σ_{(i,j) on diagonal o} dW_eff[i,j] · V[i,j]`.
-fn datilde_of(dweff: &[f32], v: &[f32], n_out: usize, n_in: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n_in];
+/// `dᾱ[o] = Σ_{(i,j) on diagonal o} dW_eff[i,j] · V[i,j]`, into `out`
+/// (zeroed, len == n_in). Rows share the accumulator, so this stays
+/// serial, but each row is the same two-segment branch-free walk as the
+/// compose above.
+fn datilde_of_into(dweff: &[f32], v: &[f32], n_out: usize, n_in: usize, out: &mut [f32]) {
     for i in 0..n_out {
         let dr = &dweff[i * n_in..(i + 1) * n_in];
         let vr = &v[i * n_in..(i + 1) * n_in];
-        let mut off = (n_in - (i % n_in)) % n_in;
-        for j in 0..n_in {
-            out[off] += dr[j] * vr[j];
-            off += 1;
-            if off == n_in {
-                off = 0;
-            }
+        let o0 = (n_in - (i % n_in)) % n_in;
+        let split = n_in - o0;
+        for ((o, &d), &vv) in out[o0..].iter_mut().zip(&dr[..split]).zip(&vr[..split]) {
+            *o += d * vv;
+        }
+        for ((o, &d), &vv) in out[..o0].iter_mut().zip(&dr[split..]).zip(&vr[split..]) {
+            *o += d * vv;
         }
     }
-    out
 }
 
 // ---------------------------------------------------------------------------
@@ -844,127 +1430,132 @@ fn train_artifact(cfg: &'static MlpConfig, mode: Param) -> Artifact {
     outputs.push("loss".to_string());
     outputs.push("acc".to_string());
 
+    let plan = train_plan(cfg, mode, &inputs);
     let meta = ArtifactMeta {
         name: format!("{}_{}_train", cfg.name, mode.as_str()),
         file: "<native>".to_string(),
-        inputs: inputs.clone(),
+        inputs,
         outputs,
         meta: model_meta_json(cfg, "train", mode.as_str()),
     };
 
-    let leaves_c = leaves.clone();
-    let f: StepFn = Box::new(move |tensors| {
-        run_train(cfg, mode, &leaves_c, &inputs, tensors)
-    });
+    let f: StepFn = Box::new(move |tensors| run_train(cfg, mode, &plan, tensors));
     Artifact::from_native(meta, f)
 }
 
 fn run_train(
     cfg: &MlpConfig,
     mode: Param,
-    leaves: &[(String, Vec<usize>)],
-    specs: &[IoSpec],
+    plan: &TrainPlan,
     tensors: &[HostTensor],
 ) -> Result<Vec<HostTensor>> {
-    let map = InputMap::new(specs, tensors);
-    let x = map.f32("batch/x")?;
-    let y = map.i32("batch/y")?;
-    let step = map.scalar("scalar/step")?;
-    let lr = map.scalar("scalar/lr")?;
-    let wd = map.scalar("scalar/wd")?;
+    let io = &plan.io;
+    let x = tensors[io.x].as_f32()?;
+    let y = tensors[io.y].as_i32()?;
+    let step = scalar_at(tensors, plan.step)?;
+    let lr = scalar_at(tensors, plan.lr)?;
+    let wd = scalar_at(tensors, plan.wd)?;
     let (temp, l1c, kvec) = match mode {
         Param::DynaDiag => (
-            map.scalar("scalar/temp")?,
-            map.scalar("scalar/l1")?,
-            Some(map.f32("kvec")?),
+            scalar_at(tensors, io.temp.expect("dynadiag train has temp"))?,
+            scalar_at(tensors, plan.l1.expect("dynadiag train has l1"))?,
+            Some(tensors[io.kvec.expect("dynadiag train has kvec")].as_f32()?),
         ),
         Param::Masked => (0.0, 0.0, None),
     };
 
-    let eff = build_eff(cfg, mode, &map, temp, kvec)?;
+    let eff = build_eff(cfg, mode, io, tensors, temp, kvec)?;
     let cache = forward(cfg, &eff, x);
     let ce = softmax_ce(&cache.logits, y, cfg.batch, cfg.classes, cfg.smoothing)?;
     let grads = backward(cfg, &eff, &cache, &ce.dlogits);
     let loss = ce.loss + l1c * eff.l1_sum;
+    let acc = ce.acc;
 
-    // map effective-weight grads back onto the stored parameterization
-    let mut grad_map: BTreeMap<String, Vec<f32>> = BTreeMap::new();
-    grad_map.insert("embed/w".into(), grads.embed_w);
-    grad_map.insert("embed/b".into(), grads.embed_b);
-    grad_map.insert("head/w".into(), grads.head_w);
-    grad_map.insert("head/b".into(), grads.head_b);
-    for (b, (dw1, db1, dw2, db2)) in grads.blocks.into_iter().enumerate() {
-        for (ln, dweff, dbias, o, i) in [
-            ("fc1", dw1, db1, cfg.mlp, cfg.dim),
-            ("fc2", dw2, db2, cfg.dim, cfg.mlp),
-        ] {
-            let base = format!("blocks/{}/{}", b, ln);
-            grad_map.insert(format!("{}/b", base), dbias);
-            match mode {
-                Param::Masked => {
-                    let mask = map.f32(&format!("masks/{}", base))?;
-                    let dw: Vec<f32> = dweff.iter().zip(mask).map(|(g, m)| g * m).collect();
-                    grad_map.insert(format!("{}/w", base), dw);
-                }
-                Param::DynaDiag => {
-                    let v = map.f32(&format!("params/{}/v", base))?;
-                    let alpha = map.f32(&format!("params/{}/alpha", base))?;
-                    let sparse_idx = 2 * b + if ln == "fc1" { 0 } else { 1 };
-                    let at = &eff.atilde[sparse_idx];
-                    // dV = dW_eff ⊙ Ã (expanded per matrix position)
-                    let mut dv = vec![0.0f32; o * i];
-                    for r in 0..o {
-                        let src = &dweff[r * i..(r + 1) * i];
-                        let dst = &mut dv[r * i..(r + 1) * i];
-                        let mut off = (i - (r % i)) % i;
-                        for jc in 0..i {
-                            dst[jc] = src[jc] * at[off];
-                            off += 1;
-                            if off == i {
-                                off = 0;
-                            }
-                        }
-                    }
-                    let datilde = datilde_of(&dweff, v, o, i);
-                    let k = kvec.unwrap()[sparse_idx];
-                    let dalpha = alpha_grad(alpha, &datilde, k, temp, l1c);
-                    grad_map.insert(format!("{}/v", base), dv);
-                    grad_map.insert(format!("{}/alpha", base), dalpha);
+    // AdamW over every parameter leaf, reading gradients straight from
+    // their precomputed sources (no name routing on the step path)
+    let n_leaves = plan.leaves.len();
+    let mut new_p: Vec<HostTensor> = Vec::with_capacity(n_leaves);
+    let mut new_m: Vec<HostTensor> = Vec::with_capacity(n_leaves);
+    let mut new_v: Vec<HostTensor> = Vec::with_capacity(n_leaves);
+    for leaf in &plan.leaves {
+        let mut p = workspace::take_copy_f32(tensors[leaf.p].as_f32()?);
+        let mut m = workspace::take_copy_f32(tensors[leaf.m].as_f32()?);
+        let mut v = workspace::take_copy_f32(tensors[leaf.v].as_f32()?);
+        // mapped gradients land in a pooled temp; dense ones are borrowed
+        let mut tmp: Option<Vec<f32>> = None;
+        let g: &[f32] = match leaf.src {
+            GradSrc::EmbedW => &grads.embed_w,
+            GradSrc::EmbedB => &grads.embed_b,
+            GradSrc::HeadW => &grads.head_w,
+            GradSrc::HeadB => &grads.head_b,
+            GradSrc::LayerBias(l) => {
+                let blk = &grads.blocks[l / 2];
+                if l % 2 == 0 {
+                    &blk.1
+                } else {
+                    &blk.3
                 }
             }
+            GradSrc::LayerW(l) => {
+                let dweff = block_dweff(&grads, l);
+                let mask = tensors[io.layers[l].mask.expect("masked layer")].as_f32()?;
+                let mut t = workspace::take_uninit_f32(dweff.len());
+                for ((o, &gw), &mk) in t.iter_mut().zip(dweff).zip(mask) {
+                    *o = gw * mk;
+                }
+                tmp = Some(t);
+                tmp.as_deref().unwrap()
+            }
+            GradSrc::LayerV(l) => {
+                let dweff = block_dweff(&grads, l);
+                let at = &eff.atilde[l];
+                let (o_n, i_n) = (io.layers[l].n_out, io.layers[l].n_in);
+                let mut t = workspace::take_uninit_f32(dweff.len());
+                // dV = dW_eff ⊙ Ã — the same per-position expansion as the
+                // forward compose, so it reuses the two-segment kernel
+                compose_dynadiag_weff_into(dweff, at, o_n, i_n, &mut t);
+                tmp = Some(t);
+                tmp.as_deref().unwrap()
+            }
+            GradSrc::LayerAlpha(l) => {
+                let dweff = block_dweff(&grads, l);
+                let vvals = tensors[io.layers[l].w].as_f32()?;
+                let alpha = tensors[io.layers[l].alpha.expect("dynadiag layer")].as_f32()?;
+                let (o_n, i_n) = (io.layers[l].n_out, io.layers[l].n_in);
+                let mut dat = workspace::take_f32(i_n);
+                datilde_of_into(dweff, vvals, o_n, i_n, &mut dat);
+                let kq = kvec.expect("dynadiag kvec")[l];
+                let mut t = workspace::take_uninit_f32(i_n);
+                alpha_grad_into(alpha, &dat, kq, temp, l1c, &mut t);
+                workspace::give_f32(dat);
+                tmp = Some(t);
+                tmp.as_deref().unwrap()
+            }
+        };
+        if g.len() != p.len() {
+            bail!("gradient length mismatch for leaf (got {}, want {})", g.len(), p.len());
         }
+        adamw(&mut p, g, &mut m, &mut v, step, lr, wd, leaf.decay);
+        if let Some(t) = tmp {
+            workspace::give_f32(t);
+        }
+        new_p.push(workspace::tensor_f32(&leaf.shape, p));
+        new_m.push(workspace::tensor_f32(&leaf.shape, m));
+        new_v.push(workspace::tensor_f32(&leaf.shape, v));
     }
 
-    // AdamW over every parameter leaf
-    let mut new_p: BTreeMap<&str, Vec<f32>> = BTreeMap::new();
-    let mut new_m: BTreeMap<&str, Vec<f32>> = BTreeMap::new();
-    let mut new_v: BTreeMap<&str, Vec<f32>> = BTreeMap::new();
-    for (name, shape) in leaves {
-        let mut p = map.f32(&format!("params/{}", name))?.to_vec();
-        let mut m = map.f32(&format!("opt_m/{}", name))?.to_vec();
-        let mut v = map.f32(&format!("opt_v/{}", name))?.to_vec();
-        let g = grad_map
-            .get(name.as_str())
-            .ok_or_else(|| anyhow!("no gradient for '{}'", name))?;
-        if g.len() != p.len() {
-            bail!("gradient length mismatch for '{}'", name);
-        }
-        let decay = shape.len() >= 2 && !name.ends_with("alpha");
-        adamw(&mut p, g, &mut m, &mut v, step, lr, wd, decay);
-        new_p.insert(name.as_str(), p);
-        new_m.insert(name.as_str(), m);
-        new_v.insert(name.as_str(), v);
-    }
+    recycle_grads(grads);
+    recycle_cache(cache);
+    recycle_ce(ce);
+    recycle_eff(eff);
 
     // outputs in meta order: params, opt_m, opt_v, loss, acc
-    let mut out = Vec::with_capacity(3 * leaves.len() + 2);
-    for section in [&new_p, &new_m, &new_v] {
-        for (name, shape) in leaves {
-            out.push(HostTensor::f32(shape, section[name.as_str()].clone()));
-        }
-    }
-    out.push(HostTensor::scalar_f32(loss));
-    out.push(HostTensor::scalar_f32(ce.acc));
+    let mut out = Vec::with_capacity(3 * n_leaves + 2);
+    out.extend(new_p);
+    out.extend(new_m);
+    out.extend(new_v);
+    out.push(workspace::tensor_scalar(loss));
+    out.push(workspace::tensor_scalar(acc));
     Ok(out)
 }
 
@@ -982,29 +1573,36 @@ fn eval_artifact(cfg: &'static MlpConfig, mode: Param) -> Artifact {
         inputs.push(spec_f32("scalar/temp", &[]));
         inputs.push(spec_f32("kvec", &[sparse.len()]));
     }
+    let io = model_io(cfg, mode, &inputs);
     let meta = ArtifactMeta {
         name: format!("{}_{}_eval", cfg.name, mode.as_str()),
         file: "<native>".to_string(),
-        inputs: inputs.clone(),
+        inputs,
         outputs: vec!["loss".to_string(), "loss_vec".to_string(), "preds".to_string()],
         meta: model_meta_json(cfg, "eval", mode.as_str()),
     };
     let f: StepFn = Box::new(move |tensors| {
-        let map = InputMap::new(&inputs, tensors);
-        let x = map.f32("batch/x")?;
-        let y = map.i32("batch/y")?;
+        let x = tensors[io.x].as_f32()?;
+        let y = tensors[io.y].as_i32()?;
         let (temp, kvec) = match mode {
-            Param::DynaDiag => (map.scalar("scalar/temp")?, Some(map.f32("kvec")?)),
+            Param::DynaDiag => (
+                scalar_at(tensors, io.temp.expect("dynadiag eval has temp"))?,
+                Some(tensors[io.kvec.expect("dynadiag eval has kvec")].as_f32()?),
+            ),
             Param::Masked => (0.0, None),
         };
-        let eff = build_eff(cfg, mode, &map, temp, kvec)?;
+        let eff = build_eff(cfg, mode, &io, tensors, temp, kvec)?;
         let cache = forward(cfg, &eff, x);
         // evaluation reports un-smoothed CE (the L2 eval contract)
         let ce = softmax_ce(&cache.logits, y, cfg.batch, cfg.classes, 0.0)?;
+        recycle_cache(cache);
+        recycle_eff(eff);
+        let CeOut { loss, per_example, dlogits, preds, .. } = ce;
+        workspace::give_f32(dlogits);
         Ok(vec![
-            HostTensor::scalar_f32(ce.loss),
-            HostTensor::f32(&[cfg.batch], ce.per_example),
-            HostTensor::i32(&[cfg.batch], ce.preds),
+            workspace::tensor_scalar(loss),
+            workspace::tensor_f32(&[cfg.batch], per_example),
+            workspace::tensor_i32(&[cfg.batch], preds),
         ])
     });
     Artifact::from_native(meta, f)
@@ -1019,47 +1617,68 @@ fn gradprobe_artifact(cfg: &'static MlpConfig) -> Artifact {
     }
     inputs.extend(batch_specs(cfg));
     // grad outputs sorted by layer name (the python `sorted(grads.keys())`
-    // contract); our construction order is already sorted
-    let mut outputs: Vec<String> = sparse.iter().map(|(n, _, _)| format!("grad/{}", n)).collect();
+    // contract). The step closure emits grads in construction order, so
+    // the two orders must coincide — true while block indices stay single
+    // digit; the assert trips before a depth >= 10 model can silently
+    // mislabel its outputs.
+    let outputs_unsorted: Vec<String> =
+        sparse.iter().map(|(n, _, _)| format!("grad/{}", n)).collect();
+    let mut outputs = outputs_unsorted.clone();
     outputs.sort();
+    assert_eq!(
+        outputs, outputs_unsorted,
+        "gradprobe output routing assumes construction order == sorted order"
+    );
     outputs.push("loss".to_string());
+    let io = model_io(cfg, Param::Masked, &inputs);
     let meta = ArtifactMeta {
         name: format!("{}_masked_gradprobe", cfg.name),
         file: "<native>".to_string(),
-        inputs: inputs.clone(),
-        outputs: outputs.clone(),
+        inputs,
+        outputs,
         meta: model_meta_json(cfg, "gradprobe", "masked"),
     };
     let f: StepFn = Box::new(move |tensors| {
-        let map = InputMap::new(&inputs, tensors);
-        let x = map.f32("batch/x")?;
-        let y = map.i32("batch/y")?;
-        let eff = build_eff(cfg, Param::Masked, &map, 0.0, None)?;
+        let x = tensors[io.x].as_f32()?;
+        let y = tensors[io.y].as_i32()?;
+        let eff = build_eff(cfg, Param::Masked, &io, tensors, 0.0, None)?;
         let cache = forward(cfg, &eff, x);
         let ce = softmax_ce(&cache.logits, y, cfg.batch, cfg.classes, cfg.smoothing)?;
         let grads = backward(cfg, &eff, &cache, &ce.dlogits);
-        // dense d loss / d W_eff per sparse layer, keyed by layer name
-        let mut by_name: BTreeMap<String, (Vec<f32>, usize, usize)> = BTreeMap::new();
-        for (b, (dw1, _db1, dw2, _db2)) in grads.blocks.into_iter().enumerate() {
-            by_name.insert(format!("blocks/{}/fc1", b), (dw1, cfg.mlp, cfg.dim));
-            by_name.insert(format!("blocks/{}/fc2", b), (dw2, cfg.dim, cfg.mlp));
+        let loss = ce.loss;
+        recycle_cache(cache);
+        recycle_ce(ce);
+        recycle_eff(eff);
+        // dense d loss / d W_eff per sparse layer, in sorted == construction
+        // order (blocks/0/fc1, blocks/0/fc2, blocks/1/fc1, ...)
+        let Grads { embed_w, embed_b, head_w, head_b, blocks } = grads;
+        workspace::give_f32(embed_w);
+        workspace::give_f32(embed_b);
+        workspace::give_f32(head_w);
+        workspace::give_f32(head_b);
+        let mut out = Vec::with_capacity(2 * cfg.depth + 1);
+        for (dw1, db1, dw2, db2) in blocks {
+            out.push(workspace::tensor_f32(&[cfg.mlp, cfg.dim], dw1));
+            out.push(workspace::tensor_f32(&[cfg.dim, cfg.mlp], dw2));
+            workspace::give_f32(db1);
+            workspace::give_f32(db2);
         }
-        let mut out = Vec::with_capacity(outputs.len());
-        for name in &outputs {
-            if let Some(layer) = name.strip_prefix("grad/") {
-                let (g, o, i) = by_name
-                    .remove(layer)
-                    .ok_or_else(|| anyhow!("no grad for layer '{}'", layer))?;
-                out.push(HostTensor::f32(&[o, i], g));
-            }
-        }
-        out.push(HostTensor::scalar_f32(ce.loss));
+        out.push(workspace::tensor_scalar(loss));
         Ok(out)
     });
     Artifact::from_native(meta, f)
 }
 
 use crate::sparsity::diagonal::diag_count as diag_k;
+
+/// One sparse layer's diag-infer input slots.
+struct InferLayer {
+    bias: usize,
+    offsets: usize,
+    values: usize,
+    n_out: usize,
+    n_in: usize,
+}
 
 fn diag_infer_artifact(cfg: &'static MlpConfig, sparsity: f64) -> Artifact {
     let sparse = sparse_layers(cfg);
@@ -1082,6 +1701,27 @@ fn diag_infer_artifact(cfg: &'static MlpConfig, sparsity: f64) -> Artifact {
     inputs.push(spec_f32("params/head/w", &[cfg.classes, cfg.dim]));
     inputs.extend(batch_specs(cfg));
 
+    // index plan
+    let mut layers = Vec::with_capacity(2 * cfg.depth);
+    for b in 0..cfg.depth {
+        for (ln, o, i) in [("fc1", cfg.mlp, cfg.dim), ("fc2", cfg.dim, cfg.mlp)] {
+            let base = format!("blocks/{}/{}", b, ln);
+            layers.push(InferLayer {
+                bias: spec_idx(&inputs, &format!("params/{}/b", base)),
+                offsets: spec_idx(&inputs, &format!("params/{}/offsets", base)),
+                values: spec_idx(&inputs, &format!("params/{}/values", base)),
+                n_out: o,
+                n_in: i,
+            });
+        }
+    }
+    let embed_w = spec_idx(&inputs, "params/embed/w");
+    let embed_b = spec_idx(&inputs, "params/embed/b");
+    let head_w = spec_idx(&inputs, "params/head/w");
+    let head_b = spec_idx(&inputs, "params/head/b");
+    let x_in = spec_idx(&inputs, "batch/x");
+    let y_in = spec_idx(&inputs, "batch/y");
+
     let mut meta_json = model_meta_json(cfg, "diag_infer", "diag");
     if let Json::Obj(map) = &mut meta_json {
         map.insert("sparsity".to_string(), Json::Num(sparsity));
@@ -1100,51 +1740,70 @@ fn diag_infer_artifact(cfg: &'static MlpConfig, sparsity: f64) -> Artifact {
     let meta = ArtifactMeta {
         name: format!("{}_diag_infer{}", cfg.name, pct),
         file: "<native>".to_string(),
-        inputs: inputs.clone(),
+        inputs,
         outputs: vec!["loss".to_string(), "preds".to_string()],
         meta: meta_json,
     };
     let f: StepFn = Box::new(move |tensors| {
-        let map = InputMap::new(&inputs, tensors);
-        let x = map.f32("batch/x")?;
-        let y = map.i32("batch/y")?;
+        let x = tensors[x_in].as_f32()?;
+        let y = tensors[y_in].as_i32()?;
         let (b, t, p) = (cfg.batch, cfg.tokens, cfg.patch_dim);
         let pooled = mean_pool(x, b, t, p);
         let mut h = linear_fwd(
             &pooled,
-            map.f32("params/embed/w")?,
-            map.f32("params/embed/b")?,
+            tensors[embed_w].as_f32()?,
+            tensors[embed_b].as_f32()?,
             b,
             p,
             cfg.dim,
         );
-        for blk in 0..cfg.depth {
-            let sparse_fwd = |hin: &[f32], ln: &str, o: usize, i: usize| -> Result<Vec<f32>> {
-                let base = format!("blocks/{}/{}", blk, ln);
-                let offsets = offsets_to_usize(map.i32(&format!("params/{}/offsets", base))?, i);
-                let values = map.f32(&format!("params/{}/values", base))?;
-                let bias = map.f32(&format!("params/{}/b", base))?;
-                let mut z = vec![0.0f32; b * o];
-                diag::spmm_t(hin, &offsets, values, &mut z, b, i, o);
-                for zr in z.chunks_exact_mut(o) {
-                    for (v, &bb) in zr.iter_mut().zip(bias) {
-                        *v += bb;
-                    }
+        workspace::give_f32(pooled);
+        let sparse_fwd = |layer: &InferLayer, hin: &[f32]| -> Result<Vec<f32>> {
+            let (o, i) = (layer.n_out, layer.n_in);
+            let offsets = offsets_to_usize(tensors[layer.offsets].as_i32()?, i);
+            let values = tensors[layer.values].as_f32()?;
+            let bias = tensors[layer.bias].as_f32()?;
+            let mut z = workspace::take_uninit_f32(b * o);
+            diag::spmm_t(hin, &offsets, values, &mut z, b, i, o);
+            workspace::give_usize(offsets);
+            for zr in z.chunks_exact_mut(o) {
+                for (v, &bb) in zr.iter_mut().zip(bias) {
+                    *v += bb;
                 }
-                Ok(z)
-            };
-            let z = sparse_fwd(&h, "fc1", cfg.mlp, cfg.dim)?;
-            let a: Vec<f32> = z.iter().map(|&v| gelu(v)).collect();
-            let r = sparse_fwd(&a, "fc2", cfg.dim, cfg.mlp)?;
+            }
+            Ok(z)
+        };
+        for pair in layers.chunks_exact(2) {
+            let z = sparse_fwd(&pair[0], &h)?;
+            let mut a = workspace::take_uninit_f32(z.len());
+            for (av, &zv) in a.iter_mut().zip(&z) {
+                *av = gelu(zv);
+            }
+            workspace::give_f32(z);
+            let r = sparse_fwd(&pair[1], &a)?;
+            workspace::give_f32(a);
             for (o, &v) in h.iter_mut().zip(&r) {
                 *o += v;
             }
+            workspace::give_f32(r);
         }
-        let logits = linear_fwd(&h, map.f32("params/head/w")?, map.f32("params/head/b")?, b, cfg.dim, cfg.classes);
+        let logits = linear_fwd(
+            &h,
+            tensors[head_w].as_f32()?,
+            tensors[head_b].as_f32()?,
+            b,
+            cfg.dim,
+            cfg.classes,
+        );
+        workspace::give_f32(h);
         let ce = softmax_ce(&logits, y, b, cfg.classes, 0.0)?;
+        workspace::give_f32(logits);
+        let CeOut { loss, per_example, dlogits, preds, .. } = ce;
+        workspace::give_f32(per_example);
+        workspace::give_f32(dlogits);
         Ok(vec![
-            HostTensor::scalar_f32(ce.loss),
-            HostTensor::i32(&[b], ce.preds),
+            workspace::tensor_scalar(loss),
+            workspace::tensor_i32(&[b], preds),
         ])
     });
     Artifact::from_native(meta, f)
@@ -1175,6 +1834,66 @@ mod tests {
         owner_check(4);
         owner_check(7);
         owner_check(16);
+    }
+
+    /// The two-segment compose / datilde walks agree with the direct
+    /// `(j − i) mod n_in` owner formula on square, tall, and wide layers.
+    #[test]
+    fn compose_and_datilde_match_owner_formula() {
+        let mut rng = Rng::new(33);
+        for &(o, i) in &[(6usize, 4usize), (4, 6), (7, 7), (16, 5), (5, 16)] {
+            let v: Vec<f32> = (0..o * i).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let at: Vec<f32> = (0..i).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut w = vec![0.0f32; o * i];
+            compose_dynadiag_weff_into(&v, &at, o, i, &mut w);
+            for r in 0..o {
+                for j in 0..i {
+                    let want = v[r * i + j] * at[owner_offset(r, j, i)];
+                    assert!(
+                        (w[r * i + j] - want).abs() < 1e-6,
+                        "compose o={} i={} r={} j={}",
+                        o,
+                        i,
+                        r,
+                        j
+                    );
+                }
+            }
+            let dw: Vec<f32> = (0..o * i).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut dat = vec![0.0f32; i];
+            datilde_of_into(&dw, &v, o, i, &mut dat);
+            let mut want = vec![0.0f32; i];
+            for r in 0..o {
+                for j in 0..i {
+                    want[owner_offset(r, j, i)] += dw[r * i + j] * v[r * i + j];
+                }
+            }
+            for (idx, (a, b)) in dat.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-4, "datilde o={} i={} off={}", o, i, idx);
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuses_buffers() {
+        workspace::reset_stats();
+        let a = workspace::take_f32(128);
+        workspace::give_f32(a);
+        let b = workspace::take_f32(64);
+        let (fresh, reused) = workspace::stats();
+        assert_eq!(fresh, 1, "first take allocates");
+        assert_eq!(reused, 1, "second take reuses");
+        assert_eq!(b.len(), 64);
+        assert!(b.iter().all(|&v| v == 0.0), "takes are zeroed");
+        workspace::give_f32(b);
+        // take_uninit keeps length semantics but skips the memset on a
+        // same-length reuse (contents unspecified)
+        let u = workspace::take_uninit_f32(64);
+        assert_eq!(u.len(), 64);
+        workspace::give_f32(u);
+        let t = workspace::tensor_scalar(3.5);
+        assert_eq!(t.scalar().unwrap(), 3.5);
+        workspace::give_tensor(t);
     }
 
     #[test]

@@ -74,6 +74,16 @@ impl Mask {
         self.bits.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect()
     }
 
+    /// Write the 0/1 f32 buffer into a caller-provided buffer (the
+    /// allocation-free twin of [`Mask::to_f32`], used by the trainer's
+    /// workspace-pooled upload path). `out.len()` must be `rows * cols`.
+    pub fn to_f32_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.bits.len(), "to_f32_into: length mismatch");
+        for (o, &b) in out.iter_mut().zip(&self.bits) {
+            *o = if b { 1.0 } else { 0.0 };
+        }
+    }
+
     pub fn to_tensor(&self) -> Tensor {
         Tensor { shape: vec![self.rows, self.cols], data: self.to_f32() }
     }

@@ -98,6 +98,25 @@ impl ParamStore {
         }
     }
 
+    /// Allocation-free absorb: *move* the matching output tensors into the
+    /// store (each is replaced by an empty placeholder in `outputs`) and
+    /// recycle the superseded store entries into the native workspace
+    /// arena. With the native backend this closes the buffer cycle — the
+    /// steady-state train loop performs zero heap allocations; with the
+    /// XLA backend it is simply a cheaper [`ParamStore::absorb`].
+    pub fn absorb_take(&mut self, meta: &ArtifactMeta, outputs: &mut [HostTensor]) {
+        for (name, out) in meta.outputs.iter().zip(outputs.iter_mut()) {
+            if let Some(slot) = self.entries.get_mut(name) {
+                let taken = std::mem::replace(
+                    out,
+                    HostTensor::F32 { shape: Vec::new(), data: Vec::new() },
+                );
+                let old = std::mem::replace(slot, taken);
+                crate::runtime::native::workspace::give_tensor(old);
+            }
+        }
+    }
+
     /// Zero the optimizer moments at specific coordinates of a layer
     /// (used when DST regrows connections — fresh moments for fresh links).
     pub fn zero_moments_at(&mut self, layer_w: &str, coords: &[(usize, usize)]) -> Result<()> {
@@ -257,6 +276,21 @@ mod tests {
         let new_w = HostTensor::f32(&[4, 8], vec![7.0; 32]);
         store.absorb(&meta, &[new_w, HostTensor::scalar_f32(1.0)]);
         assert_eq!(store.get("params/blocks/0/fc1/w").unwrap().as_f32().unwrap()[0], 7.0);
+    }
+
+    #[test]
+    fn absorb_take_moves_and_leaves_placeholders() {
+        let meta = fake_meta();
+        let mut store = ParamStore::init(&meta, 1);
+        let mut outputs = vec![
+            HostTensor::f32(&[4, 8], vec![9.0; 32]),
+            HostTensor::scalar_f32(1.0),
+        ];
+        store.absorb_take(&meta, &mut outputs);
+        assert_eq!(store.get("params/blocks/0/fc1/w").unwrap().as_f32().unwrap()[0], 9.0);
+        // the absorbed slot becomes an empty placeholder; the loss stays
+        assert!(outputs[0].is_empty());
+        assert_eq!(outputs[1].scalar().unwrap(), 1.0);
     }
 
     #[test]

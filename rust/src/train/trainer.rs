@@ -21,6 +21,7 @@ use crate::dst::dynadiag::DynaDiagController;
 use crate::dst::{self, DstMethod, GrowAction};
 use std::rc::Rc;
 
+use crate::runtime::native::workspace;
 use crate::runtime::{Artifact, HostTensor, Session};
 use crate::sparsity::diagonal::DiagMatrix;
 use crate::sparsity::distribution::{allocate, LayerShape};
@@ -221,26 +222,31 @@ impl Trainer {
             .clone())
     }
 
-    /// Assemble the train-step input list for `step`.
-    fn build_inputs(&self, step: usize, x: &HostTensor, y: &HostTensor) -> Result<Vec<HostTensor>> {
+    /// Assemble the train-step input list for `step`. The batch tensors
+    /// are moved in (each appears exactly once in the spec list); every
+    /// other tensor is drawn from the native workspace arena, so a loop
+    /// that recycles its non-batch inputs after the step (see
+    /// [`Trainer::train`]) allocates nothing in steady state.
+    fn build_inputs(&self, step: usize, x: HostTensor, y: HostTensor) -> Result<Vec<HostTensor>> {
         let lr = lr_at(step, self.cfg.steps, self.cfg.warmup, self.cfg.lr, self.cfg.lr_min);
+        let (mut x, mut y) = (Some(x), Some(y));
         let mut inputs = Vec::with_capacity(self.train_exe.meta.inputs.len());
         for spec in &self.train_exe.meta.inputs {
             let t = match spec.name.as_str() {
-                "batch/x" => x.clone(),
-                "batch/y" => y.clone(),
-                "scalar/step" => HostTensor::scalar_f32((step + 1) as f32),
-                "scalar/lr" => HostTensor::scalar_f32(lr as f32),
-                "scalar/wd" => HostTensor::scalar_f32(self.cfg.weight_decay as f32),
-                "scalar/temp" => HostTensor::scalar_f32(
+                "batch/x" => x.take().ok_or_else(|| anyhow::anyhow!("batch/x listed twice"))?,
+                "batch/y" => y.take().ok_or_else(|| anyhow::anyhow!("batch/y listed twice"))?,
+                "scalar/step" => workspace::tensor_scalar((step + 1) as f32),
+                "scalar/lr" => workspace::tensor_scalar(lr as f32),
+                "scalar/wd" => workspace::tensor_scalar(self.cfg.weight_decay as f32),
+                "scalar/temp" => workspace::tensor_scalar(
                     self.controller.as_ref().unwrap().temperature(step) as f32,
                 ),
-                "scalar/l1" => HostTensor::scalar_f32(
+                "scalar/l1" => workspace::tensor_scalar(
                     self.controller.as_ref().unwrap().l1_coeff() as f32,
                 ),
                 "kvec" => {
                     let kv = self.controller.as_ref().unwrap().kvec(step);
-                    HostTensor::f32(&[kv.len()], kv)
+                    workspace::tensor_f32(&[kv.len()], kv)
                 }
                 name if name.starts_with("masks/") => {
                     let layer = &name["masks/".len()..];
@@ -248,9 +254,11 @@ impl Trainer {
                         .masks
                         .get(layer)
                         .ok_or_else(|| anyhow::anyhow!("no mask for layer {}", layer))?;
-                    HostTensor::f32(&spec.shape, m.to_f32())
+                    let mut buf = workspace::take_uninit_f32(spec.shape.iter().product());
+                    m.to_f32_into(&mut buf);
+                    workspace::tensor_f32(&spec.shape, buf)
                 }
-                name => self.store.get(name)?.clone(),
+                name => workspace::clone_tensor(self.store.get(name)?),
             };
             inputs.push(t);
         }
@@ -345,11 +353,26 @@ impl Trainer {
 
         for step in 0..self.cfg.steps {
             let (x, y) = self.data.batch(&shape_x, step, None);
-            let inputs = self.build_inputs(step, &x, &y)?;
-            let outputs = self.train_exe.run(&inputs)?;
-            let meta = self.train_exe.meta.clone();
-            self.store.absorb(&meta, &outputs);
+            let inputs = self.build_inputs(step, x, y)?;
+            let mut outputs = self.train_exe.run(&inputs)?;
+            // move params/opt outputs into the store, recycling the
+            // superseded entries; then recycle every remaining pooled
+            // buffer — with the native backend the steady-state loop
+            // allocates nothing (see runtime::native::workspace). The
+            // batch tensors are freshly allocated by the data pipeline
+            // each step, so they are dropped rather than donated (the
+            // arena would otherwise grow by two batch buffers per step).
+            self.store.absorb_take(&self.train_exe.meta, &mut outputs);
             let loss = outputs[loss_idx].scalar()?;
+            let acc = outputs[acc_idx].scalar()?;
+            for t in outputs.drain(..) {
+                workspace::give_tensor(t);
+            }
+            for (spec, t) in self.train_exe.meta.inputs.iter().zip(inputs) {
+                if !spec.name.starts_with("batch/") {
+                    workspace::give_tensor(t);
+                }
+            }
             if !loss.is_finite() {
                 bail!("loss diverged at step {} ({})", step, loss);
             }
@@ -375,7 +398,7 @@ impl Trainer {
             history.push(StepMetric {
                 step,
                 loss,
-                acc: outputs[acc_idx].scalar()?,
+                acc,
                 lr: lr_at(step, self.cfg.steps, self.cfg.warmup, self.cfg.lr, self.cfg.lr_min),
                 temperature,
                 effective_k,
@@ -485,7 +508,7 @@ impl Trainer {
                 };
                 inputs.push(t);
             }
-            let outputs = self.eval_exe.run(&inputs)?;
+            let mut outputs = self.eval_exe.run(&inputs)?;
             losses.push(outputs[0].scalar()?);
             if self.is_lm {
                 // outputs: loss, loss_vec, correct token counts
@@ -500,6 +523,11 @@ impl Trainer {
                 for (p, t) in preds.iter().zip(y.as_i32()?) {
                     correct.push(p == t);
                 }
+            }
+            // the native eval artifact builds its outputs from workspace
+            // buffers; recycle them so repeated evals stay allocation-free
+            for t in outputs.drain(..) {
+                workspace::give_tensor(t);
             }
         }
         let loss = crate::util::mean(&losses);

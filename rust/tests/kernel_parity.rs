@@ -202,6 +202,156 @@ fn dense_gemm_matches_reference() {
     );
 }
 
+/// Deterministic wrap edge cases for the two-segment diag kernels: offset
+/// 0 (no wrap), offset `n_in - 1` (immediate wrap), `n_out > n_in`
+/// (multiple wraps per diagonal), and `n_out` not a multiple of the
+/// vector/register width.
+#[test]
+fn diag_two_segment_wrap_edge_cases() {
+    let mut rng = Rng::new(107);
+    // (n_in, n_out): squares, tall (n_out > n_in), wide, and odd widths
+    let shapes = [
+        (8usize, 8usize),
+        (8, 24),   // n_out = 3 * n_in: the diagonal wraps three times
+        (13, 29),  // coprime odd shapes, n_out % 8 != 0
+        (16, 5),   // wide: n_out < n_in
+        (7, 7),
+        (9, 31),
+    ];
+    for &(n_in, n_out) in &shapes {
+        // edge offsets plus a mid-range one
+        for off in [0usize, n_in - 1, n_in / 2] {
+            for &b in &[1usize, 3] {
+                let mut d = DiagMatrix::new(n_out, n_in, vec![off]);
+                for i in 0..n_out {
+                    d.values[0][i] = rng.normal_f32(0.0, 1.0);
+                }
+                let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+                let dy = Tensor::randn(&[b, n_out], 1.0, &mut rng);
+                let packed = DiagPacked::from_matrix(&d);
+                let dense_w = d.to_dense();
+
+                let fwd = packed.matmul_t(&x).unwrap();
+                let want_fwd = dense_w.matmul_t(&x).unwrap();
+                assert!(
+                    fwd.max_abs_diff(&want_fwd) < 1e-4,
+                    "spmm_t n_in={} n_out={} off={} b={}",
+                    n_in,
+                    n_out,
+                    off,
+                    b
+                );
+
+                let bwd = packed.matmul(&dy).unwrap();
+                let want_bwd = dy.matmul(&dense_w).unwrap();
+                assert!(
+                    bwd.max_abs_diff(&want_bwd) < 1e-4,
+                    "spmm n_in={} n_out={} off={} b={}",
+                    n_in,
+                    n_out,
+                    off,
+                    b
+                );
+
+                let mut dv = vec![0.0f32; n_out];
+                diag::grad_values(&x.data, &dy.data, &d.offsets, &mut dv, b, n_in, n_out);
+                let dw = dy.transpose2().matmul(&x).unwrap();
+                for i in 0..n_out {
+                    let c = dynadiag::sparsity::diagonal::diag_col(i, off, n_in);
+                    assert!(
+                        (dw.at2(i, c) - dv[i]).abs() < 1e-4,
+                        "grad_values n_in={} n_out={} off={} b={} i={}",
+                        n_in,
+                        n_out,
+                        off,
+                        b,
+                        i
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The 8-way register-blocked GEMM handles every output-width remainder
+/// (n_out mod 8 ∈ 0..=7) including widths below one block.
+#[test]
+fn dense_gemm_t_remainder_widths() {
+    let mut rng = Rng::new(108);
+    for n_out in 1..=17usize {
+        let (b, n_in) = (3usize, 19usize);
+        let w = Tensor::randn(&[n_out, n_in], 1.0, &mut rng);
+        let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+        let fast = dense_matmul_t(&w, &x).unwrap();
+        let slow = w.matmul_t(&x).unwrap();
+        assert!(
+            fast.max_abs_diff(&slow) < 1e-3,
+            "n_out={} diff {}",
+            n_out,
+            fast.max_abs_diff(&slow)
+        );
+    }
+}
+
+/// Stress the persistent pool: many mixed-shape dispatches in a row (the
+/// generation counter and claim cursor must never leak work across
+/// dispatches), including kernels that follow each other with different
+/// row geometries.
+#[test]
+fn pool_stress_mixed_shape_dispatches() {
+    use dynadiag::kernels::pool::parallel_rows;
+    let shapes = [(1usize, 64usize), (37, 3), (5, 129), (64, 1), (16, 16), (2, 300)];
+    for round in 0..60usize {
+        let (rows, cols) = shapes[round % shapes.len()];
+        let mut data = vec![0u32; rows * cols];
+        parallel_rows(&mut data, cols, 1 << 20, |first, chunk| {
+            for (r, row) in chunk.chunks_exact_mut(cols).enumerate() {
+                row.fill((first + r + round) as u32);
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, (i / cols + round) as u32, "round {} elem {}", round, i);
+        }
+    }
+}
+
+/// Concurrent dispatchers (parallel test threads, parallel experiment
+/// cells) share one pool: whoever finds it busy falls back to scoped
+/// threads. Either way: no lost tasks, no cross-talk between jobs.
+#[test]
+fn pool_concurrent_dispatchers_stay_isolated() {
+    use dynadiag::kernels::pool::parallel_rows;
+    let handles: Vec<_> = (0..4u32)
+        .map(|tid| {
+            std::thread::spawn(move || {
+                for round in 0..30u32 {
+                    let rows = 8 + (tid + round) as usize % 13;
+                    let cols = 17;
+                    let mut data = vec![0u32; rows * cols];
+                    parallel_rows(&mut data, cols, 1 << 20, |first, chunk| {
+                        for (r, row) in chunk.chunks_exact_mut(cols).enumerate() {
+                            row.fill(tid * 1000 + (first + r) as u32);
+                        }
+                    });
+                    for (i, &v) in data.iter().enumerate() {
+                        assert_eq!(
+                            v,
+                            tid * 1000 + (i / cols) as u32,
+                            "tid {} round {} elem {}",
+                            tid,
+                            round,
+                            i
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
 /// The two backward dense products agree with the reference algebra.
 #[test]
 fn dense_backward_products_match_reference() {
