@@ -1,0 +1,201 @@
+//! `cargo bench --bench serve` — the online-serving load sweep + gates.
+//!
+//! Sweeps request rate × micro-batch ceiling × sparsity over the serving
+//! engine (synthetic finalized models, closed-loop warmup before every
+//! measured cell), printing a table and writing
+//! `results/serve_bench.json`. `BENCH_serve.json` at the repo root is the
+//! committed schema/baseline snapshot.
+//!
+//! Three gates make this a CI check (`serve-smoke`), not just a report:
+//!
+//! 1. **Parity** — batched serving output must be *bitwise* identical to
+//!    sequential single-request inference for the same requests (the
+//!    micro-batcher must be invisible). Mismatch exits 1.
+//! 2. **Steady-state allocations** — the measured window of every cell
+//!    must perform zero fresh workspace allocations (the arena contract).
+//!    Violation exits 1.
+//! 3. **p99 ceiling** — every cell's p99 must stay under
+//!    `DYNADIAG_SERVE_P99_MS` (default 250 ms — generous, catches
+//!    order-of-magnitude regressions without flaking on shared runners).
+//!
+//! Set `DYNADIAG_BENCH_FAST=1` (CI does) for a trimmed sweep with the
+//! same JSON schema.
+
+use dynadiag::runtime::infer::{mlp_config, DiagModel};
+use dynadiag::runtime::native::workspace;
+use dynadiag::serve::{
+    drive_load, BatchPolicy, Completion, LoadSpec, ManualClock, ServeEngine,
+};
+use dynadiag::util::json::Json;
+use dynadiag::util::rng::Rng;
+
+/// Batched-vs-sequential parity over one (sparsity, ceiling) point:
+/// submit `n` requests, flush through the engine at the given ceiling,
+/// and compare every completion bitwise against a direct batch-of-1
+/// forward of the same sample. Returns the number of mismatched requests.
+fn parity_mismatches(sparsity: f64, max_batch: usize, n: usize, seed: u64) -> usize {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, sparsity, seed);
+    let sl = model.sample_len();
+    let classes = model.classes();
+    let mut rng = Rng::new(seed ^ 0xbeef);
+    let samples: Vec<Vec<f32>> =
+        (0..n).map(|_| (0..sl).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+
+    // huge deadline: batches form purely by ceiling, remainder via flush
+    let mut engine = ServeEngine::new(
+        model.clone(),
+        BatchPolicy::new(max_batch, u64::MAX / 2).unwrap(),
+    );
+    let clock = ManualClock::new();
+    let mut out: Vec<Completion> = Vec::new();
+    for s in &samples {
+        engine.submit(workspace::take_copy_f32(s), &clock).unwrap();
+        engine.poll(&clock, &mut out).unwrap();
+    }
+    while engine.queue_len() > 0 {
+        engine.flush(&clock, &mut out).unwrap();
+    }
+    assert_eq!(out.len(), n, "all requests must complete");
+
+    let mut mismatches = 0usize;
+    for c in out.drain(..) {
+        let want = model.forward_logits(&samples[c.id as usize], 1).unwrap();
+        if c.logits != want {
+            mismatches += 1;
+        }
+        workspace::give_f32(want);
+        workspace::give_f32(c.logits);
+    }
+    mismatches
+}
+
+fn main() {
+    let fast = std::env::var("DYNADIAG_BENCH_FAST")
+        .map(|v| !v.is_empty() && v != "0" && v.to_ascii_lowercase() != "false")
+        .unwrap_or(false);
+    let p99_bound_ms: f64 = std::env::var("DYNADIAG_SERVE_P99_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(250.0);
+
+    // -- gate 1: parity --------------------------------------------------
+    println!("== serving parity: batched == sequential (bitwise) ==");
+    let mut parity_failed = false;
+    for &s in &[0.5, 0.9] {
+        for &c in &[1usize, 3, 8] {
+            let bad = parity_mismatches(s, c, 32, 1000 + (s * 10.0) as u64 + c as u64);
+            println!("  sparsity {:.2} ceiling {}: {}", s, c, if bad == 0 { "ok".to_string() } else { format!("{} MISMATCHES", bad) });
+            if bad > 0 {
+                parity_failed = true;
+            }
+        }
+    }
+    if parity_failed {
+        eprintln!("FAIL: batched serving diverged from sequential inference");
+        std::process::exit(1);
+    }
+
+    // -- the sweep -------------------------------------------------------
+    let models: &[&str] = if fast { &["mlp_micro"] } else { &["mlp_micro", "mlp_tiny"] };
+    let sparsities: &[f64] = if fast { &[0.9] } else { &[0.5, 0.9] };
+    let ceilings: &[usize] = if fast { &[1, 8] } else { &[1, 4, 8, 16] };
+    let rates: &[f64] = if fast { &[0.0, 4000.0] } else { &[0.0, 1000.0, 4000.0, 16000.0] };
+    let requests = if fast { 256 } else { 2048 };
+    let max_wait_us: u64 = 200;
+
+    println!("\n== serving sweep: rate x batch ceiling x sparsity{} ==", if fast { " [fast]" } else { "" });
+    println!(
+        "{:<10} {:>8} {:>7} {:>9} {:>9} {:>9} {:>8} {:>8} {:>8} {:>6} {:>6}",
+        "model", "sparsity", "ceiling", "rate", "thru rps", "p50 ms", "p95 ms", "p99 ms", "mean ms", "batch", "fresh"
+    );
+    let mut cells: Vec<Json> = Vec::new();
+    let mut alloc_failed = false;
+    let mut p99_failed = false;
+    for model_name in models {
+        let cfg = mlp_config(model_name).unwrap();
+        for &s in sparsities {
+            for &ceil in ceilings {
+                let dm = DiagModel::synth(cfg, s, 7_000 + (s * 100.0) as u64);
+                let mut engine =
+                    ServeEngine::new(dm, BatchPolicy::new(ceil, max_wait_us).unwrap());
+                // warm the arena at the SAME admission cap as the measured
+                // windows — the closed loop bursts to the full cap of
+                // payload buffers before the first flush, so a smaller
+                // warmup cap would leave the measured window allocating
+                let cap = (4 * ceil).max(16);
+                let warm = LoadSpec {
+                    requests: 2 * cap,
+                    rate_rps: 0.0,
+                    max_outstanding: cap,
+                    seed: 5,
+                };
+                drive_load(&mut engine, &warm).unwrap();
+                for &rate in rates {
+                    engine.reset_metrics();
+                    let spec = LoadSpec {
+                        requests,
+                        rate_rps: rate,
+                        max_outstanding: cap,
+                        seed: 11,
+                    };
+                    let r = drive_load(&mut engine, &spec).unwrap();
+                    println!(
+                        "{:<10} {:>7.0}% {:>7} {:>9} {:>9.0} {:>9.3} {:>8.3} {:>8.3} {:>8.3} {:>6.2} {:>6}",
+                        model_name,
+                        s * 100.0,
+                        ceil,
+                        if rate > 0.0 { format!("{:.0}", rate) } else { "closed".to_string() },
+                        r.throughput_rps,
+                        r.p50_ms,
+                        r.p95_ms,
+                        r.p99_ms,
+                        r.mean_ms,
+                        r.mean_batch,
+                        r.fresh_allocs
+                    );
+                    if r.fresh_allocs > 0 {
+                        alloc_failed = true;
+                    }
+                    if r.p99_ms > p99_bound_ms {
+                        p99_failed = true;
+                    }
+                    let mut cell = std::collections::BTreeMap::new();
+                    cell.insert("model".to_string(), Json::Str(model_name.to_string()));
+                    cell.insert("sparsity".to_string(), Json::Num(s));
+                    cell.insert("max_batch".to_string(), Json::Num(ceil as f64));
+                    cell.insert("max_wait_us".to_string(), Json::Num(max_wait_us as f64));
+                    cell.insert("rate_rps".to_string(), Json::Num(rate));
+                    if let Json::Obj(rep) = r.to_json() {
+                        cell.extend(rep);
+                    }
+                    cells.push(Json::Obj(cell));
+                }
+            }
+        }
+    }
+
+    let out_dir = std::path::PathBuf::from("results");
+    std::fs::create_dir_all(&out_dir).expect("mkdir results");
+    let json = Json::obj(vec![
+        ("bench", Json::Str("serve".to_string())),
+        ("fast", Json::Bool(fast)),
+        ("threads", Json::Num(dynadiag::kernels::pool::num_threads() as f64)),
+        ("p99_bound_ms", Json::Num(p99_bound_ms)),
+        ("cells", Json::Arr(cells)),
+    ]);
+    let path = out_dir.join("serve_bench.json");
+    std::fs::write(&path, json.to_string()).expect("write serve_bench.json");
+    println!("\nwrote {}", path.display());
+
+    // -- gates 2 + 3 -----------------------------------------------------
+    if alloc_failed {
+        eprintln!("FAIL: a measured serving window performed fresh workspace allocations");
+        std::process::exit(1);
+    }
+    if p99_failed {
+        eprintln!("FAIL: a cell exceeded the p99 ceiling of {} ms", p99_bound_ms);
+        std::process::exit(1);
+    }
+    println!("PASS: parity bitwise, zero steady-state allocations, p99 under {} ms", p99_bound_ms);
+}

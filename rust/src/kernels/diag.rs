@@ -132,6 +132,63 @@ pub fn spmm(
     });
 }
 
+/// Epilogue applied per output element by the fused forward
+/// [`spmm_t_bias`] (serving path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Epilogue {
+    /// bias add only
+    None,
+    /// bias add then tanh-approximation GELU
+    Gelu,
+}
+
+/// Fused serving forward: `y = act(x @ Wᵀ + bias)` in a single pass over
+/// `y` — each output row is seeded with the bias vector, accumulates every
+/// selected diagonal, then applies the epilogue in-place. Compared to the
+/// train-path sequence (`spmm_t`, then a bias sweep, then an activation
+/// sweep) this touches `y` once instead of three times, which matters at
+/// serving batch sizes where the whole batch fits in L1/L2.
+///
+/// **Dispatch grain:** rows (requests) are independent, so per-row results
+/// are bit-identical no matter how requests are coalesced — a batch of 1
+/// always runs inline (no pool wakeup on the latency path), while a
+/// coalesced micro-batch fans out across the worker pool once its flop
+/// count clears the grain. `rust/tests/serve_parity.rs` pins the
+/// batched == sequential bitwise contract.
+pub fn spmm_t_bias(
+    x: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+    epilogue: Epilogue,
+) {
+    let k = offsets.len();
+    assert_eq!(x.len(), b * n_in, "diag spmm_t_bias: x length");
+    assert_eq!(values.len(), k * n_out, "diag spmm_t_bias: values length");
+    assert_eq!(bias.len(), n_out, "diag spmm_t_bias: bias length");
+    assert_eq!(y.len(), b * n_out, "diag spmm_t_bias: y length");
+    parallel_rows(y, n_out, 2 * (k + 1) * n_out, |first_row, y_chunk| {
+        for (r, yr) in y_chunk.chunks_exact_mut(n_out).enumerate() {
+            let xr = &x[(first_row + r) * n_in..(first_row + r + 1) * n_in];
+            yr.copy_from_slice(bias);
+            for (j, &off) in offsets.iter().enumerate() {
+                debug_assert!(off < n_in, "offset out of range");
+                let vals = &values[j * n_out..(j + 1) * n_out];
+                fma_wrap_gather(yr, vals, xr, off);
+            }
+            if epilogue == Epilogue::Gelu {
+                for v in yr.iter_mut() {
+                    *v = super::gelu(*v);
+                }
+            }
+        }
+    });
+}
+
 thread_local! {
     /// Reused partial-accumulator scratch for the batch-split path of
     /// [`grad_values`] (no per-call allocation after warmup).
@@ -290,6 +347,53 @@ mod tests {
                 let want = dw.at2(i, c);
                 let got = dv[j * n_out + i];
                 assert!((want - got).abs() < 1e-4, "j={} i={}: {} vs {}", j, i, want, got);
+            }
+        }
+    }
+
+    /// The fused bias+activation forward equals the unfused sequence
+    /// bit-for-bit, at batch 1 and batched (the serving parity contract).
+    #[test]
+    fn spmm_t_bias_matches_unfused_and_is_batch_invariant() {
+        let mut rng = Rng::new(55);
+        let (b, n_in, n_out, k) = (6usize, 12usize, 20usize, 4usize);
+        let d = random_diag(&mut rng, n_out, n_in, k);
+        let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n_out).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for epi in [super::Epilogue::None, super::Epilogue::Gelu] {
+            let mut fused = vec![0.0f32; b * n_out];
+            super::spmm_t_bias(
+                &x.data, &d.offsets, &pack(&d), &bias, &mut fused, b, n_in, n_out, epi,
+            );
+            // unfused reference: spmm_t, then bias, then activation
+            let mut want = vec![0.0f32; b * n_out];
+            super::spmm_t(&x.data, &d.offsets, &pack(&d), &mut want, b, n_in, n_out);
+            for row in want.chunks_exact_mut(n_out) {
+                for (v, &bb) in row.iter_mut().zip(&bias) {
+                    *v += bb;
+                }
+                if epi == super::Epilogue::Gelu {
+                    for v in row.iter_mut() {
+                        *v = crate::kernels::gelu(*v);
+                    }
+                }
+            }
+            assert_eq!(fused, want, "fused != unfused for {:?}", epi);
+            // batch-of-1 rows must be bitwise identical to the batched rows
+            for bi in 0..b {
+                let mut one = vec![0.0f32; n_out];
+                super::spmm_t_bias(
+                    &x.data[bi * n_in..(bi + 1) * n_in],
+                    &d.offsets,
+                    &pack(&d),
+                    &bias,
+                    &mut one,
+                    1,
+                    n_in,
+                    n_out,
+                    epi,
+                );
+                assert_eq!(one, &fused[bi * n_out..(bi + 1) * n_out], "row {}", bi);
             }
         }
     }

@@ -32,6 +32,29 @@ use anyhow::{bail, Result};
 use crate::sparsity::diagonal::DiagMatrix;
 use crate::tensor::Tensor;
 
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+const GELU_C: f32 = 0.044_715;
+
+/// Tanh-approximation GELU (the L2 zoo's activation). This is the single
+/// canonical definition: the native step functions and the fused serving
+/// kernel ([`diag::spmm_t_bias`]) both call it, so training-time forward,
+/// batched serving, and batch-of-1 serving compute bit-identical
+/// activations.
+#[inline]
+pub fn gelu(z: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (z + GELU_C * z * z * z);
+    0.5 * z * (1.0 + u.tanh())
+}
+
+/// Derivative of [`gelu`] — kept beside it so the activation and its
+/// gradient always share one set of constants.
+#[inline]
+pub fn gelu_prime(z: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (z + GELU_C * z * z * z);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * z * z)
+}
+
 /// A diagonal matrix packed for the native kernels: offsets + one flat
 /// offset-major value buffer (`values[j * n_out + i]`), the exact layout the
 /// L1 Pallas kernel consumes (`micro_diag_*` artifact inputs).

@@ -41,7 +41,9 @@
 //!
 //! Training runs route through [`train::Trainer`], which drives either
 //! backend through the named-buffer artifact contract documented in
-//! `docs/ARCHITECTURE.md`.
+//! `docs/ARCHITECTURE.md`. Online inference routes through [`serve`]: a
+//! dynamic micro-batcher coalescing single-sample requests onto the
+//! variable-batch diagonal forward in [`runtime::infer`].
 
 pub mod bcsr;
 pub mod cli;
@@ -53,6 +55,7 @@ pub mod graph;
 pub mod kernels;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod stats;
 pub mod tensor;

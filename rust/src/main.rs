@@ -2,6 +2,7 @@
 //!
 //! Commands:
 //!   train       one training run (any method/model/sparsity)
+//!   serve       online inference with dynamic micro-batching (native kernels)
 //!   experiment  regenerate a paper table/figure (table1, fig4, ... or all)
 //!   analyze     small-world / BCSR analysis of a trained topology
 //!   perfmodel   print A100 speedup projections (Fig 1 / Fig 4 axes)
@@ -9,19 +10,23 @@
 //!
 //! Examples:
 //!   dynadiag train --model vit_micro --method dynadiag --sparsity 0.9
+//!   dynadiag serve --model mlp_micro --sparsity 0.9 --rate 4000
 //!   dynadiag experiment table15 --steps 200
 //!   dynadiag perfmodel --sparsity 0.9
 
 use anyhow::{bail, Result};
 
 use dynadiag::cli::Args;
-use dynadiag::config::RunConfig;
+use dynadiag::config::{MethodKind, RunConfig};
 use dynadiag::experiments;
 use dynadiag::perfmodel::vit::{
     inference_speedup, train_speedup, ALL_METHODS, VIT_BASE,
 };
+use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::{BackendKind, Session};
+use dynadiag::serve::{drive_load, BatchPolicy, LoadSpec, ServeEngine};
 use dynadiag::train::Trainer;
+use dynadiag::util::json::Json;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -38,6 +43,7 @@ fn run(argv: &[String]) -> Result<()> {
     }
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "experiment" => experiments::run_from_cli(&args),
         "analyze" => cmd_analyze(&args),
         "perfmodel" => cmd_perfmodel(&args),
@@ -57,6 +63,12 @@ USAGE: dynadiag <command> [options]
 
 COMMANDS
   train        --model M --method D --sparsity S [--steps N] [--seed K] ...
+  serve        --model mlp_micro|mlp_tiny [--sparsity S] [--max-batch B]
+               [--max-wait-us U] [--rate RPS] [--requests N]
+               [--train-steps N] [--seed K] [--out serve.json]
+               online inference with dynamic micro-batching; --train-steps
+               trains + finalizes a DynaDiag model first (else a seeded
+               synthetic model at the requested sparsity)
   experiment   <table1|table2|table8|table12|...|fig1|fig4..fig9|all> [--steps N] [--seeds K]
   analyze      --model M [--sparsity S]      small-world & BCSR analysis
   perfmodel    [--sparsity S]                A100 speedup projections
@@ -91,6 +103,92 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     if let Some(out) = args.opt("out") {
         experiments::write_history_json(&result, std::path::Path::new(out))?;
+        eprintln!("wrote {}", out);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.opt("model").unwrap_or("mlp_micro");
+    let sparsity: f64 = args.opt("sparsity").unwrap_or("0.9").parse()?;
+    let max_batch = args.usize_opt("max-batch")?.unwrap_or(8);
+    let max_wait_us = args.usize_opt("max-wait-us")?.unwrap_or(200) as u64;
+    let requests = args.usize_opt("requests")?.unwrap_or(512);
+    let rate: f64 = args.opt("rate").unwrap_or("0").parse()?;
+    let train_steps = args.usize_opt("train-steps")?.unwrap_or(0);
+    let seed = args.usize_opt("seed")?.unwrap_or(3407) as u64;
+    let cfg = mlp_config(model)?;
+
+    let dm = if train_steps > 0 {
+        // train a DynaDiag model end-to-end on the native backend, then
+        // serve the finalized hard-TopK diagonal model
+        let mut rc = RunConfig::default();
+        rc.model = model.to_string();
+        rc.method = MethodKind::DynaDiag;
+        rc.backend = "native".to_string();
+        rc.sparsity = sparsity;
+        rc.steps = train_steps;
+        rc.warmup = (train_steps / 10).max(1);
+        rc.eval_batches = 1;
+        rc.seed = seed;
+        eprintln!(
+            "serve: training {} (dynadiag, S={:.2}) for {} steps before serving",
+            model, sparsity, train_steps
+        );
+        let mut trainer = Trainer::new(rc)?;
+        let result = trainer.train()?;
+        dynadiag::serve::model_from_train(&result)?
+    } else {
+        DiagModel::synth(cfg, sparsity, seed)
+    };
+
+    let policy = BatchPolicy::new(max_batch, max_wait_us)?;
+    let mut engine = ServeEngine::new(dm, policy);
+    eprintln!(
+        "serving {} (S={:.2}, diagonals/layer {:?}): max_batch {}, max_wait {}us, \
+         {} requests at {} req/s",
+        model,
+        sparsity,
+        engine.model().diag_counts(),
+        max_batch,
+        max_wait_us,
+        requests,
+        if rate > 0.0 { rate.to_string() } else { "closed-loop".to_string() }
+    );
+
+    // warmup window: fills the workspace arena (and the CPU frequency
+    // governor) so the measured run reflects the steady state. Must use
+    // the SAME admission cap as the measured run — the closed loop bursts
+    // to the full cap of payload buffers before the first flush.
+    let cap = (4 * max_batch).max(16);
+    let warm = LoadSpec {
+        requests: 2 * cap,
+        rate_rps: 0.0,
+        max_outstanding: cap,
+        seed: seed ^ 0xaaaa,
+    };
+    drive_load(&mut engine, &warm)?;
+    engine.reset_metrics();
+
+    let spec = LoadSpec {
+        requests,
+        rate_rps: rate,
+        max_outstanding: cap,
+        seed: seed ^ 0x10ad,
+    };
+    let report = drive_load(&mut engine, &spec)?;
+    println!("{}", report.summary());
+    if let Some(out) = args.opt("out") {
+        let j = Json::obj(vec![
+            ("model", Json::Str(model.to_string())),
+            ("sparsity", Json::Num(sparsity)),
+            ("max_batch", Json::Num(max_batch as f64)),
+            ("max_wait_us", Json::Num(max_wait_us as f64)),
+            ("rate_rps", Json::Num(rate)),
+            ("trained_steps", Json::Num(train_steps as f64)),
+            ("report", report.to_json()),
+        ]);
+        std::fs::write(out, j.to_string())?;
         eprintln!("wrote {}", out);
     }
     Ok(())

@@ -1,0 +1,285 @@
+//! Batched diagonal inference — the serving-side entry point over the
+//! native kernels.
+//!
+//! The artifact zoo ([`super::native`]) executes *fixed-batch* step
+//! functions (the L2 IO contract bakes the batch dimension into every
+//! spec). Online serving needs the opposite: one model, **variable** batch
+//! — whatever the micro-batcher coalesced in this flush window, from a
+//! single straggler request to a full ceiling batch. [`DiagModel`] holds a
+//! finalized diagonally-sparse MLP in kernel-ready layout (offset-major
+//! values, the exact layout `kernels::diag` consumes) and runs
+//! `forward_logits` at any batch size through the fused
+//! [`crate::kernels::diag::spmm_t_bias`] kernel and pooled workspace
+//! buffers — zero steady-state allocations per batch once the arena is
+//! warm.
+//!
+//! **Batch invariance:** every kernel on this path computes each batch row
+//! independently with a batch-independent reduction order (two-segment
+//! diagonal walks, fixed KC tiling in the dense embed/head), so a request's
+//! logits are bit-identical whether it ran alone or coalesced into a
+//! micro-batch. `rust/tests/serve_parity.rs` pins this contract; the
+//! serving engine ([`crate::serve`]) relies on it.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::native::{linear_fwd, mean_pool, workspace, MlpConfig, MODELS};
+use crate::kernels::diag::{self, Epilogue};
+use crate::sparsity::diagonal::{diag_count, DiagMatrix};
+use crate::util::rng::Rng;
+
+/// One diagonally-sparse layer in kernel-ready layout.
+#[derive(Clone, Debug)]
+pub struct DiagLayer {
+    pub n_out: usize,
+    pub n_in: usize,
+    /// selected diagonal offsets, each in `[0, n_in)`
+    pub offsets: Vec<usize>,
+    /// offset-major values: `values[j * n_out + i]` is diagonal
+    /// `offsets[j]` at row `i`
+    pub values: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl DiagLayer {
+    /// Pack a finalized [`DiagMatrix`] (plus its bias) for the kernels.
+    pub fn from_diag(d: &DiagMatrix, bias: Vec<f32>) -> Result<DiagLayer> {
+        if bias.len() != d.n_out {
+            bail!("DiagLayer: bias length {} != n_out {}", bias.len(), d.n_out);
+        }
+        let mut values = Vec::with_capacity(d.k() * d.n_out);
+        for v in &d.values {
+            values.extend_from_slice(v);
+        }
+        Ok(DiagLayer {
+            n_out: d.n_out,
+            n_in: d.n_in,
+            offsets: d.offsets.clone(),
+            values,
+            bias,
+        })
+    }
+
+    fn validate(&self, which: &str) -> Result<()> {
+        if self.values.len() != self.offsets.len() * self.n_out {
+            bail!("{}: values length {} != k*n_out", which, self.values.len());
+        }
+        if self.bias.len() != self.n_out {
+            bail!("{}: bias length {} != n_out {}", which, self.bias.len(), self.n_out);
+        }
+        if let Some(&off) = self.offsets.iter().find(|&&o| o >= self.n_in) {
+            bail!("{}: offset {} outside [0, {})", which, off, self.n_in);
+        }
+        Ok(())
+    }
+}
+
+/// A finalized diagonally-sparse MLP ready for variable-batch inference.
+///
+/// Structure mirrors the native `mlp_*` zoo: mean-pool stem → dense embed →
+/// `depth` residual blocks of (diag fc1 → GELU → diag fc2) → dense head.
+#[derive(Clone, Debug)]
+pub struct DiagModel {
+    pub cfg: MlpConfig,
+    pub sparsity: f64,
+    pub embed_w: Vec<f32>,
+    pub embed_b: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    /// `2 * depth` layers, fc1/fc2 interleaved per block (kvec order)
+    pub layers: Vec<DiagLayer>,
+}
+
+/// Look up a native MLP config by model name.
+pub fn mlp_config(name: &str) -> Result<&'static MlpConfig> {
+    MODELS
+        .iter()
+        .find(|c| c.name == name)
+        .ok_or_else(|| anyhow!("no native mlp config named '{}' (have mlp_micro, mlp_tiny)", name))
+}
+
+impl DiagModel {
+    /// Assemble and validate a model from its parts. `layers` must be the
+    /// `2 * depth` sparse layers in block order (fc1, fc2 per block).
+    pub fn from_parts(
+        cfg: &MlpConfig,
+        sparsity: f64,
+        embed_w: Vec<f32>,
+        embed_b: Vec<f32>,
+        head_w: Vec<f32>,
+        head_b: Vec<f32>,
+        layers: Vec<DiagLayer>,
+    ) -> Result<DiagModel> {
+        if layers.len() != 2 * cfg.depth {
+            bail!("DiagModel: {} layers, want 2*depth = {}", layers.len(), 2 * cfg.depth);
+        }
+        for (l, layer) in layers.iter().enumerate() {
+            let (want_out, want_in) = if l % 2 == 0 { (cfg.mlp, cfg.dim) } else { (cfg.dim, cfg.mlp) };
+            if layer.n_out != want_out || layer.n_in != want_in {
+                bail!(
+                    "DiagModel layer {}: shape [{}, {}], want [{}, {}]",
+                    l, layer.n_out, layer.n_in, want_out, want_in
+                );
+            }
+            layer.validate(&format!("DiagModel layer {}", l))?;
+        }
+        if embed_w.len() != cfg.dim * cfg.patch_dim || embed_b.len() != cfg.dim {
+            bail!("DiagModel: bad embed shapes");
+        }
+        if head_w.len() != cfg.classes * cfg.dim || head_b.len() != cfg.classes {
+            bail!("DiagModel: bad head shapes");
+        }
+        Ok(DiagModel {
+            cfg: *cfg,
+            sparsity,
+            embed_w,
+            embed_b,
+            head_w,
+            head_b,
+            layers,
+        })
+    }
+
+    /// Synthesize a random model at a target sparsity (benches, load tests;
+    /// deterministic per seed). Diagonal offsets are drawn uniformly and
+    /// sorted, values Xavier-scaled.
+    pub fn synth(cfg: &MlpConfig, sparsity: f64, seed: u64) -> DiagModel {
+        let mut rng = Rng::new(seed ^ 0x5e7e);
+        let xavier = |rng: &mut Rng, n_out: usize, n_in: usize, n: usize| -> Vec<f32> {
+            let std = (2.0 / (n_out + n_in) as f32).sqrt();
+            (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+        };
+        let mut layers = Vec::with_capacity(2 * cfg.depth);
+        for _ in 0..cfg.depth {
+            for (o, i) in [(cfg.mlp, cfg.dim), (cfg.dim, cfg.mlp)] {
+                let k = diag_count(i, sparsity);
+                let mut offsets = rng.choose_k(i, k);
+                offsets.sort_unstable();
+                layers.push(DiagLayer {
+                    n_out: o,
+                    n_in: i,
+                    offsets,
+                    values: xavier(&mut rng, o, i, k * o),
+                    bias: vec![0.0; o],
+                });
+            }
+        }
+        let embed_w = xavier(&mut rng, cfg.dim, cfg.patch_dim, cfg.dim * cfg.patch_dim);
+        let head_w = xavier(&mut rng, cfg.classes, cfg.dim, cfg.classes * cfg.dim);
+        DiagModel {
+            cfg: *cfg,
+            sparsity,
+            embed_w,
+            embed_b: vec![0.0; cfg.dim],
+            head_w,
+            head_b: vec![0.0; cfg.classes],
+            layers,
+        }
+    }
+
+    /// Flattened length of one request sample (`tokens * patch_dim`).
+    pub fn sample_len(&self) -> usize {
+        self.cfg.tokens * self.cfg.patch_dim
+    }
+
+    pub fn classes(&self) -> usize {
+        self.cfg.classes
+    }
+
+    /// Selected diagonals per sparse layer (serving telemetry).
+    pub fn diag_counts(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.offsets.len()).collect()
+    }
+
+    /// Forward `b` samples (`x.len() == b * sample_len()`) to logits
+    /// `[b, classes]`. The returned buffer comes from the workspace arena —
+    /// the caller recycles it with `workspace::give_f32` when done. All
+    /// intermediates are pooled, so a warm serving loop allocates nothing.
+    pub fn forward_logits(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        if b == 0 || x.len() != b * cfg.tokens * cfg.patch_dim {
+            bail!(
+                "forward_logits: x length {} != b {} * sample_len {}",
+                x.len(),
+                b,
+                cfg.tokens * cfg.patch_dim
+            );
+        }
+        let pooled = mean_pool(x, b, cfg.tokens, cfg.patch_dim);
+        let mut h = linear_fwd(&pooled, &self.embed_w, &self.embed_b, b, cfg.patch_dim, cfg.dim);
+        workspace::give_f32(pooled);
+        for pair in self.layers.chunks_exact(2) {
+            let (fc1, fc2) = (&pair[0], &pair[1]);
+            let mut a = workspace::take_uninit_f32(b * fc1.n_out);
+            diag::spmm_t_bias(
+                &h, &fc1.offsets, &fc1.values, &fc1.bias, &mut a,
+                b, fc1.n_in, fc1.n_out, Epilogue::Gelu,
+            );
+            let mut r = workspace::take_uninit_f32(b * fc2.n_out);
+            diag::spmm_t_bias(
+                &a, &fc2.offsets, &fc2.values, &fc2.bias, &mut r,
+                b, fc2.n_in, fc2.n_out, Epilogue::None,
+            );
+            workspace::give_f32(a);
+            for (o, &v) in h.iter_mut().zip(&r) {
+                *o += v;
+            }
+            workspace::give_f32(r);
+        }
+        let logits = linear_fwd(&h, &self.head_w, &self.head_b, b, cfg.dim, cfg.classes);
+        workspace::give_f32(h);
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_model_shapes_and_forward() {
+        let cfg = mlp_config("mlp_micro").unwrap();
+        let m = DiagModel::synth(cfg, 0.9, 7);
+        assert_eq!(m.layers.len(), 2 * cfg.depth);
+        assert_eq!(m.sample_len(), cfg.tokens * cfg.patch_dim);
+        let k = diag_count(cfg.dim, 0.9);
+        assert_eq!(m.layers[0].offsets.len(), k);
+        let b = 3;
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..b * m.sample_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let logits = m.forward_logits(&x, b).unwrap();
+        assert_eq!(logits.len(), b * cfg.classes);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        workspace::give_f32(logits);
+    }
+
+    #[test]
+    fn forward_is_batch_invariant_bitwise() {
+        let cfg = mlp_config("mlp_micro").unwrap();
+        let m = DiagModel::synth(cfg, 0.5, 11);
+        let b = 5;
+        let mut rng = Rng::new(12);
+        let x: Vec<f32> = (0..b * m.sample_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let batched = m.forward_logits(&x, b).unwrap();
+        for bi in 0..b {
+            let one = m
+                .forward_logits(&x[bi * m.sample_len()..(bi + 1) * m.sample_len()], 1)
+                .unwrap();
+            assert_eq!(
+                one,
+                &batched[bi * cfg.classes..(bi + 1) * cfg.classes],
+                "request {} logits differ between batch-of-1 and coalesced",
+                bi
+            );
+            workspace::give_f32(one);
+        }
+        workspace::give_f32(batched);
+    }
+
+    #[test]
+    fn bad_shapes_error() {
+        let cfg = mlp_config("mlp_micro").unwrap();
+        let m = DiagModel::synth(cfg, 0.9, 1);
+        assert!(m.forward_logits(&[0.0; 3], 1).is_err());
+        assert!(mlp_config("vit_micro").is_err());
+    }
+}

@@ -20,6 +20,7 @@
 //! [`Session::open`] picks automatically (XLA when a manifest + runtime are
 //! available, native otherwise); `--backend xla|native` pins the choice.
 
+pub mod infer;
 pub mod native;
 pub mod xla;
 
@@ -32,6 +33,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+pub use infer::{DiagLayer, DiagModel};
 pub use native::NativeBackend;
 pub use xla::{Executable, Runtime, XlaBackend};
 

@@ -41,7 +41,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::{Artifact, ArtifactMeta, Backend, Dtype, HostTensor, IoSpec, StepFn};
-use crate::kernels::{bcsr, dense, diag, pool};
+use crate::kernels::{bcsr, dense, diag, gelu, gelu_prime, pool};
 use crate::sparsity::topk::soft_topk;
 use crate::util::json::Json;
 
@@ -892,22 +892,17 @@ fn scalar_at(tensors: &[HostTensor], idx: usize) -> Result<f32> {
 // Math helpers (forward / backward / optimizer)
 // ---------------------------------------------------------------------------
 
-const SQRT_2_OVER_PI: f32 = 0.797_884_56;
-const GELU_C: f32 = 0.044_715;
-
-fn gelu(z: f32) -> f32 {
-    let u = SQRT_2_OVER_PI * (z + GELU_C * z * z * z);
-    0.5 * z * (1.0 + u.tanh())
-}
-
-fn gelu_prime(z: f32) -> f32 {
-    let u = SQRT_2_OVER_PI * (z + GELU_C * z * z * z);
-    let t = u.tanh();
-    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * z * z)
-}
-
 /// `y = x @ Wᵀ + bias` into a workspace buffer (caller recycles).
-fn linear_fwd(x: &[f32], w: &[f32], bias: &[f32], b: usize, n_in: usize, n_out: usize) -> Vec<f32> {
+/// `pub(crate)` so the batched serving forward ([`super::infer`]) reuses
+/// the exact train-path arithmetic.
+pub(crate) fn linear_fwd(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) -> Vec<f32> {
     let mut y = workspace::take_uninit_f32(b * n_out);
     dense::gemm_t(x, w, &mut y, b, n_in, n_out);
     for yr in y.chunks_exact_mut(n_out) {
@@ -1194,9 +1189,9 @@ fn recycle_cache(cache: ForwardCache) {
 }
 
 /// Mean-pool the tokens: `[B, T, P] -> [B, P]` (the model's input stem,
-/// shared by every parameterization including diag-infer). Returns a
-/// workspace buffer.
-fn mean_pool(x: &[f32], b: usize, t: usize, p: usize) -> Vec<f32> {
+/// shared by every parameterization including diag-infer and the batched
+/// serving forward in [`super::infer`]). Returns a workspace buffer.
+pub(crate) fn mean_pool(x: &[f32], b: usize, t: usize, p: usize) -> Vec<f32> {
     let mut pooled = workspace::take_f32(b * p);
     for bi in 0..b {
         let dst = &mut pooled[bi * p..(bi + 1) * p];

@@ -1,0 +1,174 @@
+//! The dynamic micro-batcher: a max-batch-size + max-wait-deadline
+//! coalescing queue.
+//!
+//! Policy (the classic serving trade-off): a batch is **due** the moment
+//! either (a) `max_batch` requests are queued — coalescing more would only
+//! add queueing delay without improving per-request kernel efficiency past
+//! the ceiling — or (b) the *oldest* queued request has waited
+//! `max_wait_us`, which bounds the latency cost a lone request pays
+//! waiting for company. `max_wait_us = 0` degenerates to batch-of-1
+//! serving; `max_batch = 1` does too, from the other side.
+//!
+//! Time is an explicit `now_us` argument (microseconds from an arbitrary
+//! epoch), never read from a wall clock here — the engine passes real
+//! elapsed time, tests pass a manual clock, and the policy logic stays
+//! deterministic either way.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+/// Coalescing policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued (ceiling).
+    pub max_batch: usize,
+    /// Flush once the oldest queued request has waited this long (µs).
+    pub max_wait_us: u64,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait_us: u64) -> Result<BatchPolicy> {
+        if max_batch == 0 {
+            bail!("BatchPolicy: max_batch must be >= 1");
+        }
+        Ok(BatchPolicy { max_batch, max_wait_us })
+    }
+}
+
+/// One queued request: identity, arrival stamp, and the sample payload
+/// (a pooled workspace buffer the engine recycles after execution).
+#[derive(Debug)]
+pub struct PendingRequest {
+    pub id: u64,
+    pub arrival_us: u64,
+    pub x: Vec<f32>,
+}
+
+/// FIFO coalescing queue under a [`BatchPolicy`].
+#[derive(Debug)]
+pub struct MicroBatcher {
+    policy: BatchPolicy,
+    queue: VecDeque<PendingRequest>,
+}
+
+impl MicroBatcher {
+    pub fn new(policy: BatchPolicy) -> MicroBatcher {
+        MicroBatcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn push(&mut self, r: PendingRequest) {
+        self.queue.push_back(r);
+    }
+
+    /// Is a batch due at `now_us`? True when the queue hit the ceiling or
+    /// the oldest request's deadline passed.
+    pub fn due(&self, now_us: u64) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(r) => now_us.saturating_sub(r.arrival_us) >= self.policy.max_wait_us,
+            None => false,
+        }
+    }
+
+    /// Absolute time (µs) at which the oldest request's deadline fires —
+    /// the latest moment the engine may sleep until. `None` when idle.
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.queue
+            .front()
+            .map(|r| r.arrival_us.saturating_add(self.policy.max_wait_us))
+    }
+
+    /// Pop up to `max_batch` requests (FIFO) into `out` (cleared first).
+    /// The caller owns a reusable `out` so the steady-state flush path
+    /// allocates nothing.
+    pub fn take_batch_into(&mut self, out: &mut Vec<PendingRequest>) {
+        out.clear();
+        let n = self.queue.len().min(self.policy.max_batch);
+        for _ in 0..n {
+            out.push(self.queue.pop_front().expect("n <= len"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_us: u64) -> PendingRequest {
+        PendingRequest { id, arrival_us, x: Vec::new() }
+    }
+
+    #[test]
+    fn policy_rejects_zero_batch() {
+        assert!(BatchPolicy::new(0, 100).is_err());
+        assert!(BatchPolicy::new(1, 0).is_ok());
+    }
+
+    #[test]
+    fn flushes_on_ceiling() {
+        let mut b = MicroBatcher::new(BatchPolicy::new(3, 1_000_000).unwrap());
+        b.push(req(0, 10));
+        b.push(req(1, 11));
+        assert!(!b.due(12), "below ceiling, deadline far away");
+        b.push(req(2, 12));
+        assert!(b.due(12), "ceiling reached");
+        let mut batch = Vec::new();
+        b.take_batch_into(&mut batch);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(b.is_empty());
+        assert!(!b.due(999_999), "empty queue is never due");
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = MicroBatcher::new(BatchPolicy::new(8, 200).unwrap());
+        b.push(req(0, 1_000));
+        assert!(!b.due(1_100), "only 100us waited");
+        assert_eq!(b.next_deadline_us(), Some(1_200));
+        assert!(b.due(1_200), "deadline hit");
+        // a second, younger request does not extend the oldest deadline
+        b.push(req(1, 1_150));
+        assert_eq!(b.next_deadline_us(), Some(1_200));
+        let mut batch = Vec::new();
+        b.take_batch_into(&mut batch);
+        assert_eq!(batch.len(), 2, "deadline flush takes everything queued");
+    }
+
+    #[test]
+    fn take_batch_respects_ceiling_fifo() {
+        let mut b = MicroBatcher::new(BatchPolicy::new(2, 0).unwrap());
+        for i in 0..5 {
+            b.push(req(i, i));
+        }
+        let mut batch = Vec::new();
+        b.take_batch_into(&mut batch);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        b.take_batch_into(&mut batch);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        b.take_batch_into(&mut batch);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4]);
+        assert!(b.is_empty() && b.next_deadline_us().is_none());
+    }
+
+    #[test]
+    fn max_wait_zero_is_immediate() {
+        let mut b = MicroBatcher::new(BatchPolicy::new(8, 0).unwrap());
+        b.push(req(0, 77));
+        assert!(b.due(77), "zero wait flushes immediately");
+    }
+}

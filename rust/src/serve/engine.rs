@@ -1,0 +1,482 @@
+//! The serving engine: request intake, micro-batch execution, latency
+//! accounting — plus the load driver behind `dynadiag serve` and
+//! `cargo bench --bench serve`.
+//!
+//! Single-threaded by design: the native kernels already fan a batch out
+//! across the process-wide worker pool, so a second thread layer would
+//! only fight it for cores. The engine is a poll loop — `submit` enqueues,
+//! `poll` flushes one due micro-batch — and time is injected through the
+//! [`Clock`] trait: [`RealClock`] for serving/benches, [`ManualClock`] for
+//! deterministic tests (execution appears instantaneous, so latency equals
+//! queue wait exactly).
+//!
+//! Memory: request payloads, the coalesced batch buffer, and per-request
+//! logits all cycle through the workspace arena
+//! ([`crate::runtime::native::workspace`]); the batch scratch list and the
+//! caller's completion vector are reused. A warm engine therefore performs
+//! zero fresh buffer allocations per request — `rust/tests/serve_parity.rs`
+//! asserts this via the arena counters.
+
+use std::cell::Cell;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{BatchPolicy, MicroBatcher, PendingRequest};
+use super::stats::{LatencyHistogram, ServeReport};
+use crate::runtime::infer::DiagModel;
+use crate::runtime::native::workspace;
+use crate::util::rng::Rng;
+
+/// Time source (µs since an arbitrary epoch).
+pub trait Clock {
+    fn now_us(&self) -> u64;
+}
+
+/// Wall-clock time since construction.
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn start() -> RealClock {
+        RealClock { start: Instant::now() }
+    }
+}
+
+impl Clock for RealClock {
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+/// Hand-advanced time for deterministic tests.
+#[derive(Default)]
+pub struct ManualClock {
+    t: Cell<u64>,
+}
+
+impl ManualClock {
+    pub fn new() -> ManualClock {
+        ManualClock { t: Cell::new(0) }
+    }
+
+    pub fn set(&self, us: u64) {
+        self.t.set(us);
+    }
+
+    pub fn advance(&self, us: u64) {
+        self.t.set(self.t.get() + us);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_us(&self) -> u64 {
+        self.t.get()
+    }
+}
+
+/// One finished request: identity, timing, and the logits (a pooled
+/// workspace buffer — recycle with `workspace::give_f32` when done).
+#[derive(Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub arrival_us: u64,
+    pub done_us: u64,
+    pub logits: Vec<f32>,
+}
+
+impl Completion {
+    pub fn latency_us(&self) -> u64 {
+        self.done_us.saturating_sub(self.arrival_us)
+    }
+}
+
+/// Online inference engine: one model + one micro-batcher + metrics.
+pub struct ServeEngine {
+    model: DiagModel,
+    batcher: MicroBatcher,
+    hist: LatencyHistogram,
+    /// batch-size occurrence counts, index = coalesced size (0 unused)
+    batch_sizes: Vec<u64>,
+    next_id: u64,
+    completed: u64,
+    batches: u64,
+    /// reusable flush scratch (no allocation per batch once warm)
+    scratch: Vec<PendingRequest>,
+}
+
+impl ServeEngine {
+    pub fn new(model: DiagModel, policy: BatchPolicy) -> ServeEngine {
+        let max_batch = policy.max_batch;
+        ServeEngine {
+            model,
+            batcher: MicroBatcher::new(policy),
+            hist: LatencyHistogram::new(),
+            batch_sizes: vec![0; max_batch + 1],
+            next_id: 0,
+            completed: 0,
+            batches: 0,
+            scratch: Vec::with_capacity(max_batch),
+        }
+    }
+
+    pub fn model(&self) -> &DiagModel {
+        &self.model
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.batcher.len()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Clear metrics (after a warmup window) without touching the queue.
+    pub fn reset_metrics(&mut self) {
+        self.hist.reset();
+        self.batch_sizes.fill(0);
+        self.completed = 0;
+        self.batches = 0;
+    }
+
+    /// Enqueue one single-sample request arriving now. `x` must be
+    /// `sample_len()` long and should come from the workspace arena (the
+    /// engine recycles it after execution). Returns the request id.
+    pub fn submit(&mut self, x: Vec<f32>, clock: &dyn Clock) -> Result<u64> {
+        let now = clock.now_us();
+        self.submit_at(x, now)
+    }
+
+    /// Enqueue with an explicit arrival stamp — the load driver passes the
+    /// *scheduled* arrival time, so latency under admission backpressure
+    /// includes the pre-admission wait (no coordinated omission: a request
+    /// that spent 5 ms blocked on the outstanding cap records those 5 ms).
+    pub fn submit_at(&mut self, x: Vec<f32>, arrival_us: u64) -> Result<u64> {
+        if x.len() != self.model.sample_len() {
+            anyhow::bail!(
+                "submit: sample length {} != model sample_len {}",
+                x.len(),
+                self.model.sample_len()
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.batcher.push(PendingRequest { id, arrival_us, x });
+        Ok(id)
+    }
+
+    /// Is a micro-batch due at `now_us`?
+    pub fn due(&self, now_us: u64) -> bool {
+        self.batcher.due(now_us)
+    }
+
+    /// Absolute µs of the oldest request's flush deadline (idle → None).
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        self.batcher.next_deadline_us()
+    }
+
+    /// Flush one micro-batch if one is due; completions are appended to
+    /// `out`. Returns the number of requests completed (0 when not due).
+    pub fn poll(&mut self, clock: &dyn Clock, out: &mut Vec<Completion>) -> Result<usize> {
+        if !self.batcher.due(clock.now_us()) {
+            return Ok(0);
+        }
+        self.execute_batch(clock, out)
+    }
+
+    /// Flush one micro-batch regardless of the policy (draining at the end
+    /// of a run). Returns the number of requests completed.
+    pub fn flush(&mut self, clock: &dyn Clock, out: &mut Vec<Completion>) -> Result<usize> {
+        self.execute_batch(clock, out)
+    }
+
+    fn execute_batch(&mut self, clock: &dyn Clock, out: &mut Vec<Completion>) -> Result<usize> {
+        self.batcher.take_batch_into(&mut self.scratch);
+        let b = self.scratch.len();
+        if b == 0 {
+            return Ok(0);
+        }
+        let sl = self.model.sample_len();
+        let classes = self.model.classes();
+        let mut xb = workspace::take_uninit_f32(b * sl);
+        for (i, r) in self.scratch.iter().enumerate() {
+            xb[i * sl..(i + 1) * sl].copy_from_slice(&r.x);
+        }
+        let logits = self.model.forward_logits(&xb, b)?;
+        workspace::give_f32(xb);
+        let done_us = clock.now_us();
+        for (i, r) in self.scratch.drain(..).enumerate() {
+            let lg = workspace::take_copy_f32(&logits[i * classes..(i + 1) * classes]);
+            workspace::give_f32(r.x);
+            self.hist.record_us(done_us.saturating_sub(r.arrival_us));
+            out.push(Completion {
+                id: r.id,
+                arrival_us: r.arrival_us,
+                done_us,
+                logits: lg,
+            });
+        }
+        workspace::give_f32(logits);
+        self.completed += b as u64;
+        self.batches += 1;
+        self.batch_sizes[b] += 1;
+        Ok(b)
+    }
+
+    /// Latency histogram over everything completed since the last
+    /// [`ServeEngine::reset_metrics`].
+    pub fn histogram(&self) -> &LatencyHistogram {
+        &self.hist
+    }
+
+    /// How often each coalesced batch size occurred (index = size; index 0
+    /// unused). Serving telemetry for the bench/report.
+    pub fn batch_size_counts(&self) -> &[u64] {
+        &self.batch_sizes
+    }
+
+    /// Build a report for a measured window of `duration_s` seconds.
+    /// Workspace counters are passed in by the driver (it owns the
+    /// reset/delta bracketing).
+    pub fn report(&self, duration_s: f64, fresh_allocs: usize, reused_buffers: usize) -> ServeReport {
+        let requests = self.completed;
+        let batches = self.batches;
+        ServeReport {
+            requests,
+            batches,
+            duration_s,
+            throughput_rps: if duration_s > 0.0 { requests as f64 / duration_s } else { 0.0 },
+            mean_batch: if batches > 0 { requests as f64 / batches as f64 } else { 0.0 },
+            p50_ms: self.hist.quantile_us(0.50) as f64 / 1e3,
+            p95_ms: self.hist.quantile_us(0.95) as f64 / 1e3,
+            p99_ms: self.hist.quantile_us(0.99) as f64 / 1e3,
+            mean_ms: self.hist.mean_us() / 1e3,
+            max_ms: self.hist.max_us() as f64 / 1e3,
+            fresh_allocs,
+            reused_buffers,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load driver
+// ---------------------------------------------------------------------------
+
+/// Load shape for [`drive_load`].
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    /// Total requests to complete.
+    pub requests: usize,
+    /// Target arrival rate (requests/second) on a Poisson schedule;
+    /// `0.0` = closed loop (a new request is admitted the moment a slot
+    /// frees, up to `max_outstanding`).
+    pub rate_rps: f64,
+    /// Admission cap: arrivals stall (backpressure) while this many
+    /// requests are in flight.
+    pub max_outstanding: usize,
+    /// Seed for arrival gaps and request payloads.
+    pub seed: u64,
+}
+
+/// Busy-wait/sleep hybrid until the real clock reaches `target_us`
+/// (sleeps for the bulk of waits over ~2ms, spins the final stretch —
+/// micro-batch deadlines are µs-scale, far below sleep granularity).
+fn wait_until(clock: &RealClock, target_us: u64) {
+    loop {
+        let now = clock.now_us();
+        if now >= target_us {
+            return;
+        }
+        let delta = target_us - now;
+        if delta > 2_000 {
+            std::thread::sleep(std::time::Duration::from_micros(delta - 1_000));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Drive a synthetic request stream through the engine against the real
+/// clock and report throughput + latency quantiles over the run.
+///
+/// Arrivals follow an absolute Poisson schedule at `rate_rps` (so the
+/// generator tries to catch up after a slow batch rather than silently
+/// degrading the offered load), admission-capped at `max_outstanding`;
+/// `rate_rps == 0` degenerates to a closed loop. Request payloads are
+/// seeded normals drawn into pooled buffers; completions are recycled
+/// back into the arena, so the measured window is allocation-free once
+/// warm.
+pub fn drive_load(engine: &mut ServeEngine, spec: &LoadSpec) -> Result<ServeReport> {
+    let clock = RealClock::start();
+    let mut rng = Rng::new(spec.seed);
+    let sl = engine.model().sample_len();
+    let cap = spec.max_outstanding.max(1);
+    let (fresh0, reused0) = workspace::stats();
+
+    let mut submitted = 0usize;
+    let mut done = 0usize;
+    let mut outstanding = 0usize;
+    let mut next_arrival_us: u64 = 0;
+    let mut completions: Vec<Completion> = Vec::with_capacity(cap);
+
+    while done < spec.requests {
+        // admit every arrival whose scheduled time has passed
+        let now = clock.now_us();
+        while submitted < spec.requests
+            && outstanding < cap
+            && (spec.rate_rps <= 0.0 || next_arrival_us <= now)
+        {
+            let mut x = workspace::take_uninit_f32(sl);
+            for v in x.iter_mut() {
+                *v = rng.normal_f32(0.0, 1.0);
+            }
+            // latency counts from the *scheduled* arrival (<= now under
+            // backpressure), so admission stalls are charged to the
+            // request rather than silently dropped (coordinated omission)
+            let arrival = if spec.rate_rps > 0.0 { next_arrival_us } else { now };
+            engine.submit_at(x, arrival)?;
+            submitted += 1;
+            outstanding += 1;
+            if spec.rate_rps > 0.0 {
+                // exponential inter-arrival gap on the absolute schedule
+                let u = rng.f64().max(1e-12);
+                let gap_us = (-u.ln() / spec.rate_rps * 1e6).ceil() as u64;
+                next_arrival_us += gap_us.max(1);
+            }
+        }
+
+        let now = clock.now_us();
+        if engine.due(now) {
+            engine.poll(&clock, &mut completions)?;
+        } else if submitted >= spec.requests && outstanding > 0 {
+            // no more arrivals will ever top the batch up: drain now
+            // instead of sleeping out the tail deadline
+            engine.flush(&clock, &mut completions)?;
+        } else {
+            // idle until the next event: flush deadline or next arrival
+            let mut target = u64::MAX;
+            if let Some(d) = engine.next_deadline_us() {
+                target = target.min(d);
+            }
+            if spec.rate_rps > 0.0 && submitted < spec.requests && outstanding < cap {
+                target = target.min(next_arrival_us);
+            }
+            if target != u64::MAX {
+                wait_until(&clock, target);
+            }
+        }
+
+        for c in completions.drain(..) {
+            workspace::give_f32(c.logits);
+            outstanding -= 1;
+            done += 1;
+        }
+    }
+
+    let duration_s = clock.now_us() as f64 / 1e6;
+    let (fresh1, reused1) = workspace::stats();
+    Ok(engine.report(
+        duration_s,
+        fresh1.saturating_sub(fresh0),
+        reused1.saturating_sub(reused0),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::infer::{mlp_config, DiagModel};
+
+    fn engine(max_batch: usize, max_wait_us: u64) -> ServeEngine {
+        let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 3);
+        ServeEngine::new(model, BatchPolicy::new(max_batch, max_wait_us).unwrap())
+    }
+
+    fn sample(engine: &ServeEngine, rng: &mut Rng) -> Vec<f32> {
+        (0..engine.model().sample_len())
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn coalesces_to_ceiling_and_drains_on_deadline() {
+        let mut e = engine(4, 500);
+        let clock = ManualClock::new();
+        let mut rng = Rng::new(9);
+        let mut out = Vec::new();
+        // 5 requests at t=0: first poll takes the full ceiling of 4
+        for _ in 0..5 {
+            e.submit(sample(&e, &mut rng), &clock).unwrap();
+        }
+        assert!(e.due(0));
+        assert_eq!(e.poll(&clock, &mut out).unwrap(), 4);
+        // the straggler is not due until its 500us deadline
+        assert_eq!(e.poll(&clock, &mut out).unwrap(), 0);
+        clock.set(500);
+        assert_eq!(e.poll(&clock, &mut out).unwrap(), 1);
+        assert_eq!(out.len(), 5);
+        // ids preserved FIFO, latencies: first four 0us, straggler 500us
+        assert_eq!(out.iter().map(|c| c.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(out[4].latency_us(), 500);
+        assert_eq!(e.completed(), 5);
+        // one full ceiling batch + one straggler batch of 1
+        assert_eq!(e.batch_size_counts()[4], 1);
+        assert_eq!(e.batch_size_counts()[1], 1);
+        for c in out.drain(..) {
+            workspace::give_f32(c.logits);
+        }
+    }
+
+    #[test]
+    fn submit_rejects_bad_sample_length() {
+        let mut e = engine(2, 100);
+        let clock = ManualClock::new();
+        assert!(e.submit(vec![0.0; 3], &clock).is_err());
+    }
+
+    #[test]
+    fn report_aggregates_metrics() {
+        let mut e = engine(2, 1_000);
+        let clock = ManualClock::new();
+        let mut rng = Rng::new(10);
+        let mut out = Vec::new();
+        for i in 0..6 {
+            clock.set(i * 100);
+            e.submit(sample(&e, &mut rng), &clock).unwrap();
+            e.poll(&clock, &mut out).unwrap();
+        }
+        clock.set(10_000);
+        e.flush(&clock, &mut out).unwrap();
+        assert_eq!(out.len(), 6);
+        let r = e.report(1.0, 0, 0);
+        assert_eq!(r.requests, 6);
+        assert!(r.mean_batch >= 1.0 && r.mean_batch <= 2.0);
+        assert!(r.p99_ms >= r.p50_ms);
+        assert!((r.throughput_rps - 6.0).abs() < 1e-9);
+        for c in out.drain(..) {
+            workspace::give_f32(c.logits);
+        }
+    }
+
+    #[test]
+    fn drive_load_closed_loop_completes() {
+        let mut e = engine(4, 200);
+        let spec = LoadSpec { requests: 24, rate_rps: 0.0, max_outstanding: 8, seed: 42 };
+        let r = drive_load(&mut e, &spec).unwrap();
+        assert_eq!(r.requests, 24);
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn drive_load_open_loop_completes() {
+        let mut e = engine(4, 200);
+        // high rate so the test finishes quickly regardless of machine
+        let spec = LoadSpec { requests: 16, rate_rps: 50_000.0, max_outstanding: 16, seed: 43 };
+        let r = drive_load(&mut e, &spec).unwrap();
+        assert_eq!(r.requests, 16);
+        assert!(r.batches >= 4, "ceiling 4 over 16 requests needs >= 4 batches");
+    }
+}

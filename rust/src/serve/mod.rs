@@ -1,0 +1,71 @@
+//! Online inference serving: dynamic micro-batching over the native
+//! diagonal kernels.
+//!
+//! The paper's headline systems claim is online-inference speedup from 90%
+//! diagonally sparse layers; this module is the serving path that cashes
+//! it in. Single-sample requests arrive one at a time, a
+//! [`batcher::MicroBatcher`] coalesces them under a **max-batch-size +
+//! max-wait-deadline** policy, and [`engine::ServeEngine`] executes each
+//! micro-batch through [`crate::runtime::infer::DiagModel`] — the fused
+//! diag kernels with pooled workspace buffers, so a warm engine performs
+//! **zero fresh buffer allocations per request**. Per-request latency
+//! (arrival → batch completion) lands in a log-bucketed histogram
+//! ([`stats::LatencyHistogram`], p50/p95/p99), and the closed/open-loop
+//! load driver ([`engine::drive_load`]) turns a request rate into a
+//! [`stats::ServeReport`].
+//!
+//! Correctness contract: coalescing must be **invisible** — a request's
+//! logits are bit-identical whether it executed alone or inside a
+//! micro-batch, because every kernel on the path computes batch rows
+//! independently with batch-independent reduction order.
+//! `rust/tests/serve_parity.rs` pins batched == sequential bitwise.
+//!
+//! Entry points: the `dynadiag serve` CLI subcommand (synth model or
+//! train-then-serve), and `cargo bench --bench serve` (the rate × batch
+//! ceiling × sparsity sweep behind `results/serve_bench.json` /
+//! `BENCH_serve.json`).
+
+pub mod batcher;
+pub mod engine;
+pub mod stats;
+
+use anyhow::{bail, Result};
+
+pub use batcher::{BatchPolicy, MicroBatcher};
+pub use engine::{drive_load, Clock, Completion, LoadSpec, ManualClock, RealClock, ServeEngine};
+pub use stats::{LatencyHistogram, ServeReport};
+
+use crate::runtime::infer::{mlp_config, DiagLayer, DiagModel};
+use crate::train::TrainResult;
+
+/// Build a servable [`DiagModel`] from a finished DynaDiag training run:
+/// the finalized hard-TopK diagonal matrices become the sparse layers, the
+/// dense embed/head parameters and sparse-layer biases come from the
+/// param store. `finalized` order is the sparse-layer (kvec) order, which
+/// is exactly the fc1/fc2-interleaved block order the model wants.
+pub fn model_from_train(result: &TrainResult) -> Result<DiagModel> {
+    let cfg = mlp_config(&result.cfg.model)?;
+    if result.finalized.len() != 2 * cfg.depth {
+        bail!(
+            "serve: run has {} finalized diagonal layers, want {} — serving needs a \
+             DynaDiag training run (--method dynadiag)",
+            result.finalized.len(),
+            2 * cfg.depth
+        );
+    }
+    let store = &result.store;
+    let mut layers = Vec::with_capacity(result.finalized.len());
+    for (name, d) in &result.finalized {
+        let bias = store.get(&format!("params/{}/b", name))?.as_f32()?.to_vec();
+        layers.push(DiagLayer::from_diag(d, bias)?);
+    }
+    DiagModel::from_parts(
+        cfg,
+        result.cfg.sparsity,
+        store.get("params/embed/w")?.as_f32()?.to_vec(),
+        store.get("params/embed/b")?.as_f32()?.to_vec(),
+        store.get("params/head/w")?.as_f32()?.to_vec(),
+        store.get("params/head/b")?.as_f32()?.to_vec(),
+        layers,
+    )
+}

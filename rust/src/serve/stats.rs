@@ -1,0 +1,245 @@
+//! Serving telemetry: log-bucketed latency histogram + the report the
+//! load driver and `serve` CLI emit.
+//!
+//! The histogram uses 4 sub-buckets per power of two of microseconds
+//! (≈19% relative resolution), fixed storage, O(1) record — good enough to
+//! read p50/p95/p99 off a serving run without keeping per-request samples.
+//! Quantiles return the **upper edge** of the hit bucket (conservative:
+//! reported p99 never understates the true p99 by more than one bucket).
+
+use crate::util::json::Json;
+
+/// Sub-buckets per power of two.
+const SUB: usize = 4;
+/// Powers of two covered: [2^0, 2^40) µs ≈ up to 12.7 days.
+const EXPS: usize = 40;
+
+/// Fixed-size log-bucketed histogram over microsecond latencies.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: vec![0; SUB * EXPS],
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.buckets.fill(0);
+        self.count = 0;
+        self.sum_us = 0;
+        self.min_us = u64::MAX;
+        self.max_us = 0;
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        let us = us.max(1);
+        let e = (63 - us.leading_zeros()) as usize; // floor(log2(us))
+        if e >= EXPS {
+            return SUB * EXPS - 1;
+        }
+        let base = 1u64 << e;
+        // sub-bucket within [2^e, 2^(e+1)): 4 equal slices (no overflow:
+        // us - base < 2^e <= 2^39)
+        let sub = (((us - base) * SUB as u64) >> e) as usize;
+        e * SUB + sub
+    }
+
+    /// Upper edge (µs) of a bucket — what quantiles report.
+    fn bucket_upper_us(idx: usize) -> u64 {
+        let e = idx / SUB;
+        let sub = idx % SUB;
+        let base = 1u64 << e;
+        base + ((sub as u64 + 1) * base) / SUB as u64
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn min_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_us
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// q-quantile in µs (upper bucket edge, clamped to the observed max).
+    /// `q` in [0, 1]; 0 observations → 0.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // rank of the target observation, 1-based ceil
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_upper_us(i).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Summary of one serving run, JSON-serializable for
+/// `results/serve_bench.json` / `BENCH_serve.json`.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub duration_s: f64,
+    pub throughput_rps: f64,
+    /// mean coalesced batch size (requests / batches)
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    /// workspace arena counters over the measured window
+    pub fresh_allocs: usize,
+    pub reused_buffers: usize,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+            ("fresh_allocs", Json::Num(self.fresh_allocs as f64)),
+            ("reused_buffers", Json::Num(self.reused_buffers as f64)),
+        ])
+    }
+
+    /// One human-readable summary line (stderr-friendly).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} reqs in {:.3}s — {:.0} req/s, mean batch {:.2} ({} batches), \
+             latency ms p50 {:.3} p95 {:.3} p99 {:.3} mean {:.3} max {:.3}, \
+             workspace fresh {} reused {}",
+            self.requests,
+            self.duration_s,
+            self.throughput_rps,
+            self.mean_batch,
+            self.batches,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_ms,
+            self.max_ms,
+            self.fresh_allocs,
+            self.reused_buffers
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.min_us(), 0);
+    }
+
+    #[test]
+    fn quantiles_bracket_observations() {
+        let mut h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        // bucket resolution is ~25% of a power of two: generous brackets
+        assert!((400..=700).contains(&p50), "p50 {}", p50);
+        assert!((900..=1280).contains(&p99), "p99 {}", p99);
+        assert!(p50 <= p99);
+        assert_eq!(h.max_us(), 1000);
+        assert_eq!(h.min_us(), 1);
+        assert!((h.mean_us() - 500.5).abs() < 1e-9);
+        // quantiles never exceed the observed max
+        assert!(h.quantile_us(1.0) <= 1000);
+    }
+
+    #[test]
+    fn single_observation_everywhere() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(777);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h.quantile_us(q);
+            assert!((700..=800).contains(&v), "q={} -> {}", q, v);
+        }
+    }
+
+    #[test]
+    fn huge_and_zero_latencies_clamp() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(0); // clamps to the 1us bucket
+        h.record_us(u64::MAX); // clamps to the top bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_us(0.25) <= 2);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut h = LatencyHistogram::new();
+        h.record_us(10);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0);
+    }
+}

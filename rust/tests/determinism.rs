@@ -1,0 +1,82 @@
+//! Seed determinism: the same `--seed` must reproduce a training run
+//! bit-for-bit — losses *and* the logits the finalized model serves —
+//! on both the `native` and `auto` backends (ISSUE 3 satellite).
+//!
+//! This is also the sharpest probe of the workspace arena's `take_uninit`
+//! contract: run 2 executes over buffers recycled (with stale contents)
+//! from run 1, so any consumer that fails to fully overwrite an
+//! "uninitialized" take shows up here as a loss mismatch.
+
+use dynadiag::config::{MethodKind, RunConfig};
+use dynadiag::runtime::native::workspace;
+use dynadiag::serve::{model_from_train, BatchPolicy, Completion, ManualClock, ServeEngine};
+use dynadiag::train::Trainer;
+use dynadiag::util::rng::Rng;
+
+fn run_cfg(backend: &str) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "mlp_micro".into();
+    cfg.method = MethodKind::DynaDiag;
+    cfg.backend = backend.into();
+    cfg.sparsity = 0.9;
+    cfg.steps = 8;
+    cfg.warmup = 2;
+    cfg.eval_batches = 1;
+    cfg.seed = 3407;
+    cfg
+}
+
+/// Train, then serve a fixed request set through the finalized model.
+/// Returns (per-step losses, final eval loss, served logits).
+fn train_and_serve(backend: &str) -> (Vec<f64>, f64, Vec<Vec<f32>>) {
+    let mut trainer = Trainer::new(run_cfg(backend)).unwrap();
+    let result = trainer.train().unwrap();
+    let losses: Vec<f64> = result.history.iter().map(|m| m.loss).collect();
+
+    let model = model_from_train(&result).unwrap();
+    let sl = model.sample_len();
+    let mut engine =
+        ServeEngine::new(model, BatchPolicy::new(3, u64::MAX / 2).unwrap());
+    let clock = ManualClock::new();
+    let mut rng = Rng::new(777); // request stream seeded independently of training
+    let mut out: Vec<Completion> = Vec::new();
+    for _ in 0..8 {
+        let mut x = workspace::take_uninit_f32(sl);
+        for v in x.iter_mut() {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        engine.submit(x, &clock).unwrap();
+        engine.poll(&clock, &mut out).unwrap();
+    }
+    while engine.queue_len() > 0 {
+        engine.flush(&clock, &mut out).unwrap();
+    }
+    let mut logits: Vec<Vec<f32>> = vec![Vec::new(); 8];
+    for c in out {
+        logits[c.id as usize] = c.logits;
+    }
+    (losses, result.final_eval.loss, logits)
+}
+
+#[test]
+fn same_seed_reproduces_losses_and_served_logits() {
+    let (l1, e1, s1) = train_and_serve("native");
+    let (l2, e2, s2) = train_and_serve("native");
+    assert_eq!(l1.len(), 8);
+    assert_eq!(l1, l2, "per-step train losses must be bit-identical");
+    assert_eq!(e1, e2, "final eval loss must be bit-identical");
+    assert_eq!(s1, s2, "served logits must be bit-identical");
+
+    // `auto` resolves to native in this environment (no artifacts/, stub
+    // PJRT), so it must reproduce the exact same numbers too
+    let (l3, e3, s3) = train_and_serve("auto");
+    assert_eq!(l1, l3, "auto backend must match native losses");
+    assert_eq!(e1, e3, "auto backend must match native eval loss");
+    assert_eq!(s1, s3, "auto backend must match native served logits");
+
+    for batch in [s1, s2, s3] {
+        for l in batch {
+            workspace::give_f32(l);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+#!/usr/bin/env python3
+"""Generate dynadiag_controller.json — golden values for the
+DynaDiagController schedule surface (temperature, kvec, l1_coeff,
+final_k, effective_diagonals).
+
+Mirrors the Rust arithmetic op-for-op (all Python floats are IEEE f64,
+matching Rust f64):
+  * sparsity/distribution.rs::allocate (ComputeFraction branch)
+  * sparsity/schedule.rs::{Schedule::at, temperature, sparsity_at}
+  * sparsity/topk.rs::{soft_topk, effective_k}
+  * dst/dynadiag.rs::{DynaDiagController::{temperature, kvec, final_k,
+    effective_diagonals}}
+
+Rounding/threshold results (kvec, final_k, effective_diagonals) are
+committed as exact integers; the generator asserts a safety margin around
+every round/threshold boundary so a few-ulp libm (cos/exp) difference
+between this machine and the test machine cannot flip a committed value.
+Continuous values (temperature, layer_sparsity) are compared in the test
+with a 1e-9 tolerance.
+
+Run from the repo root:  python3 rust/tests/golden/generate_dynadiag_controller.py
+"""
+import json
+import math
+import os
+
+STEPS = 100
+SPARSITY = 0.9
+TEMP_START, TEMP_END = 0.3, 0.1
+L1 = 1e-5
+
+# mlp_micro sparse layers in kvec order: (name, n_out, n_in)
+LAYERS = [
+    ("blocks/0/fc1", 128, 64),
+    ("blocks/0/fc2", 64, 128),
+    ("blocks/1/fc1", 128, 64),
+    ("blocks/1/fc2", 64, 128),
+]
+
+SAMPLE_STEPS = [0, 5, 10, 20, 40, 60, 100]
+EFF_STEPS = [0, 20, 40, 100]
+
+ROUND_MARGIN = 1e-6      # distance from a .5 rounding boundary
+THRESH_MARGIN = 1e-6     # distance of a soft-topk value from the 0.5 threshold
+
+
+def rust_round(x):
+    """f64::round — half away from zero (x >= 0 here)."""
+    assert x >= 0.0
+    return math.floor(x + 0.5)
+
+
+def assert_round_margin(x, what):
+    frac = x - math.floor(x)
+    assert abs(frac - 0.5) > ROUND_MARGIN, f"{what}: {x} too close to .5 boundary"
+
+
+def cosine_frac(t):
+    t = min(max(t, 0.0), 1.0)
+    return 0.5 * (1.0 - math.cos(math.pi * t))
+
+
+def schedule_at(start, end, total_steps, step):
+    # Schedule::at with Curve::Cosine
+    t = step / total_steps
+    return start + (end - start) * cosine_frac(t)
+
+
+def temperature(step):
+    # DynaDiagController::temperature — cosine over the first 40% window
+    ramp_end = max(int(STEPS * 0.4), 1)
+    return schedule_at(TEMP_START, TEMP_END, ramp_end, min(step, ramp_end))
+
+
+def allocate_compute_fraction(layers, global_sparsity, max_sparsity):
+    # distribution.rs::allocate, ComputeFraction branch
+    params = [float(o * i) for (_, o, i) in layers]
+    total = math.fsum(params)  # Rust: sequential sum — see note below
+    # Rust sums with iter().sum::<f64>() = sequential left fold; replicate:
+    total = 0.0
+    for p in params:
+        total += p
+    budget = (1.0 - global_sparsity) * total
+    scores = [1.0 / math.sqrt(p / total) for p in params]
+    denom = 0.0
+    for p, s in zip(params, scores):
+        denom += s * p
+    eps = budget / denom
+    sp = [min(max(1.0 - s * eps, 0.0), max_sparsity) for s in scores]
+    for _ in range(4):
+        nnz_now = 0.0
+        for p, s in zip(params, sp):
+            nnz_now += (1.0 - s) * p
+        err = nnz_now - budget
+        if abs(err) / budget < 1e-3:
+            break
+        free = 0.0
+        for p, s in zip(params, sp):
+            if 0.0 < s < max_sparsity:
+                free += p
+        if free <= 0.0:
+            break
+        delta = err / free
+        sp = [
+            min(max(s + delta, 0.0), max_sparsity) if 0.0 < s < max_sparsity else s
+            for s in sp
+        ]
+    return sp
+
+
+def kvec(step, layer_sparsity):
+    out = []
+    for (_, _, n_in), s_target in zip(LAYERS, layer_sparsity):
+        ramp_end = int(STEPS * 0.4)
+        t_step = min(step, ramp_end)
+        # sparsity_at(Cosine, step, ramp_end.max(1), 0.0, s_target)
+        s = schedule_at(0.0, s_target, max(ramp_end, 1), t_step)
+        raw = (1.0 - s) * n_in
+        assert_round_margin(raw, f"kvec step {step} n_in {n_in}")
+        k = max(rust_round(raw), 1.0)
+        out.append(int(k))  # exact small integer, f32-representable
+    return out
+
+
+def final_k(layer_sparsity):
+    out = []
+    for (_, _, n_in), s in zip(LAYERS, layer_sparsity):
+        raw = (1.0 - s) * n_in
+        assert_round_margin(raw, f"final_k n_in {n_in}")
+        out.append(int(min(max(rust_round(raw), 1), n_in)))
+    return out
+
+
+def soft_topk(alpha, k, temp):
+    t = max(temp, 1e-6)
+    mx = max(alpha)
+    exps = [math.exp(a / t - mx / t) for a in alpha]
+    total = 0.0
+    for e in exps:
+        total += e
+    return [min(k * e / total, 1.0) for e in exps]
+
+
+def effective_diagonals(step, alpha, layer_sparsity):
+    k = float(kvec(step, layer_sparsity)[0])
+    temp = temperature(step)
+    soft = soft_topk(alpha, k, temp)
+    for v in soft:
+        assert abs(v - 0.5) > THRESH_MARGIN, f"soft value {v} too close to 0.5 at step {step}"
+    return sum(1 for v in soft if v > 0.5)
+
+
+def main():
+    n_in0 = LAYERS[0][2]
+    max_s = 1.0 - 1.0 / max(i for (_, _, i) in LAYERS)
+    layer_sparsity = allocate_compute_fraction(LAYERS, SPARSITY, max_s)
+
+    # alpha fixture: exactly representable in f32 and JSON (denominator 256)
+    alpha = [((i * 37) % 128 - 64) / 256.0 for i in range(n_in0)]
+
+    fixture = {
+        "note": "Golden values for DynaDiagController (mlp_micro layers, "
+                "steps=100, S=0.9, cosine temp 0.3->0.1, cosine sparsity ramp, "
+                "compute_fraction distribution, l1=1e-5). Regenerate with "
+                "generate_dynadiag_controller.py; integer fields are committed "
+                "with a checked margin from every rounding boundary.",
+        "config": {
+            "steps": STEPS,
+            "sparsity": SPARSITY,
+            "temp_start": TEMP_START,
+            "temp_end": TEMP_END,
+            "l1": L1,
+        },
+        "layers": [{"name": n, "out": o, "in": i} for (n, o, i) in LAYERS],
+        "layer_sparsity": layer_sparsity,
+        "final_k": final_k(layer_sparsity),
+        "l1_coeff": L1,
+        "steps_sampled": SAMPLE_STEPS,
+        "temperature": [temperature(s) for s in SAMPLE_STEPS],
+        "kvec": [kvec(s, layer_sparsity) for s in SAMPLE_STEPS],
+        "alpha": alpha,
+        "eff_steps": EFF_STEPS,
+        "effective_diagonals": [
+            effective_diagonals(s, alpha, layer_sparsity) for s in EFF_STEPS
+        ],
+    }
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "dynadiag_controller.json")
+    with open(out, "w") as f:
+        json.dump(fixture, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+    print("temperature:", fixture["temperature"])
+    print("layer_sparsity:", layer_sparsity)
+    print("final_k:", fixture["final_k"])
+    print("kvec[0], kvec[-1]:", fixture["kvec"][0], fixture["kvec"][-1])
+    print("effective_diagonals:", fixture["effective_diagonals"])
+
+
+if __name__ == "__main__":
+    main()

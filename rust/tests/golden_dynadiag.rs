@@ -1,0 +1,130 @@
+//! Golden-value regression tests for the `DynaDiagController` schedule
+//! surface (ISSUE 3 satellite): temperature, kvec, l1_coeff, final_k, and
+//! effective_diagonals against fixtures committed under
+//! `rust/tests/golden/`.
+//!
+//! The fixture (`dynadiag_controller.json`) is produced by
+//! `generate_dynadiag_controller.py`, an op-for-op IEEE-f64 mirror of the
+//! controller arithmetic. Integer outputs (kvec, final_k,
+//! effective_diagonals) are committed with a generator-checked margin from
+//! every rounding/threshold boundary and compared **exactly** — a kernel
+//! or schedule refactor that drifts the DST math by even one rounding step
+//! fails here. Continuous outputs compare at 1e-9 (libm `cos`/`exp` may
+//! differ in the last ulps across platforms; the scheduled values are
+//! O(0.1), so 1e-9 is ~7 orders of magnitude of headroom).
+
+use dynadiag::config::RunConfig;
+use dynadiag::dst::dynadiag::DynaDiagController;
+use dynadiag::util::json::Json;
+
+fn fixture() -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/dynadiag_controller.json");
+    Json::from_file(&path).expect("fixture parses")
+}
+
+fn controller_from(fx: &Json) -> DynaDiagController {
+    let cfg_fx = fx.req("config").unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.steps = cfg_fx.req("steps").unwrap().as_usize().unwrap();
+    cfg.sparsity = cfg_fx.req("sparsity").unwrap().as_f64().unwrap();
+    cfg.temp_start = cfg_fx.req("temp_start").unwrap().as_f64().unwrap();
+    cfg.temp_end = cfg_fx.req("temp_end").unwrap().as_f64().unwrap();
+    cfg.l1 = cfg_fx.req("l1").unwrap().as_f64().unwrap();
+    // defaults already: cosine temp + sparsity curves, compute_fraction
+    let layers: Vec<(String, usize, usize)> = fx
+        .req("layers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|l| {
+            (
+                l.req("name").unwrap().as_str().unwrap().to_string(),
+                l.req("out").unwrap().as_usize().unwrap(),
+                l.req("in").unwrap().as_usize().unwrap(),
+            )
+        })
+        .collect();
+    DynaDiagController::new(&cfg, layers)
+}
+
+#[test]
+fn layer_sparsity_matches_golden() {
+    let fx = fixture();
+    let c = controller_from(&fx);
+    let want = fx.req("layer_sparsity").unwrap().as_arr().unwrap();
+    assert_eq!(c.layer_sparsity.len(), want.len());
+    for (l, (got, w)) in c.layer_sparsity.iter().zip(want).enumerate() {
+        let w = w.as_f64().unwrap();
+        assert!(
+            (got - w).abs() < 1e-12,
+            "layer {} sparsity drifted: {} vs golden {}",
+            l,
+            got,
+            w
+        );
+    }
+}
+
+#[test]
+fn temperature_schedule_matches_golden() {
+    let fx = fixture();
+    let c = controller_from(&fx);
+    let steps = fx.req("steps_sampled").unwrap().as_usize_vec().unwrap();
+    let want = fx.req("temperature").unwrap().as_arr().unwrap();
+    for (&step, w) in steps.iter().zip(want) {
+        let got = c.temperature(step);
+        let w = w.as_f64().unwrap();
+        assert!(
+            (got - w).abs() < 1e-9,
+            "temperature({}) drifted: {} vs golden {}",
+            step,
+            got,
+            w
+        );
+    }
+}
+
+#[test]
+fn kvec_schedule_matches_golden_exactly() {
+    let fx = fixture();
+    let c = controller_from(&fx);
+    let steps = fx.req("steps_sampled").unwrap().as_usize_vec().unwrap();
+    let want = fx.req("kvec").unwrap().as_arr().unwrap();
+    for (&step, row) in steps.iter().zip(want) {
+        let got = c.kvec(step);
+        let row = row.as_usize_vec().unwrap();
+        let got_int: Vec<usize> = got.iter().map(|&k| k as usize).collect();
+        assert_eq!(got_int, row, "kvec({}) drifted", step);
+        // kvec entries are exact small integers in f32
+        for (&g, &w) in got.iter().zip(&row) {
+            assert_eq!(g, w as f32, "kvec({}) not integral", step);
+        }
+    }
+}
+
+#[test]
+fn l1_and_final_k_match_golden() {
+    let fx = fixture();
+    let c = controller_from(&fx);
+    let l1 = fx.req("l1_coeff").unwrap().as_f64().unwrap();
+    assert_eq!(c.l1_coeff(), l1, "l1 coefficient drifted");
+    let want = fx.req("final_k").unwrap().as_usize_vec().unwrap();
+    for (l, &w) in want.iter().enumerate() {
+        assert_eq!(c.final_k(l), w, "final_k({}) drifted", l);
+    }
+}
+
+#[test]
+fn effective_diagonals_match_golden_exactly() {
+    let fx = fixture();
+    let c = controller_from(&fx);
+    let alpha = fx.req("alpha").unwrap().as_f32_vec().unwrap();
+    let steps = fx.req("eff_steps").unwrap().as_usize_vec().unwrap();
+    let want = fx.req("effective_diagonals").unwrap().as_usize_vec().unwrap();
+    for (&step, &w) in steps.iter().zip(&want) {
+        let got = c.effective_diagonals(0, &alpha, step);
+        assert_eq!(got, w, "effective_diagonals(layer 0, step {}) drifted", step);
+    }
+}
