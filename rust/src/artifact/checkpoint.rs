@@ -1,0 +1,469 @@
+//! Training checkpoints: everything needed to resume a run **bit-for-bit**.
+//!
+//! A checkpoint captures the complete mutable training state at a step
+//! boundary:
+//!
+//! * the full [`RunConfig`] (resume never re-guesses hyperparameters — the
+//!   restored config *is* the original, and a resumed run's schedules,
+//!   kvec ramps, and data batches are pure functions of it);
+//! * the [`ParamStore`] (params + both AdamW moment sections);
+//! * every DST mask (masked methods mutate these between steps);
+//! * the trainer's PRNG stream (PCG state + increment + the cached
+//!   Box-Muller spare), so prune/regrow draws after resume continue the
+//!   exact sequence the uninterrupted run would have drawn;
+//! * the step cursor, the recorded history so far, and accumulated wall
+//!   time.
+//!
+//! The `DynaDiagController` needs no section of its own: its temperature /
+//! kvec / ℓ1 outputs are pure functions of (config, step), both of which
+//! the checkpoint carries, and `Trainer::from_checkpoint` rebuilds it from
+//! the restored config. Synthetic data batches are likewise pure in
+//! (seed, step). `rust/tests/determinism.rs` pins the end-to-end
+//! invariant: save → load → resume reproduces an uninterrupted same-seed
+//! run's per-step losses, final eval, and served logits bit-identically.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ArtifactFile, Dec, Enc, Kind, SectionWriter};
+use crate::config::{MethodKind, RunConfig};
+use crate::runtime::HostTensor;
+use crate::sparsity::mask::Mask;
+use crate::sparsity::schedule::Curve;
+use crate::sparsity::Distribution;
+use crate::train::state::ParamStore;
+use crate::train::StepMetric;
+
+/// Canonical file extension for training checkpoints.
+pub const CHECKPOINT_EXT: &str = "ddck";
+
+/// A fully materialized training checkpoint.
+#[derive(Clone, Debug)]
+pub struct TrainCheckpoint {
+    /// The complete run configuration of the checkpointed run.
+    pub cfg: RunConfig,
+    /// First step index the resumed loop executes (steps `0..next_step`
+    /// are already reflected in `store`/`masks`/`history`).
+    pub next_step: usize,
+    /// Wall-clock seconds accumulated before the checkpoint.
+    pub train_seconds: f64,
+    /// Trainer PRNG snapshot: (state, increment, Box-Muller spare).
+    pub rng: (u64, u64, Option<f64>),
+    pub store: ParamStore,
+    pub masks: BTreeMap<String, Mask>,
+    /// Per-step metrics recorded up to `next_step`.
+    pub history: Vec<StepMetric>,
+}
+
+/// Serialize checkpoint state straight from *borrowed* trainer state. The
+/// periodic checkpoint hook runs inside the training loop, so it must not
+/// clone the store/masks/history just to serialize and drop them — this
+/// borrows everything and only allocates the output buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_checkpoint(
+    cfg: &RunConfig,
+    next_step: usize,
+    train_seconds: f64,
+    rng: (u64, u64, Option<f64>),
+    store: &ParamStore,
+    masks: &BTreeMap<String, Mask>,
+    history: &[StepMetric],
+) -> Vec<u8> {
+    let mut w = SectionWriter::new(Kind::Checkpoint);
+
+    let mut meta = Enc::new();
+    encode_config(cfg, &mut meta);
+    meta.usize(next_step);
+    meta.f64(train_seconds);
+    w.section("meta", &meta.buf);
+
+    let mut rng_e = Enc::new();
+    rng_e.u64(rng.0);
+    rng_e.u64(rng.1);
+    match rng.2 {
+        Some(s) => {
+            rng_e.u8(1);
+            rng_e.f64(s);
+        }
+        None => rng_e.u8(0),
+    }
+    w.section("rng", &rng_e.buf);
+
+    let mut store_e = Enc::new();
+    encode_store(store, &mut store_e);
+    w.section("store", &store_e.buf);
+
+    let mut masks_e = Enc::new();
+    masks_e.usize(masks.len());
+    for (name, m) in masks {
+        masks_e.str(name);
+        masks_e.usize(m.rows);
+        masks_e.usize(m.cols);
+        let bits: Vec<u8> = m.bits.iter().map(|&b| b as u8).collect();
+        masks_e.bytes(&bits);
+    }
+    w.section("masks", &masks_e.buf);
+
+    let mut hist = Enc::new();
+    hist.usize(history.len());
+    for h in history {
+        hist.usize(h.step);
+        hist.f64(h.loss);
+        hist.f64(h.acc);
+        hist.f64(h.lr);
+        hist.f64(h.temperature);
+        match h.effective_k {
+            Some(k) => {
+                hist.u8(1);
+                hist.usize(k);
+            }
+            None => hist.u8(0),
+        }
+    }
+    w.section("history", &hist.buf);
+
+    w.into_bytes()
+}
+
+impl TrainCheckpoint {
+    /// Serialize to container bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        encode_checkpoint(
+            &self.cfg,
+            self.next_step,
+            self.train_seconds,
+            self.rng,
+            &self.store,
+            &self.masks,
+            &self.history,
+        )
+    }
+
+    /// Save atomically (unique temp file, rename into place).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        super::write_atomic(path, &self.to_bytes())
+            .with_context(|| format!("saving checkpoint {}", path.display()))
+    }
+
+    /// Deserialize from container bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<TrainCheckpoint> {
+        let f = ArtifactFile::parse(bytes, Kind::Checkpoint)?;
+
+        let mut d = Dec::new(f.section("meta")?, "meta");
+        let cfg = decode_config(&mut d)?;
+        let next_step = d.usize()?;
+        let train_seconds = d.f64()?;
+        d.expect_end()?;
+        if next_step > cfg.steps {
+            bail!(
+                "checkpoint step cursor {} exceeds the run's {} steps — corrupted?",
+                next_step,
+                cfg.steps
+            );
+        }
+
+        let mut d = Dec::new(f.section("rng")?, "rng");
+        let state = d.u64()?;
+        let inc = d.u64()?;
+        let spare = if d.u8()? == 1 { Some(d.f64()?) } else { None };
+        d.expect_end()?;
+
+        let mut d = Dec::new(f.section("store")?, "store");
+        let store = decode_store(&mut d)?;
+        d.expect_end()?;
+
+        let mut d = Dec::new(f.section("masks")?, "masks");
+        let n_masks = d.usize()?;
+        let mut masks = BTreeMap::new();
+        for _ in 0..n_masks {
+            let name = d.str()?;
+            let rows = d.usize()?;
+            let cols = d.usize()?;
+            let bits_raw = d.bytes()?;
+            let numel = checked_numel(&[rows, cols], "mask dims")?;
+            if bits_raw.len() != numel {
+                bail!(
+                    "mask '{}' has {} bits, want {}x{}",
+                    name,
+                    bits_raw.len(),
+                    rows,
+                    cols
+                );
+            }
+            let bits: Vec<bool> = bits_raw.into_iter().map(|b| b != 0).collect();
+            masks.insert(name, Mask { rows, cols, bits });
+        }
+        d.expect_end()?;
+
+        let mut d = Dec::new(f.section("history")?, "history");
+        let n_hist = d.usize()?;
+        let mut history = Vec::with_capacity(n_hist.min(1 << 20));
+        for _ in 0..n_hist {
+            let step = d.usize()?;
+            let loss = d.f64()?;
+            let acc = d.f64()?;
+            let lr = d.f64()?;
+            let temperature = d.f64()?;
+            let effective_k = if d.u8()? == 1 { Some(d.usize()?) } else { None };
+            history.push(StepMetric { step, loss, acc, lr, temperature, effective_k });
+        }
+        d.expect_end()?;
+        if history.len() != next_step {
+            bail!(
+                "checkpoint history has {} steps but the cursor says {} — corrupted?",
+                history.len(),
+                next_step
+            );
+        }
+
+        Ok(TrainCheckpoint {
+            cfg,
+            next_step,
+            train_seconds,
+            rng: (state, inc, spare),
+            store,
+            masks,
+            history,
+        })
+    }
+
+    /// Load a checkpoint from disk.
+    pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        TrainCheckpoint::from_bytes(&bytes)
+            .with_context(|| format!("loading checkpoint {}", path.display()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunConfig codec (every field, explicitly — resume must not re-default)
+// ---------------------------------------------------------------------------
+
+fn encode_config(cfg: &RunConfig, e: &mut Enc) {
+    e.str(&cfg.model);
+    e.str(&cfg.dataset);
+    e.str(cfg.method.name());
+    e.f64(cfg.sparsity);
+    e.usize(cfg.steps);
+    e.usize(cfg.warmup);
+    e.f64(cfg.lr);
+    e.f64(cfg.lr_min);
+    e.f64(cfg.weight_decay);
+    e.u64(cfg.seed);
+    e.usize(cfg.update_every);
+    e.f64(cfg.update_until);
+    e.f64(cfg.update_frac);
+    e.str(cfg.temp_curve.name());
+    e.f64(cfg.temp_start);
+    e.f64(cfg.temp_end);
+    e.str(cfg.sparsity_curve.name());
+    e.str(cfg.distribution.name());
+    e.f64(cfg.l1);
+    e.usize(cfg.eval_batches);
+    e.usize(cfg.eval_every);
+    e.usize(cfg.nm_group);
+    e.usize(cfg.block_size);
+    e.str(&cfg.artifacts_dir);
+    e.str(&cfg.backend);
+}
+
+fn decode_config(d: &mut Dec) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.model = d.str()?;
+    cfg.dataset = d.str()?;
+    let method = d.str()?;
+    cfg.method = MethodKind::parse(&method)
+        .with_context(|| format!("checkpoint method '{}'", method))?;
+    cfg.sparsity = d.f64()?;
+    cfg.steps = d.usize()?;
+    cfg.warmup = d.usize()?;
+    cfg.lr = d.f64()?;
+    cfg.lr_min = d.f64()?;
+    cfg.weight_decay = d.f64()?;
+    cfg.seed = d.u64()?;
+    cfg.update_every = d.usize()?;
+    cfg.update_until = d.f64()?;
+    cfg.update_frac = d.f64()?;
+    let tc = d.str()?;
+    cfg.temp_curve = Curve::parse(&tc)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint temp_curve '{}' unknown", tc))?;
+    cfg.temp_start = d.f64()?;
+    cfg.temp_end = d.f64()?;
+    let sc = d.str()?;
+    cfg.sparsity_curve = Curve::parse(&sc)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint sparsity_curve '{}' unknown", sc))?;
+    let dist = d.str()?;
+    cfg.distribution = Distribution::parse(&dist)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint distribution '{}' unknown", dist))?;
+    cfg.l1 = d.f64()?;
+    cfg.eval_batches = d.usize()?;
+    cfg.eval_every = d.usize()?;
+    cfg.nm_group = d.usize()?;
+    cfg.block_size = d.usize()?;
+    cfg.artifacts_dir = d.str()?;
+    cfg.backend = d.str()?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// ParamStore codec (shared with `ParamStore::save` / `::load`)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn encode_store(store: &ParamStore, e: &mut Enc) {
+    e.usize(store.entries.len());
+    for (name, t) in &store.entries {
+        e.str(name);
+        match t {
+            HostTensor::F32 { shape, data } => {
+                e.u8(0);
+                e.usizes(shape);
+                e.f32s(data);
+            }
+            HostTensor::I32 { shape, data } => {
+                e.u8(1);
+                e.usizes(shape);
+                e.i32s(data);
+            }
+        }
+    }
+}
+
+/// Element count of a shape with overflow detection — corrupt dims must
+/// yield an actionable error, not a debug-build panic or a release wrap.
+fn checked_numel(shape: &[usize], what: &str) -> Result<usize> {
+    shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("{}: shape {:?} element count overflows", what, shape))
+}
+
+pub(crate) fn decode_store(d: &mut Dec) -> Result<ParamStore> {
+    let n = d.usize()?;
+    let mut entries = BTreeMap::new();
+    for _ in 0..n {
+        let name = d.str()?;
+        let dtype = d.u8()?;
+        let shape = d.usizes()?;
+        let numel = checked_numel(&shape, &format!("store entry '{}'", name))?;
+        let t = match dtype {
+            0 => {
+                let data = d.f32s()?;
+                if numel != data.len() {
+                    bail!("store entry '{}': shape/data length mismatch", name);
+                }
+                HostTensor::F32 { shape, data }
+            }
+            1 => {
+                let data = d.i32s()?;
+                if numel != data.len() {
+                    bail!("store entry '{}': shape/data length mismatch", name);
+                }
+                HostTensor::I32 { shape, data }
+            }
+            other => bail!("store entry '{}': unknown dtype byte {}", name, other),
+        };
+        entries.insert(name, t);
+    }
+    Ok(ParamStore { entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_checkpoint() -> TrainCheckpoint {
+        let mut cfg = RunConfig::default();
+        cfg.model = "mlp_micro".into();
+        cfg.method = MethodKind::RigL;
+        cfg.backend = "native".into();
+        cfg.steps = 10;
+        cfg.dataset = "synth-cifar".into();
+
+        let mut store = ParamStore::default();
+        store.set("params/a/w", HostTensor::f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 7.0, -0.25]));
+        store.set("opt_m/a/w", HostTensor::f32(&[2, 3], vec![0.0; 6]));
+        store.set("labels", HostTensor::i32(&[4], vec![1, -2, 3, 0]));
+
+        let mut rng = Rng::new(9);
+        let mut masks = BTreeMap::new();
+        masks.insert("a".to_string(), Mask::random(2, 3, 4, &mut rng));
+
+        TrainCheckpoint {
+            cfg,
+            next_step: 4,
+            train_seconds: 1.25,
+            rng: (0x1234_5678_9abc_def0, 0x1111_2222_3333_4445, Some(-0.75)),
+            store,
+            masks,
+            history: (0..4)
+                .map(|s| StepMetric {
+                    step: s,
+                    loss: 2.0 - s as f64 * 0.1,
+                    acc: 0.1 * s as f64,
+                    lr: 1e-3,
+                    temperature: 0.3,
+                    effective_k: if s % 2 == 0 { Some(7 + s) } else { None },
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_exact() {
+        let c = sample_checkpoint();
+        let r = TrainCheckpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(r.cfg.model, c.cfg.model);
+        assert_eq!(r.cfg.method, c.cfg.method);
+        assert_eq!(r.cfg.seed, c.cfg.seed);
+        assert_eq!(r.cfg.temp_curve as u8, c.cfg.temp_curve as u8);
+        assert_eq!(r.next_step, 4);
+        assert_eq!(r.train_seconds, 1.25);
+        assert_eq!(r.rng, c.rng);
+        assert_eq!(r.store.entries.len(), c.store.entries.len());
+        assert_eq!(
+            r.store.get("params/a/w").unwrap().as_f32().unwrap(),
+            c.store.get("params/a/w").unwrap().as_f32().unwrap()
+        );
+        assert_eq!(r.store.get("labels").unwrap().as_i32().unwrap(), &[1, -2, 3, 0]);
+        assert_eq!(r.masks, c.masks);
+        assert_eq!(r.history.len(), 4);
+        assert_eq!(r.history[0].loss, 2.0);
+        assert_eq!(r.history[2].effective_k, Some(9));
+        assert_eq!(r.history[1].effective_k, None);
+    }
+
+    #[test]
+    fn cursor_history_mismatch_is_rejected() {
+        let mut c = sample_checkpoint();
+        c.history.pop();
+        let err = format!(
+            "{:#}",
+            TrainCheckpoint::from_bytes(&c.to_bytes()).unwrap_err()
+        );
+        assert!(err.contains("history"), "{}", err);
+    }
+
+    #[test]
+    fn every_method_name_roundtrips() {
+        for m in [
+            MethodKind::Dense,
+            MethodKind::DynaDiag,
+            MethodKind::RigL,
+            MethodKind::Set,
+            MethodKind::Mest,
+            MethodKind::Cht,
+            MethodKind::SRigL,
+            MethodKind::Dsb,
+            MethodKind::PixelatedBFly,
+            MethodKind::DiagHeur,
+            MethodKind::Wanda,
+        ] {
+            assert_eq!(MethodKind::parse(m.name()).unwrap(), m, "{:?}", m);
+        }
+    }
+}

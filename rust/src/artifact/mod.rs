@@ -1,0 +1,596 @@
+//! Model artifacts & training checkpoints: the `DDIAG` on-disk container.
+//!
+//! Before this subsystem a trained DynaDiag model could not outlive its
+//! process — `serve` had to retrain or synthesize at startup, and an
+//! interrupted training run lost everything. This module makes the
+//! diagonal-sparse model a first-class on-disk artifact:
+//!
+//! * [`model`] — the finalized-[`crate::runtime::infer::DiagModel`] codec
+//!   (`.ddiag`): offset-major diagonal layout written **exactly as the
+//!   kernels consume it**, so serve-from-disk is a read + validate, never
+//!   a re-pack.
+//! * [`checkpoint`] — full training checkpoints (`.ddck`): params,
+//!   optimizer moments, masks, the trainer RNG stream, and the step
+//!   cursor, so save → load → resume reproduces an uninterrupted same-seed
+//!   run **bit-for-bit** (`rust/tests/determinism.rs` pins this).
+//!
+//! ## Container layout (shared by both kinds)
+//!
+//! ```text
+//! [0..6)   magic  b"DDIAG\0"
+//! [6]      kind   1 = model, 2 = checkpoint, 3 = param store
+//! [7]      version (currently 1; readers reject anything newer)
+//! then, repeated until EOF (no trailing bytes allowed):
+//!   name_len  u16  section name length
+//!   name      ..   utf-8 section name ("arch", "layer/0", "store", ...)
+//!   len       u64  payload length
+//!   payload   ..   section bytes (all integers/floats little-endian)
+//!   crc32     u32  IEEE CRC-32 of name bytes ++ payload
+//! ```
+//!
+//! Readers are strict: bad magic, a future version, a kind mismatch, a
+//! truncated file, or a failed per-section CRC all produce an actionable
+//! error instead of a silently wrong model. Writers are atomic: bytes go
+//! to a uniquely named `<file>.tmp.<pid>.<seq>` sibling first and are
+//! `rename`d into place, so a reader (or the serving hot-reload watcher)
+//! never observes a half-written artifact, even with concurrent
+//! publishers.
+
+pub mod checkpoint;
+pub mod model;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// File magic prefix of every DynaDiag artifact.
+pub const MAGIC: [u8; 6] = *b"DDIAG\0";
+
+/// Current container version. Bump on any layout change; readers reject
+/// files newer than this.
+pub const VERSION: u8 = 1;
+
+/// What a `DDIAG` container holds (byte 6 of the header).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// A finalized serving model (`artifact::model`, `.ddiag`).
+    Model,
+    /// A full training checkpoint (`artifact::checkpoint`, `.ddck`).
+    Checkpoint,
+    /// A bare parameter store (`train::ParamStore::save`).
+    Store,
+}
+
+impl Kind {
+    fn as_u8(self) -> u8 {
+        match self {
+            Kind::Model => 1,
+            Kind::Checkpoint => 2,
+            Kind::Store => 3,
+        }
+    }
+
+    fn parse(b: u8) -> Result<Kind> {
+        Ok(match b {
+            1 => Kind::Model,
+            2 => Kind::Checkpoint,
+            3 => Kind::Store,
+            other => bail!("unknown artifact kind byte {}", other),
+        })
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Model => "model (.ddiag)",
+            Kind::Checkpoint => "training checkpoint (.ddck)",
+            Kind::Store => "param store",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, the zlib/PNG polynomial) — std-only, table-driven
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+fn crc32_update(mut c: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+/// IEEE CRC-32 of `bytes` (matches zlib's `crc32(0, ...)`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc32_update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
+}
+
+/// The per-section checksum covers the section *name* as well as the
+/// payload, so a bit flip in the name (which the payload-only CRC could
+/// not see) is also caught.
+fn section_crc(name: &str, payload: &[u8]) -> u32 {
+    crc32_update(crc32_update(0xFFFF_FFFF, name.as_bytes()), payload) ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Payload encoding/decoding primitives (little-endian throughout)
+// ---------------------------------------------------------------------------
+
+/// Little-endian payload builder for one section.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed (u32) UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed (u64 count) f32 array.
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed (u64 count) i32 array.
+    pub fn i32s(&mut self, xs: &[i32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed (u64 count) usize array stored as u64s.
+    pub fn usizes(&mut self, xs: &[usize]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&(x as u64).to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed (u64 count) raw byte array.
+    pub fn bytes(&mut self, xs: &[u8]) {
+        self.u64(xs.len() as u64);
+        self.buf.extend_from_slice(xs);
+    }
+}
+
+/// Bounds-checked little-endian reader over one section payload. Every
+/// overrun reports "truncated" with the section name, so a cut-short file
+/// fails loudly wherever the cut landed.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'a str,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8], what: &'a str) -> Dec<'a> {
+        Dec { buf, pos: 0, what }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos.checked_add(n).map_or(true, |end| end > self.buf.len()) {
+            bail!(
+                "section '{}' truncated: wanted {} bytes at offset {}, have {}",
+                self.what,
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| anyhow!("section '{}': invalid utf-8 string", self.what))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.checked_count(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.checked_count(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.checked_count(8)?;
+        let bytes = self.take(n * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect())
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.checked_count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Read an array count and sanity-bound it against the remaining bytes
+    /// so a corrupted length can't trigger a huge allocation before the
+    /// truncation check fires.
+    fn checked_count(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        if n.saturating_mul(elem_size) > self.buf.len() - self.pos {
+            bail!(
+                "section '{}' truncated: array of {} elements exceeds remaining {} bytes",
+                self.what,
+                n,
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(n)
+    }
+
+    /// Assert the payload was fully consumed (layout drift detector).
+    pub fn expect_end(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "section '{}': {} unread trailing bytes (format mismatch?)",
+                self.what,
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Container writer / reader
+// ---------------------------------------------------------------------------
+
+/// Builds a `DDIAG` container in memory and writes it atomically.
+pub struct SectionWriter {
+    buf: Vec<u8>,
+}
+
+impl SectionWriter {
+    pub fn new(kind: Kind) -> SectionWriter {
+        let mut buf = Vec::with_capacity(256);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(kind.as_u8());
+        buf.push(VERSION);
+        SectionWriter { buf }
+    }
+
+    /// Append one named, CRC-protected section.
+    pub fn section(&mut self, name: &str, payload: &[u8]) {
+        assert!(name.len() <= u16::MAX as usize, "section name too long");
+        self.buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        self.buf.extend_from_slice(name.as_bytes());
+        self.buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        self.buf.extend_from_slice(payload);
+        self.buf.extend_from_slice(&section_crc(name, payload).to_le_bytes());
+    }
+
+    /// The assembled container bytes (tests / in-memory round trips).
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Write atomically: bytes land in a uniquely named temp sibling in
+    /// the same directory, then `rename` into place — a concurrent reader
+    /// (or the hot-reload watcher) sees either the old complete file or
+    /// the new complete file, never a partial write.
+    pub fn finish_to(self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.buf)
+    }
+}
+
+/// Atomic write-then-rename, re-exported from [`crate::util`] (the util
+/// layer owns the primitive so `util::json`'s file writer does not reach
+/// upward into this module).
+pub use crate::util::write_atomic;
+
+/// A parsed container: header fields + CRC-validated sections by name.
+/// Borrows the file buffer — section payloads are ranges into it, not
+/// copies, so loading never holds a second image of the artifact.
+pub struct ArtifactFile<'a> {
+    pub kind: Kind,
+    pub version: u8,
+    bytes: &'a [u8],
+    /// section name -> (offset, len) into `bytes`
+    sections: BTreeMap<String, (usize, usize)>,
+}
+
+impl<'a> ArtifactFile<'a> {
+    /// Parse and validate a container from raw bytes. `want` is the kind
+    /// the caller expects; a mismatch (e.g. feeding a checkpoint to
+    /// `serve --model`) errors with both kinds named.
+    pub fn parse(bytes: &'a [u8], want: Kind) -> Result<ArtifactFile<'a>> {
+        if bytes.len() < MAGIC.len() + 2 {
+            bail!(
+                "truncated artifact: {} bytes is smaller than the {}-byte header",
+                bytes.len(),
+                MAGIC.len() + 2
+            );
+        }
+        if bytes[..MAGIC.len()] != MAGIC {
+            bail!("bad magic: not a DynaDiag `DDIAG` artifact");
+        }
+        let kind = Kind::parse(bytes[MAGIC.len()])?;
+        let version = bytes[MAGIC.len() + 1];
+        if version > VERSION {
+            bail!(
+                "artifact version {} is newer than this binary supports (max {}); \
+                 rebuild dynadiag or re-export the artifact",
+                version,
+                VERSION
+            );
+        }
+        if kind != want {
+            bail!(
+                "artifact kind mismatch: file holds a {}, expected a {}",
+                kind.name(),
+                want.name()
+            );
+        }
+        let mut sections = BTreeMap::new();
+        let mut pos = MAGIC.len() + 2;
+        while pos < bytes.len() {
+            // checked arithmetic throughout: a corrupt 64-bit length must
+            // fail the bounds check, not wrap it
+            let need = |pos: usize, n: usize| -> Result<()> {
+                if pos.checked_add(n).map_or(true, |end| end > bytes.len()) {
+                    bail!(
+                        "truncated artifact: section table cut off at byte {} of {}",
+                        pos,
+                        bytes.len()
+                    );
+                }
+                Ok(())
+            };
+            need(pos, 2)?;
+            let name_len = u16::from_le_bytes(bytes[pos..pos + 2].try_into().unwrap()) as usize;
+            pos += 2;
+            need(pos, name_len)?;
+            let name = String::from_utf8(bytes[pos..pos + name_len].to_vec())
+                .map_err(|_| anyhow!("invalid utf-8 section name at byte {}", pos))?;
+            pos += name_len;
+            need(pos, 8)?;
+            let len = u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap()) as usize;
+            pos += 8;
+            let len_with_crc = len.checked_add(4).ok_or_else(|| {
+                anyhow!("section '{}': corrupt length {} overflows", name, len)
+            })?;
+            need(pos, len_with_crc).with_context(|| format!("section '{}'", name))?;
+            let payload = &bytes[pos..pos + len];
+            pos += len;
+            let stored = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+            pos += 4;
+            let computed = section_crc(&name, payload);
+            if stored != computed {
+                bail!(
+                    "section '{}' failed CRC32 check (stored {:08x}, computed {:08x}) — \
+                     the artifact is corrupted; re-export it",
+                    name,
+                    stored,
+                    computed
+                );
+            }
+            let start = pos - len - 4;
+            if sections.insert(name.clone(), (start, len)).is_some() {
+                bail!("duplicate section '{}'", name);
+            }
+        }
+        Ok(ArtifactFile { kind, version, bytes, sections })
+    }
+
+    /// A required section's payload (a slice of the parsed buffer).
+    pub fn section(&self, name: &str) -> Result<&'a [u8]> {
+        self.sections
+            .get(name)
+            .map(|&(off, len)| &self.bytes[off..off + len])
+            .ok_or_else(|| anyhow!("artifact is missing required section '{}'", name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn enc_dec_roundtrip() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.u32(0xDEAD_BEEF);
+        e.u64(1 << 40);
+        e.f32(1.5);
+        e.f64(-2.25);
+        e.str("hello/世界");
+        e.f32s(&[1.0, -1.0]);
+        e.i32s(&[-3, 9]);
+        e.usizes(&[0, 42]);
+        let mut d = Dec::new(&e.buf, "test");
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.f32().unwrap(), 1.5);
+        assert_eq!(d.f64().unwrap(), -2.25);
+        assert_eq!(d.str().unwrap(), "hello/世界");
+        assert_eq!(d.f32s().unwrap(), vec![1.0, -1.0]);
+        assert_eq!(d.i32s().unwrap(), vec![-3, 9]);
+        assert_eq!(d.usizes().unwrap(), vec![0, 42]);
+        d.expect_end().unwrap();
+    }
+
+    #[test]
+    fn dec_reports_truncation_not_panic() {
+        let mut e = Enc::new();
+        e.u64(1_000_000); // array count far beyond the buffer
+        let mut d = Dec::new(&e.buf, "t");
+        let err = format!("{:#}", d.f32s().unwrap_err());
+        assert!(err.contains("truncated"), "{}", err);
+        let mut d2 = Dec::new(&[1, 2], "t");
+        assert!(d2.u64().is_err());
+    }
+
+    #[test]
+    fn container_roundtrip_and_section_lookup() {
+        let mut w = SectionWriter::new(Kind::Model);
+        w.section("a", &[1, 2, 3]);
+        w.section("b", &[]);
+        let bytes = w.into_bytes();
+        let f = ArtifactFile::parse(&bytes, Kind::Model).unwrap();
+        assert_eq!(f.version, VERSION);
+        assert_eq!(f.section("a").unwrap(), &[1, 2, 3]);
+        assert_eq!(f.section("b").unwrap(), &[] as &[u8]);
+        let err = format!("{:#}", f.section("c").unwrap_err());
+        assert!(err.contains("missing required section"), "{}", err);
+    }
+
+    #[test]
+    fn container_rejects_corruption() {
+        let mut w = SectionWriter::new(Kind::Model);
+        w.section("data", &[9; 64]);
+        let good = w.into_bytes();
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let err = format!("{:#}", ArtifactFile::parse(&bad, Kind::Model).unwrap_err());
+        assert!(err.contains("magic"), "{}", err);
+
+        // future version
+        let mut bad = good.clone();
+        bad[MAGIC.len() + 1] = VERSION + 1;
+        let err = format!("{:#}", ArtifactFile::parse(&bad, Kind::Model).unwrap_err());
+        assert!(err.contains("newer"), "{}", err);
+
+        // kind mismatch
+        let err = format!("{:#}", ArtifactFile::parse(&good, Kind::Checkpoint).unwrap_err());
+        assert!(err.contains("kind mismatch"), "{}", err);
+
+        // flipped payload byte -> CRC failure
+        let mut bad = good.clone();
+        let mid = good.len() - 10;
+        bad[mid] ^= 0x01;
+        let err = format!("{:#}", ArtifactFile::parse(&bad, Kind::Model).unwrap_err());
+        assert!(err.contains("CRC32"), "{}", err);
+
+        // truncation at several cut points
+        for cut in [3, MAGIC.len() + 1, good.len() - 1, good.len() - 30] {
+            let err =
+                format!("{:#}", ArtifactFile::parse(&good[..cut], Kind::Model).unwrap_err());
+            assert!(err.contains("truncated"), "cut {}: {}", cut, err);
+        }
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("dynadiag_artifact_atomic_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.ddiag");
+        let mut w = SectionWriter::new(Kind::Model);
+        w.section("s", &[1]);
+        w.finish_to(&path).unwrap();
+        assert!(path.exists());
+        // no temp file of any naming scheme may survive a successful write
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(!name.contains(".tmp"), "leftover temp file {}", name);
+        }
+        let bytes = std::fs::read(&path).unwrap();
+        ArtifactFile::parse(&bytes, Kind::Model).unwrap();
+    }
+}

@@ -1,0 +1,200 @@
+//! The finalized-model codec: [`DiagModel`] ⇄ `.ddiag` container.
+//!
+//! The on-disk layout is the kernel-ready layout — offset-major diagonal
+//! values, exactly the buffers [`crate::kernels::diag`] consumes — so
+//! loading a model is a read + validate, never a re-pack. A JSON metadata
+//! sidecar (`<file>.json`) carries the human-readable summary (model
+//! config, sparsity, per-layer diagonal counts) for ops tooling that does
+//! not want to parse the binary.
+//!
+//! Sections:
+//!
+//! * `arch` — config name, sparsity, and the six MLP dimensions the config
+//!   must match at load time (a renamed or resized config errors loudly
+//!   instead of serving garbage);
+//! * `embed`, `head` — dense stem/head weights + biases;
+//! * `layer/{i}` — one per sparse layer, fc1/fc2 interleaved per block:
+//!   `n_out`, `n_in`, sorted offsets, offset-major values, bias.
+//!
+//! Round-trip invariant (pinned by `rust/tests/artifact_roundtrip.rs`):
+//! a saved-and-reloaded model serves logits **bit-identical** to the
+//! in-memory model it came from.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::{write_atomic, ArtifactFile, Dec, Enc, Kind, SectionWriter, VERSION};
+use crate::runtime::infer::{mlp_config, DiagLayer, DiagModel};
+use crate::util::json::Json;
+
+/// Canonical file extension for serialized models.
+pub const MODEL_EXT: &str = "ddiag";
+
+/// Serialize a model to container bytes (see [`save`] for the file path).
+pub fn to_bytes(model: &DiagModel) -> Vec<u8> {
+    let mut w = SectionWriter::new(Kind::Model);
+
+    let cfg = &model.cfg;
+    let mut arch = Enc::new();
+    arch.str(cfg.name);
+    arch.f64(model.sparsity);
+    arch.usizes(&[cfg.tokens, cfg.patch_dim, cfg.dim, cfg.mlp, cfg.depth, cfg.classes]);
+    w.section("arch", &arch.buf);
+
+    let mut embed = Enc::new();
+    embed.f32s(&model.embed_w);
+    embed.f32s(&model.embed_b);
+    w.section("embed", &embed.buf);
+
+    let mut head = Enc::new();
+    head.f32s(&model.head_w);
+    head.f32s(&model.head_b);
+    w.section("head", &head.buf);
+
+    for (i, layer) in model.layers.iter().enumerate() {
+        let mut e = Enc::new();
+        e.usize(layer.n_out);
+        e.usize(layer.n_in);
+        e.usizes(&layer.offsets);
+        e.f32s(&layer.values);
+        e.f32s(&layer.bias);
+        w.section(&format!("layer/{}", i), &e.buf);
+    }
+    w.into_bytes()
+}
+
+/// Save a model atomically (unique temp file, rename into place) and write
+/// the JSON metadata sidecar next to it. Returns the sidecar path.
+pub fn save(model: &DiagModel, path: &Path) -> Result<PathBuf> {
+    write_atomic(path, &to_bytes(model))
+        .with_context(|| format!("saving model artifact {}", path.display()))?;
+    write_sidecar(model, path)
+}
+
+/// Deserialize a model from container bytes.
+pub fn from_bytes(bytes: &[u8]) -> Result<DiagModel> {
+    let f = ArtifactFile::parse(bytes, Kind::Model)?;
+
+    let mut d = Dec::new(f.section("arch")?, "arch");
+    let name = d.str()?;
+    let sparsity = d.f64()?;
+    let dims = d.usizes()?;
+    d.expect_end()?;
+    let cfg = mlp_config(&name)
+        .with_context(|| format!("artifact references model config '{}'", name))?;
+    let want = [cfg.tokens, cfg.patch_dim, cfg.dim, cfg.mlp, cfg.depth, cfg.classes];
+    if dims != want {
+        bail!(
+            "artifact was exported for '{}' with dims {:?}, but this binary's '{}' \
+             config has dims {:?} — re-export the model with a matching binary",
+            name,
+            dims,
+            name,
+            want
+        );
+    }
+
+    let mut d = Dec::new(f.section("embed")?, "embed");
+    let embed_w = d.f32s()?;
+    let embed_b = d.f32s()?;
+    d.expect_end()?;
+
+    let mut d = Dec::new(f.section("head")?, "head");
+    let head_w = d.f32s()?;
+    let head_b = d.f32s()?;
+    d.expect_end()?;
+
+    let mut layers = Vec::with_capacity(2 * cfg.depth);
+    for i in 0..2 * cfg.depth {
+        let sec = format!("layer/{}", i);
+        let payload = f.section(&sec)?;
+        let mut d = Dec::new(payload, &sec);
+        let n_out = d.usize()?;
+        let n_in = d.usize()?;
+        let offsets = d.usizes()?;
+        let values = d.f32s()?;
+        let bias = d.f32s()?;
+        d.expect_end()?;
+        layers.push(DiagLayer { n_out, n_in, offsets, values, bias });
+    }
+
+    // from_parts re-validates every shape and offset range, so a container
+    // that passed CRC but carries inconsistent dims still errors cleanly
+    DiagModel::from_parts(cfg, sparsity, embed_w, embed_b, head_w, head_b, layers)
+}
+
+/// Load a model artifact from disk.
+pub fn load(path: &Path) -> Result<DiagModel> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading model artifact {}", path.display()))?;
+    from_bytes(&bytes).with_context(|| format!("loading model artifact {}", path.display()))
+}
+
+/// Write the human-readable JSON sidecar (`<file>.json`). Returns its path.
+pub fn write_sidecar(model: &DiagModel, artifact_path: &Path) -> Result<PathBuf> {
+    let side = sidecar_path(artifact_path);
+    let diag_counts: Vec<f64> = model.diag_counts().iter().map(|&k| k as f64).collect();
+    let j = Json::obj(vec![
+        ("format", Json::Str("DDIAG".to_string())),
+        ("version", Json::Num(VERSION as f64)),
+        ("model", Json::Str(model.cfg.name.to_string())),
+        ("sparsity", Json::Num(model.sparsity)),
+        ("sample_len", Json::Num(model.sample_len() as f64)),
+        ("classes", Json::Num(model.classes() as f64)),
+        ("sparse_layers", Json::Num(model.layers.len() as f64)),
+        ("diagonals_per_layer", Json::arr_f64(&diag_counts)),
+        (
+            "artifact",
+            Json::Str(
+                artifact_path
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+            ),
+        ),
+    ]);
+    j.write_file(&side)
+        .with_context(|| format!("writing sidecar {}", side.display()))?;
+    Ok(side)
+}
+
+/// `<artifact>.json` next to the artifact.
+pub fn sidecar_path(artifact_path: &Path) -> PathBuf {
+    let name = artifact_path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    artifact_path.with_file_name(format!("{}.json", name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip_preserves_every_field() {
+        let cfg = mlp_config("mlp_micro").unwrap();
+        let m = DiagModel::synth(cfg, 0.9, 21);
+        let bytes = to_bytes(&m);
+        let r = from_bytes(&bytes).unwrap();
+        assert_eq!(r.cfg.name, m.cfg.name);
+        assert_eq!(r.sparsity, m.sparsity);
+        assert_eq!(r.embed_w, m.embed_w);
+        assert_eq!(r.embed_b, m.embed_b);
+        assert_eq!(r.head_w, m.head_w);
+        assert_eq!(r.head_b, m.head_b);
+        assert_eq!(r.layers.len(), m.layers.len());
+        for (a, b) in r.layers.iter().zip(&m.layers) {
+            assert_eq!(a.offsets, b.offsets);
+            assert_eq!(a.values, b.values);
+            assert_eq!(a.bias, b.bias);
+        }
+    }
+
+    #[test]
+    fn sidecar_names_sit_next_to_artifact() {
+        let p = Path::new("/tmp/models/m1.ddiag");
+        assert_eq!(sidecar_path(p), Path::new("/tmp/models/m1.ddiag.json"));
+    }
+}

@@ -297,7 +297,7 @@ pub fn write_history_json(result: &TrainResult, path: &Path) -> Result<()> {
         ("eval_loss", Json::Num(result.final_eval.loss)),
         ("ppl", Json::Num(result.final_eval.ppl)),
     ]);
-    std::fs::write(path, j.to_string())?;
+    j.write_file(path)?;
     Ok(())
 }
 

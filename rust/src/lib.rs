@@ -43,8 +43,12 @@
 //! backend through the named-buffer artifact contract documented in
 //! `docs/ARCHITECTURE.md`. Online inference routes through [`serve`]: a
 //! dynamic micro-batcher coalescing single-sample requests onto the
-//! variable-batch diagonal forward in [`runtime::infer`].
+//! variable-batch diagonal forward in [`runtime::infer`]. Trained models
+//! and training state persist through [`artifact`]: the versioned,
+//! checksummed `DDIAG` container behind `dynadiag export`,
+//! `serve --model <file>`, and `train --checkpoint-every/--resume`.
 
+pub mod artifact;
 pub mod bcsr;
 pub mod cli;
 pub mod config;

@@ -1,8 +1,11 @@
 //! dynadiag — CLI entrypoint for the DynaDiag reproduction.
 //!
 //! Commands:
-//!   train       one training run (any method/model/sparsity)
-//!   serve       online inference with dynamic micro-batching (native kernels)
+//!   train       one training run; --checkpoint-every/--resume for
+//!               interruption-safe runs
+//!   export      train (or synthesize) a model and write a .ddiag artifact
+//!   serve       online inference with dynamic micro-batching; --model
+//!               accepts a .ddiag artifact path (serve-from-disk + hot reload)
 //!   experiment  regenerate a paper table/figure (table1, fig4, ... or all)
 //!   analyze     small-world / BCSR analysis of a trained topology
 //!   perfmodel   print A100 speedup projections (Fig 1 / Fig 4 axes)
@@ -10,12 +13,20 @@
 //!
 //! Examples:
 //!   dynadiag train --model vit_micro --method dynadiag --sparsity 0.9
-//!   dynadiag serve --model mlp_micro --sparsity 0.9 --rate 4000
+//!   dynadiag train --model mlp_micro --backend native --checkpoint-every 50 \
+//!       --checkpoint-dir ckpts
+//!   dynadiag train --resume ckpts/ckpt_step000100.ddck
+//!   dynadiag export --model mlp_micro --sparsity 0.9 --train-steps 200 \
+//!       --out model.ddiag
+//!   dynadiag serve --model model.ddiag --rate 4000
 //!   dynadiag experiment table15 --steps 200
 //!   dynadiag perfmodel --sparsity 0.9
 
-use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
 
+use anyhow::{anyhow, bail, Result};
+
+use dynadiag::artifact::checkpoint::TrainCheckpoint;
 use dynadiag::cli::Args;
 use dynadiag::config::{MethodKind, RunConfig};
 use dynadiag::experiments;
@@ -24,9 +35,21 @@ use dynadiag::perfmodel::vit::{
 };
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::{BackendKind, Session};
-use dynadiag::serve::{drive_load, BatchPolicy, LoadSpec, ServeEngine};
-use dynadiag::train::Trainer;
+use dynadiag::serve::{
+    drive_load, drive_load_reloading, BatchPolicy, LoadSpec, ModelWatcher, ReloadPlan,
+    ServeEngine,
+};
+use dynadiag::train::{CheckpointSpec, Trainer};
 use dynadiag::util::json::Json;
+
+/// CLI keys consumed by the harness rather than mapped onto `RunConfig`.
+const HARNESS_KEYS: &[&str] = &[
+    "out",
+    "verbose",
+    "checkpoint-every",
+    "checkpoint-dir",
+    "resume",
+];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -43,6 +66,7 @@ fn run(argv: &[String]) -> Result<()> {
     }
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "export" => cmd_export(&args),
         "serve" => cmd_serve(&args),
         "experiment" => experiments::run_from_cli(&args),
         "analyze" => cmd_analyze(&args),
@@ -63,12 +87,24 @@ USAGE: dynadiag <command> [options]
 
 COMMANDS
   train        --model M --method D --sparsity S [--steps N] [--seed K] ...
-  serve        --model mlp_micro|mlp_tiny [--sparsity S] [--max-batch B]
-               [--max-wait-us U] [--rate RPS] [--requests N]
+               [--checkpoint-every N] [--checkpoint-dir D] write .ddck
+               checkpoints every N steps; [--resume ckpt.ddck] continues an
+               interrupted run bit-identically (config comes from the
+               checkpoint, other overrides are ignored)
+  export       --out model.ddiag [--model mlp_micro|mlp_tiny] [--sparsity S]
+               [--train-steps N] [--seed K]
+               train + finalize a DynaDiag model (or synthesize one when
+               --train-steps is 0) and write it as a versioned, checksummed
+               .ddiag artifact (+ .json sidecar)
+  serve        --model mlp_micro|mlp_tiny|path.ddiag [--sparsity S]
+               [--max-batch B] [--max-wait-us U] [--rate RPS] [--requests N]
                [--train-steps N] [--seed K] [--out serve.json]
-               online inference with dynamic micro-batching; --train-steps
-               trains + finalizes a DynaDiag model first (else a seeded
-               synthetic model at the requested sparsity)
+               [--swap-after N --swap-to other.ddiag]
+               online inference with dynamic micro-batching; --model takes a
+               .ddiag artifact path (serve-from-disk; the file is watched and
+               hot-reloaded when replaced), --train-steps trains + finalizes
+               first, else a seeded synthetic model; --swap-after hot-swaps
+               to a second artifact after N completed requests
   experiment   <table1|table2|table8|table12|...|fig1|fig4..fig9|all> [--steps N] [--seeds K]
   analyze      --model M [--sparsity S]      small-world & BCSR analysis
   perfmodel    [--sparsity S]                A100 speedup projections
@@ -80,17 +116,48 @@ BACKENDS (--backend, default auto)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let mut cfg = RunConfig::default();
-    cfg.apply_overrides(&args.config_overrides(&["out", "verbose"]))?;
-    eprintln!(
-        "training {} with {} at S={:.2} for {} steps",
-        cfg.model,
-        cfg.method.name(),
-        cfg.sparsity,
-        cfg.steps
-    );
-    let mut trainer = Trainer::new(cfg)?;
-    let result = trainer.train()?;
+    let ckpt_every = args.usize_opt("checkpoint-every")?.unwrap_or(0);
+    let spec = if ckpt_every > 0 {
+        Some(CheckpointSpec {
+            every: ckpt_every,
+            dir: PathBuf::from(args.opt("checkpoint-dir").unwrap_or("checkpoints")),
+        })
+    } else {
+        None
+    };
+
+    let mut trainer = if let Some(resume) = args.opt("resume") {
+        let overrides = args.config_overrides(HARNESS_KEYS);
+        if !overrides.is_empty() {
+            eprintln!(
+                "note: --resume restores the checkpoint's full config; \
+                 ignoring {} CLI config override(s)",
+                overrides.len()
+            );
+        }
+        let ckpt = TrainCheckpoint::load(Path::new(resume))?;
+        eprintln!(
+            "resuming {} with {} at S={:.2} from step {}/{}",
+            ckpt.cfg.model,
+            ckpt.cfg.method.name(),
+            ckpt.cfg.sparsity,
+            ckpt.next_step,
+            ckpt.cfg.steps
+        );
+        Trainer::from_checkpoint(ckpt)?
+    } else {
+        let mut cfg = RunConfig::default();
+        cfg.apply_overrides(&args.config_overrides(HARNESS_KEYS))?;
+        eprintln!(
+            "training {} with {} at S={:.2} for {} steps",
+            cfg.model,
+            cfg.method.name(),
+            cfg.sparsity,
+            cfg.steps
+        );
+        Trainer::new(cfg)?
+    };
+    let result = trainer.train_checkpointed(spec.as_ref())?;
     let last = result.history.last().unwrap();
     println!(
         "final: train_loss={:.4} eval_loss={:.4} eval_acc={:.4} ppl={:.2} ({:.1}s, {:.2} steps/s)",
@@ -108,20 +175,32 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Resolve the `--model` option into a servable [`DiagModel`]: a `.ddiag`
+/// artifact path loads from disk; a config name synthesizes (or, with
+/// `--train-steps N`, trains + finalizes a DynaDiag model first). Returns
+/// the display label and the model. Shared by `serve` and `export`.
+fn build_serve_model(args: &Args) -> Result<(String, DiagModel)> {
     let model = args.opt("model").unwrap_or("mlp_micro");
     let sparsity: f64 = args.opt("sparsity").unwrap_or("0.9").parse()?;
-    let max_batch = args.usize_opt("max-batch")?.unwrap_or(8);
-    let max_wait_us = args.usize_opt("max-wait-us")?.unwrap_or(200) as u64;
-    let requests = args.usize_opt("requests")?.unwrap_or(512);
-    let rate: f64 = args.opt("rate").unwrap_or("0").parse()?;
     let train_steps = args.usize_opt("train-steps")?.unwrap_or(0);
     let seed = args.usize_opt("seed")?.unwrap_or(3407) as u64;
-    let cfg = mlp_config(model)?;
 
+    if Path::new(model).is_file() {
+        if train_steps > 0 {
+            bail!("--train-steps cannot be combined with --model <artifact file>");
+        }
+        let dm = DiagModel::load(Path::new(model))?;
+        eprintln!(
+            "loaded artifact {} ({}, S={:.2})",
+            model, dm.cfg.name, dm.sparsity
+        );
+        return Ok((model.to_string(), dm));
+    }
+
+    let cfg = mlp_config(model)?;
     let dm = if train_steps > 0 {
         // train a DynaDiag model end-to-end on the native backend, then
-        // serve the finalized hard-TopK diagonal model
+        // use the finalized hard-TopK diagonal model
         let mut rc = RunConfig::default();
         rc.model = model.to_string();
         rc.method = MethodKind::DynaDiag;
@@ -132,7 +211,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rc.eval_batches = 1;
         rc.seed = seed;
         eprintln!(
-            "serve: training {} (dynadiag, S={:.2}) for {} steps before serving",
+            "training {} (dynadiag, S={:.2}) for {} steps",
             model, sparsity, train_steps
         );
         let mut trainer = Trainer::new(rc)?;
@@ -141,13 +220,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         DiagModel::synth(cfg, sparsity, seed)
     };
+    Ok((model.to_string(), dm))
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let out = args
+        .opt("out")
+        .ok_or_else(|| anyhow!("export needs --out <file.ddiag>"))?;
+    let (label, dm) = build_serve_model(args)?;
+    let path = Path::new(out);
+    let sidecar = dynadiag::artifact::model::save(&dm, path)?;
+    eprintln!(
+        "exported {} (S={:.2}, diagonals/layer {:?}) -> {} (sidecar {})",
+        label,
+        dm.sparsity,
+        dm.diag_counts(),
+        path.display(),
+        sidecar.display()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let max_batch = args.usize_opt("max-batch")?.unwrap_or(8);
+    let max_wait_us = args.usize_opt("max-wait-us")?.unwrap_or(200) as u64;
+    let requests = args.usize_opt("requests")?.unwrap_or(512);
+    let rate: f64 = args.opt("rate").unwrap_or("0").parse()?;
+    let seed = args.usize_opt("seed")?.unwrap_or(3407) as u64;
+
+    // serve-from-disk: watch the artifact for replacement (hot reload).
+    // The watcher fingerprints the file BEFORE we load it, so a
+    // replacement landing between fingerprint and load is seen as a
+    // change on the first poll (a redundant same-file swap, never a
+    // silently stale model).
+    let model_arg = args.opt("model").unwrap_or("mlp_micro").to_string();
+    let mut watcher = if Path::new(&model_arg).is_file() {
+        Some(ModelWatcher::new(&model_arg))
+    } else {
+        None
+    };
+    let (label, dm) = build_serve_model(args)?;
+    let sparsity = dm.sparsity;
+    // deterministic mid-run hot swap (CI smoke / demos)
+    let reload_plan = match (args.usize_opt("swap-after")?, args.opt("swap-to")) {
+        (Some(n), Some(p)) => {
+            if n >= requests {
+                bail!(
+                    "--swap-after {} never fires: the run completes after {} requests",
+                    n,
+                    requests
+                );
+            }
+            let m = DiagModel::load(Path::new(p))?;
+            if m.sample_len() != dm.sample_len() || m.classes() != dm.classes() {
+                bail!(
+                    "--swap-to model shape ({} -> {}) differs from the serving model \
+                     ({} -> {})",
+                    m.sample_len(),
+                    m.classes(),
+                    dm.sample_len(),
+                    dm.classes()
+                );
+            }
+            Some(ReloadPlan { after_requests: n, model: m })
+        }
+        (None, None) => None,
+        _ => bail!("--swap-after and --swap-to must be given together"),
+    };
 
     let policy = BatchPolicy::new(max_batch, max_wait_us)?;
     let mut engine = ServeEngine::new(dm, policy);
     eprintln!(
         "serving {} (S={:.2}, diagonals/layer {:?}): max_batch {}, max_wait {}us, \
          {} requests at {} req/s",
-        model,
+        label,
         sparsity,
         engine.model().diag_counts(),
         max_batch,
@@ -176,19 +322,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_outstanding: cap,
         seed: seed ^ 0x10ad,
     };
-    let report = drive_load(&mut engine, &spec)?;
+    // the measured window hot-reloads two ways: the deterministic
+    // --swap-after plan, and the on-disk watcher (polled every few dozen
+    // completions — replacing the served .ddiag swaps it in mid-run)
+    let report = drive_load_reloading(&mut engine, &spec, reload_plan, watcher.as_mut())?;
     println!("{}", report.summary());
     if let Some(out) = args.opt("out") {
         let j = Json::obj(vec![
-            ("model", Json::Str(model.to_string())),
+            ("model", Json::Str(label.clone())),
             ("sparsity", Json::Num(sparsity)),
             ("max_batch", Json::Num(max_batch as f64)),
             ("max_wait_us", Json::Num(max_wait_us as f64)),
             ("rate_rps", Json::Num(rate)),
-            ("trained_steps", Json::Num(train_steps as f64)),
             ("report", report.to_json()),
         ]);
-        std::fs::write(out, j.to_string())?;
+        j.write_file(Path::new(out))?;
         eprintln!("wrote {}", out);
     }
     Ok(())

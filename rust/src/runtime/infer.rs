@@ -176,6 +176,20 @@ impl DiagModel {
         }
     }
 
+    /// Save this model as a `DDIAG` artifact (atomic rename-into-place,
+    /// JSON sidecar next to it). See [`crate::artifact::model`].
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        crate::artifact::model::save(self, path)?;
+        Ok(())
+    }
+
+    /// Load a model from a `DDIAG` artifact written by [`DiagModel::save`]
+    /// or `dynadiag export`. The loaded model serves logits bit-identical
+    /// to the one that was saved (`rust/tests/artifact_roundtrip.rs`).
+    pub fn load(path: &std::path::Path) -> Result<DiagModel> {
+        crate::artifact::model::load(path)
+    }
+
     /// Flattened length of one request sample (`tokens * patch_dim`).
     pub fn sample_len(&self) -> usize {
         self.cfg.tokens * self.cfg.patch_dim

@@ -23,6 +23,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::batcher::{BatchPolicy, MicroBatcher, PendingRequest};
+use super::reload::ModelWatcher;
 use super::stats::{LatencyHistogram, ServeReport};
 use crate::runtime::infer::DiagModel;
 use crate::runtime::native::workspace;
@@ -192,6 +193,28 @@ impl ServeEngine {
         self.execute_batch(clock, out)
     }
 
+    /// Hot-swap the served model: **drain** every queued request through
+    /// the model that was serving when it arrived (completions appended to
+    /// `out`), then atomically install `model`. No request is dropped or
+    /// reordered, and the workspace arena is untouched — a swap between
+    /// same-config models keeps the zero-fresh-allocation steady state
+    /// (`rust/tests/serve_parity.rs` pins both). Returns the retired model.
+    ///
+    /// Single-threaded by design, like the rest of the engine: "in-flight"
+    /// means queued-but-unflushed — there is never a half-executed batch
+    /// between `ServeEngine` method calls.
+    pub fn swap_model(
+        &mut self,
+        model: DiagModel,
+        clock: &dyn Clock,
+        out: &mut Vec<Completion>,
+    ) -> Result<DiagModel> {
+        while !self.batcher.is_empty() {
+            self.execute_batch(clock, out)?;
+        }
+        Ok(std::mem::replace(&mut self.model, model))
+    }
+
     fn execute_batch(&mut self, clock: &dyn Clock, out: &mut Vec<Completion>) -> Result<usize> {
         self.batcher.take_batch_into(&mut self.scratch);
         let b = self.scratch.len();
@@ -298,6 +321,14 @@ fn wait_until(clock: &RealClock, target_us: u64) {
     }
 }
 
+/// A deterministic mid-run hot reload for [`drive_load_reloading`]: once
+/// `after_requests` requests have completed, the engine drains its queue
+/// and swaps to `model`.
+pub struct ReloadPlan {
+    pub after_requests: usize,
+    pub model: DiagModel,
+}
+
 /// Drive a synthetic request stream through the engine against the real
 /// clock and report throughput + latency quantiles over the run.
 ///
@@ -309,6 +340,26 @@ fn wait_until(clock: &RealClock, target_us: u64) {
 /// back into the arena, so the measured window is allocation-free once
 /// warm.
 pub fn drive_load(engine: &mut ServeEngine, spec: &LoadSpec) -> Result<ServeReport> {
+    drive_load_reloading(engine, spec, None, None)
+}
+
+/// How many completions pass between [`ModelWatcher`] polls inside
+/// [`drive_load_reloading`] — one `stat` per stride, not per request.
+const WATCH_STRIDE: usize = 64;
+
+/// [`drive_load`] with hot reload: a scheduled [`ReloadPlan`] fires once
+/// its request count is reached, and/or a [`ModelWatcher`] is polled every
+/// [`WATCH_STRIDE`] completions so an artifact replaced on disk mid-run
+/// swaps in. Either way queued requests drain through the old model, the
+/// new model swaps in, and the stream continues without dropping or
+/// reordering anything. A watcher load error (e.g. a corrupt file) is
+/// logged and the old model keeps serving.
+pub fn drive_load_reloading(
+    engine: &mut ServeEngine,
+    spec: &LoadSpec,
+    mut reload: Option<ReloadPlan>,
+    mut watcher: Option<&mut ModelWatcher>,
+) -> Result<ServeReport> {
     let clock = RealClock::start();
     let mut rng = Rng::new(spec.seed);
     let sl = engine.model().sample_len();
@@ -321,7 +372,60 @@ pub fn drive_load(engine: &mut ServeEngine, spec: &LoadSpec) -> Result<ServeRepo
     let mut next_arrival_us: u64 = 0;
     let mut completions: Vec<Completion> = Vec::with_capacity(cap);
 
+    let mut next_watch_at = 0usize;
     while done < spec.requests {
+        // scheduled hot reload: drain + swap once the trigger count passes
+        if reload.as_ref().is_some_and(|p| done >= p.after_requests) {
+            let plan = reload.take().expect("checked above");
+            engine.swap_model(plan.model, &clock, &mut completions)?;
+            crate::info!(
+                "serve: hot reload after {} completed requests (queue drained through \
+                 the old model)",
+                done
+            );
+        }
+        // watched hot reload: poll the on-disk artifact every stride
+        if let Some(w) = watcher.as_deref_mut() {
+            if done >= next_watch_at {
+                next_watch_at = done + WATCH_STRIDE;
+                match w.poll() {
+                    Ok(Some(model)) => {
+                        // a replacement with a different request/response
+                        // shape cannot serve this stream — keep the old
+                        // model rather than aborting the run on the next
+                        // submit
+                        if model.sample_len() != engine.model().sample_len()
+                            || model.classes() != engine.model().classes()
+                        {
+                            crate::info!(
+                                "serve: ignoring {} — replacement shape ({} -> {}) \
+                                 differs from the serving model ({} -> {})",
+                                w.path().display(),
+                                model.sample_len(),
+                                model.classes(),
+                                engine.model().sample_len(),
+                                engine.model().classes()
+                            );
+                        } else {
+                            engine.swap_model(model, &clock, &mut completions)?;
+                            crate::info!(
+                                "serve: hot reload — {} replaced on disk ({} requests done)",
+                                w.path().display(),
+                                done
+                            );
+                        }
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        crate::info!(
+                            "serve: model watcher error ({:#}); keeping the old model",
+                            e
+                        )
+                    }
+                }
+            }
+        }
+
         // admit every arrival whose scheduled time has passed
         let now = clock.now_us();
         while submitted < spec.requests
@@ -468,6 +572,47 @@ mod tests {
         assert_eq!(r.requests, 24);
         assert!(r.throughput_rps > 0.0);
         assert!(r.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn swap_model_drains_queue_through_old_model() {
+        let mut e = engine(4, 1_000_000);
+        let clock = ManualClock::new();
+        let mut rng = Rng::new(21);
+        let mut out = Vec::new();
+        // two queued requests, below the ceiling: not yet due
+        let s0 = sample(&e, &mut rng);
+        let s1 = sample(&e, &mut rng);
+        let want0 = e.model().forward_logits(&s0, 1).unwrap();
+        e.submit(s0, &clock).unwrap();
+        e.submit(s1, &clock).unwrap();
+        assert_eq!(e.queue_len(), 2);
+        let replacement = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 77);
+        let old = e.swap_model(replacement, &clock, &mut out).unwrap();
+        // queue drained through the OLD model before the swap took effect
+        assert_eq!(e.queue_len(), 0);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].logits, want0, "queued request must use the pre-swap model");
+        // the retired model is returned intact (same synth as the engine's
+        // original seed-3 model), and the replacement is now installed
+        let original = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 3);
+        assert_eq!(old.layers[0].values, original.layers[0].values);
+        let installed = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 77);
+        assert_eq!(e.model().layers[0].values, installed.layers[0].values);
+        workspace::give_f32(want0);
+        for c in out.drain(..) {
+            workspace::give_f32(c.logits);
+        }
+    }
+
+    #[test]
+    fn drive_load_reloading_completes_everything() {
+        let mut e = engine(4, 200);
+        let replacement = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 5);
+        let spec = LoadSpec { requests: 24, rate_rps: 0.0, max_outstanding: 8, seed: 44 };
+        let plan = ReloadPlan { after_requests: 12, model: replacement };
+        let r = drive_load_reloading(&mut e, &spec, Some(plan), None).unwrap();
+        assert_eq!(r.requests, 24, "hot reload must not drop requests");
     }
 
     #[test]

@@ -20,19 +20,31 @@
 //! independently with batch-independent reduction order.
 //! `rust/tests/serve_parity.rs` pins batched == sequential bitwise.
 //!
-//! Entry points: the `dynadiag serve` CLI subcommand (synth model or
-//! train-then-serve), and `cargo bench --bench serve` (the rate × batch
-//! ceiling × sparsity sweep behind `results/serve_bench.json` /
-//! `BENCH_serve.json`).
+//! Entry points: the `dynadiag serve` CLI subcommand (synth model,
+//! train-then-serve, or **serve-from-disk** via `--model <file>.ddiag`),
+//! and `cargo bench --bench serve` (the rate × batch ceiling × sparsity
+//! sweep behind `results/serve_bench.json` / `BENCH_serve.json`).
+//!
+//! A running engine can **hot-reload**: [`engine::ServeEngine::swap_model`]
+//! drains the in-flight micro-batch through the old model, then installs
+//! the new one — zero requests dropped or reordered, workspace arena kept
+//! warm. [`reload::ModelWatcher`] polls a `.ddiag` artifact path and feeds
+//! replacements to the engine (publish = atomic rename, so a half-written
+//! file is never observable).
 
 pub mod batcher;
 pub mod engine;
+pub mod reload;
 pub mod stats;
 
 use anyhow::{bail, Result};
 
 pub use batcher::{BatchPolicy, MicroBatcher};
-pub use engine::{drive_load, Clock, Completion, LoadSpec, ManualClock, RealClock, ServeEngine};
+pub use engine::{
+    drive_load, drive_load_reloading, Clock, Completion, LoadSpec, ManualClock, RealClock,
+    ReloadPlan, ServeEngine,
+};
+pub use reload::ModelWatcher;
 pub use stats::{LatencyHistogram, ServeReport};
 
 use crate::runtime::infer::{mlp_config, DiagLayer, DiagModel};

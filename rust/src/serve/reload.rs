@@ -1,0 +1,143 @@
+//! Poll-based hot-reload trigger: watch a model artifact on disk and hand
+//! back a freshly loaded [`DiagModel`] when the file changes.
+//!
+//! The watcher keys on the (inode, mtime, length) fingerprint of the
+//! artifact path. Publishing a new model is a `rename` onto the watched
+//! path — exactly what [`crate::artifact::model::save`] does — so the
+//! watcher can never observe a half-written file (it sees the old complete
+//! artifact or the new complete artifact), and the rename always installs
+//! a fresh inode, so replacement is detected even when mtime resolution is
+//! too coarse to move. A fingerprint change with an
+//! unreadable/corrupt artifact is reported as an error (and the previous
+//! model keeps serving); the fingerprint is only advanced after a
+//! successful load, so a transiently broken file is retried on the next
+//! poll.
+
+use std::path::{Path, PathBuf};
+use std::time::SystemTime;
+
+use anyhow::{Context, Result};
+
+use crate::artifact::model as artifact_model;
+use crate::runtime::infer::DiagModel;
+
+/// What the watcher keys replacement detection on. The inode is the
+/// load-bearing field on unix: publishing via rename always creates a new
+/// inode, so even a same-length replacement written within the
+/// filesystem's mtime granularity is detected. mtime + length cover
+/// non-unix targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Fingerprint {
+    mtime: SystemTime,
+    len: u64,
+    ino: u64,
+}
+
+/// Watches one `.ddiag` artifact path for replacement.
+#[derive(Debug)]
+pub struct ModelWatcher {
+    path: PathBuf,
+    seen: Option<Fingerprint>,
+}
+
+impl ModelWatcher {
+    /// Start watching `path`, treating its *current* contents (if any) as
+    /// already seen — the first [`ModelWatcher::poll`] only fires after a
+    /// subsequent replacement.
+    pub fn new(path: impl Into<PathBuf>) -> ModelWatcher {
+        let path = path.into();
+        let seen = fingerprint(&path).ok();
+        ModelWatcher { path, seen }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Load and return the model if the file changed since the last
+    /// successful poll; `Ok(None)` when unchanged. Load failures leave the
+    /// fingerprint untouched, so the caller keeps serving the old model
+    /// and the next poll retries.
+    pub fn poll(&mut self) -> Result<Option<DiagModel>> {
+        let fp = fingerprint(&self.path)
+            .with_context(|| format!("watching model artifact {}", self.path.display()))?;
+        if self.seen == Some(fp) {
+            return Ok(None);
+        }
+        let model = artifact_model::load(&self.path)?;
+        self.seen = Some(fp);
+        Ok(Some(model))
+    }
+}
+
+fn fingerprint(path: &Path) -> Result<Fingerprint> {
+    let md = std::fs::metadata(path)?;
+    Ok(Fingerprint { mtime: md.modified()?, len: md.len(), ino: inode(&md) })
+}
+
+#[cfg(unix)]
+fn inode(md: &std::fs::Metadata) -> u64 {
+    use std::os::unix::fs::MetadataExt;
+    md.ino()
+}
+
+#[cfg(not(unix))]
+fn inode(_md: &std::fs::Metadata) -> u64 {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::infer::mlp_config;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn poll_fires_only_on_replacement() {
+        let dir = tmp_dir("dynadiag_watcher_test");
+        let path = dir.join("m.ddiag");
+        let cfg = mlp_config("mlp_micro").unwrap();
+        let m1 = DiagModel::synth(cfg, 0.9, 1);
+        artifact_model::save(&m1, &path).unwrap();
+
+        let mut w = ModelWatcher::new(&path);
+        assert!(w.poll().unwrap().is_none(), "current contents count as seen");
+
+        // publish a replacement (atomic rename, like `export` does); nudge
+        // the mtime in case the filesystem clock is too coarse to move
+        let m2 = DiagModel::synth(cfg, 0.9, 2);
+        artifact_model::save(&m2, &path).unwrap();
+        let now = std::time::SystemTime::now() + std::time::Duration::from_secs(2);
+        let _ = std::fs::File::options()
+            .append(true)
+            .open(&path)
+            .and_then(|f| f.set_modified(now));
+
+        let got = w.poll().unwrap().expect("replacement must be detected");
+        assert_eq!(got.layers[0].values, m2.layers[0].values);
+        assert!(w.poll().unwrap().is_none(), "no further change, no reload");
+    }
+
+    #[test]
+    fn corrupt_replacement_errors_and_retries() {
+        let dir = tmp_dir("dynadiag_watcher_corrupt_test");
+        let path = dir.join("m.ddiag");
+        let cfg = mlp_config("mlp_micro").unwrap();
+        artifact_model::save(&DiagModel::synth(cfg, 0.9, 1), &path).unwrap();
+        let mut w = ModelWatcher::new(&path);
+
+        // overwrite with garbage: fingerprint changes, load fails
+        std::fs::write(&path, b"not an artifact").unwrap();
+        assert!(w.poll().is_err());
+
+        // a good replacement afterwards is picked up (fingerprint was not
+        // advanced past the broken file)
+        artifact_model::save(&DiagModel::synth(cfg, 0.9, 2), &path).unwrap();
+        assert!(w.poll().unwrap().is_some());
+    }
+}

@@ -26,6 +26,16 @@ impl Distribution {
             _ => None,
         }
     }
+
+    /// Canonical name, round-trippable through [`Distribution::parse`]
+    /// (checkpoint serialization relies on this).
+    pub fn name(self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::Erk => "erk",
+            Distribution::ComputeFraction => "compute_fraction",
+        }
+    }
 }
 
 /// Shape of one sparse layer (rows = n_out, cols = n_in).

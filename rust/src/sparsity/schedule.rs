@@ -20,6 +20,16 @@ impl Curve {
         }
     }
 
+    /// Canonical name, round-trippable through [`Curve::parse`]
+    /// (checkpoint serialization relies on this).
+    pub fn name(self) -> &'static str {
+        match self {
+            Curve::Constant => "constant",
+            Curve::Linear => "linear",
+            Curve::Cosine => "cosine",
+        }
+    }
+
     /// Interpolation factor in [0, 1]: 0 at t=0 -> 1 at t=1.
     fn frac(self, t: f64) -> f64 {
         let t = t.clamp(0.0, 1.0);

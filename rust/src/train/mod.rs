@@ -6,4 +6,6 @@ pub mod state;
 pub mod trainer;
 
 pub use state::ParamStore;
-pub use trainer::{DataSource, EvalResult, StepMetric, TrainResult, Trainer};
+pub use trainer::{
+    CheckpointSpec, DataSource, EvalResult, StepMetric, TrainResult, Trainer,
+};

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::runtime::{ArtifactMeta, Dtype, HostTensor, IoSpec};
 use crate::tensor::Tensor;
@@ -147,85 +147,32 @@ impl ParamStore {
 
     // -- checkpointing -------------------------------------------------------
 
-    /// Serialize to a simple binary format:
-    /// [n_entries u32] then per entry: name_len u32, name bytes, dtype u8,
-    /// rank u32, dims u64*, data bytes.
+    /// Serialize to a `DDIAG` param-store container (versioned, per-section
+    /// CRC32, atomic rename-into-place — see [`crate::artifact`]). The
+    /// payload codec is shared with the full training checkpoint
+    /// ([`crate::artifact::checkpoint`]).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        let mut buf: Vec<u8> = Vec::new();
-        buf.extend((self.entries.len() as u32).to_le_bytes());
-        for (name, t) in &self.entries {
-            buf.extend((name.len() as u32).to_le_bytes());
-            buf.extend(name.as_bytes());
-            match t {
-                HostTensor::F32 { shape, data } => {
-                    buf.push(0u8);
-                    buf.extend((shape.len() as u32).to_le_bytes());
-                    for &d in shape {
-                        buf.extend((d as u64).to_le_bytes());
-                    }
-                    for &x in data {
-                        buf.extend(x.to_le_bytes());
-                    }
-                }
-                HostTensor::I32 { shape, data } => {
-                    buf.push(1u8);
-                    buf.extend((shape.len() as u32).to_le_bytes());
-                    for &d in shape {
-                        buf.extend((d as u64).to_le_bytes());
-                    }
-                    for &x in data {
-                        buf.extend(x.to_le_bytes());
-                    }
-                }
-            }
-        }
-        std::fs::write(path, buf)?;
-        Ok(())
+        use crate::artifact::{Enc, Kind, SectionWriter};
+        let mut e = Enc::new();
+        crate::artifact::checkpoint::encode_store(self, &mut e);
+        let mut w = SectionWriter::new(Kind::Store);
+        w.section("store", &e.buf);
+        w.finish_to(path)
     }
 
+    /// Load a store written by [`ParamStore::save`]. Rejects truncated,
+    /// corrupted, version-mismatched, or wrong-kind files with an
+    /// actionable error.
     pub fn load(path: &std::path::Path) -> Result<ParamStore> {
-        let buf = std::fs::read(path)?;
-        let mut pos = 0usize;
-        let rd_u32 = |b: &[u8], p: &mut usize| -> u32 {
-            let v = u32::from_le_bytes(b[*p..*p + 4].try_into().unwrap());
-            *p += 4;
-            v
-        };
-        let rd_u64 = |b: &[u8], p: &mut usize| -> u64 {
-            let v = u64::from_le_bytes(b[*p..*p + 8].try_into().unwrap());
-            *p += 8;
-            v
-        };
-        let n = rd_u32(&buf, &mut pos) as usize;
-        let mut entries = BTreeMap::new();
-        for _ in 0..n {
-            let name_len = rd_u32(&buf, &mut pos) as usize;
-            let name = String::from_utf8(buf[pos..pos + name_len].to_vec())?;
-            pos += name_len;
-            let dtype = buf[pos];
-            pos += 1;
-            let rank = rd_u32(&buf, &mut pos) as usize;
-            let shape: Vec<usize> =
-                (0..rank).map(|_| rd_u64(&buf, &mut pos) as usize).collect();
-            let count: usize = shape.iter().product();
-            let t = if dtype == 0 {
-                let mut data = Vec::with_capacity(count);
-                for _ in 0..count {
-                    data.push(f32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()));
-                    pos += 4;
-                }
-                HostTensor::F32 { shape, data }
-            } else {
-                let mut data = Vec::with_capacity(count);
-                for _ in 0..count {
-                    data.push(i32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()));
-                    pos += 4;
-                }
-                HostTensor::I32 { shape, data }
-            };
-            entries.insert(name, t);
-        }
-        Ok(ParamStore { entries })
+        use crate::artifact::{ArtifactFile, Dec, Kind};
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading param store {}", path.display()))?;
+        let f = ArtifactFile::parse(&bytes, Kind::Store)
+            .with_context(|| format!("loading param store {}", path.display()))?;
+        let mut d = Dec::new(f.section("store")?, "store");
+        let store = crate::artifact::checkpoint::decode_store(&mut d)?;
+        d.expect_end()?;
+        Ok(store)
     }
 }
 

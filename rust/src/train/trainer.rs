@@ -11,9 +11,11 @@
 //!      re-initialize regrown weights/moments.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use crate::artifact::checkpoint::TrainCheckpoint;
 use crate::config::{MethodKind, RunConfig};
 use crate::data::corpus::Corpus;
 use crate::data::VisionDataset;
@@ -116,6 +118,22 @@ pub struct TrainResult {
     pub store: ParamStore,
 }
 
+/// Periodic checkpointing policy for [`Trainer::train_checkpointed`].
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    /// Write a checkpoint after every `every` completed steps (0 = never).
+    pub every: usize,
+    /// Directory receiving `ckpt_step{N:06}.ddck` files (created if absent).
+    pub dir: PathBuf,
+}
+
+impl CheckpointSpec {
+    /// Checkpoint path for a given step cursor.
+    pub fn path_for_step(&self, next_step: usize) -> PathBuf {
+        self.dir.join(format!("ckpt_step{:06}.ddck", next_step))
+    }
+}
+
 pub struct Trainer {
     pub cfg: RunConfig,
     pub session: Rc<Session>,
@@ -131,6 +149,12 @@ pub struct Trainer {
     layer_sparsity: Vec<f64>,
     rng: Rng,
     is_lm: bool,
+    /// First step the next `train` call executes (nonzero after a resume).
+    start_step: usize,
+    /// History recorded before the resume point.
+    prior_history: Vec<StepMetric>,
+    /// Wall seconds accumulated before the resume point.
+    prior_seconds: f64,
 }
 
 impl Trainer {
@@ -209,7 +233,73 @@ impl Trainer {
             layer_sparsity,
             rng,
             is_lm,
+            start_step: 0,
+            prior_history: Vec::new(),
+            prior_seconds: 0.0,
         })
+    }
+
+    /// Rebuild a trainer from a saved checkpoint and position it to resume
+    /// at the checkpoint's step cursor. The run configuration comes from
+    /// the checkpoint itself (resume never re-guesses hyperparameters);
+    /// `train` then reproduces the uninterrupted run bit-for-bit
+    /// (`rust/tests/determinism.rs` pins this).
+    pub fn from_checkpoint(ckpt: TrainCheckpoint) -> Result<Trainer> {
+        let mut t = Trainer::new(ckpt.cfg.clone())
+            .context("rebuilding trainer from checkpoint config")?;
+        // overwrite every piece of mutable training state with the
+        // checkpointed values (Trainer::new freshly initialized them)
+        t.store = ckpt.store;
+        t.masks = ckpt.masks;
+        t.rng = Rng::from_state(ckpt.rng.0, ckpt.rng.1, ckpt.rng.2);
+        t.start_step = ckpt.next_step;
+        t.prior_history = ckpt.history;
+        t.prior_seconds = ckpt.train_seconds;
+        Ok(t)
+    }
+
+    /// Snapshot the complete mutable training state at a step boundary
+    /// into an owned [`TrainCheckpoint`] (clones the store — use
+    /// [`Trainer::save_checkpoint`] on the hot path).
+    /// `history` must hold exactly the metrics of steps `0..next_step`.
+    pub fn checkpoint(
+        &self,
+        next_step: usize,
+        history: &[StepMetric],
+        seconds: f64,
+    ) -> TrainCheckpoint {
+        TrainCheckpoint {
+            cfg: self.cfg.clone(),
+            next_step,
+            train_seconds: seconds,
+            rng: self.rng.state(),
+            store: self.store.clone(),
+            masks: self.masks.clone(),
+            history: history.to_vec(),
+        }
+    }
+
+    /// Write a checkpoint to `path` without cloning any training state
+    /// (the periodic hook runs inside the training loop; serialization
+    /// borrows the store/masks/history directly).
+    pub fn save_checkpoint(
+        &self,
+        path: &std::path::Path,
+        next_step: usize,
+        history: &[StepMetric],
+        seconds: f64,
+    ) -> Result<()> {
+        let bytes = crate::artifact::checkpoint::encode_checkpoint(
+            &self.cfg,
+            next_step,
+            seconds,
+            self.rng.state(),
+            &self.store,
+            &self.masks,
+            history,
+        );
+        crate::util::write_atomic(path, &bytes)
+            .with_context(|| format!("saving checkpoint {}", path.display()))
     }
 
     fn batch_shape(meta: &crate::runtime::ArtifactMeta) -> Result<Vec<usize>> {
@@ -345,13 +435,41 @@ impl Trainer {
 
     /// Full training run.
     pub fn train(&mut self) -> Result<TrainResult> {
+        self.train_checkpointed(None)
+    }
+
+    /// Full training run with optional periodic checkpointing. Checkpoints
+    /// are written at step boundaries *after* that step's topology update,
+    /// so the captured RNG stream and masks are exactly what the
+    /// uninterrupted run carries into the next step. Resumed runs
+    /// (see [`Trainer::from_checkpoint`]) continue from `start_step` with
+    /// the prior history prepended.
+    pub fn train_checkpointed(&mut self, ckpt: Option<&CheckpointSpec>) -> Result<TrainResult> {
         let t0 = std::time::Instant::now();
+        let prior_seconds = self.prior_seconds;
+        let start_step = self.start_step;
+        // consume the resume state: a second `train` call on the same
+        // trainer starts from step 0 again (the pre-checkpoint behavior)
+        self.start_step = 0;
+        self.prior_seconds = 0.0;
         let shape_x = Self::batch_shape(&self.train_exe.meta)?;
-        let mut history = Vec::with_capacity(self.cfg.steps);
+        let mut history = std::mem::take(&mut self.prior_history);
+        if history.len() != start_step {
+            bail!(
+                "resume state inconsistent: {} prior metrics for start step {}",
+                history.len(),
+                start_step
+            );
+        }
+        history.reserve(self.cfg.steps.saturating_sub(history.len()));
         let loss_idx = self.train_exe.meta.output_index("loss")?;
         let acc_idx = self.train_exe.meta.output_index("acc")?;
+        if let Some(spec) = ckpt {
+            std::fs::create_dir_all(&spec.dir)
+                .with_context(|| format!("creating checkpoint dir {}", spec.dir.display()))?;
+        }
 
-        for step in 0..self.cfg.steps {
+        for step in start_step..self.cfg.steps {
             let (x, y) = self.data.batch(&shape_x, step, None);
             let inputs = self.build_inputs(step, x, y)?;
             let mut outputs = self.train_exe.run(&inputs)?;
@@ -406,6 +524,14 @@ impl Trainer {
 
             if self.method.is_some() && dst::is_update_step(&self.cfg, step) {
                 self.update_topology(step)?;
+            }
+            if let Some(spec) = ckpt {
+                if spec.every > 0 && (step + 1) % spec.every == 0 && step + 1 < self.cfg.steps {
+                    let path = spec.path_for_step(step + 1);
+                    let seconds = prior_seconds + t0.elapsed().as_secs_f64();
+                    self.save_checkpoint(&path, step + 1, &history, seconds)?;
+                    crate::debug!("wrote checkpoint {}", path.display());
+                }
             }
             if crate::util::log_enabled(3) && step % 50 == 0 {
                 crate::debug!(
@@ -468,7 +594,7 @@ impl Trainer {
             final_eval,
             masks,
             finalized,
-            train_seconds: t0.elapsed().as_secs_f64(),
+            train_seconds: prior_seconds + t0.elapsed().as_secs_f64(),
             store: self.store.clone(),
         })
     }

@@ -140,17 +140,82 @@ impl Json {
         s
     }
 
+    /// Human-readable serialization: 2-space indentation, one key/element
+    /// per line. Same value model as [`Json::to_string`] (re-parses equal);
+    /// used for artifact metadata sidecars and anything ops will read.
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    /// Write pretty-printed JSON to a file atomically (temp file + rename),
+    /// so readers never observe a partial document.
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        crate::util::write_atomic(path, self.to_pretty_string().as_bytes())
+    }
+
+    fn write_num(out: &mut String, n: f64) {
+        // JSON has no NaN/Infinity literals; emit null rather than an
+        // unparseable token (a bench cell with 0 observations stays valid)
+        if !n.is_finite() {
+            out.push_str("null");
+        } else if n.fract() == 0.0 && n.abs() < 1e15 {
+            let _ = write!(out, "{}", n as i64);
+        } else {
+            let _ = write!(out, "{}", n);
+        }
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        const INDENT: &str = "  ";
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in v.iter().enumerate() {
+                    for _ in 0..=depth {
+                        out.push_str(INDENT);
+                    }
+                    x.write_pretty(out, depth + 1);
+                    if i + 1 < v.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                for _ in 0..depth {
+                    out.push_str(INDENT);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, x)) in m.iter().enumerate() {
+                    for _ in 0..=depth {
+                        out.push_str(INDENT);
+                    }
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    x.write_pretty(out, depth + 1);
+                    if i + 1 < m.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                for _ in 0..depth {
+                    out.push_str(INDENT);
+                }
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    let _ = write!(out, "{}", *n as i64);
-                } else {
-                    let _ = write!(out, "{}", n);
-                }
-            }
+            Json::Num(n) => Json::write_num(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(v) => {
                 out.push('[');
@@ -408,6 +473,37 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("nul").is_err());
         assert!(Json::parse("{} x").is_err());
+    }
+
+    #[test]
+    fn pretty_print_reparses_equal() {
+        let src = r#"{"a": [1, 2.5], "b": {"c": "x\ny"}, "d": [], "e": {}}"#;
+        let v = Json::parse(src).unwrap();
+        let pretty = v.to_pretty_string();
+        assert!(pretty.contains("\n  \"a\": ["), "{}", pretty);
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(1.0).to_string(), "1");
+    }
+
+    #[test]
+    fn write_file_is_readable_and_atomic() {
+        let dir = std::env::temp_dir().join("dynadiag_json_write_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.json");
+        let v = Json::obj(vec![("k", Json::Num(2.0))]);
+        v.write_file(&path).unwrap();
+        assert_eq!(Json::from_file(&path).unwrap(), v);
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(!name.contains(".tmp"), "leftover temp file {}", name);
+        }
     }
 
     #[test]

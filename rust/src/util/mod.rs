@@ -41,6 +41,40 @@ macro_rules! debug {
     };
 }
 
+/// Write a file atomically: bytes land in a uniquely named
+/// `<file>.tmp.<pid>.<seq>` sibling first and are `rename`d into place, so
+/// a concurrent reader sees either the old complete file or the new
+/// complete file, never a partial write — even with concurrent publishers
+/// to the same path. The temp file is removed on either failure path.
+/// Shared by the artifact writers ([`crate::artifact`]) and
+/// [`json::Json::write_file`].
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let file_name = path.file_name().ok_or_else(|| {
+        anyhow::anyhow!("path '{}' has no file name", path.display())
+    })?;
+    // unique tmp name per (process, call): two concurrent publishers to
+    // the same path must never share a tmp file, or one could rename the
+    // other's half-written bytes into place
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let tmp = path.with_file_name(format!(
+        "{}.tmp.{}.{}",
+        file_name.to_string_lossy(),
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    if let Err(e) = std::fs::write(&tmp, bytes) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("writing {}", tmp.display()));
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("renaming {} into place", path.display()));
+    }
+    Ok(())
+}
+
 /// Mean of a slice (0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

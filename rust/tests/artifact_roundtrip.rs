@@ -1,0 +1,176 @@
+//! Artifact robustness (ISSUE 4 acceptance): the `DDIAG` container must
+//! round-trip models **bitwise** (save → load → forward produces logits
+//! identical to the in-memory model) and must reject truncated, corrupted,
+//! wrong-magic, wrong-kind, and future-version files with actionable
+//! errors — a serving fleet must never load a silently wrong model.
+
+use std::path::PathBuf;
+
+use dynadiag::artifact::checkpoint::TrainCheckpoint;
+use dynadiag::artifact::{model as artifact_model, MAGIC, VERSION};
+use dynadiag::config::{MethodKind, RunConfig};
+use dynadiag::runtime::infer::{mlp_config, DiagModel};
+use dynadiag::runtime::native::workspace;
+use dynadiag::train::Trainer;
+use dynadiag::util::json::Json;
+use dynadiag::util::rng::Rng;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Save → load → forward is bitwise identical to the in-memory model, for
+/// both model configs and across sparsities.
+#[test]
+fn model_roundtrip_serves_identical_logits() {
+    let dir = tmp_dir("dynadiag_artifact_rt");
+    for (name, sparsity, seed) in
+        [("mlp_micro", 0.9, 11u64), ("mlp_micro", 0.5, 12), ("mlp_tiny", 0.9, 13)]
+    {
+        let cfg = mlp_config(name).unwrap();
+        let m = DiagModel::synth(cfg, sparsity, seed);
+        let path = dir.join(format!("{}_{}.ddiag", name, seed));
+        m.save(&path).unwrap();
+        let r = DiagModel::load(&path).unwrap();
+
+        let b = 3;
+        let mut rng = Rng::new(seed ^ 0xF00D);
+        let x: Vec<f32> = (0..b * m.sample_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let want = m.forward_logits(&x, b).unwrap();
+        let got = r.forward_logits(&x, b).unwrap();
+        assert_eq!(got, want, "{} S={} reloaded logits must be bit-identical", name, sparsity);
+        workspace::give_f32(want);
+        workspace::give_f32(got);
+    }
+}
+
+/// The sidecar JSON parses and describes the artifact.
+#[test]
+fn sidecar_describes_the_model() {
+    let dir = tmp_dir("dynadiag_artifact_sidecar");
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let m = DiagModel::synth(cfg, 0.9, 3);
+    let path = dir.join("m.ddiag");
+    let side = artifact_model::save(&m, &path).unwrap();
+    let j = Json::from_file(&side).unwrap();
+    assert_eq!(j.req("model").unwrap().as_str().unwrap(), "mlp_micro");
+    assert_eq!(j.req("format").unwrap().as_str().unwrap(), "DDIAG");
+    assert_eq!(
+        j.req("diagonals_per_layer").unwrap().as_usize_vec().unwrap(),
+        m.diag_counts()
+    );
+}
+
+/// Every corruption mode is rejected with an error naming the problem.
+#[test]
+fn corrupted_artifacts_are_rejected_with_actionable_errors() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let m = DiagModel::synth(cfg, 0.9, 7);
+    let good = artifact_model::to_bytes(&m);
+    let err_of = |bytes: &[u8]| -> String {
+        format!("{:#}", artifact_model::from_bytes(bytes).unwrap_err())
+    };
+
+    // wrong magic
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    assert!(err_of(&bad).contains("magic"), "{}", err_of(&bad));
+
+    // future version
+    let mut bad = good.clone();
+    bad[MAGIC.len() + 1] = VERSION + 3;
+    let e = err_of(&bad);
+    assert!(e.contains("newer") && e.contains("version"), "{}", e);
+
+    // truncation at many cut points: header, section table, payload, CRC.
+    // A cut landing exactly on a section boundary parses as a container
+    // but then fails the missing-section check — still a loud rejection.
+    for cut in [0, 3, MAGIC.len(), MAGIC.len() + 4, good.len() / 2, good.len() - 1] {
+        let e = err_of(&good[..cut]);
+        assert!(
+            e.contains("truncated") || e.contains("missing required section"),
+            "cut {}: {}",
+            cut,
+            e
+        );
+    }
+
+    // flipped payload bytes -> per-section CRC failure
+    for at in [good.len() / 3, good.len() / 2, good.len() - 20] {
+        let mut bad = good.clone();
+        bad[at] ^= 0x40;
+        let e = err_of(&bad);
+        // a flip can land on framing bytes instead of a payload; either
+        // way the load must fail loudly, usually with the CRC message
+        assert!(
+            e.contains("CRC32") || e.contains("truncated") || e.contains("section"),
+            "flip at {}: {}",
+            at,
+            e
+        );
+    }
+}
+
+/// A checkpoint fed to the model loader (and vice versa) errors with both
+/// kinds named instead of misparsing.
+#[test]
+fn kind_mismatch_is_named() {
+    let dir = tmp_dir("dynadiag_artifact_kinds");
+
+    // a tiny real checkpoint from a 2-step native run
+    let mut cfg = RunConfig::default();
+    cfg.model = "mlp_micro".into();
+    cfg.method = MethodKind::DynaDiag;
+    cfg.backend = "native".into();
+    cfg.steps = 2;
+    cfg.warmup = 1;
+    cfg.eval_batches = 1;
+    let trainer = Trainer::new(cfg).unwrap();
+    let ckpt = trainer.checkpoint(0, &[], 0.0);
+    let ckpt_path = dir.join("c.ddck");
+    ckpt.save(&ckpt_path).unwrap();
+
+    let e = format!("{:#}", DiagModel::load(&ckpt_path).unwrap_err());
+    assert!(e.contains("kind mismatch") && e.contains("checkpoint"), "{}", e);
+
+    let model_path = dir.join("m.ddiag");
+    DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 1)
+        .save(&model_path)
+        .unwrap();
+    let e = format!("{:#}", TrainCheckpoint::load(&model_path).unwrap_err());
+    assert!(e.contains("kind mismatch") && e.contains("model"), "{}", e);
+}
+
+/// Checkpoint files round-trip their entire payload exactly, including the
+/// RNG stream and masks.
+#[test]
+fn checkpoint_file_roundtrip_is_exact() {
+    let dir = tmp_dir("dynadiag_artifact_ckpt_rt");
+    let mut cfg = RunConfig::default();
+    cfg.model = "mlp_micro".into();
+    cfg.method = MethodKind::RigL; // masked method: nontrivial masks + rng use
+    cfg.backend = "native".into();
+    cfg.steps = 4;
+    cfg.warmup = 1;
+    cfg.eval_batches = 1;
+    let trainer = Trainer::new(cfg).unwrap();
+    let ckpt = trainer.checkpoint(0, &[], 0.5);
+    let path = dir.join("c.ddck");
+    ckpt.save(&path).unwrap();
+    let r = TrainCheckpoint::load(&path).unwrap();
+
+    assert_eq!(r.cfg.model, ckpt.cfg.model);
+    assert_eq!(r.cfg.method, ckpt.cfg.method);
+    assert_eq!(r.next_step, 0);
+    assert_eq!(r.rng, ckpt.rng);
+    assert_eq!(r.masks, ckpt.masks);
+    assert!(!r.masks.is_empty(), "masked method must checkpoint masks");
+    assert_eq!(r.store.entries.len(), ckpt.store.entries.len());
+    for (k, v) in &ckpt.store.entries {
+        let l = r.store.get(k).unwrap();
+        assert_eq!(l.shape(), v.shape(), "{}", k);
+        assert_eq!(l.as_f32().unwrap(), v.as_f32().unwrap(), "{}", k);
+    }
+}

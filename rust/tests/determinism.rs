@@ -1,16 +1,21 @@
 //! Seed determinism: the same `--seed` must reproduce a training run
 //! bit-for-bit — losses *and* the logits the finalized model serves —
-//! on both the `native` and `auto` backends (ISSUE 3 satellite).
+//! on both the `native` and `auto` backends (ISSUE 3 satellite), and a
+//! checkpointed run must resume **bit-identically** to an uninterrupted
+//! one (ISSUE 4 acceptance: params, optimizer moments, masks, and the
+//! trainer RNG stream all survive the save → load → resume cycle).
 //!
 //! This is also the sharpest probe of the workspace arena's `take_uninit`
 //! contract: run 2 executes over buffers recycled (with stale contents)
 //! from run 1, so any consumer that fails to fully overwrite an
 //! "uninitialized" take shows up here as a loss mismatch.
 
+use dynadiag::artifact::checkpoint::TrainCheckpoint;
 use dynadiag::config::{MethodKind, RunConfig};
+use dynadiag::runtime::infer::DiagModel;
 use dynadiag::runtime::native::workspace;
 use dynadiag::serve::{model_from_train, BatchPolicy, Completion, ManualClock, ServeEngine};
-use dynadiag::train::Trainer;
+use dynadiag::train::{CheckpointSpec, Trainer};
 use dynadiag::util::rng::Rng;
 
 fn run_cfg(backend: &str) -> RunConfig {
@@ -26,19 +31,13 @@ fn run_cfg(backend: &str) -> RunConfig {
     cfg
 }
 
-/// Train, then serve a fixed request set through the finalized model.
-/// Returns (per-step losses, final eval loss, served logits).
-fn train_and_serve(backend: &str) -> (Vec<f64>, f64, Vec<Vec<f32>>) {
-    let mut trainer = Trainer::new(run_cfg(backend)).unwrap();
-    let result = trainer.train().unwrap();
-    let losses: Vec<f64> = result.history.iter().map(|m| m.loss).collect();
-
-    let model = model_from_train(&result).unwrap();
+/// Serve a fixed 8-request stream (seed 777, independent of training)
+/// through `model` and return each request's logits in id order.
+fn serve_fixed(model: DiagModel) -> Vec<Vec<f32>> {
     let sl = model.sample_len();
-    let mut engine =
-        ServeEngine::new(model, BatchPolicy::new(3, u64::MAX / 2).unwrap());
+    let mut engine = ServeEngine::new(model, BatchPolicy::new(3, u64::MAX / 2).unwrap());
     let clock = ManualClock::new();
-    let mut rng = Rng::new(777); // request stream seeded independently of training
+    let mut rng = Rng::new(777);
     let mut out: Vec<Completion> = Vec::new();
     for _ in 0..8 {
         let mut x = workspace::take_uninit_f32(sl);
@@ -55,7 +54,17 @@ fn train_and_serve(backend: &str) -> (Vec<f64>, f64, Vec<Vec<f32>>) {
     for c in out {
         logits[c.id as usize] = c.logits;
     }
-    (losses, result.final_eval.loss, logits)
+    logits
+}
+
+/// Train, then serve a fixed request set through the finalized model.
+/// Returns (per-step losses, final eval loss, served logits).
+fn train_and_serve(backend: &str) -> (Vec<f64>, f64, Vec<Vec<f32>>) {
+    let mut trainer = Trainer::new(run_cfg(backend)).unwrap();
+    let result = trainer.train().unwrap();
+    let losses: Vec<f64> = result.history.iter().map(|m| m.loss).collect();
+    let model = model_from_train(&result).unwrap();
+    (losses, result.final_eval.loss, serve_fixed(model))
 }
 
 #[test]
@@ -79,4 +88,105 @@ fn same_seed_reproduces_losses_and_served_logits() {
             workspace::give_f32(l);
         }
     }
+}
+
+/// The ISSUE 4 acceptance bar: save → load → resume is bit-identical to
+/// the uninterrupted same-seed run — per-step losses, the final eval, and
+/// the logits the finalized model serves — including a round trip of the
+/// finalized model itself through the `DDIAG` artifact.
+#[test]
+fn checkpoint_resume_is_bit_identical_to_uninterrupted_run() {
+    let (full_losses, full_eval, full_logits) = train_and_serve("native");
+
+    // the same run, writing a checkpoint every 3 steps (-> steps 3 and 6)
+    let dir = std::env::temp_dir().join("dynadiag_resume_test_ckpts");
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = CheckpointSpec { every: 3, dir: dir.clone() };
+    let mut t = Trainer::new(run_cfg("native")).unwrap();
+    let chk = t.train_checkpointed(Some(&spec)).unwrap();
+    assert_eq!(
+        chk.history.iter().map(|m| m.loss).collect::<Vec<_>>(),
+        full_losses,
+        "writing checkpoints must not perturb the run"
+    );
+
+    // "kill" the run, restart from the step-6 checkpoint on disk
+    let ckpt = TrainCheckpoint::load(&spec.path_for_step(6)).unwrap();
+    assert_eq!(ckpt.next_step, 6);
+    assert_eq!(ckpt.history.len(), 6);
+    let mut resumed = Trainer::from_checkpoint(ckpt).unwrap();
+    let result = resumed.train().unwrap();
+
+    let losses: Vec<f64> = result.history.iter().map(|m| m.loss).collect();
+    assert_eq!(
+        losses, full_losses,
+        "resumed run's full loss history must be bit-identical"
+    );
+    assert_eq!(
+        result.final_eval.loss, full_eval,
+        "resumed final eval must be bit-identical"
+    );
+
+    // the resumed model serves the same logits — and survives a trip
+    // through the on-disk model artifact unchanged
+    let model = model_from_train(&result).unwrap();
+    let path = dir.join("resumed_model.ddiag");
+    model.save(&path).unwrap();
+    let reloaded = DiagModel::load(&path).unwrap();
+    let served_resumed = serve_fixed(model);
+    let served_reloaded = serve_fixed(reloaded);
+    assert_eq!(
+        served_resumed, full_logits,
+        "resumed run must serve bit-identical logits"
+    );
+    assert_eq!(
+        served_reloaded, full_logits,
+        "artifact-reloaded model must serve bit-identical logits"
+    );
+
+    for batch in [full_logits, served_resumed, served_reloaded] {
+        for l in batch {
+            workspace::give_f32(l);
+        }
+    }
+}
+
+/// Masked-method resume: SET consumes the trainer RNG at every topology
+/// update (random regrow draws + RandomSmall re-init), so this run only
+/// resumes bit-identically if the checkpoint restores the PRNG stream
+/// exactly — the sharpest probe of the `rng` checkpoint section.
+#[test]
+fn masked_method_resume_restores_the_rng_stream() {
+    let mut cfg = run_cfg("native");
+    cfg.method = MethodKind::Set;
+    cfg.update_every = 2; // topology updates at steps 2, 4 (under 75% of 8)
+
+    let full: Vec<f64> = Trainer::new(cfg.clone())
+        .unwrap()
+        .train()
+        .unwrap()
+        .history
+        .iter()
+        .map(|m| m.loss)
+        .collect();
+
+    let dir = std::env::temp_dir().join("dynadiag_resume_set_ckpts");
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = CheckpointSpec { every: 3, dir };
+    Trainer::new(cfg)
+        .unwrap()
+        .train_checkpointed(Some(&spec))
+        .unwrap();
+
+    // resume from step 3: the step-4 update replays from the restored rng
+    let ckpt = TrainCheckpoint::load(&spec.path_for_step(3)).unwrap();
+    let resumed: Vec<f64> = Trainer::from_checkpoint(ckpt)
+        .unwrap()
+        .train()
+        .unwrap()
+        .history
+        .iter()
+        .map(|m| m.loss)
+        .collect();
+    assert_eq!(resumed, full, "SET resume must replay the exact rng stream");
 }

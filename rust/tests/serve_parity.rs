@@ -9,6 +9,9 @@
 //!    zero fresh workspace-buffer allocations per request (payloads, the
 //!    coalesced batch, all forward intermediates, and the per-request
 //!    logits recycle through the arena).
+//! 3. **Hot reload (ISSUE 4):** swapping the served model drains in-flight
+//!    requests through the old model, drops/reorders nothing, and keeps
+//!    the zero-fresh-allocation steady state across the swap.
 
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::workspace;
@@ -146,4 +149,87 @@ fn steady_state_serving_is_allocation_free() {
         "warm serving loop allocated {} fresh buffers over 34 requests (reused {})",
         fresh, reused
     );
+}
+
+/// ISSUE 4 acceptance: a hot model swap drops zero requests — the pending
+/// micro-batch drains through the *old* model, later requests execute on
+/// the *new* one, ids stay FIFO — and the steady-state zero-allocation
+/// contract holds across the swap (the workspace arena stays warm).
+#[test]
+fn hot_reload_drops_nothing_and_stays_allocation_free() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model_a = DiagModel::synth(cfg, 0.9, 41);
+    let model_b = DiagModel::synth(cfg, 0.9, 42);
+    let sl = model_a.sample_len();
+
+    let mut rng = Rng::new(7);
+    let probe: Vec<f32> = (0..sl).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let want_a = model_a.forward_logits(&probe, 1).unwrap();
+    let want_b = model_b.forward_logits(&probe, 1).unwrap();
+    assert_ne!(want_a, want_b, "distinct models must be distinguishable");
+
+    let mut engine = ServeEngine::new(
+        model_a.clone(),
+        BatchPolicy::new(4, u64::MAX / 2).unwrap(),
+    );
+    let clock = ManualClock::new();
+    let mut out: Vec<Completion> = Vec::new();
+
+    // one full round: 6 requests on A (batch of 4 + 2 queued at swap time),
+    // swap to B (drains the 2 through A), 6 requests on B, drain.
+    let mut round = |engine: &mut ServeEngine, out: &mut Vec<Completion>| {
+        for i in 0..6 {
+            clock.set(i);
+            engine.submit(workspace::take_copy_f32(&probe), &clock).unwrap();
+            engine.poll(&clock, out).unwrap();
+        }
+        assert_eq!(engine.queue_len(), 2, "two requests pending at swap time");
+        let old = engine
+            .swap_model(model_b.clone(), &clock, out)
+            .unwrap();
+        assert_eq!(engine.queue_len(), 0, "swap must drain the queue");
+        for i in 6..12 {
+            clock.set(i);
+            engine.submit(workspace::take_copy_f32(&probe), &clock).unwrap();
+            engine.poll(&clock, out).unwrap();
+        }
+        while engine.queue_len() > 0 {
+            engine.flush(&clock, out).unwrap();
+        }
+        // swap back to (a clone of) A so the next round is identical
+        let drained = engine.swap_model(old, &clock, out).unwrap();
+        drop(drained);
+        assert_eq!(out.len(), 12, "hot reload must not drop requests");
+        let ids: Vec<u64> = out.iter().map(|c| c.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "hot reload must not reorder completions");
+        for (i, c) in out.drain(..).enumerate() {
+            let want = if i < 6 { &want_a } else { &want_b };
+            assert_eq!(
+                &c.logits, want,
+                "request {}: pre-swap requests use the old model, post-swap the new",
+                i
+            );
+            workspace::give_f32(c.logits);
+        }
+    };
+
+    // two warm rounds fill the arena (both models share every buffer
+    // shape), then the measured rounds must allocate nothing fresh
+    round(&mut engine, &mut out);
+    round(&mut engine, &mut out);
+    workspace::reset_stats();
+    round(&mut engine, &mut out);
+    round(&mut engine, &mut out);
+    let (fresh, reused) = workspace::stats();
+    assert!(reused > 0, "the reload rounds never touched the workspace");
+    assert_eq!(
+        fresh, 0,
+        "hot reload broke the steady state: {} fresh allocations (reused {})",
+        fresh, reused
+    );
+
+    workspace::give_f32(want_a);
+    workspace::give_f32(want_b);
 }
