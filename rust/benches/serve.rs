@@ -21,10 +21,13 @@
 //! Set `DYNADIAG_BENCH_FAST=1` (CI does) for a trimmed sweep with the
 //! same JSON schema.
 
+use std::time::Duration;
+
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::workspace;
 use dynadiag::serve::{
-    drive_load, BatchPolicy, Completion, LoadSpec, ManualClock, ServeEngine,
+    drive_load, drive_load_sharded, BatchPolicy, Completion, LoadSpec, ManualClock, ServeEngine,
+    ShardCompletion, ShardPolicy, ShardedServer, Submit,
 };
 use dynadiag::util::json::Json;
 use dynadiag::util::rng::Rng;
@@ -67,6 +70,56 @@ fn parity_mismatches(sparsity: f64, max_batch: usize, n: usize, seed: u64) -> us
         workspace::give_f32(want);
         workspace::give_f32(c.logits);
     }
+    mismatches
+}
+
+/// Sharded parity: every request served through an N-shard server must be
+/// bitwise identical to a direct batch-of-1 forward. Returns mismatches.
+fn sharded_parity_mismatches(shards: usize, n: usize, seed: u64) -> usize {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, seed);
+    let sl = model.sample_len();
+    let mut rng = Rng::new(seed ^ 0xcafe);
+    let samples: Vec<Vec<f32>> =
+        (0..n).map(|_| (0..sl).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+
+    let mut server = ShardedServer::start(
+        model.clone(),
+        ShardPolicy {
+            shards,
+            batch: BatchPolicy::new(4, 200).unwrap(),
+            max_outstanding: 16,
+        },
+    )
+    .unwrap();
+    let mut out: Vec<ShardCompletion> = Vec::new();
+    let mut mismatches = 0usize;
+    let mut submitted = 0usize;
+    let mut done = 0usize;
+    while done < n {
+        while submitted < n && server.outstanding() < 16 {
+            let x = workspace::take_copy_f32(&samples[submitted]);
+            match server.try_submit((submitted % (2 * shards)) as u64, x).unwrap() {
+                Submit::Ok(_) => submitted += 1,
+                Submit::Full(x) => {
+                    workspace::give_f32(x);
+                    break;
+                }
+            }
+        }
+        server.poll_completions(&mut out, Some(Duration::from_millis(50))).unwrap();
+        for c in out.drain(..) {
+            let want = model.forward_logits(&samples[c.id as usize], 1).unwrap();
+            if c.logits != want {
+                mismatches += 1;
+            }
+            workspace::give_f32(want);
+            let shard = c.shard;
+            server.recycle_logits(shard, c.logits);
+            done += 1;
+        }
+    }
+    server.shutdown().unwrap();
     mismatches
 }
 
@@ -175,6 +228,123 @@ fn main() {
         }
     }
 
+    // -- shard sweep -----------------------------------------------------
+    // The tentpole acceptance axis: N engine shards behind the shared
+    // admission queue, closed-loop, per-shard zero-alloc gate, and a
+    // throughput gate at 2 shards on multi-core hosts. mlp_tiny gives each
+    // request enough arithmetic that the speedup measures compute scaling,
+    // not channel overhead.
+    println!("\n== shard sweep: closed-loop throughput x shard count ==");
+    let shard_counts: &[usize] = if fast { &[1, 2] } else { &[1, 2, 4] };
+    // always mlp_tiny: the speedup gate must measure compute scaling, and
+    // mlp_micro requests are so cheap that channel overhead would dominate
+    // on small CI runners — fast mode trims the request count instead
+    let shard_requests = if fast { 384 } else { 2048 };
+    let shard_model = "mlp_tiny";
+    let shard_ceiling = 8usize;
+    let mut shard_cells: Vec<Json> = Vec::new();
+    let mut shard_alloc_failed = false;
+    let mut thru_by_shards: Vec<(usize, f64)> = Vec::new();
+    {
+        let cfg = mlp_config(shard_model).unwrap();
+        for &n_shards in shard_counts {
+            let dm = DiagModel::synth(cfg, 0.9, 8_000 + n_shards as u64);
+            let cap = (4 * shard_ceiling * n_shards).max(32);
+            let mut server = ShardedServer::start(
+                dm,
+                ShardPolicy {
+                    shards: n_shards,
+                    batch: BatchPolicy::new(shard_ceiling, 200).unwrap(),
+                    max_outstanding: cap,
+                },
+            )
+            .unwrap();
+            let clients = 4 * n_shards;
+            let warm = LoadSpec {
+                requests: 2 * cap,
+                rate_rps: 0.0,
+                max_outstanding: cap,
+                seed: 5,
+            };
+            drive_load_sharded(&mut server, &warm, clients, None, None).unwrap();
+            server.reset_metrics();
+            let spec = LoadSpec {
+                requests: shard_requests,
+                rate_rps: 0.0,
+                max_outstanding: cap,
+                seed: 11,
+            };
+            let r = drive_load_sharded(&mut server, &spec, clients, None, None).unwrap();
+            let per_shard = server.shard_stats().unwrap();
+            server.shutdown().unwrap();
+            let shard_fresh: Vec<usize> = per_shard.iter().map(|s| s.fresh_allocs).collect();
+            println!(
+                "{:<10} shards {:>2}: {:>9.0} rps, p50 {:>7.3} ms p99 {:>7.3} ms, \
+                 mean batch {:.2}, fresh/shard {:?}",
+                shard_model, n_shards, r.throughput_rps, r.p50_ms, r.p99_ms, r.mean_batch,
+                shard_fresh
+            );
+            if shard_fresh.iter().any(|&f| f > 0) || r.fresh_allocs > 0 {
+                shard_alloc_failed = true;
+            }
+            if r.p99_ms > p99_bound_ms {
+                p99_failed = true;
+            }
+            thru_by_shards.push((n_shards, r.throughput_rps));
+            let mut cell = std::collections::BTreeMap::new();
+            cell.insert("model".to_string(), Json::Str(shard_model.to_string()));
+            cell.insert("sparsity".to_string(), Json::Num(0.9));
+            cell.insert("max_batch".to_string(), Json::Num(shard_ceiling as f64));
+            cell.insert(
+                "fresh_per_shard".to_string(),
+                Json::Arr(shard_fresh.iter().map(|&f| Json::Num(f as f64)).collect()),
+            );
+            if let Json::Obj(rep) = r.to_json() {
+                cell.extend(rep);
+            }
+            shard_cells.push(Json::Obj(cell));
+        }
+    }
+    let speedup_2x = {
+        let t1 = thru_by_shards.iter().find(|&&(s, _)| s == 1).map(|&(_, t)| t);
+        let t2 = thru_by_shards.iter().find(|&&(s, _)| s == 2).map(|&(_, t)| t);
+        match (t1, t2) {
+            (Some(t1), Some(t2)) if t1 > 0.0 => Some(t2 / t1),
+            _ => None,
+        }
+    };
+    let speedup_min: f64 = std::env::var("DYNADIAG_SHARD_SPEEDUP_MIN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.5);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut shard_speedup_failed = false;
+    if let Some(sp) = speedup_2x {
+        println!(
+            "shard speedup at 2 shards vs 1: {:.2}x (gate {:.2}x, {} cores)",
+            sp, speedup_min, cores
+        );
+        // the gate only makes sense with >= 2 physical cores to scale onto
+        if cores >= 2 && dynadiag::kernels::pool::num_threads() >= 2 && sp < speedup_min {
+            shard_speedup_failed = true;
+        }
+    }
+
+    // sharded parity: bitwise identical to sequential at every shard count
+    println!("\n== sharded parity: N-shard serving == sequential (bitwise) ==");
+    let mut shard_parity_failed = false;
+    for &n_shards in shard_counts {
+        let bad = sharded_parity_mismatches(n_shards, 32, 2_000 + n_shards as u64);
+        println!(
+            "  shards {}: {}",
+            n_shards,
+            if bad == 0 { "ok".to_string() } else { format!("{} MISMATCHES", bad) }
+        );
+        if bad > 0 {
+            shard_parity_failed = true;
+        }
+    }
+
     let out_dir = std::path::PathBuf::from("results");
     std::fs::create_dir_all(&out_dir).expect("mkdir results");
     let json = Json::obj(vec![
@@ -183,19 +353,45 @@ fn main() {
         ("threads", Json::Num(dynadiag::kernels::pool::num_threads() as f64)),
         ("p99_bound_ms", Json::Num(p99_bound_ms)),
         ("cells", Json::Arr(cells)),
+        ("shard_sweep", Json::Arr(shard_cells)),
+        (
+            "shard_speedup_2x",
+            speedup_2x.map(Json::Num).unwrap_or(Json::Null),
+        ),
     ]);
     let path = out_dir.join("serve_bench.json");
     std::fs::write(&path, json.to_string()).expect("write serve_bench.json");
     println!("\nwrote {}", path.display());
 
-    // -- gates 2 + 3 -----------------------------------------------------
+    // -- gates 2..6 ------------------------------------------------------
     if alloc_failed {
         eprintln!("FAIL: a measured serving window performed fresh workspace allocations");
+        std::process::exit(1);
+    }
+    if shard_alloc_failed {
+        eprintln!(
+            "FAIL: a shard (or the driver) allocated fresh workspace buffers in a measured window"
+        );
         std::process::exit(1);
     }
     if p99_failed {
         eprintln!("FAIL: a cell exceeded the p99 ceiling of {} ms", p99_bound_ms);
         std::process::exit(1);
     }
-    println!("PASS: parity bitwise, zero steady-state allocations, p99 under {} ms", p99_bound_ms);
+    if shard_parity_failed {
+        eprintln!("FAIL: sharded serving diverged from sequential inference");
+        std::process::exit(1);
+    }
+    if shard_speedup_failed {
+        eprintln!(
+            "FAIL: 2-shard throughput gain below {:.2}x on a {}-core host",
+            speedup_min, cores
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "PASS: parity bitwise (single + sharded), zero steady-state allocations per shard, \
+         p99 under {} ms",
+        p99_bound_ms
+    );
 }

@@ -19,7 +19,7 @@
 //! autovectorizes; the seed implementation's per-element carry branch
 //! (`if c == n_in { c = 0 }`) defeated that.
 
-use super::pool::{num_threads, parallel_rows, TASK_GRAIN_FLOPS};
+use super::pool::{effective_threads, parallel_rows, TASK_GRAIN_FLOPS};
 
 /// `y[i] += v[i] * x[(i + off) mod n]` over `i in 0..y.len()`, decomposed
 /// into contiguous wrap segments (`v.len() == y.len()`, `x.len() == n`).
@@ -220,7 +220,7 @@ pub fn grad_values(
     assert_eq!(dvalues.len(), k * n_out, "diag grad_values: dvalues length");
     dvalues.fill(0.0);
 
-    let threads = num_threads();
+    let threads = effective_threads();
     let total_flops = 2usize
         .saturating_mul(b)
         .saturating_mul(k)

@@ -69,6 +69,36 @@ pub fn num_threads() -> usize {
     })
 }
 
+thread_local! {
+    /// Per-dispatcher-thread parallelism budget (0 = uncapped). Serving
+    /// shards set this to their core share so N shards dispatching kernels
+    /// concurrently fan out to ≈ `num_threads()` tasks total instead of
+    /// N × `num_threads()` (oversubscription turns into context-switch
+    /// thrash, not throughput).
+    static LOCAL_THREAD_CAP: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Cap the parallelism of dispatches issued *from the calling thread* to
+/// `cap` tasks (`0` lifts the cap). The sharded serving runtime calls this
+/// once per shard thread with `num_threads() / shards`; a cap of 1 makes
+/// every kernel launched from this thread run inline — no pool wakeups on
+/// a shard that owns a single core.
+pub fn set_local_thread_cap(cap: usize) {
+    LOCAL_THREAD_CAP.with(|c| c.set(cap));
+}
+
+/// The calling thread's effective parallelism: [`num_threads`] bounded by
+/// [`set_local_thread_cap`]. Every grain decision in this module and the
+/// kernel layer sizes against this, not the global count.
+pub fn effective_threads() -> usize {
+    let cap = LOCAL_THREAD_CAP.with(|c| c.get());
+    if cap == 0 {
+        num_threads()
+    } else {
+        cap.min(num_threads()).max(1)
+    }
+}
+
 /// The job closure, lifetime-erased. Soundness: see module docs.
 #[derive(Clone, Copy)]
 struct JobPtr(*const (dyn Fn(usize) + Sync));
@@ -210,7 +240,7 @@ fn dispatch(n_tasks: usize, job: &(dyn Fn(usize) + Sync)) {
         return;
     }
     let p = pool();
-    if p.workers == 0 || n_tasks == 1 || IN_TASK.with(|f| f.get()) {
+    if p.workers == 0 || n_tasks == 1 || effective_threads() == 1 || IN_TASK.with(|f| f.get()) {
         for t in 0..n_tasks {
             job(t);
         }
@@ -288,7 +318,7 @@ fn dispatch(n_tasks: usize, job: &(dyn Fn(usize) + Sync)) {
 fn run_scoped(n_tasks: usize, job: &(dyn Fn(usize) + Sync)) {
     use std::sync::atomic::{AtomicUsize, Ordering};
     let next = AtomicUsize::new(0);
-    let helpers = num_threads().min(n_tasks).saturating_sub(1);
+    let helpers = effective_threads().min(n_tasks).saturating_sub(1);
     let run_tasks = || {
         IN_TASK.with(|f| f.set(true));
         loop {
@@ -329,7 +359,7 @@ where
         return;
     }
     let total_flops = rows.saturating_mul(flops_per_row.max(1));
-    let n_tasks = num_threads()
+    let n_tasks = effective_threads()
         .min(total_flops / TASK_GRAIN_FLOPS)
         .min(rows)
         .min(MAX_TASKS)
@@ -446,6 +476,42 @@ mod tests {
         let mut data = vec![0u8; 32];
         parallel_rows(&mut data, 4, 1 << 20, |_, chunk| chunk.fill(1));
         assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn local_thread_cap_of_one_runs_inline() {
+        // a capped thread must execute every task itself — the shard-aware
+        // accounting that keeps N shards from oversubscribing the pool
+        std::thread::spawn(|| {
+            set_local_thread_cap(1);
+            assert_eq!(effective_threads(), 1);
+            let caller = std::thread::current().id();
+            let mut data = vec![0u32; 64];
+            parallel_rows(&mut data, 4, 1 << 20, |_, chunk| {
+                assert_eq!(std::thread::current().id(), caller, "must run inline");
+                chunk.fill(1);
+            });
+            assert!(data.iter().all(|&v| v == 1));
+            set_local_thread_cap(0);
+            assert_eq!(effective_threads(), num_threads());
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn local_thread_cap_is_per_thread() {
+        std::thread::spawn(|| {
+            set_local_thread_cap(1);
+            // a sibling thread is unaffected by this thread's cap
+            std::thread::spawn(|| {
+                assert_eq!(effective_threads(), num_threads());
+            })
+            .join()
+            .unwrap();
+        })
+        .join()
+        .unwrap();
     }
 
     #[test]

@@ -190,6 +190,18 @@ impl DiagModel {
         crate::artifact::model::load(path)
     }
 
+    /// Approximate resident bytes of the weights (telemetry for shard
+    /// startup logs; excludes allocator overhead).
+    pub fn approx_bytes(&self) -> usize {
+        let layer_bytes: usize = self
+            .layers
+            .iter()
+            .map(|l| 4 * (l.values.len() + l.bias.len()) + 8 * l.offsets.len())
+            .sum();
+        4 * (self.embed_w.len() + self.embed_b.len() + self.head_w.len() + self.head_b.len())
+            + layer_bytes
+    }
+
     /// Flattened length of one request sample (`tokens * patch_dim`).
     pub fn sample_len(&self) -> usize {
         self.cfg.tokens * self.cfg.patch_dim

@@ -54,7 +54,10 @@ pub struct MicroBatcher {
 
 impl MicroBatcher {
     pub fn new(policy: BatchPolicy) -> MicroBatcher {
-        MicroBatcher { policy, queue: VecDeque::new() }
+        // pre-size to a couple of ceilings so the steady-state queue never
+        // reallocates (per-shard engines sit in zero-alloc serving loops)
+        let cap = policy.max_batch.saturating_mul(2).max(8);
+        MicroBatcher { policy, queue: VecDeque::with_capacity(cap) }
     }
 
     pub fn policy(&self) -> &BatchPolicy {

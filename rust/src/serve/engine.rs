@@ -8,7 +8,10 @@
 //! `poll` flushes one due micro-batch — and time is injected through the
 //! [`Clock`] trait: [`RealClock`] for serving/benches, [`ManualClock`] for
 //! deterministic tests (execution appears instantaneous, so latency equals
-//! queue wait exactly).
+//! queue wait exactly). Scaling beyond one core happens one level up:
+//! [`crate::serve::shard`] runs N engines on N threads, each owning a
+//! shared-weight model replica ([`std::sync::Arc<DiagModel>`]) and its own
+//! thread-local workspace arena.
 //!
 //! Memory: request payloads, the coalesced batch buffer, and per-request
 //! logits all cycle through the workspace arena
@@ -18,6 +21,7 @@
 //! asserts this via the arena counters.
 
 use std::cell::Cell;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -34,7 +38,10 @@ pub trait Clock {
     fn now_us(&self) -> u64;
 }
 
-/// Wall-clock time since construction.
+/// Wall-clock time since construction. `Clone` shares the origin, so the
+/// sharded runtime hands every shard thread the same epoch and latency
+/// stamps stay comparable across shards.
+#[derive(Clone)]
 pub struct RealClock {
     start: Instant,
 }
@@ -94,8 +101,12 @@ impl Completion {
 }
 
 /// Online inference engine: one model + one micro-batcher + metrics.
+///
+/// The model is held behind an [`Arc`] so N shard engines replicate it for
+/// free (shared read-only weights, one copy in memory); a single-engine
+/// caller never notices — [`ServeEngine::new`] wraps a plain model.
 pub struct ServeEngine {
-    model: DiagModel,
+    model: Arc<DiagModel>,
     batcher: MicroBatcher,
     hist: LatencyHistogram,
     /// batch-size occurrence counts, index = coalesced size (0 unused)
@@ -109,6 +120,12 @@ pub struct ServeEngine {
 
 impl ServeEngine {
     pub fn new(model: DiagModel, policy: BatchPolicy) -> ServeEngine {
+        ServeEngine::with_shared(Arc::new(model), policy)
+    }
+
+    /// Build an engine over an already-shared model — the sharded runtime
+    /// clones one `Arc` per shard instead of duplicating the weights.
+    pub fn with_shared(model: Arc<DiagModel>, policy: BatchPolicy) -> ServeEngine {
         let max_batch = policy.max_batch;
         ServeEngine {
             model,
@@ -132,6 +149,11 @@ impl ServeEngine {
 
     pub fn completed(&self) -> u64 {
         self.completed
+    }
+
+    /// Micro-batches executed since the last [`ServeEngine::reset_metrics`].
+    pub fn batches(&self) -> u64 {
+        self.batches
     }
 
     /// Clear metrics (after a warmup window) without touching the queue.
@@ -205,10 +227,10 @@ impl ServeEngine {
     /// between `ServeEngine` method calls.
     pub fn swap_model(
         &mut self,
-        model: DiagModel,
+        model: Arc<DiagModel>,
         clock: &dyn Clock,
         out: &mut Vec<Completion>,
-    ) -> Result<DiagModel> {
+    ) -> Result<Arc<DiagModel>> {
         while !self.batcher.is_empty() {
             self.execute_batch(clock, out)?;
         }
@@ -267,6 +289,7 @@ impl ServeEngine {
         let requests = self.completed;
         let batches = self.batches;
         ServeReport {
+            shards: 1,
             requests,
             batches,
             duration_s,
@@ -326,7 +349,7 @@ fn wait_until(clock: &RealClock, target_us: u64) {
 /// and swaps to `model`.
 pub struct ReloadPlan {
     pub after_requests: usize,
-    pub model: DiagModel,
+    pub model: Arc<DiagModel>,
 }
 
 /// Drive a synthetic request stream through the engine against the real
@@ -343,13 +366,21 @@ pub fn drive_load(engine: &mut ServeEngine, spec: &LoadSpec) -> Result<ServeRepo
     drive_load_reloading(engine, spec, None, None)
 }
 
-/// How many completions pass between [`ModelWatcher`] polls inside
-/// [`drive_load_reloading`] — one `stat` per stride, not per request.
-const WATCH_STRIDE: usize = 64;
+/// How many completions pass between [`ModelWatcher`] polls inside the
+/// load drivers (this one and `shard::drive_load_sharded`) — one `stat` +
+/// head read per stride, not per request.
+pub(crate) const WATCH_STRIDE: usize = 64;
+
+/// One exponential inter-arrival gap (µs, >= 1) of a Poisson process at
+/// `rate_rps` — the absolute-schedule step shared by both load drivers.
+pub(crate) fn poisson_gap_us(rng: &mut Rng, rate_rps: f64) -> u64 {
+    let u = rng.f64().max(1e-12);
+    ((-u.ln() / rate_rps * 1e6).ceil() as u64).max(1)
+}
 
 /// [`drive_load`] with hot reload: a scheduled [`ReloadPlan`] fires once
 /// its request count is reached, and/or a [`ModelWatcher`] is polled every
-/// [`WATCH_STRIDE`] completions so an artifact replaced on disk mid-run
+/// `WATCH_STRIDE` completions so an artifact replaced on disk mid-run
 /// swaps in. Either way queued requests drain through the old model, the
 /// new model swaps in, and the stream continues without dropping or
 /// reordering anything. A watcher load error (e.g. a corrupt file) is
@@ -388,40 +419,14 @@ pub fn drive_load_reloading(
         if let Some(w) = watcher.as_deref_mut() {
             if done >= next_watch_at {
                 next_watch_at = done + WATCH_STRIDE;
-                match w.poll() {
-                    Ok(Some(model)) => {
-                        // a replacement with a different request/response
-                        // shape cannot serve this stream — keep the old
-                        // model rather than aborting the run on the next
-                        // submit
-                        if model.sample_len() != engine.model().sample_len()
-                            || model.classes() != engine.model().classes()
-                        {
-                            crate::info!(
-                                "serve: ignoring {} — replacement shape ({} -> {}) \
-                                 differs from the serving model ({} -> {})",
-                                w.path().display(),
-                                model.sample_len(),
-                                model.classes(),
-                                engine.model().sample_len(),
-                                engine.model().classes()
-                            );
-                        } else {
-                            engine.swap_model(model, &clock, &mut completions)?;
-                            crate::info!(
-                                "serve: hot reload — {} replaced on disk ({} requests done)",
-                                w.path().display(),
-                                done
-                            );
-                        }
-                    }
-                    Ok(None) => {}
-                    Err(e) => {
-                        crate::info!(
-                            "serve: model watcher error ({:#}); keeping the old model",
-                            e
-                        )
-                    }
+                let (sl, classes) = (engine.model().sample_len(), engine.model().classes());
+                if let Some(model) = w.poll_compatible(sl, classes) {
+                    engine.swap_model(Arc::new(model), &clock, &mut completions)?;
+                    crate::info!(
+                        "serve: hot reload — {} replaced on disk ({} requests done)",
+                        w.path().display(),
+                        done
+                    );
                 }
             }
         }
@@ -445,9 +450,7 @@ pub fn drive_load_reloading(
             outstanding += 1;
             if spec.rate_rps > 0.0 {
                 // exponential inter-arrival gap on the absolute schedule
-                let u = rng.f64().max(1e-12);
-                let gap_us = (-u.ln() / spec.rate_rps * 1e6).ceil() as u64;
-                next_arrival_us += gap_us.max(1);
+                next_arrival_us += poisson_gap_us(&mut rng, spec.rate_rps);
             }
         }
 
@@ -588,7 +591,7 @@ mod tests {
         e.submit(s1, &clock).unwrap();
         assert_eq!(e.queue_len(), 2);
         let replacement = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 77);
-        let old = e.swap_model(replacement, &clock, &mut out).unwrap();
+        let old = e.swap_model(Arc::new(replacement), &clock, &mut out).unwrap();
         // queue drained through the OLD model before the swap took effect
         assert_eq!(e.queue_len(), 0);
         assert_eq!(out.len(), 2);
@@ -610,7 +613,7 @@ mod tests {
         let mut e = engine(4, 200);
         let replacement = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 5);
         let spec = LoadSpec { requests: 24, rate_rps: 0.0, max_outstanding: 8, seed: 44 };
-        let plan = ReloadPlan { after_requests: 12, model: replacement };
+        let plan = ReloadPlan { after_requests: 12, model: Arc::new(replacement) };
         let r = drive_load_reloading(&mut e, &spec, Some(plan), None).unwrap();
         assert_eq!(r.requests, 24, "hot reload must not drop requests");
     }

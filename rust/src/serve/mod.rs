@@ -22,19 +22,29 @@
 //!
 //! Entry points: the `dynadiag serve` CLI subcommand (synth model,
 //! train-then-serve, or **serve-from-disk** via `--model <file>.ddiag`),
-//! and `cargo bench --bench serve` (the rate × batch ceiling × sparsity
-//! sweep behind `results/serve_bench.json` / `BENCH_serve.json`).
+//! and `cargo bench --bench serve` (the rate × batch ceiling × sparsity ×
+//! shard sweep behind `results/serve_bench.json` / `BENCH_serve.json`).
+//!
+//! One engine is single-threaded by design; [`shard`] scales it out:
+//! `serve --shards N` runs N engines on N threads behind a shared
+//! admission front door with a global outstanding cap, sticky per-client
+//! routing (FIFO per client preserved), per-shard warm arenas, and
+//! shard-aware kernel-pool accounting. Per-shard latency histograms merge
+//! into one [`stats::ServeReport`].
 //!
 //! A running engine can **hot-reload**: [`engine::ServeEngine::swap_model`]
 //! drains the in-flight micro-batch through the old model, then installs
 //! the new one — zero requests dropped or reordered, workspace arena kept
-//! warm. [`reload::ModelWatcher`] polls a `.ddiag` artifact path and feeds
-//! replacements to the engine (publish = atomic rename, so a half-written
-//! file is never observable).
+//! warm; [`shard::ShardedServer::swap_shared`] broadcasts the same drain
+//! protocol to every shard. [`reload::ModelWatcher`] polls a `.ddiag`
+//! artifact path and feeds replacements in (publish = atomic rename, so a
+//! half-written file is never observable; the fingerprint includes a
+//! content CRC so even a same-length same-mtime replacement is caught).
 
 pub mod batcher;
 pub mod engine;
 pub mod reload;
+pub mod shard;
 pub mod stats;
 
 use anyhow::{bail, Result};
@@ -45,6 +55,10 @@ pub use engine::{
     ReloadPlan, ServeEngine,
 };
 pub use reload::ModelWatcher;
+pub use shard::{
+    drive_load_sharded, ShardCompletion, ShardedServer, ShardPolicy, ShardReloadPlan,
+    ShardStats, Submit,
+};
 pub use stats::{LatencyHistogram, ServeReport};
 
 use crate::runtime::infer::{mlp_config, DiagLayer, DiagModel};

@@ -1,13 +1,18 @@
 //! Poll-based hot-reload trigger: watch a model artifact on disk and hand
 //! back a freshly loaded [`DiagModel`] when the file changes.
 //!
-//! The watcher keys on the (inode, mtime, length) fingerprint of the
-//! artifact path. Publishing a new model is a `rename` onto the watched
+//! The watcher keys on the (inode, mtime, length, head-CRC) fingerprint of
+//! the artifact path. Publishing a new model is a `rename` onto the watched
 //! path — exactly what [`crate::artifact::model::save`] does — so the
 //! watcher can never observe a half-written file (it sees the old complete
-//! artifact or the new complete artifact), and the rename always installs
-//! a fresh inode, so replacement is detected even when mtime resolution is
-//! too coarse to move. A fingerprint change with an
+//! artifact or the new complete artifact), and on unix the rename always
+//! installs a fresh inode, so replacement is detected even when mtime
+//! resolution is too coarse to move. On targets where `inode()` reports 0
+//! (non-unix), a same-length replacement inside one mtime granule would be
+//! invisible to metadata alone — so the fingerprint also folds in a CRC32
+//! of the file's first 4 KiB (`HEAD_CRC_LEN`), which reaches into the
+//! `embed` weight section of any model artifact and therefore differs
+//! between any two real models. A fingerprint change with an
 //! unreadable/corrupt artifact is reported as an error (and the previous
 //! model keeps serving); the fingerprint is only advanced after a
 //! successful load, so a transiently broken file is retried on the next
@@ -21,16 +26,24 @@ use anyhow::{Context, Result};
 use crate::artifact::model as artifact_model;
 use crate::runtime::infer::DiagModel;
 
+/// How many leading bytes the content CRC covers. Deep enough to reach
+/// past the fixed `DDIAG` header and the `arch` section into the `embed`
+/// weights (which differ between any two trained/synthesized models),
+/// small enough that a poll stays a metadata stat plus one 4 KiB read.
+const HEAD_CRC_LEN: usize = 4096;
+
 /// What the watcher keys replacement detection on. The inode is the
 /// load-bearing field on unix: publishing via rename always creates a new
 /// inode, so even a same-length replacement written within the
-/// filesystem's mtime granularity is detected. mtime + length cover
-/// non-unix targets.
+/// filesystem's mtime granularity is detected. On targets where `inode()`
+/// is a constant 0, `head_crc` carries that duty: a same-length,
+/// same-mtime atomic replacement still changes the content CRC.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 struct Fingerprint {
     mtime: SystemTime,
     len: u64,
     ino: u64,
+    head_crc: u32,
 }
 
 /// Watches one `.ddiag` artifact path for replacement.
@@ -54,6 +67,38 @@ impl ModelWatcher {
         &self.path
     }
 
+    /// [`ModelWatcher::poll`] specialized for a serving loop: returns a
+    /// replacement only when one is present AND matches the serving
+    /// request/response shape. Shape mismatches and watcher errors are
+    /// logged and swallowed (the old model keeps serving; errors retry on
+    /// the next poll). Shared by the single-engine and sharded load
+    /// drivers so the two cannot drift.
+    pub fn poll_compatible(&mut self, sample_len: usize, classes: usize) -> Option<DiagModel> {
+        match self.poll() {
+            Ok(Some(model)) => {
+                if model.sample_len() != sample_len || model.classes() != classes {
+                    crate::info!(
+                        "serve: ignoring {} — replacement shape ({} -> {}) differs from \
+                         the serving model ({} -> {})",
+                        self.path.display(),
+                        model.sample_len(),
+                        model.classes(),
+                        sample_len,
+                        classes
+                    );
+                    None
+                } else {
+                    Some(model)
+                }
+            }
+            Ok(None) => None,
+            Err(e) => {
+                crate::info!("serve: model watcher error ({:#}); keeping the old model", e);
+                None
+            }
+        }
+    }
+
     /// Load and return the model if the file changed since the last
     /// successful poll; `Ok(None)` when unchanged. Load failures leave the
     /// fingerprint untouched, so the caller keeps serving the old model
@@ -72,7 +117,28 @@ impl ModelWatcher {
 
 fn fingerprint(path: &Path) -> Result<Fingerprint> {
     let md = std::fs::metadata(path)?;
-    Ok(Fingerprint { mtime: md.modified()?, len: md.len(), ino: inode(&md) })
+    Ok(Fingerprint {
+        mtime: md.modified()?,
+        len: md.len(),
+        ino: inode(&md),
+        head_crc: head_crc(path)?,
+    })
+}
+
+/// CRC32 of the first [`HEAD_CRC_LEN`] bytes (fewer for shorter files).
+fn head_crc(path: &Path) -> Result<u32> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = [0u8; HEAD_CRC_LEN];
+    let mut filled = 0usize;
+    while filled < HEAD_CRC_LEN {
+        let n = f.read(&mut buf[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+    }
+    Ok(crate::artifact::crc32(&buf[..filled]))
 }
 
 #[cfg(unix)]
@@ -139,5 +205,48 @@ mod tests {
         // advanced past the broken file)
         artifact_model::save(&DiagModel::synth(cfg, 0.9, 2), &path).unwrap();
         assert!(w.poll().unwrap().is_some());
+    }
+
+    /// The coarse-mtime replacement path: overwrite the artifact *in
+    /// place* (same inode on unix), with a same-length replacement, then
+    /// force the mtime back to the original — every metadata field the old
+    /// fingerprint used is now identical, and only the head CRC can tell
+    /// the files apart.
+    #[test]
+    fn same_length_same_mtime_in_place_replacement_is_detected() {
+        let dir = tmp_dir("dynadiag_watcher_coarse_mtime_test");
+        let path = dir.join("m.ddiag");
+        let cfg = mlp_config("mlp_micro").unwrap();
+        let m1 = DiagModel::synth(cfg, 0.9, 11);
+        let m2 = DiagModel::synth(cfg, 0.9, 12);
+        let b1 = crate::artifact::model::to_bytes(&m1);
+        let b2 = crate::artifact::model::to_bytes(&m2);
+        assert_eq!(
+            b1.len(),
+            b2.len(),
+            "same config + sparsity must serialize to the same length"
+        );
+        assert_ne!(b1, b2, "distinct models must have distinct bytes");
+
+        std::fs::write(&path, &b1).unwrap();
+        let mtime0 = std::fs::metadata(&path).unwrap().modified().unwrap();
+        let mut w = ModelWatcher::new(&path);
+        assert!(w.poll().unwrap().is_none(), "initial contents are seen");
+
+        // in-place overwrite keeps the inode; restoring mtime0 simulates a
+        // replacement landing within one coarse-mtime granule
+        std::fs::write(&path, &b2).unwrap();
+        std::fs::File::options()
+            .append(true)
+            .open(&path)
+            .and_then(|f| f.set_modified(mtime0))
+            .unwrap();
+
+        let got = w
+            .poll()
+            .unwrap()
+            .expect("head CRC must catch a same-length same-mtime replacement");
+        assert_eq!(got.layers[0].values, m2.layers[0].values);
+        assert!(w.poll().unwrap().is_none(), "fingerprint advanced");
     }
 }

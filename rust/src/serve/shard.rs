@@ -1,0 +1,872 @@
+//! Multi-shard concurrent serving runtime: N [`ServeEngine`] shards on N
+//! threads behind one admission front door.
+//!
+//! The single-threaded engine tops out at one core no matter how fast the
+//! diag kernels are. This runtime scales it horizontally:
+//!
+//! * **Shared admission, sticky routing.** Every request enters through
+//!   [`ShardedServer::try_submit_at`], which enforces one *global*
+//!   outstanding cap (backpressure) and routes by `client % shards`. A
+//!   client's requests always land on the same shard, whose inbox and
+//!   engine are both strictly FIFO — so **per-client ordering is
+//!   preserved end to end** while different clients run concurrently.
+//! * **Shared weights, private everything else.** Each shard owns a
+//!   [`ServeEngine`] over an `Arc<DiagModel>` replica (one weight copy in
+//!   memory), its own [`super::batcher::MicroBatcher`], and — because the
+//!   workspace arena is thread-local — its own warm buffer arena.
+//! * **Zero-alloc steady state per shard.** Payload and logits buffers
+//!   cross threads, which would slowly drain one arena into another; two
+//!   recycle lanes close the loop. Each completion ships a spare
+//!   sample-length buffer back to the driver (balancing the payload the
+//!   shard just absorbed), and each submit carries a consumed logits
+//!   buffer back to its shard (balancing the logits the shard emitted).
+//!   In steady state neither side performs fresh workspace allocations —
+//!   `rust/tests/native_steady_state.rs` gates this per shard. (Queue
+//!   nodes live in pre-grown `VecDeque`s, outside the arena contract.)
+//! * **Broadcast hot reload.** [`ShardedServer::swap_shared`] enqueues the
+//!   replacement on every shard inbox. Inboxes are FIFO, so each shard
+//!   first executes everything admitted before the swap — the engine
+//!   drains its queue **through the old model** — then installs the new
+//!   one. Nothing is dropped or reordered; requests admitted after the
+//!   broadcast deterministically serve from the new model.
+//! * **Shard-aware kernel accounting.** Each shard thread caps its kernel
+//!   parallelism at `num_threads() / shards`
+//!   ([`crate::kernels::pool::set_local_thread_cap`]), so N shards
+//!   dispatching concurrently fan out to ≈ one machine's worth of tasks
+//!   instead of N.
+//!
+//! Per-shard latency histograms merge into one [`ServeReport`]
+//! ([`super::stats::LatencyHistogram::merge`]); `benches/serve.rs` sweeps
+//! the shard axis and gates ≥1.5x throughput at 2 shards on multi-core
+//! hosts, with logits bit-identical to sequential execution at every
+//! shard count (`rust/tests/serve_parity.rs`).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::batcher::BatchPolicy;
+use super::engine::{
+    poisson_gap_us, Clock, Completion, LoadSpec, RealClock, ServeEngine, WATCH_STRIDE,
+};
+use super::reload::ModelWatcher;
+use super::stats::{LatencyHistogram, ServeReport};
+use crate::kernels::pool;
+use crate::runtime::infer::DiagModel;
+use crate::runtime::native::workspace;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Message queue (std-only MPSC that stops allocating once warm)
+// ---------------------------------------------------------------------------
+
+/// Mutex+condvar queue over a `VecDeque`. Unlike `std::sync::mpsc` (which
+/// heap-allocates a node per send), the ring buffer grows to its
+/// steady-state capacity once and then recycles — in keeping with the
+/// serving layer's allocation discipline.
+struct MsgQueue<T> {
+    q: Mutex<VecDeque<T>>,
+    cv: Condvar,
+}
+
+impl<T> MsgQueue<T> {
+    fn new() -> MsgQueue<T> {
+        MsgQueue { q: Mutex::new(VecDeque::with_capacity(64)), cv: Condvar::new() }
+    }
+
+    fn push(&self, t: T) {
+        self.q.lock().unwrap().push_back(t);
+        self.cv.notify_one();
+    }
+
+    fn try_pop(&self) -> Option<T> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    fn pop(&self) -> T {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(t) = g.pop_front() {
+                return t;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn pop_timeout(&self, d: Duration) -> Option<T> {
+        let deadline = Instant::now() + d;
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(t) = g.pop_front() {
+                return Some(t);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _timed_out) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+struct ShardRequest {
+    /// Global request id (assigned by the admission front door).
+    id: u64,
+    client: u64,
+    arrival_us: u64,
+    x: Vec<f32>,
+    /// A consumed logits buffer returned to this shard's arena — the
+    /// driver→shard half of the cross-thread recycle loop.
+    recycle: Option<Vec<f32>>,
+}
+
+enum ShardMsg {
+    Request(ShardRequest),
+    /// Hot reload: drain the queue through the current model, then install
+    /// this one.
+    Swap(Arc<DiagModel>),
+    /// Clear engine metrics and this shard thread's workspace counters
+    /// (brackets a measured window).
+    ResetMetrics,
+    /// Reply with a [`ShardStats`] snapshot on the stats queue.
+    Report,
+    /// Flush whatever is queued, then exit the shard thread.
+    Shutdown,
+}
+
+/// One finished request, as surfaced by [`ShardedServer::poll_completions`].
+/// `logits` is a pooled buffer — hand it back with
+/// [`ShardedServer::recycle_logits`] (preferred: it returns to the owning
+/// shard's arena) or `workspace::give_f32`.
+#[derive(Debug)]
+pub struct ShardCompletion {
+    pub id: u64,
+    pub client: u64,
+    pub shard: usize,
+    pub arrival_us: u64,
+    pub done_us: u64,
+    pub logits: Vec<f32>,
+    /// Sample-length buffer the shard returns to the driver's arena (the
+    /// shard→driver half of the recycle loop); recycled inside
+    /// `poll_completions`, empty by the time the caller sees this.
+    spare: Vec<f32>,
+}
+
+impl ShardCompletion {
+    pub fn latency_us(&self) -> u64 {
+        self.done_us.saturating_sub(self.arrival_us)
+    }
+}
+
+/// One shard's metrics snapshot for a measured window.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    pub shard: usize,
+    pub completed: u64,
+    pub batches: u64,
+    /// Fresh workspace allocations on the shard thread since the last
+    /// [`ShardedServer::reset_metrics`] — the per-shard zero-alloc gate.
+    pub fresh_allocs: usize,
+    pub reused_buffers: usize,
+    pub hist: LatencyHistogram,
+    pub batch_sizes: Vec<u64>,
+}
+
+// ---------------------------------------------------------------------------
+// Shard worker
+// ---------------------------------------------------------------------------
+
+fn shard_loop(
+    shard: usize,
+    model: Arc<DiagModel>,
+    policy: BatchPolicy,
+    thread_cap: usize,
+    inbox: Arc<MsgQueue<ShardMsg>>,
+    completions: Arc<MsgQueue<ShardCompletion>>,
+    stats_q: Arc<MsgQueue<ShardStats>>,
+    clock: RealClock,
+) {
+    pool::set_local_thread_cap(thread_cap);
+    let sl = model.sample_len();
+    let mut engine = ServeEngine::with_shared(model, policy);
+    // (global id, client) of queued requests; the engine is strictly FIFO,
+    // so this deque runs exactly parallel to its internal queue
+    let mut meta: VecDeque<(u64, u64)> = VecDeque::with_capacity(64);
+    let mut done: Vec<Completion> = Vec::with_capacity(16);
+
+    let mut running = true;
+    while running {
+        while let Some(msg) = inbox.try_pop() {
+            running &= handle_msg(
+                shard, msg, &mut engine, &mut meta, &mut done, &completions, &stats_q, &clock,
+            );
+        }
+        if !running {
+            break;
+        }
+        let now = clock.now_us();
+        if engine.due(now) {
+            engine.poll(&clock, &mut done).expect("shard engine poll");
+            ship(shard, sl, &mut meta, &mut done, &completions);
+            continue;
+        }
+        // idle until the next event: the oldest request's flush deadline,
+        // or (when the queue is empty) the next inbox message
+        let msg = match engine.next_deadline_us() {
+            Some(d) => {
+                let now = clock.now_us();
+                if d <= now {
+                    continue;
+                }
+                match inbox.pop_timeout(Duration::from_micros(d - now)) {
+                    Some(m) => m,
+                    None => continue, // deadline reached: loop flushes it
+                }
+            }
+            None => inbox.pop(),
+        };
+        running &= handle_msg(
+            shard, msg, &mut engine, &mut meta, &mut done, &completions, &stats_q, &clock,
+        );
+        // a flush may have become due while handling; the loop top re-checks
+        ship(shard, sl, &mut meta, &mut done, &completions);
+    }
+}
+
+/// Process one control/request message. Returns `false` on shutdown.
+#[allow(clippy::too_many_arguments)]
+fn handle_msg(
+    shard: usize,
+    msg: ShardMsg,
+    engine: &mut ServeEngine,
+    meta: &mut VecDeque<(u64, u64)>,
+    done: &mut Vec<Completion>,
+    completions: &Arc<MsgQueue<ShardCompletion>>,
+    stats_q: &Arc<MsgQueue<ShardStats>>,
+    clock: &RealClock,
+) -> bool {
+    let sl = engine.model().sample_len();
+    match msg {
+        ShardMsg::Request(r) => {
+            if let Some(buf) = r.recycle {
+                workspace::give_f32(buf);
+            }
+            meta.push_back((r.id, r.client));
+            engine
+                .submit_at(r.x, r.arrival_us)
+                .expect("admission validated the sample length");
+        }
+        ShardMsg::Swap(model) => {
+            // drain everything queued through the model it was admitted
+            // under, then install the replacement
+            let _retired = engine.swap_model(model, clock, done).expect("swap drain");
+            ship(shard, sl, meta, done, completions);
+        }
+        ShardMsg::ResetMetrics => {
+            engine.reset_metrics();
+            workspace::reset_stats();
+        }
+        ShardMsg::Report => {
+            let (fresh, reused) = workspace::stats();
+            stats_q.push(ShardStats {
+                shard,
+                completed: engine.completed(),
+                batches: engine.batches(),
+                fresh_allocs: fresh,
+                reused_buffers: reused,
+                hist: engine.histogram().clone(),
+                batch_sizes: engine.batch_size_counts().to_vec(),
+            });
+        }
+        ShardMsg::Shutdown => {
+            while engine.queue_len() > 0 {
+                engine.flush(clock, done).expect("shutdown flush");
+            }
+            ship(shard, sl, meta, done, completions);
+            return false;
+        }
+    }
+    true
+}
+
+/// Forward engine completions to the driver, pairing each with its global
+/// id/client (FIFO — the engine completes in submission order) and a spare
+/// sample-length buffer from this shard's arena (in steady state, the
+/// payload buffer the engine just recycled).
+fn ship(
+    shard: usize,
+    sl: usize,
+    meta: &mut VecDeque<(u64, u64)>,
+    done: &mut Vec<Completion>,
+    completions: &Arc<MsgQueue<ShardCompletion>>,
+) {
+    for c in done.drain(..) {
+        let (id, client) = meta.pop_front().expect("completion without admission metadata");
+        let spare = workspace::take_uninit_f32(sl);
+        completions.push(ShardCompletion {
+            id,
+            client,
+            shard,
+            arrival_us: c.arrival_us,
+            done_us: c.done_us,
+            logits: c.logits,
+            spare,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+/// Sizing of a [`ShardedServer`].
+#[derive(Clone, Copy, Debug)]
+pub struct ShardPolicy {
+    /// Engine shards (threads). 1 is legal — the same runtime shape with a
+    /// single worker, which the parity tests compare against.
+    pub shards: usize,
+    /// Per-shard micro-batching policy.
+    pub batch: BatchPolicy,
+    /// Global admission cap: [`ShardedServer::try_submit_at`] refuses new
+    /// work while this many requests are in flight across all shards.
+    pub max_outstanding: usize,
+}
+
+/// Outcome of a submit attempt under the global outstanding cap.
+pub enum Submit {
+    /// Admitted, with the request's global id.
+    Ok(u64),
+    /// Backpressured — the payload comes back untouched; retry after
+    /// draining completions.
+    Full(Vec<f32>),
+}
+
+/// N serving shards behind one admission front door. Drive it directly
+/// (`try_submit_at` / `poll_completions`) or through
+/// [`drive_load_sharded`]. Call [`ShardedServer::shutdown`] when done —
+/// dropping without it leaks parked shard threads until process exit.
+pub struct ShardedServer {
+    inboxes: Vec<Arc<MsgQueue<ShardMsg>>>,
+    completions: Arc<MsgQueue<ShardCompletion>>,
+    stats_q: Arc<MsgQueue<ShardStats>>,
+    handles: Vec<JoinHandle<()>>,
+    clock: RealClock,
+    sample_len: usize,
+    classes: usize,
+    max_outstanding: usize,
+    outstanding: usize,
+    next_id: u64,
+    /// Consumed logits buffers awaiting return to their shard's arena.
+    freelists: Vec<Vec<Vec<f32>>>,
+}
+
+impl ShardedServer {
+    pub fn start(model: DiagModel, policy: ShardPolicy) -> Result<ShardedServer> {
+        ShardedServer::start_shared(Arc::new(model), policy)
+    }
+
+    /// Start over an already-shared model (no weight copy per shard).
+    pub fn start_shared(model: Arc<DiagModel>, policy: ShardPolicy) -> Result<ShardedServer> {
+        if policy.shards == 0 {
+            bail!("ShardedServer: shards must be >= 1");
+        }
+        let thread_cap = (pool::num_threads() / policy.shards).max(1);
+        let clock = RealClock::start();
+        let completions: Arc<MsgQueue<ShardCompletion>> = Arc::new(MsgQueue::new());
+        let stats_q: Arc<MsgQueue<ShardStats>> = Arc::new(MsgQueue::new());
+        let sample_len = model.sample_len();
+        let classes = model.classes();
+        crate::info!(
+            "sharded serve: {} shards × {} kernel thread(s), shared weights ≈ {} KiB",
+            policy.shards,
+            thread_cap,
+            model.approx_bytes() / 1024
+        );
+        let mut inboxes = Vec::with_capacity(policy.shards);
+        let mut handles = Vec::with_capacity(policy.shards);
+        for shard in 0..policy.shards {
+            let inbox: Arc<MsgQueue<ShardMsg>> = Arc::new(MsgQueue::new());
+            let h = std::thread::Builder::new()
+                .name(format!("dynadiag-shard-{}", shard))
+                .spawn({
+                    let inbox = Arc::clone(&inbox);
+                    let completions = Arc::clone(&completions);
+                    let stats_q = Arc::clone(&stats_q);
+                    let model = Arc::clone(&model);
+                    let clock = clock.clone();
+                    let batch = policy.batch;
+                    move || {
+                        shard_loop(
+                            shard, model, batch, thread_cap, inbox, completions, stats_q, clock,
+                        )
+                    }
+                })
+                .map_err(|e| anyhow!("spawning shard {}: {}", shard, e))?;
+            inboxes.push(inbox);
+            handles.push(h);
+        }
+        Ok(ShardedServer {
+            freelists: vec![Vec::new(); policy.shards],
+            inboxes,
+            completions,
+            stats_q,
+            handles,
+            clock,
+            sample_len,
+            classes,
+            max_outstanding: policy.max_outstanding.max(1),
+            outstanding: 0,
+            next_id: 0,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.inboxes.len()
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Requests admitted but not yet surfaced by `poll_completions`.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// µs since server start (the epoch every latency stamp shares).
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Submit with the arrival stamped "now".
+    pub fn try_submit(&mut self, client: u64, x: Vec<f32>) -> Result<Submit> {
+        let now = self.clock.now_us();
+        self.try_submit_at(client, x, now)
+    }
+
+    /// Admission front door: enforce the global outstanding cap, assign a
+    /// global id, and route to `client % shards` (sticky, so per-client
+    /// FIFO holds). The explicit `arrival_us` lets a load driver charge
+    /// admission stalls to the request (no coordinated omission).
+    pub fn try_submit_at(&mut self, client: u64, x: Vec<f32>, arrival_us: u64) -> Result<Submit> {
+        if x.len() != self.sample_len {
+            bail!(
+                "sharded submit: sample length {} != model sample_len {}",
+                x.len(),
+                self.sample_len
+            );
+        }
+        if self.outstanding >= self.max_outstanding {
+            return Ok(Submit::Full(x));
+        }
+        let shard = (client % self.inboxes.len() as u64) as usize;
+        let id = self.next_id;
+        self.next_id += 1;
+        let recycle = self.freelists[shard].pop();
+        self.inboxes[shard].push(ShardMsg::Request(ShardRequest {
+            id,
+            client,
+            arrival_us,
+            x,
+            recycle,
+        }));
+        self.outstanding += 1;
+        Ok(Submit::Ok(id))
+    }
+
+    /// Fail fast when a shard thread has died: a panicked shard would
+    /// otherwise turn every driver wait into an infinite hang (its
+    /// completions never arrive, its stats reply never comes).
+    fn check_alive(&self) -> Result<()> {
+        for (i, h) in self.handles.iter().enumerate() {
+            if h.is_finished() {
+                bail!(
+                    "shard {} thread exited unexpectedly (panicked?); \
+                     serving cannot continue",
+                    i
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain finished requests into `out`; with `wait`, block up to that
+    /// long for the first one. Each completion's spare buffer is recycled
+    /// into the calling thread's arena before it is surfaced. Returns how
+    /// many were appended; errors if a shard thread has died (rather than
+    /// letting the caller wait forever for completions that cannot come).
+    pub fn poll_completions(
+        &mut self,
+        out: &mut Vec<ShardCompletion>,
+        wait: Option<Duration>,
+    ) -> Result<usize> {
+        let mut n = 0usize;
+        if let Some(d) = wait {
+            match self.completions.pop_timeout(d) {
+                Some(c) => {
+                    out.push(self.absorb(c));
+                    n += 1;
+                }
+                None => {
+                    self.check_alive()?;
+                    return Ok(0);
+                }
+            }
+        }
+        while let Some(c) = self.completions.try_pop() {
+            out.push(self.absorb(c));
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    fn absorb(&mut self, mut c: ShardCompletion) -> ShardCompletion {
+        workspace::give_f32(std::mem::take(&mut c.spare));
+        self.outstanding -= 1;
+        c
+    }
+
+    /// Return a consumed logits buffer toward `shard`'s arena (it rides
+    /// along with a future submit to that shard).
+    pub fn recycle_logits(&mut self, shard: usize, logits: Vec<f32>) {
+        if shard < self.freelists.len() {
+            self.freelists[shard].push(logits);
+        }
+    }
+
+    /// Broadcast a hot reload to every shard: each drains its queue
+    /// through the old model, then swaps — no request dropped or
+    /// reordered, and requests admitted after this call serve from the
+    /// replacement. A replacement whose request/response shape differs
+    /// from the serving model is rejected here (admission keeps
+    /// validating against the original shape, so letting it through would
+    /// panic the shard workers on the next request).
+    pub fn swap_model(&mut self, model: DiagModel) -> Result<()> {
+        self.swap_shared(Arc::new(model))
+    }
+
+    /// [`ShardedServer::swap_model`] without re-wrapping an already-shared
+    /// replacement.
+    pub fn swap_shared(&mut self, model: Arc<DiagModel>) -> Result<()> {
+        if model.sample_len() != self.sample_len || model.classes() != self.classes {
+            bail!(
+                "sharded hot reload: replacement shape ({} -> {}) differs from the \
+                 serving model ({} -> {})",
+                model.sample_len(),
+                model.classes(),
+                self.sample_len,
+                self.classes
+            );
+        }
+        for inbox in &self.inboxes {
+            inbox.push(ShardMsg::Swap(Arc::clone(&model)));
+        }
+        Ok(())
+    }
+
+    /// Clear every shard's engine metrics and workspace counters (bracket
+    /// a measured window; drain completions first so the counters only see
+    /// the window).
+    pub fn reset_metrics(&mut self) {
+        for inbox in &self.inboxes {
+            inbox.push(ShardMsg::ResetMetrics);
+        }
+    }
+
+    /// Snapshot per-shard metrics (blocks until every shard replies; the
+    /// engines keep accumulating, so this is non-destructive). Errors if a
+    /// shard thread died instead of waiting forever for its reply.
+    pub fn shard_stats(&mut self) -> Result<Vec<ShardStats>> {
+        for inbox in &self.inboxes {
+            inbox.push(ShardMsg::Report);
+        }
+        let mut out: Vec<ShardStats> = Vec::with_capacity(self.inboxes.len());
+        while out.len() < self.inboxes.len() {
+            match self.stats_q.pop_timeout(Duration::from_millis(200)) {
+                Some(s) => out.push(s),
+                None => self.check_alive()?,
+            }
+        }
+        out.sort_by_key(|s| s.shard);
+        Ok(out)
+    }
+
+    /// Merge per-shard metrics into one [`ServeReport`] for a measured
+    /// window of `duration_s` seconds. `driver_fresh`/`driver_reused` are
+    /// the *driver thread's* workspace deltas over the same window (the
+    /// shards contribute their own).
+    pub fn report(
+        &mut self,
+        duration_s: f64,
+        driver_fresh: usize,
+        driver_reused: usize,
+    ) -> Result<ServeReport> {
+        let stats = self.shard_stats()?;
+        let mut hist = LatencyHistogram::new();
+        let mut requests = 0u64;
+        let mut batches = 0u64;
+        let mut fresh = driver_fresh;
+        let mut reused = driver_reused;
+        for s in &stats {
+            hist.merge(&s.hist);
+            requests += s.completed;
+            batches += s.batches;
+            fresh += s.fresh_allocs;
+            reused += s.reused_buffers;
+        }
+        Ok(ServeReport {
+            shards: stats.len(),
+            requests,
+            batches,
+            duration_s,
+            throughput_rps: if duration_s > 0.0 { requests as f64 / duration_s } else { 0.0 },
+            mean_batch: if batches > 0 { requests as f64 / batches as f64 } else { 0.0 },
+            p50_ms: hist.quantile_us(0.50) as f64 / 1e3,
+            p95_ms: hist.quantile_us(0.95) as f64 / 1e3,
+            p99_ms: hist.quantile_us(0.99) as f64 / 1e3,
+            mean_ms: hist.mean_us() / 1e3,
+            max_ms: hist.max_us() as f64 / 1e3,
+            fresh_allocs: fresh,
+            reused_buffers: reused,
+        })
+    }
+
+    /// Stop every shard (each flushes its queue first) and join the
+    /// threads. Completions that were still in flight are drained,
+    /// recycled, and returned.
+    pub fn shutdown(mut self) -> Result<Vec<ShardCompletion>> {
+        for inbox in &self.inboxes {
+            inbox.push(ShardMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            h.join().map_err(|_| anyhow!("a shard thread panicked"))?;
+        }
+        let mut rest = Vec::new();
+        while let Some(c) = self.completions.try_pop() {
+            let c = self.absorb(c);
+            rest.push(c);
+        }
+        Ok(rest)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load driver
+// ---------------------------------------------------------------------------
+
+/// A deterministic mid-run hot reload for [`drive_load_sharded`]: once
+/// `after_requests` requests have completed, the replacement is broadcast
+/// to every shard.
+pub struct ShardReloadPlan {
+    pub after_requests: usize,
+    pub model: Arc<DiagModel>,
+}
+
+/// The sharded analogue of [`super::engine::drive_load`]: drive a
+/// synthetic request stream (Poisson open loop at `spec.rate_rps`, closed
+/// loop at 0) from `clients` round-robin clients through the server, with
+/// `spec.max_outstanding` as the global admission cap, and report merged
+/// throughput + latency over the run. Payloads and logits recycle through
+/// the cross-thread lanes, so a warm run performs zero fresh workspace
+/// allocations on the driver *and* on every shard.
+pub fn drive_load_sharded(
+    server: &mut ShardedServer,
+    spec: &LoadSpec,
+    clients: usize,
+    mut reload: Option<ShardReloadPlan>,
+    mut watcher: Option<&mut ModelWatcher>,
+) -> Result<ServeReport> {
+    let clients = clients.max(1);
+    let sl = server.sample_len();
+    let cap = spec.max_outstanding.max(1).min(server.max_outstanding);
+    let mut rng = Rng::new(spec.seed);
+    let (fresh0, reused0) = workspace::stats();
+    let t0 = server.now_us();
+
+    let mut submitted = 0usize;
+    let mut done = 0usize;
+    let mut next_arrival_us: u64 = t0;
+    let mut next_watch_at = 0usize;
+    let mut completions: Vec<ShardCompletion> = Vec::with_capacity(cap);
+
+    while done < spec.requests {
+        if reload.as_ref().is_some_and(|p| done >= p.after_requests) {
+            let plan = reload.take().expect("checked above");
+            server.swap_shared(plan.model)?;
+            crate::info!(
+                "serve: broadcast hot reload after {} completed requests \
+                 (each shard drains through its old model)",
+                done
+            );
+        }
+        if let Some(w) = watcher.as_deref_mut() {
+            if done >= next_watch_at {
+                next_watch_at = done + WATCH_STRIDE;
+                let (sl, classes) = (server.sample_len(), server.classes());
+                if let Some(model) = w.poll_compatible(sl, classes) {
+                    server.swap_shared(Arc::new(model))?;
+                    crate::info!(
+                        "serve: hot reload — {} replaced on disk ({} requests done)",
+                        w.path().display(),
+                        done
+                    );
+                }
+            }
+        }
+
+        // admit every arrival whose scheduled time has passed
+        let now = server.now_us();
+        while submitted < spec.requests
+            && server.outstanding() < cap
+            && (spec.rate_rps <= 0.0 || next_arrival_us <= now)
+        {
+            let mut x = workspace::take_uninit_f32(sl);
+            for v in x.iter_mut() {
+                *v = rng.normal_f32(0.0, 1.0);
+            }
+            let arrival = if spec.rate_rps > 0.0 { next_arrival_us } else { now };
+            let client = (submitted % clients) as u64;
+            match server.try_submit_at(client, x, arrival)? {
+                Submit::Ok(_) => {}
+                Submit::Full(x) => {
+                    // cap race (defensive; the loop condition checks it) —
+                    // recycle the payload and retry next iteration
+                    workspace::give_f32(x);
+                    break;
+                }
+            }
+            submitted += 1;
+            if spec.rate_rps > 0.0 {
+                next_arrival_us += poisson_gap_us(&mut rng, spec.rate_rps);
+            }
+        }
+
+        // wait for completions: until the next scheduled arrival in open
+        // loop, a short beat in closed loop (shards push the moment a
+        // micro-batch drains)
+        let wait_us = if spec.rate_rps > 0.0 && submitted < spec.requests {
+            next_arrival_us.saturating_sub(server.now_us()).clamp(50, 2_000)
+        } else {
+            500
+        };
+        server.poll_completions(&mut completions, Some(Duration::from_micros(wait_us)))?;
+        for c in completions.drain(..) {
+            let shard = c.shard;
+            server.recycle_logits(shard, c.logits);
+            done += 1;
+        }
+    }
+
+    let duration_s = (server.now_us() - t0) as f64 / 1e6;
+    let (fresh1, reused1) = workspace::stats();
+    server.report(
+        duration_s,
+        fresh1.saturating_sub(fresh0),
+        reused1.saturating_sub(reused0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::infer::mlp_config;
+
+    fn server(shards: usize, max_batch: usize) -> ShardedServer {
+        let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 3);
+        ShardedServer::start(
+            model,
+            ShardPolicy {
+                shards,
+                batch: BatchPolicy::new(max_batch, 200).unwrap(),
+                max_outstanding: 32,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rejects_zero_shards_and_bad_lengths() {
+        let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 3);
+        assert!(ShardedServer::start(
+            model,
+            ShardPolicy {
+                shards: 0,
+                batch: BatchPolicy::new(1, 0).unwrap(),
+                max_outstanding: 1,
+            },
+        )
+        .is_err());
+        let mut s = server(2, 4);
+        assert!(s.try_submit(0, vec![0.0; 3]).is_err());
+        s.shutdown().unwrap();
+    }
+
+    #[test]
+    fn completes_everything_and_respects_the_cap() {
+        let mut s = server(2, 4);
+        let sl = s.sample_len();
+        let mut rng = Rng::new(9);
+        let mut out = Vec::new();
+        let mut submitted = 0usize;
+        let mut done = 0usize;
+        let total = 40usize;
+        while done < total {
+            while submitted < total && s.outstanding() < 8 {
+                let mut x = workspace::take_uninit_f32(sl);
+                for v in x.iter_mut() {
+                    *v = rng.normal_f32(0.0, 1.0);
+                }
+                match s.try_submit((submitted % 5) as u64, x).unwrap() {
+                    Submit::Ok(id) => assert_eq!(id, submitted as u64),
+                    Submit::Full(_) => unreachable!("cap checked above"),
+                }
+                submitted += 1;
+            }
+            assert!(s.outstanding() <= 8, "admission cap violated");
+            s.poll_completions(&mut out, Some(Duration::from_millis(50))).unwrap();
+            for c in out.drain(..) {
+                let shard = c.shard;
+                assert_eq!(shard, (c.client % 2) as usize, "sticky routing");
+                s.recycle_logits(shard, c.logits);
+                done += 1;
+            }
+        }
+        assert_eq!(done, total);
+        let rest = s.shutdown().unwrap();
+        assert!(rest.is_empty(), "nothing in flight after the drain loop");
+    }
+
+    #[test]
+    fn drive_load_sharded_closed_loop_completes() {
+        let mut s = server(2, 4);
+        let spec = LoadSpec { requests: 48, rate_rps: 0.0, max_outstanding: 16, seed: 42 };
+        let r = drive_load_sharded(&mut s, &spec, 6, None, None).unwrap();
+        assert_eq!(r.requests, 48);
+        assert_eq!(r.shards, 2);
+        assert!(r.throughput_rps > 0.0);
+        s.shutdown().unwrap();
+    }
+
+    #[test]
+    fn broadcast_reload_drops_nothing() {
+        let mut s = server(2, 4);
+        let replacement = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 5);
+        let spec = LoadSpec { requests: 48, rate_rps: 0.0, max_outstanding: 16, seed: 44 };
+        let plan = ShardReloadPlan { after_requests: 20, model: Arc::new(replacement) };
+        let r = drive_load_sharded(&mut s, &spec, 4, Some(plan), None).unwrap();
+        assert_eq!(r.requests, 48, "broadcast hot reload must not drop requests");
+        s.shutdown().unwrap();
+    }
+}

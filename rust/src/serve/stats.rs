@@ -102,8 +102,25 @@ impl LatencyHistogram {
         self.max_us
     }
 
-    /// q-quantile in µs (upper bucket edge, clamped to the observed max).
-    /// `q` in [0, 1]; 0 observations → 0.
+    /// Fold another histogram into this one (per-shard histograms merge
+    /// into one report in the sharded runtime). Merging an empty histogram
+    /// is a no-op; every quantile of the merged histogram brackets the
+    /// union of both observation sets.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, &b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// q-quantile in µs: the upper edge of the hit bucket, clamped into
+    /// `[min_us, max_us]` — so an empty histogram reports 0 (never the
+    /// `u64::MAX` sentinel the min tracker idles at), and a single-sample
+    /// histogram reports exactly that sample (the upper edge would
+    /// otherwise overstate it by up to one sub-bucket). `q` in [0, 1].
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -115,7 +132,7 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             cum += c;
             if cum >= target {
-                return Self::bucket_upper_us(i).min(self.max_us);
+                return Self::bucket_upper_us(i).clamp(self.min_us, self.max_us);
             }
         }
         self.max_us
@@ -126,6 +143,9 @@ impl LatencyHistogram {
 /// `results/serve_bench.json` / `BENCH_serve.json`.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Engine shards that served the run (1 = the single-threaded engine;
+    /// latency quantiles are then over the merged per-shard histograms).
+    pub shards: usize,
     pub requests: u64,
     pub batches: u64,
     pub duration_s: f64,
@@ -145,6 +165,7 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
             ("requests", Json::Num(self.requests as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("duration_s", Json::Num(self.duration_s)),
@@ -163,9 +184,10 @@ impl ServeReport {
     /// One human-readable summary line (stderr-friendly).
     pub fn summary(&self) -> String {
         format!(
-            "{} reqs in {:.3}s — {:.0} req/s, mean batch {:.2} ({} batches), \
+            "{}{} reqs in {:.3}s — {:.0} req/s, mean batch {:.2} ({} batches), \
              latency ms p50 {:.3} p95 {:.3} p99 {:.3} mean {:.3} max {:.3}, \
              workspace fresh {} reused {}",
+            if self.shards > 1 { format!("[{} shards] ", self.shards) } else { String::new() },
             self.requests,
             self.duration_s,
             self.throughput_rps,
@@ -219,10 +241,74 @@ mod tests {
     fn single_observation_everywhere() {
         let mut h = LatencyHistogram::new();
         h.record_us(777);
+        // a single-sample histogram reports exactly that sample at every
+        // quantile: the upper bucket edge clamps to max_us == the sample
         for q in [0.0, 0.5, 0.99, 1.0] {
-            let v = h.quantile_us(q);
-            assert!((700..=800).contains(&v), "q={} -> {}", q, v);
+            assert_eq!(h.quantile_us(q), 777, "q={}", q);
         }
+        assert_eq!(h.min_us(), 777);
+        assert_eq!(h.max_us(), 777);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero_not_sentinel() {
+        let h = LatencyHistogram::new();
+        // the min tracker idles at u64::MAX; quantiles must never leak it
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0, -3.0, 7.0] {
+            assert_eq!(h.quantile_us(q), 0, "q={}", q);
+        }
+        assert_eq!(h.min_us(), 0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_never_leave_observed_range() {
+        // two far-apart samples: low quantiles clamp up to min, high
+        // quantiles clamp down to max (the upper-edge rule stays inside
+        // [min_us, max_us] at both ends)
+        let mut h = LatencyHistogram::new();
+        h.record_us(100);
+        h.record_us(1_000_000);
+        for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let v = h.quantile_us(q);
+            assert!((100..=1_000_000).contains(&v), "q={} -> {}", q, v);
+        }
+        // p0 lands in the min sample's bucket (upper edge ≤ one sub-bucket
+        // above the sample); p100 clamps exactly to the observed max
+        let p0 = h.quantile_us(0.0);
+        assert!((100..=128).contains(&p0), "p0 {}", p0);
+        assert_eq!(h.quantile_us(1.0), 1_000_000, "p100 is the max sample");
+    }
+
+    #[test]
+    fn merge_combines_counts_and_brackets() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for us in [10u64, 20, 30] {
+            a.record_us(us);
+        }
+        for us in [1_000u64, 2_000] {
+            b.record_us(us);
+        }
+        let empty = LatencyHistogram::new();
+        a.merge(&empty); // no-op
+        assert_eq!(a.count(), 3);
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.min_us(), 10);
+        assert_eq!(a.max_us(), 2_000);
+        assert!((a.mean_us() - 612.0).abs() < 1e-9);
+        // p50 over the merged set sits in the low cluster, p99 in the high
+        assert!(a.quantile_us(0.5) <= 40, "p50 {}", a.quantile_us(0.5));
+        assert!(a.quantile_us(0.99) >= 1_000, "p99 {}", a.quantile_us(0.99));
+        // merging into an empty histogram reproduces the source stats
+        let mut c = LatencyHistogram::new();
+        c.merge(&b);
+        assert_eq!(c.count(), b.count());
+        assert_eq!(c.min_us(), b.min_us());
+        assert_eq!(c.max_us(), b.max_us());
+        assert_eq!(c.quantile_us(0.5), b.quantile_us(0.5));
     }
 
     #[test]

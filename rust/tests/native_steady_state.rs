@@ -1,14 +1,22 @@
-//! Steady-state allocation tests for the native backend's workspace arena.
+//! Steady-state allocation tests for the workspace arenas.
 //!
-//! The contract under test (ISSUE 2 acceptance): once warm, the native
-//! train loop performs **zero** fresh buffer allocations — every
-//! activation, gradient, optimizer and IO buffer is recycled through
-//! `runtime::native::workspace`. The arena's `(fresh, reused)` counters
-//! are thread-local and deterministic, so these tests assert exact zeros.
+//! The contract under test (ISSUE 2 acceptance, extended by ISSUE 5): once
+//! warm, the native train loop performs **zero** fresh buffer allocations —
+//! every activation, gradient, optimizer and IO buffer is recycled through
+//! `runtime::native::workspace` — and the same holds **per shard** for the
+//! multi-shard serving runtime (each shard thread owns its own arena; the
+//! cross-thread recycle lanes keep every arena balanced).
+//!
+//! The `fresh == 0` gates stay strict but are scoped to a measured window:
+//! counters reset after warmup, on the thread whose arena is being judged
+//! (the counters are thread-local, so the trainer gate here can never be
+//! tripped by shard arenas and vice versa).
 
 use dynadiag::config::{MethodKind, RunConfig};
+use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::{drive, workspace};
 use dynadiag::runtime::{BackendKind, HostTensor, Session};
+use dynadiag::serve::{drive_load_sharded, BatchPolicy, LoadSpec, ShardPolicy, ShardedServer};
 use dynadiag::train::Trainer;
 use dynadiag::util::rng::Rng;
 
@@ -78,7 +86,9 @@ fn micro_artifact_invocations_reuse_buffers() {
 
 /// End-to-end: the full `Trainer` loop (pooled inputs, `absorb_take`,
 /// recycled outputs) reaches the zero-alloc steady state. The first run
-/// warms the arena; the second run must not allocate at all.
+/// warms the arena; the second run's *train window* — counters reset after
+/// trainer construction, so setup cost is out of scope — must not allocate
+/// at all. The gate stays a strict `fresh == 0`.
 #[test]
 fn trainer_loop_reaches_zero_alloc_steady_state() {
     let mut cfg = RunConfig::default();
@@ -95,8 +105,9 @@ fn trainer_loop_reaches_zero_alloc_steady_state() {
     t1.train().unwrap();
     drop(t1);
 
-    workspace::reset_stats();
+    // run 2: measure only the train/eval window, not trainer construction
     let mut t2 = Trainer::new(cfg).unwrap();
+    workspace::reset_stats();
     let result = t2.train().unwrap();
     assert!(result.final_eval.loss.is_finite());
 
@@ -107,4 +118,61 @@ fn trainer_loop_reaches_zero_alloc_steady_state() {
         "warm trainer run allocated {} fresh buffers (reused {})",
         fresh, reused
     );
+}
+
+/// ISSUE 5: the zero-alloc gate extends to the sharded serving runtime —
+/// after a warm window, a measured window performs zero fresh workspace
+/// allocations on **every shard's** arena and on the driver's. The
+/// cross-thread recycle lanes (spare payload buffers back to the driver,
+/// consumed logits back to the owning shard) are what keep the per-thread
+/// arenas balanced; this test is the gate on that design.
+#[test]
+fn sharded_serving_reaches_zero_alloc_steady_state_per_shard() {
+    let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 31);
+    let mut server = ShardedServer::start(
+        model,
+        ShardPolicy {
+            shards: 2,
+            batch: BatchPolicy::new(4, 200).unwrap(),
+            max_outstanding: 32,
+        },
+    )
+    .unwrap();
+
+    // warm: fill every shard arena (full-ceiling batches, stragglers, the
+    // recycle lanes) at the same admission cap as the measured window
+    let warm = LoadSpec { requests: 160, rate_rps: 0.0, max_outstanding: 32, seed: 91 };
+    drive_load_sharded(&mut server, &warm, 8, None, None).unwrap();
+
+    // bracket the measured window: shard counters reset via the control
+    // message (on the shard threads), driver counters reset here
+    server.reset_metrics();
+    workspace::reset_stats();
+    let spec = LoadSpec { requests: 160, rate_rps: 0.0, max_outstanding: 32, seed: 92 };
+    let report = drive_load_sharded(&mut server, &spec, 8, None, None).unwrap();
+    assert_eq!(report.requests, 160);
+
+    let stats = server.shard_stats().unwrap();
+    assert_eq!(stats.len(), 2);
+    for s in &stats {
+        assert!(
+            s.reused_buffers > 0,
+            "shard {} never touched its workspace arena",
+            s.shard
+        );
+        assert_eq!(
+            s.fresh_allocs, 0,
+            "shard {} allocated {} fresh buffers in a warm window (reused {})",
+            s.shard, s.fresh_allocs, s.reused_buffers
+        );
+    }
+    let (driver_fresh, driver_reused) = workspace::stats();
+    assert!(driver_reused > 0, "the driver never touched its arena");
+    assert_eq!(
+        driver_fresh, 0,
+        "the driver allocated {} fresh buffers in a warm window",
+        driver_fresh
+    );
+    let rest = server.shutdown().unwrap();
+    assert!(rest.is_empty(), "shutdown must leave nothing in flight");
 }

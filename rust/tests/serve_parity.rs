@@ -12,10 +12,20 @@
 //! 3. **Hot reload (ISSUE 4):** swapping the served model drains in-flight
 //!    requests through the old model, drops/reorders nothing, and keeps
 //!    the zero-fresh-allocation steady state across the swap.
+//! 4. **Sharded serving (ISSUE 5):** the same parity and ordering
+//!    contracts across shard counts {1, 2, 4} — logits bitwise identical
+//!    to sequential execution, per-client FIFO preserved, and the
+//!    broadcast hot reload drops/reorders nothing.
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::workspace;
-use dynadiag::serve::{BatchPolicy, Completion, ManualClock, ServeEngine};
+use dynadiag::serve::{
+    BatchPolicy, Completion, ManualClock, ServeEngine, ShardCompletion, ShardPolicy,
+    ShardedServer, Submit,
+};
 use dynadiag::util::rng::Rng;
 
 /// Run `n` requests through a fresh engine at the given ceiling (batches
@@ -185,7 +195,7 @@ fn hot_reload_drops_nothing_and_stays_allocation_free() {
         }
         assert_eq!(engine.queue_len(), 2, "two requests pending at swap time");
         let old = engine
-            .swap_model(model_b.clone(), &clock, out)
+            .swap_model(Arc::new(model_b.clone()), &clock, out)
             .unwrap();
         assert_eq!(engine.queue_len(), 0, "swap must drain the queue");
         for i in 6..12 {
@@ -230,6 +240,177 @@ fn hot_reload_drops_nothing_and_stays_allocation_free() {
         fresh, reused
     );
 
+    workspace::give_f32(want_a);
+    workspace::give_f32(want_b);
+}
+
+// ---------------------------------------------------------------------------
+// Sharded serving (ISSUE 5)
+// ---------------------------------------------------------------------------
+
+/// Drive `samples` (as `(client, sample)` pairs) through an N-shard server
+/// and return the completions in the order they surfaced. Logits buffers
+/// are NOT recycled — the caller inspects and frees them.
+fn serve_sharded(
+    model: &DiagModel,
+    shards: usize,
+    samples: &[(u64, Vec<f32>)],
+) -> Vec<ShardCompletion> {
+    let mut server = ShardedServer::start(
+        model.clone(),
+        ShardPolicy {
+            shards,
+            batch: BatchPolicy::new(4, 200).unwrap(),
+            max_outstanding: 16,
+        },
+    )
+    .unwrap();
+    let mut results: Vec<ShardCompletion> = Vec::new();
+    let mut out: Vec<ShardCompletion> = Vec::new();
+    let mut submitted = 0usize;
+    while results.len() < samples.len() {
+        while submitted < samples.len() && server.outstanding() < 16 {
+            let (client, s) = &samples[submitted];
+            match server.try_submit(*client, workspace::take_copy_f32(s)).unwrap() {
+                Submit::Ok(id) => {
+                    assert_eq!(id, submitted as u64, "global ids are sequential");
+                    submitted += 1;
+                }
+                Submit::Full(x) => {
+                    workspace::give_f32(x);
+                    break;
+                }
+            }
+        }
+        server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
+        results.append(&mut out);
+    }
+    let rest = server.shutdown().unwrap();
+    assert!(rest.is_empty(), "everything completed before shutdown");
+    results
+}
+
+/// Per-client completion order must equal per-client submission order
+/// (global ids are assigned in submission order).
+fn assert_fifo_per_client(completions: &[ShardCompletion]) {
+    let mut last_id: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+    for c in completions {
+        if let Some(&prev) = last_id.get(&c.client) {
+            assert!(
+                c.id > prev,
+                "client {} saw id {} after id {} — FIFO per client violated",
+                c.client,
+                c.id,
+                prev
+            );
+        }
+        last_id.insert(c.client, c.id);
+    }
+}
+
+#[test]
+fn sharded_serving_matches_sequential_bitwise_across_shard_counts() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, 77);
+    let sl = model.sample_len();
+    let mut rng = Rng::new(404);
+    // 24 requests from 6 clients, round-robin
+    let samples: Vec<(u64, Vec<f32>)> = (0..24)
+        .map(|i| {
+            (
+                (i % 6) as u64,
+                (0..sl).map(|_| rng.normal_f32(0.0, 1.0)).collect::<Vec<f32>>(),
+            )
+        })
+        .collect();
+    let sequential: Vec<Vec<f32>> = samples
+        .iter()
+        .map(|(_, s)| model.forward_logits(s, 1).unwrap())
+        .collect();
+    for &shards in &[1usize, 2, 4] {
+        let completions = serve_sharded(&model, shards, &samples);
+        assert_eq!(completions.len(), samples.len(), "shards {}: drops", shards);
+        assert_fifo_per_client(&completions);
+        for c in completions {
+            assert_eq!(
+                &c.logits, &sequential[c.id as usize],
+                "request {} diverged from sequential at {} shards",
+                c.id, shards
+            );
+            assert_eq!(c.shard, (c.client % shards as u64) as usize, "sticky routing");
+            workspace::give_f32(c.logits);
+        }
+    }
+    for s in sequential {
+        workspace::give_f32(s);
+    }
+}
+
+/// Broadcast hot reload with in-flight requests: everything admitted
+/// before the swap serves from the old model (each shard drains its queue
+/// through it), everything admitted after serves from the new one —
+/// nothing dropped, per-client FIFO intact. Inbox FIFO makes this
+/// deterministic even with requests still queued at swap time.
+#[test]
+fn sharded_broadcast_reload_drops_and_reorders_nothing() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model_a = DiagModel::synth(cfg, 0.9, 51);
+    let model_b = DiagModel::synth(cfg, 0.9, 52);
+    let sl = model_a.sample_len();
+    let mut rng = Rng::new(7);
+    let probe: Vec<f32> = (0..sl).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let want_a = model_a.forward_logits(&probe, 1).unwrap();
+    let want_b = model_b.forward_logits(&probe, 1).unwrap();
+    assert_ne!(want_a, want_b, "distinct models must be distinguishable");
+
+    for &shards in &[2usize, 4] {
+        let mut server = ShardedServer::start(
+            model_a.clone(),
+            ShardPolicy {
+                shards,
+                batch: BatchPolicy::new(4, 200).unwrap(),
+                max_outstanding: 32,
+            },
+        )
+        .unwrap();
+        // 12 requests from 4 clients, swap broadcast WITHOUT draining,
+        // then 12 more — the swap message is ordered inside each shard's
+        // inbox, so the A/B boundary is exact
+        for i in 0..12u64 {
+            match server.try_submit(i % 4, workspace::take_copy_f32(&probe)).unwrap() {
+                Submit::Ok(_) => {}
+                Submit::Full(_) => panic!("cap 32 cannot fill at 12 requests"),
+            }
+        }
+        server.swap_model(model_b.clone()).unwrap();
+        for i in 0..12u64 {
+            match server.try_submit(i % 4, workspace::take_copy_f32(&probe)).unwrap() {
+                Submit::Ok(_) => {}
+                Submit::Full(_) => panic!("cap 32 cannot fill at 24 requests"),
+            }
+        }
+        let mut completions: Vec<ShardCompletion> = Vec::new();
+        let mut out = Vec::new();
+        while completions.len() < 24 {
+            server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
+            completions.append(&mut out);
+        }
+        let rest = server.shutdown().unwrap();
+        assert!(rest.is_empty());
+        assert_eq!(completions.len(), 24, "broadcast reload must not drop requests");
+        assert_fifo_per_client(&completions);
+        for c in completions {
+            let want = if c.id < 12 { &want_a } else { &want_b };
+            assert_eq!(
+                &c.logits, want,
+                "shards {}: request {} must use the {} model",
+                shards,
+                c.id,
+                if c.id < 12 { "pre-swap" } else { "post-swap" }
+            );
+            workspace::give_f32(c.logits);
+        }
+    }
     workspace::give_f32(want_a);
     workspace::give_f32(want_b);
 }
