@@ -18,6 +18,7 @@
 //! shortened sweep with the same JSON schema.
 
 use dynadiag::bcsr::convert::diag_to_bcsr;
+use dynadiag::kernels::microkernel;
 use dynadiag::kernels::{bcsr, dense, diag, DiagPacked};
 use dynadiag::runtime::native::drive;
 use dynadiag::runtime::{BackendKind, Session};
@@ -182,6 +183,90 @@ fn main() {
         None => println!("\n(no dim >= 1024 cells in this sweep)"),
     }
 
+    // per-ISA microkernel cells (ISSUE 6): the ROADMAP shape (dim 1024,
+    // batch 32, s=0.90) timed on every ISA path this host can execute, via
+    // the explicit `*_on` entries — so one run on an AVX2 or NEON host
+    // reports both the dispatched path and the scalar oracle it must beat.
+    // The scalar oracle pays libm `fmaf` on builds without compiled FMA
+    // (the bit-identity contract's deliberate cost), which is why it is
+    // kept out of the main sweep above.
+    println!(
+        "\n== diag microkernel per-ISA cells (dim 1024, batch 32, s=0.90; dispatched: {}) ==",
+        microkernel::active().name()
+    );
+    let mut isa_cells: Vec<Json> = Vec::new();
+    {
+        let n = 1024usize;
+        let b = 32usize;
+        let k = diag_count(n, 0.90);
+        let d = random_diag(&mut rng, n, k);
+        let packed = DiagPacked::from_matrix(&d);
+        let x: Vec<f32> = (0..b * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let dy: Vec<f32> = (0..b * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut yd = vec![0.0f32; b * n];
+        let mut dxd = vec![0.0f32; b * n];
+        let mut dv = vec![0.0f32; k * n];
+        let isa_iters = if fast { 3 } else { 8 };
+        println!(
+            "{:>8} {:>6} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "isa", "lanes", "fwd ms", "bwd ms", "wgrad ms", "fused ms", "vs scalar"
+        );
+        // scalar is always first in `available()`, so the oracle times are
+        // in hand before any vector path needs its ratios
+        let mut scalar: Option<(f64, f64, f64, f64)> = None;
+        for &isa in microkernel::available() {
+            let t_fwd = bench(1, isa_iters, || {
+                diag::spmm_t_on(isa, &x, &packed.offsets, &packed.values, &mut yd, b, n, n)
+            });
+            let t_bwd = bench(1, isa_iters, || {
+                diag::spmm_on(isa, &dy, &packed.offsets, &packed.values, &mut dxd, b, n, n)
+            });
+            let t_wg = bench(1, isa_iters, || {
+                diag::grad_values_on(isa, &x, &dy, &packed.offsets, &mut dv, b, n, n)
+            });
+            let t_fused = bench(1, isa_iters, || {
+                diag::spmm_t_bias_on(
+                    isa,
+                    &x,
+                    &packed.offsets,
+                    &packed.values,
+                    &bias,
+                    &mut yd,
+                    b,
+                    n,
+                    n,
+                    diag::Epilogue::Gelu,
+                )
+            });
+            let ms = (t_fwd.mean_ms(), t_bwd.mean_ms(), t_wg.mean_ms(), t_fused.mean_ms());
+            let base = *scalar.get_or_insert(ms);
+            let fwd_vs_scalar = base.0 / ms.0;
+            println!(
+                "{:>8} {:>6} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>9.2}x",
+                isa.name(),
+                isa.lanes(),
+                ms.0,
+                ms.1,
+                ms.2,
+                ms.3,
+                fwd_vs_scalar
+            );
+            isa_cells.push(Json::obj(vec![
+                ("isa", Json::Str(isa.name().to_string())),
+                ("lanes", Json::Num(isa.lanes() as f64)),
+                ("fwd_ms", Json::Num(ms.0)),
+                ("bwd_ms", Json::Num(ms.1)),
+                ("wgrad_ms", Json::Num(ms.2)),
+                ("fused_ms", Json::Num(ms.3)),
+                ("fwd_vs_scalar", Json::Num(fwd_vs_scalar)),
+                ("bwd_vs_scalar", Json::Num(base.1 / ms.1)),
+                ("wgrad_vs_scalar", Json::Num(base.2 / ms.2)),
+                ("fused_vs_scalar", Json::Num(base.3 / ms.3)),
+            ]));
+        }
+    }
+
     // training-step timing through the zero-allocation native path
     println!("\n== native train-step timing (workspace-recycled loop) ==");
     let mut train_steps: Vec<Json> = Vec::new();
@@ -217,7 +302,9 @@ fn main() {
         ("bench", Json::Str("kernels".to_string())),
         ("fast", Json::Bool(fast)),
         ("threads", Json::Num(dynadiag::kernels::pool::num_threads() as f64)),
+        ("isa", Json::Str(microkernel::active().name().to_string())),
         ("cells", Json::Arr(cells)),
+        ("isa_cells", Json::Arr(isa_cells)),
         ("train_steps", Json::Arr(train_steps)),
     ]);
     let path = out_dir.join("kernel_bench.json");

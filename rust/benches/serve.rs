@@ -351,6 +351,10 @@ fn main() {
         ("bench", Json::Str("serve".to_string())),
         ("fast", Json::Bool(fast)),
         ("threads", Json::Num(dynadiag::kernels::pool::num_threads() as f64)),
+        (
+            "isa",
+            Json::Str(dynadiag::kernels::microkernel::active().name().to_string()),
+        ),
         ("p99_bound_ms", Json::Num(p99_bound_ms)),
         ("cells", Json::Arr(cells)),
         ("shard_sweep", Json::Arr(shard_cells)),

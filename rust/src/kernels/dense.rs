@@ -8,6 +8,16 @@
 //!   dot products,
 //! * `KC`-blocking over the reduction dim so the active `x` / `W` panels
 //!   stay in L1/L2 for the larger layer shapes.
+//!
+//! **Deliberately outside the [`super::microkernel`] ISA dispatch.** The
+//! dense products are *reductions* — hand-vectorizing them per ISA would
+//! change the summation tree per lane width and break the repo's
+//! cross-ISA determinism story (the embed/head layers of every served
+//! model run through here, so keeping them compile-time-fixed is what
+//! makes whole-model logits bit-identical under any `DYNADIAG_ISA`).
+//! They are also the bench *baseline*: dispatching the denominator would
+//! let the numerator's speedup ride along with it. Autovectorization of
+//! the blocked loops below is stable and fast enough for that role.
 
 use super::pool::parallel_rows;
 

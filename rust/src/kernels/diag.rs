@@ -15,16 +15,55 @@
 //! n_in` splits each diagonal into contiguous sub-ranges where both sides
 //! stream linearly (two segments when `n_out <= n_in`, `ceil` more when the
 //! diagonal wraps repeatedly). Inside a segment the loop is a branch-free
-//! strided FMA over three contiguous slices, which the compiler
-//! autovectorizes; the seed implementation's per-element carry branch
-//! (`if c == n_in { c = 0 }`) defeated that.
+//! element-wise FMA over three contiguous slices, executed by the
+//! **dispatched SIMD microkernel** ([`super::microkernel`]): 8-wide AVX2
+//! FMA, 4-wide NEON, or the scalar `mul_add` oracle — selected once per
+//! process via `DYNADIAG_ISA` and bit-identical across paths.
+//!
+//! Every op has a `*_on(isa, ..)` twin taking an explicit
+//! [`Isa`] so the parity harness (`tests/kernel_parity.rs`,
+//! `tests/golden_diag_microkernel.rs`) and the per-ISA bench cells can
+//! exercise every lane width on whatever host they run on.
 
+use super::microkernel::{self, Isa, Microkernel, ScalarKernel};
 use super::pool::{effective_threads, parallel_rows, TASK_GRAIN_FLOPS};
 
+#[cfg(target_arch = "x86_64")]
+use super::microkernel::Avx2Kernel;
+#[cfg(target_arch = "aarch64")]
+use super::microkernel::NeonKernel;
+
+/// Monomorphize `$body` over the microkernel type `$mk` selected by
+/// `$isa`. ISAs the current *build* cannot contain (e.g. `Neon` on
+/// x86-64) fall through to scalar; runtime availability is the caller's
+/// contract (`microkernel::sanitize` upholds it for the `*_on` entries,
+/// `microkernel::active` for the dispatched ones).
+macro_rules! with_isa {
+    ($isa:expr, $mk:ident => $body:expr) => {
+        match $isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                type $mk = Avx2Kernel;
+                $body
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => {
+                type $mk = NeonKernel;
+                $body
+            }
+            _ => {
+                type $mk = ScalarKernel;
+                $body
+            }
+        }
+    };
+}
+
 /// `y[i] += v[i] * x[(i + off) mod n]` over `i in 0..y.len()`, decomposed
-/// into contiguous wrap segments (`v.len() == y.len()`, `x.len() == n`).
+/// into contiguous wrap segments (`v.len() == y.len()`, `x.len() == n`),
+/// each segment one microkernel `fma3` call.
 #[inline]
-fn fma_wrap_gather(y: &mut [f32], v: &[f32], x: &[f32], off: usize) {
+fn fma_wrap_gather<M: Microkernel>(y: &mut [f32], v: &[f32], x: &[f32], off: usize) {
     let n_in = x.len();
     let n_out = y.len();
     debug_assert_eq!(v.len(), n_out);
@@ -35,12 +74,7 @@ fn fma_wrap_gather(y: &mut [f32], v: &[f32], x: &[f32], off: usize) {
     let mut c = off % n_in;
     while i < n_out {
         let seg = (n_out - i).min(n_in - c);
-        let ys = &mut y[i..i + seg];
-        let vs = &v[i..i + seg];
-        let xs = &x[c..c + seg];
-        for ((yv, &vv), &xv) in ys.iter_mut().zip(vs).zip(xs) {
-            *yv += vv * xv;
-        }
+        M::fma3(&mut y[i..i + seg], &v[i..i + seg], &x[c..c + seg]);
         i += seg;
         c += seg;
         if c == n_in {
@@ -53,7 +87,7 @@ fn fma_wrap_gather(y: &mut [f32], v: &[f32], x: &[f32], off: usize) {
 /// scatter twin of [`fma_wrap_gather`] (`v.len() == g.len()`,
 /// `dx.len() == n`).
 #[inline]
-fn fma_wrap_scatter(dx: &mut [f32], v: &[f32], g: &[f32], off: usize) {
+fn fma_wrap_scatter<M: Microkernel>(dx: &mut [f32], v: &[f32], g: &[f32], off: usize) {
     let n_in = dx.len();
     let n_out = g.len();
     debug_assert_eq!(v.len(), n_out);
@@ -64,12 +98,7 @@ fn fma_wrap_scatter(dx: &mut [f32], v: &[f32], g: &[f32], off: usize) {
     let mut c = off % n_in;
     while i < n_out {
         let seg = (n_out - i).min(n_in - c);
-        let ds = &mut dx[c..c + seg];
-        let vs = &v[i..i + seg];
-        let gs = &g[i..i + seg];
-        for ((dv, &vv), &gv) in ds.iter_mut().zip(vs).zip(gs) {
-            *dv += vv * gv;
-        }
+        M::fma3(&mut dx[c..c + seg], &v[i..i + seg], &g[i..i + seg]);
         i += seg;
         c += seg;
         if c == n_in {
@@ -78,8 +107,7 @@ fn fma_wrap_scatter(dx: &mut [f32], v: &[f32], g: &[f32], off: usize) {
     }
 }
 
-/// Forward product `y[b, n_out] = x[b, n_in] @ Wᵀ`. `y` is overwritten.
-pub fn spmm_t(
+fn spmm_t_impl<M: Microkernel>(
     x: &[f32],
     offsets: &[usize],
     values: &[f32],
@@ -99,15 +127,44 @@ pub fn spmm_t(
             for (j, &off) in offsets.iter().enumerate() {
                 debug_assert!(off < n_in, "offset out of range");
                 let vals = &values[j * n_out..(j + 1) * n_out];
-                fma_wrap_gather(yr, vals, xr, off);
+                fma_wrap_gather::<M>(yr, vals, xr, off);
             }
         }
     });
 }
 
-/// Transposed product `dx[b, n_in] = dy[b, n_out] @ W` (the backward
-/// input-gradient, still diagonal-wise — Apdx A). `dx` is overwritten.
-pub fn spmm(
+/// Forward product `y[b, n_out] = x[b, n_in] @ Wᵀ`. `y` is overwritten.
+/// Runs on the process-wide dispatched ISA ([`microkernel::active`]).
+pub fn spmm_t(
+    x: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    y: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    spmm_t_on(microkernel::active(), x, offsets, values, y, b, n_in, n_out);
+}
+
+/// [`spmm_t`] forced onto a specific ISA path (parity harness / per-ISA
+/// bench cells). An ISA this host cannot execute runs the scalar path —
+/// the same degradation contract as `DYNADIAG_ISA` forcing.
+pub fn spmm_t_on(
+    isa: Isa,
+    x: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    y: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    let isa = microkernel::sanitize(isa);
+    with_isa!(isa, M => spmm_t_impl::<M>(x, offsets, values, y, b, n_in, n_out))
+}
+
+fn spmm_impl<M: Microkernel>(
     dy: &[f32],
     offsets: &[usize],
     values: &[f32],
@@ -126,10 +183,39 @@ pub fn spmm(
             let dyr = &dy[(first_row + r) * n_out..(first_row + r + 1) * n_out];
             for (j, &off) in offsets.iter().enumerate() {
                 let vals = &values[j * n_out..(j + 1) * n_out];
-                fma_wrap_scatter(dxr, vals, dyr, off);
+                fma_wrap_scatter::<M>(dxr, vals, dyr, off);
             }
         }
     });
+}
+
+/// Transposed product `dx[b, n_in] = dy[b, n_out] @ W` (the backward
+/// input-gradient, still diagonal-wise — Apdx A). `dx` is overwritten.
+pub fn spmm(
+    dy: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    dx: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    spmm_on(microkernel::active(), dy, offsets, values, dx, b, n_in, n_out);
+}
+
+/// [`spmm`] forced onto a specific ISA path.
+pub fn spmm_on(
+    isa: Isa,
+    dy: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    dx: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    let isa = microkernel::sanitize(isa);
+    with_isa!(isa, M => spmm_impl::<M>(dy, offsets, values, dx, b, n_in, n_out))
 }
 
 /// Epilogue applied per output element by the fused forward
@@ -142,20 +228,7 @@ pub enum Epilogue {
     Gelu,
 }
 
-/// Fused serving forward: `y = act(x @ Wᵀ + bias)` in a single pass over
-/// `y` — each output row is seeded with the bias vector, accumulates every
-/// selected diagonal, then applies the epilogue in-place. Compared to the
-/// train-path sequence (`spmm_t`, then a bias sweep, then an activation
-/// sweep) this touches `y` once instead of three times, which matters at
-/// serving batch sizes where the whole batch fits in L1/L2.
-///
-/// **Dispatch grain:** rows (requests) are independent, so per-row results
-/// are bit-identical no matter how requests are coalesced — a batch of 1
-/// always runs inline (no pool wakeup on the latency path), while a
-/// coalesced micro-batch fans out across the worker pool once its flop
-/// count clears the grain. `rust/tests/serve_parity.rs` pins the
-/// batched == sequential bitwise contract.
-pub fn spmm_t_bias(
+fn spmm_t_bias_impl<M: Microkernel>(
     x: &[f32],
     offsets: &[usize],
     values: &[f32],
@@ -178,8 +251,10 @@ pub fn spmm_t_bias(
             for (j, &off) in offsets.iter().enumerate() {
                 debug_assert!(off < n_in, "offset out of range");
                 let vals = &values[j * n_out..(j + 1) * n_out];
-                fma_wrap_gather(yr, vals, xr, off);
+                fma_wrap_gather::<M>(yr, vals, xr, off);
             }
+            // the activation stays scalar libm on every ISA, so the
+            // epilogue can never diverge between lane widths
             if epilogue == Epilogue::Gelu {
                 for v in yr.iter_mut() {
                     *v = super::gelu(*v);
@@ -189,6 +264,69 @@ pub fn spmm_t_bias(
     });
 }
 
+/// Fused serving forward: `y = act(x @ Wᵀ + bias)` in a single pass over
+/// `y` — each output row is seeded with the bias vector, accumulates every
+/// selected diagonal, then applies the epilogue in-place. Compared to the
+/// train-path sequence (`spmm_t`, then a bias sweep, then an activation
+/// sweep) this touches `y` once instead of three times, which matters at
+/// serving batch sizes where the whole batch fits in L1/L2. (Because the
+/// bias seeds the accumulator here but is added *last* on the train path,
+/// the two paths can differ in the final ulps — the serving-side contract
+/// is fused-vs-fused determinism, pinned bitwise below and in
+/// `tests/serve_parity.rs`.)
+///
+/// **Dispatch grain:** rows (requests) are independent, so per-row results
+/// are bit-identical no matter how requests are coalesced — a batch of 1
+/// always runs inline (no pool wakeup on the latency path), while a
+/// coalesced micro-batch fans out across the worker pool once its flop
+/// count clears the grain. `rust/tests/serve_parity.rs` pins the
+/// batched == sequential bitwise contract.
+pub fn spmm_t_bias(
+    x: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+    epilogue: Epilogue,
+) {
+    spmm_t_bias_on(
+        microkernel::active(),
+        x,
+        offsets,
+        values,
+        bias,
+        y,
+        b,
+        n_in,
+        n_out,
+        epilogue,
+    );
+}
+
+/// [`spmm_t_bias`] forced onto a specific ISA path.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_t_bias_on(
+    isa: Isa,
+    x: &[f32],
+    offsets: &[usize],
+    values: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+    epilogue: Epilogue,
+) {
+    let isa = microkernel::sanitize(isa);
+    with_isa!(
+        isa,
+        M => spmm_t_bias_impl::<M>(x, offsets, values, bias, y, b, n_in, n_out, epilogue)
+    )
+}
+
 thread_local! {
     /// Reused partial-accumulator scratch for the batch-split path of
     /// [`grad_values`] (no per-call allocation after warmup).
@@ -196,16 +334,7 @@ thread_local! {
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
-/// Weight gradient in offset-major layout: `dvalues[j, i] = Σ_b dy[b, i] ·
-/// x[b, (i + offsets[j]) mod n_in]`. `dvalues` is overwritten.
-///
-/// Two parallel strategies: when there are enough diagonals, split over
-/// them (disjoint `dvalues` rows). When `k` is below the thread count —
-/// the common case at high sparsity, where the old kernel degenerated to a
-/// near-serial loop — split over the **batch** dimension instead: each
-/// worker accumulates a private partial `dvalues` over its batch slice,
-/// followed by a single reduction.
-pub fn grad_values(
+fn grad_values_impl<M: Microkernel>(
     x: &[f32],
     dy: &[f32],
     offsets: &[usize],
@@ -246,7 +375,7 @@ pub fn grad_values(
                             let xr = &x[bi * n_in..(bi + 1) * n_in];
                             let dyr = &dy[bi * n_out..(bi + 1) * n_out];
                             for (j, &off) in offsets.iter().enumerate() {
-                                fma_wrap_gather(
+                                fma_wrap_gather::<M>(
                                     &mut dvp[j * n_out..(j + 1) * n_out],
                                     dyr,
                                     xr,
@@ -257,6 +386,8 @@ pub fn grad_values(
                     }
                 },
             );
+            // partials reduce in part order: ISA-independent (plain adds),
+            // thread-count-dependent (documented in kernels::mod)
             for part in scratch.chunks_exact(k * n_out) {
                 for (o, &v) in dvalues.iter_mut().zip(part) {
                     *o += v;
@@ -273,14 +404,53 @@ pub fn grad_values(
             for bi in 0..b {
                 let xr = &x[bi * n_in..(bi + 1) * n_in];
                 let dyr = &dy[bi * n_out..(bi + 1) * n_out];
-                fma_wrap_gather(dvr, dyr, xr, off);
+                fma_wrap_gather::<M>(dvr, dyr, xr, off);
             }
         }
     });
 }
 
+/// Weight gradient in offset-major layout: `dvalues[j, i] = Σ_b dy[b, i] ·
+/// x[b, (i + offsets[j]) mod n_in]`. `dvalues` is overwritten.
+///
+/// Two parallel strategies: when there are enough diagonals, split over
+/// them (disjoint `dvalues` rows). When `k` is below the thread count —
+/// the common case at high sparsity, where the old kernel degenerated to a
+/// near-serial loop — split over the **batch** dimension instead: each
+/// worker accumulates a private partial `dvalues` over its batch slice,
+/// followed by a single reduction. Both strategies accumulate the batch
+/// dimension in index order per element, so results are bit-identical
+/// across ISAs at any fixed thread count.
+pub fn grad_values(
+    x: &[f32],
+    dy: &[f32],
+    offsets: &[usize],
+    dvalues: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    grad_values_on(microkernel::active(), x, dy, offsets, dvalues, b, n_in, n_out);
+}
+
+/// [`grad_values`] forced onto a specific ISA path.
+pub fn grad_values_on(
+    isa: Isa,
+    x: &[f32],
+    dy: &[f32],
+    offsets: &[usize],
+    dvalues: &mut [f32],
+    b: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    let isa = microkernel::sanitize(isa);
+    with_isa!(isa, M => grad_values_impl::<M>(x, dy, offsets, dvalues, b, n_in, n_out))
+}
+
 #[cfg(test)]
 mod tests {
+    use crate::kernels::microkernel;
     use crate::sparsity::diagonal::DiagMatrix;
     use crate::tensor::Tensor;
     use crate::util::rng::Rng;
@@ -351,8 +521,10 @@ mod tests {
         }
     }
 
-    /// The fused bias+activation forward equals the unfused sequence
-    /// bit-for-bit, at batch 1 and batched (the serving parity contract).
+    /// The fused bias+activation forward tracks the unfused sequence to
+    /// float tolerance (the bias seeds the accumulator when fused but is
+    /// added last when unfused, so the final ulps may differ) and is
+    /// bitwise batch-invariant (the serving parity contract).
     #[test]
     fn spmm_t_bias_matches_unfused_and_is_batch_invariant() {
         let mut rng = Rng::new(55);
@@ -378,7 +550,11 @@ mod tests {
                     }
                 }
             }
-            assert_eq!(fused, want, "fused != unfused for {:?}", epi);
+            let diff = fused
+                .iter()
+                .zip(&want)
+                .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+            assert!(diff < 1e-5, "fused drifted {} from unfused for {:?}", diff, epi);
             // batch-of-1 rows must be bitwise identical to the batched rows
             for bi in 0..b {
                 let mut one = vec![0.0f32; n_out];
@@ -419,6 +595,28 @@ mod tests {
                 let got = dv[j * n_out + i];
                 assert!((want - got).abs() < 1e-3, "j={} i={}: {} vs {}", j, i, want, got);
             }
+        }
+    }
+
+    /// The dispatched path and every explicitly forced path agree bitwise
+    /// on the forward product (the deeper sweep lives in
+    /// `tests/kernel_parity.rs`; this is the in-crate smoke check).
+    #[test]
+    fn forced_isa_paths_match_dispatched_bitwise() {
+        let mut rng = Rng::new(56);
+        let (b, n_in, n_out, k) = (3usize, 13usize, 29usize, 5usize);
+        let d = random_diag(&mut rng, n_out, n_in, k);
+        let x = Tensor::randn(&[b, n_in], 1.0, &mut rng);
+        let mut want = vec![0.0f32; b * n_out];
+        super::spmm_t(&x.data, &d.offsets, &pack(&d), &mut want, b, n_in, n_out);
+        for &isa in microkernel::available() {
+            let mut got = vec![0.0f32; b * n_out];
+            super::spmm_t_on(isa, &x.data, &d.offsets, &pack(&d), &mut got, b, n_in, n_out);
+            let same = got
+                .iter()
+                .zip(&want)
+                .all(|(g, w)| g.to_bits() == w.to_bits());
+            assert!(same, "{} diverges from the dispatched path", isa.name());
         }
     }
 }

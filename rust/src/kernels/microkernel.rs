@@ -1,0 +1,398 @@
+//! SIMD microkernels and one-time runtime ISA dispatch for the diag hot
+//! loops (ROADMAP item 1).
+//!
+//! Every diagonal product in [`super::diag`] decomposes into contiguous
+//! wrap segments whose inner loop is one element-wise fused multiply-add
+//! over three equal-length slices: `acc[i] += a[i] * b[i]`. That primitive
+//! — [`Microkernel::fma3`] — is the whole ISA surface, so each vector path
+//! is a few dozen lines and the op-level code is written **once**,
+//! generically, in `diag.rs`.
+//!
+//! Three paths ship:
+//!
+//! * **scalar** — `f32::mul_add` per element. Always available; this is the
+//!   parity **oracle** every other path is fuzzed against.
+//! * **avx2** — `x86_64` AVX2 + FMA, 8-wide `_mm256_fmadd_ps` with a 4×8
+//!   register-blocked main loop (four independent load/FMA/store pipelines
+//!   per iteration, the way `dense.rs` register-blocks its GEMM).
+//! * **neon** — `aarch64` NEON, 4-wide `vfmaq_f32` with a 4×4
+//!   register-blocked main loop.
+//!
+//! **Bit-identity contract.** Each element is computed with a *single*
+//! rounding: hardware fused multiply-add on the vector paths, and
+//! `f32::mul_add` (IEEE-correct fused) on the scalar path and on every
+//! vector remainder tail. Because `fma3` is purely element-wise — no
+//! cross-lane reduction anywhere — every path produces **bit-identical**
+//! output for every input, which `tests/kernel_parity.rs` (seeded fuzz vs
+//! the scalar oracle) and `tests/golden_diag_microkernel.rs` (committed bit
+//! patterns) enforce. The one deliberate cost: on hosts whose *compiled*
+//! baseline lacks hardware FMA (generic `x86-64` without AVX2 at runtime),
+//! the scalar path pays a libm `fmaf` call per element — correctness-first;
+//! the dispatched vector path is what production traffic runs.
+//!
+//! **Dispatch** happens once per process ([`active`], a `OnceLock`):
+//! `DYNADIAG_ISA=scalar|avx2|neon|auto` (default `auto` = widest detected
+//! path). Forcing an ISA the host cannot execute falls back to scalar with
+//! a logged warning instead of an illegal-instruction crash, so one CI
+//! command line works on every runner in the cross-ISA matrix. Per-ISA
+//! entry points (`diag::spmm_t_on` etc.) take an explicit [`Isa`] so tests
+//! and benches exercise every available lane width in a single process,
+//! without env juggling.
+
+use std::sync::OnceLock;
+
+/// A dispatched instruction-set path for the diag microkernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// `f32::mul_add` per element — always available, the parity oracle.
+    Scalar,
+    /// x86-64 AVX2 + FMA, 8 f32 lanes.
+    Avx2,
+    /// aarch64 NEON, 4 f32 lanes.
+    Neon,
+}
+
+impl Isa {
+    /// The `DYNADIAG_ISA` spelling of this path.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per vector register on this path (1 for scalar).
+    pub fn lanes(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 8,
+            Isa::Neon => 4,
+        }
+    }
+
+    /// Can the current build *and* host actually execute this path?
+    pub fn detected(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            // NEON is architecturally mandatory on aarch64
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            _ => false,
+        }
+    }
+}
+
+/// ISA paths this host can execute, scalar (the oracle) always first and
+/// the widest path last. The parity harness iterates this.
+pub fn available() -> &'static [Isa] {
+    static AVAIL: OnceLock<Vec<Isa>> = OnceLock::new();
+    AVAIL.get_or_init(|| {
+        let mut v = vec![Isa::Scalar];
+        for isa in [Isa::Neon, Isa::Avx2] {
+            if isa.detected() {
+                v.push(isa);
+            }
+        }
+        v
+    })
+}
+
+/// The dispatched ISA, resolved exactly once per process from
+/// `DYNADIAG_ISA` (`scalar|avx2|neon|auto`; unset = `auto` = widest
+/// detected path). A forced ISA the host cannot execute degrades to
+/// scalar with a logged warning — never to a crash — so a cross-ISA CI
+/// matrix can run identical commands on every runner.
+///
+/// Resolution allocates (env read, the `available` vec); callers that gate
+/// on zero-allocation steady-state windows should touch this once before
+/// opening the measured window (`tests/native_steady_state.rs` does).
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let widest = *available().last().expect("scalar is always available");
+        let req = std::env::var("DYNADIAG_ISA").unwrap_or_default();
+        let isa = match req.to_ascii_lowercase().as_str() {
+            "" | "auto" => widest,
+            "scalar" => Isa::Scalar,
+            "avx2" => Isa::Avx2,
+            "neon" => Isa::Neon,
+            other => {
+                crate::info!(
+                    "DYNADIAG_ISA='{}' unrecognized (want scalar|avx2|neon|auto); using auto",
+                    other
+                );
+                widest
+            }
+        };
+        let isa = if isa.detected() {
+            isa
+        } else {
+            crate::info!(
+                "DYNADIAG_ISA={} is not executable on this host; falling back to scalar",
+                isa.name()
+            );
+            Isa::Scalar
+        };
+        crate::info!(
+            "diag microkernels: {} ({} f32 lane{})",
+            isa.name(),
+            isa.lanes(),
+            if isa.lanes() == 1 { "" } else { "s" }
+        );
+        isa
+    })
+}
+
+/// Clamp an explicitly requested ISA to something this host can execute
+/// (same degradation contract as `DYNADIAG_ISA` forcing). The per-ISA op
+/// entry points route through this so `spmm_t_on(Isa::Avx2, ..)` on a
+/// non-AVX2 host runs the scalar path instead of faulting.
+pub(crate) fn sanitize(isa: Isa) -> Isa {
+    if isa.detected() {
+        isa
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// One ISA flavor of the element-wise fused-multiply-add primitive that
+/// every diag hot loop decomposes into.
+///
+/// Contract (what the cross-ISA bit-identity rests on): for equal-length
+/// slices, `acc[i] <- round(a[i] * b[i] + acc[i])` with a **single**
+/// rounding per element, elements independent (no cross-lane arithmetic).
+pub(crate) trait Microkernel {
+    /// `acc[i] += a[i] * b[i]`, fused, over `acc.len()` elements.
+    /// All three slices must have equal length.
+    fn fma3(acc: &mut [f32], a: &[f32], b: &[f32]);
+}
+
+/// Portable scalar path — `f32::mul_add` per element. The parity oracle.
+pub(crate) struct ScalarKernel;
+
+impl Microkernel for ScalarKernel {
+    #[inline]
+    fn fma3(acc: &mut [f32], a: &[f32], b: &[f32]) {
+        debug_assert!(acc.len() == a.len() && acc.len() == b.len());
+        for ((y, &av), &bv) in acc.iter_mut().zip(a).zip(b) {
+            *y = av.mul_add(bv, *y);
+        }
+    }
+}
+
+/// AVX2 + FMA path: 8 f32 lanes, 4×8 register-blocked main loop.
+#[cfg(target_arch = "x86_64")]
+pub(crate) struct Avx2Kernel;
+
+#[cfg(target_arch = "x86_64")]
+impl Microkernel for Avx2Kernel {
+    #[inline]
+    fn fma3(acc: &mut [f32], a: &[f32], b: &[f32]) {
+        debug_assert!(acc.len() == a.len() && acc.len() == b.len());
+        // SAFETY: this type is only selected by `diag`'s dispatch after
+        // `Isa::Avx2.detected()` returned true (see `sanitize`/`active`).
+        unsafe { fma3_avx2(acc, a, b) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn fma3_avx2(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let (ap, bp, yp) = (a.as_ptr(), b.as_ptr(), acc.as_mut_ptr());
+    let mut i = 0usize;
+    // 4 × 8-lane register block: four independent load/FMA/store pipelines
+    // per iteration keep the FMA units fed
+    while i + 32 <= n {
+        let y0 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i)),
+            _mm256_loadu_ps(bp.add(i)),
+            _mm256_loadu_ps(yp.add(i)),
+        );
+        let y1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 8)),
+            _mm256_loadu_ps(bp.add(i + 8)),
+            _mm256_loadu_ps(yp.add(i + 8)),
+        );
+        let y2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 16)),
+            _mm256_loadu_ps(bp.add(i + 16)),
+            _mm256_loadu_ps(yp.add(i + 16)),
+        );
+        let y3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i + 24)),
+            _mm256_loadu_ps(bp.add(i + 24)),
+            _mm256_loadu_ps(yp.add(i + 24)),
+        );
+        _mm256_storeu_ps(yp.add(i), y0);
+        _mm256_storeu_ps(yp.add(i + 8), y1);
+        _mm256_storeu_ps(yp.add(i + 16), y2);
+        _mm256_storeu_ps(yp.add(i + 24), y3);
+        i += 32;
+    }
+    while i + 8 <= n {
+        let y = _mm256_fmadd_ps(
+            _mm256_loadu_ps(ap.add(i)),
+            _mm256_loadu_ps(bp.add(i)),
+            _mm256_loadu_ps(yp.add(i)),
+        );
+        _mm256_storeu_ps(yp.add(i), y);
+        i += 8;
+    }
+    // remainder tail: `mul_add` is fused too, so the tail lanes round
+    // exactly like the vector lanes (bit-identity across segment splits)
+    while i < n {
+        *yp.add(i) = (*ap.add(i)).mul_add(*bp.add(i), *yp.add(i));
+        i += 1;
+    }
+}
+
+/// NEON path: 4 f32 lanes, 4×4 register-blocked main loop.
+#[cfg(target_arch = "aarch64")]
+pub(crate) struct NeonKernel;
+
+#[cfg(target_arch = "aarch64")]
+impl Microkernel for NeonKernel {
+    #[inline]
+    fn fma3(acc: &mut [f32], a: &[f32], b: &[f32]) {
+        debug_assert!(acc.len() == a.len() && acc.len() == b.len());
+        // SAFETY: NEON is baseline on aarch64; this type only exists there.
+        unsafe { fma3_neon(acc, a, b) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn fma3_neon(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = acc.len();
+    let (ap, bp, yp) = (a.as_ptr(), b.as_ptr(), acc.as_mut_ptr());
+    let mut i = 0usize;
+    // 4 × 4-lane register block (vfmaq is a fused a + b*c)
+    while i + 16 <= n {
+        let y0 = vfmaq_f32(vld1q_f32(yp.add(i)), vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        let y1 = vfmaq_f32(
+            vld1q_f32(yp.add(i + 4)),
+            vld1q_f32(ap.add(i + 4)),
+            vld1q_f32(bp.add(i + 4)),
+        );
+        let y2 = vfmaq_f32(
+            vld1q_f32(yp.add(i + 8)),
+            vld1q_f32(ap.add(i + 8)),
+            vld1q_f32(bp.add(i + 8)),
+        );
+        let y3 = vfmaq_f32(
+            vld1q_f32(yp.add(i + 12)),
+            vld1q_f32(ap.add(i + 12)),
+            vld1q_f32(bp.add(i + 12)),
+        );
+        vst1q_f32(yp.add(i), y0);
+        vst1q_f32(yp.add(i + 4), y1);
+        vst1q_f32(yp.add(i + 8), y2);
+        vst1q_f32(yp.add(i + 12), y3);
+        i += 16;
+    }
+    while i + 4 <= n {
+        let y = vfmaq_f32(vld1q_f32(yp.add(i)), vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+        vst1q_f32(yp.add(i), y);
+        i += 4;
+    }
+    // fused scalar tail — rounds exactly like the vector lanes
+    while i < n {
+        *yp.add(i) = (*ap.add(i)).mul_add(*bp.add(i), *yp.add(i));
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive one `fma3` call per available ISA on identical buffers and
+    /// require bitwise-equal results at every length that exercises the
+    /// 4×lane main loop, the 1×lane loop, and the scalar tail.
+    #[test]
+    fn fma3_bitwise_parity_across_isas_at_all_remainders() {
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut next = move || {
+            // xorshift into (-2, 2): plenty of rounding-sensitive mantissas
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 40) as f32 / (1u64 << 22) as f32) - 2.0
+        };
+        for n in (0usize..=67).chain([128, 129, 255]) {
+            let a: Vec<f32> = (0..n).map(|_| next()).collect();
+            let b: Vec<f32> = (0..n).map(|_| next()).collect();
+            let acc0: Vec<f32> = (0..n).map(|_| next()).collect();
+            let mut want = acc0.clone();
+            ScalarKernel::fma3(&mut want, &a, &b);
+            for &isa in available() {
+                let mut got = acc0.clone();
+                match isa {
+                    Isa::Scalar => ScalarKernel::fma3(&mut got, &a, &b),
+                    #[cfg(target_arch = "x86_64")]
+                    Isa::Avx2 => Avx2Kernel::fma3(&mut got, &a, &b),
+                    #[cfg(target_arch = "aarch64")]
+                    Isa::Neon => NeonKernel::fma3(&mut got, &a, &b),
+                    _ => unreachable!("available() only lists executable ISAs"),
+                }
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "{} diverges from scalar at n={} i={} ({} vs {})",
+                        isa.name(),
+                        n,
+                        i,
+                        g,
+                        w
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn available_starts_with_the_scalar_oracle() {
+        let avail = available();
+        assert_eq!(avail[0], Isa::Scalar);
+        assert!(avail.iter().all(|i| i.detected()));
+        // widest-last ordering: lanes are non-decreasing
+        for w in avail.windows(2) {
+            assert!(w[0].lanes() <= w[1].lanes());
+        }
+    }
+
+    #[test]
+    fn active_is_executable_and_stable() {
+        let a = active();
+        assert!(a.detected(), "dispatched ISA must be executable");
+        assert_eq!(a, active(), "dispatch resolves once");
+        assert!(available().contains(&a));
+    }
+
+    #[test]
+    fn sanitize_never_returns_an_unexecutable_isa() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert!(sanitize(isa).detected());
+        }
+    }
+
+    #[test]
+    fn names_round_trip_the_env_spellings() {
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        assert_eq!(Isa::Avx2.name(), "avx2");
+        assert_eq!(Isa::Neon.name(), "neon");
+        assert_eq!(Isa::Scalar.lanes(), 1);
+        assert_eq!(Isa::Avx2.lanes(), 8);
+        assert_eq!(Isa::Neon.lanes(), 4);
+    }
+}

@@ -11,20 +11,30 @@
 //!   divides by,
 //! * [`diag`] — offset-major diagonal SpMM with branch-free two-segment
 //!   inner loops, forward and both backward products (the paper's custom
-//!   kernel, Sec 3.3),
+//!   kernel, Sec 3.3), executed through the dispatched SIMD microkernels,
 //! * [`bcsr`] — blocked-CSR SpMM (the SmaT-style converted format).
+//!
+//! The diag inner loops run on [`microkernel`], an explicit SIMD layer
+//! with one-time runtime ISA dispatch — AVX2/FMA 8-wide, NEON 4-wide, or
+//! a scalar `mul_add` oracle, overridable via
+//! `DYNADIAG_ISA=scalar|avx2|neon|auto`. All paths are **bit-identical**
+//! per element (single-rounding fused multiply-add everywhere), enforced
+//! by the cross-ISA fuzz harness in `tests/kernel_parity.rs` and the
+//! committed bit patterns in `tests/golden_diag_microkernel.rs`.
 //!
 //! Parallelism comes from [`pool`], a dependency-free **persistent worker
 //! pool** (long-lived threads, condvar dispatch, generation-counted
 //! barriers) with a flop-based inline/parallel grain; set
 //! `DYNADIAG_THREADS=1` for fully deterministic single-core runs. Results
-//! are deterministic at any fixed thread count; across thread counts only
-//! [`diag::grad_values`]'s batch-split reduction can differ in the last
-//! float bits (its partial-sum width follows the worker count).
+//! are deterministic at any fixed thread count *and* any dispatched ISA;
+//! across thread counts only [`diag::grad_values`]'s batch-split reduction
+//! can differ in the last float bits (its partial-sum width follows the
+//! worker count — not the lane width, which never changes results).
 
 pub mod bcsr;
 pub mod dense;
 pub mod diag;
+pub mod microkernel;
 pub mod pool;
 
 use anyhow::{bail, Result};

@@ -32,8 +32,12 @@
 //! Work is sized by a **flop-based grain**: callers pass the approximate
 //! flops per row, and the pool decides between running inline (small
 //! work), or splitting into up to `num_threads()` chunks of at least
-//! [`TASK_GRAIN_FLOPS`] each. Set `DYNADIAG_THREADS=1` for fully
-//! deterministic single-thread runs. Every run is deterministic for a
+//! [`TASK_GRAIN_FLOPS`] each. The grain is deliberately *ISA-blind*: the
+//! dispatched microkernel lane width (`kernels::microkernel`) never enters
+//! the chunking decision, so a given shape partitions identically under
+//! `DYNADIAG_ISA=scalar` and `=avx2`/`=neon` — which is what lets the
+//! cross-ISA parity harness compare parallel runs bitwise.
+//! Set `DYNADIAG_THREADS=1` for fully deterministic single-thread runs. Every run is deterministic for a
 //! *fixed* thread count (tasks own disjoint output rows, claim order never
 //! affects results); across different thread counts, all kernels are
 //! bit-identical except `diag::grad_values`'s batch-split path, whose

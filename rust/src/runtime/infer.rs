@@ -19,6 +19,15 @@
 //! logits are bit-identical whether it ran alone or coalesced into a
 //! micro-batch. `rust/tests/serve_parity.rs` pins this contract; the
 //! serving engine ([`crate::serve`]) relies on it.
+//!
+//! **ISA invariance:** the diag layers run on the dispatched SIMD
+//! microkernels ([`crate::kernels::microkernel`]), whose scalar/AVX2/NEON
+//! paths are bit-identical per element, and the dense embed/head stay
+//! outside the dispatch entirely — so the *same request returns the same
+//! logit bits under any `DYNADIAG_ISA` setting* on a given build. The
+//! cross-ISA parity harness (`tests/kernel_parity.rs`) enforces the kernel
+//! half of that claim; the CI ISA matrix re-runs the serve/determinism
+//! suites under forced `scalar` and `auto` to enforce the rest.
 
 use anyhow::{anyhow, bail, Result};
 

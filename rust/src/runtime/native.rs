@@ -28,7 +28,13 @@
 //! `ParamStore::absorb_take`) close the loop: in steady state a train step
 //! performs **zero** buffer allocations. Per-step IO routing is resolved
 //! once at artifact-build time into index *plans* (no per-step name
-//! formatting or map lookups).
+//! formatting or map lookups). The diag products inside the step functions
+//! run on the process-wide dispatched SIMD path
+//! ([`crate::kernels::microkernel`], `DYNADIAG_ISA` override); dispatch
+//! resolves lazily on the first kernel call and allocates a little
+//! (env read), which is one-time init, not steady-state — the
+//! `native_steady_state.rs` gates resolve it before opening their measured
+//! windows.
 //!
 //! The transformer models (`vit_*`, `mixer_*`, `gpt_*`) remain
 //! XLA-artifact-only; asking for them here produces a clear error.

@@ -1,0 +1,205 @@
+#!/usr/bin/env python3
+"""Generate diag_microkernel.json — committed bit patterns for the four
+diag SpMM ops (`kernels/diag.rs`) under the single-rounding FMA contract
+of `kernels/microkernel.rs`.
+
+Why this mirror is *bit-exact* without arbitrary-precision arithmetic:
+every input is generated as m / 2**16 with |m| <= 2**17 (at most 18
+significant bits, f32-exact), and every accumulator stays below 32 in
+magnitude. Then
+
+  * each product a*b is p / 2**32 with |p| <= 2**34 — exact in f64,
+  * each f32 accumulator in this range lies on the 2**-32 grid (its f32
+    ulp is >= 2**-32 once |acc| >= 2**-9, and below that it has spare
+    mantissa bits), so product + acc is (p + r) / 2**32 with
+    |p + r| < 2**38 — also exact in f64.
+
+So `f32(f64(a) * f64(b) + acc)` performs exactly ONE rounding of the
+exact result — the IEEE fused multiply-add semantics that `f32::mul_add`,
+`_mm256_fmadd_ps`, and `vfmaq_f32` all implement. The committed u32 bit
+patterns therefore pin the fused-rounding contract itself: a kernel
+edit that splits the FMA into mul-then-add (two roundings) fails these
+goldens even when every ISA path drifts identically and the cross-ISA
+fuzz in tests/kernel_parity.rs cannot see it.
+
+Accumulation-order mirror (must match diag.rs exactly):
+  * spmm_t        — per (bi, i): acc = 0, then diagonals in `offsets` order
+  * spmm          — per (bi, c): contributions in (j, i) lexicographic order
+                    (j outer loop, i ascending — the segment walk covers i
+                    ascending within each diagonal)
+  * grad_values   — per (j, i): acc = 0, then batch rows in index order
+                    (fixture shapes stay far below the batch-split flop
+                    threshold, so the diag-split path runs and the pool
+                    grain keeps it inline at any thread count)
+  * spmm_t_bias   — per (bi, i): acc = bias[i], then diagonals in order
+                    (Epilogue::None). The Gelu epilogue goes through libm
+                    tanh, which is NOT bit-mirrorable across hosts, so
+                    `gelu_ref` is an f64 mirror compared at 1e-5.
+
+Run from the repo root:
+  python3 rust/tests/golden/generate_diag_microkernel.py
+"""
+import json
+import math
+import os
+import struct
+
+
+def f32(x):
+    """Round a Python float (f64) to f32 — one correct rounding."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def bits(x):
+    """Little-endian u32 bit pattern of the f32 value x."""
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+# f64 values of the f32 constants in kernels/mod.rs
+SQRT_2_OVER_PI = f32(0.797_884_56)
+GELU_C = f32(0.044_715)
+
+
+def gelu_ref_f64(z):
+    """f64 mirror of kernels::gelu (compared at 1e-5, not bitwise)."""
+    u = SQRT_2_OVER_PI * (z + GELU_C * z * z * z)
+    return 0.5 * z * (1.0 + math.tanh(u))
+
+
+class Lcg:
+    """Deterministic 64-bit LCG; emits f32-exact dyadics m/2**16 in [-2, 2)."""
+
+    def __init__(self, seed):
+        self.state = seed & 0xFFFFFFFFFFFFFFFF
+
+    def next_u64(self):
+        self.state = (self.state * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        return self.state
+
+    def dyadic(self):
+        m = ((self.next_u64() >> 24) % (1 << 18)) - (1 << 17)
+        v = m / 65536.0
+        assert f32(v) == v, "dyadic not f32-exact"
+        return v
+
+    def vec(self, n):
+        return [self.dyadic() for _ in range(n)]
+
+
+def fma(a, b, acc):
+    """One correctly-rounded f32 fused multiply-add (see module docstring
+    for why plain f64 arithmetic is exact here)."""
+    exact = a * b + acc  # exact in f64 for our value ranges
+    out = f32(exact)
+    assert abs(out) < 32.0, "accumulator left the exactness envelope"
+    return 0.0 if out == 0.0 else out  # cancellation yields +0 under RNE
+
+
+def spmm_t(x, offsets, values, b, n_in, n_out, bias=None):
+    y = []
+    for bi in range(b):
+        xr = x[bi * n_in:(bi + 1) * n_in]
+        for i in range(n_out):
+            acc = bias[i] if bias is not None else 0.0
+            for j, off in enumerate(offsets):
+                acc = fma(values[j * n_out + i], xr[(i + off) % n_in], acc)
+            y.append(acc)
+    return y
+
+
+def spmm(dy, offsets, values, b, n_in, n_out):
+    dx = [0.0] * (b * n_in)
+    for bi in range(b):
+        dyr = dy[bi * n_out:(bi + 1) * n_out]
+        for j, off in enumerate(offsets):
+            for i in range(n_out):
+                c = bi * n_in + (i + off) % n_in
+                dx[c] = fma(values[j * n_out + i], dyr[i], dx[c])
+    return dx
+
+
+def grad_values(x, dy, offsets, b, n_in, n_out):
+    k = len(offsets)
+    dv = [0.0] * (k * n_out)
+    for j, off in enumerate(offsets):
+        for i in range(n_out):
+            acc = 0.0
+            for bi in range(b):
+                acc = fma(dy[bi * n_out + i], x[bi * n_in + (i + off) % n_in], acc)
+            dv[j * n_out + i] = acc
+    return dv
+
+
+# Shapes chosen to cover: offset 0 and n_in-1, multi-wrap (n_out > n_in),
+# n_out % 8 != 0 and % 4 != 0 (vector tails on both lane widths), batch of
+# one, and segments long enough (>= 32) to engage the unrolled 4x-vector
+# main loops of the AVX2/NEON kernels.
+CASES = [
+    dict(n_in=8, n_out=8, k=3, b=2, offsets=[0, 3, 7]),
+    dict(n_in=13, n_out=29, k=4, b=3, offsets=[0, 5, 11, 12]),
+    dict(n_in=16, n_out=5, k=2, b=1, offsets=[1, 15]),
+    dict(n_in=9, n_out=33, k=5, b=2, offsets=[0, 2, 4, 7, 8]),
+    dict(n_in=40, n_out=64, k=6, b=2, offsets=[0, 13, 25, 31, 38, 39]),
+    dict(n_in=100, n_out=70, k=3, b=1, offsets=[0, 50, 99]),
+]
+
+
+def build_case(idx, spec):
+    n_in, n_out, k, b = spec["n_in"], spec["n_out"], spec["k"], spec["b"]
+    offsets = spec["offsets"]
+    assert len(offsets) == k and all(o < n_in for o in offsets)
+    rng = Lcg(0x9E3779B97F4A7C15 ^ (idx * 0xD1B54A32D192ED03))
+    x = rng.vec(b * n_in)
+    dy = rng.vec(b * n_out)
+    values = rng.vec(k * n_out)
+    bias = rng.vec(n_out)
+
+    y = spmm_t(x, offsets, values, b, n_in, n_out)
+    dx = spmm(dy, offsets, values, b, n_in, n_out)
+    dv = grad_values(x, dy, offsets, b, n_in, n_out)
+    yb = spmm_t(x, offsets, values, b, n_in, n_out, bias=bias)
+
+    return dict(
+        n_in=n_in,
+        n_out=n_out,
+        k=k,
+        b=b,
+        offsets=offsets,
+        x=x,
+        dy=dy,
+        values=values,
+        bias=bias,
+        spmm_t_bits=[bits(v) for v in y],
+        spmm_bits=[bits(v) for v in dx],
+        grad_values_bits=[bits(v) for v in dv],
+        spmm_t_bias_bits=[bits(v) for v in yb],
+        gelu_ref=[gelu_ref_f64(v) for v in yb],
+    )
+
+
+def main():
+    out = dict(
+        note=(
+            "Golden bit patterns for kernels/diag.rs under the "
+            "single-rounding FMA contract of kernels/microkernel.rs. "
+            "Inputs are f32-exact dyadics (m/2**16); *_bits fields are "
+            "u32 f32 bit patterns every ISA path must reproduce exactly; "
+            "gelu_ref is an f64 libm mirror compared at 1e-5. Regenerate "
+            "with generate_diag_microkernel.py."
+        ),
+        generator="generate_diag_microkernel.py",
+        cases=[build_case(i, spec) for i, spec in enumerate(CASES)],
+    )
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "diag_microkernel.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    n = sum(
+        len(c["spmm_t_bits"]) + len(c["spmm_bits"]) + len(c["grad_values_bits"]) + len(c["spmm_t_bias_bits"])
+        for c in out["cases"]
+    )
+    print(f"wrote {path}: {len(out['cases'])} cases, {n} committed bit patterns")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+//! Golden bit-pattern regression tests for the diag SpMM microkernels
+//! (ISSUE 6 satellite): every op in `kernels/diag.rs`, on **every ISA
+//! path this host can execute**, must reproduce the committed f32 bit
+//! patterns in `tests/golden/diag_microkernel.json` exactly.
+//!
+//! The fixture is produced by `generate_diag_microkernel.py`: inputs are
+//! f32-exact dyadics (`m / 2^16`) with bounded accumulators, so the
+//! Python mirror's `f32(f64(a) * f64(b) + acc)` is a *single correct
+//! rounding* of the exact result — precisely the IEEE fused multiply-add
+//! that `f32::mul_add`, `_mm256_fmadd_ps`, and `vfmaq_f32` implement.
+//! That makes these goldens stronger than the cross-ISA fuzz in
+//! `tests/kernel_parity.rs`: a change that splits the FMA into
+//! mul-then-add (two roundings) drifts every ISA path *identically*, so
+//! in-process parity still passes — but the committed bits catch it on
+//! any host, with no second ISA required.
+//!
+//! The tanh-GELU epilogue goes through libm and is not bit-mirrorable
+//! across hosts, so the fused-GELU case compares against an f64 mirror
+//! at 1e-5 instead (matching the `golden_dynadiag.rs` precedent).
+//!
+//! Regenerate with: `python3 rust/tests/golden/generate_diag_microkernel.py`
+
+use dynadiag::kernels::diag::{self, Epilogue};
+use dynadiag::kernels::microkernel;
+use dynadiag::util::json::Json;
+
+fn fixture() -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/diag_microkernel.json");
+    Json::from_file(&path).expect("fixture parses")
+}
+
+struct Case {
+    n_in: usize,
+    n_out: usize,
+    b: usize,
+    offsets: Vec<usize>,
+    x: Vec<f32>,
+    dy: Vec<f32>,
+    values: Vec<f32>,
+    bias: Vec<f32>,
+    spmm_t_bits: Vec<usize>,
+    spmm_bits: Vec<usize>,
+    grad_values_bits: Vec<usize>,
+    spmm_t_bias_bits: Vec<usize>,
+    gelu_ref: Vec<f64>,
+}
+
+fn cases(fx: &Json) -> Vec<Case> {
+    fx.req("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| Case {
+            n_in: c.req("n_in").unwrap().as_usize().unwrap(),
+            n_out: c.req("n_out").unwrap().as_usize().unwrap(),
+            b: c.req("b").unwrap().as_usize().unwrap(),
+            offsets: c.req("offsets").unwrap().as_usize_vec().unwrap(),
+            x: c.req("x").unwrap().as_f32_vec().unwrap(),
+            dy: c.req("dy").unwrap().as_f32_vec().unwrap(),
+            values: c.req("values").unwrap().as_f32_vec().unwrap(),
+            bias: c.req("bias").unwrap().as_f32_vec().unwrap(),
+            spmm_t_bits: c.req("spmm_t_bits").unwrap().as_usize_vec().unwrap(),
+            spmm_bits: c.req("spmm_bits").unwrap().as_usize_vec().unwrap(),
+            grad_values_bits: c.req("grad_values_bits").unwrap().as_usize_vec().unwrap(),
+            spmm_t_bias_bits: c.req("spmm_t_bias_bits").unwrap().as_usize_vec().unwrap(),
+            gelu_ref: c
+                .req("gelu_ref")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap())
+                .collect(),
+        })
+        .collect()
+}
+
+/// The fixture inputs must round-trip the JSON layer exactly (they are
+/// f32-exact dyadics by construction) — if this fails, suspect the JSON
+/// number path, not the kernels.
+#[test]
+fn fixture_inputs_are_f32_exact_dyadics() {
+    let fx = fixture();
+    for (ci, c) in cases(&fx).iter().enumerate() {
+        for (name, vec) in [("x", &c.x), ("dy", &c.dy), ("values", &c.values), ("bias", &c.bias)] {
+            for (i, &v) in vec.iter().enumerate() {
+                let scaled = f64::from(v) * 65536.0;
+                assert_eq!(
+                    scaled,
+                    scaled.round(),
+                    "case {} {}[{}] = {} is not on the m/2^16 grid",
+                    ci,
+                    name,
+                    i,
+                    v
+                );
+                assert!(v.abs() < 2.0, "case {} {}[{}] out of range", ci, name, i);
+            }
+        }
+    }
+}
+
+fn assert_bits(got: &[f32], want: &[usize], what: &str, ci: usize, isa: &str) {
+    assert_eq!(got.len(), want.len(), "case {} {} ({}): length", ci, what, isa);
+    for (i, (g, &w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits() as usize,
+            w,
+            "case {} {} ({}) element {}: got {} (bits {:#010x}), committed bits {:#010x}",
+            ci,
+            what,
+            isa,
+            i,
+            g,
+            g.to_bits(),
+            w as u32
+        );
+    }
+}
+
+/// All four diag ops reproduce the committed bit patterns on every ISA
+/// path this host can run — scalar always, plus AVX2 and/or NEON where
+/// detected (and whatever `DYNADIAG_ISA` forces via the dispatched path,
+/// which is one of the forced paths by construction).
+#[test]
+fn diag_ops_reproduce_committed_bits_on_every_isa() {
+    let fx = fixture();
+    for &isa in microkernel::available() {
+        for (ci, c) in cases(&fx).iter().enumerate() {
+            let (b, n_in, n_out) = (c.b, c.n_in, c.n_out);
+            let k = c.offsets.len();
+
+            let mut y = vec![0.0f32; b * n_out];
+            diag::spmm_t_on(isa, &c.x, &c.offsets, &c.values, &mut y, b, n_in, n_out);
+            assert_bits(&y, &c.spmm_t_bits, "spmm_t", ci, isa.name());
+
+            let mut dx = vec![0.0f32; b * n_in];
+            diag::spmm_on(isa, &c.dy, &c.offsets, &c.values, &mut dx, b, n_in, n_out);
+            assert_bits(&dx, &c.spmm_bits, "spmm", ci, isa.name());
+
+            let mut dv = vec![0.0f32; k * n_out];
+            diag::grad_values_on(isa, &c.x, &c.dy, &c.offsets, &mut dv, b, n_in, n_out);
+            assert_bits(&dv, &c.grad_values_bits, "grad_values", ci, isa.name());
+
+            let mut yb = vec![0.0f32; b * n_out];
+            diag::spmm_t_bias_on(
+                isa,
+                &c.x,
+                &c.offsets,
+                &c.values,
+                &c.bias,
+                &mut yb,
+                b,
+                n_in,
+                n_out,
+                Epilogue::None,
+            );
+            assert_bits(&yb, &c.spmm_t_bias_bits, "spmm_t_bias", ci, isa.name());
+        }
+    }
+}
+
+/// The fused GELU epilogue tracks the f64 libm mirror at 1e-5 on every
+/// ISA path (the epilogue itself is scalar libm on all paths, so any
+/// divergence here means the pre-activation accumulator drifted).
+#[test]
+fn fused_gelu_epilogue_tracks_f64_mirror_on_every_isa() {
+    let fx = fixture();
+    for &isa in microkernel::available() {
+        for (ci, c) in cases(&fx).iter().enumerate() {
+            let (b, n_in, n_out) = (c.b, c.n_in, c.n_out);
+            let mut y = vec![0.0f32; b * n_out];
+            diag::spmm_t_bias_on(
+                isa,
+                &c.x,
+                &c.offsets,
+                &c.values,
+                &c.bias,
+                &mut y,
+                b,
+                n_in,
+                n_out,
+                Epilogue::Gelu,
+            );
+            for (i, (&g, &w)) in y.iter().zip(&c.gelu_ref).enumerate() {
+                let diff = (f64::from(g) - w).abs();
+                assert!(
+                    diff < 1e-5,
+                    "case {} gelu ({}) element {}: {} vs mirror {} (diff {})",
+                    ci,
+                    isa.name(),
+                    i,
+                    g,
+                    w,
+                    diff
+                );
+            }
+        }
+    }
+}

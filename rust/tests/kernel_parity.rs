@@ -6,6 +6,7 @@
 //! failure reports the seed and the exact failing configuration.
 
 use dynadiag::bcsr::Bcsr;
+use dynadiag::kernels::microkernel;
 use dynadiag::kernels::{bcsr, dense, diag, dense_matmul_t, DiagPacked};
 use dynadiag::sparsity::diagonal::DiagMatrix;
 use dynadiag::tensor::Tensor;
@@ -349,6 +350,184 @@ fn pool_concurrent_dispatchers_stay_isolated() {
         .collect();
     for h in handles {
         h.join().unwrap();
+    }
+}
+
+/// Cross-ISA bitwise parity fuzz (the ISSUE-6 microkernel acceptance
+/// gate): all four diag ops, on every ISA path this host can execute,
+/// produce **bit-identical** output to the scalar `mul_add` oracle —
+/// across random shapes, wrap-edge offsets (0 and `n_in - 1` are forced
+/// into about half the cases), batch sizes, and output widths that leave
+/// every possible vector-tail remainder on both 8-wide and 4-wide paths.
+#[test]
+fn diag_ops_bitwise_parity_across_isas() {
+    forall_explain(
+        601,
+        80,
+        |r| {
+            let n_in = 2 + r.below(70);
+            let n_out = 1 + r.below(97);
+            let k = 1 + r.below(n_in);
+            let b = 1 + r.below(7);
+            let mut rr = r.fork(61);
+            let mut offsets = rr.choose_k(n_in, k);
+            if rr.bool(0.5) {
+                // force both wrap edges in, keeping offsets sorted unique
+                offsets[0] = 0;
+                let last = offsets.len() - 1;
+                offsets[last] = n_in - 1;
+                offsets.sort_unstable();
+                offsets.dedup();
+            }
+            let k = offsets.len();
+            let values: Vec<f32> = (0..k * n_out).map(|_| rr.normal_f32(0.0, 1.0)).collect();
+            let x: Vec<f32> = (0..b * n_in).map(|_| rr.normal_f32(0.0, 1.0)).collect();
+            let dy: Vec<f32> = (0..b * n_out).map(|_| rr.normal_f32(0.0, 1.0)).collect();
+            let bias: Vec<f32> = (0..n_out).map(|_| rr.normal_f32(0.0, 1.0)).collect();
+            (offsets, values, x, dy, bias, b, n_in, n_out)
+        },
+        |(offsets, values, x, dy, bias, b, n_in, n_out)| {
+            let (b, n_in, n_out) = (*b, *n_in, *n_out);
+            let k = offsets.len();
+            let bit_diff = |got: &[f32], want: &[f32]| -> Option<usize> {
+                got.iter().zip(want).position(|(g, w)| g.to_bits() != w.to_bits())
+            };
+
+            // scalar oracle for all four ops
+            let mut y_s = vec![0.0f32; b * n_out];
+            diag::spmm_t_on(microkernel::Isa::Scalar, x, offsets, values, &mut y_s, b, n_in, n_out);
+            let mut dx_s = vec![0.0f32; b * n_in];
+            diag::spmm_on(microkernel::Isa::Scalar, dy, offsets, values, &mut dx_s, b, n_in, n_out);
+            let mut dv_s = vec![0.0f32; k * n_out];
+            diag::grad_values_on(
+                microkernel::Isa::Scalar,
+                x,
+                dy,
+                offsets,
+                &mut dv_s,
+                b,
+                n_in,
+                n_out,
+            );
+            let mut yb_s = vec![0.0f32; b * n_out];
+            diag::spmm_t_bias_on(
+                microkernel::Isa::Scalar,
+                x,
+                offsets,
+                values,
+                bias,
+                &mut yb_s,
+                b,
+                n_in,
+                n_out,
+                diag::Epilogue::Gelu,
+            );
+
+            for &isa in microkernel::available() {
+                let mut y = vec![0.0f32; b * n_out];
+                diag::spmm_t_on(isa, x, offsets, values, &mut y, b, n_in, n_out);
+                if let Some(i) = bit_diff(&y, &y_s) {
+                    return Err(format!(
+                        "spmm_t {} vs scalar at [{}]: {} vs {}",
+                        isa.name(),
+                        i,
+                        y[i],
+                        y_s[i]
+                    ));
+                }
+                let mut dx = vec![0.0f32; b * n_in];
+                diag::spmm_on(isa, dy, offsets, values, &mut dx, b, n_in, n_out);
+                if let Some(i) = bit_diff(&dx, &dx_s) {
+                    return Err(format!(
+                        "spmm {} vs scalar at [{}]: {} vs {}",
+                        isa.name(),
+                        i,
+                        dx[i],
+                        dx_s[i]
+                    ));
+                }
+                let mut dv = vec![0.0f32; k * n_out];
+                diag::grad_values_on(isa, x, dy, offsets, &mut dv, b, n_in, n_out);
+                if let Some(i) = bit_diff(&dv, &dv_s) {
+                    return Err(format!(
+                        "grad_values {} vs scalar at [{}]: {} vs {}",
+                        isa.name(),
+                        i,
+                        dv[i],
+                        dv_s[i]
+                    ));
+                }
+                let mut yb = vec![0.0f32; b * n_out];
+                diag::spmm_t_bias_on(
+                    isa,
+                    x,
+                    offsets,
+                    values,
+                    bias,
+                    &mut yb,
+                    b,
+                    n_in,
+                    n_out,
+                    diag::Epilogue::Gelu,
+                );
+                if let Some(i) = bit_diff(&yb, &yb_s) {
+                    return Err(format!(
+                        "spmm_t_bias {} vs scalar at [{}]: {} vs {}",
+                        isa.name(),
+                        i,
+                        yb[i],
+                        yb_s[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Forward diag SpMM is bitwise stable under `set_local_thread_cap`
+/// (ISSUE-6 satellite): rows partition by the flop-based pool grain,
+/// which is ISA-blind and row-disjoint, so capping the worker count —
+/// including to 1 (fully inline) — must not move a single bit, for
+/// shapes both below and above the parallel grain.
+#[test]
+fn diag_spmm_t_bitwise_stable_under_local_thread_caps() {
+    use dynadiag::kernels::pool::set_local_thread_cap;
+    // (n_in, n_out, k, b): small stays inline; large clears the
+    // 64k-flop grain (2*k*n_out*b = 2*40*512*8 ≈ 327k flops) and fans out
+    let shapes = [(24usize, 40usize, 6usize, 3usize), (96, 512, 40, 8)];
+    let mut rng = Rng::new(602);
+    for &(n_in, n_out, k, b) in &shapes {
+        let offsets = rng.choose_k(n_in, k);
+        let values: Vec<f32> = (0..k * n_out).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let x: Vec<f32> = (0..b * n_in).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut want = vec![0.0f32; b * n_out];
+        diag::spmm_t(&x, &offsets, &values, &mut want, b, n_in, n_out);
+        for cap in [1usize, 2] {
+            // the cap is thread-local, so apply it on a fresh thread and
+            // leave this one (and the shared pool) untouched
+            let (offsets, values, x, want) =
+                (offsets.clone(), values.clone(), x.clone(), want.clone());
+            std::thread::spawn(move || {
+                set_local_thread_cap(cap);
+                let mut got = vec![0.0f32; b * n_out];
+                diag::spmm_t(&x, &offsets, &values, &mut got, b, n_in, n_out);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "cap {} n_out {} elem {}: {} vs {}",
+                        cap,
+                        n_out,
+                        i,
+                        g,
+                        w
+                    );
+                }
+            })
+            .join()
+            .unwrap();
+        }
     }
 }
 

@@ -11,8 +11,16 @@
 //! counters reset after warmup, on the thread whose arena is being judged
 //! (the counters are thread-local, so the trainer gate here can never be
 //! tripped by shard arenas and vice versa).
+//!
+//! One-time process initialization is explicitly resolved *before* every
+//! measured window: the microkernel ISA dispatch
+//! (`kernels::microkernel::active`) reads the environment and builds its
+//! path table on first use, which allocates. The warmup kernels resolve it
+//! implicitly, but each test pins it up front so the zero-alloc windows
+//! can never race a lazy dispatch init regardless of how warmup evolves.
 
 use dynadiag::config::{MethodKind, RunConfig};
+use dynadiag::kernels::microkernel;
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::{drive, workspace};
 use dynadiag::runtime::{BackendKind, HostTensor, Session};
@@ -26,6 +34,7 @@ use dynadiag::util::rng::Rng;
 /// stops allocating after warmup.
 #[test]
 fn train_artifact_reaches_zero_alloc_steady_state() {
+    microkernel::active(); // resolve ISA dispatch outside the window
     let session = Session::open_kind(BackendKind::Native, "artifacts").unwrap();
     let art = session.executable("mlp_micro_masked_train").unwrap();
     let mut inputs = drive::synth_train_inputs(&art, 71);
@@ -55,6 +64,7 @@ fn train_artifact_reaches_zero_alloc_steady_state() {
 /// the caller recycles the outputs.
 #[test]
 fn micro_artifact_invocations_reuse_buffers() {
+    microkernel::active(); // resolve ISA dispatch outside the window
     let session = Session::open_kind(BackendKind::Native, "artifacts").unwrap();
     let (n, k) = (96usize, 7usize);
     let art = session.executable(&format!("micro_diag_n{}_k{}", n, k)).unwrap();
@@ -91,6 +101,7 @@ fn micro_artifact_invocations_reuse_buffers() {
 /// at all. The gate stays a strict `fresh == 0`.
 #[test]
 fn trainer_loop_reaches_zero_alloc_steady_state() {
+    microkernel::active(); // resolve ISA dispatch outside the window
     let mut cfg = RunConfig::default();
     cfg.model = "mlp_micro".into();
     cfg.backend = "native".into();
@@ -128,6 +139,7 @@ fn trainer_loop_reaches_zero_alloc_steady_state() {
 /// arenas balanced; this test is the gate on that design.
 #[test]
 fn sharded_serving_reaches_zero_alloc_steady_state_per_shard() {
+    microkernel::active(); // resolve ISA dispatch outside the window
     let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 31);
     let mut server = ShardedServer::start(
         model,
