@@ -17,6 +17,13 @@
 //! 3. **p99 ceiling** — every cell's p99 must stay under
 //!    `DYNADIAG_SERVE_P99_MS` (default 250 ms — generous, catches
 //!    order-of-magnitude regressions without flaking on shared runners).
+//! 4. **Clean counters** — no cell in this sweep injects faults or sets
+//!    deadlines, so every shed/timeout/failure/restart counter must be
+//!    exactly zero. Anything else means the robustness layer is
+//!    misfiring on the happy path. Violation exits 1.
+//! 5. **Journaled cell** — one sharded cell runs with the request journal
+//!    attached and gates both `fresh_allocs == 0` (journaling must not
+//!    break the arena contract) and `receipts > 0`.
 //!
 //! Set `DYNADIAG_BENCH_FAST=1` (CI does) for a trimmed sweep with the
 //! same JSON schema.
@@ -26,8 +33,8 @@ use std::time::Duration;
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::workspace;
 use dynadiag::serve::{
-    drive_load, drive_load_sharded, BatchPolicy, Completion, LoadSpec, ManualClock, ServeEngine,
-    ShardCompletion, ShardPolicy, ShardedServer, Submit,
+    drive_load, drive_load_sharded, BatchPolicy, Completion, Journal, LoadSpec, ManualClock,
+    ServeEngine, ShardCompletion, ShardPolicy, ShardedServer, Submit,
 };
 use dynadiag::util::json::Json;
 use dynadiag::util::rng::Rng;
@@ -89,6 +96,7 @@ fn sharded_parity_mismatches(shards: usize, n: usize, seed: u64) -> usize {
             shards,
             batch: BatchPolicy::new(4, 200).unwrap(),
             max_outstanding: 16,
+            ..ShardPolicy::default()
         },
     )
     .unwrap();
@@ -105,6 +113,7 @@ fn sharded_parity_mismatches(shards: usize, n: usize, seed: u64) -> usize {
                     workspace::give_f32(x);
                     break;
                 }
+                Submit::Shed(..) => unreachable!("no deadline and no faults configured"),
             }
         }
         server.poll_completions(&mut out, Some(Duration::from_millis(50))).unwrap();
@@ -165,6 +174,7 @@ fn main() {
     let mut cells: Vec<Json> = Vec::new();
     let mut alloc_failed = false;
     let mut p99_failed = false;
+    let mut clean_failed = false;
     for model_name in models {
         let cfg = mlp_config(model_name).unwrap();
         for &s in sparsities {
@@ -213,6 +223,10 @@ fn main() {
                     if r.p99_ms > p99_bound_ms {
                         p99_failed = true;
                     }
+                    if !r.is_clean() {
+                        eprintln!("unclean no-fault cell: {}", r.summary());
+                        clean_failed = true;
+                    }
                     let mut cell = std::collections::BTreeMap::new();
                     cell.insert("model".to_string(), Json::Str(model_name.to_string()));
                     cell.insert("sparsity".to_string(), Json::Num(s));
@@ -256,6 +270,7 @@ fn main() {
                     shards: n_shards,
                     batch: BatchPolicy::new(shard_ceiling, 200).unwrap(),
                     max_outstanding: cap,
+                    ..ShardPolicy::default()
                 },
             )
             .unwrap();
@@ -289,6 +304,10 @@ fn main() {
             }
             if r.p99_ms > p99_bound_ms {
                 p99_failed = true;
+            }
+            if !r.is_clean() {
+                eprintln!("unclean no-fault shard cell: {}", r.summary());
+                clean_failed = true;
             }
             thru_by_shards.push((n_shards, r.throughput_rps));
             let mut cell = std::collections::BTreeMap::new();
@@ -330,6 +349,85 @@ fn main() {
         }
     }
 
+    // -- journaled cell --------------------------------------------------
+    // One sharded run with the request journal attached: journaling must
+    // keep the per-shard zero-alloc steady state AND actually record a
+    // receipt per request.
+    println!("\n== journaled serving: receipts on, zero-alloc gate ==");
+    let mut journal_failed = false;
+    let journal_cell = {
+        let cfg = mlp_config(shard_model).unwrap();
+        let dm = DiagModel::synth(cfg, 0.9, 8_100);
+        let n_shards = 2usize;
+        let cap = (4 * shard_ceiling * n_shards).max(32);
+        let mut server = ShardedServer::start(
+            dm,
+            ShardPolicy {
+                shards: n_shards,
+                batch: BatchPolicy::new(shard_ceiling, 200).unwrap(),
+                max_outstanding: cap,
+                ..ShardPolicy::default()
+            },
+        )
+        .unwrap();
+        let jpath = std::env::temp_dir().join(format!(
+            "dynadiag_serve_bench_journal_{}.ddjnl",
+            std::process::id()
+        ));
+        // attached before warmup so the journal's scratch encoder reaches
+        // its steady-state size alongside the arenas
+        server.attach_journal(Journal::create(&jpath).expect("create bench journal"));
+        let journal_requests = if fast { 256 } else { 1024 };
+        let warm = LoadSpec { requests: 2 * cap, rate_rps: 0.0, max_outstanding: cap, seed: 5 };
+        drive_load_sharded(&mut server, &warm, 4 * n_shards, None, None).unwrap();
+        server.reset_metrics();
+        let spec = LoadSpec {
+            requests: journal_requests,
+            rate_rps: 0.0,
+            max_outstanding: cap,
+            seed: 11,
+        };
+        let r = drive_load_sharded(&mut server, &spec, 4 * n_shards, None, None).unwrap();
+        let per_shard = server.shard_stats().unwrap();
+        let shard_fresh: Vec<usize> = per_shard.iter().map(|s| s.fresh_allocs).collect();
+        let (journal_reqs, receipts) =
+            server.take_journal().expect("attached above").finish().expect("finish journal");
+        server.shutdown().unwrap();
+        let _ = std::fs::remove_file(&jpath);
+        println!(
+            "{:<10} shards {:>2} [journal]: {:>9.0} rps, {} receipts, fresh/shard {:?}",
+            shard_model, n_shards, r.throughput_rps, receipts, shard_fresh
+        );
+        if shard_fresh.iter().any(|&f| f > 0) || r.fresh_allocs > 0 {
+            eprintln!("journaled cell broke the zero-alloc steady state");
+            journal_failed = true;
+        }
+        if receipts == 0 || (receipts as usize) < journal_requests {
+            eprintln!(
+                "journaled cell recorded {} receipts for {} measured requests",
+                receipts, journal_requests
+            );
+            journal_failed = true;
+        }
+        if !r.is_clean() {
+            eprintln!("unclean journaled cell: {}", r.summary());
+            clean_failed = true;
+        }
+        let mut cell = std::collections::BTreeMap::new();
+        cell.insert("model".to_string(), Json::Str(shard_model.to_string()));
+        cell.insert("max_batch".to_string(), Json::Num(shard_ceiling as f64));
+        cell.insert("journal_requests".to_string(), Json::Num(journal_reqs as f64));
+        cell.insert("journal_receipts".to_string(), Json::Num(receipts as f64));
+        cell.insert(
+            "fresh_per_shard".to_string(),
+            Json::Arr(shard_fresh.iter().map(|&f| Json::Num(f as f64)).collect()),
+        );
+        if let Json::Obj(rep) = r.to_json() {
+            cell.extend(rep);
+        }
+        Json::Obj(cell)
+    };
+
     // sharded parity: bitwise identical to sequential at every shard count
     println!("\n== sharded parity: N-shard serving == sequential (bitwise) ==");
     let mut shard_parity_failed = false;
@@ -358,6 +456,7 @@ fn main() {
         ("p99_bound_ms", Json::Num(p99_bound_ms)),
         ("cells", Json::Arr(cells)),
         ("shard_sweep", Json::Arr(shard_cells)),
+        ("journaled", journal_cell),
         (
             "shard_speedup_2x",
             speedup_2x.map(Json::Num).unwrap_or(Json::Null),
@@ -393,9 +492,19 @@ fn main() {
         );
         std::process::exit(1);
     }
+    if clean_failed {
+        eprintln!(
+            "FAIL: a no-fault cell reported nonzero shed/timeout/failure/restart counters"
+        );
+        std::process::exit(1);
+    }
+    if journal_failed {
+        eprintln!("FAIL: the journaled cell broke the zero-alloc or receipt contract");
+        std::process::exit(1);
+    }
     println!(
-        "PASS: parity bitwise (single + sharded), zero steady-state allocations per shard, \
-         p99 under {} ms",
+        "PASS: parity bitwise (single + sharded), zero steady-state allocations per shard \
+         (journaling included), clean counters on the no-fault sweep, p99 under {} ms",
         p99_bound_ms
     );
 }

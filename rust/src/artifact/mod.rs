@@ -123,6 +123,35 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     crc32_update(0xFFFF_FFFF, bytes) ^ 0xFFFF_FFFF
 }
 
+/// Streaming IEEE CRC-32: feed bytes in chunks, `finish()` matches
+/// [`crc32`] over the concatenation. The serve-side request journal uses
+/// this to digest logits buffers without staging their bytes anywhere
+/// (zero-allocation steady state with journaling on).
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        self.state = crc32_update(self.state, bytes);
+    }
+
+    pub fn finish(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
 /// The per-section checksum covers the section *name* as well as the
 /// payload, so a bit flip in the name (which the payload-only CRC could
 /// not see) is also caught.
@@ -486,6 +515,16 @@ mod tests {
         // standard check value for "123456789"
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn streaming_crc_matches_one_shot() {
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"");
+        c.update(b"56789");
+        assert_eq!(c.finish(), crc32(b"123456789"));
+        assert_eq!(Crc32::new().finish(), 0);
     }
 
     #[test]

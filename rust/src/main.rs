@@ -41,8 +41,9 @@ use dynadiag::perfmodel::vit::{
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::{BackendKind, Session};
 use dynadiag::serve::{
-    drive_load, drive_load_reloading, drive_load_sharded, BatchPolicy, LoadSpec, ModelWatcher,
-    ReloadPlan, ServeEngine, ShardPolicy, ShardReloadPlan, ShardedServer,
+    drive_load, drive_load_reloading, drive_load_sharded, replay, BatchPolicy, FaultPlan,
+    Journal, LoadSpec, ModelWatcher, ReloadPlan, ServeEngine, ShardPolicy, ShardReloadPlan,
+    ShardedServer,
 };
 use dynadiag::train::{CheckpointSpec, Trainer};
 use dynadiag::util::json::Json;
@@ -104,15 +105,25 @@ COMMANDS
   serve        --model mlp_micro|mlp_tiny|path.ddiag [--sparsity S]
                [--shards N] [--max-batch B] [--max-wait-us U] [--rate RPS]
                [--requests N] [--train-steps N] [--seed K] [--out serve.json]
-               [--swap-after N --swap-to other.ddiag]
+               [--swap-after N --swap-to other.ddiag] [--deadline-us U]
+               [--poll-ms MS] [--fault SPEC] [--journal j.ddjnl]
+               [--replay j.ddjnl]
                online inference with dynamic micro-batching; --shards N runs
-               N engine shards on N threads (shared weights, global admission
-               cap, FIFO per client); --model takes a .ddiag artifact path
-               (serve-from-disk; the file is watched and hot-reloaded when
-               replaced — with shards the reload broadcasts to every shard),
-               --train-steps trains + finalizes first, else a seeded
-               synthetic model; --swap-after hot-swaps to a second artifact
-               after N completed requests
+               N engine shards on N supervised threads (shared weights,
+               global admission cap, FIFO per client; a panicked shard is
+               restarted under capped backoff while idle clients fail over);
+               --model takes a .ddiag artifact path (serve-from-disk; the
+               file is watched — --poll-ms throttles the polls — and
+               hot-reloaded when replaced, with read errors retried under
+               backoff), --train-steps trains + finalizes first, else a
+               seeded synthetic model; --swap-after hot-swaps to a second
+               artifact after N completed requests; --deadline-us sheds
+               requests that cannot meet a latency budget; --fault injects
+               deterministic failures (panic:shard=I,req=N; stall:...,us=U;
+               inbox:...; artifact:nth=K — also via DYNADIAG_FAULTS);
+               --journal records every request + receipt (CRC-framed, with
+               logits digests) and --replay re-drives a journal against the
+               model, verifying the digests bitwise
   experiment   <table1|table2|table8|table12|...|fig1|fig4..fig9|all> [--steps N] [--seeds K]
   analyze      --model M [--sparsity S]      small-world & BCSR analysis
   perfmodel    [--sparsity S]                A100 speedup projections
@@ -259,6 +270,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if shards == 0 {
         bail!("--shards must be >= 1");
     }
+    let deadline_us = args.usize_opt("deadline-us")?.unwrap_or(0) as u64;
+    let poll_ms = args.usize_opt("poll-ms")?.unwrap_or(0) as u64;
+    // CLI --fault wins over the DYNADIAG_FAULTS env spec
+    let faults = match args.opt("fault") {
+        Some(s) => Some(FaultPlan::parse(s)?),
+        None => FaultPlan::from_env()?,
+    }
+    .map(Arc::new);
+
+    // replay mode: re-drive a recorded journal against the model instead
+    // of generating traffic, verifying every receipt's logits digest
+    // bitwise (nonzero exit on any mismatch)
+    if let Some(journal_path) = args.opt("replay") {
+        let (label, dm) = build_serve_model(args)?;
+        eprintln!("replaying {} against {}", journal_path, label);
+        let report = replay(Path::new(journal_path), &dm)?;
+        println!("{}", report.summary());
+        if !report.ok() {
+            bail!("replay verification failed: {}", report.summary());
+        }
+        return Ok(());
+    }
 
     // serve-from-disk: watch the artifact for replacement (hot reload).
     // The watcher fingerprints the file BEFORE we load it, so a
@@ -267,7 +300,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // silently stale model).
     let model_arg = args.opt("model").unwrap_or("mlp_micro").to_string();
     let mut watcher = if Path::new(&model_arg).is_file() {
-        Some(ModelWatcher::new(&model_arg))
+        let mut w = ModelWatcher::new(&model_arg);
+        if poll_ms > 0 {
+            w = w.with_poll_interval(std::time::Duration::from_millis(poll_ms));
+        }
+        if let Some(f) = &faults {
+            w.set_faults(Arc::clone(f));
+        }
+        Some(w)
     } else {
         None
     };
@@ -334,19 +374,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // the measured window hot-reloads two ways: the deterministic
     // --swap-after plan, and the on-disk watcher (polled every few dozen
-    // completions — replacing the served .ddiag swaps it in mid-run)
-    let report = if shards > 1 {
-        let mut server = ShardedServer::start(
-            dm,
-            ShardPolicy { shards, batch: policy, max_outstanding: cap },
+    // completions — replacing the served .ddiag swaps it in mid-run).
+    // Deadlines, fault injection, and journaling are features of the
+    // sharded runtime, so any of them routes through it even at 1 shard.
+    let journal_path = args.opt("journal").map(str::to_string);
+    let sharded =
+        shards > 1 || deadline_us > 0 || faults.is_some() || journal_path.is_some();
+    let report = if sharded {
+        let mut server = ShardedServer::start_supervised(
+            Arc::new(dm),
+            ShardPolicy {
+                shards,
+                batch: policy,
+                max_outstanding: cap,
+                deadline_us,
+                restart_backoff_us: 0,
+            },
+            faults.clone(),
         )?;
         // spread synthetic clients across shards (sticky routing)
         let clients = 4 * shards;
-        drive_load_sharded(&mut server, &warm, clients, None, None)?;
-        server.reset_metrics();
+        // with fault injection, skip the warm window: fault clauses key on
+        // request ids, which must map onto the measured stream
+        if faults.is_none() {
+            drive_load_sharded(&mut server, &warm, clients, None, None)?;
+            server.reset_metrics();
+        }
+        if let Some(p) = &journal_path {
+            server.attach_journal(Journal::create(Path::new(p))?);
+        }
         let plan = reload_plan
             .map(|p| ShardReloadPlan { after_requests: p.after_requests, model: p.model });
         let report = drive_load_sharded(&mut server, &spec, clients, plan, watcher.as_mut())?;
+        if let Some(j) = server.take_journal() {
+            let (reqs, receipts) = j.finish()?;
+            eprintln!(
+                "journal: {} request(s), {} receipt(s) -> {}",
+                reqs,
+                receipts,
+                journal_path.as_deref().unwrap_or("?")
+            );
+        }
         server.shutdown()?;
         report
     } else {

@@ -96,6 +96,13 @@ impl MicroBatcher {
             .map(|r| r.arrival_us.saturating_add(self.policy.max_wait_us))
     }
 
+    /// Arrival stamp (µs) of the oldest queued request — the queue-age
+    /// signal deadline shedding and the serve report read. `None` when
+    /// idle.
+    pub fn oldest_arrival_us(&self) -> Option<u64> {
+        self.queue.front().map(|r| r.arrival_us)
+    }
+
     /// Pop up to `max_batch` requests (FIFO) into `out` (cleared first).
     /// The caller owns a reusable `out` so the steady-state flush path
     /// allocates nothing.

@@ -200,6 +200,12 @@ impl ServeEngine {
         self.batcher.next_deadline_us()
     }
 
+    /// Arrival stamp (µs) of the oldest queued request (idle → None) —
+    /// `now - oldest_arrival_us` is the queue age a shard reports.
+    pub fn oldest_arrival_us(&self) -> Option<u64> {
+        self.batcher.oldest_arrival_us()
+    }
+
     /// Flush one micro-batch if one is due; completions are appended to
     /// `out`. Returns the number of requests completed (0 when not due).
     pub fn poll(&mut self, clock: &dyn Clock, out: &mut Vec<Completion>) -> Result<usize> {
@@ -302,6 +308,16 @@ impl ServeEngine {
             max_ms: self.hist.max_us() as f64 / 1e3,
             fresh_allocs,
             reused_buffers,
+            // the single-threaded engine has no supervisor, deadlines, or
+            // failover — the fault counters exist only in the sharded
+            // runtime and stay zero here
+            shed: 0,
+            shed_deadline: 0,
+            shed_shard_down: 0,
+            timed_out: 0,
+            failed: 0,
+            restarts: 0,
+            degraded: 0,
         }
     }
 }

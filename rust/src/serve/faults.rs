@@ -1,0 +1,333 @@
+//! Deterministic fail-point registry for the serving runtime.
+//!
+//! A [`FaultPlan`] is a parsed, immutable schedule of one-shot faults —
+//! shard panics, slow-batch stalls, inbox stalls, artifact-read errors —
+//! that the sharded server and the model watcher consult at well-defined
+//! points. It exists so the supervision, shedding, and journaling layers
+//! can be driven to their failure paths *deterministically*: the chaos
+//! tests and the CI `chaos-smoke` job build a plan (from a seeded RNG or a
+//! literal spec), run a load, and assert the conservation law instead of
+//! hoping a real fault shows up.
+//!
+//! Design points:
+//!
+//! - **No global state.** A plan is an `Arc<FaultPlan>` threaded
+//!   explicitly into [`ShardedServer::start_supervised`] and
+//!   [`ModelWatcher::set_faults`]. `cargo test` runs many tests as threads
+//!   in one process; a process-global registry would cross-contaminate
+//!   them.
+//! - **Zero-cost when absent.** Every hook is behind an
+//!   `Option<&FaultPlan>` check; a fault-free server never takes a lock or
+//!   touches an atomic for fault bookkeeping.
+//! - **One-shot and order-free.** Each clause fires at most once (an
+//!   atomic `fired` flag), so a schedule is a *set* of events, and replays
+//!   of the same request id (e.g. a retry) do not re-fire.
+//!
+//! Spec grammar (CLI `--fault` or env `DYNADIAG_FAULTS`); clauses are
+//! `;`-separated, parameters `,`-separated `key=value` pairs:
+//!
+//! ```text
+//! panic:shard=0,req=40           # shard 0 panics when it dequeues request id 40
+//! stall:shard=1,req=10,us=30000  # shard 1 sleeps 30ms *executing* request 10 (slow batch)
+//! inbox:shard=0,req=5,us=50000   # shard 0 sleeps 50ms *before* request 5's deadline
+//!                                # check (a wedged consumer: the queue ages)
+//! artifact:nth=2                 # the 2nd watcher artifact read errors (1-based)
+//! ```
+//!
+//! [`ShardedServer::start_supervised`]: super::shard::ShardedServer::start_supervised
+//! [`ModelWatcher::set_faults`]: super::reload::ModelWatcher::set_faults
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Result};
+
+/// What a single fault clause does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FaultKind {
+    /// Panic on the shard thread at request dequeue (after the request is
+    /// registered for NACK accounting, so supervision must conserve it).
+    Panic { shard: usize, req: u64 },
+    /// Sleep `us` on the shard thread while executing the request — a slow
+    /// kernel: the request still completes, just late.
+    Stall { shard: usize, req: u64, us: u64 },
+    /// Sleep `us` on the shard thread *before* the request's deadline
+    /// check — a wedged consumer: the inbox ages, so this request (and
+    /// possibly its followers) can time out.
+    InboxStall { shard: usize, req: u64, us: u64 },
+    /// The `nth` (1-based) fault-aware artifact read in the model watcher
+    /// returns an error instead of touching the filesystem.
+    ArtifactError { nth: u64 },
+}
+
+/// One clause plus its one-shot latch.
+#[derive(Debug)]
+struct Fault {
+    kind: FaultKind,
+    fired: AtomicBool,
+}
+
+impl Fault {
+    /// Latch the clause; true exactly once.
+    fn fire(&self) -> bool {
+        !self.fired.swap(true, Ordering::Relaxed)
+    }
+}
+
+/// A parsed, immutable fault schedule. See the module docs for the spec
+/// grammar and the threading model.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    /// Monotone counter of fault-aware artifact reads (for `nth=` clauses).
+    artifact_reads: AtomicU64,
+}
+
+fn parse_kv<'a>(clause: &'a str, part: &'a str) -> Result<(&'a str, &'a str)> {
+    part.split_once('=')
+        .map(|(k, v)| (k.trim(), v.trim()))
+        .ok_or_else(|| anyhow!("fault clause '{}': expected key=value, got '{}'", clause, part))
+}
+
+fn parse_u64(clause: &str, key: &str, val: &str) -> Result<u64> {
+    val.parse::<u64>()
+        .map_err(|_| anyhow!("fault clause '{}': {}={} is not a non-negative integer", clause, key, val))
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see module docs). Empty / whitespace-only
+    /// specs parse to an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, params) = clause
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault clause '{}': expected kind:key=value,...", clause))?;
+            let (mut shard, mut req, mut us, mut nth) = (None, None, None, None);
+            for part in params.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                let (k, v) = parse_kv(clause, part)?;
+                match k {
+                    "shard" => shard = Some(parse_u64(clause, k, v)? as usize),
+                    "req" => req = Some(parse_u64(clause, k, v)?),
+                    "us" => us = Some(parse_u64(clause, k, v)?),
+                    "nth" => nth = Some(parse_u64(clause, k, v)?),
+                    _ => bail!("fault clause '{}': unknown key '{}'", clause, k),
+                }
+            }
+            let need = |opt: Option<u64>, key: &str| {
+                opt.ok_or_else(|| anyhow!("fault clause '{}': missing {}=", clause, key))
+            };
+            let need_shard = |opt: Option<usize>| {
+                opt.ok_or_else(|| anyhow!("fault clause '{}': missing shard=", clause))
+            };
+            let kind = match kind.trim() {
+                "panic" => FaultKind::Panic { shard: need_shard(shard)?, req: need(req, "req")? },
+                "stall" => FaultKind::Stall {
+                    shard: need_shard(shard)?,
+                    req: need(req, "req")?,
+                    us: need(us, "us")?,
+                },
+                "inbox" => FaultKind::InboxStall {
+                    shard: need_shard(shard)?,
+                    req: need(req, "req")?,
+                    us: need(us, "us")?,
+                },
+                "artifact" => {
+                    let nth = need(nth, "nth")?;
+                    if nth == 0 {
+                        bail!("fault clause '{}': nth is 1-based", clause);
+                    }
+                    FaultKind::ArtifactError { nth }
+                }
+                other => bail!(
+                    "fault clause '{}': unknown kind '{}' (expected panic|stall|inbox|artifact)",
+                    clause,
+                    other
+                ),
+            };
+            faults.push(Fault { kind, fired: AtomicBool::new(false) });
+        }
+        Ok(FaultPlan { faults, artifact_reads: AtomicU64::new(0) })
+    }
+
+    /// Parse `DYNADIAG_FAULTS` if set; `None` when unset or empty.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("DYNADIAG_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultPlan::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Inbox-stall duration (µs) for this (shard, request) dequeue, 0 if
+    /// no clause fires. The shard sleeps *before* the deadline check.
+    pub fn inbox_stall_us(&self, shard: usize, req: u64) -> u64 {
+        for f in &self.faults {
+            if let FaultKind::InboxStall { shard: s, req: r, us } = f.kind {
+                if s == shard && r == req && f.fire() {
+                    return us;
+                }
+            }
+        }
+        0
+    }
+
+    /// Execution-stall duration (µs) for this (shard, request), 0 if no
+    /// clause fires. The shard sleeps *after* the deadline check — the
+    /// request completes, late.
+    pub fn exec_stall_us(&self, shard: usize, req: u64) -> u64 {
+        for f in &self.faults {
+            if let FaultKind::Stall { shard: s, req: r, us } = f.kind {
+                if s == shard && r == req && f.fire() {
+                    return us;
+                }
+            }
+        }
+        0
+    }
+
+    /// Panic the calling (shard) thread if a panic clause targets this
+    /// (shard, request). The caller must have registered the request for
+    /// NACK accounting first — the supervisor conserves it.
+    pub fn check_panic(&self, shard: usize, req: u64) {
+        for f in &self.faults {
+            if let FaultKind::Panic { shard: s, req: r } = f.kind {
+                if s == shard && r == req && f.fire() {
+                    panic!("fault injection: shard {} panics at request {}", shard, req);
+                }
+            }
+        }
+    }
+
+    /// Called once per fault-aware artifact read; returns an error when an
+    /// `artifact:nth=K` clause matches this read's ordinal.
+    pub fn check_artifact_read(&self) -> Result<()> {
+        let ordinal = self.artifact_reads.fetch_add(1, Ordering::Relaxed) + 1;
+        for f in &self.faults {
+            if let FaultKind::ArtifactError { nth } = f.kind {
+                if nth == ordinal && f.fire() {
+                    bail!("fault injection: artifact read {} errors", ordinal);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// How many panic clauses have actually fired — the chaos test asserts
+    /// `ServeReport.restarts` equals this (a panic clause whose request was
+    /// shed or failed over before reaching the target shard never fires).
+    pub fn fired_panics(&self) -> u64 {
+        self.faults
+            .iter()
+            .filter(|f| {
+                matches!(f.kind, FaultKind::Panic { .. }) && f.fired.load(Ordering::Relaxed)
+            })
+            .count() as u64
+    }
+
+    /// How many clauses (of any kind) have fired.
+    pub fn fired(&self) -> u64 {
+        self.faults.iter().filter(|f| f.fired.load(Ordering::Relaxed)).count() as u64
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, fault) in self.faults.iter().enumerate() {
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            match fault.kind {
+                FaultKind::Panic { shard, req } => write!(f, "panic:shard={},req={}", shard, req)?,
+                FaultKind::Stall { shard, req, us } => {
+                    write!(f, "stall:shard={},req={},us={}", shard, req, us)?
+                }
+                FaultKind::InboxStall { shard, req, us } => {
+                    write!(f, "inbox:shard={},req={},us={}", shard, req, us)?
+                }
+                FaultKind::ArtifactError { nth } => write!(f, "artifact:nth={}", nth)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_round_trips() {
+        let spec = "panic:shard=0,req=40;stall:shard=1,req=10,us=30000;\
+                    inbox:shard=0,req=5,us=50000;artifact:nth=2";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.len(), 4);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.to_string(), spec.replace(' ', ""));
+        // whitespace and empty clauses are tolerated
+        let lax = FaultPlan::parse(" panic: shard=0 , req=40 ; ; ").unwrap();
+        assert_eq!(lax.len(), 1);
+        assert_eq!(FaultPlan::parse("").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "panic",                     // no params
+            "panic:req=1",               // missing shard
+            "stall:shard=0,req=1",       // missing us
+            "inbox:shard=0,us=5",        // missing req
+            "artifact:nth=0",            // 1-based
+            "artifact:shard=1",          // missing nth
+            "explode:shard=0,req=1",     // unknown kind
+            "panic:shard=0,req=1,k=2",   // unknown key
+            "panic:shard=zero,req=1",    // non-numeric
+            "panic:shard",               // not key=value
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{}' should be rejected", bad);
+        }
+    }
+
+    #[test]
+    fn clauses_fire_exactly_once() {
+        let plan = FaultPlan::parse("stall:shard=1,req=10,us=777;inbox:shard=0,req=3,us=9").unwrap();
+        // wrong shard / wrong req: nothing fires
+        assert_eq!(plan.exec_stall_us(0, 10), 0);
+        assert_eq!(plan.exec_stall_us(1, 11), 0);
+        assert_eq!(plan.inbox_stall_us(1, 3), 0);
+        // match fires once, then stays latched
+        assert_eq!(plan.exec_stall_us(1, 10), 777);
+        assert_eq!(plan.exec_stall_us(1, 10), 0);
+        assert_eq!(plan.inbox_stall_us(0, 3), 9);
+        assert_eq!(plan.inbox_stall_us(0, 3), 0);
+        assert_eq!(plan.fired(), 2);
+        assert_eq!(plan.fired_panics(), 0);
+    }
+
+    #[test]
+    fn panic_clause_panics_on_match_only() {
+        let plan = FaultPlan::parse("panic:shard=0,req=7").unwrap();
+        plan.check_panic(0, 6); // no match
+        plan.check_panic(1, 7); // wrong shard
+        let err = std::panic::catch_unwind(|| plan.check_panic(0, 7));
+        assert!(err.is_err(), "matching clause must panic");
+        assert_eq!(plan.fired_panics(), 1);
+        plan.check_panic(0, 7); // latched: second encounter is a no-op
+    }
+
+    #[test]
+    fn artifact_clause_errors_on_the_nth_read() {
+        let plan = FaultPlan::parse("artifact:nth=2").unwrap();
+        assert!(plan.check_artifact_read().is_ok(), "1st read is clean");
+        let err = plan.check_artifact_read().unwrap_err();
+        assert!(err.to_string().contains("artifact read 2"), "got: {}", err);
+        assert!(plan.check_artifact_read().is_ok(), "3rd read is clean (one-shot)");
+    }
+}

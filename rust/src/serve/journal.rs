@@ -1,0 +1,614 @@
+//! Append-only request journal with per-request receipts, and the
+//! `serve --replay` verifier that re-drives recorded traffic bitwise.
+//!
+//! The journal is the audit trail of a serving run: every admitted
+//! request is recorded with its payload, and every request that leaves
+//! the runtime — served, shed, timed out, or failed — gets a **receipt**
+//! (client id, sequence, scheduled arrival, shard, model fingerprint,
+//! outcome code, latency, logits digest). Because the diag kernels are
+//! batch-invariant and bit-identical across ISA paths (pinned by
+//! `serve_parity.rs` and the golden-bit harness), replaying a journaled
+//! payload through the same artifact at batch 1 must reproduce the
+//! recorded logits digest *bitwise* — which turns kill-and-restart into
+//! an auditable round trip instead of a shrug.
+//!
+//! ## Framing
+//!
+//! The on-disk format reuses the DDIAG container conventions (magic +
+//! version header, little-endian integers, per-record IEEE CRC-32) but
+//! frames records individually so the file is appendable and a reader can
+//! pinpoint the exact record an error lives in:
+//!
+//! ```text
+//! [0..6]   magic  b"DDJNL\0"
+//! [6]      version (currently 1; readers reject anything newer)
+//! then, repeated until EOF:
+//!   kind     u8   1 = request, 2 = receipt
+//!   len      u32  payload length
+//!   payload  ..   record bytes (little-endian, see below)
+//!   crc32    u32  IEEE CRC-32 of kind byte ++ payload
+//! ```
+//!
+//! Request payload: `id u64, client u64, arrival_us u64, deadline_us u64,
+//! x f32s`. Receipt payload: `id u64, client u64, arrival_us u64,
+//! shard u64 (u64::MAX = shed at the front door, never reached a shard),
+//! model_fp u32, outcome u8, latency_us u64, logits_digest u32` (digest 0
+//! for non-Ok outcomes).
+//!
+//! Readers are strict: bad magic, a future version, a truncated record,
+//! or a failed CRC produce an actionable error naming the record index
+//! and byte offset. A process kill can truncate the final record — the
+//! error says so rather than silently dropping the tail.
+//!
+//! ## Allocation discipline
+//!
+//! The writer owns one reusable scratch encoder and a `BufWriter`; a
+//! steady-state append touches no allocator once the scratch has grown to
+//! the record size, so the per-shard zero-fresh-allocation serving gate
+//! holds with journaling on (`native_steady_state.rs` pins this).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::artifact::{crc32, model as artifact_model, Crc32, Dec, Enc};
+use crate::runtime::infer::DiagModel;
+use crate::runtime::native::workspace;
+use crate::serve::stats::OutcomeCode;
+
+const MAGIC: &[u8; 6] = b"DDJNL\0";
+const VERSION: u8 = 1;
+const REC_REQUEST: u8 = 1;
+const REC_RECEIPT: u8 = 2;
+/// Frame overhead: kind u8 + len u32 + crc u32.
+const FRAME_OVERHEAD: usize = 9;
+/// Receipt `shard` sentinel: shed at the front door, never reached a shard.
+pub const NO_SHARD: u64 = u64::MAX;
+
+/// Identity fingerprint of a model artifact: the CRC-32 of its canonical
+/// DDIAG serialization. Stamped into every receipt so replay can refuse a
+/// different artifact, and hot reloads are visible in the journal.
+pub fn model_fingerprint(model: &DiagModel) -> u32 {
+    crc32(&artifact_model::to_bytes(model))
+}
+
+/// Bitwise digest of a logits buffer: CRC-32 over the f32s' little-endian
+/// bytes, streamed so no byte staging buffer is needed.
+pub fn logits_digest(logits: &[f32]) -> u32 {
+    let mut c = Crc32::new();
+    for v in logits {
+        c.update(&v.to_le_bytes());
+    }
+    c.finish()
+}
+
+/// One receipt: how a single request left the runtime.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Receipt {
+    /// Admission sequence number (globally unique per server).
+    pub id: u64,
+    pub client: u64,
+    /// Scheduled arrival stamp (µs, server clock epoch).
+    pub arrival_us: u64,
+    /// Shard that produced the outcome; [`NO_SHARD`] for front-door sheds.
+    pub shard: u64,
+    /// Fingerprint of the model that served (or would have served) it.
+    pub model_fp: u32,
+    pub outcome: OutcomeCode,
+    pub latency_us: u64,
+    /// [`logits_digest`] of the served logits; 0 for non-Ok outcomes.
+    pub logits_digest: u32,
+}
+
+/// A journaled admission: identity plus the recorded payload.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub client: u64,
+    pub arrival_us: u64,
+    /// Absolute deadline stamp (µs); 0 = no deadline.
+    pub deadline_us: u64,
+    pub x: Vec<f32>,
+}
+
+/// Append-only journal writer. Records flow through one reusable scratch
+/// encoder into a buffered file; `finish()` flushes and reports counts.
+#[derive(Debug)]
+pub struct Journal {
+    w: BufWriter<File>,
+    path: PathBuf,
+    scratch: Enc,
+    requests: u64,
+    receipts: u64,
+}
+
+impl Journal {
+    pub fn create(path: &Path) -> Result<Journal> {
+        let file = File::create(path)
+            .with_context(|| format!("journal: create {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(MAGIC).context("journal: write magic")?;
+        w.write_all(&[VERSION]).context("journal: write version")?;
+        Ok(Journal {
+            w,
+            path: path.to_path_buf(),
+            scratch: Enc::new(),
+            requests: 0,
+            receipts: 0,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    pub fn receipts(&self) -> u64 {
+        self.receipts
+    }
+
+    fn write_frame(&mut self, kind: u8) -> Result<()> {
+        let payload = &self.scratch.buf;
+        let mut crc = Crc32::new();
+        crc.update(&[kind]);
+        crc.update(payload);
+        self.w.write_all(&[kind]).context("journal: write record kind")?;
+        self.w
+            .write_all(&(payload.len() as u32).to_le_bytes())
+            .context("journal: write record length")?;
+        self.w.write_all(payload).context("journal: write record payload")?;
+        self.w
+            .write_all(&crc.finish().to_le_bytes())
+            .context("journal: write record crc")?;
+        Ok(())
+    }
+
+    /// Record an admission (id, identity, stamps, payload). Written before
+    /// the payload buffer is handed to a shard and consumed.
+    pub fn append_request(
+        &mut self,
+        id: u64,
+        client: u64,
+        arrival_us: u64,
+        deadline_us: u64,
+        x: &[f32],
+    ) -> Result<()> {
+        self.scratch.buf.clear();
+        self.scratch.u64(id);
+        self.scratch.u64(client);
+        self.scratch.u64(arrival_us);
+        self.scratch.u64(deadline_us);
+        self.scratch.f32s(x);
+        self.write_frame(REC_REQUEST)?;
+        self.requests += 1;
+        Ok(())
+    }
+
+    /// Record how a request left the runtime.
+    pub fn append_receipt(&mut self, r: &Receipt) -> Result<()> {
+        self.scratch.buf.clear();
+        self.scratch.u64(r.id);
+        self.scratch.u64(r.client);
+        self.scratch.u64(r.arrival_us);
+        self.scratch.u64(r.shard);
+        self.scratch.u32(r.model_fp);
+        self.scratch.u8(r.outcome.code());
+        self.scratch.u64(r.latency_us);
+        self.scratch.u32(r.logits_digest);
+        self.write_frame(REC_RECEIPT)?;
+        self.receipts += 1;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush().context("journal: flush")
+    }
+
+    /// Flush and close; returns (requests, receipts) written.
+    pub fn finish(mut self) -> Result<(u64, u64)> {
+        self.flush()?;
+        Ok((self.requests, self.receipts))
+    }
+}
+
+/// A fully parsed journal.
+#[derive(Debug, Default)]
+pub struct JournalData {
+    /// Admissions by id.
+    pub requests: BTreeMap<u64, RequestRecord>,
+    /// Receipts in append (absorb) order.
+    pub receipts: Vec<Receipt>,
+}
+
+/// Strictly parse a journal file. Errors name the record index and byte
+/// offset, and distinguish truncation (a killed writer) from corruption
+/// (a failed CRC).
+pub fn read(path: &Path) -> Result<JournalData> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("journal: read {}", path.display()))?;
+    if bytes.len() < MAGIC.len() + 1 || &bytes[..MAGIC.len()] != MAGIC {
+        bail!("journal {}: bad magic (not a DDJNL request journal)", path.display());
+    }
+    let version = bytes[MAGIC.len()];
+    if version > VERSION {
+        bail!(
+            "journal {}: version {} is newer than this reader (max {})",
+            path.display(),
+            version,
+            VERSION
+        );
+    }
+    let mut data = JournalData::default();
+    let mut off = MAGIC.len() + 1;
+    let mut index = 0usize;
+    while off < bytes.len() {
+        let remaining = bytes.len() - off;
+        if remaining < FRAME_OVERHEAD {
+            bail!(
+                "journal {}: record {} truncated at offset {} (file ends mid-frame; \
+                 was the writer killed mid-append?)",
+                path.display(),
+                index,
+                off
+            );
+        }
+        let kind = bytes[off];
+        let len = u32::from_le_bytes(bytes[off + 1..off + 5].try_into().expect("4 bytes")) as usize;
+        let payload_start = off + 5;
+        let crc_start = payload_start
+            .checked_add(len)
+            .ok_or_else(|| anyhow!("journal {}: record {} length overflows", path.display(), index))?;
+        if crc_start + 4 > bytes.len() {
+            bail!(
+                "journal {}: record {} truncated at offset {} (payload of {} bytes \
+                 runs past EOF; was the writer killed mid-append?)",
+                path.display(),
+                index,
+                off,
+                len
+            );
+        }
+        let payload = &bytes[payload_start..crc_start];
+        let stored = u32::from_le_bytes(bytes[crc_start..crc_start + 4].try_into().expect("4 bytes"));
+        let mut crc = Crc32::new();
+        crc.update(&[kind]);
+        crc.update(payload);
+        let computed = crc.finish();
+        if computed != stored {
+            bail!(
+                "journal {}: record {} at offset {} failed CRC (stored {:08x}, \
+                 computed {:08x}) — the journal is corrupt or was tampered with",
+                path.display(),
+                index,
+                off,
+                stored,
+                computed
+            );
+        }
+        match kind {
+            REC_REQUEST => {
+                let mut d = Dec::new(payload, "journal request record");
+                let id = d.u64()?;
+                let client = d.u64()?;
+                let arrival_us = d.u64()?;
+                let deadline_us = d.u64()?;
+                let x = d.f32s()?;
+                d.expect_end()?;
+                if data.requests.insert(id, RequestRecord { id, client, arrival_us, deadline_us, x }).is_some() {
+                    bail!("journal {}: duplicate request record for id {}", path.display(), id);
+                }
+            }
+            REC_RECEIPT => {
+                let mut d = Dec::new(payload, "journal receipt record");
+                let id = d.u64()?;
+                let client = d.u64()?;
+                let arrival_us = d.u64()?;
+                let shard = d.u64()?;
+                let model_fp = d.u32()?;
+                let code = d.u8()?;
+                let latency_us = d.u64()?;
+                let logits_digest = d.u32()?;
+                d.expect_end()?;
+                let outcome = OutcomeCode::from_code(code).ok_or_else(|| {
+                    anyhow!(
+                        "journal {}: record {} has unknown outcome code {}",
+                        path.display(),
+                        index,
+                        code
+                    )
+                })?;
+                data.receipts.push(Receipt {
+                    id,
+                    client,
+                    arrival_us,
+                    shard,
+                    model_fp,
+                    outcome,
+                    latency_us,
+                    logits_digest,
+                });
+            }
+            other => bail!(
+                "journal {}: record {} at offset {} has unknown kind {}",
+                path.display(),
+                index,
+                off,
+                other
+            ),
+        }
+        off = crc_start + 4;
+        index += 1;
+    }
+    Ok(data)
+}
+
+/// What replay found. `verified` receipts reproduced their recorded
+/// logits digest bitwise; `mismatched` did not (a real divergence —
+/// different kernels, different artifact bytes with a colliding
+/// fingerprint, or rotten hardware); `other_model` were served by a
+/// different artifact (hot reload) than the one provided; `incomplete`
+/// admissions never got a receipt (the server died before absorbing
+/// them).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReplayReport {
+    pub receipts: u64,
+    pub verified: u64,
+    pub mismatched: u64,
+    pub other_model: u64,
+    pub incomplete: u64,
+    pub shed: u64,
+    pub timed_out: u64,
+    pub failed: u64,
+}
+
+impl ReplayReport {
+    /// Replay succeeded: nothing diverged and something was verified.
+    pub fn ok(&self) -> bool {
+        self.mismatched == 0 && (self.verified > 0 || self.receipts == 0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "replay: {} receipts — {} verified bitwise, {} mismatched, \
+             {} other-model, {} incomplete, {} shed, {} timed out, {} failed",
+            self.receipts,
+            self.verified,
+            self.mismatched,
+            self.other_model,
+            self.incomplete,
+            self.shed,
+            self.timed_out,
+            self.failed
+        )
+    }
+}
+
+/// Re-drive a journal through `model` and verify every Ok receipt's
+/// logits digest bitwise. Batch-of-1 replay is sound because the serving
+/// parity tests pin batch invariance (same sample → same bits at every
+/// batch size) and the golden-bit harness pins cross-ISA identity.
+pub fn replay(path: &Path, model: &DiagModel) -> Result<ReplayReport> {
+    let data = read(path)?;
+    let fp = model_fingerprint(model);
+    let mut report = ReplayReport { receipts: data.receipts.len() as u64, ..Default::default() };
+    let mut receipted = std::collections::BTreeSet::new();
+    for r in &data.receipts {
+        receipted.insert(r.id);
+        match r.outcome {
+            OutcomeCode::Ok => {
+                if r.model_fp != fp {
+                    report.other_model += 1;
+                    continue;
+                }
+                let req = data.requests.get(&r.id).ok_or_else(|| {
+                    anyhow!(
+                        "journal {}: receipt for id {} has no request record — \
+                         the journal is incomplete (admission was never recorded)",
+                        path.display(),
+                        r.id
+                    )
+                })?;
+                if req.x.len() != model.sample_len() {
+                    bail!(
+                        "journal {}: request {} has {} features but the replay \
+                         model expects {} — wrong artifact?",
+                        path.display(),
+                        r.id,
+                        req.x.len(),
+                        model.sample_len()
+                    );
+                }
+                let logits = model
+                    .forward_logits(&req.x, 1)
+                    .with_context(|| format!("replay: forward for request {}", r.id))?;
+                let digest = logits_digest(&logits);
+                workspace::give_f32(logits);
+                if digest == r.logits_digest {
+                    report.verified += 1;
+                } else {
+                    crate::info!(
+                        "replay: request {} digest mismatch (recorded {:08x}, replayed {:08x})",
+                        r.id,
+                        r.logits_digest,
+                        digest
+                    );
+                    report.mismatched += 1;
+                }
+            }
+            OutcomeCode::ShedDeadline | OutcomeCode::ShedShardDown => report.shed += 1,
+            OutcomeCode::TimedOut => report.timed_out += 1,
+            OutcomeCode::FailedPanic => report.failed += 1,
+        }
+    }
+    report.incomplete =
+        data.requests.keys().filter(|id| !receipted.contains(id)).count() as u64;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::infer::mlp_config;
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dynadiag-journal-{}-{}", std::process::id(), name));
+        p
+    }
+
+    fn sample_receipt(id: u64, outcome: OutcomeCode, digest: u32) -> Receipt {
+        Receipt {
+            id,
+            client: id % 3,
+            arrival_us: 100 + id,
+            shard: id % 2,
+            model_fp: 0xDEAD_BEEF,
+            outcome,
+            latency_us: 250,
+            logits_digest: digest,
+        }
+    }
+
+    #[test]
+    fn round_trips_requests_and_receipts() {
+        let path = tmp_path("roundtrip.ddjnl");
+        let mut j = Journal::create(&path).unwrap();
+        j.append_request(0, 0, 100, 0, &[1.0, -2.5, 3.25]).unwrap();
+        j.append_request(1, 1, 101, 5_000, &[0.5; 4]).unwrap();
+        j.append_receipt(&sample_receipt(0, OutcomeCode::Ok, 0x1234)).unwrap();
+        j.append_receipt(&sample_receipt(1, OutcomeCode::TimedOut, 0)).unwrap();
+        let (reqs, recs) = j.finish().unwrap();
+        assert_eq!((reqs, recs), (2, 2));
+
+        let data = read(&path).unwrap();
+        assert_eq!(data.requests.len(), 2);
+        assert_eq!(data.receipts.len(), 2);
+        assert_eq!(data.requests[&0].x, vec![1.0, -2.5, 3.25]);
+        assert_eq!(data.requests[&1].deadline_us, 5_000);
+        assert_eq!(data.receipts[0], sample_receipt(0, OutcomeCode::Ok, 0x1234));
+        assert_eq!(data.receipts[1].outcome, OutcomeCode::TimedOut);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_corruption_and_truncation() {
+        let path = tmp_path("strict.ddjnl");
+        let mut j = Journal::create(&path).unwrap();
+        j.append_request(7, 1, 42, 0, &[1.0, 2.0]).unwrap();
+        j.append_receipt(&sample_receipt(7, OutcomeCode::Ok, 9)).unwrap();
+        j.finish().unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "got: {}", err);
+
+        // future version
+        let mut bad = good.clone();
+        bad[6] = VERSION + 1;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read(&path).unwrap_err().to_string();
+        assert!(err.contains("newer"), "got: {}", err);
+
+        // flip one payload byte: CRC must catch it and name the record
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 6] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC") && err.contains("record 1"), "got: {}", err);
+
+        // cut the file mid-record: truncation is named, not silently dropped
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        let err = read(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "got: {}", err);
+
+        // pristine bytes still parse
+        std::fs::write(&path, &good).unwrap();
+        assert_eq!(read(&path).unwrap().receipts.len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn logits_digest_is_bitwise() {
+        let a = [0.0f32, 1.5, -2.25];
+        let mut b = a;
+        assert_eq!(logits_digest(&a), logits_digest(&b));
+        b[2] = -2.250001;
+        assert_ne!(logits_digest(&a), logits_digest(&b));
+        // -0.0 and 0.0 compare equal as floats but differ bitwise: the
+        // digest is over bits, so it must tell them apart
+        assert_ne!(logits_digest(&[0.0f32]), logits_digest(&[-0.0f32]));
+        // streaming digest matches a one-shot CRC over the LE bytes
+        let mut bytes = Vec::new();
+        for v in &a {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(logits_digest(&a), crc32(&bytes));
+    }
+
+    #[test]
+    fn replay_verifies_and_counts_outcomes() {
+        let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 11);
+        let fp = model_fingerprint(&model);
+        let sl = model.sample_len();
+        let path = tmp_path("replay.ddjnl");
+        let mut j = Journal::create(&path).unwrap();
+        // two served requests with true digests, one shed, one unreceipted
+        for id in 0..2u64 {
+            let x: Vec<f32> = (0..sl).map(|i| (i as f32 + id as f32) * 0.01 - 0.3).collect();
+            let logits = model.forward_logits(&x, 1).unwrap();
+            j.append_request(id, id, 10 + id, 0, &x).unwrap();
+            j.append_receipt(&Receipt {
+                id,
+                client: id,
+                arrival_us: 10 + id,
+                shard: 0,
+                model_fp: fp,
+                outcome: OutcomeCode::Ok,
+                latency_us: 99,
+                logits_digest: logits_digest(&logits),
+            })
+            .unwrap();
+        }
+        j.append_receipt(&Receipt {
+            id: 2,
+            client: 2,
+            arrival_us: 12,
+            shard: NO_SHARD,
+            model_fp: fp,
+            outcome: OutcomeCode::ShedDeadline,
+            latency_us: 0,
+            logits_digest: 0,
+        })
+        .unwrap();
+        j.append_request(3, 0, 13, 0, &vec![0.0; sl]).unwrap();
+        j.finish().unwrap();
+
+        let rep = replay(&path, &model).unwrap();
+        assert_eq!(rep.receipts, 3);
+        assert_eq!(rep.verified, 2);
+        assert_eq!(rep.mismatched, 0);
+        assert_eq!(rep.shed, 1);
+        assert_eq!(rep.incomplete, 1, "request 3 never got a receipt");
+        assert!(rep.ok());
+
+        // a different artifact is refused per-receipt, not silently "verified"
+        let other = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 12);
+        assert_ne!(model_fingerprint(&other), fp, "synth seeds must differ");
+        let rep = replay(&path, &other).unwrap();
+        assert_eq!(rep.verified, 0);
+        assert_eq!(rep.other_model, 2);
+        assert!(!rep.ok(), "nothing verified means replay failed");
+        std::fs::remove_file(&path).ok();
+    }
+}

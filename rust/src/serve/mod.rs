@@ -39,10 +39,27 @@
 //! protocol to every shard. [`reload::ModelWatcher`] polls a `.ddiag`
 //! artifact path and feeds replacements in (publish = atomic rename, so a
 //! half-written file is never observable; the fingerprint includes a
-//! content CRC so even a same-length same-mtime replacement is caught).
+//! content CRC so even a same-length same-mtime replacement is caught),
+//! retrying transient read errors under capped backoff.
+//!
+//! The sharded runtime is **fault-tolerant**: every shard loop runs under
+//! a supervisor that catches panics, NACKs the shard's in-flight requests
+//! with a reason code, and restarts the engine under capped exponential
+//! backoff while the front door fails idle clients over to live shards
+//! (per-client FIFO is never sacrificed — pinned clients shed instead).
+//! Per-request **deadlines** shed unmeetable work at admission and NACK
+//! late dequeues, all reason-coded into [`stats::ServeReport`], whose
+//! conservation law `submitted == completed + shed + timed_out + failed`
+//! holds through crashes. [`faults`] is the deterministic fail-point
+//! registry (`--fault` / `DYNADIAG_FAULTS`) that drives those paths in
+//! tests and CI; [`journal`] records every admission and outcome as a
+//! CRC-framed **receipt** (with a logits digest) and `serve --replay`
+//! re-drives a journal against an artifact, verifying digests bitwise.
 
 pub mod batcher;
 pub mod engine;
+pub mod faults;
+pub mod journal;
 pub mod reload;
 pub mod shard;
 pub mod stats;
@@ -54,12 +71,16 @@ pub use engine::{
     drive_load, drive_load_reloading, Clock, Completion, LoadSpec, ManualClock, RealClock,
     ReloadPlan, ServeEngine,
 };
+pub use faults::FaultPlan;
+pub use journal::{
+    logits_digest, model_fingerprint, replay, Journal, JournalData, Receipt, ReplayReport,
+};
 pub use reload::ModelWatcher;
 pub use shard::{
     drive_load_sharded, ShardCompletion, ShardedServer, ShardPolicy, ShardReloadPlan,
     ShardStats, Submit,
 };
-pub use stats::{LatencyHistogram, ServeReport};
+pub use stats::{LatencyHistogram, OutcomeCode, ServeReport};
 
 use crate::runtime::infer::{mlp_config, DiagLayer, DiagModel};
 use crate::train::TrainResult;

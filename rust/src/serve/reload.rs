@@ -17,14 +17,31 @@
 //! model keeps serving); the fingerprint is only advanced after a
 //! successful load, so a transiently broken file is retried on the next
 //! poll.
+//!
+//! Transient read errors (artifact mid-publish on a non-atomic filesystem,
+//! NFS hiccup, fault injection) are retried under **capped exponential
+//! backoff** ([`ModelWatcher::with_backoff`]) so a persistently broken
+//! artifact cannot turn the serving loop into an error-log firehose:
+//! [`ModelWatcher::poll_compatible`] logs the first error and then stays
+//! quiet until the watcher recovers, and [`ModelWatcher::poll`] returns
+//! `Ok(None)` (not repeated errors) while a retry is still backed off.
+//! [`ModelWatcher::with_poll_interval`] separately throttles how often the
+//! serving loop touches the filesystem at all (CLI `--poll-ms`).
 
 use std::path::{Path, PathBuf};
-use std::time::SystemTime;
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{Context, Result};
 
+use super::faults::FaultPlan;
 use crate::artifact::model as artifact_model;
 use crate::runtime::infer::DiagModel;
+
+/// Error-retry backoff defaults: first retry after 200 ms, doubling to a
+/// 5 s ceiling.
+const DEFAULT_BACKOFF_BASE: Duration = Duration::from_millis(200);
+const DEFAULT_BACKOFF_CAP: Duration = Duration::from_secs(5);
 
 /// How many leading bytes the content CRC covers. Deep enough to reach
 /// past the fixed `DDIAG` header and the `arch` section into the `embed`
@@ -51,6 +68,20 @@ struct Fingerprint {
 pub struct ModelWatcher {
     path: PathBuf,
     seen: Option<Fingerprint>,
+    /// Minimum spacing between filesystem touches from `poll_compatible`
+    /// (zero = every call polls).
+    min_poll: Duration,
+    last_poll: Option<Instant>,
+    backoff_base: Duration,
+    backoff_cap: Duration,
+    /// Current error backoff (zero while healthy); doubles per
+    /// consecutive failure up to `backoff_cap`.
+    backoff: Duration,
+    /// While set, polls before this instant are suppressed (`Ok(None)`).
+    next_retry: Option<Instant>,
+    /// `poll_compatible` has already logged the current error streak.
+    warned: bool,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl ModelWatcher {
@@ -60,7 +91,43 @@ impl ModelWatcher {
     pub fn new(path: impl Into<PathBuf>) -> ModelWatcher {
         let path = path.into();
         let seen = fingerprint(&path).ok();
-        ModelWatcher { path, seen }
+        ModelWatcher {
+            path,
+            seen,
+            min_poll: Duration::ZERO,
+            last_poll: None,
+            backoff_base: DEFAULT_BACKOFF_BASE,
+            backoff_cap: DEFAULT_BACKOFF_CAP,
+            backoff: Duration::ZERO,
+            next_retry: None,
+            warned: false,
+            faults: None,
+        }
+    }
+
+    /// Throttle [`ModelWatcher::poll_compatible`] to at most one
+    /// filesystem poll per `d` (CLI `--poll-ms`). Zero (the default)
+    /// polls on every call — the serving loop's `WATCH_STRIDE` is then
+    /// the only throttle.
+    pub fn with_poll_interval(mut self, d: Duration) -> ModelWatcher {
+        self.min_poll = d;
+        self
+    }
+
+    /// Override the error-retry backoff (first retry after `base`,
+    /// doubling to `cap`). Tests use millisecond values; production keeps
+    /// the defaults.
+    pub fn with_backoff(mut self, base: Duration, cap: Duration) -> ModelWatcher {
+        self.backoff_base = base.max(Duration::from_micros(1));
+        self.backoff_cap = cap.max(base);
+        self
+    }
+
+    /// Route this watcher's artifact reads through a fault-injection plan
+    /// (`artifact:nth=K` clauses fail the K-th read) — the test/CI driver
+    /// for the backoff path.
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.faults = Some(faults);
     }
 
     pub fn path(&self) -> &Path {
@@ -74,6 +141,13 @@ impl ModelWatcher {
     /// the next poll). Shared by the single-engine and sharded load
     /// drivers so the two cannot drift.
     pub fn poll_compatible(&mut self, sample_len: usize, classes: usize) -> Option<DiagModel> {
+        if !self.min_poll.is_zero() {
+            let now = Instant::now();
+            if self.last_poll.is_some_and(|t| now.duration_since(t) < self.min_poll) {
+                return None;
+            }
+            self.last_poll = Some(now);
+        }
         match self.poll() {
             Ok(Some(model)) => {
                 if model.sample_len() != sample_len || model.classes() != classes {
@@ -93,7 +167,16 @@ impl ModelWatcher {
             }
             Ok(None) => None,
             Err(e) => {
-                crate::info!("serve: model watcher error ({:#}); keeping the old model", e);
+                // warn once per error streak — poll() backs the retries
+                // off, and recovery resets this flag
+                if !self.warned {
+                    self.warned = true;
+                    crate::info!(
+                        "serve: model watcher error ({:#}); keeping the old model and \
+                         retrying with backoff",
+                        e
+                    );
+                }
                 None
             }
         }
@@ -101,9 +184,42 @@ impl ModelWatcher {
 
     /// Load and return the model if the file changed since the last
     /// successful poll; `Ok(None)` when unchanged. Load failures leave the
-    /// fingerprint untouched, so the caller keeps serving the old model
-    /// and the next poll retries.
+    /// fingerprint untouched — the caller keeps serving the old model —
+    /// and arm a capped exponential retry backoff: until it expires,
+    /// further polls return `Ok(None)` without touching the filesystem.
     pub fn poll(&mut self) -> Result<Option<DiagModel>> {
+        if self.next_retry.is_some_and(|t| Instant::now() < t) {
+            return Ok(None);
+        }
+        match self.poll_inner() {
+            Ok(got) => {
+                if self.next_retry.take().is_some() {
+                    crate::info!(
+                        "serve: model watcher recovered — {} readable again",
+                        self.path.display()
+                    );
+                }
+                self.backoff = Duration::ZERO;
+                self.warned = false;
+                Ok(got)
+            }
+            Err(e) => {
+                self.backoff = if self.backoff.is_zero() {
+                    self.backoff_base
+                } else {
+                    (self.backoff * 2).min(self.backoff_cap)
+                };
+                self.next_retry = Some(Instant::now() + self.backoff);
+                Err(e)
+            }
+        }
+    }
+
+    fn poll_inner(&mut self) -> Result<Option<DiagModel>> {
+        if let Some(f) = &self.faults {
+            f.check_artifact_read()
+                .with_context(|| format!("watching model artifact {}", self.path.display()))?;
+        }
         let fp = fingerprint(&self.path)
             .with_context(|| format!("watching model artifact {}", self.path.display()))?;
         if self.seen == Some(fp) {
@@ -195,15 +311,64 @@ mod tests {
         let path = dir.join("m.ddiag");
         let cfg = mlp_config("mlp_micro").unwrap();
         artifact_model::save(&DiagModel::synth(cfg, 0.9, 1), &path).unwrap();
-        let mut w = ModelWatcher::new(&path);
+        let mut w = ModelWatcher::new(&path)
+            .with_backoff(Duration::from_millis(1), Duration::from_millis(1));
 
         // overwrite with garbage: fingerprint changes, load fails
         std::fs::write(&path, b"not an artifact").unwrap();
         assert!(w.poll().is_err());
 
         // a good replacement afterwards is picked up (fingerprint was not
-        // advanced past the broken file)
+        // advanced past the broken file); wait out the short test backoff
         artifact_model::save(&DiagModel::synth(cfg, 0.9, 2), &path).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(w.poll().unwrap().is_some());
+    }
+
+    /// While the error backoff is armed, polls are suppressed to
+    /// `Ok(None)` instead of re-erroring — the serving loop logs one
+    /// warning per streak, not one per poll.
+    #[test]
+    fn errors_back_off_instead_of_repeating() {
+        let dir = tmp_dir("dynadiag_watcher_backoff_test");
+        let path = dir.join("m.ddiag");
+        let cfg = mlp_config("mlp_micro").unwrap();
+        artifact_model::save(&DiagModel::synth(cfg, 0.9, 1), &path).unwrap();
+        let mut w = ModelWatcher::new(&path)
+            .with_backoff(Duration::from_secs(60), Duration::from_secs(60));
+
+        std::fs::write(&path, b"not an artifact").unwrap();
+        assert!(w.poll().is_err(), "the first failure surfaces");
+        for _ in 0..3 {
+            assert!(
+                w.poll().unwrap().is_none(),
+                "backed-off polls are quiet, not repeated errors"
+            );
+        }
+        // poll_compatible warns once, then stays silent for the streak
+        assert!(w.poll_compatible(1, 1).is_none());
+        assert!(w.warned, "first error of the streak is logged");
+    }
+
+    /// Fault injection (`artifact:nth=K`) drives the same error/backoff
+    /// path without needing a corrupt file on disk.
+    #[test]
+    fn injected_artifact_errors_are_transient() {
+        let dir = tmp_dir("dynadiag_watcher_fault_test");
+        let path = dir.join("m.ddiag");
+        let cfg = mlp_config("mlp_micro").unwrap();
+        artifact_model::save(&DiagModel::synth(cfg, 0.9, 1), &path).unwrap();
+        let mut w = ModelWatcher::new(&path)
+            .with_backoff(Duration::from_millis(1), Duration::from_millis(1));
+        w.set_faults(Arc::new(FaultPlan::parse("artifact:nth=1").unwrap()));
+
+        let err = w.poll().expect_err("the first read is fault-injected");
+        assert!(format!("{:#}", err).contains("fault injection"), "{:#}", err);
+
+        // the fault fires exactly once; after the backoff the watcher
+        // recovers and still detects the pending replacement
+        artifact_model::save(&DiagModel::synth(cfg, 0.9, 2), &path).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
         assert!(w.poll().unwrap().is_some());
     }
 

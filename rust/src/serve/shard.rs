@@ -1,5 +1,5 @@
 //! Multi-shard concurrent serving runtime: N [`ServeEngine`] shards on N
-//! threads behind one admission front door.
+//! supervised threads behind one admission front door.
 //!
 //! The single-threaded engine tops out at one core no matter how fast the
 //! diag kernels are. This runtime scales it horizontally:
@@ -21,14 +21,38 @@
 //!   shard just absorbed), and each submit carries a consumed logits
 //!   buffer back to its shard (balancing the logits the shard emitted).
 //!   In steady state neither side performs fresh workspace allocations —
-//!   `rust/tests/native_steady_state.rs` gates this per shard. (Queue
-//!   nodes live in pre-grown `VecDeque`s, outside the arena contract.)
+//!   `rust/tests/native_steady_state.rs` gates this per shard, with and
+//!   without journaling. (Queue nodes live in pre-grown `VecDeque`s,
+//!   outside the arena contract.)
 //! * **Broadcast hot reload.** [`ShardedServer::swap_shared`] enqueues the
 //!   replacement on every shard inbox. Inboxes are FIFO, so each shard
 //!   first executes everything admitted before the swap — the engine
 //!   drains its queue **through the old model** — then installs the new
 //!   one. Nothing is dropped or reordered; requests admitted after the
 //!   broadcast deterministically serve from the new model.
+//! * **Shard supervision.** Each shard's serving loop runs inside
+//!   `catch_unwind`. On a panic the supervisor salvages the engine's
+//!   metrics, NACKs every in-flight request on that shard with
+//!   [`OutcomeCode::FailedPanic`] (nothing is silently lost — the
+//!   conservation law `submitted == completed + shed + timed_out +
+//!   failed` holds through crashes), marks the shard **down**, waits out a
+//!   capped exponential backoff while still servicing control messages
+//!   and NACKing stragglers, then rebuilds a fresh engine over the
+//!   current model. The front door fails idle clients over to the next
+//!   live shard meanwhile (degraded mode, counted); clients with requests
+//!   still in flight on the down shard are shed instead — failing them
+//!   over would break per-client FIFO.
+//! * **Deadlines and shedding.** With [`ShardPolicy::deadline_us`] set,
+//!   every request carries an absolute deadline stamped at admission. The
+//!   front door sheds requests whose deadline has already passed or whose
+//!   predicted completion (arrival-to-done latency EWMA) would miss it;
+//!   shards NACK requests they dequeue past-deadline without executing
+//!   them. All reason-coded counters land in [`ServeReport`].
+//! * **Request journal.** With a [`Journal`] attached, every admission and
+//!   every outcome (a *receipt*: client, sequence, shard, model
+//!   fingerprint, outcome code, latency, logits digest) is recorded
+//!   through pooled scratch — `serve --replay` re-drives the traffic and
+//!   verifies the digests bitwise ([`super::journal`]).
 //! * **Shard-aware kernel accounting.** Each shard thread caps its kernel
 //!   parallelism at `num_threads() / shards`
 //!   ([`crate::kernels::pool::set_local_thread_cap`]), so N shards
@@ -39,9 +63,12 @@
 //! ([`super::stats::LatencyHistogram::merge`]); `benches/serve.rs` sweeps
 //! the shard axis and gates ≥1.5x throughput at 2 shards on multi-core
 //! hosts, with logits bit-identical to sequential execution at every
-//! shard count (`rust/tests/serve_parity.rs`).
+//! shard count and zero shed/failed counters on fault-free runs
+//! (`rust/tests/serve_parity.rs`).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -50,14 +77,23 @@ use anyhow::{anyhow, bail, Result};
 
 use super::batcher::BatchPolicy;
 use super::engine::{
-    poisson_gap_us, Clock, Completion, LoadSpec, RealClock, ServeEngine, WATCH_STRIDE,
+    poisson_gap_us, Clock, LoadSpec, RealClock, ServeEngine, WATCH_STRIDE,
 };
+use super::faults::FaultPlan;
+use super::journal::{self, Journal, Receipt};
 use super::reload::ModelWatcher;
-use super::stats::{LatencyHistogram, ServeReport};
+use super::stats::{LatencyHistogram, OutcomeCode, ServeReport};
 use crate::kernels::pool;
 use crate::runtime::infer::DiagModel;
 use crate::runtime::native::workspace;
 use crate::util::rng::Rng;
+
+/// Default supervisor restart backoff base (doubles per consecutive
+/// panic) and its hard cap.
+const DEFAULT_RESTART_BACKOFF_US: u64 = 2_000;
+const RESTART_BACKOFF_CAP_US: u64 = 500_000;
+/// Backoff doubling stops here: base << 6 (then the cap clamps anyway).
+const MAX_BACKOFF_SHIFT: u32 = 6;
 
 // ---------------------------------------------------------------------------
 // Message queue (std-only MPSC that stops allocating once warm)
@@ -113,6 +149,29 @@ impl<T> MsgQueue<T> {
     }
 }
 
+/// Per-shard liveness flags shared between the front door and the shard
+/// supervisors. A `true` flag means "down, restarting" — the front door
+/// routes around it. The flag is advisory for routing only: a request
+/// racing past it is still NACKed by the down shard, so accounting never
+/// depends on this flag being fresh.
+struct Health {
+    down: Vec<AtomicBool>,
+}
+
+impl Health {
+    fn new(shards: usize) -> Health {
+        Health { down: (0..shards).map(|_| AtomicBool::new(false)).collect() }
+    }
+
+    fn is_down(&self, shard: usize) -> bool {
+        self.down[shard].load(Ordering::Acquire)
+    }
+
+    fn set_down(&self, shard: usize, v: bool) {
+        self.down[shard].store(v, Ordering::Release);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Messages
 // ---------------------------------------------------------------------------
@@ -122,6 +181,8 @@ struct ShardRequest {
     id: u64,
     client: u64,
     arrival_us: u64,
+    /// Absolute deadline stamp (µs); 0 = no deadline.
+    deadline_us: u64,
     x: Vec<f32>,
     /// A consumed logits buffer returned to this shard's arena — the
     /// driver→shard half of the cross-thread recycle loop.
@@ -131,10 +192,11 @@ struct ShardRequest {
 enum ShardMsg {
     Request(ShardRequest),
     /// Hot reload: drain the queue through the current model, then install
-    /// this one.
-    Swap(Arc<DiagModel>),
-    /// Clear engine metrics and this shard thread's workspace counters
-    /// (brackets a measured window).
+    /// this one (the `u32` is the replacement's fingerprint, stamped on
+    /// receipts it serves).
+    Swap(Arc<DiagModel>, u32),
+    /// Clear engine metrics, supervision counters, and this shard thread's
+    /// workspace counters (brackets a measured window).
     ResetMetrics,
     /// Reply with a [`ShardStats`] snapshot on the stats queue.
     Report,
@@ -143,9 +205,10 @@ enum ShardMsg {
 }
 
 /// One finished request, as surfaced by [`ShardedServer::poll_completions`].
-/// `logits` is a pooled buffer — hand it back with
-/// [`ShardedServer::recycle_logits`] (preferred: it returns to the owning
-/// shard's arena) or `workspace::give_f32`.
+/// `outcome` says how it finished: [`OutcomeCode::Ok`] carries logits (a
+/// pooled buffer — hand it back with [`ShardedServer::recycle_logits`],
+/// preferred, or `workspace::give_f32`); NACK outcomes (timed out, failed)
+/// carry an empty `logits`.
 #[derive(Debug)]
 pub struct ShardCompletion {
     pub id: u64,
@@ -153,6 +216,10 @@ pub struct ShardCompletion {
     pub shard: usize,
     pub arrival_us: u64,
     pub done_us: u64,
+    pub outcome: OutcomeCode,
+    /// Fingerprint of the model that served (or would have served) this
+    /// request — what the journal receipt records.
+    pub model_fp: u32,
     pub logits: Vec<f32>,
     /// Sample-length buffer the shard returns to the driver's arena (the
     /// shard→driver half of the recycle loop); recycled inside
@@ -178,49 +245,358 @@ pub struct ShardStats {
     pub reused_buffers: usize,
     pub hist: LatencyHistogram,
     pub batch_sizes: Vec<u64>,
+    /// Requests dequeued past their deadline and NACKed unexecuted.
+    pub timed_out: u64,
+    /// Requests lost to a panic and NACKed by the supervisor.
+    pub failed: u64,
+    /// Requests NACKed because they reached the shard while it was down.
+    pub shed: u64,
+    /// Supervisor restarts of this shard's engine.
+    pub restarts: u64,
+    /// Age (µs) of the oldest engine-queued request at snapshot time;
+    /// 0 when the queue is idle.
+    pub queue_age_us: u64,
 }
 
 // ---------------------------------------------------------------------------
-// Shard worker
+// Shard worker + supervisor
 // ---------------------------------------------------------------------------
 
+/// The model a shard currently serves (what a rebuilt engine starts from)
+/// plus its receipt fingerprint.
+struct CurrentModel {
+    model: Arc<DiagModel>,
+    fp: u32,
+}
+
+/// Queued-request identity, run exactly parallel to the engine's strictly
+/// FIFO internal queue.
+struct InFlight {
+    id: u64,
+    client: u64,
+    arrival_us: u64,
+}
+
+/// State that dies with a panic: the engine and its in-flight bookkeeping.
+struct LiveState {
+    engine: ServeEngine,
+    meta: VecDeque<InFlight>,
+    done: Vec<super::engine::Completion>,
+}
+
+/// Metrics that must survive engine restarts: the supervisor folds a dead
+/// engine's counters in here, and `Report` merges carry + live engine.
+struct ShardCarry {
+    hist: LatencyHistogram,
+    completed: u64,
+    batches: u64,
+    batch_sizes: Vec<u64>,
+    timed_out: u64,
+    failed: u64,
+    shed: u64,
+    restarts: u64,
+}
+
+impl ShardCarry {
+    fn new(max_batch: usize) -> ShardCarry {
+        ShardCarry {
+            hist: LatencyHistogram::new(),
+            completed: 0,
+            batches: 0,
+            batch_sizes: vec![0; max_batch + 1],
+            timed_out: 0,
+            failed: 0,
+            shed: 0,
+            restarts: 0,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.hist.reset();
+        self.completed = 0;
+        self.batches = 0;
+        self.batch_sizes.fill(0);
+        self.timed_out = 0;
+        self.failed = 0;
+        self.shed = 0;
+        self.restarts = 0;
+    }
+
+    /// Salvage a dead (or retiring) engine's window metrics.
+    fn absorb_engine(&mut self, engine: &ServeEngine) {
+        self.hist.merge(engine.histogram());
+        self.completed += engine.completed();
+        self.batches += engine.batches();
+        for (a, &b) in self.batch_sizes.iter_mut().zip(engine.batch_size_counts()) {
+            *a += b;
+        }
+    }
+
+    /// Snapshot for a `Report` reply; `live` merges in the running
+    /// engine's counters (None while the shard is down).
+    fn snapshot(&self, shard: usize, live: Option<&ServeEngine>, queue_age_us: u64) -> ShardStats {
+        let (fresh, reused) = workspace::stats();
+        let mut hist = self.hist.clone();
+        let mut completed = self.completed;
+        let mut batches = self.batches;
+        let mut batch_sizes = self.batch_sizes.clone();
+        if let Some(e) = live {
+            hist.merge(e.histogram());
+            completed += e.completed();
+            batches += e.batches();
+            for (a, &b) in batch_sizes.iter_mut().zip(e.batch_size_counts()) {
+                *a += b;
+            }
+        }
+        ShardStats {
+            shard,
+            completed,
+            batches,
+            fresh_allocs: fresh,
+            reused_buffers: reused,
+            hist,
+            batch_sizes,
+            timed_out: self.timed_out,
+            failed: self.failed,
+            shed: self.shed,
+            restarts: self.restarts,
+            queue_age_us,
+        }
+    }
+}
+
+/// Build the NACK completion for a request that never produced logits.
+/// `spare` is the payload buffer when the shard still holds it (balancing
+/// the recycle lanes) or empty when it died inside the engine.
+fn nack(
+    shard: usize,
+    id: u64,
+    client: u64,
+    arrival_us: u64,
+    done_us: u64,
+    outcome: OutcomeCode,
+    model_fp: u32,
+    spare: Vec<f32>,
+) -> ShardCompletion {
+    ShardCompletion {
+        id,
+        client,
+        shard,
+        arrival_us,
+        done_us,
+        outcome,
+        model_fp,
+        logits: Vec::new(),
+        spare,
+    }
+}
+
+/// Pull every queued `Request` out of the inbox (control messages keep
+/// their relative order); called by the supervisor right after marking the
+/// shard down, so queued work is NACKed instead of stranded.
+fn drain_inbox_requests(inbox: &MsgQueue<ShardMsg>, out: &mut Vec<ShardRequest>) {
+    let mut g = inbox.q.lock().unwrap();
+    for _ in 0..g.len() {
+        match g.pop_front() {
+            Some(ShardMsg::Request(r)) => out.push(r),
+            Some(other) => g.push_back(other),
+            None => break,
+        }
+    }
+}
+
+/// The supervised shard thread: an outer restart loop around the serving
+/// loop. A panic inside `run_shard` (engine failure or fault injection)
+/// is caught here; the supervisor NACKs in-flight work, backs off
+/// (capped exponential in consecutive panics), and rebuilds the engine.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop(
     shard: usize,
     model: Arc<DiagModel>,
+    model_fp: u32,
     policy: BatchPolicy,
     thread_cap: usize,
     inbox: Arc<MsgQueue<ShardMsg>>,
     completions: Arc<MsgQueue<ShardCompletion>>,
     stats_q: Arc<MsgQueue<ShardStats>>,
     clock: RealClock,
+    health: Arc<Health>,
+    faults: Option<Arc<FaultPlan>>,
+    restart_backoff_us: u64,
 ) {
     pool::set_local_thread_cap(thread_cap);
-    let sl = model.sample_len();
-    let mut engine = ServeEngine::with_shared(model, policy);
-    // (global id, client) of queued requests; the engine is strictly FIFO,
-    // so this deque runs exactly parallel to its internal queue
-    let mut meta: VecDeque<(u64, u64)> = VecDeque::with_capacity(64);
-    let mut done: Vec<Completion> = Vec::with_capacity(16);
+    let backoff_base = if restart_backoff_us == 0 {
+        DEFAULT_RESTART_BACKOFF_US
+    } else {
+        restart_backoff_us
+    };
+    let mut current = CurrentModel { model, fp: model_fp };
+    let mut carry = ShardCarry::new(policy.max_batch);
+    let mut consecutive_panics: u32 = 0;
+    loop {
+        let mut live = LiveState {
+            engine: ServeEngine::with_shared(Arc::clone(&current.model), policy),
+            meta: VecDeque::with_capacity(64),
+            done: Vec::with_capacity(16),
+        };
+        let completed_before = carry.completed;
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            run_shard(
+                shard,
+                &mut live,
+                &mut carry,
+                &mut current,
+                &inbox,
+                &completions,
+                &stats_q,
+                &clock,
+                faults.as_deref(),
+            )
+        }));
+        if outcome.is_ok() {
+            return; // clean shutdown: run_shard flushed and shipped
+        }
+        // -- the serving loop panicked: supervise --------------------------
+        health.set_down(shard, true);
+        carry.restarts += 1;
+        // 1) salvage the dead engine's window metrics, then NACK every
+        //    request it held (meta runs parallel to its FIFO queue; the
+        //    payload buffers died in the unwind, so spares are empty)
+        carry.absorb_engine(&live.engine);
+        let now = clock.now_us();
+        let mut lost = 0u64;
+        for m in live.meta.drain(..) {
+            carry.failed += 1;
+            lost += 1;
+            completions.push(nack(
+                shard,
+                m.id,
+                m.client,
+                m.arrival_us,
+                now,
+                OutcomeCode::FailedPanic,
+                current.fp,
+                Vec::new(),
+            ));
+        }
+        drop(live);
+        // 2) NACK requests queued in the inbox (their payloads survive and
+        //    ship back as spares, keeping the recycle lanes balanced)
+        let mut orphans = Vec::new();
+        drain_inbox_requests(&inbox, &mut orphans);
+        for r in orphans {
+            if let Some(buf) = r.recycle {
+                workspace::give_f32(buf);
+            }
+            carry.failed += 1;
+            lost += 1;
+            completions.push(nack(
+                shard,
+                r.id,
+                r.client,
+                r.arrival_us,
+                now,
+                OutcomeCode::FailedPanic,
+                current.fp,
+                r.x,
+            ));
+        }
+        // 3) capped exponential backoff; progress since the last restart
+        //    resets the streak
+        consecutive_panics =
+            if carry.completed > completed_before { 1 } else { consecutive_panics + 1 };
+        let backoff_us = backoff_base
+            .checked_shl((consecutive_panics - 1).min(MAX_BACKOFF_SHIFT))
+            .unwrap_or(RESTART_BACKOFF_CAP_US)
+            .min(RESTART_BACKOFF_CAP_US);
+        crate::info!(
+            "shard {}: panic caught, {} in-flight request(s) NACKed; restart #{} in {} µs",
+            shard,
+            lost,
+            carry.restarts,
+            backoff_us
+        );
+        // 4) wait out the backoff while staying responsive: control
+        //    messages are serviced from carry, racing requests are NACKed
+        let resume_at = clock.now_us() + backoff_us;
+        loop {
+            let now = clock.now_us();
+            if now >= resume_at {
+                break;
+            }
+            let wait = Duration::from_micros((resume_at - now).min(50_000));
+            match inbox.pop_timeout(wait) {
+                None => {}
+                Some(ShardMsg::Request(r)) => {
+                    if let Some(buf) = r.recycle {
+                        workspace::give_f32(buf);
+                    }
+                    carry.shed += 1;
+                    completions.push(nack(
+                        shard,
+                        r.id,
+                        r.client,
+                        r.arrival_us,
+                        clock.now_us(),
+                        OutcomeCode::ShedShardDown,
+                        current.fp,
+                        r.x,
+                    ));
+                }
+                Some(ShardMsg::Swap(m, fp)) => {
+                    current.model = m;
+                    current.fp = fp;
+                }
+                Some(ShardMsg::ResetMetrics) => {
+                    carry.reset();
+                    workspace::reset_stats();
+                }
+                Some(ShardMsg::Report) => stats_q.push(carry.snapshot(shard, None, 0)),
+                Some(ShardMsg::Shutdown) => {
+                    health.set_down(shard, false);
+                    return;
+                }
+            }
+        }
+        health.set_down(shard, false);
+        // loop: rebuild a fresh engine over the current model
+    }
+}
 
+/// The serving loop proper — everything inside the supervisor's
+/// `catch_unwind`. Returns on `Shutdown`; panics bubble to the supervisor.
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    shard: usize,
+    live: &mut LiveState,
+    carry: &mut ShardCarry,
+    current: &mut CurrentModel,
+    inbox: &MsgQueue<ShardMsg>,
+    completions: &MsgQueue<ShardCompletion>,
+    stats_q: &MsgQueue<ShardStats>,
+    clock: &RealClock,
+    faults: Option<&FaultPlan>,
+) {
+    let sl = current.model.sample_len();
     let mut running = true;
     while running {
         while let Some(msg) = inbox.try_pop() {
             running &= handle_msg(
-                shard, msg, &mut engine, &mut meta, &mut done, &completions, &stats_q, &clock,
+                shard, msg, live, carry, current, completions, stats_q, clock, faults,
             );
         }
         if !running {
             break;
         }
         let now = clock.now_us();
-        if engine.due(now) {
-            engine.poll(&clock, &mut done).expect("shard engine poll");
-            ship(shard, sl, &mut meta, &mut done, &completions);
+        if live.engine.due(now) {
+            live.engine.poll(clock, &mut live.done).expect("shard engine poll");
+            ship(shard, sl, live, completions, current.fp);
             continue;
         }
         // idle until the next event: the oldest request's flush deadline,
         // or (when the queue is empty) the next inbox message
-        let msg = match engine.next_deadline_us() {
+        let msg = match live.engine.next_deadline_us() {
             Some(d) => {
                 let now = clock.now_us();
                 if d <= now {
@@ -234,10 +610,10 @@ fn shard_loop(
             None => inbox.pop(),
         };
         running &= handle_msg(
-            shard, msg, &mut engine, &mut meta, &mut done, &completions, &stats_q, &clock,
+            shard, msg, live, carry, current, completions, stats_q, clock, faults,
         );
         // a flush may have become due while handling; the loop top re-checks
-        ship(shard, sl, &mut meta, &mut done, &completions);
+        ship(shard, sl, live, completions, current.fp);
     }
 }
 
@@ -246,51 +622,90 @@ fn shard_loop(
 fn handle_msg(
     shard: usize,
     msg: ShardMsg,
-    engine: &mut ServeEngine,
-    meta: &mut VecDeque<(u64, u64)>,
-    done: &mut Vec<Completion>,
-    completions: &Arc<MsgQueue<ShardCompletion>>,
-    stats_q: &Arc<MsgQueue<ShardStats>>,
+    live: &mut LiveState,
+    carry: &mut ShardCarry,
+    current: &mut CurrentModel,
+    completions: &MsgQueue<ShardCompletion>,
+    stats_q: &MsgQueue<ShardStats>,
     clock: &RealClock,
+    faults: Option<&FaultPlan>,
 ) -> bool {
-    let sl = engine.model().sample_len();
+    let sl = current.model.sample_len();
     match msg {
         ShardMsg::Request(r) => {
             if let Some(buf) = r.recycle {
                 workspace::give_f32(buf);
             }
-            meta.push_back((r.id, r.client));
-            engine
+            if let Some(f) = faults {
+                // a wedged consumer: sleep *before* the deadline check, so
+                // this request (and its followers) age in the queue
+                let stall = f.inbox_stall_us(shard, r.id);
+                if stall > 0 {
+                    std::thread::sleep(Duration::from_micros(stall));
+                }
+            }
+            let now = clock.now_us();
+            if r.deadline_us > 0 && now >= r.deadline_us {
+                // dequeued too late: NACK without executing; the payload
+                // ships back as the spare
+                carry.timed_out += 1;
+                completions.push(nack(
+                    shard,
+                    r.id,
+                    r.client,
+                    r.arrival_us,
+                    now,
+                    OutcomeCode::TimedOut,
+                    current.fp,
+                    r.x,
+                ));
+                return true;
+            }
+            // register for NACK accounting *before* the panic fail-point:
+            // if the unwind fires past this line, the supervisor still
+            // conserves the request
+            live.meta.push_back(InFlight { id: r.id, client: r.client, arrival_us: r.arrival_us });
+            if let Some(f) = faults {
+                f.check_panic(shard, r.id);
+                // a slow kernel: the request completes, late
+                let stall = f.exec_stall_us(shard, r.id);
+                if stall > 0 {
+                    std::thread::sleep(Duration::from_micros(stall));
+                }
+            }
+            live.engine
                 .submit_at(r.x, r.arrival_us)
                 .expect("admission validated the sample length");
         }
-        ShardMsg::Swap(model) => {
+        ShardMsg::Swap(model, fp) => {
             // drain everything queued through the model it was admitted
-            // under, then install the replacement
-            let _retired = engine.swap_model(model, clock, done).expect("swap drain");
-            ship(shard, sl, meta, done, completions);
+            // under (receipts keep the old fingerprint), then install the
+            // replacement
+            let _retired = live
+                .engine
+                .swap_model(Arc::clone(&model), clock, &mut live.done)
+                .expect("swap drain");
+            ship(shard, sl, live, completions, current.fp);
+            current.model = model;
+            current.fp = fp;
         }
         ShardMsg::ResetMetrics => {
-            engine.reset_metrics();
+            live.engine.reset_metrics();
+            carry.reset();
             workspace::reset_stats();
         }
         ShardMsg::Report => {
-            let (fresh, reused) = workspace::stats();
-            stats_q.push(ShardStats {
-                shard,
-                completed: engine.completed(),
-                batches: engine.batches(),
-                fresh_allocs: fresh,
-                reused_buffers: reused,
-                hist: engine.histogram().clone(),
-                batch_sizes: engine.batch_size_counts().to_vec(),
-            });
+            let queue_age_us = live
+                .engine
+                .oldest_arrival_us()
+                .map_or(0, |a| clock.now_us().saturating_sub(a));
+            stats_q.push(carry.snapshot(shard, Some(&live.engine), queue_age_us));
         }
         ShardMsg::Shutdown => {
-            while engine.queue_len() > 0 {
-                engine.flush(clock, done).expect("shutdown flush");
+            while live.engine.queue_len() > 0 {
+                live.engine.flush(clock, &mut live.done).expect("shutdown flush");
             }
-            ship(shard, sl, meta, done, completions);
+            ship(shard, sl, live, completions, current.fp);
             return false;
         }
     }
@@ -304,19 +719,21 @@ fn handle_msg(
 fn ship(
     shard: usize,
     sl: usize,
-    meta: &mut VecDeque<(u64, u64)>,
-    done: &mut Vec<Completion>,
-    completions: &Arc<MsgQueue<ShardCompletion>>,
+    live: &mut LiveState,
+    completions: &MsgQueue<ShardCompletion>,
+    model_fp: u32,
 ) {
-    for c in done.drain(..) {
-        let (id, client) = meta.pop_front().expect("completion without admission metadata");
+    for c in live.done.drain(..) {
+        let m = live.meta.pop_front().expect("completion without admission metadata");
         let spare = workspace::take_uninit_f32(sl);
         completions.push(ShardCompletion {
-            id,
-            client,
+            id: m.id,
+            client: m.client,
             shard,
             arrival_us: c.arrival_us,
             done_us: c.done_us,
+            outcome: OutcomeCode::Ok,
+            model_fp,
             logits: c.logits,
             spare,
         });
@@ -327,7 +744,7 @@ fn ship(
 // The server
 // ---------------------------------------------------------------------------
 
-/// Sizing of a [`ShardedServer`].
+/// Sizing and robustness policy of a [`ShardedServer`].
 #[derive(Clone, Copy, Debug)]
 pub struct ShardPolicy {
     /// Engine shards (threads). 1 is legal — the same runtime shape with a
@@ -338,6 +755,25 @@ pub struct ShardPolicy {
     /// Global admission cap: [`ShardedServer::try_submit_at`] refuses new
     /// work while this many requests are in flight across all shards.
     pub max_outstanding: usize,
+    /// Per-request latency budget (µs) relative to arrival; 0 disables
+    /// deadlines. With a budget set, the front door sheds requests that
+    /// cannot meet it and shards NACK requests dequeued past it.
+    pub deadline_us: u64,
+    /// Supervisor restart backoff base (µs), doubling per consecutive
+    /// panic up to a hard cap; 0 picks the default (2 ms).
+    pub restart_backoff_us: u64,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> ShardPolicy {
+        ShardPolicy {
+            shards: 1,
+            batch: BatchPolicy { max_batch: 8, max_wait_us: 200 },
+            max_outstanding: 64,
+            deadline_us: 0,
+            restart_backoff_us: 0,
+        }
+    }
 }
 
 /// Outcome of a submit attempt under the global outstanding cap.
@@ -347,10 +783,24 @@ pub enum Submit {
     /// Backpressured — the payload comes back untouched; retry after
     /// draining completions.
     Full(Vec<f32>),
+    /// Shed at the front door with a reason code (deadline unmeetable, or
+    /// the target shard is down). The request consumed a global id and —
+    /// with a journal attached — got a receipt; the payload comes back
+    /// for recycling. Do **not** retry blindly: a deadline shed will shed
+    /// again until load drains.
+    Shed(OutcomeCode, Vec<f32>),
 }
 
-/// N serving shards behind one admission front door. Drive it directly
-/// (`try_submit_at` / `poll_completions`) or through
+/// Sticky-routing state for one client: the shard its in-flight requests
+/// live on, and how many are in flight there.
+#[derive(Clone, Copy, Debug, Default)]
+struct ClientRoute {
+    shard: usize,
+    outstanding: usize,
+}
+
+/// N supervised serving shards behind one admission front door. Drive it
+/// directly (`try_submit_at` / `poll_completions`) or through
 /// [`drive_load_sharded`]. Call [`ShardedServer::shutdown`] when done —
 /// dropping without it leaks parked shard threads until process exit.
 pub struct ShardedServer {
@@ -359,6 +809,7 @@ pub struct ShardedServer {
     stats_q: Arc<MsgQueue<ShardStats>>,
     handles: Vec<JoinHandle<()>>,
     clock: RealClock,
+    health: Arc<Health>,
     sample_len: usize,
     classes: usize,
     max_outstanding: usize,
@@ -366,6 +817,21 @@ pub struct ShardedServer {
     next_id: u64,
     /// Consumed logits buffers awaiting return to their shard's arena.
     freelists: Vec<Vec<Vec<f32>>>,
+    /// Per-client sticky routes (shard + in-flight count): the failover
+    /// rule that keeps per-client FIFO intact across shard restarts.
+    routes: HashMap<u64, ClientRoute>,
+    /// Per-request latency budget (µs); 0 = no deadlines.
+    deadline_us: u64,
+    /// EWMA of Ok-request arrival→done latency, the front door's
+    /// completion-time predictor (0 until the first completion).
+    ewma_latency_us: u64,
+    /// Fingerprint of the newest model broadcast to the shards.
+    model_fp: u32,
+    journal: Option<Journal>,
+    // front-door counters (shard-side counters live in ShardStats)
+    shed_deadline: u64,
+    shed_shard_down: u64,
+    degraded: u64,
 }
 
 impl ShardedServer {
@@ -375,6 +841,17 @@ impl ShardedServer {
 
     /// Start over an already-shared model (no weight copy per shard).
     pub fn start_shared(model: Arc<DiagModel>, policy: ShardPolicy) -> Result<ShardedServer> {
+        ShardedServer::start_supervised(model, policy, None)
+    }
+
+    /// [`ShardedServer::start_shared`] with a fault-injection plan wired
+    /// into every shard (tests and the CI chaos job; `None` is the
+    /// zero-cost production path).
+    pub fn start_supervised(
+        model: Arc<DiagModel>,
+        policy: ShardPolicy,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<ShardedServer> {
         if policy.shards == 0 {
             bail!("ShardedServer: shards must be >= 1");
         }
@@ -382,8 +859,10 @@ impl ShardedServer {
         let clock = RealClock::start();
         let completions: Arc<MsgQueue<ShardCompletion>> = Arc::new(MsgQueue::new());
         let stats_q: Arc<MsgQueue<ShardStats>> = Arc::new(MsgQueue::new());
+        let health = Arc::new(Health::new(policy.shards));
         let sample_len = model.sample_len();
         let classes = model.classes();
+        let model_fp = journal::model_fingerprint(&model);
         crate::info!(
             "sharded serve: {} shards × {} kernel thread(s), shared weights ≈ {} KiB",
             policy.shards,
@@ -402,10 +881,24 @@ impl ShardedServer {
                     let stats_q = Arc::clone(&stats_q);
                     let model = Arc::clone(&model);
                     let clock = clock.clone();
+                    let health = Arc::clone(&health);
+                    let faults = faults.clone();
                     let batch = policy.batch;
+                    let restart_backoff_us = policy.restart_backoff_us;
                     move || {
                         shard_loop(
-                            shard, model, batch, thread_cap, inbox, completions, stats_q, clock,
+                            shard,
+                            model,
+                            model_fp,
+                            batch,
+                            thread_cap,
+                            inbox,
+                            completions,
+                            stats_q,
+                            clock,
+                            health,
+                            faults,
+                            restart_backoff_us,
                         )
                     }
                 })
@@ -420,11 +913,20 @@ impl ShardedServer {
             stats_q,
             handles,
             clock,
+            health,
             sample_len,
             classes,
             max_outstanding: policy.max_outstanding.max(1),
             outstanding: 0,
             next_id: 0,
+            routes: HashMap::new(),
+            deadline_us: policy.deadline_us,
+            ewma_latency_us: 0,
+            model_fp,
+            journal: None,
+            shed_deadline: 0,
+            shed_shard_down: 0,
+            degraded: 0,
         })
     }
 
@@ -450,16 +952,82 @@ impl ShardedServer {
         self.clock.now_us()
     }
 
+    /// Fingerprint of the newest model broadcast to the shards (what new
+    /// receipts will record).
+    pub fn model_fp(&self) -> u32 {
+        self.model_fp
+    }
+
+    /// Record every admission and outcome into `j` from now on (receipts
+    /// carry logits digests; see [`super::journal`]). A journal write
+    /// error disables journaling with a log line rather than failing the
+    /// serving path.
+    pub fn attach_journal(&mut self, j: Journal) {
+        self.journal = Some(j);
+    }
+
+    /// Detach the journal (flush/finish it yourself). Receipts for
+    /// requests absorbed after this call are not recorded.
+    pub fn take_journal(&mut self) -> Option<Journal> {
+        self.journal.take()
+    }
+
+    fn journal_request(&mut self, id: u64, client: u64, arrival_us: u64, deadline_us: u64, x: &[f32]) {
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.append_request(id, client, arrival_us, deadline_us, x) {
+                crate::info!("journal: request write failed ({}); journaling disabled", e);
+                self.journal = None;
+            }
+        }
+    }
+
+    fn journal_receipt(&mut self, r: &Receipt) {
+        if let Some(j) = self.journal.as_mut() {
+            if let Err(e) = j.append_receipt(r) {
+                crate::info!("journal: receipt write failed ({}); journaling disabled", e);
+                self.journal = None;
+            }
+        }
+    }
+
     /// Submit with the arrival stamped "now".
     pub fn try_submit(&mut self, client: u64, x: Vec<f32>) -> Result<Submit> {
         let now = self.clock.now_us();
         self.try_submit_at(client, x, now)
     }
 
-    /// Admission front door: enforce the global outstanding cap, assign a
-    /// global id, and route to `client % shards` (sticky, so per-client
-    /// FIFO holds). The explicit `arrival_us` lets a load driver charge
-    /// admission stalls to the request (no coordinated omission).
+    /// Shed at the front door: consume an id, count, receipt, and hand the
+    /// payload back.
+    fn shed(&mut self, client: u64, x: Vec<f32>, arrival_us: u64, outcome: OutcomeCode) -> Submit {
+        let id = self.next_id;
+        self.next_id += 1;
+        match outcome {
+            OutcomeCode::ShedDeadline => self.shed_deadline += 1,
+            _ => self.shed_shard_down += 1,
+        }
+        let latency_us = self.clock.now_us().saturating_sub(arrival_us);
+        let fp = self.model_fp;
+        self.journal_receipt(&Receipt {
+            id,
+            client,
+            arrival_us,
+            shard: journal::NO_SHARD,
+            model_fp: fp,
+            outcome,
+            latency_us,
+            logits_digest: 0,
+        });
+        Submit::Shed(outcome, x)
+    }
+
+    /// Admission front door: enforce the global outstanding cap, apply the
+    /// deadline shed rules, assign a global id, and route sticky-by-client
+    /// (home shard `client % shards`; an **idle** client fails over to the
+    /// next live shard while its home is down — a client with requests in
+    /// flight is pinned to their shard, because failing it over would let
+    /// a later request finish before an earlier one). The explicit
+    /// `arrival_us` lets a load driver charge admission stalls to the
+    /// request (no coordinated omission).
     pub fn try_submit_at(&mut self, client: u64, x: Vec<f32>, arrival_us: u64) -> Result<Submit> {
         if x.len() != self.sample_len {
             bail!(
@@ -471,29 +1039,77 @@ impl ShardedServer {
         if self.outstanding >= self.max_outstanding {
             return Ok(Submit::Full(x));
         }
-        let shard = (client % self.inboxes.len() as u64) as usize;
+        let deadline_us =
+            if self.deadline_us > 0 { arrival_us.saturating_add(self.deadline_us) } else { 0 };
+        if deadline_us > 0 {
+            let now = self.clock.now_us();
+            // shed when the deadline already passed, or when the observed
+            // completion latency says it cannot be met (queue age is
+            // charged to the request via its arrival stamp)
+            if now >= deadline_us || now.saturating_add(self.ewma_latency_us) > deadline_us {
+                return Ok(self.shed(client, x, arrival_us, OutcomeCode::ShedDeadline));
+            }
+        }
+        let shards = self.inboxes.len();
+        let home = (client % shards as u64) as usize;
+        let pinned = self.routes.get(&client).copied().filter(|rt| rt.outstanding > 0);
+        let target = match pinned {
+            Some(rt) => {
+                if self.health.is_down(rt.shard) {
+                    return Ok(self.shed(client, x, arrival_us, OutcomeCode::ShedShardDown));
+                }
+                rt.shard
+            }
+            None => {
+                let mut pick = None;
+                for off in 0..shards {
+                    let s = (home + off) % shards;
+                    if !self.health.is_down(s) {
+                        pick = Some(s);
+                        break;
+                    }
+                }
+                match pick {
+                    Some(s) => {
+                        if s != home {
+                            self.degraded += 1;
+                        }
+                        s
+                    }
+                    None => {
+                        return Ok(self.shed(client, x, arrival_us, OutcomeCode::ShedShardDown))
+                    }
+                }
+            }
+        };
         let id = self.next_id;
         self.next_id += 1;
-        let recycle = self.freelists[shard].pop();
-        self.inboxes[shard].push(ShardMsg::Request(ShardRequest {
+        self.journal_request(id, client, arrival_us, deadline_us, &x);
+        let recycle = self.freelists[target].pop();
+        self.inboxes[target].push(ShardMsg::Request(ShardRequest {
             id,
             client,
             arrival_us,
+            deadline_us,
             x,
             recycle,
         }));
         self.outstanding += 1;
+        let rt = self.routes.entry(client).or_default();
+        rt.shard = target;
+        rt.outstanding += 1;
         Ok(Submit::Ok(id))
     }
 
-    /// Fail fast when a shard thread has died: a panicked shard would
-    /// otherwise turn every driver wait into an infinite hang (its
-    /// completions never arrive, its stats reply never comes).
+    /// Fail fast when a shard thread has *died* (not merely restarting —
+    /// the supervisor catches panics in the serving loop; this catches a
+    /// panic in the supervisor itself, which would otherwise turn every
+    /// driver wait into an infinite hang).
     fn check_alive(&self) -> Result<()> {
         for (i, h) in self.handles.iter().enumerate() {
             if h.is_finished() {
                 bail!(
-                    "shard {} thread exited unexpectedly (panicked?); \
+                    "shard {} thread exited unexpectedly (supervisor panicked?); \
                      serving cannot continue",
                     i
                 );
@@ -504,9 +1120,11 @@ impl ShardedServer {
 
     /// Drain finished requests into `out`; with `wait`, block up to that
     /// long for the first one. Each completion's spare buffer is recycled
-    /// into the calling thread's arena before it is surfaced. Returns how
-    /// many were appended; errors if a shard thread has died (rather than
-    /// letting the caller wait forever for completions that cannot come).
+    /// into the calling thread's arena, the per-client route and the
+    /// latency EWMA are updated, and — with a journal attached — a receipt
+    /// is written, before it is surfaced. Returns how many were appended;
+    /// errors if a shard thread has died (rather than letting the caller
+    /// wait forever for completions that cannot come).
     pub fn poll_completions(
         &mut self,
         out: &mut Vec<ShardCompletion>,
@@ -535,6 +1153,30 @@ impl ShardedServer {
     fn absorb(&mut self, mut c: ShardCompletion) -> ShardCompletion {
         workspace::give_f32(std::mem::take(&mut c.spare));
         self.outstanding -= 1;
+        if let Some(rt) = self.routes.get_mut(&c.client) {
+            rt.outstanding = rt.outstanding.saturating_sub(1);
+        }
+        if c.outcome.is_ok() {
+            let lat = c.latency_us();
+            self.ewma_latency_us = if self.ewma_latency_us == 0 {
+                lat
+            } else {
+                (self.ewma_latency_us * 7 + lat) / 8
+            };
+        }
+        if self.journal.is_some() {
+            let digest = if c.outcome.is_ok() { journal::logits_digest(&c.logits) } else { 0 };
+            self.journal_receipt(&Receipt {
+                id: c.id,
+                client: c.client,
+                arrival_us: c.arrival_us,
+                shard: c.shard as u64,
+                model_fp: c.model_fp,
+                outcome: c.outcome,
+                latency_us: c.latency_us(),
+                logits_digest: digest,
+            });
+        }
         c
     }
 
@@ -570,23 +1212,30 @@ impl ShardedServer {
                 self.classes
             );
         }
+        let fp = journal::model_fingerprint(&model);
         for inbox in &self.inboxes {
-            inbox.push(ShardMsg::Swap(Arc::clone(&model)));
+            inbox.push(ShardMsg::Swap(Arc::clone(&model), fp));
         }
+        self.model_fp = fp;
         Ok(())
     }
 
-    /// Clear every shard's engine metrics and workspace counters (bracket
-    /// a measured window; drain completions first so the counters only see
-    /// the window).
+    /// Clear every shard's engine metrics, supervision counters, and
+    /// workspace counters, plus the front door's shed/degraded counters
+    /// (bracket a measured window; drain completions first so the counters
+    /// only see the window).
     pub fn reset_metrics(&mut self) {
         for inbox in &self.inboxes {
             inbox.push(ShardMsg::ResetMetrics);
         }
+        self.shed_deadline = 0;
+        self.shed_shard_down = 0;
+        self.degraded = 0;
     }
 
     /// Snapshot per-shard metrics (blocks until every shard replies; the
-    /// engines keep accumulating, so this is non-destructive). Errors if a
+    /// engines keep accumulating, so this is non-destructive). A shard in
+    /// restart backoff replies from its carried counters. Errors if a
     /// shard thread died instead of waiting forever for its reply.
     pub fn shard_stats(&mut self) -> Result<Vec<ShardStats>> {
         for inbox in &self.inboxes {
@@ -606,7 +1255,9 @@ impl ShardedServer {
     /// Merge per-shard metrics into one [`ServeReport`] for a measured
     /// window of `duration_s` seconds. `driver_fresh`/`driver_reused` are
     /// the *driver thread's* workspace deltas over the same window (the
-    /// shards contribute their own).
+    /// shards contribute their own). Front-door shed/degraded counters
+    /// combine with the shards' timeout/failure/restart counters, so the
+    /// conservation law is auditable from the report alone.
     pub fn report(
         &mut self,
         duration_s: f64,
@@ -619,13 +1270,22 @@ impl ShardedServer {
         let mut batches = 0u64;
         let mut fresh = driver_fresh;
         let mut reused = driver_reused;
+        let mut timed_out = 0u64;
+        let mut failed = 0u64;
+        let mut restarts = 0u64;
+        let mut shard_shed = 0u64;
         for s in &stats {
             hist.merge(&s.hist);
             requests += s.completed;
             batches += s.batches;
             fresh += s.fresh_allocs;
             reused += s.reused_buffers;
+            timed_out += s.timed_out;
+            failed += s.failed;
+            restarts += s.restarts;
+            shard_shed += s.shed;
         }
+        let shed_shard_down = self.shed_shard_down + shard_shed;
         Ok(ServeReport {
             shards: stats.len(),
             requests,
@@ -640,18 +1300,25 @@ impl ShardedServer {
             max_ms: hist.max_us() as f64 / 1e3,
             fresh_allocs: fresh,
             reused_buffers: reused,
+            shed: self.shed_deadline + shed_shard_down,
+            shed_deadline: self.shed_deadline,
+            shed_shard_down,
+            timed_out,
+            failed,
+            restarts,
+            degraded: self.degraded,
         })
     }
 
     /// Stop every shard (each flushes its queue first) and join the
     /// threads. Completions that were still in flight are drained,
-    /// recycled, and returned.
+    /// recycled (and receipted, with a journal attached), and returned.
     pub fn shutdown(mut self) -> Result<Vec<ShardCompletion>> {
         for inbox in &self.inboxes {
             inbox.push(ShardMsg::Shutdown);
         }
         for h in self.handles.drain(..) {
-            h.join().map_err(|_| anyhow!("a shard thread panicked"))?;
+            h.join().map_err(|_| anyhow!("a shard supervisor thread panicked"))?;
         }
         let mut rest = Vec::new();
         while let Some(c) = self.completions.try_pop() {
@@ -680,7 +1347,12 @@ pub struct ShardReloadPlan {
 /// `spec.max_outstanding` as the global admission cap, and report merged
 /// throughput + latency over the run. Payloads and logits recycle through
 /// the cross-thread lanes, so a warm run performs zero fresh workspace
-/// allocations on the driver *and* on every shard.
+/// allocations on the driver *and* on every shard (journaling included).
+///
+/// Every generated request is accounted exactly once — served, shed at
+/// the front door, timed out, or failed by a crashed shard — and the run
+/// ends when `spec.requests` are accounted, not merely completed, so a
+/// faulted run terminates too.
 pub fn drive_load_sharded(
     server: &mut ShardedServer,
     spec: &LoadSpec,
@@ -696,31 +1368,32 @@ pub fn drive_load_sharded(
     let t0 = server.now_us();
 
     let mut submitted = 0usize;
-    let mut done = 0usize;
+    // completions of any outcome + front-door sheds: the conservation count
+    let mut accounted = 0usize;
     let mut next_arrival_us: u64 = t0;
     let mut next_watch_at = 0usize;
     let mut completions: Vec<ShardCompletion> = Vec::with_capacity(cap);
 
-    while done < spec.requests {
-        if reload.as_ref().is_some_and(|p| done >= p.after_requests) {
+    while accounted < spec.requests {
+        if reload.as_ref().is_some_and(|p| accounted >= p.after_requests) {
             let plan = reload.take().expect("checked above");
             server.swap_shared(plan.model)?;
             crate::info!(
                 "serve: broadcast hot reload after {} completed requests \
                  (each shard drains through its old model)",
-                done
+                accounted
             );
         }
         if let Some(w) = watcher.as_deref_mut() {
-            if done >= next_watch_at {
-                next_watch_at = done + WATCH_STRIDE;
+            if accounted >= next_watch_at {
+                next_watch_at = accounted + WATCH_STRIDE;
                 let (sl, classes) = (server.sample_len(), server.classes());
                 if let Some(model) = w.poll_compatible(sl, classes) {
                     server.swap_shared(Arc::new(model))?;
                     crate::info!(
                         "serve: hot reload — {} replaced on disk ({} requests done)",
                         w.path().display(),
-                        done
+                        accounted
                     );
                 }
             }
@@ -738,14 +1411,24 @@ pub fn drive_load_sharded(
             }
             let arrival = if spec.rate_rps > 0.0 { next_arrival_us } else { now };
             let client = (submitted % clients) as u64;
-            match server.try_submit_at(client, x, arrival)? {
-                Submit::Ok(_) => {}
+            let admitted = match server.try_submit_at(client, x, arrival)? {
+                Submit::Ok(_) => true,
+                Submit::Shed(_, x) => {
+                    // the request is accounted (and receipted) as shed;
+                    // the stream moves on to the next arrival
+                    workspace::give_f32(x);
+                    accounted += 1;
+                    true
+                }
                 Submit::Full(x) => {
                     // cap race (defensive; the loop condition checks it) —
                     // recycle the payload and retry next iteration
                     workspace::give_f32(x);
-                    break;
+                    false
                 }
+            };
+            if !admitted {
+                break;
             }
             submitted += 1;
             if spec.rate_rps > 0.0 {
@@ -763,9 +1446,11 @@ pub fn drive_load_sharded(
         };
         server.poll_completions(&mut completions, Some(Duration::from_micros(wait_us)))?;
         for c in completions.drain(..) {
-            let shard = c.shard;
-            server.recycle_logits(shard, c.logits);
-            done += 1;
+            if c.outcome.is_ok() {
+                let shard = c.shard;
+                server.recycle_logits(shard, c.logits);
+            }
+            accounted += 1;
         }
     }
 
@@ -791,6 +1476,7 @@ mod tests {
                 shards,
                 batch: BatchPolicy::new(max_batch, 200).unwrap(),
                 max_outstanding: 32,
+                ..ShardPolicy::default()
             },
         )
         .unwrap()
@@ -805,6 +1491,7 @@ mod tests {
                 shards: 0,
                 batch: BatchPolicy::new(1, 0).unwrap(),
                 max_outstanding: 1,
+                ..ShardPolicy::default()
             },
         )
         .is_err());
@@ -831,12 +1518,14 @@ mod tests {
                 match s.try_submit((submitted % 5) as u64, x).unwrap() {
                     Submit::Ok(id) => assert_eq!(id, submitted as u64),
                     Submit::Full(_) => unreachable!("cap checked above"),
+                    Submit::Shed(..) => unreachable!("no deadline, no faults"),
                 }
                 submitted += 1;
             }
             assert!(s.outstanding() <= 8, "admission cap violated");
             s.poll_completions(&mut out, Some(Duration::from_millis(50))).unwrap();
             for c in out.drain(..) {
+                assert_eq!(c.outcome, OutcomeCode::Ok, "fault-free run");
                 let shard = c.shard;
                 assert_eq!(shard, (c.client % 2) as usize, "sticky routing");
                 s.recycle_logits(shard, c.logits);
@@ -856,6 +1545,7 @@ mod tests {
         assert_eq!(r.requests, 48);
         assert_eq!(r.shards, 2);
         assert!(r.throughput_rps > 0.0);
+        assert!(r.is_clean(), "no faults injected: {}", r.summary());
         s.shutdown().unwrap();
     }
 
@@ -868,5 +1558,73 @@ mod tests {
         let r = drive_load_sharded(&mut s, &spec, 4, Some(plan), None).unwrap();
         assert_eq!(r.requests, 48, "broadcast hot reload must not drop requests");
         s.shutdown().unwrap();
+    }
+
+    #[test]
+    fn supervisor_restarts_a_panicked_shard_and_conserves_requests() {
+        let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 3);
+        let faults = Arc::new(FaultPlan::parse("panic:shard=0,req=4").unwrap());
+        let mut s = ShardedServer::start_supervised(
+            Arc::new(model),
+            ShardPolicy {
+                shards: 1,
+                batch: BatchPolicy::new(4, 200).unwrap(),
+                max_outstanding: 8,
+                restart_backoff_us: 1_000,
+                ..ShardPolicy::default()
+            },
+            Some(Arc::clone(&faults)),
+        )
+        .unwrap();
+        let sl = s.sample_len();
+        let mut rng = Rng::new(13);
+        let total = 24usize;
+        let mut submitted = 0usize;
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        let mut shed = 0u64;
+        let mut out = Vec::new();
+        while (ok + failed + shed) < total as u64 {
+            while submitted < total && s.outstanding() < 8 {
+                let mut x = workspace::take_uninit_f32(sl);
+                for v in x.iter_mut() {
+                    *v = rng.normal_f32(0.0, 1.0);
+                }
+                match s.try_submit((submitted % 3) as u64, x).unwrap() {
+                    Submit::Ok(_) => {}
+                    Submit::Full(x) => {
+                        workspace::give_f32(x);
+                        break;
+                    }
+                    Submit::Shed(_, x) => {
+                        workspace::give_f32(x);
+                        shed += 1;
+                    }
+                }
+                submitted += 1;
+            }
+            s.poll_completions(&mut out, Some(Duration::from_millis(50))).unwrap();
+            for c in out.drain(..) {
+                match c.outcome {
+                    OutcomeCode::Ok => {
+                        ok += 1;
+                        let shard = c.shard;
+                        s.recycle_logits(shard, c.logits);
+                    }
+                    OutcomeCode::FailedPanic => failed += 1,
+                    OutcomeCode::ShedShardDown => shed += 1,
+                    other => panic!("unexpected outcome {:?}", other),
+                }
+            }
+        }
+        assert_eq!(faults.fired_panics(), 1, "the injected panic must fire");
+        assert!(failed >= 1, "the panicked request is NACKed, not lost");
+        assert!(ok >= 1, "the shard must come back and serve again");
+        assert_eq!(ok + failed + shed, total as u64, "conservation");
+        let r = s.report(1.0, 0, 0).unwrap();
+        assert_eq!(r.restarts, 1, "the restart is visible in the report");
+        assert_eq!(r.failed, failed);
+        let rest = s.shutdown().unwrap();
+        assert!(rest.is_empty());
     }
 }

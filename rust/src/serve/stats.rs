@@ -9,6 +9,63 @@
 
 use crate::util::json::Json;
 
+/// How a request left the serving runtime — the reason code stamped on
+/// every [`ShardCompletion`] and journal receipt, and the bucket its
+/// conservation-law counter lives in. The numeric values are part of the
+/// journal wire format: never renumber, only append.
+///
+/// [`ShardCompletion`]: super::shard::ShardCompletion
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum OutcomeCode {
+    /// Served: logits were computed and returned.
+    Ok = 0,
+    /// Shed at the front door: the deadline had already passed at
+    /// admission, or the latency EWMA predicted it could not be met.
+    ShedDeadline = 1,
+    /// Shed because the target shard was down (restarting after a panic)
+    /// and, for a client with requests still in flight there, failover
+    /// would have broken per-client FIFO — or every shard was down.
+    ShedShardDown = 2,
+    /// Dequeued by a shard after its deadline had already passed; NACKed
+    /// without executing.
+    TimedOut = 3,
+    /// Lost to a shard panic: the request was in flight (inbox or engine
+    /// queue) when the shard crashed; NACKed by the supervisor.
+    FailedPanic = 4,
+}
+
+impl OutcomeCode {
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_code(code: u8) -> Option<OutcomeCode> {
+        match code {
+            0 => Some(OutcomeCode::Ok),
+            1 => Some(OutcomeCode::ShedDeadline),
+            2 => Some(OutcomeCode::ShedShardDown),
+            3 => Some(OutcomeCode::TimedOut),
+            4 => Some(OutcomeCode::FailedPanic),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OutcomeCode::Ok => "ok",
+            OutcomeCode::ShedDeadline => "shed_deadline",
+            OutcomeCode::ShedShardDown => "shed_shard_down",
+            OutcomeCode::TimedOut => "timed_out",
+            OutcomeCode::FailedPanic => "failed_panic",
+        }
+    }
+
+    pub fn is_ok(self) -> bool {
+        self == OutcomeCode::Ok
+    }
+}
+
 /// Sub-buckets per power of two.
 const SUB: usize = 4;
 /// Powers of two covered: [2^0, 2^40) µs ≈ up to 12.7 days.
@@ -160,6 +217,23 @@ pub struct ServeReport {
     /// workspace arena counters over the measured window
     pub fresh_allocs: usize,
     pub reused_buffers: usize,
+    /// requests shed (front-door deadline/down sheds + shard-side down
+    /// NACKs); `shed == shed_deadline + shed_shard_down`
+    pub shed: u64,
+    /// front-door sheds because the deadline had passed or the latency
+    /// EWMA predicted a miss
+    pub shed_deadline: u64,
+    /// sheds because the target shard was down (restarting)
+    pub shed_shard_down: u64,
+    /// requests a shard dequeued past their deadline and NACKed unexecuted
+    pub timed_out: u64,
+    /// requests lost to shard panics and NACKed by the supervisor
+    pub failed: u64,
+    /// shard restarts performed by the supervisor
+    pub restarts: u64,
+    /// admissions routed off a client's home shard while it was down
+    /// (degraded-mode failovers)
+    pub degraded: u64,
 }
 
 impl ServeReport {
@@ -178,15 +252,47 @@ impl ServeReport {
             ("max_ms", Json::Num(self.max_ms)),
             ("fresh_allocs", Json::Num(self.fresh_allocs as f64)),
             ("reused_buffers", Json::Num(self.reused_buffers as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("shed_deadline", Json::Num(self.shed_deadline as f64)),
+            ("shed_shard_down", Json::Num(self.shed_shard_down as f64)),
+            ("timed_out", Json::Num(self.timed_out as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("restarts", Json::Num(self.restarts as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
         ])
+    }
+
+    /// Any non-Ok outcome or supervisor action in the window? A no-fault
+    /// run must be clean — the bench and CI gate on this.
+    pub fn is_clean(&self) -> bool {
+        self.shed == 0
+            && self.timed_out == 0
+            && self.failed == 0
+            && self.restarts == 0
+            && self.degraded == 0
     }
 
     /// One human-readable summary line (stderr-friendly).
     pub fn summary(&self) -> String {
+        let faults = if self.is_clean() {
+            String::new()
+        } else {
+            format!(
+                ", shed {} (deadline {} / down {}), timed out {}, failed {}, \
+                 restarts {}, degraded {}",
+                self.shed,
+                self.shed_deadline,
+                self.shed_shard_down,
+                self.timed_out,
+                self.failed,
+                self.restarts,
+                self.degraded
+            )
+        };
         format!(
             "{}{} reqs in {:.3}s — {:.0} req/s, mean batch {:.2} ({} batches), \
              latency ms p50 {:.3} p95 {:.3} p99 {:.3} mean {:.3} max {:.3}, \
-             workspace fresh {} reused {}",
+             workspace fresh {} reused {}{}",
             if self.shards > 1 { format!("[{} shards] ", self.shards) } else { String::new() },
             self.requests,
             self.duration_s,
@@ -199,7 +305,8 @@ impl ServeReport {
             self.mean_ms,
             self.max_ms,
             self.fresh_allocs,
-            self.reused_buffers
+            self.reused_buffers,
+            faults
         )
     }
 }
@@ -318,6 +425,25 @@ mod tests {
         h.record_us(u64::MAX); // clamps to the top bucket
         assert_eq!(h.count(), 2);
         assert!(h.quantile_us(0.25) <= 2);
+    }
+
+    #[test]
+    fn outcome_codes_round_trip_and_stay_stable() {
+        // journal wire format: the numeric values are frozen
+        let all = [
+            (OutcomeCode::Ok, 0u8, "ok"),
+            (OutcomeCode::ShedDeadline, 1, "shed_deadline"),
+            (OutcomeCode::ShedShardDown, 2, "shed_shard_down"),
+            (OutcomeCode::TimedOut, 3, "timed_out"),
+            (OutcomeCode::FailedPanic, 4, "failed_panic"),
+        ];
+        for (oc, code, name) in all {
+            assert_eq!(oc.code(), code);
+            assert_eq!(OutcomeCode::from_code(code), Some(oc));
+            assert_eq!(oc.name(), name);
+            assert_eq!(oc.is_ok(), code == 0);
+        }
+        assert_eq!(OutcomeCode::from_code(5), None);
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Kill/replay round trip (ISSUE 7 acceptance): journal a deterministic
+//! sharded run, then re-drive the recorded traffic against the same model
+//! and verify every receipt's logits digest **bitwise**.
+//!
+//! 1. Full round trip — every served request replays to an identical
+//!    digest (`verified == served`, `mismatched == 0`).
+//! 2. Mid-stream kill — detaching the journal before the tail of the run
+//!    leaves receipts missing; replay still verifies what was recorded and
+//!    reports the unreceipted requests as `incomplete`.
+//! 3. Corruption — flipping one byte inside a record makes replay (via
+//!    the strict reader) fail with an actionable CRC error naming the
+//!    record.
+//! 4. Wrong artifact — replaying against a different model verifies
+//!    nothing (`other_model` counts every receipt; `ok()` is false).
+//!
+//! Replay soundness leans on an earlier acceptance bar: logits are
+//! bitwise identical at every batch size and ISA path, so a batch-of-1
+//! replay reproduces what a coalesced micro-batch served.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dynadiag::runtime::infer::{mlp_config, DiagModel};
+use dynadiag::runtime::native::workspace;
+use dynadiag::serve::{
+    journal, BatchPolicy, Journal, OutcomeCode, ShardCompletion, ShardPolicy, ShardedServer,
+    Submit,
+};
+use dynadiag::util::rng::Rng;
+
+fn tmp_journal(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("dynadiag_journal_replay_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{}.ddjnl", name, std::process::id()))
+}
+
+/// Drive `total` requests from `clients` round-robin clients through a
+/// journaled 2-shard server; returns how many served Ok. With
+/// `kill_after`, the journal is detached (simulating the process dying)
+/// once that many requests have been *submitted* — outcomes of everything
+/// still in flight never reach the journal.
+fn journaled_run(
+    model: &DiagModel,
+    path: &PathBuf,
+    total: usize,
+    clients: usize,
+    seed: u64,
+    kill_after: Option<usize>,
+) -> u64 {
+    let mut server = ShardedServer::start(
+        model.clone(),
+        ShardPolicy {
+            shards: 2,
+            batch: BatchPolicy::new(4, 200).unwrap(),
+            max_outstanding: 16,
+            ..ShardPolicy::default()
+        },
+    )
+    .unwrap();
+    server.attach_journal(Journal::create(path).unwrap());
+    let sl = server.sample_len();
+    let mut rng = Rng::new(seed);
+    let mut submitted = 0usize;
+    let mut done = 0usize;
+    let mut served = 0u64;
+    let mut out: Vec<ShardCompletion> = Vec::new();
+    let mut killed: Option<Journal> = None;
+    while done < total {
+        while submitted < total && server.outstanding() < 16 {
+            let mut x = workspace::take_uninit_f32(sl);
+            for v in x.iter_mut() {
+                *v = rng.normal_f32(0.0, 1.0);
+            }
+            match server.try_submit((submitted % clients) as u64, x).unwrap() {
+                Submit::Ok(_) => submitted += 1,
+                Submit::Full(x) => {
+                    workspace::give_f32(x);
+                    break;
+                }
+                Submit::Shed(..) => unreachable!("no deadline and no faults"),
+            }
+            if kill_after.is_some_and(|k| submitted == k) && killed.is_none() {
+                // "kill": the writer stops mid-stream; whatever bytes made
+                // it out are what the reader gets
+                killed = server.take_journal();
+            }
+        }
+        server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
+        for c in out.drain(..) {
+            assert_eq!(c.outcome, OutcomeCode::Ok, "fault-free run");
+            served += 1;
+            let shard = c.shard;
+            server.recycle_logits(shard, c.logits);
+            done += 1;
+        }
+    }
+    match killed.or_else(|| server.take_journal()) {
+        Some(j) => drop(j.finish().unwrap()),
+        None => unreachable!("the journal is attached above"),
+    }
+    server.shutdown().unwrap();
+    served
+}
+
+#[test]
+fn full_round_trip_replays_every_digest_bitwise() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, 71);
+    let path = tmp_journal("full");
+    let served = journaled_run(&model, &path, 60, 5, 7001, None);
+    assert_eq!(served, 60);
+
+    let report = journal::replay(&path, &model).unwrap();
+    assert!(report.ok(), "replay must verify: {}", report.summary());
+    assert_eq!(report.verified, 60, "every served request verifies bitwise");
+    assert_eq!(report.mismatched, 0);
+    assert_eq!(report.other_model, 0);
+    assert_eq!(report.incomplete, 0, "every request got a receipt");
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn mid_stream_kill_replays_the_recorded_prefix() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, 72);
+    let path = tmp_journal("killed");
+    // journal dies after 40 of 60 submissions: requests 0..40 are
+    // recorded, but receipts stop at whatever had been absorbed by then
+    journaled_run(&model, &path, 60, 5, 7002, Some(40));
+
+    let data = journal::read(&path).unwrap();
+    assert_eq!(data.requests.len(), 40, "the kill point bounds the request records");
+    assert!(
+        (data.receipts.len() as u64) < 40,
+        "receipts lag submissions, so a kill strands some ({} recorded)",
+        data.receipts.len()
+    );
+
+    let report = journal::replay(&path, &model).unwrap();
+    assert!(report.ok(), "the recorded prefix verifies: {}", report.summary());
+    assert_eq!(report.verified as usize, data.receipts.len());
+    assert_eq!(report.mismatched, 0);
+    assert!(
+        report.incomplete > 0,
+        "requests whose receipts were lost in the kill are reported"
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn corrupt_record_is_rejected_with_an_actionable_error() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, 73);
+    let path = tmp_journal("corrupt");
+    journaled_run(&model, &path, 24, 3, 7003, None);
+
+    // flip one byte inside the last record's payload (file_len - 6 sits
+    // in front of the trailing CRC, well past the header)
+    let mut bytes = std::fs::read(&path).unwrap();
+    let n = bytes.len();
+    bytes[n - 6] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let err = journal::replay(&path, &model).expect_err("corruption must be rejected");
+    let msg = format!("{:#}", err);
+    assert!(msg.contains("CRC"), "error names the failed check: {}", msg);
+    assert!(msg.contains("record"), "error names the record: {}", msg);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn replaying_against_the_wrong_model_verifies_nothing() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, 74);
+    let other = DiagModel::synth(cfg, 0.9, 75);
+    assert_ne!(
+        journal::model_fingerprint(&model),
+        journal::model_fingerprint(&other),
+        "distinct synth seeds must fingerprint differently"
+    );
+    let path = tmp_journal("wrong_model");
+    let served = journaled_run(&model, &path, 24, 3, 7004, None);
+
+    let report = journal::replay(&path, &other).unwrap();
+    assert!(!report.ok(), "wrong artifact must not be declared verified");
+    assert_eq!(report.verified, 0);
+    assert_eq!(
+        report.other_model, served,
+        "every receipt names the model it was served by"
+    );
+    std::fs::remove_file(&path).unwrap();
+}

@@ -24,7 +24,9 @@ use dynadiag::kernels::microkernel;
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::{drive, workspace};
 use dynadiag::runtime::{BackendKind, HostTensor, Session};
-use dynadiag::serve::{drive_load_sharded, BatchPolicy, LoadSpec, ShardPolicy, ShardedServer};
+use dynadiag::serve::{
+    drive_load_sharded, BatchPolicy, Journal, LoadSpec, ShardPolicy, ShardedServer,
+};
 use dynadiag::train::Trainer;
 use dynadiag::util::rng::Rng;
 
@@ -147,6 +149,7 @@ fn sharded_serving_reaches_zero_alloc_steady_state_per_shard() {
             shards: 2,
             batch: BatchPolicy::new(4, 200).unwrap(),
             max_outstanding: 32,
+            ..ShardPolicy::default()
         },
     )
     .unwrap();
@@ -187,4 +190,61 @@ fn sharded_serving_reaches_zero_alloc_steady_state_per_shard() {
     );
     let rest = server.shutdown().unwrap();
     assert!(rest.is_empty(), "shutdown must leave nothing in flight");
+}
+
+/// ISSUE 7: the per-shard zero-alloc gate holds **with journaling on** —
+/// request records and receipts (including logits digests) are framed
+/// through the journal's own reusable scratch encoder, not the workspace
+/// arena, so recording every request costs zero fresh workspace
+/// allocations once warm.
+#[test]
+fn journaled_sharded_serving_stays_allocation_free() {
+    microkernel::active(); // resolve ISA dispatch outside the window
+    let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 33);
+    let mut server = ShardedServer::start(
+        model,
+        ShardPolicy {
+            shards: 2,
+            batch: BatchPolicy::new(4, 200).unwrap(),
+            max_outstanding: 32,
+            ..ShardPolicy::default()
+        },
+    )
+    .unwrap();
+    let path = std::env::temp_dir().join(format!(
+        "dynadiag_steady_state_journal_{}.ddjnl",
+        std::process::id()
+    ));
+    // journal attached BEFORE warmup: the warm window grows the journal's
+    // scratch encoder to its steady-state size along with the arenas
+    server.attach_journal(Journal::create(&path).unwrap());
+
+    let warm = LoadSpec { requests: 160, rate_rps: 0.0, max_outstanding: 32, seed: 93 };
+    drive_load_sharded(&mut server, &warm, 8, None, None).unwrap();
+    server.reset_metrics();
+    workspace::reset_stats();
+    let spec = LoadSpec { requests: 160, rate_rps: 0.0, max_outstanding: 32, seed: 94 };
+    let report = drive_load_sharded(&mut server, &spec, 8, None, None).unwrap();
+    assert_eq!(report.requests, 160);
+    assert!(report.is_clean(), "no faults injected: {}", report.summary());
+
+    for s in &server.shard_stats().unwrap() {
+        assert_eq!(
+            s.fresh_allocs, 0,
+            "shard {}: journaling broke the steady state ({} fresh, reused {})",
+            s.shard, s.fresh_allocs, s.reused_buffers
+        );
+    }
+    let (driver_fresh, driver_reused) = workspace::stats();
+    assert!(driver_reused > 0, "the driver never touched its arena");
+    assert_eq!(
+        driver_fresh, 0,
+        "journaling on the driver path allocated {} fresh buffers",
+        driver_fresh
+    );
+    let (reqs, receipts) = server.take_journal().unwrap().finish().unwrap();
+    assert_eq!(reqs, 320, "warm + measured requests are all recorded");
+    assert_eq!(receipts, 320, "every request got a receipt");
+    server.shutdown().unwrap();
+    std::fs::remove_file(&path).unwrap();
 }

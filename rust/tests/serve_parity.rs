@@ -16,6 +16,12 @@
 //!    contracts across shard counts {1, 2, 4} — logits bitwise identical
 //!    to sequential execution, per-client FIFO preserved, and the
 //!    broadcast hot reload drops/reorders nothing.
+//! 5. **Fault tolerance (ISSUE 7):** under a seeded chaos schedule of
+//!    injected panics and stalls, every generated request is accounted
+//!    exactly once (`submitted == completed + shed + timed_out + failed`),
+//!    no response is duplicated, per-client FIFO holds among served
+//!    requests, and supervisor restarts are visible in the report;
+//!    deadlines shed/NACK late work with reason codes.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -23,8 +29,8 @@ use std::time::Duration;
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::workspace;
 use dynadiag::serve::{
-    BatchPolicy, Completion, ManualClock, ServeEngine, ShardCompletion, ShardPolicy,
-    ShardedServer, Submit,
+    BatchPolicy, Completion, FaultPlan, ManualClock, OutcomeCode, ServeEngine,
+    ShardCompletion, ShardPolicy, ShardedServer, Submit,
 };
 use dynadiag::util::rng::Rng;
 
@@ -262,6 +268,7 @@ fn serve_sharded(
             shards,
             batch: BatchPolicy::new(4, 200).unwrap(),
             max_outstanding: 16,
+            ..ShardPolicy::default()
         },
     )
     .unwrap();
@@ -280,6 +287,7 @@ fn serve_sharded(
                     workspace::give_f32(x);
                     break;
                 }
+                Submit::Shed(..) => unreachable!("no deadline and no faults configured"),
             }
         }
         server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
@@ -370,6 +378,7 @@ fn sharded_broadcast_reload_drops_and_reorders_nothing() {
                 shards,
                 batch: BatchPolicy::new(4, 200).unwrap(),
                 max_outstanding: 32,
+                ..ShardPolicy::default()
             },
         )
         .unwrap();
@@ -379,14 +388,14 @@ fn sharded_broadcast_reload_drops_and_reorders_nothing() {
         for i in 0..12u64 {
             match server.try_submit(i % 4, workspace::take_copy_f32(&probe)).unwrap() {
                 Submit::Ok(_) => {}
-                Submit::Full(_) => panic!("cap 32 cannot fill at 12 requests"),
+                _ => panic!("cap 32 cannot fill at 12 requests; no faults configured"),
             }
         }
         server.swap_model(model_b.clone()).unwrap();
         for i in 0..12u64 {
             match server.try_submit(i % 4, workspace::take_copy_f32(&probe)).unwrap() {
                 Submit::Ok(_) => {}
-                Submit::Full(_) => panic!("cap 32 cannot fill at 24 requests"),
+                _ => panic!("cap 32 cannot fill at 24 requests; no faults configured"),
             }
         }
         let mut completions: Vec<ShardCompletion> = Vec::new();
@@ -413,4 +422,207 @@ fn sharded_broadcast_reload_drops_and_reorders_nothing() {
     }
     workspace::give_f32(want_a);
     workspace::give_f32(want_b);
+}
+
+// ---------------------------------------------------------------------------
+// Fault tolerance (ISSUE 7)
+// ---------------------------------------------------------------------------
+
+/// ISSUE 7 acceptance: a seeded chaos schedule — two shard panics at
+/// well-separated requests, an execution stall, and an inbox stall — must
+/// not lose, duplicate, or reorder anything:
+///
+/// * conservation: `generated == served + shed + timed_out + failed`,
+/// * every surfaced id is unique (no duplicated responses),
+/// * per-client FIFO holds across the whole run (failover only moves
+///   *idle* clients, so completion ids stay monotonic per client),
+/// * both injected panics fire and both supervisor restarts are visible
+///   in the merged report.
+#[test]
+fn chaos_schedule_conserves_requests_and_keeps_fifo() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, 303);
+    let sl = model.sample_len();
+    // ids are assigned in submission order with clients round-robin over
+    // 6, so req 40 -> client 4 -> home shard 0, req 121 -> client 1 ->
+    // shard 1, req 60 -> client 0 -> shard 0, req 81 -> client 3 -> shard 1
+    let plan = Arc::new(
+        FaultPlan::parse(
+            "panic:shard=0,req=40; panic:shard=1,req=121; \
+             stall:shard=0,req=60,us=3000; inbox:shard=1,req=81,us=3000",
+        )
+        .unwrap(),
+    );
+    let mut server = ShardedServer::start_supervised(
+        Arc::new(model),
+        ShardPolicy {
+            shards: 2,
+            batch: BatchPolicy::new(4, 200).unwrap(),
+            max_outstanding: 16,
+            // generous budget: only the injected faults may NACK/shed
+            deadline_us: 2_000_000,
+            restart_backoff_us: 1_000,
+        },
+        Some(Arc::clone(&plan)),
+    )
+    .unwrap();
+
+    let total = 240usize;
+    let clients = 6usize;
+    let mut rng = Rng::new(1234);
+    let mut submitted = 0usize;
+    let mut accounted = 0usize;
+    let (mut served, mut shed, mut timed_out, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    let mut seen = std::collections::HashSet::new();
+    let mut ok_completions: Vec<ShardCompletion> = Vec::new();
+    let mut out: Vec<ShardCompletion> = Vec::new();
+    while accounted < total {
+        while submitted < total && server.outstanding() < 16 {
+            let mut x = workspace::take_uninit_f32(sl);
+            for v in x.iter_mut() {
+                *v = rng.normal_f32(0.0, 1.0);
+            }
+            match server.try_submit((submitted % clients) as u64, x).unwrap() {
+                Submit::Ok(_) => {}
+                Submit::Full(x) => {
+                    workspace::give_f32(x);
+                    break;
+                }
+                Submit::Shed(_, x) => {
+                    workspace::give_f32(x);
+                    shed += 1;
+                    accounted += 1;
+                }
+            }
+            submitted += 1;
+        }
+        server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
+        for c in out.drain(..) {
+            assert!(seen.insert(c.id), "request {} surfaced twice", c.id);
+            accounted += 1;
+            match c.outcome {
+                OutcomeCode::Ok => {
+                    served += 1;
+                    ok_completions.push(c);
+                }
+                OutcomeCode::TimedOut => timed_out += 1,
+                OutcomeCode::FailedPanic => failed += 1,
+                OutcomeCode::ShedShardDown | OutcomeCode::ShedDeadline => shed += 1,
+            }
+        }
+    }
+
+    assert_eq!(plan.fired_panics(), 2, "both injected panics must fire");
+    assert_eq!(
+        served + shed + timed_out + failed,
+        total as u64,
+        "conservation law violated: {} served + {} shed + {} timed out + {} failed != {}",
+        served,
+        shed,
+        timed_out,
+        failed,
+        total
+    );
+    assert!(failed >= 2, "each panic NACKs at least the request that fired it");
+    // each panic can cost at most the in-flight window (16) in failures
+    // plus a backoff's worth of sheds; the bulk of the stream still serves
+    assert!(
+        served >= 160,
+        "too little of the stream served: {} of {}",
+        served,
+        total
+    );
+    assert_fifo_per_client(&ok_completions);
+    let report = server.report(1.0, 0, 0).unwrap();
+    assert_eq!(report.restarts, 2, "both restarts visible in the report");
+    assert_eq!(report.failed, failed, "report failure count matches observed NACKs");
+    assert_eq!(report.requests, served, "report serve count matches Ok completions");
+    assert_eq!(
+        report.shed + report.timed_out,
+        shed + timed_out,
+        "report shed/timeout accounting matches the driver's: {}",
+        report.summary()
+    );
+    for c in ok_completions {
+        workspace::give_f32(c.logits);
+    }
+    let rest = server.shutdown().unwrap();
+    assert!(rest.is_empty(), "everything was accounted before shutdown");
+}
+
+/// Deadline semantics: a 200 ms inbox stall against a 50 ms budget forces
+/// the stalled request (and everything aged behind it) to time out or be
+/// shed at the front door — with reason codes — while conservation holds
+/// and the stream still mostly serves.
+#[test]
+fn deadlines_shed_late_work_with_reason_codes() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, 404);
+    let sl = model.sample_len();
+    let plan = Arc::new(FaultPlan::parse("inbox:shard=0,req=5,us=200000").unwrap());
+    let mut server = ShardedServer::start_supervised(
+        Arc::new(model),
+        ShardPolicy {
+            shards: 1,
+            batch: BatchPolicy::new(2, 100).unwrap(),
+            max_outstanding: 8,
+            deadline_us: 50_000,
+            restart_backoff_us: 1_000,
+        },
+        Some(Arc::clone(&plan)),
+    )
+    .unwrap();
+    let total = 30usize;
+    let mut rng = Rng::new(2024);
+    let mut submitted = 0usize;
+    let mut accounted = 0usize;
+    let (mut served, mut shed, mut timed_out) = (0u64, 0u64, 0u64);
+    let mut out: Vec<ShardCompletion> = Vec::new();
+    while accounted < total {
+        while submitted < total && server.outstanding() < 8 {
+            let mut x = workspace::take_uninit_f32(sl);
+            for v in x.iter_mut() {
+                *v = rng.normal_f32(0.0, 1.0);
+            }
+            match server.try_submit((submitted % 3) as u64, x).unwrap() {
+                Submit::Ok(_) => {}
+                Submit::Full(x) => {
+                    workspace::give_f32(x);
+                    break;
+                }
+                Submit::Shed(code, x) => {
+                    assert_eq!(code, OutcomeCode::ShedDeadline, "only deadline sheds here");
+                    workspace::give_f32(x);
+                    shed += 1;
+                    accounted += 1;
+                }
+            }
+            submitted += 1;
+        }
+        server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
+        for c in out.drain(..) {
+            accounted += 1;
+            match c.outcome {
+                OutcomeCode::Ok => {
+                    served += 1;
+                    workspace::give_f32(c.logits);
+                }
+                OutcomeCode::TimedOut => timed_out += 1,
+                other => panic!("no panics injected, got {:?}", other),
+            }
+        }
+    }
+    assert!(
+        timed_out >= 1,
+        "the 200 ms-stalled request must blow its 50 ms budget (timed_out {} shed {})",
+        timed_out,
+        shed
+    );
+    assert_eq!(served + shed + timed_out, total as u64, "conservation");
+    assert!(served >= 1, "the stream recovers after the stall");
+    let report = server.report(1.0, 0, 0).unwrap();
+    assert_eq!(report.timed_out, timed_out);
+    assert_eq!(report.shed_deadline, shed);
+    assert!(!report.is_clean(), "fault counters must be visible");
+    server.shutdown().unwrap();
 }
