@@ -24,17 +24,27 @@
 //! 5. **Journaled cell** — one sharded cell runs with the request journal
 //!    attached and gates both `fresh_allocs == 0` (journaling must not
 //!    break the arena contract) and `receipts > 0`.
+//! 6. **Wire sweep** — loopback TCP clients drive the network front door
+//!    (binary + JSON codecs, closed and open loop) and gate: zero fresh
+//!    allocations per warm connection in the measured window, wire p99
+//!    within `DYNADIAG_WIRE_P99_FACTOR` (default 1.5x) of the in-process
+//!    p99 at matched concurrency, and ledger conservation
+//!    (`submitted == served + shed + timed_out + failed`) through a
+//!    mid-load client disconnect and a mid-load drain trigger.
 //!
 //! Set `DYNADIAG_BENCH_FAST=1` (CI does) for a trimmed sweep with the
 //! same JSON schema.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::workspace;
 use dynadiag::serve::{
-    drive_load, drive_load_sharded, BatchPolicy, Completion, Journal, LoadSpec, ManualClock,
-    ServeEngine, ShardCompletion, ShardPolicy, ShardedServer, Submit,
+    drive_load, drive_load_sharded, run_client, BatchPolicy, ClientReport, ClientSpec,
+    Completion, Journal, LoadSpec, ManualClock, NetOptions, NetReport, NetServer, ServeEngine,
+    ShardCompletion, ShardPolicy, ShardedServer, Submit,
 };
 use dynadiag::util::json::Json;
 use dynadiag::util::rng::Rng;
@@ -130,6 +140,80 @@ fn sharded_parity_mismatches(shards: usize, n: usize, seed: u64) -> usize {
     }
     server.shutdown().unwrap();
     mismatches
+}
+
+/// One wire-sweep cell: a 2-shard server behind the TCP front door on an
+/// ephemeral loopback port, warmed in-process first (arenas + EWMA seed),
+/// driven by `specs.len()` concurrent loopback clients. `stop_after_ms`
+/// trips the drain trigger mid-load (the SIGTERM code path); otherwise the
+/// trigger fires after every client finished.
+fn wire_cell(
+    shards: usize,
+    reset_after: u64,
+    specs: Vec<ClientSpec>,
+    stop_after_ms: Option<u64>,
+) -> (NetReport, Vec<ClientReport>) {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let dm = DiagModel::synth(cfg, 0.9, 8_200 + shards as u64);
+    let sample_len = dm.sample_len();
+    let cap = (4 * 8 * shards).max(32);
+    let mut server = ShardedServer::start(
+        dm,
+        ShardPolicy {
+            shards,
+            batch: BatchPolicy::new(8, 200).unwrap(),
+            max_outstanding: cap,
+            ..ShardPolicy::default()
+        },
+    )
+    .unwrap();
+    // warm the shard arenas and the deadline predictor before any client
+    // connects, exactly like `serve --listen` does
+    let warm = LoadSpec { requests: 2 * cap, rate_rps: 0.0, max_outstanding: cap, seed: 5 };
+    drive_load_sharded(&mut server, &warm, 4 * shards, None, None).unwrap();
+    server.seed_ewma();
+    server.reset_metrics();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let net = NetServer::bind(
+        server,
+        "127.0.0.1:0",
+        NetOptions {
+            conn_window: 0,
+            drain_on_idle: false,
+            shutdown: Some(stop.clone()),
+            obey_signals: false,
+            reset_after,
+        },
+    )
+    .unwrap();
+    let addr = net.local_addr().unwrap().to_string();
+    let server_h = std::thread::spawn(move || net.run());
+
+    let stopper = stop_after_ms.map(|ms| {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(ms));
+            stop.store(true, Ordering::SeqCst);
+        })
+    });
+    let client_hs: Vec<_> = specs
+        .into_iter()
+        .map(|spec| {
+            let addr = addr.clone();
+            std::thread::spawn(move || run_client(&addr, sample_len, &spec))
+        })
+        .collect();
+    let clients: Vec<ClientReport> = client_hs
+        .into_iter()
+        .map(|h| h.join().expect("client thread").expect("wire client run"))
+        .collect();
+    if let Some(h) = stopper {
+        h.join().expect("stopper thread");
+    }
+    stop.store(true, Ordering::SeqCst);
+    let net_report = server_h.join().expect("server thread").expect("wire server run");
+    (net_report, clients)
 }
 
 fn main() {
@@ -443,6 +527,192 @@ fn main() {
         }
     }
 
+    // -- wire sweep ------------------------------------------------------
+    // Loopback TCP clients over the network front door. Gates: zero fresh
+    // allocations per warm connection in the measured window, wire p99
+    // within a factor of the in-process p99 at matched concurrency, and
+    // the whole-run wire ledger conserved through a mid-load client
+    // disconnect and a mid-load drain trigger (the SIGTERM path).
+    println!("\n== wire sweep: TCP front door over the admission queue ==");
+    let wire_factor: f64 = std::env::var("DYNADIAG_WIRE_P99_FACTOR")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.5);
+    let wire_shards = 2usize;
+    let wire_requests = if fast { 128 } else { 512 };
+
+    // in-process baseline at matched concurrency: 2 clients x window 8
+    let in_process_p99_ms = {
+        let cfg = mlp_config("mlp_micro").unwrap();
+        let dm = DiagModel::synth(cfg, 0.9, 8_200 + wire_shards as u64);
+        let cap = (4 * 8 * wire_shards).max(32);
+        let mut server = ShardedServer::start(
+            dm,
+            ShardPolicy {
+                shards: wire_shards,
+                batch: BatchPolicy::new(8, 200).unwrap(),
+                max_outstanding: cap,
+                ..ShardPolicy::default()
+            },
+        )
+        .unwrap();
+        let warm = LoadSpec { requests: 2 * cap, rate_rps: 0.0, max_outstanding: cap, seed: 5 };
+        drive_load_sharded(&mut server, &warm, 4 * wire_shards, None, None).unwrap();
+        server.reset_metrics();
+        let spec = LoadSpec {
+            requests: 2 * wire_requests,
+            rate_rps: 0.0,
+            max_outstanding: 16,
+            seed: 11,
+        };
+        let r = drive_load_sharded(&mut server, &spec, 2, None, None).unwrap();
+        server.shutdown().unwrap();
+        r.p99_ms
+    };
+
+    let mut wire_cells: Vec<Json> = Vec::new();
+    let mut wire_alloc_failed = false;
+    let mut wire_conserve_failed = false;
+    let mut wire_drain_failed = false;
+    let mut wire_p99_ms = 0.0f64;
+    let push_wire_cell =
+        |name: &str,
+         net: &NetReport,
+         clients: &[ClientReport],
+         cells: &mut Vec<Json>,
+         conserve_failed: &mut bool| {
+            println!(
+                "  {:<18} {:>4} conns {:>6} submitted = {:>6} served + {:>4} shed \
+                 + {} to + {} failed, reader_fresh {}, driver fresh {}, p99 {:.3} ms{}",
+                name,
+                net.wire.connections,
+                net.wire.submitted,
+                net.wire.served,
+                net.wire.shed,
+                net.wire.timed_out,
+                net.wire.failed,
+                net.wire.reader_fresh,
+                net.report.fresh_allocs,
+                net.report.p99_ms,
+                if net.wire.conserved() { "" } else { "  LEDGER IMBALANCE" }
+            );
+            if !net.wire.conserved() {
+                *conserve_failed = true;
+            }
+            cells.push(Json::obj(vec![
+                ("name", Json::Str(name.to_string())),
+                ("net", net.to_json()),
+                ("clients", Json::Arr(clients.iter().map(|c| c.to_json()).collect())),
+            ]));
+        };
+
+    // cell 1: closed-loop, binary codec, 2 clients. The measurement
+    // window resets once the first half of the traffic warmed the
+    // per-connection pools; the second half must be allocation-free.
+    {
+        let specs = vec![
+            ClientSpec { requests: wire_requests, seed: 21, ..ClientSpec::default() },
+            ClientSpec { requests: wire_requests, seed: 22, ..ClientSpec::default() },
+        ];
+        let (net, clients) = wire_cell(wire_shards, wire_requests as u64, specs, None);
+        wire_p99_ms = net.report.p99_ms;
+        if net.report.fresh_allocs > 0 || net.wire.reader_fresh > 0 {
+            eprintln!(
+                "warm wire connections allocated: driver fresh {} reader fresh {}",
+                net.report.fresh_allocs, net.wire.reader_fresh
+            );
+            wire_alloc_failed = true;
+        }
+        push_wire_cell(
+            "closed/binary",
+            &net,
+            &clients,
+            &mut wire_cells,
+            &mut wire_conserve_failed,
+        );
+    }
+    // cell 2: open-loop (Poisson arrivals), binary codec
+    {
+        let specs = vec![ClientSpec {
+            requests: if fast { 64 } else { 256 },
+            rate_rps: if fast { 1500.0 } else { 3000.0 },
+            seed: 23,
+            ..ClientSpec::default()
+        }];
+        let (net, clients) = wire_cell(wire_shards, 0, specs, None);
+        push_wire_cell(
+            "open/binary",
+            &net,
+            &clients,
+            &mut wire_cells,
+            &mut wire_conserve_failed,
+        );
+    }
+    // cell 3: the JSON debug codec (conservation only; it allocates per
+    // line by design)
+    {
+        let specs =
+            vec![ClientSpec { requests: 48, json: true, seed: 24, ..ClientSpec::default() }];
+        let (net, clients) = wire_cell(wire_shards, 0, specs, None);
+        push_wire_cell(
+            "json",
+            &net,
+            &clients,
+            &mut wire_cells,
+            &mut wire_conserve_failed,
+        );
+    }
+    // cell 4: ledger through faults — one client hard-disconnects with
+    // requests in flight, another is still submitting when the drain
+    // trigger (the SIGTERM code path) fires mid-load
+    {
+        let specs = vec![
+            ClientSpec {
+                requests: wire_requests,
+                disconnect_after: Some(wire_requests / 2),
+                seed: 25,
+                ..ClientSpec::default()
+            },
+            ClientSpec { requests: 100 * wire_requests, seed: 26, ..ClientSpec::default() },
+        ];
+        let (net, clients) = wire_cell(wire_shards, 0, specs, Some(if fast { 60 } else { 150 }));
+        if !net.wire.drained || !net.wire.conserved() {
+            eprintln!(
+                "disconnect+drain cell: drained={} conserved={}",
+                net.wire.drained,
+                net.wire.conserved()
+            );
+            wire_drain_failed = true;
+        }
+        push_wire_cell(
+            "disconnect+drain",
+            &net,
+            &clients,
+            &mut wire_cells,
+            &mut wire_conserve_failed,
+        );
+    }
+    // the wire p99 gate carries a small absolute slack so scheduler noise
+    // on sub-millisecond baselines cannot flake it
+    let wire_p99_bound = wire_factor * in_process_p99_ms + 0.25;
+    let wire_p99_failed = wire_p99_ms > wire_p99_bound;
+    println!(
+        "  wire p99 {:.3} ms vs in-process p99 {:.3} ms (gate {:.1}x + 0.25 ms = {:.3} ms){}",
+        wire_p99_ms,
+        in_process_p99_ms,
+        wire_factor,
+        wire_p99_bound,
+        if wire_p99_failed { "  FAIL" } else { "" }
+    );
+    let wire_sweep_json = Json::obj(vec![
+        ("measured", Json::Bool(true)),
+        ("shards", Json::Num(wire_shards as f64)),
+        ("p99_gate_factor", Json::Num(wire_factor)),
+        ("in_process_p99_ms", Json::Num(in_process_p99_ms)),
+        ("wire_p99_ms", Json::Num(wire_p99_ms)),
+        ("cells", Json::Arr(wire_cells)),
+    ]);
+
     let out_dir = std::path::PathBuf::from("results");
     std::fs::create_dir_all(&out_dir).expect("mkdir results");
     let json = Json::obj(vec![
@@ -457,6 +727,7 @@ fn main() {
         ("cells", Json::Arr(cells)),
         ("shard_sweep", Json::Arr(shard_cells)),
         ("journaled", journal_cell),
+        ("wire_sweep", wire_sweep_json),
         (
             "shard_speedup_2x",
             speedup_2x.map(Json::Num).unwrap_or(Json::Null),
@@ -502,9 +773,29 @@ fn main() {
         eprintln!("FAIL: the journaled cell broke the zero-alloc or receipt contract");
         std::process::exit(1);
     }
+    if wire_alloc_failed {
+        eprintln!("FAIL: a warm wire connection performed fresh allocations in the measured window");
+        std::process::exit(1);
+    }
+    if wire_conserve_failed {
+        eprintln!("FAIL: the wire ledger did not balance (submitted != served + shed + timed_out + failed)");
+        std::process::exit(1);
+    }
+    if wire_p99_failed {
+        eprintln!(
+            "FAIL: wire p99 {:.3} ms exceeded {:.1}x the in-process p99 {:.3} ms",
+            wire_p99_ms, wire_factor, in_process_p99_ms
+        );
+        std::process::exit(1);
+    }
+    if wire_drain_failed {
+        eprintln!("FAIL: the disconnect+drain cell lost receipts or did not drain gracefully");
+        std::process::exit(1);
+    }
     println!(
         "PASS: parity bitwise (single + sharded), zero steady-state allocations per shard \
-         (journaling included), clean counters on the no-fault sweep, p99 under {} ms",
+         (journaling included), clean counters on the no-fault sweep, p99 under {} ms, \
+         wire ledger conserved with warm connections allocation-free",
         p99_bound_ms
     );
 }

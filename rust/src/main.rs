@@ -41,8 +41,9 @@ use dynadiag::perfmodel::vit::{
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::{BackendKind, Session};
 use dynadiag::serve::{
-    drive_load, drive_load_reloading, drive_load_sharded, replay, BatchPolicy, FaultPlan,
-    Journal, LoadSpec, ModelWatcher, ReloadPlan, ServeEngine, ShardPolicy, ShardReloadPlan,
+    drive_load, drive_load_reloading, drive_load_sharded, install_signal_drain, replay,
+    run_client, BatchPolicy, ClientSpec, FaultPlan, Journal, LoadSpec, ModelWatcher,
+    NetOptions, NetServer, ReloadPlan, ServeEngine, ShardPolicy, ShardReloadPlan,
     ShardedServer,
 };
 use dynadiag::train::{CheckpointSpec, Trainer};
@@ -107,7 +108,9 @@ COMMANDS
                [--requests N] [--train-steps N] [--seed K] [--out serve.json]
                [--swap-after N --swap-to other.ddiag] [--deadline-us U]
                [--poll-ms MS] [--fault SPEC] [--journal j.ddjnl]
-               [--replay j.ddjnl]
+               [--replay j.ddjnl] [--listen ADDR [--drain] [--conn-window W]
+               [--reset-after N]] [--connect ADDR [--window W] [--json]
+               [--disconnect-after N]]
                online inference with dynamic micro-batching; --shards N runs
                N engine shards on N supervised threads (shared weights,
                global admission cap, FIFO per client; a panicked shard is
@@ -123,7 +126,14 @@ COMMANDS
                inbox:...; artifact:nth=K — also via DYNADIAG_FAULTS);
                --journal records every request + receipt (CRC-framed, with
                logits digests) and --replay re-drives a journal against the
-               model, verifying the digests bitwise
+               model, verifying the digests bitwise; --listen ADDR puts the
+               sharded admission queue behind a TCP front door (CRC-framed
+               binary wire codec + line-delimited JSON; over-window requests
+               get reason-coded NACKs; SIGTERM drains in-flight work and
+               exits 0, --drain also drains once all clients disconnect);
+               --connect ADDR drives a listening server as a closed/open-loop
+               wire client (--window outstanding per connection, --json for
+               the JSON codec, --disconnect-after N hangs up mid-load)
   experiment   <table1|table2|table8|table12|...|fig1|fig4..fig9|all> [--steps N] [--seeds K]
   analyze      --model M [--sparsity S]      small-world & BCSR analysis
   perfmodel    [--sparsity S]                A100 speedup projections
@@ -293,6 +303,113 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // client mode: drive a remote `serve --listen` server over TCP with
+    // the wire codec (binary by default, --json for the line-delimited
+    // JSON codec). The model is built only to learn the sample length the
+    // server expects.
+    if let Some(addr) = args.opt("connect") {
+        let (label, dm) = build_serve_model(args)?;
+        let spec = ClientSpec {
+            requests,
+            rate_rps: rate,
+            window: args.usize_opt("window")?.unwrap_or(8),
+            seed: seed ^ 0x10ad,
+            json: args.flag("json"),
+            disconnect_after: args.usize_opt("disconnect-after")?,
+        };
+        eprintln!(
+            "driving {} ({} features) at {}: {} requests, window {}, {}",
+            addr,
+            dm.sample_len(),
+            label,
+            spec.requests,
+            spec.window,
+            if spec.json { "json codec" } else { "binary codec" },
+        );
+        let report = run_client(addr, dm.sample_len(), &spec)?;
+        println!("{}", report.summary());
+        if let Some(out) = args.opt("out") {
+            report.to_json().write_file(Path::new(out))?;
+            eprintln!("wrote {}", out);
+        }
+        return Ok(());
+    }
+
+    // listen mode: put the sharded admission queue behind a TCP front
+    // door. Requests arrive over the wire codec instead of a synthetic
+    // load driver; SIGTERM (or --drain) drains in-flight work and exits 0.
+    if let Some(addr) = args.opt("listen") {
+        let (label, dm) = build_serve_model(args)?;
+        let sparsity = dm.sparsity;
+        let policy = BatchPolicy::new(max_batch, max_wait_us)?;
+        let cap = (4 * max_batch * shards).max(16);
+        let mut server = ShardedServer::start_supervised(
+            Arc::new(dm),
+            ShardPolicy {
+                shards,
+                batch: policy,
+                max_outstanding: cap,
+                deadline_us,
+                restart_backoff_us: 0,
+            },
+            faults.clone(),
+        )?;
+        // warm the shard arenas (and the EWMA deadline predictor's seed)
+        // before any client traffic, so the first wire request neither
+        // allocates nor gets spuriously shed. Fault clauses key on request
+        // ids, which must map onto the wire stream — skip the warm window.
+        if faults.is_none() {
+            let warm = LoadSpec {
+                requests: 2 * cap,
+                rate_rps: 0.0,
+                max_outstanding: cap,
+                seed: seed ^ 0xaaaa,
+            };
+            drive_load_sharded(&mut server, &warm, 4 * shards, None, None)?;
+            server.seed_ewma();
+            server.reset_metrics();
+        }
+        if let Some(p) = args.opt("journal") {
+            server.attach_journal(Journal::create(Path::new(p))?);
+        }
+        install_signal_drain();
+        let net = NetServer::bind(
+            server,
+            addr,
+            NetOptions {
+                conn_window: args.usize_opt("conn-window")?.unwrap_or(0),
+                drain_on_idle: args.flag("drain"),
+                shutdown: None,
+                obey_signals: true,
+                reset_after: args.usize_opt("reset-after")?.unwrap_or(0) as u64,
+            },
+        )?;
+        eprintln!(
+            "serving {} (S={:.2}) on {}: {} shard(s), max_batch {}, max_wait {}us, cap {}",
+            label,
+            sparsity,
+            net.local_addr()?,
+            shards,
+            max_batch,
+            max_wait_us,
+            cap
+        );
+        let report = net.run()?;
+        println!("{}", report.summary());
+        if let Some(out) = args.opt("out") {
+            let j = Json::obj(vec![
+                ("model", Json::Str(label)),
+                ("shards", Json::Num(shards as f64)),
+                ("max_batch", Json::Num(max_batch as f64)),
+                ("max_wait_us", Json::Num(max_wait_us as f64)),
+                ("net", report.to_json()),
+            ]);
+            j.write_file(Path::new(out))?;
+            eprintln!("wrote {}", out);
+        }
+        return Ok(());
+    }
+
     // serve-from-disk: watch the artifact for replacement (hot reload).
     // The watcher fingerprints the file BEFORE we load it, so a
     // replacement landing between fingerprint and load is seen as a
@@ -398,6 +515,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // request ids, which must map onto the measured stream
         if faults.is_none() {
             drive_load_sharded(&mut server, &warm, clients, None, None)?;
+            server.seed_ewma();
             server.reset_metrics();
         }
         if let Some(p) = &journal_path {

@@ -400,6 +400,33 @@ pub fn replay(path: &Path, model: &DiagModel) -> Result<ReplayReport> {
     let mut receipted = std::collections::BTreeSet::new();
     for r in &data.receipts {
         receipted.insert(r.id);
+        if r.shard == NO_SHARD {
+            // Front-door shed: the request was refused before reaching a
+            // shard, so no logits were produced and there is nothing to
+            // digest-verify — regardless of what the outcome byte claims.
+            // Front-door sheds are also written *instead of* a request
+            // record (admission never consumed the payload), so a request
+            // record claiming the sentinel id is contradictory.
+            if data.requests.contains_key(&r.id) {
+                bail!(
+                    "journal {}: receipt for id {} carries the front-door \
+                     sentinel shard but a request record exists for it — \
+                     front-door sheds never record an admission, so the \
+                     journal is inconsistent",
+                    path.display(),
+                    r.id
+                );
+            }
+            if r.outcome.is_ok() {
+                crate::info!(
+                    "replay: receipt {} claims Ok but carries the front-door \
+                     sentinel shard; counting it as shed, not verifying",
+                    r.id
+                );
+            }
+            report.shed += 1;
+            continue;
+        }
         match r.outcome {
             OutcomeCode::Ok => {
                 if r.model_fp != fp {
@@ -441,7 +468,9 @@ pub fn replay(path: &Path, model: &DiagModel) -> Result<ReplayReport> {
                     report.mismatched += 1;
                 }
             }
-            OutcomeCode::ShedDeadline | OutcomeCode::ShedShardDown => report.shed += 1,
+            OutcomeCode::ShedDeadline
+            | OutcomeCode::ShedShardDown
+            | OutcomeCode::ShedOverCapacity => report.shed += 1,
             OutcomeCode::TimedOut => report.timed_out += 1,
             OutcomeCode::FailedPanic => report.failed += 1,
         }
@@ -609,6 +638,85 @@ mod tests {
         assert_eq!(rep.verified, 0);
         assert_eq!(rep.other_model, 2);
         assert!(!rep.ok(), "nothing verified means replay failed");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sentinel_shard_receipts_are_sheds_never_verified() {
+        let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 11);
+        let fp = model_fingerprint(&model);
+        let path = tmp_path("sentinel.ddjnl");
+        let mut j = Journal::create(&path).unwrap();
+        // A receipt whose outcome byte claims Ok but whose shard carries
+        // the front-door sentinel: replay must count it as shed and must
+        // NOT attempt digest verification (there is no request record to
+        // forward, and the digest is garbage). Before the sentinel guard,
+        // this receipt made replay bail on the missing request record.
+        j.append_receipt(&Receipt {
+            id: 40,
+            client: 1,
+            arrival_us: 5,
+            shard: NO_SHARD,
+            model_fp: fp,
+            outcome: OutcomeCode::Ok,
+            latency_us: 0,
+            logits_digest: 0xBAAD_F00D,
+        })
+        .unwrap();
+        // An over-capacity NACK from the wire layer, also sentinel-shard.
+        j.append_receipt(&Receipt {
+            id: 41,
+            client: 2,
+            arrival_us: 6,
+            shard: NO_SHARD,
+            model_fp: fp,
+            outcome: OutcomeCode::ShedOverCapacity,
+            latency_us: 0,
+            logits_digest: 0,
+        })
+        .unwrap();
+        j.finish().unwrap();
+
+        let rep = replay(&path, &model).unwrap();
+        assert_eq!(rep.receipts, 2);
+        assert_eq!(rep.shed, 2, "sentinel receipts count as sheds");
+        assert_eq!(rep.verified, 0);
+        assert_eq!(rep.mismatched, 0);
+        assert_eq!(rep.incomplete, 0);
+        assert!(rep.ok(), "no divergence and nothing verifiable");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn request_record_claiming_sentinel_receipt_is_rejected() {
+        let model = DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 11);
+        let fp = model_fingerprint(&model);
+        let sl = model.sample_len();
+        let path = tmp_path("sentinel-contradiction.ddjnl");
+        let mut j = Journal::create(&path).unwrap();
+        // Front-door sheds are written INSTEAD of a request record; a
+        // journal holding both for one id is inconsistent and replay must
+        // say so instead of quietly picking one story.
+        j.append_request(50, 3, 7, 1_000, &vec![0.25; sl]).unwrap();
+        j.append_receipt(&Receipt {
+            id: 50,
+            client: 3,
+            arrival_us: 7,
+            shard: NO_SHARD,
+            model_fp: fp,
+            outcome: OutcomeCode::ShedDeadline,
+            latency_us: 0,
+            logits_digest: 0,
+        })
+        .unwrap();
+        j.finish().unwrap();
+
+        let err = replay(&path, &model).unwrap_err().to_string();
+        assert!(
+            err.contains("sentinel") && err.contains("50"),
+            "error must name the sentinel contradiction and the id, got: {}",
+            err
+        );
         std::fs::remove_file(&path).ok();
     }
 }

@@ -55,14 +55,24 @@
 //! tests and CI; [`journal`] records every admission and outcome as a
 //! CRC-framed **receipt** (with a logits digest) and `serve --replay`
 //! re-drives a journal against an artifact, verifying digests bitwise.
+//!
+//! [`net`] is the **network front door**: `serve --listen ADDR` puts the
+//! sharded admission queue behind a TCP listener speaking the [`wire`]
+//! codec (CRC-framed binary + line-delimited JSON), with deadlines
+//! stamped at socket read, connection-level backpressure mapped onto the
+//! global outstanding cap (reason-coded NACKs), per-connection FIFO
+//! write-back, and graceful drain on SIGTERM — journal receipts stay
+//! conservation-complete through client disconnects and shard panics.
 
 pub mod batcher;
 pub mod engine;
 pub mod faults;
 pub mod journal;
+pub mod net;
 pub mod reload;
 pub mod shard;
 pub mod stats;
+pub mod wire;
 
 use anyhow::{bail, Result};
 
@@ -74,6 +84,10 @@ pub use engine::{
 pub use faults::FaultPlan;
 pub use journal::{
     logits_digest, model_fingerprint, replay, Journal, JournalData, Receipt, ReplayReport,
+};
+pub use net::{
+    install_signal_drain, run_client, signal_drain_requested, ClientReport, ClientSpec,
+    NetOptions, NetReport, NetServer, WireStats,
 };
 pub use reload::ModelWatcher;
 pub use shard::{

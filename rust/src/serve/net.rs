@@ -1,0 +1,1249 @@
+//! TCP front door over the sharded admission queue: accept threads feed
+//! [`ShardedServer`] through the [`super::wire`] codec.
+//!
+//! ## Thread shape
+//!
+//! One **accept thread** (non-blocking listener, 10 ms poll) assigns each
+//! connection a monotonically increasing id — which *is* the client id,
+//! so sticky routing spreads connections across shards and a client
+//! cannot name another client's FIFO lane. Per connection, a **reader
+//! thread** decodes frames (binary or JSON line mode, auto-detected from
+//! the first byte) and a **writer thread** drains a per-connection output
+//! queue — one writer per connection keeps responses to a client in the
+//! order the driver produced them. The **driver loop** (the caller's
+//! thread, which owns the `ShardedServer`) is the only place admission
+//! and completion state mutate, exactly like the in-process load driver.
+//!
+//! ## Deadline stamping
+//!
+//! A request's `arrival_us` is stamped by the reader **immediately after
+//! its frame is read from the socket** — before it queues for the driver,
+//! before admission. Every stall between socket and shard is charged to
+//! the request, so deadline sheds are honest under ingestion pressure
+//! (no coordinated omission at the wire layer).
+//!
+//! ## Backpressure and permits
+//!
+//! Two caps gate admission: the per-connection window (`conn_window`,
+//! default = the global cap) and the server's global outstanding cap. A
+//! request over either is NACKed with
+//! [`OutcomeCode::ShedOverCapacity`] **without consuming a request id or
+//! writing a journal record** — refusal happens before admission, so a
+//! NACK can never leak a permit: permits are only held by requests the
+//! shard layer accepted, and every accepted request releases its permit
+//! through exactly one completion (the shard supervisor's conservation
+//! law). Front-door sheds from the shard layer (deadline unmeetable,
+//! shard down) pass their reason code through to the wire NACK.
+//!
+//! ## Drain semantics
+//!
+//! A drain trigger (SIGTERM/SIGINT via [`install_signal_drain`], an
+//! external shutdown flag, or `drain_on_idle` once every connection has
+//! closed) stops the accept loop, NACKs late arrivals with
+//! [`OutcomeCode::ShedShardDown`], and keeps delivering completions until
+//! every in-flight request has resolved — in-flight work completes, and
+//! journal receipts stay conservation-complete through disconnects and
+//! shard panics. Only then are connections closed and threads joined.
+//!
+//! ## Allocation discipline
+//!
+//! Warm connections run allocation-free in the binary codec: request
+//! payloads cycle through a per-connection pool the driver restocks from
+//! the workspace arena (balancing the spare each completion returns),
+//! response frames cycle through a per-connection byte pool the writer
+//! returns after each send, and the driver reuses one encode scratch.
+//! [`WireStats::reader_fresh`] counts reader-side pool misses so the
+//! bench can gate **zero fresh allocations per warm connection** in the
+//! measured window. The JSON line mode allocates per line — it is the
+//! debug codec and exempt from the gate.
+//!
+//! Responses carry the request's client-chosen `seq`; Ok responses to one
+//! connection arrive in submission order (per-client FIFO end to end),
+//! while NACKs are written the moment they happen and may overtake
+//! in-flight requests — `seq` is the correlator.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::artifact::Enc;
+use crate::runtime::native::workspace;
+use crate::serve::engine::{poisson_gap_us, Clock, RealClock};
+use crate::serve::shard::{MsgQueue, ShardCompletion, ShardedServer, Submit};
+use crate::serve::stats::{LatencyHistogram, OutcomeCode, ServeReport};
+use crate::serve::wire;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Spare payload/byte buffers retained per connection beyond its window.
+const POOL_SLACK: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Signal-triggered drain
+// ---------------------------------------------------------------------------
+
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Register SIGTERM/SIGINT handlers that request a graceful drain (the
+/// handler only sets an atomic flag — async-signal-safe). The driver loop
+/// polls [`signal_drain_requested`] when `NetOptions::obey_signals` is
+/// set. No-op off unix.
+#[cfg(unix)]
+pub fn install_signal_drain() {
+    // libc's signal(2); std links libc on unix, so no new dependency.
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_term(_sig: i32) {
+        SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+    }
+    unsafe {
+        signal(15, on_term as extern "C" fn(i32) as usize); // SIGTERM
+        signal(2, on_term as extern "C" fn(i32) as usize); // SIGINT
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_drain() {}
+
+/// Whether a registered signal handler has requested a drain.
+pub fn signal_drain_requested() -> bool {
+    SIGNAL_DRAIN.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Connection plumbing
+// ---------------------------------------------------------------------------
+
+enum WriterMsg {
+    /// A complete binary frame; the buffer returns to the byte pool.
+    Frame(Vec<u8>),
+    /// A complete JSON line (newline included).
+    Line(String),
+    /// Shut the socket down (both directions) and exit the writer.
+    Close,
+}
+
+/// Shared per-connection state. The reader and writer threads and the
+/// driver all hold the same `Arc<Conn>`; the TCP stream itself is held
+/// only by the two threads (one clone each).
+struct Conn {
+    id: u64,
+    outq: MsgQueue<WriterMsg>,
+    /// Recycled request-payload buffers: restocked by the driver from the
+    /// workspace arena, popped by the reader. A miss counts toward
+    /// [`WireStats::reader_fresh`].
+    payload_pool: Mutex<Vec<Vec<f32>>>,
+    /// Recycled outbound frame buffers: popped by the driver, returned by
+    /// the writer after each send.
+    byte_pool: Mutex<Vec<Vec<u8>>>,
+    /// JSON line mode (auto-detected from the connection's first byte).
+    json: AtomicBool,
+    /// The writer hit a socket error; further output is discarded.
+    dead: AtomicBool,
+}
+
+impl Conn {
+    fn new(id: u64) -> Conn {
+        Conn {
+            id,
+            outq: MsgQueue::new(),
+            payload_pool: Mutex::new(Vec::new()),
+            byte_pool: Mutex::new(Vec::new()),
+            json: AtomicBool::new(false),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    fn take_payload(&self, sample_len: usize, reader_fresh: &AtomicU64) -> Vec<f32> {
+        match self.payload_pool.lock().unwrap().pop() {
+            Some(v) => v,
+            None => {
+                reader_fresh.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(sample_len)
+            }
+        }
+    }
+
+    fn return_payload(&self, v: Vec<f32>, cap: usize) {
+        let mut pool = self.payload_pool.lock().unwrap();
+        if pool.len() < cap {
+            pool.push(v);
+        } else {
+            workspace::give_f32(v);
+        }
+    }
+
+    fn take_bytes(&self) -> Vec<u8> {
+        self.byte_pool.lock().unwrap().pop().unwrap_or_default()
+    }
+}
+
+/// Reader → driver messages. `Open` is pushed before the reader thread
+/// spawns, so it always precedes the connection's first `Request` in
+/// queue order, and `Closed` is pushed by the exiting reader after its
+/// last `Request`.
+enum Ingress {
+    Open(Arc<Conn>),
+    Request { conn_id: u64, seq: u64, arrival_us: u64, x: Vec<f32> },
+    Closed(u64),
+}
+
+/// Counters shared with the reader/accept threads.
+#[derive(Default)]
+struct SharedCounters {
+    accepted: AtomicU64,
+    frames_in: AtomicU64,
+    protocol_errors: AtomicU64,
+    reader_fresh: AtomicU64,
+}
+
+// ---------------------------------------------------------------------------
+// Reader / writer threads
+// ---------------------------------------------------------------------------
+
+fn send_binary_error(conn: &Conn, msg: &str) {
+    let mut scratch = Enc::new();
+    let mut buf = conn.take_bytes();
+    wire::encode_error(&mut scratch, &mut buf, wire::NO_REQUEST_ID, msg);
+    conn.outq.push(WriterMsg::Frame(buf));
+}
+
+fn reader_loop(
+    conn: Arc<Conn>,
+    stream: TcpStream,
+    ingress: Arc<MsgQueue<Ingress>>,
+    clock: RealClock,
+    sample_len: usize,
+    counters: Arc<SharedCounters>,
+    pool_cap: usize,
+) {
+    let mut br = BufReader::new(stream);
+    let mut first = [0u8; 1];
+    let got_first = loop {
+        match br.read(&mut first) {
+            Ok(0) => break false,
+            Ok(_) => break true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break false,
+        }
+    };
+    if got_first {
+        if first[0] == b'{' {
+            conn.json.store(true, Ordering::SeqCst);
+            json_reader(&conn, &mut br, &ingress, &clock, sample_len, &counters, pool_cap);
+        } else {
+            let mut pre = [0u8; 7];
+            pre[0] = first[0];
+            let rest_ok = wire::fill_exact(&mut br, &mut pre[1..], "connection preamble").is_ok();
+            match (rest_ok, wire::verify_preamble(&pre)) {
+                (true, Ok(())) => {
+                    binary_reader(&conn, &mut br, &ingress, &clock, sample_len, &counters, pool_cap)
+                }
+                (true, Err(e)) => {
+                    counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    send_binary_error(&conn, &e.to_string());
+                }
+                (false, _) => {
+                    counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+    ingress.push(Ingress::Closed(conn.id));
+}
+
+fn binary_reader(
+    conn: &Arc<Conn>,
+    r: &mut impl Read,
+    ingress: &MsgQueue<Ingress>,
+    clock: &RealClock,
+    sample_len: usize,
+    counters: &SharedCounters,
+    pool_cap: usize,
+) {
+    let mut payload = Vec::new();
+    loop {
+        match wire::read_frame(r, &mut payload) {
+            Ok(None) => break,
+            Ok(Some(wire::FRAME_REQUEST)) => {
+                // the deadline stamping point: socket read, before queuing
+                let arrival_us = clock.now_us();
+                counters.frames_in.fetch_add(1, Ordering::Relaxed);
+                let mut x = conn.take_payload(sample_len, &counters.reader_fresh);
+                match wire::decode_request(&payload, sample_len, &mut x) {
+                    Ok(seq) => {
+                        ingress.push(Ingress::Request { conn_id: conn.id, seq, arrival_us, x })
+                    }
+                    Err(e) => {
+                        // the frame boundary is intact — reject this
+                        // request, keep the connection serving
+                        counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                        conn.return_payload(x, pool_cap);
+                        send_binary_error(conn, &e.to_string());
+                    }
+                }
+            }
+            Ok(Some(kind)) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                send_binary_error(
+                    conn,
+                    &format!("wire: unexpected frame kind {} on the client->server direction", kind),
+                );
+            }
+            Err(e) => {
+                // framing errors (oversize length, truncation, CRC) leave
+                // the stream desynchronized: report and close
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                send_binary_error(conn, &e.to_string());
+                break;
+            }
+        }
+    }
+}
+
+fn json_reader(
+    conn: &Arc<Conn>,
+    br: &mut BufReader<TcpStream>,
+    ingress: &MsgQueue<Ingress>,
+    clock: &RealClock,
+    sample_len: usize,
+    counters: &SharedCounters,
+    pool_cap: usize,
+) {
+    let mut line = String::from("{");
+    // the mode-detection byte was consumed; the rest of the first line
+    // follows
+    if br.read_line(&mut line).unwrap_or(0) == 0 {
+        counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    loop {
+        let trimmed = line.trim();
+        if !trimmed.is_empty() {
+            let arrival_us = clock.now_us();
+            counters.frames_in.fetch_add(1, Ordering::Relaxed);
+            let mut x = conn.take_payload(sample_len, &counters.reader_fresh);
+            match wire::parse_json_request(trimmed, sample_len, &mut x) {
+                Ok(seq) => {
+                    ingress.push(Ingress::Request { conn_id: conn.id, seq, arrival_us, x })
+                }
+                Err(e) => {
+                    // JSON lines are self-delimiting: a bad line never
+                    // poisons the next one
+                    counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    conn.return_payload(x, pool_cap);
+                    conn.outq.push(WriterMsg::Line(wire::json_error_line(None, &e.to_string())));
+                }
+            }
+        }
+        line.clear();
+        match br.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+fn writer_loop(conn: Arc<Conn>, mut stream: TcpStream, byte_pool_cap: usize) {
+    loop {
+        match conn.outq.pop() {
+            WriterMsg::Frame(mut buf) => {
+                if !conn.dead.load(Ordering::SeqCst) && stream.write_all(&buf).is_err() {
+                    conn.dead.store(true, Ordering::SeqCst);
+                }
+                buf.clear();
+                let mut pool = conn.byte_pool.lock().unwrap();
+                if pool.len() < byte_pool_cap {
+                    pool.push(buf);
+                }
+            }
+            WriterMsg::Line(s) => {
+                if !conn.dead.load(Ordering::SeqCst) && stream.write_all(s.as_bytes()).is_err() {
+                    conn.dead.store(true, Ordering::SeqCst);
+                }
+            }
+            WriterMsg::Close => {
+                let _ = stream.shutdown(Shutdown::Both);
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Knobs for [`NetServer`].
+#[derive(Clone, Default)]
+pub struct NetOptions {
+    /// Per-connection in-flight window; 0 = the server's global cap.
+    pub conn_window: usize,
+    /// Drain once at least one connection was accepted and every
+    /// connection has closed (the CI/bench mode: clients disconnect when
+    /// done and the server exits cleanly).
+    pub drain_on_idle: bool,
+    /// External drain trigger (the test hook for "SIGTERM arrived").
+    pub shutdown: Option<Arc<AtomicBool>>,
+    /// Poll [`signal_drain_requested`] each driver iteration.
+    pub obey_signals: bool,
+    /// After this many accounted requests, reset the *measurement* window:
+    /// server metrics, workspace counters, and `reader_fresh` — so warm
+    /// connections are measured without their ramp-up allocations. Wire
+    /// conservation counters are never reset (the ledger is whole-run).
+    /// 0 = never.
+    pub reset_after: u64,
+}
+
+/// Wire-layer ledger. Conservation — `submitted == served + shed +
+/// timed_out + failed` — is whole-run: every request read off a socket
+/// lands in exactly one bucket, through client disconnects, shard panics,
+/// and drain.
+#[derive(Clone, Debug, Default)]
+pub struct WireStats {
+    pub connections: u64,
+    pub frames_in: u64,
+    pub protocol_errors: u64,
+    /// Requests read off sockets and processed by the driver.
+    pub submitted: u64,
+    pub served: u64,
+    /// All shed-class refusals (front door + wire layer).
+    pub shed: u64,
+    /// Of `shed`: refused by a full window or the global cap.
+    pub shed_over_capacity: u64,
+    /// Of `shed`: late arrivals NACKed while draining.
+    pub shed_drain: u64,
+    pub timed_out: u64,
+    pub failed: u64,
+    /// Outcomes whose response could not be written (client disconnected
+    /// or the socket died) — already counted in their outcome bucket.
+    pub undeliverable: u64,
+    /// Reader-side payload-pool misses (fresh buffers) in the measured
+    /// window.
+    pub reader_fresh: u64,
+    /// The run ended through the graceful-drain path.
+    pub drained: bool,
+}
+
+impl WireStats {
+    pub fn accounted(&self) -> u64 {
+        self.served + self.shed + self.timed_out + self.failed
+    }
+
+    /// The ledger balances: every submitted request is accounted exactly
+    /// once.
+    pub fn conserved(&self) -> bool {
+        self.submitted == self.accounted()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("connections", Json::Num(self.connections as f64)),
+            ("frames_in", Json::Num(self.frames_in as f64)),
+            ("protocol_errors", Json::Num(self.protocol_errors as f64)),
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("shed_over_capacity", Json::Num(self.shed_over_capacity as f64)),
+            ("shed_drain", Json::Num(self.shed_drain as f64)),
+            ("timed_out", Json::Num(self.timed_out as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("undeliverable", Json::Num(self.undeliverable as f64)),
+            ("reader_fresh", Json::Num(self.reader_fresh as f64)),
+            ("conserved", Json::Bool(self.conserved())),
+            ("drained", Json::Bool(self.drained)),
+        ])
+    }
+}
+
+/// What a [`NetServer::run`] produced: the server-side latency report for
+/// the measured window, the whole-run wire ledger, and — when a journal
+/// was attached — its record counts.
+pub struct NetReport {
+    pub report: ServeReport,
+    pub wire: WireStats,
+    pub journal_requests: Option<u64>,
+    pub journal_receipts: Option<u64>,
+}
+
+impl NetReport {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("report", self.report.to_json()), ("wire", self.wire.to_json())];
+        if let (Some(rq), Some(rc)) = (self.journal_requests, self.journal_receipts) {
+            pairs.push((
+                "journal",
+                Json::obj(vec![
+                    ("requests", Json::Num(rq as f64)),
+                    ("receipts", Json::Num(rc as f64)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "wire: {} conns, {} submitted = {} served + {} shed + {} timed out + \
+             {} failed ({}), {} protocol errors, drained={} | {}",
+            self.wire.connections,
+            self.wire.submitted,
+            self.wire.served,
+            self.wire.shed,
+            self.wire.timed_out,
+            self.wire.failed,
+            if self.wire.conserved() { "conserved" } else { "LEDGER IMBALANCE" },
+            self.wire.protocol_errors,
+            self.wire.drained,
+            self.report.summary()
+        )
+    }
+}
+
+/// Driver-side view of one connection.
+struct ConnEntry {
+    conn: Arc<Conn>,
+    inflight: usize,
+    /// (admission id, client seq) of in-flight requests, admission order.
+    pending: VecDeque<(u64, u64)>,
+    /// The reader saw EOF; close the writer once in-flight resolves.
+    closing: bool,
+}
+
+/// A bound TCP front door. [`NetServer::bind`] takes ownership of a
+/// warmed [`ShardedServer`]; [`NetServer::run`] serves until a drain
+/// trigger fires, then drains gracefully and reports.
+pub struct NetServer {
+    listener: TcpListener,
+    server: ShardedServer,
+    opts: NetOptions,
+}
+
+impl NetServer {
+    pub fn bind(server: ShardedServer, addr: &str, opts: NetOptions) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("wire: binding listener on {}", addr))?;
+        listener.set_nonblocking(true).context("wire: set_nonblocking on listener")?;
+        Ok(NetServer { listener, server, opts })
+    }
+
+    /// The bound address (resolves the port when binding to `:0`).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("wire: local_addr")
+    }
+
+    /// Serve until a drain trigger, drain gracefully, report. Consumes
+    /// the server (it is shut down on the way out).
+    pub fn run(self) -> Result<NetReport> {
+        let NetServer { listener, mut server, opts } = self;
+        let window = if opts.conn_window == 0 {
+            server.max_outstanding()
+        } else {
+            opts.conn_window
+        };
+        let pool_cap = window + POOL_SLACK;
+        let sample_len = server.sample_len();
+        let clock = server.clock();
+        let ingress: Arc<MsgQueue<Ingress>> = Arc::new(MsgQueue::new());
+        let counters = Arc::new(SharedCounters::default());
+        let stop_accept = Arc::new(AtomicBool::new(false));
+        let handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept_handle = {
+            let ingress = ingress.clone();
+            let counters = counters.clone();
+            let stop = stop_accept.clone();
+            let handles = handles.clone();
+            let clock = clock.clone();
+            std::thread::spawn(move || {
+                let mut next_id = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let _ = stream.set_nodelay(true);
+                            let id = next_id;
+                            next_id += 1;
+                            counters.accepted.fetch_add(1, Ordering::Relaxed);
+                            let conn = Arc::new(Conn::new(id));
+                            // Open precedes every Request from this
+                            // connection in queue order
+                            ingress.push(Ingress::Open(conn.clone()));
+                            let wstream = match stream.try_clone() {
+                                Ok(s) => s,
+                                Err(_) => {
+                                    ingress.push(Ingress::Closed(id));
+                                    continue;
+                                }
+                            };
+                            let rh = {
+                                let conn = conn.clone();
+                                let ingress = ingress.clone();
+                                let clock = clock.clone();
+                                let counters = counters.clone();
+                                std::thread::spawn(move || {
+                                    reader_loop(
+                                        conn, stream, ingress, clock, sample_len, counters,
+                                        pool_cap,
+                                    )
+                                })
+                            };
+                            let wh = std::thread::spawn(move || {
+                                writer_loop(conn, wstream, pool_cap)
+                            });
+                            let mut h = handles.lock().unwrap();
+                            h.push(rh);
+                            h.push(wh);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })
+        };
+
+        let mut wire_stats = WireStats::default();
+        let mut conns: HashMap<u64, ConnEntry> = HashMap::new();
+        let mut scratch = Enc::new();
+        let mut comps: Vec<ShardCompletion> = Vec::new();
+        let mut draining = false;
+        let mut reset_done = opts.reset_after == 0;
+        workspace::reset_stats();
+        let mut window_t0 = Instant::now();
+
+        // consecutive idle iterations before `drain_on_idle` fires: covers
+        // the gap between a connection being accepted and its Open message
+        // reaching the driver (and a short pause between client waves)
+        const IDLE_STREAK: u32 = 400;
+        let mut idle_streak = 0u32;
+
+        loop {
+            while let Some(msg) = ingress.try_pop() {
+                handle_ingress(
+                    msg,
+                    &mut server,
+                    &mut conns,
+                    &mut wire_stats,
+                    &mut scratch,
+                    draining,
+                    window,
+                    pool_cap,
+                )?;
+            }
+
+            if !draining {
+                let external = opts
+                    .shutdown
+                    .as_ref()
+                    .map_or(false, |f| f.load(Ordering::SeqCst));
+                let signaled = opts.obey_signals && signal_drain_requested();
+                let idle_now = opts.drain_on_idle
+                    && counters.accepted.load(Ordering::SeqCst) > 0
+                    && conns.is_empty()
+                    && server.outstanding() == 0;
+                idle_streak = if idle_now { idle_streak + 1 } else { 0 };
+                if external || signaled || idle_streak >= IDLE_STREAK {
+                    draining = true;
+                    wire_stats.drained = true;
+                    stop_accept.store(true, Ordering::SeqCst);
+                    crate::info!("wire: drain requested; refusing new work, completing in-flight");
+                    // idle connections can close now; busy ones close as
+                    // their in-flight resolves
+                    let ids: Vec<u64> = conns
+                        .iter()
+                        .filter(|(_, e)| e.inflight == 0)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    for id in ids {
+                        if let Some(e) = conns.remove(&id) {
+                            e.conn.outq.push(WriterMsg::Close);
+                        }
+                    }
+                }
+            }
+
+            comps.clear();
+            server.poll_completions(&mut comps, Some(Duration::from_micros(500)))?;
+            for c in comps.drain(..) {
+                deliver_completion(
+                    c,
+                    &mut server,
+                    &mut conns,
+                    &mut wire_stats,
+                    &mut scratch,
+                    draining,
+                    pool_cap,
+                    sample_len,
+                );
+            }
+
+            if !reset_done && wire_stats.accounted() >= opts.reset_after {
+                reset_done = true;
+                server.reset_metrics();
+                workspace::reset_stats();
+                counters.reader_fresh.store(0, Ordering::SeqCst);
+                window_t0 = Instant::now();
+                crate::info!(
+                    "wire: measurement window reset after {} accounted requests",
+                    wire_stats.accounted()
+                );
+            }
+
+            if draining && server.outstanding() == 0 && conns.is_empty() {
+                break;
+            }
+        }
+
+        // The accept thread may register one last connection between our
+        // final ingress sweep and the stop flag: join it, close anything
+        // it registered, then join every reader/writer.
+        accept_handle.join().map_err(|_| anyhow::anyhow!("wire: accept thread panicked"))?;
+        while let Some(msg) = ingress.try_pop() {
+            handle_ingress(
+                msg,
+                &mut server,
+                &mut conns,
+                &mut wire_stats,
+                &mut scratch,
+                true,
+                window,
+                pool_cap,
+            )?;
+        }
+        for (_, e) in conns.drain() {
+            e.conn.outq.push(WriterMsg::Close);
+        }
+        let joins = std::mem::take(&mut *handles.lock().unwrap());
+        for h in joins {
+            h.join().map_err(|_| anyhow::anyhow!("wire: a connection thread panicked"))?;
+        }
+        // Readers are gone; whatever they pushed last is final. Requests
+        // that raced the shutdown are accounted as drain sheds.
+        while let Some(msg) = ingress.try_pop() {
+            if let Ingress::Request { x, .. } = msg {
+                wire_stats.submitted += 1;
+                wire_stats.shed += 1;
+                wire_stats.shed_drain += 1;
+                wire_stats.undeliverable += 1;
+                workspace::give_f32(x);
+            }
+        }
+
+        wire_stats.connections = counters.accepted.load(Ordering::SeqCst);
+        wire_stats.frames_in = counters.frames_in.load(Ordering::SeqCst);
+        wire_stats.protocol_errors = counters.protocol_errors.load(Ordering::SeqCst);
+        wire_stats.reader_fresh = counters.reader_fresh.load(Ordering::SeqCst);
+
+        let duration_s = window_t0.elapsed().as_secs_f64();
+        let (driver_fresh, driver_reused) = workspace::stats();
+        let report = server.report(duration_s, driver_fresh, driver_reused)?;
+        let (journal_requests, journal_receipts) = match server.take_journal() {
+            Some(j) => {
+                let (rq, rc) = j.finish()?;
+                (Some(rq), Some(rc))
+            }
+            None => (None, None),
+        };
+        server.shutdown()?;
+        Ok(NetReport { report, wire: wire_stats, journal_requests, journal_receipts })
+    }
+}
+
+/// Write a NACK response (no admission id, empty logits) to `conn`.
+fn send_nack(conn: &Conn, scratch: &mut Enc, seq: u64, outcome: OutcomeCode) {
+    if conn.dead.load(Ordering::SeqCst) {
+        return;
+    }
+    if conn.json.load(Ordering::SeqCst) {
+        conn.outq.push(WriterMsg::Line(wire::json_response_line(
+            seq,
+            wire::NO_REQUEST_ID,
+            outcome,
+            0,
+            &[],
+        )));
+    } else {
+        let mut buf = conn.take_bytes();
+        wire::encode_response(scratch, &mut buf, seq, wire::NO_REQUEST_ID, outcome, 0, &[]);
+        conn.outq.push(WriterMsg::Frame(buf));
+    }
+}
+
+fn handle_ingress(
+    msg: Ingress,
+    server: &mut ShardedServer,
+    conns: &mut HashMap<u64, ConnEntry>,
+    stats: &mut WireStats,
+    scratch: &mut Enc,
+    draining: bool,
+    window: usize,
+    pool_cap: usize,
+) -> Result<()> {
+    match msg {
+        Ingress::Open(conn) => {
+            if draining {
+                // refuse connections that raced the drain trigger
+                conn.outq.push(WriterMsg::Close);
+            } else {
+                conns.insert(
+                    conn.id,
+                    ConnEntry { conn, inflight: 0, pending: VecDeque::new(), closing: false },
+                );
+            }
+        }
+        Ingress::Closed(id) => {
+            if let Some(e) = conns.get_mut(&id) {
+                e.closing = true;
+                if e.inflight == 0 {
+                    let e = conns.remove(&id).expect("entry just found");
+                    e.conn.outq.push(WriterMsg::Close);
+                }
+            }
+        }
+        Ingress::Request { conn_id, seq, arrival_us, x } => {
+            stats.submitted += 1;
+            let e = match conns.get_mut(&conn_id) {
+                Some(e) => e,
+                None => {
+                    // the connection was already closed (drain race): shed
+                    stats.shed += 1;
+                    stats.shed_drain += 1;
+                    stats.undeliverable += 1;
+                    workspace::give_f32(x);
+                    return Ok(());
+                }
+            };
+            if draining {
+                // late arrival during drain: the runtime is going away
+                stats.shed += 1;
+                stats.shed_drain += 1;
+                send_nack(&e.conn, scratch, seq, OutcomeCode::ShedShardDown);
+                e.conn.return_payload(x, pool_cap);
+                return Ok(());
+            }
+            if e.inflight >= window {
+                // over the per-connection window: refused pre-admission,
+                // no id consumed, no permit held
+                stats.shed += 1;
+                stats.shed_over_capacity += 1;
+                send_nack(&e.conn, scratch, seq, OutcomeCode::ShedOverCapacity);
+                e.conn.return_payload(x, pool_cap);
+                return Ok(());
+            }
+            // the reader validated sample_len, so an Err here is a bug,
+            // not a client mistake — propagate
+            match server.try_submit_at(conn_id, x, arrival_us)? {
+                Submit::Ok(id) => {
+                    e.inflight += 1;
+                    e.pending.push_back((id, seq));
+                }
+                Submit::Full(x) => {
+                    stats.shed += 1;
+                    stats.shed_over_capacity += 1;
+                    send_nack(&e.conn, scratch, seq, OutcomeCode::ShedOverCapacity);
+                    e.conn.return_payload(x, pool_cap);
+                }
+                Submit::Shed(code, x) => {
+                    stats.shed += 1;
+                    send_nack(&e.conn, scratch, seq, code);
+                    e.conn.return_payload(x, pool_cap);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn deliver_completion(
+    mut c: ShardCompletion,
+    server: &mut ShardedServer,
+    conns: &mut HashMap<u64, ConnEntry>,
+    stats: &mut WireStats,
+    scratch: &mut Enc,
+    draining: bool,
+    pool_cap: usize,
+    sample_len: usize,
+) {
+    match c.outcome {
+        OutcomeCode::Ok => stats.served += 1,
+        OutcomeCode::TimedOut => stats.timed_out += 1,
+        OutcomeCode::FailedPanic => stats.failed += 1,
+        _ => stats.shed += 1,
+    }
+    let conn_id = c.client;
+    let Some(e) = conns.get_mut(&conn_id) else {
+        stats.undeliverable += 1;
+        server.recycle_logits(c.shard, std::mem::take(&mut c.logits));
+        return;
+    };
+    e.inflight = e.inflight.saturating_sub(1);
+    // per-client FIFO makes this a pop-front in the common case; shard
+    // panic NACKs can interleave, so fall back to a search by id
+    let seq = match e.pending.front() {
+        Some(&(id, seq)) if id == c.id => {
+            e.pending.pop_front();
+            Some(seq)
+        }
+        _ => e
+            .pending
+            .iter()
+            .position(|&(id, _)| id == c.id)
+            .and_then(|i| e.pending.remove(i))
+            .map(|(_, seq)| seq),
+    };
+    match seq {
+        Some(seq) if !e.conn.dead.load(Ordering::SeqCst) => {
+            if e.conn.json.load(Ordering::SeqCst) {
+                e.conn.outq.push(WriterMsg::Line(wire::json_response_line(
+                    seq,
+                    c.id,
+                    c.outcome,
+                    c.latency_us(),
+                    &c.logits,
+                )));
+            } else {
+                let mut buf = e.conn.take_bytes();
+                wire::encode_response(
+                    scratch,
+                    &mut buf,
+                    seq,
+                    c.id,
+                    c.outcome,
+                    c.latency_us(),
+                    &c.logits,
+                );
+                e.conn.outq.push(WriterMsg::Frame(buf));
+            }
+        }
+        _ => stats.undeliverable += 1,
+    }
+    // close the recycle loops: logits back to the shard's freelist, and
+    // restock the connection's payload pool from the driver arena (the
+    // spare this completion absorbed balances the take)
+    server.recycle_logits(c.shard, std::mem::take(&mut c.logits));
+    {
+        let mut pool = e.conn.payload_pool.lock().unwrap();
+        if pool.len() < pool_cap {
+            pool.push(workspace::take_uninit_f32(sample_len));
+        }
+    }
+    if (e.closing || draining) && e.inflight == 0 {
+        let e = conns.remove(&conn_id).expect("entry just found");
+        e.conn.outq.push(WriterMsg::Close);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback client driver
+// ---------------------------------------------------------------------------
+
+/// Load shape for [`run_client`].
+#[derive(Clone, Debug)]
+pub struct ClientSpec {
+    /// Requests to submit.
+    pub requests: usize,
+    /// Poisson arrival rate (requests/second); 0.0 = closed loop.
+    pub rate_rps: f64,
+    /// Max in-flight before the submitter blocks.
+    pub window: usize,
+    pub seed: u64,
+    /// Speak the JSON line codec instead of binary frames.
+    pub json: bool,
+    /// Hard-disconnect (both directions) after this many submits — the
+    /// kill-the-client-mid-request fault for ledger tests.
+    pub disconnect_after: Option<usize>,
+}
+
+impl Default for ClientSpec {
+    fn default() -> ClientSpec {
+        ClientSpec {
+            requests: 64,
+            rate_rps: 0.0,
+            window: 8,
+            seed: 3407,
+            json: false,
+            disconnect_after: None,
+        }
+    }
+}
+
+/// What one client connection observed.
+#[derive(Clone, Debug, Default)]
+pub struct ClientReport {
+    pub submitted: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub timed_out: u64,
+    pub failed: u64,
+    /// Error frames / undecodable responses.
+    pub errors: u64,
+    pub disconnected: bool,
+    pub duration_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl ClientReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("timed_out", Json::Num(self.timed_out as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("disconnected", Json::Bool(self.disconnected)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "client: {} submitted, {} ok, {} shed, {} timed out, {} failed, \
+             {} errors, p99 {:.2} ms{}",
+            self.submitted,
+            self.ok,
+            self.shed,
+            self.timed_out,
+            self.failed,
+            self.errors,
+            self.p99_ms,
+            if self.disconnected { " (disconnected mid-load)" } else { "" }
+        )
+    }
+}
+
+#[derive(Default)]
+struct ClientShared {
+    inflight: Mutex<usize>,
+    closed: AtomicBool,
+}
+
+/// Drive one connection of load against a listening [`NetServer`].
+/// Open-loop latencies are measured from the *scheduled* send time, so a
+/// stalled submitter charges the stall to the request (no coordinated
+/// omission); closed-loop latencies are measured from the actual send.
+pub fn run_client(addr: &str, sample_len: usize, spec: &ClientSpec) -> Result<ClientReport> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("wire client: connecting to {}", addr))?;
+    stream.set_nodelay(true).ok();
+    let rstream = stream.try_clone().context("wire client: cloning stream")?;
+
+    let shared = Arc::new(ClientShared::default());
+    let stamps: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    let hist = Arc::new(Mutex::new(LatencyHistogram::new()));
+    let counts: Arc<Mutex<ClientReport>> = Arc::new(Mutex::new(ClientReport::default()));
+    let clock = RealClock::start();
+
+    let receiver = {
+        let shared = shared.clone();
+        let stamps = stamps.clone();
+        let hist = hist.clone();
+        let counts = counts.clone();
+        let clock = clock.clone();
+        let json = spec.json;
+        std::thread::spawn(move || {
+            client_receiver(rstream, json, &shared, &stamps, &hist, &counts, &clock)
+        })
+    };
+
+    let mut ws = stream;
+    let mut rng = Rng::new(spec.seed ^ 0x5EED_C11E);
+    let mut scratch = Enc::new();
+    let mut frame = Vec::new();
+    let mut x = vec![0.0f32; sample_len];
+    let mut report = ClientReport::default();
+    let t0 = Instant::now();
+
+    if !spec.json {
+        ws.write_all(&wire::preamble()).context("wire client: writing preamble")?;
+    }
+
+    let mut next_at_us = clock.now_us();
+    'submit: for i in 0..spec.requests {
+        if spec.disconnect_after == Some(i) {
+            let _ = ws.shutdown(Shutdown::Both);
+            report.disconnected = true;
+            break 'submit;
+        }
+        for v in x.iter_mut() {
+            *v = (rng.f64() * 2.0 - 1.0) as f32;
+        }
+        let seq = i as u64;
+        let send_stamp = if spec.rate_rps > 0.0 {
+            next_at_us += poisson_gap_us(&mut rng, spec.rate_rps);
+            let now = clock.now_us();
+            if next_at_us > now {
+                std::thread::sleep(Duration::from_micros(next_at_us - now));
+            }
+            next_at_us // scheduled time: stalls are charged to the request
+        } else {
+            clock.now_us()
+        };
+        // block for a window slot
+        {
+            let mut inflight = shared.inflight.lock().unwrap();
+            while *inflight >= spec.window {
+                if shared.closed.load(Ordering::SeqCst) {
+                    break 'submit;
+                }
+                drop(inflight);
+                std::thread::sleep(Duration::from_micros(200));
+                inflight = shared.inflight.lock().unwrap();
+            }
+            *inflight += 1;
+        }
+        if shared.closed.load(Ordering::SeqCst) {
+            break 'submit;
+        }
+        stamps.lock().unwrap().insert(seq, send_stamp);
+        let wrote = if spec.json {
+            ws.write_all(wire::json_request_line(seq, &x).as_bytes())
+        } else {
+            wire::encode_request(&mut scratch, &mut frame, seq, &x);
+            ws.write_all(&frame)
+        };
+        if wrote.is_err() {
+            *shared.inflight.lock().unwrap() -= 1;
+            stamps.lock().unwrap().remove(&seq);
+            break 'submit;
+        }
+        report.submitted += 1;
+    }
+
+    if !report.disconnected {
+        // wait for in-flight responses, then signal EOF to the server
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            if *shared.inflight.lock().unwrap() == 0 || shared.closed.load(Ordering::SeqCst) {
+                break;
+            }
+            if Instant::now() > deadline {
+                anyhow::bail!(
+                    "wire client: timed out waiting for {} in-flight responses",
+                    *shared.inflight.lock().unwrap()
+                );
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let _ = ws.shutdown(Shutdown::Both);
+    }
+    receiver.join().map_err(|_| anyhow::anyhow!("wire client: receiver thread panicked"))?;
+
+    let c = counts.lock().unwrap();
+    report.ok = c.ok;
+    report.shed = c.shed;
+    report.timed_out = c.timed_out;
+    report.failed = c.failed;
+    report.errors = c.errors;
+    drop(c);
+    report.duration_s = t0.elapsed().as_secs_f64();
+    report.throughput_rps =
+        if report.duration_s > 0.0 { report.ok as f64 / report.duration_s } else { 0.0 };
+    let h = hist.lock().unwrap();
+    report.p50_ms = h.quantile_us(0.50) as f64 / 1e3;
+    report.p95_ms = h.quantile_us(0.95) as f64 / 1e3;
+    report.p99_ms = h.quantile_us(0.99) as f64 / 1e3;
+    report.mean_ms = h.mean_us() / 1e3;
+    Ok(report)
+}
+
+fn client_account(
+    resp: &wire::Response,
+    shared: &ClientShared,
+    stamps: &Mutex<HashMap<u64, u64>>,
+    hist: &Mutex<LatencyHistogram>,
+    counts: &Mutex<ClientReport>,
+    clock: &RealClock,
+) {
+    let sent = stamps.lock().unwrap().remove(&resp.seq);
+    let mut c = counts.lock().unwrap();
+    match resp.outcome {
+        OutcomeCode::Ok => {
+            c.ok += 1;
+            if let Some(s) = sent {
+                hist.lock().unwrap().record_us(clock.now_us().saturating_sub(s));
+            }
+        }
+        OutcomeCode::TimedOut => c.timed_out += 1,
+        OutcomeCode::FailedPanic => c.failed += 1,
+        _ => c.shed += 1,
+    }
+    drop(c);
+    if sent.is_some() {
+        let mut inflight = shared.inflight.lock().unwrap();
+        *inflight = inflight.saturating_sub(1);
+    }
+}
+
+fn client_receiver(
+    stream: TcpStream,
+    json: bool,
+    shared: &ClientShared,
+    stamps: &Mutex<HashMap<u64, u64>>,
+    hist: &Mutex<LatencyHistogram>,
+    counts: &Mutex<ClientReport>,
+    clock: &RealClock,
+) {
+    let mut br = BufReader::new(stream);
+    if json {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match br.read_line(&mut line) {
+                Ok(0) => break,
+                Ok(_) => {
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        continue;
+                    }
+                    match wire::parse_json_response(trimmed) {
+                        Ok(resp) => client_account(&resp, shared, stamps, hist, counts, clock),
+                        Err(_) => counts.lock().unwrap().errors += 1,
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    } else {
+        let mut payload = Vec::new();
+        loop {
+            match wire::read_frame(&mut br, &mut payload) {
+                Ok(None) => break,
+                Ok(Some(wire::FRAME_RESPONSE)) => match wire::decode_response(&payload) {
+                    Ok(resp) => client_account(&resp, shared, stamps, hist, counts, clock),
+                    Err(_) => counts.lock().unwrap().errors += 1,
+                },
+                Ok(Some(wire::FRAME_ERROR)) => {
+                    let mut c = counts.lock().unwrap();
+                    c.errors += 1;
+                    if let Ok((_seq, msg)) = wire::decode_error(&payload) {
+                        drop(c);
+                        crate::info!("wire client: server error: {}", msg);
+                    }
+                }
+                Ok(Some(_)) => counts.lock().unwrap().errors += 1,
+                Err(_) => break,
+            }
+        }
+    }
+    shared.closed.store(true, Ordering::SeqCst);
+}

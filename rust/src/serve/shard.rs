@@ -47,7 +47,17 @@
 //!   front door sheds requests whose deadline has already passed or whose
 //!   predicted completion (arrival-to-done latency EWMA) would miss it;
 //!   shards NACK requests they dequeue past-deadline without executing
-//!   them. All reason-coded counters land in [`ServeReport`].
+//!   them. All reason-coded counters land in [`ServeReport`]. The EWMA is
+//!   cold-start-safe: [`ShardedServer::seed_ewma`] captures a warmup
+//!   baseline, and a shard rebuild resets the predictor to that seed so
+//!   crash-inflated drain latencies cannot spuriously shed the restarted
+//!   shard's first requests.
+//! * **Network front door.** [`super::net`] puts this admission queue
+//!   behind a TCP listener: accept threads speak the [`super::wire`]
+//!   codec, stamp deadlines at socket read, and map connection-level
+//!   backpressure onto the same global outstanding cap
+//!   ([`OutcomeCode::ShedOverCapacity`] NACKs). The `MsgQueue` primitive
+//!   below is shared with that layer.
 //! * **Request journal.** With a [`Journal`] attached, every admission and
 //!   every outcome (a *receipt*: client, sequence, shard, model
 //!   fingerprint, outcome code, latency, logits digest) is recorded
@@ -102,27 +112,29 @@ const MAX_BACKOFF_SHIFT: u32 = 6;
 /// Mutex+condvar queue over a `VecDeque`. Unlike `std::sync::mpsc` (which
 /// heap-allocates a node per send), the ring buffer grows to its
 /// steady-state capacity once and then recycles — in keeping with the
-/// serving layer's allocation discipline.
-struct MsgQueue<T> {
+/// serving layer's allocation discipline. Crate-visible so the network
+/// front door ([`super::net`]) reuses it for its ingress and per-connection
+/// write-back queues.
+pub(crate) struct MsgQueue<T> {
     q: Mutex<VecDeque<T>>,
     cv: Condvar,
 }
 
 impl<T> MsgQueue<T> {
-    fn new() -> MsgQueue<T> {
+    pub(crate) fn new() -> MsgQueue<T> {
         MsgQueue { q: Mutex::new(VecDeque::with_capacity(64)), cv: Condvar::new() }
     }
 
-    fn push(&self, t: T) {
+    pub(crate) fn push(&self, t: T) {
         self.q.lock().unwrap().push_back(t);
         self.cv.notify_one();
     }
 
-    fn try_pop(&self) -> Option<T> {
+    pub(crate) fn try_pop(&self) -> Option<T> {
         self.q.lock().unwrap().pop_front()
     }
 
-    fn pop(&self) -> T {
+    pub(crate) fn pop(&self) -> T {
         let mut g = self.q.lock().unwrap();
         loop {
             if let Some(t) = g.pop_front() {
@@ -132,7 +144,7 @@ impl<T> MsgQueue<T> {
         }
     }
 
-    fn pop_timeout(&self, d: Duration) -> Option<T> {
+    pub(crate) fn pop_timeout(&self, d: Duration) -> Option<T> {
         let deadline = Instant::now() + d;
         let mut g = self.q.lock().unwrap();
         loop {
@@ -825,6 +837,12 @@ pub struct ShardedServer {
     /// EWMA of Ok-request arrival→done latency, the front door's
     /// completion-time predictor (0 until the first completion).
     ewma_latency_us: u64,
+    /// The predictor's cold-start seed, captured from a warmup window by
+    /// [`ShardedServer::seed_ewma`]. When a shard restart invalidates the
+    /// running EWMA (completions queued behind a crash finish with
+    /// crash-inflated latencies), the predictor falls back to this value
+    /// instead of spuriously shedding the rebuilt shard's first requests.
+    ewma_seed_us: u64,
     /// Fingerprint of the newest model broadcast to the shards.
     model_fp: u32,
     journal: Option<Journal>,
@@ -922,6 +940,7 @@ impl ShardedServer {
             routes: HashMap::new(),
             deadline_us: policy.deadline_us,
             ewma_latency_us: 0,
+            ewma_seed_us: 0,
             model_fp,
             journal: None,
             shed_deadline: 0,
@@ -950,6 +969,34 @@ impl ShardedServer {
     /// µs since server start (the epoch every latency stamp shares).
     pub fn now_us(&self) -> u64 {
         self.clock.now_us()
+    }
+
+    /// The global admission cap this server enforces.
+    pub fn max_outstanding(&self) -> usize {
+        self.max_outstanding
+    }
+
+    /// A clone of the server's clock, sharing its epoch — the network
+    /// front door hands this to connection readers so arrival stamps taken
+    /// at socket read time are directly comparable to completion stamps.
+    pub(crate) fn clock(&self) -> RealClock {
+        self.clock.clone()
+    }
+
+    /// Capture the current latency EWMA as the deadline predictor's seed.
+    /// Call once at the end of a warmup window: a freshly booted server
+    /// then predicts from measured warmup latency, and a shard restart
+    /// resets the predictor back to this seed instead of leaving it
+    /// poisoned by crash-inflated completions (cold-start safety — see
+    /// [`ShardedServer::absorb`]'s reset path).
+    pub fn seed_ewma(&mut self) {
+        self.ewma_seed_us = self.ewma_latency_us;
+    }
+
+    /// The deadline predictor's current value (µs); 0 means "no signal
+    /// yet" and admission is blind until the first Ok completion.
+    pub fn ewma_latency_us(&self) -> u64 {
+        self.ewma_latency_us
     }
 
     /// Fingerprint of the newest model broadcast to the shards (what new
@@ -1163,6 +1210,15 @@ impl ShardedServer {
             } else {
                 (self.ewma_latency_us * 7 + lat) / 8
             };
+        } else if c.outcome == OutcomeCode::FailedPanic {
+            // A panic NACK is the driver-visible evidence of a shard
+            // rebuild. Completions that were queued behind the crash drain
+            // with crash-inflated latencies, and the rebuilt shard starts
+            // from a cold engine — either way the running EWMA no longer
+            // describes it. Fall back to the warmup seed so the deadline
+            // predictor does not spuriously shed the restarted shard's
+            // first requests ([`ShardedServer::seed_ewma`]).
+            self.ewma_latency_us = self.ewma_seed_us;
         }
         if self.journal.is_some() {
             let digest = if c.outcome.is_ok() { journal::logits_digest(&c.logits) } else { 0 };

@@ -33,6 +33,13 @@ pub enum OutcomeCode {
     /// Lost to a shard panic: the request was in flight (inbox or engine
     /// queue) when the shard crashed; NACKed by the supervisor.
     FailedPanic = 4,
+    /// NACKed by the network front door before admission: the connection
+    /// exceeded its in-flight window, or the global outstanding cap was
+    /// full. Never consumes a request id and never appears in a journal
+    /// written by this runtime (the request was refused pre-admission);
+    /// the code exists so wire NACKs are reason-coded like every other
+    /// outcome.
+    ShedOverCapacity = 5,
 }
 
 impl OutcomeCode {
@@ -47,6 +54,7 @@ impl OutcomeCode {
             2 => Some(OutcomeCode::ShedShardDown),
             3 => Some(OutcomeCode::TimedOut),
             4 => Some(OutcomeCode::FailedPanic),
+            5 => Some(OutcomeCode::ShedOverCapacity),
             _ => None,
         }
     }
@@ -58,11 +66,23 @@ impl OutcomeCode {
             OutcomeCode::ShedShardDown => "shed_shard_down",
             OutcomeCode::TimedOut => "timed_out",
             OutcomeCode::FailedPanic => "failed_panic",
+            OutcomeCode::ShedOverCapacity => "shed_over_capacity",
         }
     }
 
     pub fn is_ok(self) -> bool {
         self == OutcomeCode::Ok
+    }
+
+    /// Shed-class outcomes: refused without execution (front door or wire
+    /// layer), as opposed to timed out or lost in flight.
+    pub fn is_shed(self) -> bool {
+        matches!(
+            self,
+            OutcomeCode::ShedDeadline
+                | OutcomeCode::ShedShardDown
+                | OutcomeCode::ShedOverCapacity
+        )
     }
 }
 
@@ -436,14 +456,16 @@ mod tests {
             (OutcomeCode::ShedShardDown, 2, "shed_shard_down"),
             (OutcomeCode::TimedOut, 3, "timed_out"),
             (OutcomeCode::FailedPanic, 4, "failed_panic"),
+            (OutcomeCode::ShedOverCapacity, 5, "shed_over_capacity"),
         ];
         for (oc, code, name) in all {
             assert_eq!(oc.code(), code);
             assert_eq!(OutcomeCode::from_code(code), Some(oc));
             assert_eq!(oc.name(), name);
             assert_eq!(oc.is_ok(), code == 0);
+            assert_eq!(oc.is_shed(), matches!(code, 1 | 2 | 5));
         }
-        assert_eq!(OutcomeCode::from_code(5), None);
+        assert_eq!(OutcomeCode::from_code(6), None);
     }
 
     #[test]

@@ -1,0 +1,544 @@
+//! Wire codec for the TCP front door: length-prefixed CRC-framed binary
+//! frames, plus a line-delimited JSON codec for debuggability.
+//!
+//! The binary format reuses the journal's framing conventions
+//! ([`super::journal`]): little-endian integers throughout, and every
+//! frame carries an IEEE CRC-32 over `kind ++ payload` so a flipped bit
+//! anywhere in transit is caught at the frame it lives in, not three
+//! requests later as a garbage payload.
+//!
+//! ## Connection preamble
+//!
+//! A binary client opens with 7 bytes: magic `b"DDWIR\0"` + version `u8`.
+//! Servers reject a bad magic or a *newer* version with an actionable
+//! error. If the first byte of a connection is `{` (0x7B — no magic byte
+//! collides with it), the connection is in **JSON line mode** instead:
+//! one compact JSON object per `\n`-terminated line, both directions.
+//!
+//! ## Binary frames (both directions)
+//!
+//! ```text
+//! kind     u8   1 = request, 2 = response, 3 = error
+//! len      u32  payload length (capped at MAX_FRAME_PAYLOAD)
+//! payload  ..   little-endian fields, see below
+//! crc32    u32  IEEE CRC-32 of kind byte ++ payload
+//! ```
+//!
+//! Request payload: `seq u64, x f32s (u64 count prefix)`. The client id
+//! is assigned server-side from the connection — a client cannot name
+//! another client's FIFO lane.
+//!
+//! Response payload: `seq u64, id u64 ([`NO_REQUEST_ID`] when the request
+//! was NACKed before admission), outcome u8 ([`OutcomeCode`]),
+//! latency_us u64, logits f32s` (empty for non-Ok outcomes).
+//!
+//! Error payload: `seq u64 ([`NO_REQUEST_ID`] when the error is not
+//! attributable to a request), msg str (u32 len prefix)`.
+//!
+//! ## JSON line mode
+//!
+//! Request: `{"seq":N,"x":[..]}`. Response: `{"seq":N,"id":N|null,
+//! "outcome":"ok","code":0,"latency_us":N,"logits":[..]}`. Error:
+//! `{"error":"...","seq":N|null}`. The JSON path allocates per line — it
+//! is the debug codec; the zero-alloc serving gate applies to the binary
+//! codec only.
+//!
+//! ## Allocation discipline (binary path)
+//!
+//! [`read_frame`] fills a caller-owned payload buffer, [`frame_into`]
+//! builds into a caller-owned byte buffer, and [`decode_request`] fills a
+//! caller-owned f32 buffer — all reused across frames on a warm
+//! connection, so steady state touches no allocator.
+
+use std::io::Read;
+
+use anyhow::{bail, Context, Result};
+
+use crate::artifact::{Crc32, Enc};
+use crate::serve::stats::OutcomeCode;
+use crate::util::json::Json;
+
+/// Connection magic for binary mode. `b"DDWIR\0"` — sibling of the
+/// journal's `DDJNL` and the artifact container's `DDIAG`.
+pub const WIRE_MAGIC: &[u8; 6] = b"DDWIR\0";
+/// Wire protocol version. Servers reject anything newer; never renumber
+/// fields within a version, only append under a bump.
+pub const WIRE_VERSION: u8 = 1;
+/// Frame kinds.
+pub const FRAME_REQUEST: u8 = 1;
+pub const FRAME_RESPONSE: u8 = 2;
+pub const FRAME_ERROR: u8 = 3;
+/// Hard cap on a single frame's payload: a corrupt or hostile length
+/// field cannot make the server stage a huge buffer before the CRC check.
+pub const MAX_FRAME_PAYLOAD: usize = 4 << 20;
+/// Response `id` sentinel: the request was refused before admission ever
+/// assigned it an id (over-capacity / drain NACKs).
+pub const NO_REQUEST_ID: u64 = u64::MAX;
+
+/// The 7 bytes a binary-mode client opens a connection with.
+pub fn preamble() -> [u8; 7] {
+    let mut p = [0u8; 7];
+    p[..6].copy_from_slice(WIRE_MAGIC);
+    p[6] = WIRE_VERSION;
+    p
+}
+
+/// Server side: validate a connection preamble. Errors are actionable —
+/// they name what was expected and what arrived.
+pub fn verify_preamble(p: &[u8; 7]) -> Result<()> {
+    if &p[..6] != WIRE_MAGIC {
+        bail!(
+            "wire: bad connection magic {:02x?} (expected {:02x?} \"DDWIR\") — \
+             not a dynadiag wire client, or the stream is desynchronized",
+            &p[..6],
+            WIRE_MAGIC
+        );
+    }
+    if p[6] > WIRE_VERSION {
+        bail!(
+            "wire: client speaks protocol version {} but this server only \
+             knows {} — upgrade the server or downgrade the client",
+            p[6],
+            WIRE_VERSION
+        );
+    }
+    Ok(())
+}
+
+/// Read until `buf` is full. `Ok(0)` mid-fill is a truncation error
+/// naming `what` and the byte counts. Crate-visible so the front door
+/// ([`super::net`]) reads connection preambles with the same semantics.
+pub(crate) fn fill_exact(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => bail!(
+                "wire: connection closed mid-frame ({}: got {} of {} bytes)",
+                what,
+                off,
+                buf.len()
+            ),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).with_context(|| format!("wire: reading {}", what)),
+        }
+    }
+    Ok(())
+}
+
+/// Like [`fill_exact`] but a clean EOF *before the first byte* returns
+/// `Ok(false)` — that is the one legal place for a peer to disconnect.
+fn fill_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) if off == 0 => return Ok(false),
+            Ok(0) => bail!(
+                "wire: connection closed mid-frame (header: got {} of {} bytes)",
+                off,
+                buf.len()
+            ),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("wire: reading frame header"),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame into the caller's payload buffer (reused across calls;
+/// no allocation once grown). Returns `Ok(None)` on a clean EOF at a
+/// frame boundary, `Ok(Some(kind))` otherwise. Oversize lengths,
+/// truncation mid-frame, and CRC mismatches are actionable errors.
+pub fn read_frame(r: &mut impl Read, payload: &mut Vec<u8>) -> Result<Option<u8>> {
+    let mut head = [0u8; 5];
+    if !fill_or_eof(r, &mut head)? {
+        return Ok(None);
+    }
+    let kind = head[0];
+    let len = u32::from_le_bytes(head[1..5].try_into().expect("4 bytes")) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        bail!(
+            "wire: frame (kind {}) declares a {} byte payload, over the {} byte \
+             cap — corrupt length field or desynchronized stream",
+            kind,
+            len,
+            MAX_FRAME_PAYLOAD
+        );
+    }
+    payload.clear();
+    payload.resize(len, 0);
+    fill_exact(r, payload, "frame payload")?;
+    let mut crc_bytes = [0u8; 4];
+    fill_exact(r, &mut crc_bytes, "frame crc")?;
+    let stored = u32::from_le_bytes(crc_bytes);
+    let mut crc = Crc32::new();
+    crc.update(&[kind]);
+    crc.update(payload);
+    let computed = crc.finish();
+    if computed != stored {
+        bail!(
+            "wire: frame (kind {}, {} byte payload) failed CRC (stored {:08x}, \
+             computed {:08x}) — the stream is corrupt",
+            kind,
+            len,
+            stored,
+            computed
+        );
+    }
+    Ok(Some(kind))
+}
+
+/// Build a complete frame (header + payload + CRC) into `out` (cleared
+/// first, reused across calls).
+pub fn frame_into(out: &mut Vec<u8>, kind: u8, payload: &[u8]) {
+    out.clear();
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let mut crc = Crc32::new();
+    crc.update(&[kind]);
+    crc.update(payload);
+    out.extend_from_slice(&crc.finish().to_le_bytes());
+}
+
+/// Client side: encode a request frame into `out` via the reusable
+/// `scratch` encoder.
+pub fn encode_request(scratch: &mut Enc, out: &mut Vec<u8>, seq: u64, x: &[f32]) {
+    scratch.buf.clear();
+    scratch.u64(seq);
+    scratch.f32s(x);
+    frame_into(out, FRAME_REQUEST, &scratch.buf);
+}
+
+/// Server side: decode a request payload into the caller's f32 buffer
+/// (cleared and refilled; no allocation once its capacity covers
+/// `want_len`). The feature count is validated *before* any copying, so a
+/// wrong-shape request cannot partially fill the buffer.
+pub fn decode_request(payload: &[u8], want_len: usize, x: &mut Vec<f32>) -> Result<u64> {
+    if payload.len() < 16 {
+        bail!(
+            "wire: request payload is {} bytes, shorter than its 16 byte header",
+            payload.len()
+        );
+    }
+    let seq = u64::from_le_bytes(payload[0..8].try_into().expect("8 bytes"));
+    let count = u64::from_le_bytes(payload[8..16].try_into().expect("8 bytes")) as usize;
+    if count != want_len {
+        bail!(
+            "wire: request seq {} has {} features but the serving model \
+             expects {} — wrong model or corrupt frame",
+            seq,
+            count,
+            want_len
+        );
+    }
+    let want_bytes = 16 + count * 4;
+    if payload.len() != want_bytes {
+        bail!(
+            "wire: request seq {} payload is {} bytes but {} features need {}",
+            seq,
+            payload.len(),
+            count,
+            want_bytes
+        );
+    }
+    x.clear();
+    x.extend(
+        payload[16..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))),
+    );
+    Ok(seq)
+}
+
+/// One decoded response (client side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub seq: u64,
+    /// Admission id, or [`NO_REQUEST_ID`] for a pre-admission NACK.
+    pub id: u64,
+    pub outcome: OutcomeCode,
+    pub latency_us: u64,
+    /// Served logits; empty for every non-Ok outcome.
+    pub logits: Vec<f32>,
+}
+
+/// Server side: encode a response frame into `out` via `scratch`.
+pub fn encode_response(
+    scratch: &mut Enc,
+    out: &mut Vec<u8>,
+    seq: u64,
+    id: u64,
+    outcome: OutcomeCode,
+    latency_us: u64,
+    logits: &[f32],
+) {
+    scratch.buf.clear();
+    scratch.u64(seq);
+    scratch.u64(id);
+    scratch.u8(outcome.code());
+    scratch.u64(latency_us);
+    scratch.f32s(logits);
+    frame_into(out, FRAME_RESPONSE, &scratch.buf);
+}
+
+/// Client side: decode a response payload. Allocates the logits vector —
+/// the client driver is not under the server's zero-alloc gate.
+pub fn decode_response(payload: &[u8]) -> Result<Response> {
+    let mut d = crate::artifact::Dec::new(payload, "wire response frame");
+    let seq = d.u64()?;
+    let id = d.u64()?;
+    let code = d.u8()?;
+    let outcome = OutcomeCode::from_code(code)
+        .ok_or_else(|| anyhow::anyhow!("wire: response seq {} has unknown outcome code {}", seq, code))?;
+    let latency_us = d.u64()?;
+    let logits = d.f32s()?;
+    d.expect_end()?;
+    Ok(Response { seq, id, outcome, latency_us, logits })
+}
+
+/// Encode an error frame (server → client, before the connection drops or
+/// the offending frame is skipped). `seq` is [`NO_REQUEST_ID`] when the
+/// error is not attributable to a request.
+pub fn encode_error(scratch: &mut Enc, out: &mut Vec<u8>, seq: u64, msg: &str) {
+    scratch.buf.clear();
+    scratch.u64(seq);
+    scratch.str(msg);
+    frame_into(out, FRAME_ERROR, &scratch.buf);
+}
+
+/// Client side: decode an error payload into (seq, message).
+pub fn decode_error(payload: &[u8]) -> Result<(u64, String)> {
+    let mut d = crate::artifact::Dec::new(payload, "wire error frame");
+    let seq = d.u64()?;
+    let msg = d.str()?;
+    d.expect_end()?;
+    Ok((seq, msg))
+}
+
+// ---------------------------------------------------------------------------
+// JSON line mode
+// ---------------------------------------------------------------------------
+
+/// Compact JSON request line (newline included).
+pub fn json_request_line(seq: u64, x: &[f32]) -> String {
+    let obj = Json::obj(vec![
+        ("seq", Json::Num(seq as f64)),
+        ("x", Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect())),
+    ]);
+    let mut s = obj.to_string();
+    s.push('\n');
+    s
+}
+
+/// Parse a JSON request line into the caller's f32 buffer; returns seq.
+/// Shape errors are as actionable as the binary path's.
+pub fn parse_json_request(line: &str, want_len: usize, x: &mut Vec<f32>) -> Result<u64> {
+    let v = Json::parse(line).context("wire: parsing JSON request line")?;
+    let seq = v
+        .req("seq")?
+        .as_f64()
+        .context("wire: JSON request 'seq' is not a number")? as u64;
+    let xs = v
+        .req("x")?
+        .as_f32_vec()
+        .context("wire: JSON request 'x' is not a number array")?;
+    if xs.len() != want_len {
+        bail!(
+            "wire: JSON request seq {} has {} features but the serving model \
+             expects {}",
+            seq,
+            xs.len(),
+            want_len
+        );
+    }
+    x.clear();
+    x.extend_from_slice(&xs);
+    Ok(seq)
+}
+
+/// Compact JSON response line (newline included).
+pub fn json_response_line(
+    seq: u64,
+    id: u64,
+    outcome: OutcomeCode,
+    latency_us: u64,
+    logits: &[f32],
+) -> String {
+    let id_json = if id == NO_REQUEST_ID { Json::Null } else { Json::Num(id as f64) };
+    let obj = Json::obj(vec![
+        ("seq", Json::Num(seq as f64)),
+        ("id", id_json),
+        ("outcome", Json::Str(outcome.name().to_string())),
+        ("code", Json::Num(outcome.code() as f64)),
+        ("latency_us", Json::Num(latency_us as f64)),
+        ("logits", Json::Arr(logits.iter().map(|&v| Json::Num(v as f64)).collect())),
+    ]);
+    let mut s = obj.to_string();
+    s.push('\n');
+    s
+}
+
+/// Parse a JSON response line (client side).
+pub fn parse_json_response(line: &str) -> Result<Response> {
+    let v = Json::parse(line).context("wire: parsing JSON response line")?;
+    if let Some(err) = v.get("error") {
+        bail!(
+            "wire: server error: {}",
+            err.as_str().unwrap_or("(non-string error)")
+        );
+    }
+    let seq = v.req("seq")?.as_f64().context("wire: JSON response 'seq'")? as u64;
+    let id = match v.req("id")? {
+        Json::Null => NO_REQUEST_ID,
+        other => other.as_f64().context("wire: JSON response 'id'")? as u64,
+    };
+    let code = v.req("code")?.as_f64().context("wire: JSON response 'code'")? as u8;
+    let outcome = OutcomeCode::from_code(code)
+        .ok_or_else(|| anyhow::anyhow!("wire: JSON response has unknown outcome code {}", code))?;
+    let latency_us =
+        v.req("latency_us")?.as_f64().context("wire: JSON response 'latency_us'")? as u64;
+    let logits = v
+        .req("logits")?
+        .as_f32_vec()
+        .context("wire: JSON response 'logits' is not a number array")?;
+    Ok(Response { seq, id, outcome, latency_us, logits })
+}
+
+/// Compact JSON error line (newline included).
+pub fn json_error_line(seq: Option<u64>, msg: &str) -> String {
+    let obj = Json::obj(vec![
+        ("error", Json::Str(msg.to_string())),
+        ("seq", seq.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null)),
+    ]);
+    let mut s = obj.to_string();
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn preamble_round_trips_and_rejects() {
+        let p = preamble();
+        verify_preamble(&p).unwrap();
+
+        let mut bad = p;
+        bad[0] = b'X';
+        let err = verify_preamble(&bad).unwrap_err().to_string();
+        assert!(err.contains("bad connection magic"), "got: {}", err);
+
+        let mut future = p;
+        future[6] = WIRE_VERSION + 1;
+        let err = verify_preamble(&future).unwrap_err().to_string();
+        assert!(
+            err.contains("version") && err.contains("upgrade"),
+            "got: {}",
+            err
+        );
+    }
+
+    #[test]
+    fn binary_frames_round_trip() {
+        let mut scratch = Enc::new();
+        let mut wire = Vec::new();
+        let x = [0.5f32, -1.25, 3.0];
+        encode_request(&mut scratch, &mut wire, 7, &x);
+
+        let mut payload = Vec::new();
+        let mut r = Cursor::new(wire.clone());
+        let kind = read_frame(&mut r, &mut payload).unwrap();
+        assert_eq!(kind, Some(FRAME_REQUEST));
+        let mut got = Vec::new();
+        let seq = decode_request(&payload, 3, &mut got).unwrap();
+        assert_eq!(seq, 7);
+        assert_eq!(got, x);
+        // next read on the exhausted stream is a clean EOF, not an error
+        assert_eq!(read_frame(&mut r, &mut payload).unwrap(), None);
+
+        let logits = [9.0f32, -2.0];
+        encode_response(&mut scratch, &mut wire, 7, 41, OutcomeCode::Ok, 123, &logits);
+        let mut r = Cursor::new(wire.clone());
+        assert_eq!(read_frame(&mut r, &mut payload).unwrap(), Some(FRAME_RESPONSE));
+        let resp = decode_response(&payload).unwrap();
+        assert_eq!(
+            resp,
+            Response { seq: 7, id: 41, outcome: OutcomeCode::Ok, latency_us: 123, logits: logits.to_vec() }
+        );
+
+        encode_error(&mut scratch, &mut wire, NO_REQUEST_ID, "boom");
+        let mut r = Cursor::new(wire.clone());
+        assert_eq!(read_frame(&mut r, &mut payload).unwrap(), Some(FRAME_ERROR));
+        let (seq, msg) = decode_error(&payload).unwrap();
+        assert_eq!(seq, NO_REQUEST_ID);
+        assert_eq!(msg, "boom");
+    }
+
+    #[test]
+    fn malformed_frames_fail_actionably() {
+        let mut scratch = Enc::new();
+        let mut wire = Vec::new();
+        encode_request(&mut scratch, &mut wire, 1, &[1.0, 2.0]);
+        let mut payload = Vec::new();
+
+        // oversize declared length: rejected before any staging
+        let mut bad = wire.clone();
+        bad[1..5].copy_from_slice(&(MAX_FRAME_PAYLOAD as u32 + 1).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(bad), &mut payload).unwrap_err().to_string();
+        assert!(err.contains("cap"), "got: {}", err);
+
+        // truncated payload: named, not a silent EOF
+        let bad = wire[..wire.len() - 6].to_vec();
+        let err = read_frame(&mut Cursor::new(bad), &mut payload).unwrap_err().to_string();
+        assert!(err.contains("closed mid-frame"), "got: {}", err);
+
+        // flipped payload byte: CRC catches it with both sums in the message
+        let mut bad = wire.clone();
+        let n = bad.len();
+        bad[n - 6] ^= 0x01;
+        let err = read_frame(&mut Cursor::new(bad), &mut payload).unwrap_err().to_string();
+        assert!(err.contains("failed CRC"), "got: {}", err);
+
+        // wrong feature count: refused before filling the buffer
+        let mut r = Cursor::new(wire.clone());
+        read_frame(&mut r, &mut payload).unwrap();
+        let mut x = Vec::new();
+        let err = decode_request(&payload, 5, &mut x).unwrap_err().to_string();
+        assert!(err.contains("expects 5"), "got: {}", err);
+        assert!(x.is_empty(), "shape-mismatched request must not partially fill");
+    }
+
+    #[test]
+    fn json_lines_round_trip() {
+        let line = json_request_line(9, &[0.5, -1.0]);
+        assert!(line.ends_with('\n'));
+        let mut x = Vec::new();
+        let seq = parse_json_request(&line, 2, &mut x).unwrap();
+        assert_eq!(seq, 9);
+        assert_eq!(x, vec![0.5, -1.0]);
+        let err = parse_json_request(&line, 3, &mut x).unwrap_err().to_string();
+        assert!(err.contains("expects 3"), "got: {}", err);
+
+        let line = json_response_line(9, 12, OutcomeCode::Ok, 55, &[1.0]);
+        let resp = parse_json_response(&line).unwrap();
+        assert_eq!(resp.seq, 9);
+        assert_eq!(resp.id, 12);
+        assert_eq!(resp.outcome, OutcomeCode::Ok);
+        assert_eq!(resp.logits, vec![1.0]);
+
+        // a NACK serializes its id as null and parses back to the sentinel
+        let line = json_response_line(10, NO_REQUEST_ID, OutcomeCode::ShedOverCapacity, 0, &[]);
+        let resp = parse_json_response(&line).unwrap();
+        assert_eq!(resp.id, NO_REQUEST_ID);
+        assert_eq!(resp.outcome, OutcomeCode::ShedOverCapacity);
+        assert!(resp.logits.is_empty());
+
+        let line = json_error_line(None, "bad line");
+        let err = parse_json_response(&line).unwrap_err().to_string();
+        assert!(err.contains("bad line"), "got: {}", err);
+    }
+}

@@ -22,6 +22,9 @@
 //!    no response is duplicated, per-client FIFO holds among served
 //!    requests, and supervisor restarts are visible in the report;
 //!    deadlines shed/NACK late work with reason codes.
+//! 6. **EWMA cold start (ISSUE 8):** a shard rebuild resets the deadline
+//!    predictor to the warmup seed, so a freshly restarted shard never
+//!    spuriously sheds its first request off a pre-crash latency spike.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -508,6 +511,11 @@ fn chaos_schedule_conserves_requests_and_keeps_fifo() {
                 OutcomeCode::TimedOut => timed_out += 1,
                 OutcomeCode::FailedPanic => failed += 1,
                 OutcomeCode::ShedShardDown | OutcomeCode::ShedDeadline => shed += 1,
+                // wire-layer refusals never consume an id, so one can
+                // never surface as a shard completion
+                OutcomeCode::ShedOverCapacity => {
+                    panic!("ShedOverCapacity is pre-admission only")
+                }
             }
         }
     }
@@ -624,5 +632,135 @@ fn deadlines_shed_late_work_with_reason_codes() {
     assert_eq!(report.timed_out, timed_out);
     assert_eq!(report.shed_deadline, shed);
     assert!(!report.is_clean(), "fault counters must be visible");
+    server.shutdown().unwrap();
+}
+
+/// ISSUE 8 regression: the EWMA deadline predictor must be cold-start
+/// safe across shard rebuilds. One 400 ms-late Ok completion inflates the
+/// EWMA far past a 40 ms budget; the shard panic that follows rebuilds
+/// the engine and must reset the predictor to the warmup seed — otherwise
+/// the freshly restarted shard spuriously `ShedDeadline`s its first
+/// request off a latency signal the rebuilt engine never exhibited.
+#[test]
+fn restarted_shard_does_not_spuriously_shed_first_request() {
+    let cfg = mlp_config("mlp_micro").unwrap();
+    let model = DiagModel::synth(cfg, 0.9, 404);
+    let sl = model.sample_len();
+    // ids assign in submission order: warmup takes 0..8, the late-Ok
+    // request is 8, the panic request is 9
+    let plan = Arc::new(
+        FaultPlan::parse("stall:shard=0,req=8,us=400000; panic:shard=0,req=9").unwrap(),
+    );
+    let mut server = ShardedServer::start_supervised(
+        Arc::new(model),
+        ShardPolicy {
+            shards: 1,
+            batch: BatchPolicy::new(1, 200).unwrap(),
+            max_outstanding: 4,
+            deadline_us: 40_000,
+            restart_backoff_us: 1_000,
+        },
+        Some(Arc::clone(&plan)),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(99);
+    let mut out: Vec<ShardCompletion> = Vec::new();
+    let submit = |server: &mut ShardedServer, rng: &mut Rng| -> Submit {
+        let mut x = workspace::take_uninit_f32(sl);
+        for v in x.iter_mut() {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        server.try_submit(0, x).unwrap()
+    };
+
+    // warmup: sequential requests give the EWMA a realistic baseline
+    for _ in 0..8 {
+        assert!(matches!(submit(&mut server, &mut rng), Submit::Ok(_)), "warmup refused");
+        while out.is_empty() {
+            server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
+        }
+        for c in out.drain(..) {
+            assert_eq!(c.outcome, OutcomeCode::Ok);
+            let shard = c.shard;
+            server.recycle_logits(shard, c.logits);
+        }
+    }
+    server.seed_ewma();
+    let seed_ewma = server.ewma_latency_us();
+    assert!(
+        seed_ewma > 0 && seed_ewma < 40_000,
+        "warmup EWMA must be a sane baseline, got {} us",
+        seed_ewma
+    );
+
+    // req 8 completes Ok but 400 ms late; its completion waits un-absorbed
+    assert!(matches!(submit(&mut server, &mut rng), Submit::Ok(_)), "stall req refused");
+    std::thread::sleep(Duration::from_millis(700));
+    // req 9 is admitted against the still-seeded predictor, then panics
+    // the shard: the supervisor NACKs it and rebuilds the engine
+    assert!(matches!(submit(&mut server, &mut rng), Submit::Ok(_)), "panic req refused");
+
+    // absorb both (FIFO): the late Ok inflates the EWMA to roughly
+    // (7*seed + 400000)/8 > 40 ms, then the panic NACK resets it
+    let (mut got_ok, mut got_panic) = (false, false);
+    let t0 = std::time::Instant::now();
+    while !(got_ok && got_panic) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "stall/panic completions never arrived"
+        );
+        server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
+        for c in out.drain(..) {
+            match c.outcome {
+                OutcomeCode::Ok => {
+                    got_ok = true;
+                    let shard = c.shard;
+                    server.recycle_logits(shard, c.logits);
+                }
+                OutcomeCode::FailedPanic => got_panic = true,
+                other => panic!("unexpected outcome {:?}", other),
+            }
+        }
+    }
+    assert_eq!(plan.fired_panics(), 1, "the injected panic must fire");
+    assert_eq!(
+        server.ewma_latency_us(),
+        seed_ewma,
+        "a shard rebuild must reset the deadline predictor to the warmup seed"
+    );
+
+    // the regression: the restarted shard's first request must not be
+    // ShedDeadline'd off the pre-crash latency spike. ShedShardDown is
+    // legitimate while the restart backoff runs — retry through it.
+    let retry_deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let c_id = loop {
+        match submit(&mut server, &mut rng) {
+            Submit::Ok(id) => break id,
+            Submit::Full(x) => workspace::give_f32(x),
+            Submit::Shed(code, x) => {
+                workspace::give_f32(x);
+                assert_ne!(
+                    code,
+                    OutcomeCode::ShedDeadline,
+                    "restarted shard spuriously shed its first request on a stale EWMA"
+                );
+            }
+        }
+        assert!(std::time::Instant::now() < retry_deadline, "shard never came back");
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    let t0 = std::time::Instant::now();
+    'served: loop {
+        assert!(t0.elapsed() < Duration::from_secs(10), "restarted shard never served");
+        server.poll_completions(&mut out, Some(Duration::from_millis(100))).unwrap();
+        for c in out.drain(..) {
+            assert_eq!(c.outcome, OutcomeCode::Ok, "post-restart request must serve");
+            assert_eq!(c.id, c_id);
+            let shard = c.shard;
+            server.recycle_logits(shard, c.logits);
+            break 'served;
+        }
+    }
     server.shutdown().unwrap();
 }

@@ -1,0 +1,309 @@
+//! Network front door (ISSUE 8): loopback TCP against [`NetServer`].
+//!
+//! 1. **Round trip** — binary and JSON clients each get every request
+//!    served with per-connection seq correlation; the wire ledger
+//!    balances and the drain path reports cleanly.
+//! 2. **Wire-codec hardening** — bad connection magic, a future protocol
+//!    version, an oversize length field, a truncated/corrupt (CRC) frame,
+//!    and a wrong-shape request each produce an actionable error frame;
+//!    only stream-desynchronizing errors close the connection, a
+//!    wrong-shape request leaves the same connection serving, and none of
+//!    them consume an admission permit or unbalance the ledger.
+//! 3. **Disconnect ledger** — a client that hangs up with a full window
+//!    in flight leaves `submitted == served + shed + timed_out + failed`
+//!    intact, journal receipts conservation-complete, and the journal
+//!    replayable with bitwise digest verification.
+//! 4. **Backpressure NACKs** — requests over the per-connection window
+//!    are refused with reason-coded `ShedOverCapacity` NACKs, visible on
+//!    both ends, with the ledger conserved.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+use dynadiag::artifact::Enc;
+use dynadiag::runtime::infer::{mlp_config, DiagModel};
+use dynadiag::serve::wire;
+use dynadiag::serve::{
+    replay, run_client, BatchPolicy, ClientSpec, Journal, NetOptions, NetReport, NetServer,
+    OutcomeCode, ShardPolicy, ShardedServer,
+};
+
+/// Bind a front door over a fresh synthetic-model server on an ephemeral
+/// loopback port. Returns the address, the external drain flag, and the
+/// server thread's handle.
+fn start_server(
+    model: DiagModel,
+    shards: usize,
+    conn_window: usize,
+    journal: Option<&std::path::Path>,
+) -> (String, Arc<AtomicBool>, JoinHandle<Result<NetReport>>) {
+    let mut server = ShardedServer::start(
+        model,
+        ShardPolicy {
+            shards,
+            batch: BatchPolicy::new(4, 200).unwrap(),
+            max_outstanding: 32,
+            ..ShardPolicy::default()
+        },
+    )
+    .unwrap();
+    if let Some(p) = journal {
+        server.attach_journal(Journal::create(p).unwrap());
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let net = NetServer::bind(
+        server,
+        "127.0.0.1:0",
+        NetOptions {
+            conn_window,
+            drain_on_idle: false,
+            shutdown: Some(stop.clone()),
+            obey_signals: false,
+            reset_after: 0,
+        },
+    )
+    .unwrap();
+    let addr = net.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || net.run());
+    (addr, stop, handle)
+}
+
+fn synth() -> DiagModel {
+    DiagModel::synth(mlp_config("mlp_micro").unwrap(), 0.9, 606)
+}
+
+#[test]
+fn binary_and_json_clients_round_trip() {
+    let model = synth();
+    let sl = model.sample_len();
+    let (addr, stop, handle) = start_server(model, 2, 0, None);
+
+    let rb = run_client(
+        &addr,
+        sl,
+        &ClientSpec { requests: 64, seed: 7, ..ClientSpec::default() },
+    )
+    .unwrap();
+    let rj = run_client(
+        &addr,
+        sl,
+        &ClientSpec { requests: 24, json: true, seed: 8, ..ClientSpec::default() },
+    )
+    .unwrap();
+    stop.store(true, Ordering::SeqCst);
+    let rep = handle.join().unwrap().unwrap();
+
+    assert_eq!(rb.ok, 64, "binary client: {}", rb.summary());
+    assert_eq!(rj.ok, 24, "json client: {}", rj.summary());
+    assert_eq!(rb.errors + rj.errors, 0);
+    assert!(rep.wire.conserved(), "ledger: {}", rep.summary());
+    assert_eq!(rep.wire.submitted, 88);
+    assert_eq!(rep.wire.served, 88);
+    assert_eq!(rep.wire.protocol_errors, 0);
+    assert_eq!(rep.wire.connections, 2);
+    assert!(rep.wire.drained, "the flag path must report as a graceful drain");
+}
+
+/// Read frames until an error frame arrives (skipping nothing: the next
+/// frame must *be* the error) and assert its message mentions `needle`.
+fn expect_error_frame(stream: &mut TcpStream, needle: &str) -> String {
+    let mut payload = Vec::new();
+    let kind = wire::read_frame(stream, &mut payload)
+        .expect("reading expected error frame")
+        .expect("connection closed before the error frame");
+    assert_eq!(kind, wire::FRAME_ERROR, "expected an error frame");
+    let (_seq, msg) = wire::decode_error(&payload).unwrap();
+    assert!(
+        msg.contains(needle),
+        "error message '{}' should mention '{}'",
+        msg,
+        needle
+    );
+    msg
+}
+
+fn expect_eof(stream: &mut TcpStream) {
+    let mut payload = Vec::new();
+    match wire::read_frame(stream, &mut payload) {
+        Ok(None) => {}
+        other => panic!("expected EOF after a fatal protocol error, got {:?}", other),
+    }
+}
+
+#[test]
+fn malformed_frames_fail_actionably_without_poisoning_the_server() {
+    let model = synth();
+    let sl = model.sample_len();
+    let (addr, stop, handle) = start_server(model, 1, 0, None);
+    let mut scratch = Enc::new();
+    let mut frame = Vec::new();
+
+    // (a) bad connection magic: error frame, then the connection closes
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"NOTDDW\x01").unwrap();
+        expect_error_frame(&mut s, "magic");
+        expect_eof(&mut s);
+    }
+    // (b) future protocol version: actionable upgrade error
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut pre = wire::preamble();
+        pre[6] = wire::WIRE_VERSION + 9;
+        s.write_all(&pre).unwrap();
+        expect_error_frame(&mut s, "version");
+        expect_eof(&mut s);
+    }
+    // (c) wrong-shape request: rejected with the expected feature count,
+    // and the SAME connection keeps serving (frame boundary intact)
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::preamble()).unwrap();
+        let bad = vec![0.5f32; sl + 3];
+        wire::encode_request(&mut scratch, &mut frame, 1, &bad);
+        s.write_all(&frame).unwrap();
+        expect_error_frame(&mut s, "expects");
+        let good = vec![0.25f32; sl];
+        wire::encode_request(&mut scratch, &mut frame, 2, &good);
+        s.write_all(&frame).unwrap();
+        let mut payload = Vec::new();
+        let kind = wire::read_frame(&mut s, &mut payload).unwrap().expect("response");
+        assert_eq!(kind, wire::FRAME_RESPONSE);
+        let resp = wire::decode_response(&payload).unwrap();
+        assert_eq!(resp.seq, 2);
+        assert_eq!(resp.outcome, OutcomeCode::Ok);
+        assert!(!resp.logits.is_empty());
+    }
+    // (d) corrupt frame (CRC mismatch): the stream is desynchronized —
+    // error frame, then the connection closes
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::preamble()).unwrap();
+        let good = vec![0.25f32; sl];
+        wire::encode_request(&mut scratch, &mut frame, 3, &good);
+        let mid = 5 + frame.len() / 2;
+        frame[mid] ^= 0x40;
+        s.write_all(&frame).unwrap();
+        expect_error_frame(&mut s, "CRC");
+        expect_eof(&mut s);
+    }
+    // (e) oversize length field: refused before any buffer is staged
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(&wire::preamble()).unwrap();
+        let mut head = vec![wire::FRAME_REQUEST];
+        head.extend_from_slice(&u32::MAX.to_le_bytes());
+        s.write_all(&head).unwrap();
+        expect_error_frame(&mut s, "cap");
+        expect_eof(&mut s);
+    }
+
+    // the server took all of that without losing the ability to serve
+    let r = run_client(
+        &addr,
+        sl,
+        &ClientSpec { requests: 16, seed: 9, ..ClientSpec::default() },
+    )
+    .unwrap();
+    stop.store(true, Ordering::SeqCst);
+    let rep = handle.join().unwrap().unwrap();
+
+    assert_eq!(r.ok, 16, "server must still serve after protocol abuse");
+    assert!(rep.wire.protocol_errors >= 5, "all five abuses must be counted");
+    // malformed frames never reach admission: only the well-formed
+    // requests were submitted, and every one of them was served — no
+    // permit leaked, the ledger balances
+    assert!(rep.wire.conserved(), "ledger: {}", rep.summary());
+    assert_eq!(rep.wire.submitted, 17);
+    assert_eq!(rep.wire.served, 17);
+}
+
+#[test]
+fn client_disconnect_mid_request_keeps_ledger_and_journal_balanced() {
+    let model = synth();
+    let sl = model.sample_len();
+    let jpath = std::env::temp_dir()
+        .join(format!("dynadiag_wire_net_{}.ddjnl", std::process::id()));
+    let (addr, stop, handle) = start_server(model.clone(), 2, 0, Some(&jpath));
+
+    // one client hangs up with a full window in flight; another completes
+    let a = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            run_client(
+                &addr,
+                sl,
+                &ClientSpec {
+                    requests: 64,
+                    disconnect_after: Some(32),
+                    seed: 7,
+                    ..ClientSpec::default()
+                },
+            )
+            .unwrap()
+        })
+    };
+    let b = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            run_client(&addr, sl, &ClientSpec { requests: 48, seed: 8, ..ClientSpec::default() })
+                .unwrap()
+        })
+    };
+    let ra = a.join().unwrap();
+    let rb = b.join().unwrap();
+    stop.store(true, Ordering::SeqCst);
+    let rep = handle.join().unwrap().unwrap();
+
+    assert!(ra.disconnected, "client A must have hung up mid-load");
+    assert_eq!(rb.ok, 48, "client B: {}", rb.summary());
+    assert!(
+        rep.wire.conserved(),
+        "ledger must balance through a disconnect: {}",
+        rep.summary()
+    );
+    // every admitted request has a receipt, disconnect or not
+    let jr = rep.journal_requests.expect("journal attached");
+    let jrc = rep.journal_receipts.expect("journal attached");
+    assert_eq!(jr, rep.wire.submitted, "every wire submission was admitted here");
+    assert_eq!(jr, jrc, "receipts must be conservation-complete through the disconnect");
+    // and the journal replays with bitwise digest verification
+    let rr = replay(&jpath, &model).unwrap();
+    assert!(rr.ok(), "replay after a disconnect: {}", rr.summary());
+    std::fs::remove_file(&jpath).ok();
+}
+
+#[test]
+fn over_window_requests_get_reason_coded_nacks() {
+    let model = synth();
+    let sl = model.sample_len();
+    // per-connection window of 2 against a client driving 8 in flight
+    let (addr, stop, handle) = start_server(model, 1, 2, None);
+    let r = run_client(
+        &addr,
+        sl,
+        &ClientSpec { requests: 256, seed: 11, ..ClientSpec::default() },
+    )
+    .unwrap();
+    stop.store(true, Ordering::SeqCst);
+    let rep = handle.join().unwrap().unwrap();
+
+    assert!(rep.wire.conserved(), "ledger: {}", rep.summary());
+    assert!(
+        rep.wire.shed_over_capacity > 0,
+        "window 8 against conn_window 2 must trip over-capacity NACKs: {}",
+        rep.summary()
+    );
+    assert_eq!(rep.wire.shed, rep.wire.shed_over_capacity, "only capacity sheds here");
+    assert_eq!(rep.wire.timed_out + rep.wire.failed, 0);
+    // both ends agree on the split
+    assert_eq!(r.submitted, 256);
+    assert_eq!(r.ok, rep.wire.served);
+    assert_eq!(r.shed, rep.wire.shed_over_capacity);
+    assert_eq!(r.ok + r.shed, 256, "every request resolved: {}", r.summary());
+    assert!(r.ok > 0, "some requests must still serve under backpressure");
+}
