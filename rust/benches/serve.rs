@@ -31,6 +31,15 @@
 //!    p99 at matched concurrency, and ledger conservation
 //!    (`submitted == served + shed + timed_out + failed`) through a
 //!    mid-load client disconnect and a mid-load drain trigger.
+//! 7. **Trace overhead** — an identical sharded cell rerun with the
+//!    full-rate span tracer attached must keep p99 within
+//!    `DYNADIAG_TRACE_P99_FACTOR` (default 1.15x, + 0.25 ms absolute
+//!    slack against scheduler noise) of the untraced window, export one
+//!    span per request with zero ring drops, and keep the zero-alloc
+//!    steady state.
+//! 8. **Scrape** — in-band stats frames and an HTTP GET against
+//!    `--metrics-addr` must all succeed under live wire load, carry the
+//!    conservation counters, and be counted by the server's wire ledger.
 //!
 //! Set `DYNADIAG_BENCH_FAST=1` (CI does) for a trimmed sweep with the
 //! same JSON schema.
@@ -39,12 +48,13 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use dynadiag::obs::TraceExporter;
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::native::workspace;
 use dynadiag::serve::{
-    drive_load, drive_load_sharded, run_client, BatchPolicy, ClientReport, ClientSpec,
-    Completion, Journal, LoadSpec, ManualClock, NetOptions, NetReport, NetServer, ServeEngine,
-    ShardCompletion, ShardPolicy, ShardedServer, Submit,
+    drive_load, drive_load_sharded, run_client, scrape_metrics, BatchPolicy, ClientReport,
+    ClientSpec, Completion, Journal, LoadSpec, ManualClock, NetOptions, NetReport, NetServer,
+    ServeEngine, ShardCompletion, ShardPolicy, ShardedServer, Submit,
 };
 use dynadiag::util::json::Json;
 use dynadiag::util::rng::Rng;
@@ -184,6 +194,7 @@ fn wire_cell(
             shutdown: Some(stop.clone()),
             obey_signals: false,
             reset_after,
+            metrics_addr: None,
         },
     )
     .unwrap();
@@ -512,6 +523,123 @@ fn main() {
         Json::Obj(cell)
     };
 
+    // -- trace-overhead cell ---------------------------------------------
+    // Same server, same offered load, tracing off then on: attaching the
+    // fixed-slot span rings + the full-rate JSONL exporter must not move
+    // p99 past DYNADIAG_TRACE_P99_FACTOR (default 1.15x, + 0.25 ms
+    // absolute slack against scheduler noise on sub-millisecond
+    // baselines), must export exactly one span per measured request with
+    // zero ring drops, and must keep the zero-alloc steady state.
+    println!("\n== trace overhead: full-rate span export on vs off ==");
+    let trace_factor: f64 = std::env::var("DYNADIAG_TRACE_P99_FACTOR")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.15);
+    let mut trace_failed = false;
+    let trace_cell = {
+        let cfg = mlp_config(shard_model).unwrap();
+        let dm = DiagModel::synth(cfg, 0.9, 8_300);
+        let n_shards = 2usize;
+        let cap = (4 * shard_ceiling * n_shards).max(32);
+        let mut server = ShardedServer::start(
+            dm,
+            ShardPolicy {
+                shards: n_shards,
+                batch: BatchPolicy::new(shard_ceiling, 200).unwrap(),
+                max_outstanding: cap,
+                ..ShardPolicy::default()
+            },
+        )
+        .unwrap();
+        let trace_requests = if fast { 256 } else { 1024 };
+        let warm = LoadSpec { requests: 2 * cap, rate_rps: 0.0, max_outstanding: cap, seed: 5 };
+        drive_load_sharded(&mut server, &warm, 4 * n_shards, None, None).unwrap();
+        let spec = LoadSpec {
+            requests: trace_requests,
+            rate_rps: 0.0,
+            max_outstanding: cap,
+            seed: 11,
+        };
+        // window A: tracing off
+        server.reset_metrics();
+        let off = drive_load_sharded(&mut server, &spec, 4 * n_shards, None, None).unwrap();
+        // window B: identical load with the tracer attached at rate 1.0
+        // (head-samples every span — the worst-case export volume)
+        let tpath = std::env::temp_dir().join(format!(
+            "dynadiag_serve_bench_traces_{}.jsonl",
+            std::process::id()
+        ));
+        server.attach_tracer(TraceExporter::create(&tpath, 1.0).expect("create bench tracer"));
+        server.reset_metrics();
+        let on = drive_load_sharded(&mut server, &spec, 4 * n_shards, None, None).unwrap();
+        let per_shard = server.shard_stats().unwrap();
+        let shard_fresh: Vec<usize> = per_shard.iter().map(|s| s.fresh_allocs).collect();
+        let dropped = server.metrics().traces_dropped.get();
+        let (sampled, outliers) =
+            server.take_tracer().expect("attached above").finish().expect("finish tracer");
+        server.shutdown().unwrap();
+        let _ = std::fs::remove_file(&tpath);
+        let trace_p99_bound = trace_factor * off.p99_ms + 0.25;
+        println!(
+            "{:<10} shards {:>2} [trace]: p99 off {:.3} ms / on {:.3} ms \
+             (gate {:.2}x + 0.25 ms = {:.3} ms), {} spans exported, {} dropped, fresh/shard {:?}",
+            shard_model,
+            n_shards,
+            off.p99_ms,
+            on.p99_ms,
+            trace_factor,
+            trace_p99_bound,
+            sampled + outliers,
+            dropped,
+            shard_fresh
+        );
+        if on.p99_ms > trace_p99_bound {
+            eprintln!(
+                "tracing moved p99 from {:.3} ms to {:.3} ms, past the {:.3} ms overhead gate",
+                off.p99_ms, on.p99_ms, trace_p99_bound
+            );
+            trace_failed = true;
+        }
+        if shard_fresh.iter().any(|&f| f > 0) || on.fresh_allocs > 0 {
+            eprintln!("tracing broke the zero-alloc steady state: fresh/shard {:?}", shard_fresh);
+            trace_failed = true;
+        }
+        if dropped > 0 || (sampled as usize) < trace_requests {
+            eprintln!(
+                "tracer exported {} spans (+{} outliers) with {} ring drops for {} requests",
+                sampled, outliers, dropped, trace_requests
+            );
+            trace_failed = true;
+        }
+        if !off.is_clean() || !on.is_clean() {
+            eprintln!("unclean trace-overhead cell: {} / {}", off.summary(), on.summary());
+            clean_failed = true;
+        }
+        Json::obj(vec![
+            ("measured", Json::Bool(true)),
+            ("model", Json::Str(shard_model.to_string())),
+            ("shards", Json::Num(n_shards as f64)),
+            ("requests", Json::Num(trace_requests as f64)),
+            ("sample_rate", Json::Num(1.0)),
+            ("p99_gate_factor", Json::Num(trace_factor)),
+            ("p99_off_ms", Json::Num(off.p99_ms)),
+            ("p99_on_ms", Json::Num(on.p99_ms)),
+            (
+                "p99_factor",
+                if off.p99_ms > 0.0 { Json::Num(on.p99_ms / off.p99_ms) } else { Json::Null },
+            ),
+            ("throughput_off_rps", Json::Num(off.throughput_rps)),
+            ("throughput_on_rps", Json::Num(on.throughput_rps)),
+            ("spans_exported", Json::Num((sampled + outliers) as f64)),
+            ("spans_dropped", Json::Num(dropped as f64)),
+            ("fresh_allocs", Json::Num(on.fresh_allocs as f64)),
+            (
+                "fresh_per_shard",
+                Json::Arr(shard_fresh.iter().map(|&f| Json::Num(f as f64)).collect()),
+            ),
+        ])
+    };
+
     // sharded parity: bitwise identical to sequential at every shard count
     println!("\n== sharded parity: N-shard serving == sequential (bitwise) ==");
     let mut shard_parity_failed = false;
@@ -713,10 +841,140 @@ fn main() {
         ("cells", Json::Arr(wire_cells)),
     ]);
 
+    // -- scrape cell -----------------------------------------------------
+    // The telemetry plane under live wire load: one loopback client keeps
+    // the front door busy while the bench issues in-band stats frames on
+    // fresh connections and one HTTP GET against the --metrics-addr
+    // sidecar listener. Every scrape must succeed, carry the conservation
+    // counters, and be counted by the server's wire ledger.
+    println!("\n== scrape: stats frames + HTTP exposition under load ==");
+    let mut scrape_failed = false;
+    let scrape_cell = {
+        let cfg = mlp_config("mlp_micro").unwrap();
+        let dm = DiagModel::synth(cfg, 0.9, 8_400);
+        let sample_len = dm.sample_len();
+        let n_shards = 2usize;
+        let cap = (4 * 8 * n_shards).max(32);
+        let mut server = ShardedServer::start(
+            dm,
+            ShardPolicy {
+                shards: n_shards,
+                batch: BatchPolicy::new(8, 200).unwrap(),
+                max_outstanding: cap,
+                ..ShardPolicy::default()
+            },
+        )
+        .unwrap();
+        let warm = LoadSpec { requests: 2 * cap, rate_rps: 0.0, max_outstanding: cap, seed: 5 };
+        drive_load_sharded(&mut server, &warm, 4 * n_shards, None, None).unwrap();
+        server.seed_ewma();
+        server.reset_metrics();
+        let stop = Arc::new(AtomicBool::new(false));
+        let net = NetServer::bind(
+            server,
+            "127.0.0.1:0",
+            NetOptions {
+                conn_window: 0,
+                drain_on_idle: false,
+                shutdown: Some(stop.clone()),
+                obey_signals: false,
+                reset_after: 0,
+                metrics_addr: Some("127.0.0.1:0".to_string()),
+            },
+        )
+        .unwrap();
+        let addr = net.local_addr().unwrap().to_string();
+        let maddr = net.metrics_local_addr().expect("metrics listener bound");
+        let server_h = std::thread::spawn(move || net.run());
+
+        let scrape_requests = if fast { 128 } else { 256 };
+        let spec = ClientSpec { requests: scrape_requests, seed: 31, ..ClientSpec::default() };
+        let caddr = addr.clone();
+        let client_h = std::thread::spawn(move || run_client(&caddr, sample_len, &spec));
+
+        let n_scrapes = 8usize;
+        let mut scrape_us: Vec<u64> = Vec::new();
+        let mut exposition_bytes = 0usize;
+        for _ in 0..n_scrapes {
+            let t0 = std::time::Instant::now();
+            match scrape_metrics(&addr) {
+                Ok(text) => {
+                    scrape_us.push(t0.elapsed().as_micros() as u64);
+                    exposition_bytes = text.len();
+                    if !text.contains("dynadiag_requests_submitted_total")
+                        || !text.contains("dynadiag_request_latency_us_count")
+                    {
+                        eprintln!("scrape exposition is missing conservation counters");
+                        scrape_failed = true;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("in-band scrape failed: {}", e);
+                    scrape_failed = true;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let http_ok = (|| -> std::io::Result<bool> {
+            use std::io::{Read, Write};
+            let mut s = std::net::TcpStream::connect(maddr)?;
+            s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n")?;
+            let mut buf = String::new();
+            s.read_to_string(&mut buf)?;
+            Ok(buf.starts_with("HTTP/1.0 200 OK\r\n")
+                && buf.contains("dynadiag_requests_submitted_total"))
+        })()
+        .unwrap_or(false);
+        if !http_ok {
+            eprintln!("HTTP scrape against --metrics-addr failed");
+            scrape_failed = true;
+        }
+
+        let clients = [client_h.join().expect("client thread").expect("scrape-cell client")];
+        stop.store(true, Ordering::SeqCst);
+        let net_report = server_h.join().expect("server thread").expect("scrape-cell server");
+        let want_scrapes = (n_scrapes + 1) as u64;
+        if net_report.wire.scrapes < want_scrapes {
+            eprintln!(
+                "server counted {} scrapes, expected at least {}",
+                net_report.wire.scrapes, want_scrapes
+            );
+            scrape_failed = true;
+        }
+        if !net_report.wire.conserved() {
+            eprintln!("scrape cell wire ledger imbalance");
+            scrape_failed = true;
+        }
+        scrape_us.sort_unstable();
+        let scrape_p50_us = scrape_us.get(scrape_us.len() / 2).copied().unwrap_or(0);
+        let scrape_max_us = scrape_us.last().copied().unwrap_or(0);
+        println!(
+            "  {} in-band scrapes (p50 {} us, max {} us) + 1 http GET, {} exposition bytes, \
+             server counted {}",
+            scrape_us.len(),
+            scrape_p50_us,
+            scrape_max_us,
+            exposition_bytes,
+            net_report.wire.scrapes
+        );
+        Json::obj(vec![
+            ("measured", Json::Bool(true)),
+            ("in_band_scrapes", Json::Num(scrape_us.len() as f64)),
+            ("http_scrapes", Json::Num(if http_ok { 1.0 } else { 0.0 })),
+            ("scrape_p50_us", Json::Num(scrape_p50_us as f64)),
+            ("scrape_max_us", Json::Num(scrape_max_us as f64)),
+            ("exposition_bytes", Json::Num(exposition_bytes as f64)),
+            ("server_counted_scrapes", Json::Num(net_report.wire.scrapes as f64)),
+            ("net", net_report.to_json()),
+            ("clients", Json::Arr(clients.iter().map(|c| c.to_json()).collect())),
+        ])
+    };
+
     let out_dir = std::path::PathBuf::from("results");
     std::fs::create_dir_all(&out_dir).expect("mkdir results");
     let json = Json::obj(vec![
         ("bench", Json::Str("serve".to_string())),
+        ("schema_version", Json::Num(5.0)),
         ("fast", Json::Bool(fast)),
         ("threads", Json::Num(dynadiag::kernels::pool::num_threads() as f64)),
         (
@@ -728,6 +986,8 @@ fn main() {
         ("shard_sweep", Json::Arr(shard_cells)),
         ("journaled", journal_cell),
         ("wire_sweep", wire_sweep_json),
+        ("trace_overhead", trace_cell),
+        ("scrape", scrape_cell),
         (
             "shard_speedup_2x",
             speedup_2x.map(Json::Num).unwrap_or(Json::Null),
@@ -792,10 +1052,21 @@ fn main() {
         eprintln!("FAIL: the disconnect+drain cell lost receipts or did not drain gracefully");
         std::process::exit(1);
     }
+    if trace_failed {
+        eprintln!(
+            "FAIL: the trace-overhead cell broke the p99, span-export, or zero-alloc contract"
+        );
+        std::process::exit(1);
+    }
+    if scrape_failed {
+        eprintln!("FAIL: a metrics scrape failed, was miscounted, or unbalanced the wire ledger");
+        std::process::exit(1);
+    }
     println!(
         "PASS: parity bitwise (single + sharded), zero steady-state allocations per shard \
-         (journaling included), clean counters on the no-fault sweep, p99 under {} ms, \
-         wire ledger conserved with warm connections allocation-free",
-        p99_bound_ms
+         (journaling and tracing included), clean counters on the no-fault sweep, p99 under \
+         {} ms, wire ledger conserved with warm connections allocation-free, trace overhead \
+         within {:.2}x, telemetry scrapes answered under load",
+        p99_bound_ms, trace_factor
     );
 }

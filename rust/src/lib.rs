@@ -75,6 +75,7 @@ pub mod dst;
 pub mod experiments;
 pub mod graph;
 pub mod kernels;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod serve;

@@ -6,6 +6,8 @@
 //!   export      train (or synthesize) a model and write a .ddiag artifact
 //!   serve       online inference with dynamic micro-batching; --model
 //!               accepts a .ddiag artifact path (serve-from-disk + hot reload)
+//!   obs         observability tooling: `obs report traces.jsonl` renders a
+//!               per-stage latency table from a --trace-out dump
 //!   experiment  regenerate a paper table/figure (table1, fig4, ... or all)
 //!   analyze     small-world / BCSR analysis of a trained topology
 //!   perfmodel   print A100 speedup projections (Fig 1 / Fig 4 axes)
@@ -40,11 +42,12 @@ use dynadiag::perfmodel::vit::{
 };
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::runtime::{BackendKind, Session};
+use dynadiag::obs::{report_from_file, TraceExporter};
 use dynadiag::serve::{
     drive_load, drive_load_reloading, drive_load_sharded, install_signal_drain, replay,
-    run_client, BatchPolicy, ClientSpec, FaultPlan, Journal, LoadSpec, ModelWatcher,
-    NetOptions, NetServer, ReloadPlan, ServeEngine, ShardPolicy, ShardReloadPlan,
-    ShardedServer,
+    run_client, scrape_metrics, BatchPolicy, ClientSpec, FaultPlan, Journal, LoadSpec,
+    ModelWatcher, NetOptions, NetServer, ReloadPlan, ServeEngine, ShardPolicy,
+    ShardReloadPlan, ShardedServer,
 };
 use dynadiag::train::{CheckpointSpec, Trainer};
 use dynadiag::util::json::Json;
@@ -75,6 +78,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "export" => cmd_export(&args),
         "serve" => cmd_serve(&args),
+        "obs" => cmd_obs(&args),
         "experiment" => experiments::run_from_cli(&args),
         "analyze" => cmd_analyze(&args),
         "perfmodel" => cmd_perfmodel(&args),
@@ -108,9 +112,11 @@ COMMANDS
                [--requests N] [--train-steps N] [--seed K] [--out serve.json]
                [--swap-after N --swap-to other.ddiag] [--deadline-us U]
                [--poll-ms MS] [--fault SPEC] [--journal j.ddjnl]
-               [--replay j.ddjnl] [--listen ADDR [--drain] [--conn-window W]
-               [--reset-after N]] [--connect ADDR [--window W] [--json]
-               [--disconnect-after N]]
+               [--replay j.ddjnl] [--trace-out t.jsonl [--trace-sample R]]
+               [--progress-every SECS] [--listen ADDR [--drain]
+               [--conn-window W] [--reset-after N] [--metrics-addr ADDR]]
+               [--connect ADDR [--window W] [--json]
+               [--disconnect-after N] [--scrape]]
                online inference with dynamic micro-batching; --shards N runs
                N engine shards on N supervised threads (shared weights,
                global admission cap, FIFO per client; a panicked shard is
@@ -133,7 +139,17 @@ COMMANDS
                exits 0, --drain also drains once all clients disconnect);
                --connect ADDR drives a listening server as a closed/open-loop
                wire client (--window outstanding per connection, --json for
-               the JSON codec, --disconnect-after N hangs up mid-load)
+               the JSON codec, --disconnect-after N hangs up mid-load,
+               --scrape prints the server's metrics exposition and exits);
+               --trace-out records one span per request (admission ->
+               queue -> assemble -> execute -> writeback) as JSONL,
+               head-sampled at --trace-sample R (default 1.0) plus a
+               slow-outlier reservoir; --progress-every SECS prints a
+               one-line heartbeat to stderr; --metrics-addr ADDR exposes
+               the live registry as an HTTP text exposition (also
+               scrapeable in-band via a stats wire frame)
+  obs          report <traces.jsonl>          per-stage latency table from a
+               --trace-out dump (use --out to also write it somewhere)
   experiment   <table1|table2|table8|table12|...|fig1|fig4..fig9|all> [--steps N] [--seeds K]
   analyze      --model M [--sparsity S]      small-world & BCSR analysis
   perfmodel    [--sparsity S]                A100 speedup projections
@@ -282,6 +298,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let deadline_us = args.usize_opt("deadline-us")?.unwrap_or(0) as u64;
     let poll_ms = args.usize_opt("poll-ms")?.unwrap_or(0) as u64;
+    let trace_out = args.opt("trace-out").map(str::to_string);
+    let trace_sample: f64 = args.opt("trace-sample").unwrap_or("1").parse()?;
+    let progress_every = args.usize_opt("progress-every")?.unwrap_or(0) as u64;
     // CLI --fault wins over the DYNADIAG_FAULTS env spec
     let faults = match args.opt("fault") {
         Some(s) => Some(FaultPlan::parse(s)?),
@@ -308,6 +327,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // JSON codec). The model is built only to learn the sample length the
     // server expects.
     if let Some(addr) = args.opt("connect") {
+        // --scrape: fetch the server's metrics exposition and exit (no
+        // model needed — stats frames carry no request payload)
+        if args.flag("scrape") || args.opt("scrape").is_some() {
+            let text = scrape_metrics(addr)?;
+            print!("{}", text);
+            if let Some(out) = args.opt("out") {
+                std::fs::write(out, &text)?;
+                eprintln!("wrote {}", out);
+            }
+            return Ok(());
+        }
         let (label, dm) = build_serve_model(args)?;
         let spec = ClientSpec {
             requests,
@@ -372,6 +402,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(p) = args.opt("journal") {
             server.attach_journal(Journal::create(Path::new(p))?);
         }
+        if let Some(p) = &trace_out {
+            server.attach_tracer(TraceExporter::create(Path::new(p), trace_sample)?);
+        }
+        if progress_every > 0 {
+            server.set_progress_every(progress_every);
+        }
         install_signal_drain();
         let net = NetServer::bind(
             server,
@@ -382,6 +418,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 shutdown: None,
                 obey_signals: true,
                 reset_after: args.usize_opt("reset-after")?.unwrap_or(0) as u64,
+                metrics_addr: args.opt("metrics-addr").map(str::to_string),
             },
         )?;
         eprintln!(
@@ -394,6 +431,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_wait_us,
             cap
         );
+        if let Some(m) = net.metrics_local_addr() {
+            eprintln!("metrics: scrape http://{} (or an in-band stats frame)", m);
+        }
         let report = net.run()?;
         println!("{}", report.summary());
         if let Some(out) = args.opt("out") {
@@ -495,8 +535,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Deadlines, fault injection, and journaling are features of the
     // sharded runtime, so any of them routes through it even at 1 shard.
     let journal_path = args.opt("journal").map(str::to_string);
-    let sharded =
-        shards > 1 || deadline_us > 0 || faults.is_some() || journal_path.is_some();
+    // tracing, heartbeats, and the metrics registry are features of the
+    // sharded runtime too
+    let sharded = shards > 1
+        || deadline_us > 0
+        || faults.is_some()
+        || journal_path.is_some()
+        || trace_out.is_some()
+        || progress_every > 0;
     let report = if sharded {
         let mut server = ShardedServer::start_supervised(
             Arc::new(dm),
@@ -521,6 +567,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if let Some(p) = &journal_path {
             server.attach_journal(Journal::create(Path::new(p))?);
         }
+        // attach the tracer after the warm window, so the dump covers
+        // only the measured run (attaching discards whatever spans the
+        // warm window left in the rings, along with their drop counts)
+        if let Some(p) = &trace_out {
+            server.attach_tracer(TraceExporter::create(Path::new(p), trace_sample)?);
+        }
+        if progress_every > 0 {
+            server.set_progress_every(progress_every);
+        }
         let plan = reload_plan
             .map(|p| ShardReloadPlan { after_requests: p.after_requests, model: p.model });
         let report = drive_load_sharded(&mut server, &spec, clients, plan, watcher.as_mut())?;
@@ -531,6 +586,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 reqs,
                 receipts,
                 journal_path.as_deref().unwrap_or("?")
+            );
+        }
+        if let Some(t) = server.take_tracer() {
+            let (head, tail) = t.finish()?;
+            eprintln!(
+                "traces: {} sampled + {} slow-outlier span(s) -> {} \
+                 (render with: dynadiag obs report)",
+                head,
+                tail,
+                trace_out.as_deref().unwrap_or("?")
             );
         }
         server.shutdown()?;
@@ -556,6 +621,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eprintln!("wrote {}", out);
     }
     Ok(())
+}
+
+fn cmd_obs(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("report") => {
+            let path = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .ok_or_else(|| {
+                    anyhow!("obs report needs a trace file: dynadiag obs report traces.jsonl")
+                })?;
+            let report = report_from_file(Path::new(path))?;
+            let table = report.render();
+            print!("{}", table);
+            if let Some(out) = args.opt("out") {
+                std::fs::write(out, &table)?;
+                eprintln!("wrote {}", out);
+            }
+            Ok(())
+        }
+        Some(other) => bail!(
+            "unknown obs subcommand '{}'; try: dynadiag obs report <traces.jsonl>",
+            other
+        ),
+        None => bail!("obs needs a subcommand: dynadiag obs report <traces.jsonl>"),
+    }
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {

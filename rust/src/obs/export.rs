@@ -1,0 +1,195 @@
+//! `serve --trace-out` — the sampled JSONL span exporter.
+//!
+//! The exporter sits on the driver thread, downstream of the per-shard
+//! [`TraceRing`]s: shards record every span for free, the driver drains
+//! and this exporter decides what reaches disk. Two channels:
+//!
+//! * **Head sampling** — [`sampled`] keeps a deterministic `rate`
+//!   fraction of spans by trace id, so the same request is kept (or not)
+//!   by every observer and repeated runs export the same ids.
+//! * **Slow-outlier reservoir** — the slowest `reservoir` unsampled
+//!   spans (by end-to-end total) are retained and appended at
+//!   [`TraceExporter::finish`], so the tail that motivates tracing
+//!   survives even aggressive sampling rates.
+//!
+//! Writes go through a `BufWriter` with a reused line buffer; a write
+//! error is returned to the caller (the server logs it and detaches the
+//! exporter rather than failing the serving path).
+//!
+//! [`TraceRing`]: super::trace::TraceRing
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::trace::{sampled, TraceSpan};
+
+/// Default slow-outlier reservoir size.
+pub const DEFAULT_RESERVOIR: usize = 32;
+
+/// Streaming span exporter: head-sampled JSONL plus a slow-outlier
+/// reservoir flushed at the end of the run.
+pub struct TraceExporter {
+    out: BufWriter<File>,
+    rate: f64,
+    reservoir: Vec<TraceSpan>,
+    reservoir_cap: usize,
+    exported: u64,
+    line: String,
+}
+
+impl TraceExporter {
+    /// Create `path` (truncating) and export at head-sampling `rate`
+    /// (clamped to [0, 1]; 1.0 keeps every span) with the default
+    /// reservoir size.
+    pub fn create(path: &Path, rate: f64) -> Result<TraceExporter> {
+        let f = File::create(path)
+            .with_context(|| format!("creating trace output {}", path.display()))?;
+        Ok(TraceExporter {
+            out: BufWriter::new(f),
+            rate: rate.clamp(0.0, 1.0),
+            reservoir: Vec::with_capacity(DEFAULT_RESERVOIR),
+            reservoir_cap: DEFAULT_RESERVOIR,
+            exported: 0,
+            line: String::with_capacity(256),
+        })
+    }
+
+    /// Override the slow-outlier reservoir size (0 disables it).
+    pub fn with_reservoir(mut self, cap: usize) -> TraceExporter {
+        self.reservoir_cap = cap;
+        self.reservoir.truncate(cap);
+        self
+    }
+
+    /// Spans written to the file so far (excludes the pending reservoir).
+    pub fn exported(&self) -> u64 {
+        self.exported
+    }
+
+    fn write_span(&mut self, span: &TraceSpan) -> Result<()> {
+        self.line.clear();
+        self.line.push_str(&span.to_json().to_string());
+        self.line.push('\n');
+        self.out.write_all(self.line.as_bytes()).context("writing trace span")?;
+        self.exported += 1;
+        Ok(())
+    }
+
+    /// Offer one drained span: head-sampled spans are written now,
+    /// everything else competes for the slow-outlier reservoir. Returns
+    /// whether the span was written immediately.
+    pub fn observe(&mut self, span: &TraceSpan) -> Result<bool> {
+        if sampled(span.trace_id, self.rate) {
+            self.write_span(span)?;
+            return Ok(true);
+        }
+        if self.reservoir_cap > 0 {
+            if self.reservoir.len() < self.reservoir_cap {
+                self.reservoir.push(*span);
+            } else if let Some((i, slowest_min)) = self
+                .reservoir
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.total_us())
+                .map(|(i, s)| (i, s.total_us()))
+            {
+                if span.total_us() > slowest_min {
+                    self.reservoir[i] = *span;
+                }
+            }
+        }
+        Ok(false)
+    }
+
+    /// Append the reservoir (slowest first) and flush. Returns
+    /// `(sampled_spans, reservoir_spans)` written over the exporter's
+    /// lifetime.
+    pub fn finish(mut self) -> Result<(u64, u64)> {
+        let head = self.exported;
+        let mut tail = std::mem::take(&mut self.reservoir);
+        tail.sort_by_key(|s| std::cmp::Reverse(s.total_us()));
+        for s in &tail {
+            self.write_span(s)?;
+        }
+        self.out.flush().context("flushing trace output")?;
+        Ok((head, tail.len() as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::report::report_from_file;
+    use crate::obs::trace::trace_id;
+
+    fn span(i: u64, total_us: u64) -> TraceSpan {
+        let mut s = TraceSpan {
+            trace_id: trace_id(3, i),
+            client: i,
+            t_admit_us: 1_000 * i,
+            t_ship_us: 1_000 * i + total_us,
+            ..TraceSpan::default()
+        };
+        s.normalize();
+        s
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dynadiag_{}_{}.jsonl", name, std::process::id()))
+    }
+
+    #[test]
+    fn rate_one_exports_everything_in_order() {
+        let path = tmp("export_all");
+        let mut e = TraceExporter::create(&path, 1.0).unwrap();
+        for i in 0..20 {
+            assert!(e.observe(&span(i, 50)).unwrap());
+        }
+        assert_eq!(e.exported(), 20);
+        let (head, tail) = e.finish().unwrap();
+        assert_eq!((head, tail), (20, 0), "nothing left for the reservoir");
+        let r = report_from_file(&path).unwrap();
+        assert_eq!(r.spans, 20);
+        assert_eq!(r.distinct_trace_ids(), 20);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reservoir_keeps_the_slowest_unsampled_spans() {
+        let path = tmp("export_tail");
+        // rate 0: nothing head-sampled, only the reservoir survives
+        let mut e = TraceExporter::create(&path, 0.0).unwrap().with_reservoir(4);
+        for i in 0..100 {
+            // totals 10..1000; the slowest four are 970, 980, 990, 1000
+            assert!(!e.observe(&span(i, 10 * (i + 1))).unwrap());
+        }
+        let (head, tail) = e.finish().unwrap();
+        assert_eq!((head, tail), (0, 4));
+        let r = report_from_file(&path).unwrap();
+        assert_eq!(r.spans, 4);
+        assert_eq!(r.stage_hist(4).min_us(), 970, "reservoir must keep the slowest");
+        assert_eq!(r.stage_hist(4).max_us(), 1000);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sampling_rate_is_roughly_honored() {
+        let path = tmp("export_rate");
+        let mut e = TraceExporter::create(&path, 0.25).unwrap().with_reservoir(0);
+        let mut written = 0u64;
+        for i in 0..4_000 {
+            if e.observe(&span(i, 100)).unwrap() {
+                written += 1;
+            }
+        }
+        let (head, tail) = e.finish().unwrap();
+        assert_eq!(head, written);
+        assert_eq!(tail, 0, "reservoir disabled");
+        let frac = written as f64 / 4_000.0;
+        assert!((frac - 0.25).abs() < 0.05, "sampled {:.3}", frac);
+        std::fs::remove_file(&path).ok();
+    }
+}

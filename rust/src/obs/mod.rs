@@ -1,0 +1,40 @@
+//! Observability: the live metrics registry + zero-alloc request tracing
+//! (ISSUE 9).
+//!
+//! Two complementary planes, both designed so turning them on does not
+//! perturb what they measure:
+//!
+//! * **Metrics** ([`Registry`]) — named monotonic counters, gauges, and
+//!   log-bucket histograms (the exact bucket layout of
+//!   `serve::LatencyHistogram`, mirrored in atomics). Handles are
+//!   registered once by name and updated lock-free via `Relaxed` atomics
+//!   on hot paths; the registry lock is taken only at registration and
+//!   render time. [`Registry::render`] emits a Prometheus-style text
+//!   exposition (`name{label="v"} value`, sorted lines, escaped label
+//!   values, integer-only values — never NaN/Inf) that the network front
+//!   door serves over a stats wire frame and an optional HTTP scrape
+//!   listener (`serve --metrics-addr`).
+//! * **Traces** ([`trace::TraceSpan`] / [`trace::TraceRing`]) — one
+//!   fixed-slot span per request (admission → queue → batch assembly →
+//!   kernel execute → writeback) stamped with the serving `Clock`,
+//!   recorded into preallocated per-shard SPSC rings. The producer never
+//!   allocates and never blocks: a full ring overwrites its oldest slot
+//!   and the loss is counted (`traces_dropped`), so tracing preserves the
+//!   per-shard zero-fresh-allocation steady state. The driver drains the
+//!   rings and exports head-sampled spans (plus a reservoir of slow
+//!   outliers) as JSON lines (`serve --trace-out`), which `dynadiag obs
+//!   report` renders into a per-stage latency table.
+//!
+//! Span timestamps come from the existing `serve::Clock`, so traces are
+//! deterministic under `ManualClock`; the journal's receipts carry the
+//! same `trace_id`, so a replay can join journal records to trace dumps.
+
+pub mod export;
+pub mod registry;
+pub mod report;
+pub mod trace;
+
+pub use export::TraceExporter;
+pub use registry::{metric_key, AtomicHistogram, Counter, Gauge, Histogram, Registry};
+pub use report::{report_from_file, TraceReport};
+pub use trace::{sampled, trace_id, TraceRing, TraceSpan, DEFAULT_RING_CAPACITY};

@@ -1,0 +1,423 @@
+//! The metrics registry: named counters / gauges / histograms with
+//! lock-free hot-path updates and a sorted, escaped text exposition.
+//!
+//! Design rules:
+//!
+//! * A metric is registered **by full exposition key** — the metric name
+//!   plus its label set, e.g. `dynadiag_shard_restarts_total{shard="0"}`
+//!   (build keys with [`metric_key`], which sanitizes names and escapes
+//!   label values). Registration is get-or-create under one mutex;
+//!   re-registering a key returns a handle to the same underlying atomic,
+//!   so any layer can look its metric up by name without threading handles
+//!   around.
+//! * Handles ([`Counter`], [`Gauge`], [`Histogram`]) are `Clone` +
+//!   `Send` + `Sync` wrappers over `Arc`ed atomics: updates are `Relaxed`
+//!   atomic ops, no lock, no allocation — safe on the serving hot path.
+//! * [`Registry::render`] emits one `key value` line per metric with the
+//!   lines **fully sorted** (deterministic output for golden tests and
+//!   scrape diffing) and every value an integer — NaN/Inf cannot appear
+//!   by construction. Histograms expand to `_count`, `_sum_us`,
+//!   `_p50_us`, `_p95_us`, `_p99_us`, `_min_us`, `_max_us` lines
+//!   (quantiles via the shared log-bucket layout of
+//!   `serve::LatencyHistogram`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::serve::stats::{LatencyHistogram, HIST_BUCKETS};
+
+/// Build a full exposition key from a metric name and label pairs.
+///
+/// Name and label characters outside `[a-zA-Z0-9_:]` are replaced with
+/// `_`; label values are escaped Prometheus-style (`\\`, `\"`, `\n`).
+pub fn metric_key(name: &str, labels: &[(&str, &str)]) -> String {
+    let mut key = String::with_capacity(name.len() + 16 * labels.len());
+    push_sanitized(&mut key, name);
+    if !labels.is_empty() {
+        key.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                key.push(',');
+            }
+            push_sanitized(&mut key, k);
+            key.push_str("=\"");
+            for ch in v.chars() {
+                match ch {
+                    '\\' => key.push_str("\\\\"),
+                    '"' => key.push_str("\\\""),
+                    '\n' => key.push_str("\\n"),
+                    _ => key.push(ch),
+                }
+            }
+            key.push('"');
+        }
+        key.push('}');
+    }
+    key
+}
+
+fn push_sanitized(out: &mut String, name: &str) {
+    for ch in name.chars() {
+        out.push(if ch.is_ascii_alphanumeric() || ch == '_' || ch == ':' { ch } else { '_' });
+    }
+}
+
+/// Lock-free histogram mirroring `serve::LatencyHistogram`'s exact
+/// log-bucket layout (4 sub-buckets per power of two of µs) in atomics.
+/// `record_us` is wait-free (`Relaxed` fetch-ops); `snapshot` rebuilds a
+/// plain `LatencyHistogram` for quantile reads at render time.
+pub struct AtomicHistogram {
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    min_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[LatencyHistogram::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.min_us.fetch_min(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough snapshot for render time: bucket counts are read
+    /// individually (`Relaxed`), so a scrape racing a record may be off by
+    /// the in-flight sample — never torn within a bucket.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        LatencyHistogram::from_bucket_counts(
+            &buckets,
+            self.sum_us.load(Ordering::Relaxed),
+            self.min_us.load(Ordering::Relaxed),
+            self.max_us.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+/// Monotonic counter handle (clone freely; all clones share the value).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge handle with inc/dec for occupancy-style metrics.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement: a racing double-dec can not wrap to 2^64-1.
+    pub fn dec(&self) {
+        let _ =
+            self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram handle over a shared [`AtomicHistogram`].
+#[derive(Clone)]
+pub struct Histogram(Arc<AtomicHistogram>);
+
+impl Histogram {
+    pub fn record_us(&self, us: u64) {
+        self.0.record_us(us);
+    }
+
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.0.snapshot()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count()
+    }
+}
+
+enum Metric {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Hist(Arc<AtomicHistogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist(_) => "histogram",
+        }
+    }
+}
+
+/// The metric store. Instantiable (not a process-global) so parallel
+/// tests and embedded servers each own an isolated namespace; the serving
+/// stack shares one instance per server via `Arc<Registry>`.
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { metrics: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get-or-register a counter under `key`. Panics if `key` is already
+    /// registered as a different metric kind (a programming error — keys
+    /// are static strings chosen at integration time).
+    pub fn counter(&self, key: &str) -> Counter {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(AtomicU64::new(0))))
+        {
+            Metric::Counter(c) => Counter(c.clone()),
+            other => panic!("metric '{}' already registered as a {}", key, other.kind()),
+        }
+    }
+
+    /// Get-or-register a gauge under `key` (panics on kind clash).
+    pub fn gauge(&self, key: &str) -> Gauge {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(AtomicU64::new(0))))
+        {
+            Metric::Gauge(g) => Gauge(g.clone()),
+            other => panic!("metric '{}' already registered as a {}", key, other.kind()),
+        }
+    }
+
+    /// Get-or-register a histogram under `key` (panics on kind clash).
+    pub fn histogram(&self, key: &str) -> Histogram {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Hist(Arc::new(AtomicHistogram::new())))
+        {
+            Metric::Hist(h) => Histogram(h.clone()),
+            other => panic!("metric '{}' already registered as a {}", key, other.kind()),
+        }
+    }
+
+    /// Render the full exposition into `out` (cleared first). Lines are
+    /// fully sorted; every value is a `u64` rendered in decimal.
+    pub fn render_into(&self, out: &mut String) {
+        out.clear();
+        let mut lines: Vec<String> = Vec::new();
+        {
+            let m = self.metrics.lock().unwrap();
+            for (key, metric) in m.iter() {
+                match metric {
+                    Metric::Counter(c) => {
+                        lines.push(format!("{} {}", key, c.load(Ordering::Relaxed)));
+                    }
+                    Metric::Gauge(g) => {
+                        lines.push(format!("{} {}", key, g.load(Ordering::Relaxed)));
+                    }
+                    Metric::Hist(h) => {
+                        let snap = h.snapshot();
+                        let (base, labels) = split_key(key);
+                        let mut hline = |suffix: &str, v: u64| {
+                            lines.push(format!("{}_{}{} {}", base, suffix, labels, v));
+                        };
+                        hline("count", snap.count());
+                        hline("sum_us", snap.sum_us());
+                        hline("min_us", snap.min_us());
+                        hline("p50_us", snap.quantile_us(0.50));
+                        hline("p95_us", snap.quantile_us(0.95));
+                        hline("p99_us", snap.quantile_us(0.99));
+                        hline("max_us", snap.max_us());
+                    }
+                }
+            }
+        }
+        lines.sort();
+        for line in lines {
+            let _ = writeln!(out, "{}", line);
+        }
+    }
+
+    /// Convenience allocating variant of [`Registry::render_into`].
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// Split a full key into (name, label-block-with-braces-or-empty) so
+/// histogram suffixes land on the name, before the labels.
+fn split_key(key: &str) -> (&str, &str) {
+    match key.find('{') {
+        Some(i) => (&key[..i], &key[i..]),
+        None => (key, ""),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_key_sanitizes_and_escapes() {
+        assert_eq!(metric_key("requests_total", &[]), "requests_total");
+        assert_eq!(
+            metric_key("shard restarts", &[("shard", "0")]),
+            "shard_restarts{shard=\"0\"}"
+        );
+        // label values escape backslash, quote, newline; names sanitize
+        assert_eq!(
+            metric_key("a-b", &[("k-1", "v\"x\\y\nz")]),
+            "a_b{k_1=\"v\\\"x\\\\y\\nz\"}"
+        );
+        assert_eq!(
+            metric_key("m", &[("a", "1"), ("b", "2")]),
+            "m{a=\"1\",b=\"2\"}"
+        );
+    }
+
+    #[test]
+    fn handles_share_state_and_rerregistration_returns_same_metric() {
+        let r = Registry::new();
+        let c1 = r.counter("c");
+        let c2 = r.counter("c");
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3);
+        let g = r.gauge("g");
+        g.set(7);
+        g.inc();
+        g.dec();
+        assert_eq!(r.gauge("g").get(), 7);
+        g.set(0);
+        g.dec(); // saturates, never wraps
+        assert_eq!(g.get(), 0);
+        let h = r.histogram("h");
+        h.record_us(100);
+        assert_eq!(r.histogram("h").count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_clash_panics() {
+        let r = Registry::new();
+        r.counter("m");
+        r.gauge("m");
+    }
+
+    #[test]
+    fn render_is_sorted_integer_only_and_stable() {
+        let r = Registry::new();
+        r.counter("zz_total").add(5);
+        r.counter("aa_total").inc();
+        r.gauge(&metric_key("up", &[("shard", "1")])).set(1);
+        let h = r.histogram(&metric_key("stage_us", &[("stage", "queue")]));
+        for us in [10u64, 20, 30, 40] {
+            h.record_us(us);
+        }
+        let text = r.render();
+        let lines: Vec<&str> = text.lines().collect();
+        let mut sorted = lines.clone();
+        sorted.sort();
+        assert_eq!(lines, sorted, "exposition must be fully sorted:\n{}", text);
+        // golden shape: every line is `key value` with an integer value
+        for line in &lines {
+            let (key, val) = line.rsplit_once(' ').expect("key value");
+            assert!(!key.is_empty());
+            val.parse::<u64>().unwrap_or_else(|_| panic!("non-integer value in '{}'", line));
+        }
+        assert!(text.contains("aa_total 1\n"));
+        assert!(text.contains("zz_total 5\n"));
+        assert!(text.contains("up{shard=\"1\"} 1\n"));
+        // histogram suffixes land before the label block
+        assert!(text.contains("stage_us_count{stage=\"queue\"} 4\n"), "{}", text);
+        assert!(text.contains("stage_us_sum_us{stage=\"queue\"} 100\n"), "{}", text);
+        assert!(text.contains("stage_us_min_us{stage=\"queue\"} 10\n"), "{}", text);
+        assert!(text.contains("stage_us_max_us{stage=\"queue\"} 40\n"), "{}", text);
+        // rendering twice is bit-identical (stable ordering)
+        assert_eq!(text, r.render());
+    }
+
+    #[test]
+    fn atomic_histogram_matches_latency_histogram() {
+        let a = AtomicHistogram::new();
+        let mut l = LatencyHistogram::new();
+        let mut x = 0x2545F4914F6CDD1Du64;
+        for _ in 0..2000 {
+            // xorshift latencies spanning many decades
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let us = x % 5_000_000;
+            a.record_us(us);
+            l.record_us(us);
+        }
+        let snap = a.snapshot();
+        assert_eq!(snap.count(), l.count());
+        assert_eq!(snap.min_us(), l.min_us());
+        assert_eq!(snap.max_us(), l.max_us());
+        for q in [0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(snap.quantile_us(q), l.quantile_us(q), "q={}", q);
+        }
+        assert!((snap.mean_us() - l.mean_us()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_histogram_renders_zeroes_not_sentinels() {
+        let r = Registry::new();
+        r.histogram("empty_us");
+        let text = r.render();
+        assert!(text.contains("empty_us_count 0\n"));
+        assert!(text.contains("empty_us_min_us 0\n"), "{}", text);
+        assert!(text.contains("empty_us_p99_us 0\n"));
+    }
+}

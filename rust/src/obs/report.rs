@@ -1,0 +1,205 @@
+//! `dynadiag obs report` — render a per-stage latency table from a
+//! `traces.jsonl` span dump (the `serve --trace-out` exporter's output).
+//!
+//! Each line is one exported [`TraceSpan`] as JSON. The report
+//! accumulates every span into per-stage log-bucket histograms (the same
+//! buckets serving quantiles use) and prints, per stage and for the
+//! end-to-end total: count, mean, p50/p95/p99, max — plus outcome and
+//! per-ISA breakdowns so a dump answers "where does the time go, and on
+//! which kernel path" without re-running anything.
+
+use std::collections::BTreeMap;
+use std::io::BufRead;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::trace::{isa_name, STAGES};
+use crate::serve::stats::{LatencyHistogram, OutcomeCode};
+use crate::util::json::Json;
+
+/// Accumulated view over one trace dump.
+pub struct TraceReport {
+    /// Spans parsed (table rows aggregate all of them).
+    pub spans: u64,
+    /// Per-stage histograms, [`STAGES`] order, plus total at index 4.
+    hists: [LatencyHistogram; 5],
+    /// Outcome name → span count.
+    pub outcomes: BTreeMap<String, u64>,
+    /// ISA name → span count (execution placement).
+    pub isas: BTreeMap<String, u64>,
+    /// Distinct trace ids (duplicates indicate a broken exporter).
+    distinct: std::collections::HashSet<u64>,
+}
+
+impl TraceReport {
+    pub fn new() -> TraceReport {
+        TraceReport {
+            spans: 0,
+            hists: Default::default(),
+            outcomes: BTreeMap::new(),
+            isas: BTreeMap::new(),
+            distinct: std::collections::HashSet::new(),
+        }
+    }
+
+    /// Fold one `traces.jsonl` line (errors on malformed lines — a trace
+    /// dump is machine-written; silent skips would hide exporter bugs).
+    pub fn add_line(&mut self, line: &str) -> Result<()> {
+        let j = Json::parse(line).context("parsing trace line")?;
+        let stage_val = |name: &str| -> Result<u64> {
+            Ok(j.req(name)?.as_f64().context(name.to_string())? as u64)
+        };
+        for (i, st) in STAGES.iter().enumerate() {
+            self.hists[i].record_us(stage_val(&format!("{}_us", st))?);
+        }
+        self.hists[4].record_us(stage_val("total_us")?);
+        let outcome = stage_val("outcome")? as u8;
+        let name = OutcomeCode::from_code(outcome)
+            .map(|o| o.name().to_string())
+            .unwrap_or_else(|| format!("outcome_{}", outcome));
+        *self.outcomes.entry(name).or_insert(0) += 1;
+        let isa = stage_val("isa")? as u8;
+        *self.isas.entry(isa_name(isa).to_string()).or_insert(0) += 1;
+        let tid = j.req("trace_id")?.as_str().context("trace_id")?;
+        let tid = u64::from_str_radix(tid, 16).context("trace_id hex")?;
+        self.distinct.insert(tid);
+        self.spans += 1;
+        Ok(())
+    }
+
+    pub fn distinct_trace_ids(&self) -> u64 {
+        self.distinct.len() as u64
+    }
+
+    /// Histogram of one stage ([`STAGES`] order; index 4 = total).
+    pub fn stage_hist(&self, i: usize) -> &LatencyHistogram {
+        &self.hists[i]
+    }
+
+    /// The human-readable table.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{} spans ({} distinct trace ids)",
+            self.spans,
+            self.distinct.len()
+        );
+        let _ = writeln!(
+            out,
+            "{:<10} {:>9} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "stage", "count", "mean_us", "p50_us", "p95_us", "p99_us", "max_us"
+        );
+        for (i, name) in STAGES.iter().chain(std::iter::once(&"total")).enumerate() {
+            let h = &self.hists[i];
+            let _ = writeln!(
+                out,
+                "{:<10} {:>9} {:>10.1} {:>10} {:>10} {:>10} {:>10}",
+                name,
+                h.count(),
+                h.mean_us(),
+                h.quantile_us(0.50),
+                h.quantile_us(0.95),
+                h.quantile_us(0.99),
+                h.max_us()
+            );
+        }
+        let fold = |m: &BTreeMap<String, u64>| {
+            m.iter().map(|(k, v)| format!("{} {}", k, v)).collect::<Vec<_>>().join(", ")
+        };
+        let _ = writeln!(out, "outcomes: {}", fold(&self.outcomes));
+        let _ = writeln!(out, "isa: {}", fold(&self.isas));
+        out
+    }
+}
+
+impl Default for TraceReport {
+    fn default() -> Self {
+        TraceReport::new()
+    }
+}
+
+/// Read a `traces.jsonl` file into a [`TraceReport`].
+pub fn report_from_file(path: &std::path::Path) -> Result<TraceReport> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening trace file {}", path.display()))?;
+    let mut report = TraceReport::new();
+    for (ln, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        report
+            .add_line(&line)
+            .with_context(|| format!("{}:{}", path.display(), ln + 1))?;
+    }
+    if report.spans == 0 {
+        bail!("{}: no spans (empty trace file)", path.display());
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{trace_id, TraceSpan};
+
+    fn line(i: u64) -> String {
+        let mut s = TraceSpan {
+            trace_id: trace_id(9, i),
+            client: i,
+            shard: 0,
+            isa: 0,
+            outcome: 0,
+            batch: 2,
+            t_admit_us: 0,
+            t_dequeue_us: 40,
+            t_exec_us: 60,
+            t_done_us: 60 + 100 * (i + 1),
+            t_ship_us: 70 + 100 * (i + 1),
+        };
+        s.normalize();
+        s.to_json().to_string()
+    }
+
+    #[test]
+    fn report_accumulates_and_renders() {
+        let mut r = TraceReport::new();
+        for i in 0..10 {
+            r.add_line(&line(i)).unwrap();
+        }
+        assert_eq!(r.spans, 10);
+        assert_eq!(r.distinct_trace_ids(), 10);
+        assert_eq!(r.stage_hist(0).count(), 10); // queue
+        assert_eq!(r.stage_hist(0).max_us(), 40);
+        assert_eq!(r.stage_hist(4).count(), 10); // total
+        let text = r.render();
+        assert!(text.contains("queue"), "{}", text);
+        assert!(text.contains("total"), "{}", text);
+        assert!(text.contains("ok 10"), "{}", text);
+        assert!(text.contains("scalar 10"), "{}", text);
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        let mut r = TraceReport::new();
+        assert!(r.add_line("not json").is_err());
+        assert!(r.add_line("{\"queue_us\": 1}").is_err(), "missing fields must error");
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let path = std::env::temp_dir()
+            .join(format!("dynadiag_obs_report_{}.jsonl", std::process::id()));
+        let body: String = (0..5).map(|i| format!("{}\n", line(i))).collect();
+        std::fs::write(&path, format!("{}\n", body)).unwrap(); // + blank line
+        let r = report_from_file(&path).unwrap();
+        assert_eq!(r.spans, 5);
+        std::fs::remove_file(&path).ok();
+        // an empty file is an error, not an empty report
+        std::fs::write(&path, "\n").unwrap();
+        assert!(report_from_file(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,538 @@
+//! Per-request trace spans and the preallocated SPSC trace ring.
+//!
+//! A [`TraceSpan`] is a **fixed-slot** record — `Copy`, no heap — holding
+//! five clock stamps along a request's life:
+//!
+//! | stamp          | taken at                                            |
+//! |----------------|-----------------------------------------------------|
+//! | `t_admit_us`   | admission (or socket read, on the wire path)        |
+//! | `t_dequeue_us` | the shard dequeues the request from its inbox       |
+//! | `t_exec_us`    | the coalesced micro-batch starts executing          |
+//! | `t_done_us`    | kernel execution completes (the latency stamp)      |
+//! | `t_ship_us`    | the completion is shipped back to the driver        |
+//!
+//! Stage durations are the consecutive differences — queue, assemble,
+//! execute, writeback — so after [`TraceSpan::normalize`] (monotone
+//! forward-fill of unset stamps) the **stage sums telescope to exactly
+//! the end-to-end total** by construction. All stamps come from the
+//! serving `Clock`, so spans are deterministic under `ManualClock`.
+//!
+//! [`TraceRing`] is the transport: a preallocated single-producer
+//! single-consumer ring of seqlock-versioned atomic slots. The shard
+//! (producer) packs a span into 8 `u64` words and stores them with
+//! `Relaxed` atomics — **no allocation, no lock, no blocking, no
+//! `unsafe`**. A full ring overwrites its oldest slot (drop-oldest) and
+//! the driver (consumer) counts the loss; a slow consumer can therefore
+//! never back-pressure a shard. Torn reads are impossible in the UB sense
+//! (every word is atomic) and detected in the logical sense by the slot's
+//! version word, which brackets each write.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Stage names, in span order (the report table and exposition labels).
+pub const STAGES: [&str; 4] = ["queue", "assemble", "execute", "writeback"];
+
+/// Default per-shard ring capacity (slots; power of two). At 4096 spans a
+/// driver polling every 500µs keeps up past 8M req/s per shard — overflow
+/// in practice means the consumer stopped, which drop-oldest + the
+/// `traces_dropped` counter make visible instead of fatal.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// One request's trace: identity, placement, and the five clock stamps.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceSpan {
+    /// Nonzero request-unique id (see [`trace_id`]); 0 = untraced.
+    pub trace_id: u64,
+    /// Client id (connection id on the wire path).
+    pub client: u64,
+    /// Shard that served (or NACKed) the request.
+    pub shard: u16,
+    /// Dispatched ISA code (`kernels::microkernel::Isa` discriminant)
+    /// at execution time; 0 (scalar) for requests that never executed.
+    pub isa: u8,
+    /// `OutcomeCode` the request resolved with.
+    pub outcome: u8,
+    /// Coalesced micro-batch size the request rode in (0 = no batch).
+    pub batch: u16,
+    pub t_admit_us: u64,
+    pub t_dequeue_us: u64,
+    pub t_exec_us: u64,
+    pub t_done_us: u64,
+    pub t_ship_us: u64,
+}
+
+impl TraceSpan {
+    /// Forward-fill unset (zero) or out-of-order stamps so the sequence
+    /// is monotone. Requests that skip stages (front-door sheds never
+    /// dequeue; timed-out requests never execute) get zero-length stages
+    /// rather than nonsense negatives, and afterwards
+    /// `queue + assemble + execute + writeback == total` exactly.
+    pub fn normalize(&mut self) {
+        let mut prev = self.t_admit_us;
+        for t in [
+            &mut self.t_dequeue_us,
+            &mut self.t_exec_us,
+            &mut self.t_done_us,
+            &mut self.t_ship_us,
+        ] {
+            if *t < prev {
+                *t = prev;
+            }
+            prev = *t;
+        }
+    }
+
+    pub fn queue_us(&self) -> u64 {
+        self.t_dequeue_us.saturating_sub(self.t_admit_us)
+    }
+
+    pub fn assemble_us(&self) -> u64 {
+        self.t_exec_us.saturating_sub(self.t_dequeue_us)
+    }
+
+    pub fn execute_us(&self) -> u64 {
+        self.t_done_us.saturating_sub(self.t_exec_us)
+    }
+
+    pub fn writeback_us(&self) -> u64 {
+        self.t_ship_us.saturating_sub(self.t_done_us)
+    }
+
+    pub fn total_us(&self) -> u64 {
+        self.t_ship_us.saturating_sub(self.t_admit_us)
+    }
+
+    /// Stage durations in [`STAGES`] order.
+    pub fn stage_us(&self) -> [u64; 4] {
+        [self.queue_us(), self.assemble_us(), self.execute_us(), self.writeback_us()]
+    }
+
+    /// One `traces.jsonl` line: identity as a fixed-width hex string (u64
+    /// ids do not survive a JSON f64 round trip), stage durations plus
+    /// the admit stamp (stamps reconstruct by prefix sum).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::Str(format!("{:016x}", self.trace_id))),
+            ("client", Json::Num(self.client as f64)),
+            ("shard", Json::Num(self.shard as f64)),
+            ("isa", Json::Num(self.isa as f64)),
+            ("outcome", Json::Num(self.outcome as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("t_admit_us", Json::Num(self.t_admit_us as f64)),
+            ("queue_us", Json::Num(self.queue_us() as f64)),
+            ("assemble_us", Json::Num(self.assemble_us() as f64)),
+            ("execute_us", Json::Num(self.execute_us() as f64)),
+            ("writeback_us", Json::Num(self.writeback_us() as f64)),
+            ("total_us", Json::Num(self.total_us() as f64)),
+        ])
+    }
+
+    /// Pack into the ring's 8-word slot format.
+    fn pack(&self) -> [u64; 8] {
+        let meta = self.shard as u64
+            | (self.isa as u64) << 16
+            | (self.outcome as u64) << 24
+            | (self.batch as u64) << 32;
+        [
+            self.trace_id,
+            self.client,
+            meta,
+            self.t_admit_us,
+            self.t_dequeue_us,
+            self.t_exec_us,
+            self.t_done_us,
+            self.t_ship_us,
+        ]
+    }
+
+    fn unpack(w: &[u64; 8]) -> TraceSpan {
+        TraceSpan {
+            trace_id: w[0],
+            client: w[1],
+            shard: w[2] as u16,
+            isa: (w[2] >> 16) as u8,
+            outcome: (w[2] >> 24) as u8,
+            batch: (w[2] >> 32) as u16,
+            t_admit_us: w[3],
+            t_dequeue_us: w[4],
+            t_exec_us: w[5],
+            t_done_us: w[6],
+            t_ship_us: w[7],
+        }
+    }
+}
+
+/// Wire/trace code of a dispatched ISA (span `isa` field). Frozen like
+/// outcome codes: never renumber, only append.
+pub fn isa_code(isa: crate::kernels::microkernel::Isa) -> u8 {
+    match isa {
+        crate::kernels::microkernel::Isa::Scalar => 0,
+        crate::kernels::microkernel::Isa::Avx2 => 1,
+        crate::kernels::microkernel::Isa::Neon => 2,
+    }
+}
+
+/// Name of a span `isa` code (unknown codes render as `isa<code>`-less
+/// generic `"?"` so a newer trace file still tabulates).
+pub fn isa_name(code: u8) -> &'static str {
+    match code {
+        0 => "scalar",
+        1 => "avx2",
+        2 => "neon",
+        _ => "?",
+    }
+}
+
+/// Request-unique nonzero trace id: a splitmix64 finalizer over the
+/// admission id, keyed by a per-run seed. Bijective in `id` for a fixed
+/// seed (modulo the 0→1 remap), so ids are unique within a run; the seed
+/// keeps ids from colliding across runs joined in one trace store.
+pub fn trace_id(seed: u64, id: u64) -> u64 {
+    let mut z = seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    if z == 0 {
+        1
+    } else {
+        z
+    }
+}
+
+/// Head-sampling decision: deterministic in the trace id (every observer
+/// of a request agrees), uniform because the id is already a mixed hash.
+/// `rate >= 1.0` keeps everything, `rate <= 0.0` nothing.
+pub fn sampled(trace_id: u64, rate: f64) -> bool {
+    if rate >= 1.0 {
+        return true;
+    }
+    if rate <= 0.0 {
+        return false;
+    }
+    (trace_id as f64) < rate * u64::MAX as f64
+}
+
+/// One ring slot: a seqlock version word bracketing 8 data words. The
+/// version for write `h` goes `2h+1` (write in progress) → `2h+2`
+/// (write `h` published); a consumer that reads anything else knows the
+/// slot was overwritten under it.
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; 8],
+}
+
+/// Preallocated SPSC drop-oldest span ring (see the module docs).
+///
+/// Producer API: [`TraceRing::push`] — exactly one thread (the owning
+/// shard). Consumer API: [`TraceRing::drain`] — exactly one thread (the
+/// driver). Both are nonblocking; the counters are shared.
+pub struct TraceRing {
+    slots: Box<[Slot]>,
+    mask: u64,
+    /// Producer cursor: total spans ever pushed (monotonic).
+    head: AtomicU64,
+    /// Consumer cursor: total spans consumed or skipped (monotonic).
+    tail: AtomicU64,
+    /// Total spans lost to overwrite (drop-oldest) — `traces_dropped`.
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    /// `capacity` rounds up to a power of two, minimum 8.
+    pub fn new(capacity: usize) -> TraceRing {
+        let cap = capacity.max(8).next_power_of_two();
+        TraceRing {
+            slots: (0..cap)
+                .map(|_| Slot { seq: AtomicU64::new(0), words: Default::default() })
+                .collect(),
+            mask: cap as u64 - 1,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record a span. Never blocks, never allocates: a full ring
+    /// overwrites its oldest slot (the consumer detects and counts the
+    /// loss). Single producer only.
+    pub fn push(&self, span: &TraceSpan) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h & self.mask) as usize];
+        slot.seq.store(2 * h + 1, Ordering::Relaxed);
+        // release fence: the odd (write-in-progress) version is visible
+        // before any data word changes
+        std::sync::atomic::fence(Ordering::Release);
+        for (w, v) in slot.words.iter().zip(span.pack()) {
+            w.store(v, Ordering::Relaxed);
+        }
+        // publish: data words happen-before the even version, which
+        // happens-before the head advance the consumer acquires
+        slot.seq.store(2 * h + 2, Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Drain every publishable span into `out` (appended), returning how
+    /// many spans were lost to overwrite since the previous drain. Single
+    /// consumer only; never blocks the producer.
+    pub fn drain(&self, out: &mut Vec<TraceSpan>) -> u64 {
+        let head = self.head.load(Ordering::Acquire);
+        let mut t = self.tail.load(Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let mut lost = 0u64;
+        if head.saturating_sub(t) > cap {
+            // the producer lapped us: everything below head-cap is gone
+            lost += head - cap - t;
+            t = head - cap;
+        }
+        while t < head {
+            let slot = &self.slots[(t & self.mask) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != 2 * t + 2 {
+                // overwritten (or mid-overwrite) by a later lap
+                lost += 1;
+                t += 1;
+                continue;
+            }
+            let mut w = [0u64; 8];
+            for (dst, src) in w.iter_mut().zip(slot.words.iter()) {
+                *dst = src.load(Ordering::Relaxed);
+            }
+            // acquire fence: all data-word loads complete before the
+            // validating re-read of the version
+            std::sync::atomic::fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                lost += 1;
+                t += 1;
+                continue;
+            }
+            out.push(TraceSpan::unpack(&w));
+            t += 1;
+        }
+        self.tail.store(t, Ordering::Release);
+        if lost > 0 {
+            self.dropped.fetch_add(lost, Ordering::Relaxed);
+        }
+        lost
+    }
+
+    /// Total spans lost to overwrite over the ring's lifetime.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Spans currently waiting for the consumer (approximate under race).
+    pub fn pending(&self) -> u64 {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Relaxed);
+        head.saturating_sub(tail).min(self.slots.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(i: u64) -> TraceSpan {
+        TraceSpan {
+            trace_id: trace_id(42, i),
+            client: i % 7,
+            shard: (i % 3) as u16,
+            isa: 1,
+            outcome: 0,
+            batch: 4,
+            t_admit_us: 1000 * i,
+            t_dequeue_us: 1000 * i + 10,
+            t_exec_us: 1000 * i + 25,
+            t_done_us: 1000 * i + 125,
+            t_ship_us: 1000 * i + 130,
+        }
+    }
+
+    #[test]
+    fn pack_unpack_round_trips() {
+        for i in [0u64, 1, 99, 12345] {
+            let s = span(i);
+            assert_eq!(TraceSpan::unpack(&s.pack()), s);
+        }
+        // field extremes survive the meta packing
+        let s = TraceSpan {
+            trace_id: u64::MAX,
+            client: u64::MAX,
+            shard: u16::MAX,
+            isa: u8::MAX,
+            outcome: u8::MAX,
+            batch: u16::MAX,
+            t_admit_us: u64::MAX,
+            t_dequeue_us: 0,
+            t_exec_us: u64::MAX,
+            t_done_us: 0,
+            t_ship_us: u64::MAX,
+        };
+        assert_eq!(TraceSpan::unpack(&s.pack()), s);
+    }
+
+    #[test]
+    fn normalized_stage_sums_equal_total() {
+        // fully stamped span
+        let mut s = span(3);
+        s.normalize();
+        assert_eq!(s.stage_us().iter().sum::<u64>(), s.total_us());
+        assert_eq!(s.stage_us(), [10, 15, 100, 5]);
+        // front-door shed: only admit + ship stamped — zero-length stages
+        let mut shed = TraceSpan { t_admit_us: 500, t_ship_us: 520, ..TraceSpan::default() };
+        shed.normalize();
+        assert_eq!(shed.stage_us().iter().sum::<u64>(), shed.total_us());
+        assert_eq!(shed.total_us(), 20);
+        assert_eq!(shed.queue_us(), 0);
+        // timed out after dequeue: no exec/done stamps
+        let mut to = TraceSpan {
+            t_admit_us: 100,
+            t_dequeue_us: 900,
+            t_ship_us: 910,
+            ..TraceSpan::default()
+        };
+        to.normalize();
+        assert_eq!(to.stage_us().iter().sum::<u64>(), to.total_us());
+        assert_eq!(to.queue_us(), 800);
+        assert_eq!(to.execute_us(), 0);
+    }
+
+    #[test]
+    fn trace_ids_unique_nonzero_deterministic() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            let id = trace_id(7, i);
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "collision at {}", i);
+            assert_eq!(id, trace_id(7, i), "must be deterministic");
+        }
+        assert_ne!(trace_id(7, 5), trace_id(8, 5), "seed must matter");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_proportional() {
+        assert!(sampled(123, 1.0));
+        assert!(!sampled(123, 0.0));
+        let n = 10_000u64;
+        for rate in [0.1f64, 0.5] {
+            let hits = (0..n).filter(|&i| sampled(trace_id(1, i), rate)).count() as f64;
+            let frac = hits / n as f64;
+            assert!(
+                (frac - rate).abs() < 0.03,
+                "rate {} sampled {:.3}",
+                rate,
+                frac
+            );
+        }
+        // monotone: a span sampled at rate r is sampled at every r' > r
+        for i in 0..500u64 {
+            let id = trace_id(2, i);
+            if sampled(id, 0.2) {
+                assert!(sampled(id, 0.7));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_drains_in_order() {
+        let ring = TraceRing::new(64);
+        for i in 0..50 {
+            ring.push(&span(i));
+        }
+        let mut out = Vec::new();
+        assert_eq!(ring.drain(&mut out), 0);
+        assert_eq!(out.len(), 50);
+        for (i, s) in out.iter().enumerate() {
+            assert_eq!(*s, span(i as u64));
+        }
+        assert_eq!(ring.dropped(), 0);
+        assert_eq!(ring.pending(), 0);
+        // drains interleave with pushes without loss
+        out.clear();
+        ring.push(&span(50));
+        assert_eq!(ring.drain(&mut out), 0);
+        assert_eq!(out, vec![span(50)]);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let ring = TraceRing::new(8); // exact power of two
+        for i in 0..20 {
+            ring.push(&span(i)); // 12 oldest spans overwritten
+        }
+        let mut out = Vec::new();
+        let lost = ring.drain(&mut out);
+        assert_eq!(lost, 12);
+        assert_eq!(ring.dropped(), 12);
+        // the survivors are exactly the newest 8, in order
+        assert_eq!(out.len(), 8);
+        for (k, s) in out.iter().enumerate() {
+            assert_eq!(*s, span(12 + k as u64));
+        }
+        // the ring keeps working after overflow
+        ring.push(&span(99));
+        out.clear();
+        assert_eq!(ring.drain(&mut out), 0);
+        assert_eq!(out, vec![span(99)]);
+        assert_eq!(ring.dropped(), 12);
+    }
+
+    #[test]
+    fn ring_capacity_rounds_up() {
+        assert_eq!(TraceRing::new(0).capacity(), 8);
+        assert_eq!(TraceRing::new(9).capacity(), 16);
+        assert_eq!(TraceRing::new(4096).capacity(), 4096);
+    }
+
+    #[test]
+    fn concurrent_producer_consumer_never_tears() {
+        // one producer hammering a tiny ring, one consumer draining:
+        // every span that comes out must be internally consistent (the
+        // stamps of span i encode i), no torn cross-span reads
+        let ring = std::sync::Arc::new(TraceRing::new(16));
+        let p = {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                for i in 0..20_000u64 {
+                    ring.push(&span(i));
+                }
+            })
+        };
+        let mut seen = 0u64;
+        let mut out = Vec::new();
+        let mut last = None::<u64>;
+        while seen + ring.dropped() < 20_000 {
+            out.clear();
+            ring.drain(&mut out);
+            for s in &out {
+                let i = s.t_admit_us / 1000;
+                assert_eq!(*s, span(i), "torn span at {}", i);
+                if let Some(l) = last {
+                    assert!(i > l, "order violated: {} after {}", i, l);
+                }
+                last = Some(i);
+            }
+            seen += out.len() as u64;
+        }
+        p.join().unwrap();
+        assert_eq!(seen + ring.dropped(), 20_000);
+    }
+
+    #[test]
+    fn span_json_line_has_stage_fields() {
+        let s = span(4);
+        let j = s.to_json();
+        assert_eq!(j.get("trace_id").unwrap().as_str().unwrap().len(), 16);
+        assert_eq!(j.get("queue_us").unwrap().as_f64().unwrap() as u64, s.queue_us());
+        assert_eq!(j.get("total_us").unwrap().as_f64().unwrap() as u64, s.total_us());
+        for st in STAGES {
+            assert!(j.get(&format!("{}_us", st)).is_some(), "missing stage {}", st);
+        }
+    }
+}

@@ -90,7 +90,14 @@ impl Clock for ManualClock {
 pub struct Completion {
     pub id: u64,
     pub arrival_us: u64,
+    /// Clock stamp taken the instant the coalesced micro-batch started
+    /// executing (after batch assembly) — the trace plane's execute-stage
+    /// boundary. Stamped from the same `Clock` as everything else, so it
+    /// is deterministic under `ManualClock`.
+    pub exec_us: u64,
     pub done_us: u64,
+    /// Coalesced micro-batch size this request rode in.
+    pub batch: u16,
     pub logits: Vec<f32>,
 }
 
@@ -255,6 +262,7 @@ impl ServeEngine {
         for (i, r) in self.scratch.iter().enumerate() {
             xb[i * sl..(i + 1) * sl].copy_from_slice(&r.x);
         }
+        let exec_us = clock.now_us();
         let logits = self.model.forward_logits(&xb, b)?;
         workspace::give_f32(xb);
         let done_us = clock.now_us();
@@ -265,7 +273,9 @@ impl ServeEngine {
             out.push(Completion {
                 id: r.id,
                 arrival_us: r.arrival_us,
+                exec_us,
                 done_us,
+                batch: b as u16,
                 logits: lg,
             });
         }

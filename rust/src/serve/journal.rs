@@ -21,7 +21,7 @@
 //!
 //! ```text
 //! [0..6]   magic  b"DDJNL\0"
-//! [6]      version (currently 1; readers reject anything newer)
+//! [6]      version (currently 2; readers reject anything newer)
 //! then, repeated until EOF:
 //!   kind     u8   1 = request, 2 = receipt
 //!   len      u32  payload length
@@ -33,7 +33,13 @@
 //! x f32s`. Receipt payload: `id u64, client u64, arrival_us u64,
 //! shard u64 (u64::MAX = shed at the front door, never reached a shard),
 //! model_fp u32, outcome u8, latency_us u64, logits_digest u32` (digest 0
-//! for non-Ok outcomes).
+//! for non-Ok outcomes), and — since version 2 — `trace_id u64`, the
+//! request's trace identity (appended last, so a v1 reader layout plus a
+//! trailing u64 *is* the v2 layout). Version 1 files still parse; their
+//! receipts surface `trace_id == 0` ("untraced"). The trace id joins a
+//! receipt to the span exported by `serve --trace-out`, so a replay can
+//! cross-reference the journal's outcome story with the trace dump's
+//! timing story.
 //!
 //! Readers are strict: bad magic, a future version, a truncated record,
 //! or a failed CRC produce an actionable error naming the record index
@@ -60,7 +66,8 @@ use crate::runtime::native::workspace;
 use crate::serve::stats::OutcomeCode;
 
 const MAGIC: &[u8; 6] = b"DDJNL\0";
-const VERSION: u8 = 1;
+/// Version 2 appended `trace_id` to receipts; version 1 files still read.
+const VERSION: u8 = 2;
 const REC_REQUEST: u8 = 1;
 const REC_RECEIPT: u8 = 2;
 /// Frame overhead: kind u8 + len u32 + crc u32.
@@ -91,6 +98,10 @@ pub struct Receipt {
     /// Admission sequence number (globally unique per server).
     pub id: u64,
     pub client: u64,
+    /// Trace identity of the request — the join key into a span dump
+    /// exported by `serve --trace-out`. 0 for receipts read from
+    /// version-1 journals (written before tracing existed).
+    pub trace_id: u64,
     /// Scheduled arrival stamp (µs, server clock epoch).
     pub arrival_us: u64,
     /// Shard that produced the outcome; [`NO_SHARD`] for front-door sheds.
@@ -201,6 +212,7 @@ impl Journal {
         self.scratch.u8(r.outcome.code());
         self.scratch.u64(r.latency_us);
         self.scratch.u32(r.logits_digest);
+        self.scratch.u64(r.trace_id); // appended last: v2 extends v1
         self.write_frame(REC_RECEIPT)?;
         self.receipts += 1;
         Ok(())
@@ -314,6 +326,8 @@ pub fn read(path: &Path) -> Result<JournalData> {
                 let code = d.u8()?;
                 let latency_us = d.u64()?;
                 let logits_digest = d.u32()?;
+                // version 2 appended the trace id; v1 receipts are untraced
+                let trace_id = if version >= 2 { d.u64()? } else { 0 };
                 d.expect_end()?;
                 let outcome = OutcomeCode::from_code(code).ok_or_else(|| {
                     anyhow!(
@@ -326,6 +340,7 @@ pub fn read(path: &Path) -> Result<JournalData> {
                 data.receipts.push(Receipt {
                     id,
                     client,
+                    trace_id,
                     arrival_us,
                     shard,
                     model_fp,
@@ -495,6 +510,7 @@ mod tests {
         Receipt {
             id,
             client: id % 3,
+            trace_id: 0x1000 + id,
             arrival_us: 100 + id,
             shard: id % 2,
             model_fp: 0xDEAD_BEEF,
@@ -568,6 +584,53 @@ mod tests {
     }
 
     #[test]
+    fn version1_receipts_read_back_untraced() {
+        // Hand-build a version-1 journal: one receipt in the pre-trace_id
+        // payload layout. The v2 reader must accept it and surface
+        // trace_id == 0 rather than rejecting old audit trails.
+        let path = tmp_path("v1.ddjnl");
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&7u64.to_le_bytes()); // id
+        payload.extend_from_slice(&1u64.to_le_bytes()); // client
+        payload.extend_from_slice(&42u64.to_le_bytes()); // arrival_us
+        payload.extend_from_slice(&0u64.to_le_bytes()); // shard
+        payload.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes()); // model_fp
+        payload.push(OutcomeCode::Ok.code());
+        payload.extend_from_slice(&250u64.to_le_bytes()); // latency_us
+        payload.extend_from_slice(&9u32.to_le_bytes()); // logits_digest
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.push(1); // version 1
+        bytes.push(REC_RECEIPT);
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+        let mut crc = Crc32::new();
+        crc.update(&[REC_RECEIPT]);
+        crc.update(&payload);
+        bytes.extend_from_slice(&crc.finish().to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+
+        let data = read(&path).unwrap();
+        assert_eq!(data.receipts.len(), 1);
+        let r = &data.receipts[0];
+        assert_eq!((r.id, r.client, r.arrival_us), (7, 1, 42));
+        assert_eq!(r.trace_id, 0, "v1 receipts are untraced");
+        assert_eq!(r.outcome, OutcomeCode::Ok);
+        std::fs::remove_file(&path).ok();
+
+        // and a freshly written journal stamps version 2 + the trace id
+        let path = tmp_path("v2.ddjnl");
+        let mut j = Journal::create(&path).unwrap();
+        j.append_receipt(&sample_receipt(3, OutcomeCode::Ok, 1)).unwrap();
+        j.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes[6], 2, "writer stamps version 2");
+        let data = read(&path).unwrap();
+        assert_eq!(data.receipts[0].trace_id, 0x1003);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn logits_digest_is_bitwise() {
         let a = [0.0f32, 1.5, -2.25];
         let mut b = a;
@@ -600,6 +663,7 @@ mod tests {
             j.append_receipt(&Receipt {
                 id,
                 client: id,
+                trace_id: 0x2000 + id,
                 arrival_us: 10 + id,
                 shard: 0,
                 model_fp: fp,
@@ -612,6 +676,7 @@ mod tests {
         j.append_receipt(&Receipt {
             id: 2,
             client: 2,
+            trace_id: 0x2002,
             arrival_us: 12,
             shard: NO_SHARD,
             model_fp: fp,
@@ -655,6 +720,7 @@ mod tests {
         j.append_receipt(&Receipt {
             id: 40,
             client: 1,
+            trace_id: 0x3040,
             arrival_us: 5,
             shard: NO_SHARD,
             model_fp: fp,
@@ -667,6 +733,7 @@ mod tests {
         j.append_receipt(&Receipt {
             id: 41,
             client: 2,
+            trace_id: 0x3041,
             arrival_us: 6,
             shard: NO_SHARD,
             model_fp: fp,
@@ -701,6 +768,7 @@ mod tests {
         j.append_receipt(&Receipt {
             id: 50,
             client: 3,
+            trace_id: 0x3050,
             arrival_us: 7,
             shard: NO_SHARD,
             model_fp: fp,

@@ -63,6 +63,16 @@
 //! global outstanding cap (reason-coded NACKs), per-connection FIFO
 //! write-back, and graceful drain on SIGTERM — journal receipts stay
 //! conservation-complete through client disconnects and shard panics.
+//!
+//! The serving plane is **observable** ([`crate::obs`]): every counter in
+//! the conservation law lives in a lock-free metrics registry
+//! ([`stats::ServeMetrics`]) rendered as a text exposition — scrapeable
+//! in-band over a stats wire frame, over HTTP (`--metrics-addr`), and
+//! summarized live by `--progress-every`; every request gets a
+//! fixed-slot trace span (admission → queue → assemble → execute →
+//! writeback) recorded into preallocated per-shard rings, exported
+//! head-sampled + slow-tail (`--trace-out`), joinable to journal
+//! receipts by `trace_id`, and tabulated by `dynadiag obs report`.
 
 pub mod batcher;
 pub mod engine;
@@ -86,15 +96,15 @@ pub use journal::{
     logits_digest, model_fingerprint, replay, Journal, JournalData, Receipt, ReplayReport,
 };
 pub use net::{
-    install_signal_drain, run_client, signal_drain_requested, ClientReport, ClientSpec,
-    NetOptions, NetReport, NetServer, WireStats,
+    install_signal_drain, run_client, scrape_metrics, signal_drain_requested, ClientReport,
+    ClientSpec, NetOptions, NetReport, NetServer, WireStats,
 };
 pub use reload::ModelWatcher;
 pub use shard::{
     drive_load_sharded, ShardCompletion, ShardedServer, ShardPolicy, ShardReloadPlan,
     ShardStats, Submit,
 };
-pub use stats::{LatencyHistogram, OutcomeCode, ServeReport};
+pub use stats::{LatencyHistogram, OutcomeCode, ServeMetrics, ServeReport};
 
 use crate::runtime::infer::{mlp_config, DiagLayer, DiagModel};
 use crate::train::TrainResult;

@@ -61,6 +61,22 @@
 //! connection arrive in submission order (per-client FIFO end to end),
 //! while NACKs are written the moment they happen and may overtake
 //! in-flight requests — `seq` is the correlator.
+//!
+//! ## Telemetry plane
+//!
+//! The live metrics registry is scrapeable two ways, both served by the
+//! driver thread (the only thread that may touch the `ShardedServer`):
+//! an **in-band stats frame** ([`wire::FRAME_STATS`], empty payload →
+//! text exposition back on the same connection, ordered with that
+//! connection's responses), and an optional **HTTP scrape listener**
+//! (`NetOptions::metrics_addr`) whose accept thread hands sockets to the
+//! driver; the driver renders once and answers a close-delimited
+//! `HTTP/1.0 200` with `text/plain` exposition — Prometheus-compatible
+//! without taking on an HTTP dependency. Scrapes allocate (one rendered
+//! `String`); they are off the request path and exempt from the
+//! zero-alloc gate. Wire-layer NACKs (over-capacity, drain) are mirrored
+//! into the registry as `submitted + shed` so the scraped conservation
+//! law matches the wire ledger exactly.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -192,6 +208,9 @@ impl Conn {
 enum Ingress {
     Open(Arc<Conn>),
     Request { conn_id: u64, seq: u64, arrival_us: u64, x: Vec<f32> },
+    /// An in-band metrics scrape ([`wire::FRAME_STATS`]); answered by the
+    /// driver on the connection's output queue.
+    Scrape(u64),
     Closed(u64),
 }
 
@@ -288,6 +307,17 @@ fn binary_reader(
                         conn.return_payload(x, pool_cap);
                         send_binary_error(conn, &e.to_string());
                     }
+                }
+            }
+            Ok(Some(wire::FRAME_STATS)) => {
+                if payload.is_empty() {
+                    ingress.push(Ingress::Scrape(conn.id));
+                } else {
+                    counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    send_binary_error(
+                        conn,
+                        "wire: a stats request frame must carry an empty payload",
+                    );
                 }
             }
             Ok(Some(kind)) => {
@@ -402,6 +432,10 @@ pub struct NetOptions {
     /// conservation counters are never reset (the ledger is whole-run).
     /// 0 = never.
     pub reset_after: u64,
+    /// Bind an HTTP scrape listener here (e.g. `127.0.0.1:9464`): each
+    /// `GET` is answered with the live text exposition. `None` = no
+    /// listener; the in-band stats frame still works.
+    pub metrics_addr: Option<String>,
 }
 
 /// Wire-layer ledger. Conservation — `submitted == served + shed +
@@ -430,6 +464,8 @@ pub struct WireStats {
     /// Reader-side payload-pool misses (fresh buffers) in the measured
     /// window.
     pub reader_fresh: u64,
+    /// Metrics scrapes answered (in-band stats frames + HTTP scrapes).
+    pub scrapes: u64,
     /// The run ended through the graceful-drain path.
     pub drained: bool,
 }
@@ -459,6 +495,7 @@ impl WireStats {
             ("failed", Json::Num(self.failed as f64)),
             ("undeliverable", Json::Num(self.undeliverable as f64)),
             ("reader_fresh", Json::Num(self.reader_fresh as f64)),
+            ("scrapes", Json::Num(self.scrapes as f64)),
             ("conserved", Json::Bool(self.conserved())),
             ("drained", Json::Bool(self.drained)),
         ])
@@ -467,12 +504,15 @@ impl WireStats {
 
 /// What a [`NetServer::run`] produced: the server-side latency report for
 /// the measured window, the whole-run wire ledger, and — when a journal
-/// was attached — its record counts.
+/// or tracer was attached — their record counts.
 pub struct NetReport {
     pub report: ServeReport,
     pub wire: WireStats,
     pub journal_requests: Option<u64>,
     pub journal_receipts: Option<u64>,
+    /// `(head_sampled, slow_outliers)` spans the tracer wrote, when one
+    /// was attached.
+    pub trace_spans: Option<(u64, u64)>,
 }
 
 impl NetReport {
@@ -484,6 +524,15 @@ impl NetReport {
                 Json::obj(vec![
                     ("requests", Json::Num(rq as f64)),
                     ("receipts", Json::Num(rc as f64)),
+                ]),
+            ));
+        }
+        if let Some((head, tail)) = self.trace_spans {
+            pairs.push((
+                "traces",
+                Json::obj(vec![
+                    ("sampled", Json::Num(head as f64)),
+                    ("slow_outliers", Json::Num(tail as f64)),
                 ]),
             ));
         }
@@ -523,6 +572,7 @@ struct ConnEntry {
 /// trigger fires, then drains gracefully and reports.
 pub struct NetServer {
     listener: TcpListener,
+    metrics_listener: Option<TcpListener>,
     server: ShardedServer,
     opts: NetOptions,
 }
@@ -532,7 +582,16 @@ impl NetServer {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("wire: binding listener on {}", addr))?;
         listener.set_nonblocking(true).context("wire: set_nonblocking on listener")?;
-        Ok(NetServer { listener, server, opts })
+        let metrics_listener = match &opts.metrics_addr {
+            Some(addr) => {
+                let l = TcpListener::bind(addr)
+                    .with_context(|| format!("wire: binding metrics listener on {}", addr))?;
+                l.set_nonblocking(true).context("wire: set_nonblocking on metrics listener")?;
+                Some(l)
+            }
+            None => None,
+        };
+        Ok(NetServer { listener, metrics_listener, server, opts })
     }
 
     /// The bound address (resolves the port when binding to `:0`).
@@ -540,10 +599,15 @@ impl NetServer {
         self.listener.local_addr().context("wire: local_addr")
     }
 
+    /// The bound HTTP scrape address, when `metrics_addr` was set.
+    pub fn metrics_local_addr(&self) -> Option<SocketAddr> {
+        self.metrics_listener.as_ref().and_then(|l| l.local_addr().ok())
+    }
+
     /// Serve until a drain trigger, drain gracefully, report. Consumes
     /// the server (it is shut down on the way out).
     pub fn run(self) -> Result<NetReport> {
-        let NetServer { listener, mut server, opts } = self;
+        let NetServer { listener, metrics_listener, mut server, opts } = self;
         let window = if opts.conn_window == 0 {
             server.max_outstanding()
         } else {
@@ -611,6 +675,25 @@ impl NetServer {
             })
         };
 
+        // HTTP scrape tickets: the metrics accept thread only accepts;
+        // the driver (sole owner of the server) renders and answers.
+        let scrape_q: Arc<MsgQueue<TcpStream>> = Arc::new(MsgQueue::new());
+        let metrics_handle = metrics_listener.map(|ml| {
+            let q = scrape_q.clone();
+            let stop = stop_accept.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    match ml.accept() {
+                        Ok((stream, _peer)) => q.push(stream),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })
+        });
+
         let mut wire_stats = WireStats::default();
         let mut conns: HashMap<u64, ConnEntry> = HashMap::new();
         let mut scratch = Enc::new();
@@ -638,6 +721,10 @@ impl NetServer {
                     window,
                     pool_cap,
                 )?;
+            }
+
+            while let Some(stream) = scrape_q.try_pop() {
+                answer_http_scrape(stream, &server.render_metrics(), &mut wire_stats);
             }
 
             if !draining {
@@ -707,6 +794,13 @@ impl NetServer {
         // final ingress sweep and the stop flag: join it, close anything
         // it registered, then join every reader/writer.
         accept_handle.join().map_err(|_| anyhow::anyhow!("wire: accept thread panicked"))?;
+        if let Some(h) = metrics_handle {
+            h.join().map_err(|_| anyhow::anyhow!("wire: metrics accept thread panicked"))?;
+            // scrapes that raced the drain still get the final exposition
+            while let Some(stream) = scrape_q.try_pop() {
+                answer_http_scrape(stream, &server.render_metrics(), &mut wire_stats);
+            }
+        }
         while let Some(msg) = ingress.try_pop() {
             handle_ingress(
                 msg,
@@ -734,6 +828,7 @@ impl NetServer {
                 wire_stats.shed += 1;
                 wire_stats.shed_drain += 1;
                 wire_stats.undeliverable += 1;
+                note_wire_shed(&server, OutcomeCode::ShedShardDown);
                 workspace::give_f32(x);
             }
         }
@@ -753,9 +848,48 @@ impl NetServer {
             }
             None => (None, None),
         };
+        // take_tracer pumps the rings one last time, and finish() flushes
+        // the slow-outlier reservoir — without this, tail spans held back
+        // by head-sampling would never reach the dump
+        let trace_spans = match server.take_tracer() {
+            Some(t) => Some(t.finish()?),
+            None => None,
+        };
         server.shutdown()?;
-        Ok(NetReport { report, wire: wire_stats, journal_requests, journal_receipts })
+        Ok(NetReport { report, wire: wire_stats, journal_requests, journal_receipts, trace_spans })
     }
+}
+
+/// Answer one HTTP scrape close-delimited: consume whatever request bytes
+/// are already buffered (so the close does not RST an unread request),
+/// write an `HTTP/1.0 200` with the exposition, and shut down. Timeouts
+/// bound the driver stall a slow or stuck scraper can cause.
+fn answer_http_scrape(mut stream: TcpStream, exposition: &str, stats: &mut WireStats) {
+    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let mut req = [0u8; 1024];
+    let _ = stream.read(&mut req);
+    stream.set_write_timeout(Some(Duration::from_millis(500))).ok();
+    let head = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        exposition.len()
+    );
+    let ok = stream
+        .write_all(head.as_bytes())
+        .and_then(|_| stream.write_all(exposition.as_bytes()))
+        .is_ok();
+    if ok {
+        stats.scrapes += 1;
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Mirror a wire-layer refusal into the metrics registry: the request is
+/// `submitted + shed(reason)` there too, so the scraped conservation law
+/// agrees with the wire ledger even for requests the shard layer never
+/// saw.
+fn note_wire_shed(server: &ShardedServer, outcome: OutcomeCode) {
+    server.metrics().submitted.inc();
+    server.metrics().observe_outcome(outcome, 0);
 }
 
 /// Write a NACK response (no admission id, empty logits) to `conn`.
@@ -809,6 +943,18 @@ fn handle_ingress(
                 }
             }
         }
+        Ingress::Scrape(conn_id) => {
+            // answered even while draining: the exposition is how an
+            // operator watches the drain finish
+            if let Some(e) = conns.get(&conn_id) {
+                if !e.conn.dead.load(Ordering::SeqCst) {
+                    let mut buf = e.conn.take_bytes();
+                    wire::encode_stats_response(&mut buf, &server.render_metrics());
+                    e.conn.outq.push(WriterMsg::Frame(buf));
+                    stats.scrapes += 1;
+                }
+            }
+        }
         Ingress::Request { conn_id, seq, arrival_us, x } => {
             stats.submitted += 1;
             let e = match conns.get_mut(&conn_id) {
@@ -818,6 +964,7 @@ fn handle_ingress(
                     stats.shed += 1;
                     stats.shed_drain += 1;
                     stats.undeliverable += 1;
+                    note_wire_shed(server, OutcomeCode::ShedShardDown);
                     workspace::give_f32(x);
                     return Ok(());
                 }
@@ -826,6 +973,7 @@ fn handle_ingress(
                 // late arrival during drain: the runtime is going away
                 stats.shed += 1;
                 stats.shed_drain += 1;
+                note_wire_shed(server, OutcomeCode::ShedShardDown);
                 send_nack(&e.conn, scratch, seq, OutcomeCode::ShedShardDown);
                 e.conn.return_payload(x, pool_cap);
                 return Ok(());
@@ -835,6 +983,7 @@ fn handle_ingress(
                 // no id consumed, no permit held
                 stats.shed += 1;
                 stats.shed_over_capacity += 1;
+                note_wire_shed(server, OutcomeCode::ShedOverCapacity);
                 send_nack(&e.conn, scratch, seq, OutcomeCode::ShedOverCapacity);
                 e.conn.return_payload(x, pool_cap);
                 return Ok(());
@@ -849,6 +998,7 @@ fn handle_ingress(
                 Submit::Full(x) => {
                     stats.shed += 1;
                     stats.shed_over_capacity += 1;
+                    note_wire_shed(server, OutcomeCode::ShedOverCapacity);
                     send_nack(&e.conn, scratch, seq, OutcomeCode::ShedOverCapacity);
                     e.conn.return_payload(x, pool_cap);
                 }
@@ -939,6 +1089,34 @@ fn deliver_completion(
     if (e.closing || draining) && e.inflight == 0 {
         let e = conns.remove(&conn_id).expect("entry just found");
         e.conn.outq.push(WriterMsg::Close);
+    }
+}
+
+/// Scrape a serving front door's metrics over the wire protocol: connect,
+/// send one stats frame, return the text exposition. Error frames (e.g.
+/// from a pre-stats server) surface as actionable errors.
+pub fn scrape_metrics(addr: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("wire scrape: connecting to {}", addr))?;
+    stream.set_nodelay(true).ok();
+    stream.write_all(&wire::preamble()).context("wire scrape: writing preamble")?;
+    let mut frame = Vec::new();
+    wire::encode_stats_request(&mut frame);
+    stream.write_all(&frame).context("wire scrape: writing stats frame")?;
+    let mut payload = Vec::new();
+    loop {
+        match wire::read_frame(&mut stream, &mut payload)? {
+            None => anyhow::bail!("wire scrape: server closed before answering the stats frame"),
+            Some(wire::FRAME_STATS) => return wire::decode_stats_response(&payload),
+            Some(wire::FRAME_ERROR) => {
+                let (_seq, msg) = wire::decode_error(&payload)?;
+                anyhow::bail!("wire scrape: server refused the stats frame: {}", msg);
+            }
+            Some(kind) => anyhow::bail!(
+                "wire scrape: unexpected frame kind {} while waiting for stats",
+                kind
+            ),
+        }
     }
 }
 

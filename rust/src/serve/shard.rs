@@ -92,8 +92,9 @@ use super::engine::{
 use super::faults::FaultPlan;
 use super::journal::{self, Journal, Receipt};
 use super::reload::ModelWatcher;
-use super::stats::{LatencyHistogram, OutcomeCode, ServeReport};
+use super::stats::{LatencyHistogram, OutcomeCode, ServeMetrics, ServeReport};
 use crate::kernels::pool;
+use crate::obs::{self, trace, Registry, TraceExporter, TraceRing, TraceSpan};
 use crate::runtime::infer::DiagModel;
 use crate::runtime::native::workspace;
 use crate::util::rng::Rng;
@@ -192,6 +193,9 @@ struct ShardRequest {
     /// Global request id (assigned by the admission front door).
     id: u64,
     client: u64,
+    /// Request-unique trace id ([`obs::trace_id`] of `id`), stamped on
+    /// the span and the journal receipt.
+    trace_id: u64,
     arrival_us: u64,
     /// Absolute deadline stamp (µs); 0 = no deadline.
     deadline_us: u64,
@@ -225,6 +229,9 @@ enum ShardMsg {
 pub struct ShardCompletion {
     pub id: u64,
     pub client: u64,
+    /// The request's trace id — joins this completion (and its journal
+    /// receipt) to the exported trace span.
+    pub trace_id: u64,
     pub shard: usize,
     pub arrival_us: u64,
     pub done_us: u64,
@@ -286,7 +293,18 @@ struct CurrentModel {
 struct InFlight {
     id: u64,
     client: u64,
+    trace_id: u64,
     arrival_us: u64,
+    /// When the shard dequeued the request from its inbox (span stamp).
+    t_dequeue_us: u64,
+}
+
+/// Per-shard observability handles, shared with the shard thread: its
+/// trace ring (single producer: the shard) and the server-wide restart
+/// counter the supervisor bumps directly.
+pub(crate) struct ShardObs {
+    pub ring: Arc<TraceRing>,
+    pub restarts: obs::Counter,
 }
 
 /// State that dies with a panic: the engine and its in-flight bookkeeping.
@@ -380,10 +398,12 @@ impl ShardCarry {
 /// Build the NACK completion for a request that never produced logits.
 /// `spare` is the payload buffer when the shard still holds it (balancing
 /// the recycle lanes) or empty when it died inside the engine.
+#[allow(clippy::too_many_arguments)]
 fn nack(
     shard: usize,
     id: u64,
     client: u64,
+    trace_id: u64,
     arrival_us: u64,
     done_us: u64,
     outcome: OutcomeCode,
@@ -393,6 +413,7 @@ fn nack(
     ShardCompletion {
         id,
         client,
+        trace_id,
         shard,
         arrival_us,
         done_us,
@@ -433,10 +454,12 @@ fn shard_loop(
     stats_q: Arc<MsgQueue<ShardStats>>,
     clock: RealClock,
     health: Arc<Health>,
+    obs: Arc<ShardObs>,
     faults: Option<Arc<FaultPlan>>,
     restart_backoff_us: u64,
 ) {
     pool::set_local_thread_cap(thread_cap);
+    let isa = trace::isa_code(crate::kernels::microkernel::active());
     let backoff_base = if restart_backoff_us == 0 {
         DEFAULT_RESTART_BACKOFF_US
     } else {
@@ -462,6 +485,8 @@ fn shard_loop(
                 &completions,
                 &stats_q,
                 &clock,
+                &obs,
+                isa,
                 faults.as_deref(),
             )
         }));
@@ -471,6 +496,7 @@ fn shard_loop(
         // -- the serving loop panicked: supervise --------------------------
         health.set_down(shard, true);
         carry.restarts += 1;
+        obs.restarts.inc();
         // 1) salvage the dead engine's window metrics, then NACK every
         //    request it held (meta runs parallel to its FIFO queue; the
         //    payload buffers died in the unwind, so spares are empty)
@@ -484,6 +510,7 @@ fn shard_loop(
                 shard,
                 m.id,
                 m.client,
+                m.trace_id,
                 m.arrival_us,
                 now,
                 OutcomeCode::FailedPanic,
@@ -506,6 +533,7 @@ fn shard_loop(
                 shard,
                 r.id,
                 r.client,
+                r.trace_id,
                 r.arrival_us,
                 now,
                 OutcomeCode::FailedPanic,
@@ -548,6 +576,7 @@ fn shard_loop(
                         shard,
                         r.id,
                         r.client,
+                        r.trace_id,
                         r.arrival_us,
                         clock.now_us(),
                         OutcomeCode::ShedShardDown,
@@ -587,6 +616,8 @@ fn run_shard(
     completions: &MsgQueue<ShardCompletion>,
     stats_q: &MsgQueue<ShardStats>,
     clock: &RealClock,
+    obs: &ShardObs,
+    isa: u8,
     faults: Option<&FaultPlan>,
 ) {
     let sl = current.model.sample_len();
@@ -594,7 +625,7 @@ fn run_shard(
     while running {
         while let Some(msg) = inbox.try_pop() {
             running &= handle_msg(
-                shard, msg, live, carry, current, completions, stats_q, clock, faults,
+                shard, msg, live, carry, current, completions, stats_q, clock, obs, isa, faults,
             );
         }
         if !running {
@@ -603,7 +634,7 @@ fn run_shard(
         let now = clock.now_us();
         if live.engine.due(now) {
             live.engine.poll(clock, &mut live.done).expect("shard engine poll");
-            ship(shard, sl, live, completions, current.fp);
+            ship(shard, sl, live, completions, current.fp, obs, clock, isa);
             continue;
         }
         // idle until the next event: the oldest request's flush deadline,
@@ -622,10 +653,10 @@ fn run_shard(
             None => inbox.pop(),
         };
         running &= handle_msg(
-            shard, msg, live, carry, current, completions, stats_q, clock, faults,
+            shard, msg, live, carry, current, completions, stats_q, clock, obs, isa, faults,
         );
         // a flush may have become due while handling; the loop top re-checks
-        ship(shard, sl, live, completions, current.fp);
+        ship(shard, sl, live, completions, current.fp, obs, clock, isa);
     }
 }
 
@@ -640,6 +671,8 @@ fn handle_msg(
     completions: &MsgQueue<ShardCompletion>,
     stats_q: &MsgQueue<ShardStats>,
     clock: &RealClock,
+    obs: &ShardObs,
+    isa: u8,
     faults: Option<&FaultPlan>,
 ) -> bool {
     let sl = current.model.sample_len();
@@ -665,6 +698,7 @@ fn handle_msg(
                     shard,
                     r.id,
                     r.client,
+                    r.trace_id,
                     r.arrival_us,
                     now,
                     OutcomeCode::TimedOut,
@@ -676,7 +710,13 @@ fn handle_msg(
             // register for NACK accounting *before* the panic fail-point:
             // if the unwind fires past this line, the supervisor still
             // conserves the request
-            live.meta.push_back(InFlight { id: r.id, client: r.client, arrival_us: r.arrival_us });
+            live.meta.push_back(InFlight {
+                id: r.id,
+                client: r.client,
+                trace_id: r.trace_id,
+                arrival_us: r.arrival_us,
+                t_dequeue_us: now,
+            });
             if let Some(f) = faults {
                 f.check_panic(shard, r.id);
                 // a slow kernel: the request completes, late
@@ -697,7 +737,7 @@ fn handle_msg(
                 .engine
                 .swap_model(Arc::clone(&model), clock, &mut live.done)
                 .expect("swap drain");
-            ship(shard, sl, live, completions, current.fp);
+            ship(shard, sl, live, completions, current.fp, obs, clock, isa);
             current.model = model;
             current.fp = fp;
         }
@@ -717,7 +757,7 @@ fn handle_msg(
             while live.engine.queue_len() > 0 {
                 live.engine.flush(clock, &mut live.done).expect("shutdown flush");
             }
-            ship(shard, sl, live, completions, current.fp);
+            ship(shard, sl, live, completions, current.fp, obs, clock, isa);
             return false;
         }
     }
@@ -727,20 +767,43 @@ fn handle_msg(
 /// Forward engine completions to the driver, pairing each with its global
 /// id/client (FIFO — the engine completes in submission order) and a spare
 /// sample-length buffer from this shard's arena (in steady state, the
-/// payload buffer the engine just recycled).
+/// payload buffer the engine just recycled). Each served request's trace
+/// span is assembled here — all five stamps are now known — normalized,
+/// and pushed into the shard's SPSC ring (no allocation, never blocks;
+/// a full ring drops its oldest span and the driver counts the loss).
+#[allow(clippy::too_many_arguments)]
 fn ship(
     shard: usize,
     sl: usize,
     live: &mut LiveState,
     completions: &MsgQueue<ShardCompletion>,
     model_fp: u32,
+    obs: &ShardObs,
+    clock: &RealClock,
+    isa: u8,
 ) {
     for c in live.done.drain(..) {
         let m = live.meta.pop_front().expect("completion without admission metadata");
+        let mut span = TraceSpan {
+            trace_id: m.trace_id,
+            client: m.client,
+            shard: shard as u16,
+            isa,
+            outcome: OutcomeCode::Ok.code(),
+            batch: c.batch,
+            t_admit_us: c.arrival_us,
+            t_dequeue_us: m.t_dequeue_us,
+            t_exec_us: c.exec_us,
+            t_done_us: c.done_us,
+            t_ship_us: clock.now_us(),
+        };
+        span.normalize();
+        obs.ring.push(&span);
         let spare = workspace::take_uninit_f32(sl);
         completions.push(ShardCompletion {
             id: m.id,
             client: m.client,
+            trace_id: m.trace_id,
             shard,
             arrival_us: c.arrival_us,
             done_us: c.done_us,
@@ -850,6 +913,25 @@ pub struct ShardedServer {
     shed_deadline: u64,
     shed_shard_down: u64,
     degraded: u64,
+    // -- observability plane (ISSUE 9) ------------------------------------
+    /// Live metric handles over the server's registry; counters update
+    /// driver-side as outcomes are absorbed, so mid-run scrapes satisfy
+    /// the conservation law exactly.
+    metrics: ServeMetrics,
+    /// Per-shard trace rings plus one extra (index `shards`) the driver
+    /// itself produces into: front-door sheds and shard NACK spans.
+    obs_rings: Vec<Arc<TraceRing>>,
+    /// Seed of [`obs::trace_id`] — the serving model's fingerprint at
+    /// start, so identical runs export identical trace ids.
+    trace_seed: u64,
+    /// Attached span exporter (`--trace-out`); spans are pumped from the
+    /// rings on every completion poll.
+    tracer: Option<TraceExporter>,
+    trace_scratch: Vec<TraceSpan>,
+    /// Heartbeat period (µs); 0 = silent (`--progress-every`).
+    progress_every_us: u64,
+    last_beat_us: u64,
+    beat_served: u64,
 }
 
 impl ShardedServer {
@@ -881,6 +963,10 @@ impl ShardedServer {
         let sample_len = model.sample_len();
         let classes = model.classes();
         let model_fp = journal::model_fingerprint(&model);
+        let metrics = ServeMetrics::new(Arc::new(Registry::new()), policy.shards);
+        let obs_rings: Vec<Arc<TraceRing>> = (0..=policy.shards)
+            .map(|_| Arc::new(TraceRing::new(obs::DEFAULT_RING_CAPACITY)))
+            .collect();
         crate::info!(
             "sharded serve: {} shards × {} kernel thread(s), shared weights ≈ {} KiB",
             policy.shards,
@@ -900,6 +986,10 @@ impl ShardedServer {
                     let model = Arc::clone(&model);
                     let clock = clock.clone();
                     let health = Arc::clone(&health);
+                    let obs = Arc::new(ShardObs {
+                        ring: Arc::clone(&obs_rings[shard]),
+                        restarts: metrics.restarts.clone(),
+                    });
                     let faults = faults.clone();
                     let batch = policy.batch;
                     let restart_backoff_us = policy.restart_backoff_us;
@@ -915,6 +1005,7 @@ impl ShardedServer {
                             stats_q,
                             clock,
                             health,
+                            obs,
                             faults,
                             restart_backoff_us,
                         )
@@ -946,6 +1037,14 @@ impl ShardedServer {
             shed_deadline: 0,
             shed_shard_down: 0,
             degraded: 0,
+            metrics,
+            obs_rings,
+            trace_seed: model_fp as u64,
+            tracer: None,
+            trace_scratch: Vec::new(),
+            progress_every_us: 0,
+            last_beat_us: 0,
+            beat_served: 0,
         })
     }
 
@@ -1005,6 +1104,126 @@ impl ShardedServer {
         self.model_fp
     }
 
+    /// The server's live metric handles (shared registry underneath).
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Trace id a given admission id maps to (receipts store it too —
+    /// this is the join key between journal, completions, and spans).
+    pub fn trace_id_of(&self, id: u64) -> u64 {
+        trace::trace_id(self.trace_seed, id)
+    }
+
+    /// Refresh the scrape-time gauges (uptime, shard liveness, pool
+    /// occupancy, model fingerprint) and render the full text exposition.
+    /// Callable from the driver thread at any point in a run; the counter
+    /// set it renders satisfies `submitted == served + shed + timed_out +
+    /// failed + inflight` exactly between driver-loop iterations.
+    pub fn render_metrics(&self) -> String {
+        self.metrics.refresh(self.clock.now_us(), self.model_fp);
+        for s in 0..self.inboxes.len() {
+            self.metrics.set_shard_up(s, !self.health.is_down(s));
+        }
+        self.metrics.registry().render()
+    }
+
+    /// Export spans through `t` from now on (the driver pumps the trace
+    /// rings on every completion poll). Replaces any previous exporter.
+    /// Spans recorded while no exporter was attached — e.g. the warm
+    /// window before a measured run — are discarded here, along with
+    /// their ring-overwrite counts, so the dump and the `traces_dropped`
+    /// counter cover only the traced window.
+    pub fn attach_tracer(&mut self, t: TraceExporter) {
+        self.trace_scratch.clear();
+        for ring in &self.obs_rings {
+            ring.drain(&mut self.trace_scratch);
+        }
+        self.trace_scratch.clear();
+        self.tracer = Some(t);
+    }
+
+    /// Detach the exporter (finish it yourself — the reservoir of slow
+    /// outliers is only flushed by [`TraceExporter::finish`]). Pending
+    /// ring spans are pumped through it first.
+    pub fn take_tracer(&mut self) -> Option<TraceExporter> {
+        self.pump_traces();
+        self.tracer.take()
+    }
+
+    /// Emit a one-line stderr heartbeat every `every_s` seconds while the
+    /// driver polls completions (0 restores silence).
+    pub fn set_progress_every(&mut self, every_s: u64) {
+        self.progress_every_us = every_s.saturating_mul(1_000_000);
+        self.last_beat_us = self.clock.now_us();
+        self.beat_served = self.metrics.served.get();
+    }
+
+    /// Drain every trace ring through the attached exporter (no-op when
+    /// tracing is off — the rings then just overwrite in place). A write
+    /// error detaches the exporter with a log line rather than failing
+    /// the serving path, mirroring the journal's error policy.
+    fn pump_traces(&mut self) {
+        if self.tracer.is_none() {
+            return;
+        }
+        self.trace_scratch.clear();
+        let mut lost = 0u64;
+        for ring in &self.obs_rings {
+            lost += ring.drain(&mut self.trace_scratch);
+        }
+        if lost > 0 {
+            self.metrics.traces_dropped.add(lost);
+        }
+        if let Some(t) = self.tracer.as_mut() {
+            for span in &self.trace_scratch {
+                match t.observe(span) {
+                    Ok(true) => self.metrics.traces_exported.inc(),
+                    Ok(false) => {}
+                    Err(e) => {
+                        crate::info!("trace export failed ({}); tracing disabled", e);
+                        self.tracer = None;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The `--progress-every` heartbeat: one stderr line rendered from
+    /// the registry counters, at most once per configured period.
+    fn heartbeat_tick(&mut self) {
+        if self.progress_every_us == 0 {
+            return;
+        }
+        let now = self.clock.now_us();
+        if now.saturating_sub(self.last_beat_us) < self.progress_every_us {
+            return;
+        }
+        let dt_s = (now - self.last_beat_us) as f64 / 1e6;
+        let served = self.metrics.served.get();
+        let delta = served - self.beat_served;
+        let p99_us = self.metrics.latency.snapshot().quantile_us(0.99);
+        eprintln!(
+            "[serve +{}s] served {} (+{}, {:.0} rps) p99 {:.3} ms inflight {} \
+             shed {} timed_out {} failed {} restarts {} shards {}/{} up",
+            now / 1_000_000,
+            served,
+            delta,
+            delta as f64 / dt_s.max(1e-9),
+            p99_us as f64 / 1e3,
+            self.metrics.inflight.get(),
+            self.metrics.shed_total(),
+            self.metrics.timed_out.get(),
+            self.metrics.failed.get(),
+            self.metrics.restarts.get(),
+            (0..self.inboxes.len()).filter(|&s| !self.health.is_down(s)).count(),
+            self.inboxes.len(),
+        );
+        self.last_beat_us = now;
+        self.beat_served = served;
+    }
+
     /// Record every admission and outcome into `j` from now on (receipts
     /// carry logits digests; see [`super::journal`]). A journal write
     /// error disables journaling with a log line rather than failing the
@@ -1052,11 +1271,29 @@ impl ShardedServer {
             OutcomeCode::ShedDeadline => self.shed_deadline += 1,
             _ => self.shed_shard_down += 1,
         }
-        let latency_us = self.clock.now_us().saturating_sub(arrival_us);
+        let now = self.clock.now_us();
+        let latency_us = now.saturating_sub(arrival_us);
+        let trace_id = trace::trace_id(self.trace_seed, id);
+        // a front-door shed consumed an id: it is submitted and resolved
+        // in the same breath, and its span has only admit + ship stamps
+        self.metrics.submitted.inc();
+        self.metrics.observe_outcome(outcome, latency_us);
+        let mut span = TraceSpan {
+            trace_id,
+            client,
+            shard: u16::MAX, // no shard ever saw it
+            outcome: outcome.code(),
+            t_admit_us: arrival_us,
+            t_ship_us: now,
+            ..TraceSpan::default()
+        };
+        span.normalize();
+        self.obs_rings[self.inboxes.len()].push(&span);
         let fp = self.model_fp;
         self.journal_receipt(&Receipt {
             id,
             client,
+            trace_id,
             arrival_us,
             shard: journal::NO_SHARD,
             model_fp: fp,
@@ -1120,6 +1357,7 @@ impl ShardedServer {
                     Some(s) => {
                         if s != home {
                             self.degraded += 1;
+                            self.metrics.degraded.inc();
                         }
                         s
                     }
@@ -1132,10 +1370,13 @@ impl ShardedServer {
         let id = self.next_id;
         self.next_id += 1;
         self.journal_request(id, client, arrival_us, deadline_us, &x);
+        self.metrics.submitted.inc();
+        self.metrics.inflight.inc();
         let recycle = self.freelists[target].pop();
         self.inboxes[target].push(ShardMsg::Request(ShardRequest {
             id,
             client,
+            trace_id: trace::trace_id(self.trace_seed, id),
             arrival_us,
             deadline_us,
             x,
@@ -1194,12 +1435,32 @@ impl ShardedServer {
             out.push(self.absorb(c));
             n += 1;
         }
+        self.pump_traces();
+        self.heartbeat_tick();
         Ok(n)
     }
 
     fn absorb(&mut self, mut c: ShardCompletion) -> ShardCompletion {
         workspace::give_f32(std::mem::take(&mut c.spare));
         self.outstanding -= 1;
+        self.metrics.inflight.dec();
+        self.metrics.observe_outcome(c.outcome, c.latency_us());
+        if !c.outcome.is_ok() {
+            // served requests' spans were assembled shard-side in `ship`;
+            // NACKs never reach it, so the driver records their (sparser)
+            // spans here — admit and resolve stamps only
+            let mut span = TraceSpan {
+                trace_id: c.trace_id,
+                client: c.client,
+                shard: c.shard as u16,
+                outcome: c.outcome.code(),
+                t_admit_us: c.arrival_us,
+                t_ship_us: c.done_us,
+                ..TraceSpan::default()
+            };
+            span.normalize();
+            self.obs_rings[self.inboxes.len()].push(&span);
+        }
         if let Some(rt) = self.routes.get_mut(&c.client) {
             rt.outstanding = rt.outstanding.saturating_sub(1);
         }
@@ -1225,6 +1486,7 @@ impl ShardedServer {
             self.journal_receipt(&Receipt {
                 id: c.id,
                 client: c.client,
+                trace_id: c.trace_id,
                 arrival_us: c.arrival_us,
                 shard: c.shard as u64,
                 model_fp: c.model_fp,
@@ -1380,6 +1642,17 @@ impl ShardedServer {
         while let Some(c) = self.completions.try_pop() {
             let c = self.absorb(c);
             rest.push(c);
+        }
+        self.pump_traces();
+        if let Some(t) = self.tracer.take() {
+            match t.finish() {
+                Ok((head, tail)) => crate::info!(
+                    "trace export: {} sampled span(s) + {} slow outlier(s) flushed",
+                    head,
+                    tail
+                ),
+                Err(e) => crate::info!("trace export: finish failed ({})", e),
+            }
         }
         Ok(rest)
     }

@@ -7,6 +7,10 @@
 //! Quantiles return the **upper edge** of the hit bucket (conservative:
 //! reported p99 never understates the true p99 by more than one bucket).
 
+use std::sync::Arc;
+
+use crate::kernels::pool;
+use crate::obs::{metric_key, Counter, Gauge, Histogram, Registry};
 use crate::util::json::Json;
 
 /// How a request left the serving runtime — the reason code stamped on
@@ -90,6 +94,11 @@ impl OutcomeCode {
 const SUB: usize = 4;
 /// Powers of two covered: [2^0, 2^40) µs ≈ up to 12.7 days.
 const EXPS: usize = 40;
+/// Total fixed bucket count. `obs::AtomicHistogram` mirrors this exact
+/// layout in atomics and snapshots back through
+/// [`LatencyHistogram::from_bucket_counts`], so the two histograms always
+/// agree bucket-for-bucket.
+pub(crate) const HIST_BUCKETS: usize = SUB * EXPS;
 
 /// Fixed-size log-bucketed histogram over microsecond latencies.
 #[derive(Clone, Debug)]
@@ -139,6 +148,32 @@ impl LatencyHistogram {
         e * SUB + sub
     }
 
+    /// Bucket index of a latency — exposed crate-wide so the lock-free
+    /// atomic mirror in `obs` buckets identically.
+    pub(crate) fn bucket_index(us: u64) -> usize {
+        Self::bucket_of(us)
+    }
+
+    /// Rebuild a histogram from raw bucket counts plus the scalar
+    /// trackers (the `obs::AtomicHistogram` snapshot path). `buckets`
+    /// must be exactly [`HIST_BUCKETS`] long; `min_us` uses the same
+    /// `u64::MAX`-when-empty sentinel as a fresh histogram.
+    pub(crate) fn from_bucket_counts(
+        buckets: &[u64],
+        sum_us: u64,
+        min_us: u64,
+        max_us: u64,
+    ) -> LatencyHistogram {
+        debug_assert_eq!(buckets.len(), HIST_BUCKETS);
+        LatencyHistogram {
+            buckets: buckets.to_vec(),
+            count: buckets.iter().sum(),
+            sum_us,
+            min_us,
+            max_us,
+        }
+    }
+
     /// Upper edge (µs) of a bucket — what quantiles report.
     fn bucket_upper_us(idx: usize) -> u64 {
         let e = idx / SUB;
@@ -157,6 +192,11 @@ impl LatencyHistogram {
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Saturating sum of all recorded latencies (µs).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -331,6 +371,150 @@ impl ServeReport {
     }
 }
 
+/// The serving stack's live metric handles, registered by name in one
+/// shared [`Registry`] (`dynadiag_*` namespace). The sharded server owns
+/// one instance; hot-path updates are `Relaxed` atomics on pre-registered
+/// handles — no lock, no allocation, no lookup per request.
+///
+/// The counters encode the conservation law **exactly at any driver-loop
+/// boundary**, not just at end of run:
+///
+/// ```text
+/// submitted == served + shed + timed_out + failed + inflight
+/// ```
+///
+/// `submitted` counts admissions *and* front-door sheds (both consume a
+/// request id); `inflight` is the gauge bridging mid-run scrapes to the
+/// end-of-run `ServeReport` totals. Shard supervisors bump `restarts`
+/// directly (a shared `Counter` handle crosses the thread boundary);
+/// everything else is updated driver-side where outcomes are absorbed,
+/// so no outcome is ever double-counted.
+pub struct ServeMetrics {
+    registry: Arc<Registry>,
+    pub submitted: Counter,
+    pub served: Counter,
+    pub shed_deadline: Counter,
+    pub shed_shard_down: Counter,
+    pub shed_over_capacity: Counter,
+    pub timed_out: Counter,
+    pub failed: Counter,
+    pub inflight: Gauge,
+    pub degraded: Counter,
+    pub restarts: Counter,
+    /// Arrival→done latency of Ok requests (mirrors the report histogram).
+    pub latency: Histogram,
+    pub traces_dropped: Counter,
+    pub traces_exported: Counter,
+    uptime_us: Gauge,
+    model_fp: Gauge,
+    shard_up: Vec<Gauge>,
+    pool_dispatches: Gauge,
+    pool_inline_runs: Gauge,
+    pool_scoped_fallbacks: Gauge,
+    pool_tasks: Gauge,
+    pool_busy_us: Gauge,
+}
+
+impl ServeMetrics {
+    /// Register every serving metric in `registry` and return the handle
+    /// set. Keys are stable — the exposition golden test pins them.
+    pub fn new(registry: Arc<Registry>, shards: usize) -> ServeMetrics {
+        let shed = |reason: &str| {
+            registry.counter(&metric_key("dynadiag_requests_shed_total", &[("reason", reason)]))
+        };
+        let shard_up = (0..shards)
+            .map(|s| {
+                let g = registry
+                    .gauge(&metric_key("dynadiag_shard_up", &[("shard", &s.to_string())]));
+                g.set(1);
+                g
+            })
+            .collect();
+        ServeMetrics {
+            submitted: registry.counter("dynadiag_requests_submitted_total"),
+            served: registry.counter("dynadiag_requests_served_total"),
+            shed_deadline: shed("deadline"),
+            shed_shard_down: shed("shard_down"),
+            shed_over_capacity: shed("over_capacity"),
+            timed_out: registry.counter("dynadiag_requests_timed_out_total"),
+            failed: registry.counter("dynadiag_requests_failed_total"),
+            inflight: registry.gauge("dynadiag_requests_inflight"),
+            degraded: registry.counter("dynadiag_requests_degraded_total"),
+            restarts: registry.counter("dynadiag_shard_restarts_total"),
+            latency: registry.histogram("dynadiag_request_latency_us"),
+            traces_dropped: registry.counter("dynadiag_traces_dropped_total"),
+            traces_exported: registry.counter("dynadiag_traces_exported_total"),
+            uptime_us: registry.gauge("dynadiag_uptime_us"),
+            model_fp: registry.gauge("dynadiag_model_fp"),
+            shard_up,
+            pool_dispatches: registry.gauge("dynadiag_pool_dispatches"),
+            pool_inline_runs: registry.gauge("dynadiag_pool_inline_runs"),
+            pool_scoped_fallbacks: registry.gauge("dynadiag_pool_scoped_fallbacks"),
+            pool_tasks: registry.gauge("dynadiag_pool_tasks"),
+            pool_busy_us: registry.gauge("dynadiag_pool_busy_us"),
+            registry,
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Count one resolved request (and its latency, when it served).
+    /// Called exactly once per accounted outcome.
+    pub fn observe_outcome(&self, outcome: OutcomeCode, latency_us: u64) {
+        match outcome {
+            OutcomeCode::Ok => {
+                self.served.inc();
+                self.latency.record_us(latency_us);
+            }
+            OutcomeCode::ShedDeadline => self.shed_deadline.inc(),
+            OutcomeCode::ShedShardDown => self.shed_shard_down.inc(),
+            OutcomeCode::ShedOverCapacity => self.shed_over_capacity.inc(),
+            OutcomeCode::TimedOut => self.timed_out.inc(),
+            OutcomeCode::FailedPanic => self.failed.inc(),
+        }
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed_deadline.get() + self.shed_shard_down.get() + self.shed_over_capacity.get()
+    }
+
+    /// Requests resolved with any outcome.
+    pub fn accounted(&self) -> u64 {
+        self.served.get() + self.shed_total() + self.timed_out.get() + self.failed.get()
+    }
+
+    /// The conservation law, checkable mid-run thanks to the inflight
+    /// gauge (exact when read from the driver thread between absorbs).
+    pub fn conserved(&self) -> bool {
+        self.submitted.get() == self.accounted() + self.inflight.get()
+    }
+
+    /// Refresh the scrape-time gauges (uptime, model fingerprint, pool
+    /// occupancy totals) — call before rendering the registry.
+    pub fn refresh(&self, uptime_us: u64, model_fp: u32) {
+        self.uptime_us.set(uptime_us);
+        self.model_fp.set(model_fp as u64);
+        let p = pool::profile::stats();
+        self.pool_dispatches.set(p.pool_dispatches);
+        self.pool_inline_runs.set(p.inline_runs);
+        self.pool_scoped_fallbacks.set(p.scoped_fallbacks);
+        self.pool_tasks.set(p.tasks);
+        self.pool_busy_us.set(p.busy_us);
+    }
+
+    pub fn set_shard_up(&self, shard: usize, up: bool) {
+        if let Some(g) = self.shard_up.get(shard) {
+            g.set(up as u64);
+        }
+    }
+
+    pub fn shards_up(&self) -> usize {
+        self.shard_up.iter().filter(|g| g.get() == 1).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -475,5 +659,46 @@ mod tests {
         h.reset();
         assert_eq!(h.count(), 0);
         assert_eq!(h.quantile_us(0.5), 0);
+    }
+
+    #[test]
+    fn serve_metrics_conserve_and_render() {
+        let m = ServeMetrics::new(Arc::new(Registry::new()), 2);
+        assert!(m.conserved(), "empty hub conserves trivially");
+        // 5 admitted, 1 front-door shed; then 3 served, 1 timed out
+        for _ in 0..5 {
+            m.submitted.inc();
+            m.inflight.inc();
+        }
+        m.submitted.inc();
+        m.observe_outcome(OutcomeCode::ShedDeadline, 0);
+        for us in [100u64, 200, 300] {
+            m.inflight.dec();
+            m.observe_outcome(OutcomeCode::Ok, us);
+        }
+        m.inflight.dec();
+        m.observe_outcome(OutcomeCode::TimedOut, 0);
+        assert_eq!(m.inflight.get(), 1);
+        assert_eq!(m.accounted(), 5);
+        assert!(m.conserved(), "mid-run conservation via the inflight gauge");
+        assert_eq!(m.latency.count(), 3, "only Ok latencies are recorded");
+        m.set_shard_up(1, false);
+        assert_eq!(m.shards_up(), 1);
+        m.refresh(1_234, 0xDEAD);
+        let text = m.registry().render();
+        for key in [
+            "dynadiag_requests_submitted_total 6",
+            "dynadiag_requests_served_total 3",
+            "dynadiag_requests_shed_total{reason=\"deadline\"} 1",
+            "dynadiag_requests_inflight 1",
+            "dynadiag_requests_timed_out_total 1",
+            "dynadiag_request_latency_us_count 3",
+            "dynadiag_shard_up{shard=\"0\"} 1",
+            "dynadiag_shard_up{shard=\"1\"} 0",
+            "dynadiag_uptime_us 1234",
+            "dynadiag_model_fp 57005",
+        ] {
+            assert!(text.contains(&format!("{}\n", key)), "missing '{}' in:\n{}", key, text);
+        }
     }
 }

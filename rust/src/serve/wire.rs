@@ -18,7 +18,7 @@
 //! ## Binary frames (both directions)
 //!
 //! ```text
-//! kind     u8   1 = request, 2 = response, 3 = error
+//! kind     u8   1 = request, 2 = response, 3 = error, 4 = stats
 //! len      u32  payload length (capped at MAX_FRAME_PAYLOAD)
 //! payload  ..   little-endian fields, see below
 //! crc32    u32  IEEE CRC-32 of kind byte ++ payload
@@ -34,6 +34,12 @@
 //!
 //! Error payload: `seq u64 ([`NO_REQUEST_ID`] when the error is not
 //! attributable to a request), msg str (u32 len prefix)`.
+//!
+//! Stats payload: empty client → server (a scrape request); server →
+//! client it is the UTF-8 metrics text exposition (`obs::Registry::
+//! render`), exactly what the `--metrics-addr` HTTP scrape would return.
+//! Stats frames carry no seq — they are answered in-band, in order,
+//! relative to the requests of the same connection.
 //!
 //! ## JSON line mode
 //!
@@ -68,6 +74,9 @@ pub const WIRE_VERSION: u8 = 1;
 pub const FRAME_REQUEST: u8 = 1;
 pub const FRAME_RESPONSE: u8 = 2;
 pub const FRAME_ERROR: u8 = 3;
+/// Metrics scrape: empty payload client → server, UTF-8 text exposition
+/// server → client.
+pub const FRAME_STATS: u8 = 4;
 /// Hard cap on a single frame's payload: a corrupt or hostile length
 /// field cannot make the server stage a huge buffer before the CRC check.
 pub const MAX_FRAME_PAYLOAD: usize = 4 << 20;
@@ -308,6 +317,27 @@ pub fn encode_error(scratch: &mut Enc, out: &mut Vec<u8>, seq: u64, msg: &str) {
     frame_into(out, FRAME_ERROR, &scratch.buf);
 }
 
+/// Client side: encode a metrics scrape request (empty payload).
+pub fn encode_stats_request(out: &mut Vec<u8>) {
+    frame_into(out, FRAME_STATS, &[]);
+}
+
+/// Server side: encode a scrape response carrying the text exposition.
+/// The exposition is bounded by the metric-name universe, not by
+/// traffic, so it fits [`MAX_FRAME_PAYLOAD`] with orders of magnitude to
+/// spare; a debug assert pins that assumption.
+pub fn encode_stats_response(out: &mut Vec<u8>, exposition: &str) {
+    debug_assert!(exposition.len() <= MAX_FRAME_PAYLOAD);
+    frame_into(out, FRAME_STATS, exposition.as_bytes());
+}
+
+/// Client side: decode a scrape response payload into the exposition
+/// text. (The CRC already vouched for the bytes; this validates UTF-8.)
+pub fn decode_stats_response(payload: &[u8]) -> Result<String> {
+    String::from_utf8(payload.to_vec())
+        .map_err(|e| anyhow::anyhow!("wire: stats exposition is not UTF-8: {}", e))
+}
+
 /// Client side: decode an error payload into (seq, message).
 pub fn decode_error(payload: &[u8]) -> Result<(u64, String)> {
     let mut d = crate::artifact::Dec::new(payload, "wire error frame");
@@ -476,6 +506,27 @@ mod tests {
         let (seq, msg) = decode_error(&payload).unwrap();
         assert_eq!(seq, NO_REQUEST_ID);
         assert_eq!(msg, "boom");
+    }
+
+    #[test]
+    fn stats_frames_round_trip() {
+        // scrape request: an empty FRAME_STATS payload
+        let mut wire = Vec::new();
+        encode_stats_request(&mut wire);
+        let mut payload = Vec::new();
+        let mut r = Cursor::new(wire.clone());
+        assert_eq!(read_frame(&mut r, &mut payload).unwrap(), Some(FRAME_STATS));
+        assert!(payload.is_empty(), "scrape request carries no payload");
+
+        // scrape response: the exposition text, byte-exact through the codec
+        let exposition = "dynadiag_requests_served_total 7\ndynadiag_uptime_us 123\n";
+        encode_stats_response(&mut wire, exposition);
+        let mut r = Cursor::new(wire.clone());
+        assert_eq!(read_frame(&mut r, &mut payload).unwrap(), Some(FRAME_STATS));
+        assert_eq!(decode_stats_response(&payload).unwrap(), exposition);
+
+        let err = decode_stats_response(&[0xFF, 0xFE]).unwrap_err().to_string();
+        assert!(err.contains("UTF-8"), "got: {}", err);
     }
 
     #[test]

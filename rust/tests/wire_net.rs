@@ -17,7 +17,7 @@
 //!    are refused with reason-coded `ShedOverCapacity` NACKs, visible on
 //!    both ends, with the ledger conserved.
 
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -28,8 +28,8 @@ use dynadiag::artifact::Enc;
 use dynadiag::runtime::infer::{mlp_config, DiagModel};
 use dynadiag::serve::wire;
 use dynadiag::serve::{
-    replay, run_client, BatchPolicy, ClientSpec, Journal, NetOptions, NetReport, NetServer,
-    OutcomeCode, ShardPolicy, ShardedServer,
+    replay, run_client, scrape_metrics, BatchPolicy, ClientSpec, Journal, NetOptions,
+    NetReport, NetServer, OutcomeCode, ShardPolicy, ShardedServer,
 };
 
 /// Bind a front door over a fresh synthetic-model server on an ephemeral
@@ -64,6 +64,7 @@ fn start_server(
             shutdown: Some(stop.clone()),
             obey_signals: false,
             reset_after: 0,
+            metrics_addr: None,
         },
     )
     .unwrap();
@@ -275,6 +276,106 @@ fn client_disconnect_mid_request_keeps_ledger_and_journal_balanced() {
     let rr = replay(&jpath, &model).unwrap();
     assert!(rr.ok(), "replay after a disconnect: {}", rr.summary());
     std::fs::remove_file(&jpath).ok();
+}
+
+/// Sum every exposition line whose metric name (before any label block)
+/// is exactly `name`. Panics on a malformed line so format drift is loud.
+fn metric_total(exposition: &str, name: &str) -> u64 {
+    let mut total = 0u64;
+    let mut seen = false;
+    for line in exposition.lines().filter(|l| !l.trim().is_empty()) {
+        let (key, value) = line.rsplit_once(' ').expect("exposition line: `name value`");
+        let base = key.split('{').next().unwrap();
+        if base == name {
+            total += value.parse::<u64>().expect("exposition values are integers");
+            seen = true;
+        }
+    }
+    assert!(seen, "metric {} missing from exposition:\n{}", name, exposition);
+    total
+}
+
+#[test]
+fn stats_frame_and_http_scrape_expose_a_conserved_registry() {
+    let model = synth();
+    let sl = model.sample_len();
+    let mut server = ShardedServer::start(
+        model,
+        ShardPolicy {
+            shards: 2,
+            batch: BatchPolicy::new(4, 200).unwrap(),
+            max_outstanding: 32,
+            ..ShardPolicy::default()
+        },
+    )
+    .unwrap();
+    server.seed_ewma();
+    let stop = Arc::new(AtomicBool::new(false));
+    let net = NetServer::bind(
+        server,
+        "127.0.0.1:0",
+        NetOptions {
+            conn_window: 0,
+            drain_on_idle: false,
+            shutdown: Some(stop.clone()),
+            obey_signals: false,
+            reset_after: 0,
+            metrics_addr: Some("127.0.0.1:0".to_string()),
+        },
+    )
+    .unwrap();
+    let addr = net.local_addr().unwrap().to_string();
+    let maddr = net.metrics_local_addr().expect("metrics listener bound").to_string();
+    let handle = std::thread::spawn(move || net.run());
+
+    let r = run_client(
+        &addr,
+        sl,
+        &ClientSpec { requests: 32, seed: 21, ..ClientSpec::default() },
+    )
+    .unwrap();
+    assert_eq!(r.ok, 32, "load client: {}", r.summary());
+
+    // in-band scrape: a stats wire frame on its own connection
+    let text = scrape_metrics(&addr).unwrap();
+    let submitted = metric_total(&text, "dynadiag_requests_submitted_total");
+    let accounted = metric_total(&text, "dynadiag_requests_served_total")
+        + metric_total(&text, "dynadiag_requests_shed_total")
+        + metric_total(&text, "dynadiag_requests_timed_out_total")
+        + metric_total(&text, "dynadiag_requests_failed_total")
+        + metric_total(&text, "dynadiag_requests_inflight");
+    assert_eq!(submitted, accounted, "conservation law in the scrape:\n{}", text);
+    assert_eq!(metric_total(&text, "dynadiag_requests_served_total"), 32);
+    assert_eq!(metric_total(&text, "dynadiag_request_latency_us_count"), 32);
+    assert_eq!(metric_total(&text, "dynadiag_traces_dropped_total"), 0);
+    assert_eq!(metric_total(&text, "dynadiag_shard_up"), 2, "both shards up");
+    assert!(metric_total(&text, "dynadiag_uptime_us") > 0);
+
+    // HTTP scrape: hand-rolled GET against the metrics listener
+    let mut s = TcpStream::connect(&maddr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+    let mut http = String::new();
+    s.read_to_string(&mut http).unwrap();
+    assert!(http.starts_with("HTTP/1.0 200 OK\r\n"), "got: {}", http);
+    let body = http.split("\r\n\r\n").nth(1).expect("HTTP body");
+    assert_eq!(metric_total(body, "dynadiag_requests_served_total"), 32);
+    assert_eq!(
+        metric_total(body, "dynadiag_requests_submitted_total"),
+        metric_total(body, "dynadiag_requests_served_total")
+            + metric_total(body, "dynadiag_requests_shed_total")
+            + metric_total(body, "dynadiag_requests_timed_out_total")
+            + metric_total(body, "dynadiag_requests_failed_total")
+            + metric_total(body, "dynadiag_requests_inflight"),
+        "conservation law over HTTP:\n{}",
+        body
+    );
+
+    stop.store(true, Ordering::SeqCst);
+    let rep = handle.join().unwrap().unwrap();
+    assert!(rep.wire.conserved(), "ledger: {}", rep.summary());
+    assert_eq!(rep.wire.scrapes, 2, "one in-band + one HTTP scrape");
+    // the scrape connection submitted nothing
+    assert_eq!(rep.wire.submitted, 32);
 }
 
 #[test]
