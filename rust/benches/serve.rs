@@ -896,6 +896,7 @@ fn main() {
         let mut scrape_us: Vec<u64> = Vec::new();
         let mut exposition_bytes = 0usize;
         for _ in 0..n_scrapes {
+            // ddlint: allow(clock) -- bench measures real scrape latency
             let t0 = std::time::Instant::now();
             match scrape_metrics(&addr) {
                 Ok(text) => {

@@ -1,0 +1,151 @@
+//! `ddlint` in-source directives.
+//!
+//! A finding can be suppressed at its site with a justified directive:
+//!
+//! ```text
+//! let t0 = Instant::now(); // ddlint: allow(clock) -- bench wall time, not serving-path time
+//! ```
+//!
+//! or on the line directly above the flagged one:
+//!
+//! ```text
+//! // ddlint: allow(zero_alloc) -- capacity-0 Vec::new never touches the allocator
+//! logits: Vec::new(),
+//! ```
+//!
+//! The justification after `--` is **mandatory** and the rule name must
+//! be one of [`crate::analysis::RULES`]; a directive violating either is
+//! itself a violation (`directive` rule), so `allow` can never silently
+//! rot. Fixture files declare the rule they exist to trip with a
+//! first-line marker: `// ddlint-fixture: expect(<rule>)`.
+
+use super::lexer::Masked;
+
+/// One parsed `ddlint:` directive.
+#[derive(Clone, Debug)]
+pub struct Directive {
+    /// 1-based line the directive comment starts on.
+    pub line: usize,
+    /// Rules this directive allows (empty if the directive is malformed).
+    pub rules: Vec<String>,
+    /// Justification text after `--` (trimmed; empty = missing).
+    pub justification: String,
+    /// Parse error, if the comment said `ddlint:` but was malformed.
+    pub error: Option<String>,
+}
+
+/// The comment's text with the `//`/`/*`/doc markers stripped. A
+/// directive must *start* the comment — prose that merely mentions
+/// `ddlint:` (like this module's own docs) is not a directive.
+fn comment_body(text: &str) -> &str {
+    text.trim_start_matches(['/', '!', '*']).trim_start()
+}
+
+/// Extract every `ddlint:` directive from a file's comments.
+pub fn parse(masked: &Masked) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for c in &masked.comments {
+        let Some(rest) = comment_body(&c.text).strip_prefix("ddlint:") else { continue };
+        let line = masked.comment_line(c);
+        out.push(parse_one(line, rest.trim()));
+    }
+    out
+}
+
+fn parse_one(line: usize, rest: &str) -> Directive {
+    let mut d = Directive { line, rules: Vec::new(), justification: String::new(), error: None };
+    let Some(inner) = rest.strip_prefix("allow(") else {
+        d.error = Some(format!("expected `allow(<rule>) -- <justification>`, got `{}`", rest));
+        return d;
+    };
+    let Some(close) = inner.find(')') else {
+        d.error = Some("unclosed `allow(` rule list".to_string());
+        return d;
+    };
+    for r in inner[..close].split(',') {
+        let r = r.trim();
+        if !r.is_empty() {
+            d.rules.push(r.to_string());
+        }
+    }
+    if d.rules.is_empty() {
+        d.error = Some("empty rule list in `allow()`".to_string());
+        return d;
+    }
+    let tail = inner[close + 1..].trim();
+    match tail.strip_prefix("--") {
+        Some(j) if !j.trim().is_empty() => d.justification = j.trim().to_string(),
+        _ => {
+            d.error = Some("missing `-- <justification>` (every allow must say why)".to_string());
+        }
+    }
+    d
+}
+
+/// The rule a fixture file declares it exists to trip:
+/// `// ddlint-fixture: expect(<rule>)` anywhere in the file (by
+/// convention the first line).
+pub fn fixture_expectation(masked: &Masked) -> Option<String> {
+    for c in &masked.comments {
+        if let Some(rest) = comment_body(&c.text).strip_prefix("ddlint-fixture:") {
+            if let Some(inner) = rest.trim().strip_prefix("expect(") {
+                if let Some(close) = inner.find(')') {
+                    return Some(inner[..close].trim().to_string());
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Is a finding of `rule` at `line` suppressed by a *well-formed*
+/// directive (same line or the line directly above)?
+pub fn suppressed(directives: &[Directive], rule: &str, line: usize) -> bool {
+    directives.iter().any(|d| {
+        d.error.is_none()
+            && !d.justification.is_empty()
+            && (d.line == line || d.line + 1 == line)
+            && d.rules.iter().any(|r| r == rule)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::mask;
+
+    #[test]
+    fn well_formed_directive_parses_and_suppresses() {
+        let m = mask("// ddlint: allow(clock) -- bench timer only\nlet t = Instant::now();\n");
+        let ds = parse(&m);
+        assert_eq!(ds.len(), 1);
+        assert!(ds[0].error.is_none(), "{:?}", ds[0].error);
+        assert_eq!(ds[0].rules, vec!["clock"]);
+        assert_eq!(ds[0].justification, "bench timer only");
+        assert!(suppressed(&ds, "clock", 2), "line-above suppression");
+        assert!(suppressed(&ds, "clock", 1), "same-line suppression");
+        assert!(!suppressed(&ds, "clock", 3));
+        assert!(!suppressed(&ds, "zero_alloc", 2));
+    }
+
+    #[test]
+    fn missing_justification_is_an_error_and_does_not_suppress() {
+        let m = mask("foo(); // ddlint: allow(panic_discipline)\n");
+        let ds = parse(&m);
+        assert_eq!(ds.len(), 1);
+        assert!(ds[0].error.is_some());
+        assert!(!suppressed(&ds, "panic_discipline", 1));
+    }
+
+    #[test]
+    fn multi_rule_and_fixture_markers() {
+        let m = mask("// ddlint: allow(clock, zero_alloc) -- test scaffolding\nx();\n");
+        let ds = parse(&m);
+        assert_eq!(ds[0].rules, vec!["clock", "zero_alloc"]);
+        assert!(suppressed(&ds, "zero_alloc", 2));
+
+        let f = mask("// ddlint-fixture: expect(wire_freeze)\nenum OutcomeCode {}\n");
+        assert_eq!(fixture_expectation(&f).as_deref(), Some("wire_freeze"));
+        assert_eq!(fixture_expectation(&m), None);
+    }
+}

@@ -1,0 +1,329 @@
+//! Pass 3: wire-freeze.
+//!
+//! The crate's externally-visible byte surface — `OutcomeCode`
+//! discriminants, wire/journal frame kinds, artifact kinds, magics, and
+//! version constants — must never drift silently: a renumbered outcome
+//! code corrupts every recorded journal and breaks every deployed
+//! client. This pass extracts that surface *from source text* and diffs
+//! it against the committed golden table
+//! `rust/tests/golden/wire_frozen.json`. Changing the surface therefore
+//! requires editing the golden file in the same commit, which is exactly
+//! the reviewable act of "freezing" a new constant.
+//!
+//! Magic values are compared by their **source spelling** (`DDWIR\0`
+//! stays the two characters `\` `0`, never interpreted), so the golden
+//! file needs no escape-sequence semantics.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::Finding;
+
+/// The four files that define the frozen surface, relative to the crate
+/// root, with the constants each contributes.
+pub const FREEZE_FILES: &[&str] = &[
+    "src/serve/stats.rs",
+    "src/serve/wire.rs",
+    "src/serve/journal.rs",
+    "src/artifact/mod.rs",
+];
+
+/// Extracted `key -> value` pairs (sorted by key) plus any structural
+/// findings (missing `repr(u8)`, unparseable enum).
+pub struct Extraction {
+    pub entries: Vec<(String, String)>,
+    pub findings: Vec<Finding>,
+}
+
+/// Value of `const NAME: ... = VALUE;` in `raw`, as spelled in source.
+/// Byte-string values (`b"DDWIR\0"`, `*b"DDIAG\0"`) reduce to their
+/// inner characters; numeric values to their trimmed spelling.
+fn const_value(raw: &str, name: &str) -> Option<String> {
+    let pat = format!("const {}:", name);
+    let at = raw.find(&pat)?;
+    let rest = &raw[at..];
+    let eq = rest.find('=')?;
+    let semi = rest[eq..].find(';')? + eq;
+    let mut v = rest[eq + 1..semi].trim();
+    v = v.trim_start_matches('*');
+    if let Some(inner) = v.strip_prefix("b\"") {
+        return inner.strip_suffix('"').map(|s| s.to_string());
+    }
+    Some(v.to_string())
+}
+
+/// Parse `Name = N` variant pairs from the body of `enum <enum_name>`.
+fn enum_discriminants(raw: &str, enum_name: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let Some(at) = raw.find(&format!("enum {}", enum_name)) else { return out };
+    let Some(open) = raw[at..].find('{').map(|p| at + p) else { return out };
+    let Some(close) = raw[open..].find('}').map(|p| open + p) else { return out };
+    // strip line/doc comments BEFORE splitting on commas — doc text
+    // freely contains commas, which would otherwise shear variant chunks
+    let body = raw[open + 1..close]
+        .lines()
+        .map(|l| l.split("//").next().unwrap_or(""))
+        .collect::<Vec<_>>()
+        .join("\n");
+    for part in body.split(',') {
+        let line = part.split_whitespace().collect::<Vec<_>>().join(" ");
+        if let Some((name, val)) = line.split_once('=') {
+            let name = name.trim();
+            let val = val.trim();
+            if !name.is_empty()
+                && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                && val.chars().all(|c| c.is_ascii_digit())
+                && !val.is_empty()
+            {
+                out.push((name.to_string(), val.to_string()));
+            }
+        }
+    }
+    out
+}
+
+/// Check that the enum declaration carries `#[repr(u8)]` (searched in
+/// the attribute block directly above it). Used on the real
+/// `serve/stats.rs` and on fixtures that declare an `OutcomeCode`.
+pub fn check_outcome_repr(rel: &str, raw: &str, out: &mut Vec<Finding>) -> bool {
+    let Some(at) = raw.find("enum OutcomeCode") else { return true };
+    let head_start = at.saturating_sub(400);
+    let head = &raw[head_start..at];
+    let line = raw[..at].matches('\n').count() + 1;
+    if !head.contains("#[repr(u8)]") {
+        out.push(Finding::new(
+            "wire_freeze",
+            rel,
+            line,
+            "`OutcomeCode` is a wire enum and must be `#[repr(u8)]`".to_string(),
+        ));
+        return false;
+    }
+    true
+}
+
+/// Extract the frozen surface from the crate at `root`.
+pub fn extract(root: &Path) -> Result<Extraction> {
+    let mut entries: Vec<(String, String)> = Vec::new();
+    let mut findings = Vec::new();
+    let read = |rel: &str| -> Result<String> {
+        std::fs::read_to_string(root.join(rel))
+            .with_context(|| format!("wire-freeze: reading {}", rel))
+    };
+
+    // OutcomeCode (serve/stats.rs)
+    let stats = read("src/serve/stats.rs")?;
+    check_outcome_repr("src/serve/stats.rs", &stats, &mut findings);
+    let variants = enum_discriminants(&stats, "OutcomeCode");
+    if variants.is_empty() {
+        findings.push(Finding::new(
+            "wire_freeze",
+            "src/serve/stats.rs",
+            1,
+            "could not parse any `Name = N` variants out of `enum OutcomeCode`".to_string(),
+        ));
+    }
+    for (name, val) in variants {
+        entries.push((format!("outcome.{}", name), val));
+    }
+
+    // wire protocol (serve/wire.rs)
+    let wire = read("src/serve/wire.rs")?;
+    for (key, cname) in [
+        ("wire.magic", "WIRE_MAGIC"),
+        ("wire.version", "WIRE_VERSION"),
+        ("wire.frame.request", "FRAME_REQUEST"),
+        ("wire.frame.response", "FRAME_RESPONSE"),
+        ("wire.frame.error", "FRAME_ERROR"),
+        ("wire.frame.stats", "FRAME_STATS"),
+    ] {
+        match const_value(&wire, cname) {
+            Some(v) => entries.push((key.to_string(), v)),
+            None => findings.push(Finding::new(
+                "wire_freeze",
+                "src/serve/wire.rs",
+                1,
+                format!("frozen constant `{}` not found", cname),
+            )),
+        }
+    }
+
+    // journal (serve/journal.rs)
+    let journal = read("src/serve/journal.rs")?;
+    for (key, cname) in [
+        ("journal.magic", "MAGIC"),
+        ("journal.version", "VERSION"),
+        ("journal.rec.request", "REC_REQUEST"),
+        ("journal.rec.receipt", "REC_RECEIPT"),
+    ] {
+        match const_value(&journal, cname) {
+            Some(v) => entries.push((key.to_string(), v)),
+            None => findings.push(Finding::new(
+                "wire_freeze",
+                "src/serve/journal.rs",
+                1,
+                format!("frozen constant `{}` not found", cname),
+            )),
+        }
+    }
+
+    // artifact container (artifact/mod.rs)
+    let artifact = read("src/artifact/mod.rs")?;
+    for (key, cname) in [("artifact.magic", "MAGIC"), ("artifact.version", "VERSION")] {
+        match const_value(&artifact, cname) {
+            Some(v) => entries.push((key.to_string(), v)),
+            None => findings.push(Finding::new(
+                "wire_freeze",
+                "src/artifact/mod.rs",
+                1,
+                format!("frozen constant `{}` not found", cname),
+            )),
+        }
+    }
+    for (name, val) in kind_arms(&artifact) {
+        entries.push((format!("artifact.kind.{}", name), val));
+    }
+
+    entries.sort();
+    Ok(Extraction { entries, findings })
+}
+
+/// `Kind::Name => N` arms of `fn as_u8` in `artifact/mod.rs`.
+fn kind_arms(raw: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let Some(at) = raw.find("fn as_u8") else { return out };
+    let Some(open) = raw[at..].find('{').map(|p| at + p) else { return out };
+    // the match body is the next brace pair; scan a bounded window
+    let window = &raw[open..raw.len().min(open + 2000)];
+    let mut from = 0usize;
+    while let Some(p) = window[from..].find("Kind::") {
+        let at = from + p + "Kind::".len();
+        let rest = &window[at..];
+        let name: String = rest.chars().take_while(|c| c.is_ascii_alphanumeric()).collect();
+        from = at;
+        let Some(arrow) = rest.find("=>") else { continue };
+        let val: String = rest[arrow + 2..]
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if !name.is_empty() && !val.is_empty() {
+            out.push((name, val));
+        }
+        if out.len() > 32 {
+            break; // defensive bound; a wire enum never has this many
+        }
+    }
+    out
+}
+
+/// Diff extracted entries against the parsed golden table. Returns
+/// human-readable drift messages (empty = frozen surface intact).
+pub fn compare(extracted: &[(String, String)], golden: &Json) -> Vec<String> {
+    let mut diffs = Vec::new();
+    let obj = match golden.as_obj() {
+        Ok(o) => o,
+        Err(e) => return vec![format!("golden table is not a JSON object: {}", e)],
+    };
+    for (k, v) in extracted {
+        match obj.get(k) {
+            None => diffs.push(format!(
+                "`{}` = `{}` is not in the golden table — new wire surface must be frozen \
+                 deliberately (edit wire_frozen.json in the same commit)",
+                k, v
+            )),
+            Some(g) => match g.as_str() {
+                Ok(gv) if gv == v => {}
+                Ok(gv) => diffs.push(format!(
+                    "`{}` drifted: source says `{}`, golden table froze `{}`",
+                    k, v, gv
+                )),
+                Err(_) => diffs.push(format!("golden value for `{}` must be a string", k)),
+            },
+        }
+    }
+    for k in obj.keys() {
+        if !extracted.iter().any(|(ek, _)| ek == k) {
+            diffs.push(format!(
+                "golden key `{}` no longer exists in source — removing frozen surface breaks \
+                 deployed readers",
+                k
+            ));
+        }
+    }
+    diffs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_values_keep_source_spelling() {
+        let src = "pub const WIRE_MAGIC: &[u8; 6] = b\"DDWIR\\0\";\npub const WIRE_VERSION: u8 = 1;\nconst M: [u8; 6] = *b\"DDIAG\\0\";\n";
+        assert_eq!(const_value(src, "WIRE_MAGIC").as_deref(), Some("DDWIR\\0"));
+        assert_eq!(const_value(src, "WIRE_VERSION").as_deref(), Some("1"));
+        assert_eq!(const_value(src, "M").as_deref(), Some("DDIAG\\0"));
+        assert_eq!(const_value(src, "NOPE"), None);
+    }
+
+    #[test]
+    fn enum_discriminants_parse_with_doc_comments() {
+        let src = "#[repr(u8)]\npub enum OutcomeCode {\n    /// served = 0\n    Ok = 0,\n    ShedDeadline = 1, // doc\n    TimedOut = 3,\n}\n";
+        let v = enum_discriminants(src, "OutcomeCode");
+        assert_eq!(
+            v,
+            vec![
+                ("Ok".to_string(), "0".to_string()),
+                ("ShedDeadline".to_string(), "1".to_string()),
+                ("TimedOut".to_string(), "3".to_string()),
+            ]
+        );
+        let mut out = Vec::new();
+        assert!(check_outcome_repr("x.rs", src, &mut out));
+        assert!(out.is_empty());
+        let bad = "pub enum OutcomeCode { Ok = 0 }";
+        assert!(!check_outcome_repr("x.rs", bad, &mut out));
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn compare_flags_drift_additions_and_removals() {
+        let golden = Json::parse(r#"{"outcome.Ok": "0", "wire.version": "1"}"#).unwrap();
+        let same =
+            vec![("outcome.Ok".into(), "0".into()), ("wire.version".into(), "1".into())];
+        assert!(compare(&same, &golden).is_empty());
+
+        let drift =
+            vec![("outcome.Ok".into(), "7".into()), ("wire.version".into(), "1".into())];
+        let d = compare(&drift, &golden);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].contains("drifted"));
+
+        let added = vec![
+            ("outcome.Ok".into(), "0".into()),
+            ("outcome.New".into(), "6".into()),
+            ("wire.version".into(), "1".into()),
+        ];
+        assert!(compare(&added, &golden)[0].contains("not in the golden table"));
+
+        let removed = vec![("outcome.Ok".into(), "0".into())];
+        assert!(compare(&removed, &golden)[0].contains("no longer exists"));
+    }
+
+    #[test]
+    fn kind_arms_parse() {
+        let src = "impl Kind { fn as_u8(self) -> u8 { match self { Kind::Model => 1, Kind::Checkpoint => 2, Kind::Store => 3, } } }";
+        assert_eq!(
+            kind_arms(src),
+            vec![
+                ("Model".to_string(), "1".to_string()),
+                ("Checkpoint".to_string(), "2".to_string()),
+                ("Store".to_string(), "3".to_string()),
+            ]
+        );
+    }
+}

@@ -1,0 +1,268 @@
+//! Pass 2: the unsafe ledger.
+//!
+//! Every `unsafe` site in the crate must (a) carry an adjacent
+//! `// SAFETY:` comment stating the proof obligation, and (b) appear in
+//! the committed `docs/UNSAFE_LEDGER.md`. The ledger is *generated* from
+//! source (`dynadiag lint --update-ledger`) and the lint diffs the
+//! committed copy against a fresh regeneration — so new `unsafe` cannot
+//! land without both a written justification and a visible ledger diff
+//! for reviewers.
+//!
+//! Entries are keyed by file + kind + declaration text, deliberately
+//! **without line numbers**: edits elsewhere in a file must not churn
+//! the ledger.
+
+use super::lexer::{enclosing_fn, Masked};
+use super::Finding;
+
+/// One `unsafe` occurrence in a file.
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    /// 1-based line of the `unsafe` keyword.
+    pub line: usize,
+    /// `fn name`, `impl ...`, `trait ...`, or `block in fn <name>`.
+    pub what: String,
+    /// First line of the adjacent `SAFETY:` comment (empty = missing).
+    pub safety: String,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Find every `unsafe` keyword in the masked text and classify it.
+pub fn unsafe_sites(
+    raw: &str,
+    masked: &Masked,
+    spans: &[(usize, usize, String)],
+) -> Vec<UnsafeSite> {
+    let text = &masked.text;
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = text[from..].find("unsafe") {
+        let at = from + p;
+        from = at + "unsafe".len();
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let after = at + "unsafe".len();
+        let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+        if !before_ok || !after_ok {
+            continue;
+        }
+        // classify by the next token
+        let mut k = after;
+        while k < bytes.len() && (bytes[k] == b' ' || bytes[k] == b'\n') {
+            k += 1;
+        }
+        let rest = &text[k..];
+        let what = if rest.starts_with("fn") {
+            // capture the fn name
+            let mut e = k + 2;
+            while e < bytes.len() && (bytes[e] == b' ' || bytes[e] == b'\n') {
+                e += 1;
+            }
+            let ns = e;
+            while e < bytes.len() && is_ident(bytes[e]) {
+                e += 1;
+            }
+            format!("fn {}", &text[ns..e])
+        } else if rest.starts_with("impl") || rest.starts_with("trait") {
+            // capture the declaration up to the opening brace, collapsed
+            let end = rest.find('{').unwrap_or(rest.len().min(120));
+            let decl: String = rest[..end].split_whitespace().collect::<Vec<_>>().join(" ");
+            decl
+        } else if rest.starts_with('{') {
+            match enclosing_fn(spans, at) {
+                Some(f) => format!("block in fn {}", f),
+                None => "block".to_string(),
+            }
+        } else {
+            // `unsafe extern`, attribute positions, etc.
+            let end = rest.find(['{', ';', '\n']).unwrap_or(rest.len().min(60));
+            format!("unsafe {}", rest[..end].trim())
+        };
+        let line = masked.line_of(at);
+        out.push(UnsafeSite { line, what, safety: adjacent_safety(raw, line) });
+    }
+    out
+}
+
+/// Walk upward from the line above `line`, skipping attributes and blank
+/// lines, through a contiguous comment block; return the text after the
+/// first `SAFETY:` found, or empty. Also accepts a trailing `// SAFETY:`
+/// on the same line.
+fn adjacent_safety(raw: &str, line: usize) -> String {
+    let lines: Vec<&str> = raw.lines().collect();
+    let grab = |l: &str| -> Option<String> {
+        l.find("SAFETY:").map(|p| l[p + "SAFETY:".len()..].trim().to_string())
+    };
+    if line >= 1 && line <= lines.len() {
+        if let Some(s) = lines[line - 1].find("//").and_then(|p| grab(&lines[line - 1][p..])) {
+            return s;
+        }
+    }
+    let mut k = line.saturating_sub(1); // index of the line above, 0-based
+    let mut best = String::new();
+    while k >= 1 {
+        let t = lines[k - 1].trim();
+        let is_attr =
+            t.starts_with("#[") || t.starts_with(")]") || (t.starts_with('#') && t.ends_with(']'));
+        if t.is_empty() || is_attr {
+            k -= 1;
+            continue;
+        }
+        if t.starts_with("//") {
+            // remember the *highest* SAFETY line of the comment block so
+            // multi-line safety comments report their first line
+            if let Some(s) = grab(t) {
+                best = s;
+            }
+            k -= 1;
+            continue;
+        }
+        break;
+    }
+    best
+}
+
+/// Render the generated region of `docs/UNSAFE_LEDGER.md`:
+/// one section per file (sorted), one bullet per site in source order.
+pub fn render(sites_by_file: &[(String, Vec<UnsafeSite>)]) -> String {
+    let mut s = String::new();
+    for (file, sites) in sites_by_file {
+        if sites.is_empty() {
+            continue;
+        }
+        s.push_str(&format!("## `{}` — {} site(s)\n\n", file, sites.len()));
+        for site in sites {
+            let safety = if site.safety.is_empty() { "**MISSING**" } else { &site.safety };
+            s.push_str(&format!("- `unsafe {}` — SAFETY: {}\n", site.what, safety));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+pub const LEDGER_BEGIN: &str = "<!-- ddlint:unsafe-ledger:begin (generated; edit with `dynadiag lint --update-ledger`) -->";
+pub const LEDGER_END: &str = "<!-- ddlint:unsafe-ledger:end -->";
+
+/// Check one file's sites for missing SAFETY comments.
+pub fn check_safety(rel: &str, sites: &[UnsafeSite], out: &mut Vec<Finding>) {
+    for s in sites {
+        if s.safety.is_empty() {
+            out.push(Finding::new(
+                "unsafe_ledger",
+                rel,
+                s.line,
+                format!("`unsafe {}` has no adjacent `// SAFETY:` comment", s.what),
+            ));
+        }
+    }
+}
+
+/// Diff the committed ledger against a fresh regeneration.
+pub fn check_ledger(
+    ledger_path_display: &str,
+    committed: Option<&str>,
+    generated_region: &str,
+    out: &mut Vec<Finding>,
+) {
+    let Some(committed) = committed else {
+        out.push(Finding::new(
+            "unsafe_ledger",
+            ledger_path_display,
+            1,
+            "docs/UNSAFE_LEDGER.md is missing — run `dynadiag lint --update-ledger`".to_string(),
+        ));
+        return;
+    };
+    let region = committed
+        .split(LEDGER_BEGIN)
+        .nth(1)
+        .and_then(|rest| rest.split(LEDGER_END).next());
+    match region {
+        None => out.push(Finding::new(
+            "unsafe_ledger",
+            ledger_path_display,
+            1,
+            "ledger markers not found — regenerate with `dynadiag lint --update-ledger`"
+                .to_string(),
+        )),
+        Some(r) if r.trim() != generated_region.trim() => out.push(Finding::new(
+            "unsafe_ledger",
+            ledger_path_display,
+            1,
+            "unsafe ledger is stale (source unsafe sites changed) — run \
+             `dynadiag lint --update-ledger` and commit the diff"
+                .to_string(),
+        )),
+        Some(_) => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::{fn_bodies, mask};
+
+    #[test]
+    fn sites_classify_and_find_adjacent_safety() {
+        let src = r#"
+// SAFETY: the caller proved the pointer is live.
+unsafe fn danger(p: *const u8) {}
+
+unsafe impl Send for Foo {}
+
+fn user() {
+    // SAFETY: avx2 was detected at dispatch.
+    unsafe { danger(p) }
+    unsafe { no_comment(p) }
+}
+"#;
+        let m = mask(src);
+        let spans = fn_bodies(&m.text);
+        let sites = unsafe_sites(src, &m, &spans);
+        assert_eq!(sites.len(), 4, "{:?}", sites);
+        assert_eq!(sites[0].what, "fn danger");
+        assert!(sites[0].safety.contains("pointer is live"));
+        assert_eq!(sites[1].what, "impl Send for Foo");
+        assert!(sites[1].safety.is_empty(), "impl has no SAFETY comment");
+        assert_eq!(sites[2].what, "block in fn user");
+        assert!(sites[2].safety.contains("avx2"));
+        assert!(sites[3].safety.is_empty());
+
+        let mut out = Vec::new();
+        check_safety("src/x.rs", &sites, &mut out);
+        assert_eq!(out.len(), 2, "impl + second block lack SAFETY: {:?}", out);
+    }
+
+    #[test]
+    fn safety_comment_skips_attributes() {
+        let src = "// SAFETY: target_feature contract upheld by detection.\n#[cfg(target_arch = \"x86_64\")]\n#[target_feature(enable = \"avx2\")]\nunsafe fn fma3_avx2() {}\n";
+        let m = mask(src);
+        let spans = fn_bodies(&m.text);
+        let sites = unsafe_sites(src, &m, &spans);
+        assert_eq!(sites.len(), 1);
+        assert!(sites[0].safety.contains("target_feature contract"), "{:?}", sites[0]);
+    }
+
+    #[test]
+    fn ledger_diff_detects_drift_and_missing_markers() {
+        let gen = "## `src/a.rs` — 1 site(s)\n\n- `unsafe fn f` — SAFETY: ok\n";
+        let committed = format!("# Ledger\n\n{}\n{}\n{}\n", LEDGER_BEGIN, gen, LEDGER_END);
+        let mut out = Vec::new();
+        check_ledger("docs/UNSAFE_LEDGER.md", Some(&committed), gen, &mut out);
+        assert!(out.is_empty(), "{:?}", out);
+
+        check_ledger("docs/UNSAFE_LEDGER.md", Some(&committed), "different", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("stale"));
+
+        out.clear();
+        check_ledger("docs/UNSAFE_LEDGER.md", None, gen, &mut out);
+        assert_eq!(out.len(), 1);
+        out.clear();
+        check_ledger("docs/UNSAFE_LEDGER.md", Some("no markers"), gen, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+}

@@ -1,0 +1,388 @@
+//! A lightweight Rust *masking* lexer for the lint passes.
+//!
+//! The passes in this crate are textual: they look for tokens like
+//! `Instant::now(` or `.unwrap()` inside function bodies. Raw text search
+//! would trip over the same tokens appearing inside string literals,
+//! char literals, and comments — so every pass runs over a **masked**
+//! view of the source instead: a byte-for-byte copy in which the
+//! *interiors* of strings/chars and the *entirety* of comments are
+//! blanked to spaces (newlines preserved, so byte offsets and line
+//! numbers are identical to the original file). Comments are extracted
+//! to the side, because the directive parser and the `SAFETY:` scanner
+//! need them.
+//!
+//! The lexer understands the subset of Rust's lexical grammar that
+//! matters for masking:
+//!
+//! * line comments (`//`) and **nested** block comments (`/* /* */ */`)
+//! * string literals with escapes, byte strings (`b"..."`)
+//! * raw strings `r"..."` / `r#"..."#` with any number of hashes, and
+//!   their byte variants (`br#"..."#`)
+//! * char literals (`'a'`, `'\n'`, `'\u{7FFF}'`, `b'x'`) vs. lifetimes
+//!   (`&'a str`), disambiguated the same way rustc does: a quote
+//!   followed by an identifier char is a lifetime unless the char after
+//!   the identifier is a closing quote
+//!
+//! `#[cfg]`-disabled code is *not* special: it lexes like any other
+//! code, so the passes see every configuration (exactly what we want —
+//! the aarch64 paths must stay lint-clean from an x86 checkout).
+
+/// One comment lifted out of the source, with its position preserved.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// Byte offset of the comment opener in the original source.
+    pub offset: usize,
+    /// Full comment text including the `//` or `/* */` markers.
+    pub text: String,
+}
+
+/// The masked view of one source file. Same byte length as the input;
+/// `line_of` maps byte offsets back to 1-based line numbers.
+pub struct Masked {
+    pub text: String,
+    pub comments: Vec<Comment>,
+    line_starts: Vec<usize>,
+}
+
+impl Masked {
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// 1-based line number of a comment.
+    pub fn comment_line(&self, c: &Comment) -> usize {
+        self.line_of(c.offset)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank every non-newline byte of `src[a..b]` in `out`.
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    for x in out[a..b].iter_mut() {
+        if *x != b'\n' {
+            *x = b' ';
+        }
+    }
+}
+
+/// Mask `src`: strings/chars blanked, comments blanked and extracted.
+pub fn mask(src: &str) -> Masked {
+    let bytes = src.as_bytes();
+    let mut out = bytes.to_vec();
+    let mut comments = Vec::new();
+    let n = bytes.len();
+    let mut i = 0usize;
+    while i < n {
+        let b = bytes[i];
+        // line comment
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+            let start = i;
+            while i < n && bytes[i] != b'\n' {
+                i += 1;
+            }
+            comments.push(Comment { offset: start, text: src[start..i].to_string() });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // nested block comment
+        if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if bytes[i] == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if bytes[i] == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment { offset: start, text: src[start..i].to_string() });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // raw string (r"...", r#"..."#, br#"..."#) — only when the r/b
+        // starts an identifier-like token of its own
+        let prev_ident = i > 0 && is_ident(bytes[i - 1]);
+        if !prev_ident && (b == b'r' || b == b'b') {
+            let mut j = i;
+            if b == b'b' && j + 1 < n && bytes[j + 1] == b'r' {
+                j += 1;
+            }
+            if bytes[j] == b'r' || (b == b'b' && bytes[j] == b'r') {
+                // at this point bytes[j] may be 'r'; count hashes after it
+                if bytes[j] == b'r' {
+                    let mut k = j + 1;
+                    let mut hashes = 0usize;
+                    while k < n && bytes[k] == b'#' {
+                        hashes += 1;
+                        k += 1;
+                    }
+                    if k < n && bytes[k] == b'"' {
+                        // raw string body: ends at '"' + `hashes` hashes
+                        let body_start = k + 1;
+                        let mut e = body_start;
+                        'scan: while e < n {
+                            if bytes[e] == b'"' {
+                                let mut h = 0usize;
+                                while h < hashes && e + 1 + h < n && bytes[e + 1 + h] == b'#' {
+                                    h += 1;
+                                }
+                                if h == hashes {
+                                    break 'scan;
+                                }
+                            }
+                            e += 1;
+                        }
+                        let end = (e + 1 + hashes).min(n);
+                        blank(&mut out, i, end);
+                        i = end;
+                        continue;
+                    }
+                }
+            }
+        }
+        // plain or byte string
+        if b == b'"' || (b == b'b' && !prev_ident && i + 1 < n && bytes[i + 1] == b'"') {
+            let start = i;
+            i += if b == b'b' { 2 } else { 1 };
+            while i < n {
+                match bytes[i] {
+                    b'\\' => i += 2,
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    _ => i += 1,
+                }
+            }
+            blank(&mut out, start, i.min(n));
+            continue;
+        }
+        // char literal vs lifetime
+        if b == b'\'' || (b == b'b' && !prev_ident && i + 1 < n && bytes[i + 1] == b'\'') {
+            let start = i;
+            let q = if b == b'b' { i + 1 } else { i };
+            if q + 1 < n {
+                let c1 = bytes[q + 1];
+                if c1 == b'\\' {
+                    // escaped char literal: '\n', '\u{..}', '\''
+                    let mut e = q + 2;
+                    if e < n && bytes[e] == b'u' {
+                        while e < n && bytes[e] != b'}' {
+                            e += 1;
+                        }
+                        e += 1;
+                    } else {
+                        e += 1;
+                    }
+                    while e < n && bytes[e] != b'\'' {
+                        e += 1;
+                    }
+                    i = (e + 1).min(n);
+                    blank(&mut out, start, i);
+                    continue;
+                }
+                if is_ident(c1) && !(q + 2 < n && bytes[q + 2] == b'\'') {
+                    // lifetime ('a, 'static): copy through, skip the quote
+                    i = q + 2;
+                    continue;
+                }
+                // plain char literal: 'x', '{', '"'
+                if q + 2 < n && bytes[q + 2] == b'\'' {
+                    i = q + 3;
+                    blank(&mut out, start, i);
+                    continue;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+
+    let mut line_starts = vec![0usize];
+    for (k, &byte) in bytes.iter().enumerate() {
+        if byte == b'\n' {
+            line_starts.push(k + 1);
+        }
+    }
+    Masked {
+        // masking only writes ASCII spaces over complete UTF-8 runs it
+        // scanned, and never splits a multibyte sequence it copied
+        text: String::from_utf8_lossy(&out).into_owned(),
+        comments,
+        line_starts,
+    }
+}
+
+/// Map every byte of `masked` to its innermost enclosing `fn` name.
+/// Returns `(start, end, name, depth)` body spans, outermost first; a
+/// byte inside several nested fns belongs to the *last* span in the list
+/// that contains it.
+pub fn fn_bodies(masked: &str) -> Vec<(usize, usize, String)> {
+    let bytes = masked.as_bytes();
+    let n = bytes.len();
+    let mut spans: Vec<(usize, usize, String)> = Vec::new();
+    // stack of (open-brace depth when body opened, span index)
+    let mut open: Vec<(usize, usize)> = Vec::new();
+    // a just-parsed `fn name` waiting for its body `{`
+    let mut pending: Option<String> = None;
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let b = bytes[i];
+        if b == b'f'
+            && i + 2 < n
+            && &bytes[i..i + 2] == b"fn"
+            && (i == 0 || !is_ident(bytes[i - 1]))
+            && !is_ident(bytes[i + 2])
+        {
+            // scan forward for the fn name (skips whitespace)
+            let mut k = i + 2;
+            while k < n && (bytes[k] == b' ' || bytes[k] == b'\n') {
+                k += 1;
+            }
+            let name_start = k;
+            while k < n && is_ident(bytes[k]) {
+                k += 1;
+            }
+            if k > name_start {
+                pending = Some(masked[name_start..k].to_string());
+            }
+            i = k;
+            continue;
+        }
+        match b {
+            b'{' => {
+                if let Some(name) = pending.take() {
+                    spans.push((i, n, name));
+                    open.push((depth, spans.len() - 1));
+                }
+                depth += 1;
+            }
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                if let Some(&(d, idx)) = open.last() {
+                    if d == depth {
+                        spans[idx].1 = i + 1;
+                        open.pop();
+                    }
+                }
+            }
+            b';' => {
+                // trait method signature without a body
+                pending = None;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Name of the innermost fn whose body span contains `offset`.
+pub fn enclosing_fn<'a>(spans: &'a [(usize, usize, String)], offset: usize) -> Option<&'a str> {
+    spans
+        .iter()
+        .filter(|(a, b, _)| *a <= offset && offset < *b)
+        .next_back()
+        .map(|(_, _, name)| name.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_strings_are_masked_with_any_hash_count() {
+        let src = r###"let a = r"no // comment"; let b = r#"has "quotes" and // slashes"#; x()"###;
+        let m = mask(src);
+        assert_eq!(m.text.len(), src.len());
+        assert!(!m.text.contains("quotes"));
+        assert!(!m.text.contains("comment"));
+        assert!(m.comments.is_empty(), "raw-string slashes must not read as comments");
+        assert!(m.text.contains("x()"), "code after the raw string survives");
+        // byte raw strings too
+        let src2 = r##"let c = br#"unsafe { } // nope"#; y()"##;
+        let m2 = mask(src2);
+        assert!(!m2.text.contains("unsafe"));
+        assert!(m2.text.contains("y()"));
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let src = "a(); /* outer /* inner */ still comment */ b();";
+        let m = mask(src);
+        assert!(m.text.contains("a();"));
+        assert!(m.text.contains("b();"), "nesting must close at the right depth");
+        assert!(!m.text.contains("still"));
+        assert_eq!(m.comments.len(), 1);
+        assert!(m.comments[0].text.contains("inner"));
+    }
+
+    #[test]
+    fn char_literals_with_braces_and_quotes_mask_but_lifetimes_survive() {
+        let src = "fn f<'a>(s: &'a str) { if c == '{' || c == '\"' || c == '\\'' { g(s) } }";
+        let m = mask(src);
+        assert_eq!(m.text.len(), src.len());
+        assert!(m.text.contains("&'a str"), "lifetime must not be eaten as a char literal");
+        // the brace and quote inside the char literals are blanked: the
+        // masked text must stay delimiter-balanced
+        let opens = m.text.matches('{').count();
+        let closes = m.text.matches('}').count();
+        assert_eq!(opens, closes, "masked text must be brace-balanced: {}", m.text);
+        assert!(m.text.contains("g(s)"));
+    }
+
+    #[test]
+    fn cfg_disabled_code_is_still_lexed() {
+        let src = "#[cfg(feature = \"never\")]\nfn disabled() { let s = \"x // y\"; h() }\n";
+        let m = mask(src);
+        // the cfg'd body is lexed like any other code: its string masked,
+        // its calls visible
+        assert!(!m.text.contains("x // y"));
+        assert!(m.text.contains("h()"));
+        let spans = fn_bodies(&m.text);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].2, "disabled");
+    }
+
+    #[test]
+    fn line_numbers_are_stable_under_masking() {
+        let src = "line1();\n// comment\nlet s = \"two\nlines\";\nlast();\n";
+        let m = mask(src);
+        assert_eq!(m.text.len(), src.len());
+        assert_eq!(m.line_of(0), 1);
+        let last = src.find("last").unwrap();
+        assert_eq!(m.line_of(last), 5, "newline inside the string must still count");
+        assert_eq!(m.comment_line(&m.comments[0]), 2);
+    }
+
+    #[test]
+    fn fn_bodies_nest_and_attribute_to_the_innermost() {
+        let src = "fn outer() { fn inner() { a(); } b(); } fn third() { c(); }";
+        let m = mask(src);
+        let spans = fn_bodies(&m.text);
+        let names: Vec<&str> = spans.iter().map(|s| s.2.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner", "third"]);
+        assert_eq!(enclosing_fn(&spans, src.find("a();").unwrap()), Some("inner"));
+        assert_eq!(enclosing_fn(&spans, src.find("b();").unwrap()), Some("outer"));
+        assert_eq!(enclosing_fn(&spans, src.find("c();").unwrap()), Some("third"));
+        // a trait signature (`fn sig();`) must not capture the next body
+        let m2 = mask("trait T { fn sig(); }\nimpl T for U { fn sig() { d(); } }");
+        let spans2 = fn_bodies(&m2.text);
+        assert_eq!(spans2.len(), 1);
+        assert_eq!(spans2[0].2, "sig");
+    }
+}

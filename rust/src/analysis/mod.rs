@@ -1,0 +1,394 @@
+//! `ddlint` — the crate's invariant-enforcing static-analysis pass.
+//!
+//! Nine PRs of this repo accumulated invariants that were only ever
+//! verified by close reading: the zero-fresh-allocation steady state,
+//! the frozen wire discriminants, Clock-injected determinism, the
+//! `catch_unwind` conservation law, and a slowly growing set of `unsafe`
+//! sites. This module turns that recurring manual audit into a
+//! mechanical one: `dynadiag lint` runs six repo-specific passes over a
+//! masked view of the source (see [`lexer`]) and exits nonzero on any
+//! violation.
+//!
+//! | rule               | protects                                         |
+//! |--------------------|--------------------------------------------------|
+//! | `zero_alloc`       | no allocation sites in the declared hot paths    |
+//! | `unsafe_ledger`    | every `unsafe` has a `SAFETY:` + ledger entry    |
+//! | `wire_freeze`      | frozen discriminants/magics vs. the golden table |
+//! | `clock`            | `Instant::now` only in allowlisted modules       |
+//! | `panic_discipline` | no panics on the supervisor/driver side          |
+//! | `cfg_hygiene`      | `with_isa!` exhaustiveness, delimiter balance    |
+//! | `directive`        | every `allow` is well-formed and justified       |
+//!
+//! Findings are suppressed site-by-site with justified directives
+//! (`// ddlint: allow(<rule>) -- <why>`, see [`directives`]); the
+//! `directive` meta-rule fails unjustified or unknown-rule allows, so
+//! the suppression surface is itself audited.
+
+pub mod directives;
+pub mod freeze;
+pub mod ledger;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Every rule `allow()` accepts.
+pub const RULES: &[&str] = &[
+    "zero_alloc",
+    "unsafe_ledger",
+    "wire_freeze",
+    "clock",
+    "panic_discipline",
+    "cfg_hygiene",
+    "directive",
+];
+
+/// One lint violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Crate-root-relative path (`src/serve/net.rs`).
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, file: &str, line: usize, msg: String) -> Finding {
+        Finding { rule, file: file.to_string(), line, msg }
+    }
+
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// What a lint run produced.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("violations", Json::Num(self.findings.len() as f64)),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("rule", Json::Str(f.rule.to_string())),
+                                ("file", Json::Str(f.file.clone())),
+                                ("line", Json::Num(f.line as f64)),
+                                ("msg", Json::Str(f.msg.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&f.render());
+            s.push('\n');
+        }
+        s.push_str(&format!(
+            "ddlint: {} file(s) scanned, {} violation(s)\n",
+            self.files_scanned,
+            self.findings.len()
+        ));
+        s
+    }
+}
+
+/// Locate the crate root (the directory holding `Cargo.toml` +
+/// `src/lib.rs`) from `start`: tries `start`, `start/rust`, then walks
+/// up. Lets `dynadiag lint` run from the repo root, the crate dir, or a
+/// build dir.
+pub fn find_crate_root(start: &Path) -> Option<PathBuf> {
+    let is_root = |p: &Path| p.join("Cargo.toml").is_file() && p.join("src/lib.rs").is_file();
+    if is_root(start) {
+        return Some(start.to_path_buf());
+    }
+    let nested = start.join("rust");
+    if is_root(&nested) {
+        return Some(nested);
+    }
+    let mut cur = start.to_path_buf();
+    while let Some(parent) = cur.parent().map(|p| p.to_path_buf()) {
+        if is_root(&parent) {
+            return Some(parent);
+        }
+        cur = parent;
+    }
+    None
+}
+
+/// `docs/UNSAFE_LEDGER.md`, which lives at the repository root (one
+/// level above the crate) in this repo's layout.
+pub fn ledger_path(root: &Path) -> PathBuf {
+    let repo_docs = root.join("../docs");
+    if repo_docs.is_dir() {
+        repo_docs.join("UNSAFE_LEDGER.md")
+    } else {
+        root.join("docs/UNSAFE_LEDGER.md")
+    }
+}
+
+/// The committed golden table.
+pub fn golden_path(root: &Path) -> PathBuf {
+    root.join("tests/golden/wire_frozen.json")
+}
+
+fn collect_sources(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for top in ["src", "tests", "benches", "examples"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            walk(&dir, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("lint: reading {}", dir.display()))?
+    {
+        let entry = entry?;
+        let p = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if p.is_dir() {
+            // fixture snippets are deliberately violating; vendored and
+            // generated trees are not ours to lint
+            if name == "lint_selftest" || name == "golden" || name == "vendor" || name == "target"
+            {
+                continue;
+            }
+            walk(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+struct PreparedFile {
+    rel: String,
+    raw: String,
+    masked: lexer::Masked,
+    spans: Vec<(usize, usize, String)>,
+    directives: Vec<directives::Directive>,
+}
+
+fn prepare(path: &Path, rel: String) -> Result<PreparedFile> {
+    let raw = std::fs::read_to_string(path)
+        .with_context(|| format!("lint: reading {}", path.display()))?;
+    let masked = lexer::mask(&raw);
+    let spans = lexer::fn_bodies(&masked.text);
+    let dirs = directives::parse(&masked);
+    Ok(PreparedFile { rel, raw, masked, spans, directives: dirs })
+}
+
+/// Run the per-file passes shared by tree and fixture mode, returning
+/// raw (pre-suppression) findings.
+fn per_file_findings(
+    f: &PreparedFile,
+    fixture: bool,
+    isa_variants: Option<&[String]>,
+) -> Vec<Finding> {
+    let ctx = rules::FileCtx {
+        rel: &f.rel,
+        raw: &f.raw,
+        masked: &f.masked,
+        spans: &f.spans,
+        fixture,
+        directives: &f.directives,
+    };
+    let mut out = Vec::new();
+    rules::zero_alloc(&ctx, &mut out);
+    rules::clock(&ctx, &mut out);
+    rules::panic_discipline(&ctx, &mut out);
+    rules::cfg_hygiene(&ctx, isa_variants, &mut out);
+    let sites = ledger::unsafe_sites(&f.raw, &f.masked, &f.spans);
+    ledger::check_safety(&f.rel, &sites, &mut out);
+    if fixture {
+        // tree mode runs the repr check through freeze::extract on the
+        // real stats.rs; fixtures check any OutcomeCode they declare
+        freeze::check_outcome_repr(&f.rel, &f.raw, &mut out);
+    }
+    // the directive meta-rule: malformed or unknown-rule allows
+    for d in &f.directives {
+        if let Some(err) = &d.error {
+            out.push(Finding::new("directive", &f.rel, d.line, err.clone()));
+        }
+        for r in &d.rules {
+            if !RULES.contains(&r.as_str()) {
+                out.push(Finding::new(
+                    "directive",
+                    &f.rel,
+                    d.line,
+                    format!("unknown rule `{}` in allow()", r),
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn suppress(findings: Vec<Finding>, dirs: &[directives::Directive]) -> Vec<Finding> {
+    findings
+        .into_iter()
+        .filter(|f| f.rule == "directive" || !directives::suppressed(dirs, f.rule, f.line))
+        .collect()
+}
+
+/// Lint the whole crate at `root` (tree mode: scoped rules, ledger
+/// diff, golden-table comparison).
+pub fn lint_tree(root: &Path) -> Result<Report> {
+    let files = collect_sources(root)?;
+    let mut findings: Vec<Finding> = Vec::new();
+
+    // Isa variants feed the with_isa! exhaustiveness check
+    let micro = root.join("src/kernels/microkernel.rs");
+    let isa: Option<Vec<String>> = std::fs::read_to_string(&micro)
+        .ok()
+        .map(|s| rules::isa_variants(&lexer::mask(&s)));
+
+    let mut sites_by_file: Vec<(String, Vec<ledger::UnsafeSite>)> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let f = prepare(path, rel)?;
+        let raw_findings = per_file_findings(&f, false, isa.as_deref());
+        findings.extend(suppress(raw_findings, &f.directives));
+        let sites = ledger::unsafe_sites(&f.raw, &f.masked, &f.spans);
+        if !sites.is_empty() {
+            sites_by_file.push((f.rel.clone(), sites));
+        }
+    }
+    sites_by_file.sort_by(|a, b| a.0.cmp(&b.0));
+
+    // unsafe ledger diff (not suppressible: the fix is regeneration)
+    let generated = ledger::render(&sites_by_file);
+    let lpath = ledger_path(root);
+    let committed = std::fs::read_to_string(&lpath).ok();
+    ledger::check_ledger("docs/UNSAFE_LEDGER.md", committed.as_deref(), &generated, &mut findings);
+
+    // wire-freeze extraction vs. the golden table
+    let ex = freeze::extract(root)?;
+    findings.extend(ex.findings);
+    let gpath = golden_path(root);
+    match Json::from_file(&gpath) {
+        Ok(golden) => {
+            for d in freeze::compare(&ex.entries, &golden) {
+                findings.push(Finding::new("wire_freeze", "tests/golden/wire_frozen.json", 1, d));
+            }
+        }
+        Err(e) => findings.push(Finding::new(
+            "wire_freeze",
+            "tests/golden/wire_frozen.json",
+            1,
+            format!("golden table unreadable ({}) — seed it from `dynadiag lint --json`", e),
+        )),
+    }
+
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+/// Lint one file. Files carrying a `// ddlint-fixture: expect(<rule>)`
+/// marker are linted in fixture mode: every fn is in scope for the
+/// scoped rules, and the cross-tree checks (ledger diff, golden table)
+/// are skipped — the fixture demonstrates the *site-level* violation.
+pub fn lint_file(path: &Path) -> Result<Report> {
+    let rel = path.to_string_lossy().replace('\\', "/");
+    let f = prepare(path, rel)?;
+    let fixture = directives::fixture_expectation(&f.masked).is_some();
+    let raw_findings = per_file_findings(&f, fixture, None);
+    let findings = suppress(raw_findings, &f.directives);
+    Ok(Report { findings, files_scanned: 1 })
+}
+
+/// Regenerate `docs/UNSAFE_LEDGER.md` in place, returning its path.
+pub fn update_ledger(root: &Path) -> Result<PathBuf> {
+    let files = collect_sources(root)?;
+    let mut sites_by_file: Vec<(String, Vec<ledger::UnsafeSite>)> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let f = prepare(path, rel)?;
+        let sites = ledger::unsafe_sites(&f.raw, &f.masked, &f.spans);
+        if !sites.is_empty() {
+            sites_by_file.push((f.rel.clone(), sites));
+        }
+    }
+    sites_by_file.sort_by(|a, b| a.0.cmp(&b.0));
+    let region = ledger::render(&sites_by_file);
+    let lpath = ledger_path(root);
+    let preamble = "# Unsafe Ledger\n\n\
+        Every `unsafe` site in the crate, generated by `dynadiag lint --update-ledger`\n\
+        and diffed by the `unsafe_ledger` lint pass on every run. A new `unsafe`\n\
+        cannot land without (a) an adjacent `// SAFETY:` comment and (b) a visible\n\
+        diff in this file. Entries carry no line numbers on purpose: unrelated\n\
+        edits must not churn the ledger.\n\n";
+    let content = format!(
+        "{}{}\n{}\n{}",
+        preamble,
+        ledger::LEDGER_BEGIN,
+        region.trim_end(),
+        ledger::LEDGER_END
+    );
+    std::fs::write(&lpath, format!("{}\n", content))
+        .with_context(|| format!("lint: writing {}", lpath.display()))?;
+    Ok(lpath)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_crate_root_from_crate_and_repo_dirs() {
+        let here = Path::new(env!("CARGO_MANIFEST_DIR"));
+        assert_eq!(find_crate_root(here).as_deref(), Some(here));
+        if let Some(repo) = here.parent() {
+            assert_eq!(find_crate_root(repo).as_deref(), Some(here));
+        }
+        assert_eq!(find_crate_root(&here.join("src/serve")).as_deref(), Some(here));
+    }
+
+    #[test]
+    fn committed_tree_lints_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = lint_tree(root).unwrap();
+        assert!(
+            report.ok(),
+            "the committed tree must lint clean:\n{}",
+            report.render()
+        );
+        assert!(report.files_scanned > 50, "scanned {}", report.files_scanned);
+    }
+}

@@ -1,0 +1,507 @@
+//! The repo-specific lint passes and their scope tables.
+//!
+//! Each pass is textual over the masked source (see [`super::lexer`]),
+//! scoped by `(file suffix, fn name)` tables below. The tables are the
+//! *declared* invariant surface: adding a function to a hot loop or a
+//! supervisor path means adding it here, and the lint then holds it to
+//! the corresponding discipline forever.
+
+use super::directives::Directive;
+use super::lexer::{enclosing_fn, Masked};
+use super::Finding;
+
+// ---------------------------------------------------------------------------
+// Scope tables
+// ---------------------------------------------------------------------------
+
+/// Declared hot-path set for the zero-alloc discipline: functions that
+/// run per-request (or per-kernel-call) in steady state, where the
+/// runtime gates already demand `fresh == 0`. The lint reports *where*
+/// an allocation could creep in before any benchmark notices.
+pub const HOT_PATHS: &[(&str, &[&str])] = &[
+    (
+        "kernels/diag.rs",
+        &[
+            "fma_wrap_gather",
+            "fma_wrap_scatter",
+            "spmm_t_impl",
+            "spmm_impl",
+            "spmm_t_bias_impl",
+            "grad_values_impl",
+        ],
+    ),
+    ("kernels/microkernel.rs", &["fma3", "fma3_avx2", "fma3_neon"]),
+    ("serve/engine.rs", &["submit_at", "poll", "flush", "execute_batch"]),
+    (
+        "serve/wire.rs",
+        &[
+            "frame_into",
+            "encode_request",
+            "decode_request",
+            "encode_response",
+            "encode_error",
+            "encode_stats_request",
+            "encode_stats_response",
+            "read_frame",
+            "fill_exact",
+        ],
+    ),
+    ("serve/journal.rs", &["write_frame", "append_request", "append_receipt"]),
+    ("serve/shard.rs", &["nack", "drain_inbox_requests", "run_shard", "handle_msg", "ship"]),
+    ("obs/trace.rs", &["push", "drain"]),
+];
+
+/// Panic-discipline scope: the shard *supervisor* side (where a panic
+/// would escape the `catch_unwind` conservation accounting and kill the
+/// process) and the serving driver loops. Functions that run *inside*
+/// the supervised shard threads (`run_shard`, `handle_msg`, `ship`) are
+/// deliberately absent: a panic there is caught, accounted as
+/// `FailedPanic`, and the shard rebuilt — that is the designed path.
+pub const PANIC_SCOPE: &[(&str, &[&str])] = &[
+    (
+        "serve/shard.rs",
+        &[
+            "shard_loop",
+            "nack",
+            "drain_inbox_requests",
+            "absorb",
+            "poll_completions",
+            "drive_load_sharded",
+        ],
+    ),
+    ("serve/net.rs", &["run", "handle_ingress", "deliver_completion"]),
+];
+
+/// Modules allowed to call `Instant::now`/`SystemTime::now` directly:
+/// the reload poller (watches file mtimes on a wall clock) and the net
+/// front door (stamps arrivals at the socket, where no `Clock` handle
+/// exists yet). Everything else must take an injected `Clock`.
+pub const CLOCK_ALLOW_MODULES: &[&str] = &["serve/reload.rs", "serve/net.rs"];
+
+/// `Isa` variant → required `target_arch` gate in `with_isa!` arms.
+/// Extend when a new ISA lands; `cfg_hygiene` fails on unmapped variants.
+pub const ISA_ARCH: &[(&str, &str)] = &[("Avx2", "x86_64"), ("Neon", "aarch64")];
+
+// ---------------------------------------------------------------------------
+// Shared per-file context
+// ---------------------------------------------------------------------------
+
+/// Everything a pass needs about one file.
+pub struct FileCtx<'a> {
+    /// Path relative to the crate root, `/`-separated (`src/serve/net.rs`).
+    pub rel: &'a str,
+    /// Original source (attributes and cfg strings are masked in
+    /// `masked.text`, so attribute checks read this).
+    pub raw: &'a str,
+    pub masked: &'a Masked,
+    /// `fn` body spans from [`super::lexer::fn_bodies`].
+    pub spans: &'a [(usize, usize, String)],
+    /// Fixture mode: every fn is in scope for the scoped passes.
+    pub fixture: bool,
+    pub directives: &'a [Directive],
+}
+
+impl<'a> FileCtx<'a> {
+    fn scoped_fns(&self, table: &[(&str, &[&str])]) -> Option<&'static [&'static str]> {
+        // the tables are 'static; transmute-free lookup by suffix match
+        for (suffix, fns) in table {
+            if self.rel.ends_with(suffix) {
+                return Some(fns);
+            }
+        }
+        None
+    }
+
+    fn in_scope(&self, table: &[(&str, &[&str])], offset: usize) -> bool {
+        if self.fixture {
+            return enclosing_fn(self.spans, offset).is_some();
+        }
+        match self.scoped_fns(table) {
+            Some(fns) => match enclosing_fn(self.spans, offset) {
+                Some(name) => fns.contains(&name),
+                None => false,
+            },
+            None => false,
+        }
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Offsets of `needle` in `text`; `word_start` additionally requires the
+/// preceding byte to not be an identifier char (so `Vec::new` does not
+/// match `MyVec::new`).
+fn occurrences(text: &str, needle: &str, word_start: bool) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = text[from..].find(needle) {
+        let at = from + p;
+        if !word_start || at == 0 || !is_ident(text.as_bytes()[at - 1]) {
+            out.push(at);
+        }
+        from = at + needle.len();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1: zero-alloc discipline
+// ---------------------------------------------------------------------------
+
+const ALLOC_TOKENS: &[(&str, bool)] = &[
+    ("Vec::new(", true),
+    ("Vec::with_capacity(", true),
+    ("vec!", true),
+    (".to_vec(", false),
+    (".collect(", false),
+    (".collect::<", false),
+    ("format!", true),
+    ("String::from(", true),
+    ("String::new(", true),
+    ("Box::new(", true),
+    (".clone()", false),
+    (".to_string(", false),
+    (".to_owned(", false),
+];
+
+pub fn zero_alloc(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !ctx.fixture && ctx.scoped_fns(HOT_PATHS).is_none() {
+        return;
+    }
+    for (tok, word_start) in ALLOC_TOKENS {
+        for at in occurrences(&ctx.masked.text, tok, *word_start) {
+            if !ctx.in_scope(HOT_PATHS, at) {
+                continue;
+            }
+            let f = enclosing_fn(ctx.spans, at).unwrap_or("?");
+            out.push(Finding::new(
+                "zero_alloc",
+                ctx.rel,
+                ctx.masked.line_of(at),
+                format!("allocation site `{}` inside declared hot path `{}`", tok, f),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 4: clock & determinism discipline
+// ---------------------------------------------------------------------------
+
+pub fn clock(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !ctx.fixture && CLOCK_ALLOW_MODULES.iter().any(|m| ctx.rel.ends_with(m)) {
+        return;
+    }
+    for tok in ["Instant::now", "SystemTime::now"] {
+        for at in occurrences(&ctx.masked.text, tok, true) {
+            out.push(Finding::new(
+                "clock",
+                ctx.rel,
+                ctx.masked.line_of(at),
+                format!(
+                    "`{}` outside the clock-allowlisted modules — inject a `Clock` instead",
+                    tok
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 5: panic discipline
+// ---------------------------------------------------------------------------
+
+pub fn panic_discipline(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !ctx.fixture && ctx.scoped_fns(PANIC_SCOPE).is_none() {
+        return;
+    }
+    let text = &ctx.masked.text;
+    let mut hits: Vec<(usize, String)> = Vec::new();
+    for at in occurrences(text, ".unwrap()", false) {
+        // `.lock().unwrap()` is exempt by design: a poisoned mutex means
+        // another thread already panicked while holding it — this unwrap
+        // propagates an existing failure, it cannot originate one.
+        if at >= 7 && &text[at - 7..at] == ".lock()" {
+            continue;
+        }
+        hits.push((at, ".unwrap()".to_string()));
+    }
+    for at in occurrences(text, ".expect(", false) {
+        hits.push((at, ".expect(...)".to_string()));
+    }
+    for at in occurrences(text, "panic!", true) {
+        hits.push((at, "panic!".to_string()));
+    }
+    // indexing by integer literal: `[<digits>]`
+    let bytes = text.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == b'[' {
+            let mut k = i + 1;
+            while k < bytes.len() && bytes[k].is_ascii_digit() {
+                k += 1;
+            }
+            if k > i + 1 && k < bytes.len() && bytes[k] == b']' {
+                hits.push((i, format!("indexing by literal `{}`", &text[i..=k])));
+            }
+        }
+        i += 1;
+    }
+    for (at, what) in hits {
+        if !ctx.in_scope(PANIC_SCOPE, at) {
+            continue;
+        }
+        let f = enclosing_fn(ctx.spans, at).unwrap_or("?");
+        out.push(Finding::new(
+            "panic_discipline",
+            ctx.rel,
+            ctx.masked.line_of(at),
+            format!("{} in panic-protected path `{}`", what, f),
+        ));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 6: cfg/macro hygiene
+// ---------------------------------------------------------------------------
+
+/// Delimiter balance over the masked text (strings/chars/comments can't
+/// skew the count), plus `with_isa!` arm exhaustiveness.
+///
+/// `isa_variants`: the `Isa` enum's variant names from
+/// `kernels/microkernel.rs` (tree mode), or `None` to check against the
+/// built-in [`ISA_ARCH`] map only (fixture mode).
+pub fn cfg_hygiene(ctx: &FileCtx, isa_variants: Option<&[String]>, out: &mut Vec<Finding>) {
+    // (a) delimiter balance
+    let bytes = ctx.masked.text.as_bytes();
+    let mut stack: Vec<(u8, usize)> = Vec::new();
+    let mut reported = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'(' | b'[' | b'{' => stack.push((b, i)),
+            b')' | b']' | b'}' => {
+                let want = match b {
+                    b')' => b'(',
+                    b']' => b'[',
+                    _ => b'{',
+                };
+                match stack.pop() {
+                    Some((open, _)) if open == want => {}
+                    _ => {
+                        if !reported {
+                            out.push(Finding::new(
+                                "cfg_hygiene",
+                                ctx.rel,
+                                ctx.masked.line_of(i),
+                                format!("unbalanced `{}`", b as char),
+                            ));
+                            reported = true;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    if let Some(&(open, at)) = stack.first() {
+        if !reported {
+            out.push(Finding::new(
+                "cfg_hygiene",
+                ctx.rel,
+                ctx.masked.line_of(at),
+                format!("unclosed `{}`", open as char),
+            ));
+        }
+    }
+
+    // (b) with_isa! arm exhaustiveness. The macro *definition* is found
+    // in the masked text (so a string literal spelling out
+    // `macro_rules! with_isa` — e.g. in this very file — is invisible),
+    // but the arm checks read the raw body: the `"x86_64"` inside
+    // #[cfg(...)] is a string literal the masking blanks.
+    let Some(def_at) = ctx.masked.text.find("macro_rules! with_isa") else { return };
+    let body_open = match ctx.masked.text[def_at..].find('{') {
+        Some(p) => def_at + p,
+        None => return,
+    };
+    let mut depth = 0usize;
+    let mut body_end = ctx.masked.text.len();
+    for (i, &b) in ctx.masked.text.as_bytes()[body_open..].iter().enumerate() {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    body_end = body_open + i + 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let body = &ctx.raw[body_open..body_end];
+    let line = ctx.masked.line_of(def_at);
+    let mapped: Vec<&str> = ISA_ARCH.iter().map(|(v, _)| *v).collect();
+    // every mapped (and, tree mode, every declared) non-scalar variant
+    // needs an arm behind its arch gate
+    let mut required: Vec<String> = mapped.iter().map(|v| v.to_string()).collect();
+    if let Some(variants) = isa_variants {
+        for v in variants {
+            if v != "Scalar" && !mapped.contains(&v.as_str()) {
+                out.push(Finding::new(
+                    "cfg_hygiene",
+                    ctx.rel,
+                    line,
+                    format!(
+                        "`Isa::{}` has no entry in the with_isa!/ISA_ARCH map — add an arm \
+                         and a target_arch mapping",
+                        v
+                    ),
+                ));
+            }
+            if !required.contains(v) && v != "Scalar" {
+                required.push(v.clone());
+            }
+        }
+    }
+    for v in &required {
+        let arch = ISA_ARCH.iter().find(|(name, _)| name == v).map(|(_, a)| *a);
+        if !body.contains(&format!("Isa::{}", v)) {
+            out.push(Finding::new(
+                "cfg_hygiene",
+                ctx.rel,
+                line,
+                format!("with_isa! has no arm for `Isa::{}`", v),
+            ));
+            continue;
+        }
+        if let Some(arch) = arch {
+            if !body.contains(&format!("target_arch = \"{}\"", arch)) {
+                out.push(Finding::new(
+                    "cfg_hygiene",
+                    ctx.rel,
+                    line,
+                    format!(
+                        "with_isa! arm for `Isa::{}` is not gated on target_arch = \"{}\"",
+                        v, arch
+                    ),
+                ));
+            }
+        }
+    }
+    if !body.contains("_ =>") {
+        out.push(Finding::new(
+            "cfg_hygiene",
+            ctx.rel,
+            line,
+            "with_isa! has no `_ =>` scalar fallback arm — builds without the SIMD arch \
+             would not compile"
+                .to_string(),
+        ));
+    }
+}
+
+/// Parse the `Isa` enum's variant names out of `kernels/microkernel.rs`
+/// (tree mode input to [`cfg_hygiene`]).
+pub fn isa_variants(microkernel_masked: &Masked) -> Vec<String> {
+    let text = &microkernel_masked.text;
+    let Some(at) = text.find("enum Isa") else { return Vec::new() };
+    let Some(open) = text[at..].find('{').map(|p| at + p) else { return Vec::new() };
+    let Some(close) = text[open..].find('}').map(|p| open + p) else { return Vec::new() };
+    text[open + 1..close]
+        .split(',')
+        .map(|v| v.trim().trim_start_matches(|c: char| c == '#' || c == '[' || c == ']'))
+        .filter(|v| !v.is_empty() && v.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'))
+        .map(|v| v.to_string())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::{fn_bodies, mask};
+
+    fn ctx<'a>(
+        rel: &'a str,
+        raw: &'a str,
+        masked: &'a Masked,
+        spans: &'a [(usize, usize, String)],
+        fixture: bool,
+    ) -> FileCtx<'a> {
+        FileCtx { rel, raw, masked, spans, fixture, directives: &[] }
+    }
+
+    #[test]
+    fn zero_alloc_fires_only_inside_declared_hot_fns() {
+        let src = "fn submit_at() { let v = vec![1]; }\nfn cold() { let v = vec![1]; }\n";
+        let m = mask(src);
+        let spans = fn_bodies(&m.text);
+        let c = ctx("src/serve/engine.rs", src, &m, &spans, false);
+        let mut out = Vec::new();
+        zero_alloc(&c, &mut out);
+        assert_eq!(out.len(), 1, "{:?}", out);
+        assert!(out[0].msg.contains("submit_at"));
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn lock_unwrap_is_exempt_but_bare_unwrap_is_not() {
+        let src = "fn handle_ingress() { a.lock().unwrap(); b.unwrap(); c.expect(\"x\"); }\n";
+        let m = mask(src);
+        let spans = fn_bodies(&m.text);
+        let c = ctx("src/serve/net.rs", src, &m, &spans, false);
+        let mut out = Vec::new();
+        panic_discipline(&c, &mut out);
+        let msgs: Vec<&str> = out.iter().map(|f| f.msg.as_str()).collect();
+        assert_eq!(out.len(), 2, "{:?}", msgs);
+    }
+
+    #[test]
+    fn clock_is_banned_outside_allowlisted_modules() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        let m = mask(src);
+        let spans = fn_bodies(&m.text);
+        let mut out = Vec::new();
+        clock(&ctx("src/train/trainer.rs", src, &m, &spans, false), &mut out);
+        assert_eq!(out.len(), 1);
+        out.clear();
+        clock(&ctx("src/serve/reload.rs", src, &m, &spans, false), &mut out);
+        assert!(out.is_empty(), "reload poller is allowlisted");
+    }
+
+    #[test]
+    fn with_isa_missing_arm_and_fallback_are_flagged() {
+        let src = r#"
+macro_rules! with_isa {
+    ($isa:expr, $mk:ident => $body:expr) => {
+        match $isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => { $body }
+        }
+    };
+}
+"#;
+        let m = mask(src);
+        let spans = fn_bodies(&m.text);
+        let c = ctx("src/kernels/diag.rs", src, &m, &spans, true);
+        let mut out = Vec::new();
+        cfg_hygiene(&c, None, &mut out);
+        assert!(out.iter().any(|f| f.msg.contains("Isa::Neon")), "{:?}", out);
+        assert!(out.iter().any(|f| f.msg.contains("fallback")), "{:?}", out);
+    }
+
+    #[test]
+    fn isa_variant_parse_and_delimiter_balance() {
+        let m = mask("pub enum Isa {\n    Scalar,\n    Avx2,\n    Neon,\n}\n");
+        assert_eq!(isa_variants(&m), vec!["Scalar", "Avx2", "Neon"]);
+
+        let bad = mask("fn f() { (a  ]\n");
+        let spans = fn_bodies(&bad.text);
+        let c = ctx("src/x.rs", "fn f() { (a  ]\n", &bad, &spans, true);
+        let mut out = Vec::new();
+        cfg_hygiene(&c, None, &mut out);
+        assert!(!out.is_empty());
+    }
+}

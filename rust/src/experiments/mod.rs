@@ -173,6 +173,7 @@ pub fn run_cell(session: &Rc<Session>, cfg: &RunConfig) -> Result<CellResult> {
             }
         }
     }
+    // ddlint: allow(clock) -- experiment cell wall time for the results table
     let t0 = std::time::Instant::now();
     let mut trainer = Trainer::with_session(cfg.clone(), session.clone())?;
     let result = trainer.train().with_context(|| {

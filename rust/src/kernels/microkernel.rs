@@ -201,6 +201,11 @@ impl Microkernel for Avx2Kernel {
     }
 }
 
+// SAFETY: `unsafe` solely for `#[target_feature]` — callers must prove
+// AVX2+FMA are present (the dispatch layer's `detected()` check). All
+// pointer offsets stay below `n = acc.len()`, which equals `a.len()` and
+// `b.len()` by the caller's contract (debug-asserted at the call site),
+// and `loadu`/`storeu` carry no alignment requirement.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn fma3_avx2(acc: &mut [f32], a: &[f32], b: &[f32]) {
@@ -268,6 +273,11 @@ impl Microkernel for NeonKernel {
     }
 }
 
+// SAFETY: `unsafe` solely for `#[target_feature]` — NEON is baseline on
+// aarch64, so the feature is always present. All pointer offsets stay
+// below `n = acc.len()`, which equals `a.len()` and `b.len()` by the
+// caller's contract (debug-asserted at the call site); `vld1q`/`vst1q`
+// tolerate unaligned f32 pointers.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn fma3_neon(acc: &mut [f32], a: &[f32], b: &[f32]) {

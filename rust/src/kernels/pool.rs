@@ -299,10 +299,12 @@ fn dispatch(n_tasks: usize, job: &(dyn Fn(usize) + Sync)) {
         }
         return;
     }
+    // ddlint: allow(clock) -- pool profiling counter, not request latency
     let t0 = std::time::Instant::now();
-    // Lifetime-erase the job for the persistent workers. SAFETY: this
-    // function does not return until `remaining == 0` (the barrier below),
-    // so the erased borrow never outlives the data it points into.
+    // Lifetime-erase the job for the persistent workers.
+    // SAFETY: this function does not return until `remaining == 0` (the
+    // barrier below), so the erased borrow never outlives the data it
+    // points into.
     let job_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(job) };
     let ptr = JobPtr(job_static as *const (dyn Fn(usize) + Sync));
 

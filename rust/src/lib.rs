@@ -66,6 +66,7 @@
     clippy::manual_range_contains
 )]
 
+pub mod analysis;
 pub mod artifact;
 pub mod bcsr;
 pub mod cli;

@@ -83,6 +83,7 @@ fn run(argv: &[String]) -> Result<()> {
         "analyze" => cmd_analyze(&args),
         "perfmodel" => cmd_perfmodel(&args),
         "info" => cmd_info(&args),
+        "lint" => cmd_lint(&args),
         "" | "help" | "--help" => {
             print!("{}", USAGE);
             Ok(())
@@ -154,6 +155,13 @@ COMMANDS
   analyze      --model M [--sparsity S]      small-world & BCSR analysis
   perfmodel    [--sparsity S]                A100 speedup projections
   info         [--backend auto|xla|native]   list available artifacts
+  lint         [path] [--json] [--update-ledger]
+               run the repo's invariant lints (ddlint): zero-alloc hot
+               paths, unsafe ledger, wire-freeze golden table, clock &
+               panic discipline, cfg/macro hygiene. Nonzero exit on any
+               violation; a [path] to a .rs file lints just that file
+               (fixture mode for tests/lint_selftest snippets);
+               --update-ledger regenerates docs/UNSAFE_LEDGER.md
 
 BACKENDS (--backend, default auto)
   xla     pre-compiled artifacts/ via PJRT (vit/mixer/gpt models)
@@ -692,6 +700,49 @@ fn cmd_info(args: &Args) -> Result<()> {
             ),
             Err(e) => println!("  {:<40} (unavailable: {:#})", name, e),
         }
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use dynadiag::analysis;
+
+    // Resolve the target: an explicit path (file or directory), else the
+    // crate root found by walking up from the current directory.
+    let no_root = |p: &Path| {
+        anyhow!("no crate root (Cargo.toml + src/lib.rs) at or above {}", p.display())
+    };
+    let target: Option<PathBuf> = args.positional.first().map(PathBuf::from);
+    let root = match &target {
+        Some(p) if p.is_file() => None,
+        Some(p) => Some(analysis::find_crate_root(p).ok_or_else(|| no_root(p))?),
+        None => {
+            let cwd = std::env::current_dir()?;
+            Some(analysis::find_crate_root(&cwd).ok_or_else(|| no_root(&cwd))?)
+        }
+    };
+
+    if args.flag("update-ledger") {
+        let root =
+            root.ok_or_else(|| anyhow!("--update-ledger needs a crate root, not a single file"))?;
+        let path = analysis::update_ledger(&root)?;
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
+
+    let report = match (&target, &root) {
+        (Some(p), None) => analysis::lint_file(p)?, // single file (fixture-aware)
+        (_, Some(root)) => analysis::lint_tree(root)?,
+        (None, None) => unreachable!("target or root is always resolved above"),
+    };
+
+    if args.flag("json") {
+        print!("{}", report.to_json().to_pretty_string());
+    } else {
+        print!("{}", report.render());
+    }
+    if !report.ok() {
+        bail!("lint: {} violation(s)", report.findings.len());
     }
     Ok(())
 }

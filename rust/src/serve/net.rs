@@ -119,6 +119,8 @@ pub fn install_signal_drain() {
     extern "C" fn on_term(_sig: i32) {
         SIGNAL_DRAIN.store(true, Ordering::SeqCst);
     }
+    // SAFETY: the extern signature matches libc's signal(2) ABI, and the
+    // installed handler only touches a static atomic (async-signal-safe).
     unsafe {
         signal(15, on_term as extern "C" fn(i32) as usize); // SIGTERM
         signal(2, on_term as extern "C" fn(i32) as usize); // SIGINT
@@ -938,8 +940,9 @@ fn handle_ingress(
             if let Some(e) = conns.get_mut(&id) {
                 e.closing = true;
                 if e.inflight == 0 {
-                    let e = conns.remove(&id).expect("entry just found");
-                    e.conn.outq.push(WriterMsg::Close);
+                    if let Some(e) = conns.remove(&id) {
+                        e.conn.outq.push(WriterMsg::Close);
+                    }
                 }
             }
         }
@@ -1087,8 +1090,9 @@ fn deliver_completion(
         }
     }
     if (e.closing || draining) && e.inflight == 0 {
-        let e = conns.remove(&conn_id).expect("entry just found");
-        e.conn.outq.push(WriterMsg::Close);
+        if let Some(e) = conns.remove(&conn_id) {
+            e.conn.outq.push(WriterMsg::Close);
+        }
     }
 }
 

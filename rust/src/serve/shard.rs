@@ -146,13 +146,14 @@ impl<T> MsgQueue<T> {
     }
 
     pub(crate) fn pop_timeout(&self, d: Duration) -> Option<T> {
+        // ddlint: allow(clock) -- condvar wait deadline, not a latency stamp
         let deadline = Instant::now() + d;
         let mut g = self.q.lock().unwrap();
         loop {
             if let Some(t) = g.pop_front() {
                 return Some(t);
             }
-            let now = Instant::now();
+            let now = Instant::now(); // ddlint: allow(clock) -- condvar wait bookkeeping
             if now >= deadline {
                 return None;
             }
@@ -419,6 +420,7 @@ fn nack(
         done_us,
         outcome,
         model_fp,
+        // ddlint: allow(zero_alloc) -- capacity-0 Vec::new never touches the heap
         logits: Vec::new(),
         spare,
     }
@@ -1705,13 +1707,14 @@ pub fn drive_load_sharded(
 
     while accounted < spec.requests {
         if reload.as_ref().is_some_and(|p| accounted >= p.after_requests) {
-            let plan = reload.take().expect("checked above");
-            server.swap_shared(plan.model)?;
-            crate::info!(
-                "serve: broadcast hot reload after {} completed requests \
-                 (each shard drains through its old model)",
-                accounted
-            );
+            if let Some(plan) = reload.take() {
+                server.swap_shared(plan.model)?;
+                crate::info!(
+                    "serve: broadcast hot reload after {} completed requests \
+                     (each shard drains through its old model)",
+                    accounted
+                );
+            }
         }
         if let Some(w) = watcher.as_deref_mut() {
             if accounted >= next_watch_at {

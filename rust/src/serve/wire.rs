@@ -129,6 +129,7 @@ pub(crate) fn fill_exact(r: &mut impl Read, buf: &mut [u8], what: &str) -> Resul
             ),
             Ok(n) => off += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            // ddlint: allow(zero_alloc) -- error path only; the connection is dead
             Err(e) => return Err(e).with_context(|| format!("wire: reading {}", what)),
         }
     }

@@ -445,6 +445,7 @@ impl Trainer {
     /// (see [`Trainer::from_checkpoint`]) continue from `start_step` with
     /// the prior history prepended.
     pub fn train_checkpointed(&mut self, ckpt: Option<&CheckpointSpec>) -> Result<TrainResult> {
+        // ddlint: allow(clock) -- wall-clock of a whole training run, reported once
         let t0 = std::time::Instant::now();
         let prior_seconds = self.prior_seconds;
         let start_step = self.start_step;

@@ -10,6 +10,7 @@ pub struct Timer {
 
 impl Timer {
     pub fn start() -> Self {
+        // ddlint: allow(clock) -- bench stopwatch; never on a serving path
         Timer { start: Instant::now() }
     }
 
@@ -53,7 +54,7 @@ pub fn bench<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchS
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let t = Instant::now();
+        let t = Instant::now(); // ddlint: allow(clock) -- bench iteration timing
         std::hint::black_box(f());
         samples.push(t.elapsed().as_secs_f64());
     }

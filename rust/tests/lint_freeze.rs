@@ -1,0 +1,67 @@
+//! The wire-freeze golden table: the surface extracted from source must
+//! match the committed `tests/golden/wire_frozen.json`, and a seeded
+//! drift (renumbered discriminant, removed key) must be detected.
+
+use std::path::Path;
+
+use dynadiag::analysis::freeze;
+use dynadiag::util::json::Json;
+
+fn crate_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn golden() -> Json {
+    Json::from_file(&crate_root().join("tests/golden/wire_frozen.json")).unwrap()
+}
+
+#[test]
+fn golden_table_matches_source() {
+    let ex = freeze::extract(crate_root()).unwrap();
+    assert!(ex.findings.is_empty(), "{:?}", ex.findings);
+    let diffs = freeze::compare(&ex.entries, &golden());
+    assert!(diffs.is_empty(), "frozen surface drifted:\n{}", diffs.join("\n"));
+    // the whole surface is present: 6 outcomes + 6 wire + 4 journal +
+    // 2 artifact consts + 3 artifact kinds
+    assert_eq!(ex.entries.len(), 21, "{:?}", ex.entries);
+    // magics compare by source spelling, escapes uninterpreted
+    assert!(ex.entries.iter().any(|(k, v)| k == "wire.magic" && v == "DDWIR\\0"));
+}
+
+#[test]
+fn seeded_discriminant_edit_is_detected() {
+    let ex = freeze::extract(crate_root()).unwrap();
+    // renumber one outcome: ShedOverCapacity 5 -> 6
+    let mutated: Vec<(String, String)> = ex
+        .entries
+        .iter()
+        .map(|(k, v)| {
+            if k == "outcome.ShedOverCapacity" {
+                (k.clone(), "6".to_string())
+            } else {
+                (k.clone(), v.clone())
+            }
+        })
+        .collect();
+    let diffs = freeze::compare(&mutated, &golden());
+    assert_eq!(diffs.len(), 1, "{:?}", diffs);
+    assert!(diffs[0].contains("drifted"), "{}", diffs[0]);
+    assert!(diffs[0].contains("outcome.ShedOverCapacity"));
+}
+
+#[test]
+fn removed_surface_is_detected() {
+    let ex = freeze::extract(crate_root()).unwrap();
+    let removed: Vec<(String, String)> = ex.entries.iter().skip(1).cloned().collect();
+    let diffs = freeze::compare(&removed, &golden());
+    assert_eq!(diffs.len(), 1, "{:?}", diffs);
+    assert!(diffs[0].contains("no longer exists"), "{}", diffs[0]);
+}
+
+#[test]
+fn outcome_code_is_repr_u8() {
+    let stats = std::fs::read_to_string(crate_root().join("src/serve/stats.rs")).unwrap();
+    let mut out = Vec::new();
+    assert!(freeze::check_outcome_repr("src/serve/stats.rs", &stats, &mut out));
+    assert!(out.is_empty(), "{:?}", out);
+}

@@ -1,0 +1,69 @@
+//! ddlint self-test: every fixture under `tests/lint_selftest/` trips
+//! exactly the rule it declares (via its `// ddlint-fixture: expect(..)`
+//! marker), every rule has a fixture, and the committed tree lints
+//! clean end-to-end through the same public API the CLI uses.
+
+use std::path::Path;
+
+use dynadiag::analysis::{lint_file, lint_tree, RULES};
+
+/// One fixture per rule; file stem == rule name.
+const FIXTURES: &[&str] = &[
+    "zero_alloc",
+    "unsafe_ledger",
+    "wire_freeze",
+    "clock",
+    "panic_discipline",
+    "cfg_hygiene",
+    "directive",
+];
+
+#[test]
+fn every_fixture_trips_its_declared_rule() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_selftest");
+    for name in FIXTURES {
+        let path = dir.join(format!("{}.rs", name));
+        let report = lint_file(&path).unwrap();
+        assert!(!report.ok(), "fixture `{}` must produce findings", name);
+        assert!(
+            report.findings.iter().any(|f| f.rule == *name),
+            "fixture `{}` must trip its own rule, got:\n{}",
+            name,
+            report.render()
+        );
+    }
+}
+
+#[test]
+fn every_rule_has_a_fixture() {
+    for rule in RULES {
+        assert!(FIXTURES.contains(rule), "rule `{}` has no fixture demonstrating it", rule);
+    }
+}
+
+#[test]
+fn committed_tree_lints_clean_through_the_cli_path() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).unwrap();
+    assert!(
+        report.ok(),
+        "the committed tree must lint clean (CLI would exit nonzero):\n{}",
+        report.render()
+    );
+    // the fixtures themselves must NOT be swept into tree mode
+    assert!(
+        !report.findings.iter().any(|f| f.file.contains("lint_selftest")),
+        "tree mode must skip the deliberately-violating fixture directory"
+    );
+}
+
+#[test]
+fn json_report_shape() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_selftest");
+    let report = lint_file(&dir.join("clock.rs")).unwrap();
+    let j = report.to_json();
+    assert_eq!(j.req("violations").unwrap().as_usize().unwrap(), report.findings.len());
+    let findings = j.req("findings").unwrap().as_arr().unwrap();
+    assert_eq!(findings.len(), report.findings.len());
+    assert_eq!(findings[0].req("rule").unwrap().as_str().unwrap(), "clock");
+}

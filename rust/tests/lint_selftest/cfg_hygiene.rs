@@ -1,0 +1,14 @@
+// ddlint-fixture: expect(cfg_hygiene)
+//
+// A with_isa! dispatch macro missing the Neon arm and the `_ =>` scalar
+// fallback: an aarch64 build would silently lose its SIMD path and a
+// no-SIMD build would not compile.
+
+macro_rules! with_isa {
+    ($isa:expr, $mk:ident => $body:expr) => {
+        match $isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => $body,
+        }
+    };
+}

@@ -1,0 +1,8 @@
+// ddlint-fixture: expect(clock)
+//
+// Direct wall-clock read outside the allowlisted modules: serving code
+// must take an injected `Clock` so tests stay deterministic.
+
+fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,10 @@
+// ddlint-fixture: expect(directive)
+//
+// Two bad allows: one without the mandatory `-- <justification>`, one
+// naming a rule that does not exist. Neither suppresses anything.
+
+fn f() -> u32 {
+    let x = 1; // ddlint: allow(clock)
+    let y = 2; // ddlint: allow(made_up_rule) -- justified but unknown
+    x + y
+}

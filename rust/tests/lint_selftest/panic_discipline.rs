@@ -1,0 +1,15 @@
+// ddlint-fixture: expect(panic_discipline)
+//
+// Four ways to panic on the supervisor side: literal indexing, bare
+// unwrap, expect, and panic! itself. (`.lock().unwrap()` would be
+// exempt — poisoning only propagates a panic that already happened.)
+
+fn supervisor_side(xs: &[u32], r: Option<u32>) -> u32 {
+    let a = xs[0];
+    let b = r.unwrap();
+    let c = r.expect("present");
+    if a + b + c == 0 {
+        panic!("boom");
+    }
+    a
+}

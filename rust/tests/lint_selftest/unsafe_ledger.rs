@@ -1,0 +1,7 @@
+// ddlint-fixture: expect(unsafe_ledger)
+//
+// An `unsafe` block with no adjacent `// SAFETY:` comment.
+
+fn caller(p: *const u8) -> u8 {
+    unsafe { *p }
+}

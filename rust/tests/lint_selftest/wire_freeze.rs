@@ -1,0 +1,9 @@
+// ddlint-fixture: expect(wire_freeze)
+//
+// A wire enum without a pinned byte representation: its discriminants
+// are not frozen to u8, so the byte surface could drift on reordering.
+
+pub enum OutcomeCode {
+    Ok = 0,
+    ShedDeadline = 1,
+}

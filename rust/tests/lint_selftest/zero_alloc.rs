@@ -1,0 +1,10 @@
+// ddlint-fixture: expect(zero_alloc)
+//
+// In fixture mode every fn is in scope for the scoped rules, so both
+// allocation tokens below must fire.
+
+fn hot_loop(n: usize) -> usize {
+    let v = vec![0u8; n];
+    let s = format!("{}", v.len());
+    s.len()
+}

@@ -704,6 +704,7 @@ fn restarted_shard_does_not_spuriously_shed_first_request() {
     // absorb both (FIFO): the late Ok inflates the EWMA to roughly
     // (7*seed + 400000)/8 > 40 ms, then the panic NACK resets it
     let (mut got_ok, mut got_panic) = (false, false);
+    // ddlint: allow(clock) -- real-time test watchdog against hung shards
     let t0 = std::time::Instant::now();
     while !(got_ok && got_panic) {
         assert!(
@@ -733,6 +734,7 @@ fn restarted_shard_does_not_spuriously_shed_first_request() {
     // the regression: the restarted shard's first request must not be
     // ShedDeadline'd off the pre-crash latency spike. ShedShardDown is
     // legitimate while the restart backoff runs — retry through it.
+    // ddlint: allow(clock) -- real-time retry window for the restart backoff
     let retry_deadline = std::time::Instant::now() + Duration::from_secs(10);
     let c_id = loop {
         match submit(&mut server, &mut rng) {
@@ -747,9 +749,11 @@ fn restarted_shard_does_not_spuriously_shed_first_request() {
                 );
             }
         }
+        // ddlint: allow(clock) -- real-time test watchdog against hung shards
         assert!(std::time::Instant::now() < retry_deadline, "shard never came back");
         std::thread::sleep(Duration::from_millis(1));
     };
+    // ddlint: allow(clock) -- real-time test watchdog against hung shards
     let t0 = std::time::Instant::now();
     'served: loop {
         assert!(t0.elapsed() < Duration::from_secs(10), "restarted shard never served");
